@@ -1,0 +1,25 @@
+//! Reproduce **Table III** — overall accuracy (mAP at BEV IoU 0.3 / 0.5)
+//! of every sensor configuration and integration method.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example eval_accuracy -- --frames 80
+//! ```
+
+use anyhow::Result;
+use scmii::cli::Args;
+use scmii::config::default_paths;
+use scmii::eval::harness::{print_accuracy, run_accuracy};
+
+fn main() -> Result<()> {
+    scmii::utils::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.usize_or("frames", 80)?;
+    let paths = default_paths();
+    if !scmii::config::artifacts_present(&paths) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rows = run_accuracy(&paths, n)?;
+    print_accuracy(&rows);
+    Ok(())
+}

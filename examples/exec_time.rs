@@ -1,0 +1,32 @@
+//! Reproduce **Fig 5** — execution-time comparison: SC-MII integration
+//! variants vs the edge-only input-integration baseline, under the
+//! testbed latency model (Jetson-class edge factor, RTX-4090-class
+//! server factor, 1 Gbps LAN).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example exec_time -- --frames 16
+//! ```
+
+use anyhow::Result;
+use scmii::cli::Args;
+use scmii::config::{default_paths, LatencyConfig};
+use scmii::latency::harness::{print_exec_time, run_exec_time};
+
+fn main() -> Result<()> {
+    scmii::utils::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.usize_or("frames", 16)?;
+    let mut cfg = LatencyConfig::default();
+    cfg.edge_factor = args.f64_or("edge-factor", cfg.edge_factor)?;
+    cfg.server_factor = args.f64_or("server-factor", cfg.server_factor)?;
+    cfg.bandwidth_bps = args.f64_or("bandwidth-gbps", cfg.bandwidth_bps / 1e9)? * 1e9;
+
+    let paths = default_paths();
+    if !scmii::config::artifacts_present(&paths) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let methods = run_exec_time(&paths, n, &cfg)?;
+    print_exec_time(&methods);
+    Ok(())
+}

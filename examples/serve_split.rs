@@ -1,0 +1,129 @@
+//! End-to-end distributed demo — the full SC-MII deployment on real TCP
+//! sockets: an edge server (tail model), one worker per LiDAR (head
+//! models), a 1 Gbps bandwidth shaper on each uplink, and a subscriber
+//! measuring end-to-end latency and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_split -- --frames 32
+//! ```
+
+use anyhow::Result;
+use scmii::cli::Args;
+use scmii::config::{default_paths, IntegrationKind};
+use scmii::coordinator::device::{run_device, DeviceConfig};
+use scmii::coordinator::server::{run_server, ServerConfig};
+use scmii::net::{read_msg, write_msg, Msg};
+use scmii::utils::stats;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    scmii::utils::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let frames_n = args.usize_or("frames", 32)?;
+    let port = args.usize_or("port", 7441)? as u16;
+    let hz = args.f64_or("hz", 10.0)?;
+    let variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
+
+    let paths = default_paths();
+    if !scmii::config::artifacts_present(&paths) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let frames = scmii::sim::dataset::load_split(&paths.data.join("val"))?;
+    let frames: Vec<_> = frames.into_iter().take(frames_n).collect();
+    let n_dev = frames[0].clouds.len();
+    println!(
+        "serving {} frames at {:.0} Hz across {} devices + 1 edge server (variant {})",
+        frames.len(),
+        hz,
+        n_dev,
+        variant.name()
+    );
+
+    // Edge server.
+    let server_paths = paths.clone();
+    let server_cfg = ServerConfig {
+        port,
+        variant,
+        deadline: Duration::from_millis(400),
+        max_frames: Some(frames.len() as u64),
+        ..Default::default()
+    };
+    let server = std::thread::spawn(move || run_server(&server_paths, &server_cfg));
+    std::thread::sleep(Duration::from_millis(2500)); // let the tail compile
+
+    // Subscriber: receives final detections, timestamps completion.
+    let sub = TcpStream::connect(("127.0.0.1", port))?;
+    let mut sub_w = sub.try_clone()?;
+    write_msg(&mut sub_w, &Msg::Subscribe)?;
+    let n_expect = frames.len();
+    let subscriber =
+        std::thread::spawn(move || -> Result<Vec<(u64, Instant, usize, u64)>> {
+            let mut reader = std::io::BufReader::new(sub);
+            let mut out = Vec::new();
+            while out.len() < n_expect {
+                match read_msg(&mut reader)? {
+                    Msg::Result { frame_id, detections, server_micros } => {
+                        out.push((frame_id, Instant::now(), detections.len(), server_micros));
+                    }
+                    Msg::Bye => break,
+                    _ => {}
+                }
+            }
+            Ok(out)
+        });
+
+    // Device workers (each owns its engine; head compile happens inside).
+    let t_start = Instant::now();
+    let mut device_threads = Vec::new();
+    for dev in 0..n_dev {
+        let clouds: Vec<_> = frames.iter().map(|f| f.clouds[dev].clone()).collect();
+        let paths = paths.clone();
+        let cfg = DeviceConfig {
+            device_id: dev,
+            server: format!("127.0.0.1:{port}"),
+            variant,
+            period: if hz > 0.0 { Some(Duration::from_secs_f64(1.0 / hz)) } else { None },
+            bandwidth_bps: Some(1e9),
+            max_frames: frames.len(),
+            quantize: false,
+        };
+        device_threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
+    }
+
+    let mut send_times: Vec<Vec<(f64, f64)>> = Vec::new();
+    for t in device_threads {
+        send_times.push(t.join().expect("device thread panicked")?);
+    }
+    let results = subscriber.join().expect("subscriber panicked")?;
+    let server_metrics = server.join().expect("server panicked")?;
+    let wall = t_start.elapsed().as_secs_f64();
+
+    // Report.
+    let det_counts: Vec<f64> = results.iter().map(|r| r.2 as f64).collect();
+    let server_us: Vec<f64> = results.iter().map(|r| r.3 as f64 / 1e3).collect();
+    println!("\n=== serve_split results ===");
+    println!("frames completed : {}", results.len());
+    println!(
+        "wall time        : {wall:.2} s  ({:.1} frames/s)",
+        results.len() as f64 / wall
+    );
+    println!(
+        "server tail exec : mean {:.1} ms, p99 {:.1} ms",
+        stats::mean(&server_us),
+        stats::percentile(&server_us, 99.0)
+    );
+    for (dev, times) in send_times.iter().enumerate() {
+        let heads: Vec<f64> = times.iter().map(|t| t.0 * 1e3).collect();
+        let txs: Vec<f64> = times.iter().map(|t| t.1 * 1e3).collect();
+        println!(
+            "device {dev}         : head mean {:.1} ms, tx mean {:.1} ms (1 Gbps shaped)",
+            stats::mean(&heads),
+            stats::mean(&txs)
+        );
+    }
+    println!("detections/frame : mean {:.1}", stats::mean(&det_counts));
+    println!("\nserver metrics:\n{}", server_metrics.report());
+    Ok(())
+}

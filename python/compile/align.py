@@ -1,0 +1,60 @@
+"""Coordinate transformation of intermediate outputs (paper §III-A.2).
+
+Builds the static gather index map realizing the voxel-index → physical →
+rigid-transform → voxel-index chain; mirrors rust/src/align/mod.rs
+(including rust's round-half-away-from-zero). The map is baked as a
+constant into the tail HLO, so the server's alignment runs inside the
+compiled graph.
+"""
+
+import numpy as np
+
+from .configs import GridConfig
+
+
+def _round_half_away(x):
+    """Match rust f64::round (half away from zero); np.rint is half-even."""
+    return np.where(x >= 0, np.floor(x + 0.5), np.ceil(x - 0.5))
+
+
+def build_align_map(grid: GridConfig, device_to_common_4x4, stride: int = 1):
+    """Return (V,) int64: for each output voxel (common grid, flattened
+    (D,H,W)) the flat source voxel in the device grid, or -1.
+
+    `device_to_common_4x4`: row-major 16-vector or (4,4) array mapping
+    device-local coordinates into the common frame.
+    """
+    m = np.asarray(device_to_common_4x4, dtype=np.float64).reshape(4, 4)
+    rot, trans = m[:3, :3], m[:3, 3]
+    # common -> device
+    inv_rot = rot.T
+    inv_trans = -inv_rot @ trans
+
+    W, H, D = grid.dims
+    Ws, Hs, Ds = W // stride, H // stride, D // stride
+    eff = np.array(grid.voxel) * stride
+    rmin = np.array(grid.range_min)
+
+    iz, iy, ix = np.meshgrid(
+        np.arange(Ds), np.arange(Hs), np.arange(Ws), indexing="ij"
+    )
+    # Voxel centers in the common frame.
+    px = rmin[0] + (ix + 0.5) * eff[0]
+    py = rmin[1] + (iy + 0.5) * eff[1]
+    pz = rmin[2] + (iz + 0.5) * eff[2]
+    pts = np.stack([px, py, pz], axis=-1).reshape(-1, 3)
+    local = pts @ inv_rot.T + inv_trans
+
+    f = (local - rmin) / eff - 0.5
+    j = _round_half_away(f).astype(np.int64)
+    jx, jy, jz = j[:, 0], j[:, 1], j[:, 2]
+    valid = (
+        (jx >= 0) & (jx < Ws) & (jy >= 0) & (jy < Hs) & (jz >= 0) & (jz < Ds)
+    )
+    flat = (jz * Hs + jy) * Ws + jx
+    return np.where(valid, flat, -1)
+
+
+def identity_map(grid: GridConfig, stride: int = 1):
+    eye = np.eye(4).reshape(-1)
+    return build_align_map(grid, eye, stride)

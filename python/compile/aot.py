@@ -1,0 +1,180 @@
+"""AOT lowering: trained jax models -> HLO text artifacts + model_meta.json.
+
+HLO **text** (not `.serialize()`): the image's xla_extension 0.5.1
+rejects jax>=0.5 protos whose instruction ids exceed INT_MAX; the text
+parser reassigns ids (see /opt/xla-example/README.md). Every function is
+lowered with `return_tuple=True`; the rust runtime decomposes the tuple.
+
+Artifacts per SC-MII variant v ∈ {max, conv_k1, conv_k3}:
+  head_{v}_dev{i}.hlo.txt   (P,4) points -> (D,H,W,C) features
+  tail_{v}.hlo.txt          per-device features -> (cls, box)
+Baselines:
+  single_dev{i}.hlo.txt     (P,4) -> (cls, box)   (full model)
+  input_integration.hlo.txt (P,4) merged common-frame points -> (cls, box)
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .align import build_align_map
+from .configs import (
+    CFG,
+    INPUT_INTEGRATION,
+    VARIANTS,
+    head_name,
+    single_name,
+    tail_name,
+)
+from .data import load_calib
+from .train import unflatten_params
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides
+    # big literals as `{...}`, which the consuming XLA text parser happily
+    # accepts and fills with garbage — every baked weight/align-map would
+    # silently corrupt (this cost us a debugging session; see
+    # EXPERIMENTS.md "Reproduction notes").
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, example_args, out_path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path} ({len(text)} chars)")
+
+
+def load_weights(weights_dir, name):
+    flat = dict(np.load(os.path.join(weights_dir, f"{name}.npz")))
+    return unflatten_params(flat)
+
+
+def meta_json():
+    g = CFG.grid
+    return {
+        "grid": {
+            "range_min": list(g.range_min),
+            "range_max": list(g.range_max),
+            "voxel": list(g.voxel),
+            "dims": list(g.dims),
+            "c_in": g.c_in,
+            "c_head": g.c_head,
+            "max_points": g.max_points,
+        },
+        "classes": list(CFG.classes),
+        "anchors": [
+            {
+                "size": list(a.size),
+                "z_center": a.z_center,
+                "yaw": a.yaw,
+                "class_id": a.class_id,
+            }
+            for a in CFG.anchors
+        ],
+        "bev_dims": list(CFG.bev_dims),
+        "variants": [
+            {
+                "integration": v,
+                "heads": [head_name(v, d) for d in range(CFG.num_devices)],
+                "tail": tail_name(v),
+            }
+            for v in VARIANTS
+        ],
+        "single_full": [single_name(d) for d in range(CFG.num_devices)],
+        "input_integration_full": INPUT_INTEGRATION,
+        "num_devices": CFG.num_devices,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights", default="../artifacts/weights")
+    ap.add_argument("--calib", default="../artifacts/calib.json")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    g = CFG.grid
+    points_spec = jax.ShapeDtypeStruct((g.max_points, 4), jnp.float32)
+    feat_spec = jax.ShapeDtypeStruct((g.D, g.H, g.W, g.c_head), jnp.float32)
+
+    calib = load_calib(args.calib)
+    align_maps = [None] + [
+        jnp.asarray(build_align_map(g, calib[d].reshape(-1), 1), dtype=jnp.int32)
+        for d in range(1, len(calib))
+    ]
+
+    for variant in VARIANTS:
+        params = load_weights(args.weights, variant)
+        for dev in range(CFG.num_devices):
+            head_params = params["heads"][dev]
+
+            def head(points, hp=head_params):
+                return (model_mod.head_fn(hp, points, CFG),)
+
+            lower_and_write(
+                head,
+                (points_spec,),
+                os.path.join(args.out, f"{head_name(variant, dev)}.hlo.txt"),
+            )
+
+        def tail(*feats, p=params, v=variant):
+            return model_mod.tail_fn(p, list(feats), v, align_maps, CFG)
+
+        lower_and_write(
+            tail,
+            tuple(feat_spec for _ in range(CFG.num_devices)),
+            os.path.join(args.out, f"{tail_name(variant)}.hlo.txt"),
+        )
+
+    # Baselines.
+    for dev in range(CFG.num_devices):
+        params = load_weights(args.weights, single_name(dev))
+        amap = align_maps[dev]
+
+        def single(points, p=params, m=amap):
+            feat = model_mod.head_fn(p["head"], points, CFG)
+            if m is not None:
+                from .kernels.gather_align import gather_align
+
+                feat = gather_align(feat, m)
+            return model_mod.backbone_fn(p["backbone"], feat, CFG)
+
+        lower_and_write(
+            single,
+            (points_spec,),
+            os.path.join(args.out, f"{single_name(dev)}.hlo.txt"),
+        )
+
+    params = load_weights(args.weights, INPUT_INTEGRATION)
+
+    def input_integration(points, p=params):
+        return model_mod.single_fn(p, points, CFG)
+
+    lower_and_write(
+        input_integration,
+        (points_spec,),
+        os.path.join(args.out, f"{INPUT_INTEGRATION}.hlo.txt"),
+    )
+
+    with open(os.path.join(args.out, "model_meta.json"), "w") as f:
+        json.dump(meta_json(), f, indent=1)
+    print("wrote model_meta.json")
+
+
+if __name__ == "__main__":
+    main()

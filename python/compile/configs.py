@@ -1,0 +1,97 @@
+"""Canonical model/grid configuration — single source of truth for the
+python build path; `aot.py` serializes it into artifacts/model_meta.json
+which the rust runtime (rust/src/config/meta.rs) parses. The rust-side
+defaults mirror these values for artifact-free unit tests.
+"""
+
+from dataclasses import dataclass, field
+import math
+
+# Padding sentinel for point tensors (matches rust voxel::Point::pad()).
+PAD_Z = -1000.0
+# Count clip in voxel feature 0 (matches rust VOXEL_COUNT_CLIP).
+COUNT_CLIP = 16.0
+
+
+@dataclass(frozen=True)
+class GridConfig:
+    """Detection grid in the common (sensor-1) frame.
+
+    The sensor sits ~4.5 m above ground so the volume lies below the
+    origin; x/y bounds cover the intersection (see rust config docs).
+    """
+
+    range_min: tuple = (-18.1, -18.1, -6.0)
+    range_max: tuple = (33.1, 33.1, 0.0)
+    voxel: tuple = (0.8, 0.8, 0.75)
+    dims: tuple = (64, 64, 8)  # (W, H, D) = x, y, z cells
+    c_in: int = 6
+    c_head: int = 8
+    max_points: int = 4096
+
+    @property
+    def W(self):
+        return self.dims[0]
+
+    @property
+    def H(self):
+        return self.dims[1]
+
+    @property
+    def D(self):
+        return self.dims[2]
+
+    def n_voxels(self):
+        return self.W * self.H * self.D
+
+
+@dataclass(frozen=True)
+class Anchor:
+    size: tuple  # (l, w, h)
+    z_center: float
+    yaw: float
+    class_id: int
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    grid: GridConfig = field(default_factory=GridConfig)
+    classes: tuple = ("car", "pedestrian")
+    # Ground sits at z = -4.5 in the common frame.
+    anchors: tuple = (
+        Anchor((4.5, 1.9, 1.6), -3.7, 0.0, 0),
+        Anchor((4.5, 1.9, 1.6), -3.7, math.pi / 2, 0),
+        Anchor((0.8, 0.8, 1.7), -3.65, 0.0, 1),
+    )
+    bev_dims: tuple = (32, 32)  # (rows = y, cols = x)
+    # Backbone channel plan.
+    c_block2: int = 16
+    c_block3: int = 32
+    c_bev: int = 64
+    num_devices: int = 2
+
+    @property
+    def n_anchors(self):
+        return len(self.anchors)
+
+
+CFG = ModelConfig()
+
+# Integration variants (paper §III-A.3) and baseline artifact names —
+# shared with rust config::meta::IntegrationKind.
+VARIANTS = ("max", "conv_k1", "conv_k3")
+
+
+def head_name(variant, device):
+    return f"head_{variant}_dev{device}"
+
+
+def tail_name(variant):
+    return f"tail_{variant}"
+
+
+def single_name(device):
+    return f"single_dev{device}"
+
+
+INPUT_INTEGRATION = "input_integration"

@@ -1,0 +1,86 @@
+"""Dataset loading for the build-time training path.
+
+Reads the npy files written by `scmii datagen` (rust) and prepares the
+per-variant model inputs, including the merged-cloud view for the
+input-integration baseline (mirrors rust voxel::merge_clouds exactly:
+interleave devices, truncate to max_points)."""
+
+import json
+import os
+
+import numpy as np
+
+from .configs import CFG, PAD_Z
+
+
+def load_split(data_dir, split):
+    """Returns dict with points per device (N, P, 4), labels (N, M, 8)."""
+    d = os.path.join(data_dir, split)
+    points = []
+    dev = 0
+    while True:
+        p = os.path.join(d, f"points_dev{dev}.npy")
+        if not os.path.exists(p):
+            break
+        points.append(np.load(p).astype(np.float32))
+        dev += 1
+    if not points:
+        raise FileNotFoundError(f"no points_dev*.npy under {d}")
+    labels = np.load(os.path.join(d, "labels.npy")).astype(np.float32)
+    return {"points": points, "labels": labels}
+
+
+def load_calib(calib_path):
+    """Returns list of 4x4 row-major transforms (device -> common)."""
+    with open(calib_path) as f:
+        calib = json.load(f)
+    return [np.array(t, dtype=np.float64).reshape(4, 4) for t in calib["transforms"]]
+
+
+def transform_points(points, mat4):
+    """points (..., 4); mat4 (4,4) row-major. Pads stay pads."""
+    xyz = points[..., :3]
+    out = xyz @ mat4[:3, :3].T + mat4[:3, 3]
+    res = np.concatenate([out, points[..., 3:4]], axis=-1).astype(np.float32)
+    pad = points[..., 2] <= -999.0
+    res[pad] = points[pad]
+    return res
+
+
+def merge_clouds_np(clouds, max_points):
+    """Mirror of rust voxel::merge_clouds for one frame.
+
+    clouds: list of (P, 4) arrays already in the common frame (pads
+    filtered by caller or kept — we drop pads first like the rust
+    pipeline's merge_to_common)."""
+    live = [c[c[:, 2] > -999.0] for c in clouds]
+    longest = max((len(c) for c in live), default=0)
+    out = []
+    for i in range(longest):
+        for c in live:
+            if i < len(c):
+                out.append(c[i])
+                if len(out) >= max_points:
+                    break
+        if len(out) >= max_points:
+            break
+    merged = np.stack(out) if out else np.zeros((0, 4), dtype=np.float32)
+    if len(merged) < max_points:
+        pad = np.zeros((max_points - len(merged), 4), dtype=np.float32)
+        pad[:, 2] = PAD_Z
+        merged = np.concatenate([merged, pad])
+    return merged.astype(np.float32)
+
+
+def build_merged_split(split, calib, max_points=None):
+    """(N, P, 4) merged common-frame clouds for the whole split."""
+    max_points = max_points or CFG.grid.max_points
+    n = split["points"][0].shape[0]
+    out = np.zeros((n, max_points, 4), dtype=np.float32)
+    for i in range(n):
+        clouds = [
+            transform_points(dev_pts[i], calib[d])
+            for d, dev_pts in enumerate(split["points"])
+        ]
+        out[i] = merge_clouds_np(clouds, max_points)
+    return out

@@ -1,0 +1,92 @@
+"""Pallas kernel: fused concat + conv3d integration (paper §III-A.3,
+method 2 — the paper's best variant with kernel size 3).
+
+Instead of materializing the concatenated (D, H, W, 2C) tensor in HBM and
+running a separate conv (what the paper's PyTorch stack does), the kernel
+fuses both: each grid step loads the two source z-slabs, forms the
+concatenated receptive field in VMEM and contracts it against the weights
+on the MXU.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+- grid over D (z-slabs). Output block (1, H, W, Co).
+- k=1: the contraction is a (H·W, 2C) × (2C, Co) matmul — a clean MXU
+  feed with the W·C panel laid out on lanes.
+- k=3: inputs stay fully VMEM-resident (both maps are 256 KiB at the
+  canonical 8·64·64·8 f32 — far under the ~16 MiB VMEM budget), and each
+  step contracts the 27-tap neighborhood as 27 shifted matmuls, i.e. an
+  implicit-GEMM conv with z-halo handled by zero-masking at the slab
+  boundary. On larger grids the H axis would be tiled with a +1 halo via
+  BlockSpec index maps; at the canonical size the full slab fits.
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_k1(a_ref, b_ref, w_ref, bias_ref, o_ref):
+    # (1, H, W, C) slabs; contraction over 2C.
+    a = a_ref[0]  # (H, W, C)
+    b = b_ref[0]
+    h, w, c = a.shape
+    x = jnp.concatenate([a, b], axis=-1).reshape(h * w, 2 * c)
+    wt = w_ref[0, 0, 0]  # (2C, Co)
+    out = x @ wt + bias_ref[...]
+    o_ref[0] = out.reshape(h, w, -1)
+
+
+def _kernel_k3(a_ref, b_ref, w_ref, bias_ref, o_ref):
+    # Full-residency inputs: a_ref/b_ref are (D, H, W, C); output one slab.
+    iz = pl.program_id(0)
+    d, h, w, c = a_ref.shape
+    co = o_ref.shape[-1]
+    acc = jnp.zeros((h * w, co), dtype=jnp.float32)
+    for dz in range(3):
+        z = iz + dz - 1
+        z_ok = jnp.logical_and(z >= 0, z < d)
+        zc = jnp.clip(z, 0, d - 1)
+        a_slab = jnp.where(z_ok, a_ref[zc], 0.0)
+        b_slab = jnp.where(z_ok, b_ref[zc], 0.0)
+        x = jnp.concatenate([a_slab, b_slab], axis=-1)  # (H, W, 2C)
+        # Pad H/W for the 3x3 in-plane taps.
+        xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+        for dy in range(3):
+            for dx in range(3):
+                patch = xp[dy : dy + h, dx : dx + w, :].reshape(h * w, 2 * c)
+                wt = w_ref[dz, dy, dx]  # (2C, Co)
+                acc = acc + patch @ wt
+    o_ref[0] = (acc + bias_ref[...]).reshape(h, w, co)
+
+
+def fused_integrate_conv(a, b, w, bias):
+    """a, b: (D, H, W, C); w: (k, k, k, 2C, Co) DHWIO; bias: (Co,)."""
+    d, h, wd, c = a.shape
+    k = w.shape[0]
+    co = w.shape[-1]
+    out_shape = jax.ShapeDtypeStruct((d, h, wd, co), a.dtype)
+    bias_spec = pl.BlockSpec(bias.shape, lambda i: (0,))
+    w_spec = pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0, 0))
+    out_spec = pl.BlockSpec((1, h, wd, co), lambda i: (i, 0, 0, 0))
+    if k == 1:
+        slab = pl.BlockSpec((1, h, wd, c), lambda i: (i, 0, 0, 0))
+        return pl.pallas_call(
+            _kernel_k1,
+            grid=(d,),
+            in_specs=[slab, slab, w_spec, bias_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(a, b, w, bias)
+    elif k == 3:
+        full = pl.BlockSpec((d, h, wd, c), lambda i: (0, 0, 0, 0))
+        return pl.pallas_call(
+            _kernel_k3,
+            grid=(d,),
+            in_specs=[full, full, w_spec, bias_spec],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(a, b, w, bias)
+    raise ValueError(f"unsupported kernel size {k}")

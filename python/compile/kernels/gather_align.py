@@ -1,0 +1,49 @@
+"""Pallas kernel: voxel-grid alignment gather (paper §III-A.2).
+
+The coordinate transformation of intermediate outputs collapses to a
+static gather (see align.py). The kernel tiles the flattened output
+voxel axis; each step loads its index block and gathers the matching
+rows of the (VMEM-resident) source feature map, zero-filling out-of-grid
+voxels. A rigid transform of a regular grid preserves locality, so each
+output tile reads a bounded source region — on real TPU the index map
+would bound the HBM→VMEM window per tile; at the canonical feature-map
+size the whole source fits in VMEM.
+
+interpret=True: CPU PJRT cannot execute Mosaic custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output rows gathered per grid step.
+BLOCK = 2048
+
+
+def _kernel(feat_ref, idx_ref, o_ref):
+    idx = idx_ref[...]  # (BLOCK,)
+    safe = jnp.maximum(idx, 0)
+    rows = feat_ref[safe]  # (BLOCK, C)
+    o_ref[...] = jnp.where((idx >= 0)[:, None], rows, 0.0)
+
+
+def gather_align(feat, idx_map):
+    """feat: (D, H, W, C) f32; idx_map: (V,) int32 -> aligned (D, H, W, C)."""
+    d, h, w, c = feat.shape
+    v = d * h * w
+    assert idx_map.shape == (v,), (idx_map.shape, v)
+    block = min(BLOCK, v)
+    assert v % block == 0, "voxel count must divide the gather block"
+    flat = feat.reshape(v, c)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(v // block,),
+        in_specs=[
+            pl.BlockSpec((v, c), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, c), feat.dtype),
+        interpret=True,
+    )(flat, idx_map.astype(jnp.int32))
+    return out.reshape(d, h, w, c)

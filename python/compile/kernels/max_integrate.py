@@ -1,0 +1,34 @@
+"""Pallas kernel: element-wise max integration (paper §III-A.3, method 1).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over D; each step
+holds one (1, H, W, C) z-slab of both inputs in VMEM (64·64·8·4 B =
+128 KiB per input per slab) and writes the max — a pure VPU op with unit
+arithmetic intensity, so the schedule is bandwidth-bound and the slab
+pipeline (double-buffered HBM↔VMEM) is the whole optimization.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; lowering stays identical so the HLO the rust runtime loads
+is the same graph shape a TPU build would specialize.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(a_ref[...], b_ref[...])
+
+
+def max_integrate(a, b):
+    """a, b: (D, H, W, C) f32 -> (D, H, W, C) f32."""
+    d, h, w, c = a.shape
+    spec = pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(d,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a, b)

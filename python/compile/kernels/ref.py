@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel ≍ ref under hypothesis sweeps)."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def max_integrate_ref(a, b):
+    """Element-wise max of two (D, H, W, C) feature maps."""
+    return jnp.maximum(a, b)
+
+
+def fused_integrate_conv_ref(a, b, w, bias):
+    """Concat along channels + conv3d ("same" zero padding).
+
+    a, b: (D, H, W, C); w: (k, k, k, 2C, Co) (DHWIO); bias: (Co,).
+    """
+    x = jnp.concatenate([a, b], axis=-1)[None]  # NDHWC
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1, 1),
+        padding="SAME",
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+    )
+    return out[0] + bias
+
+
+def gather_align_ref(feat, idx_map):
+    """feat: (D, H, W, C); idx_map: (V,) int32 flat source or -1."""
+    d, h, w, c = feat.shape
+    flat = feat.reshape(-1, c)
+    safe = jnp.maximum(idx_map, 0)
+    out = flat[safe]
+    out = jnp.where((idx_map >= 0)[:, None], out, 0.0)
+    return out.reshape(d, h, w, c)

@@ -1,0 +1,44 @@
+"""Detection losses: focal BCE on anchor objectness + smooth-L1 box
+regression (SECOND/PointPillars-style)."""
+
+import jax.numpy as jnp
+
+FOCAL_ALPHA = 0.25
+FOCAL_GAMMA = 2.0
+BOX_WEIGHT = 2.0
+
+
+def sigmoid_focal_loss(logits, targets):
+    """Per-element focal loss; `targets` in {0, 1} (ignore-masking is the
+    caller's job)."""
+    p = 1.0 / (1.0 + jnp.exp(-logits))
+    ce = -(
+        targets * jnp.log(jnp.clip(p, 1e-7, 1.0))
+        + (1 - targets) * jnp.log(jnp.clip(1 - p, 1e-7, 1.0))
+    )
+    p_t = targets * p + (1 - targets) * (1 - p)
+    alpha_t = targets * FOCAL_ALPHA + (1 - targets) * (1 - FOCAL_ALPHA)
+    return alpha_t * (1 - p_t) ** FOCAL_GAMMA * ce
+
+
+def smooth_l1(pred, target):
+    d = jnp.abs(pred - target)
+    return jnp.where(d < 1.0, 0.5 * d * d, d - 0.5)
+
+
+def detection_loss(cls_logits, box_pred, cls_target, box_target):
+    """cls_logits (Hb,Wb,A), box_pred (Hb,Wb,A,8); targets likewise.
+    cls_target in {-1 (ignore), 0, 1}. Returns (total, cls, box) scalars.
+    """
+    valid = cls_target >= 0.0
+    pos = cls_target > 0.5
+    n_pos = jnp.maximum(pos.sum(), 1.0)
+
+    cls_l = sigmoid_focal_loss(cls_logits, jnp.clip(cls_target, 0.0, 1.0))
+    cls_l = jnp.where(valid, cls_l, 0.0).sum() / n_pos
+
+    box_l = smooth_l1(box_pred, box_target).sum(axis=-1)
+    box_l = jnp.where(pos, box_l, 0.0).sum() / n_pos
+
+    total = cls_l + BOX_WEIGHT * box_l
+    return total, cls_l, box_l

@@ -1,0 +1,132 @@
+"""Anchor target assignment (numpy, precomputed once per dataset).
+
+Distance-based matching (CenterPoint-style simplification of the IoU
+assigner — vectorizes cleanly in numpy; evaluation still uses rotated
+IoU on the rust side):
+
+- positive: anchor center within `pos_radius` of a GT center of the
+  anchor's class (cars additionally require the anchor yaw to be the
+  closer of the two car-anchor orientations, mod π);
+- the nearest eligible anchor of each GT is force-positive (so no GT
+  goes unassigned);
+- negative: no GT of the class within `neg_radius`;
+- in between: ignored (cls target -1).
+
+Box regression targets use the SECOND-style encoding shared with
+rust/src/model/mod.rs::encode_box.
+"""
+
+import math
+
+import numpy as np
+
+from .configs import CFG, ModelConfig
+
+POS_RADIUS = {0: 1.4, 1: 0.9}  # per class, metres
+NEG_RADIUS = {0: 2.8, 1: 1.8}
+
+
+def anchor_grid(cfg: ModelConfig = CFG):
+    """Return (Hb, Wb, A, 2) anchor centers (x, y) and per-anchor specs."""
+    hb, wb = cfg.bev_dims
+    g = cfg.grid
+    cell_x = (g.range_max[0] - g.range_min[0]) / wb
+    cell_y = (g.range_max[1] - g.range_min[1]) / hb
+    xs = g.range_min[0] + (np.arange(wb) + 0.5) * cell_x
+    ys = g.range_min[1] + (np.arange(hb) + 0.5) * cell_y
+    cx, cy = np.meshgrid(xs, ys)  # (Hb, Wb), row = y
+    centers = np.stack([cx, cy], axis=-1)  # (Hb, Wb, 2)
+    return centers
+
+
+def encode_box(gt, anchor_center, anchor):
+    """Mirror of rust model::encode_box. gt: [x,y,z,l,w,h,yaw]."""
+    ax, ay = anchor_center
+    al, aw, ah = anchor.size
+    diag = math.sqrt(al * al + aw * aw)
+    dyaw = gt[6] - anchor.yaw
+    return np.array(
+        [
+            (gt[0] - ax) / diag,
+            (gt[1] - ay) / diag,
+            (gt[2] - anchor.z_center) / ah,
+            math.log(max(gt[3], 1e-3) / al),
+            math.log(max(gt[4], 1e-3) / aw),
+            math.log(max(gt[5], 1e-3) / ah),
+            math.sin(dyaw),
+            math.cos(dyaw),
+        ],
+        dtype=np.float32,
+    )
+
+
+def _car_anchor_pref(gt_yaw, cfg):
+    """Index (0 or 1) of the car anchor whose yaw is closer mod π."""
+    best, best_d = 0, 1e9
+    for k, a in enumerate(cfg.anchors):
+        if a.class_id != 0:
+            continue
+        d = abs(((gt_yaw - a.yaw) + math.pi / 2) % math.pi - math.pi / 2)
+        if d < best_d:
+            best, best_d = k, d
+    return best
+
+
+def assign_frame(labels, cfg: ModelConfig = CFG):
+    """labels: (M, 8) [x,y,z,l,w,h,yaw,class_id] (class_id -1 = pad).
+
+    Returns cls_target (Hb, Wb, A) in {-1, 0, 1} and box_target
+    (Hb, Wb, A, 8) (zeros where not positive).
+    """
+    hb, wb = cfg.bev_dims
+    A = cfg.n_anchors
+    centers = anchor_grid(cfg)  # (Hb, Wb, 2)
+    cls_t = np.zeros((hb, wb, A), dtype=np.float32)
+    box_t = np.zeros((hb, wb, A, 8), dtype=np.float32)
+
+    valid = labels[labels[:, 7] >= 0] if len(labels) else labels
+    if len(valid) == 0:
+        return cls_t, box_t
+
+    flat_centers = centers.reshape(-1, 2)  # (Hb*Wb, 2)
+
+    # Ignore band first (per class), then positives overwrite.
+    for cls_id in (0, 1):
+        gts = valid[valid[:, 7] == cls_id]
+        if len(gts) == 0:
+            continue
+        d = np.linalg.norm(
+            flat_centers[:, None, :] - gts[None, :, :2], axis=-1
+        )  # (cells, M)
+        dmin = d.min(axis=1).reshape(hb, wb)
+        anchor_ids = [k for k, a in enumerate(cfg.anchors) if a.class_id == cls_id]
+        for k in anchor_ids:
+            ignore = (dmin < NEG_RADIUS[cls_id]) & (dmin >= POS_RADIUS[cls_id])
+            cls_t[:, :, k][ignore] = -1.0
+
+    for gt in valid:
+        cls_id = int(gt[7])
+        k = _car_anchor_pref(gt[6], cfg) if cls_id == 0 else next(
+            i for i, a in enumerate(cfg.anchors) if a.class_id == 1
+        )
+        anchor = cfg.anchors[k]
+        d = np.linalg.norm(flat_centers - gt[:2], axis=-1).reshape(hb, wb)
+        pos = d < POS_RADIUS[cls_id]
+        # Force the nearest cell positive.
+        nearest = np.unravel_index(np.argmin(d), d.shape)
+        pos[nearest] = True
+        rows, cols = np.nonzero(pos)
+        for r, c in zip(rows, cols):
+            cls_t[r, c, k] = 1.0
+            box_t[r, c, k] = encode_box(gt[:7], centers[r, c], anchor)
+    return cls_t, box_t
+
+
+def assign_split(labels_all, cfg: ModelConfig = CFG):
+    """labels_all: (N, M, 8) -> stacked targets for the whole split."""
+    cls_list, box_list = [], []
+    for labels in labels_all:
+        c, b = assign_frame(labels, cfg)
+        cls_list.append(c)
+        box_list.append(b)
+    return np.stack(cls_list), np.stack(box_list)

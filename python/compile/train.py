@@ -1,0 +1,285 @@
+"""Build-time training (paper §III-B.3: centralized, offline).
+
+Trains all six model configurations used by the evaluation:
+  - SC-MII variants: max, conv_k1, conv_k3 (per-device heads + shared
+    tail, trained end-to-end through the alignment gather);
+  - single-LiDAR baselines (device 0 and 1);
+  - input-point-cloud-integration baseline (merged raw clouds).
+
+Hand-rolled Adam (no optax in the image); parameters are nested dicts
+saved as flat npz under artifacts/weights/. Loss curves are logged to
+weights/loss_log.json and summarized in EXPERIMENTS.md.
+
+Coordinate transforms come from artifacts/calib.json — the NDT estimate,
+not the simulator truth, exactly as the paper's setup phase prescribes.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import targets as targets_mod
+from .align import build_align_map
+from .configs import CFG, INPUT_INTEGRATION, VARIANTS, single_name
+from .losses import detection_loss
+
+# ---------------------------------------------------------------------------
+# Parameter tree <-> flat npz
+
+
+def flatten_params(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_params(v, f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_params(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_params(flat):
+    tree = {}
+    for key, value in flat.items():
+        parts = key.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(value)
+
+    def listify(node):
+        if isinstance(node, dict):
+            if node and all(k.isdigit() for k in node):
+                return [listify(node[str(i)]) for i in range(len(node))]
+            return {k: listify(v) for k, v in node.items()}
+        return node
+
+    return listify(tree)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, clip=10.0):
+    # Global-norm gradient clipping.
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves) + 1e-12)
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(base, step, total, warmup=20):
+    warm = jnp.minimum(step / warmup, 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return base * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+# ---------------------------------------------------------------------------
+# Training loops
+
+
+def train_model(key, params, batched_loss, dataset_arrays, steps, batch, base_lr, tag):
+    """Generic loop. `batched_loss(params, *batch_arrays) -> scalar`."""
+    n = dataset_arrays[0].shape[0]
+    state = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, state, lr, *args):
+        (loss, aux), grads = jax.value_and_grad(batched_loss, has_aux=True)(params, *args)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss, aux
+
+    rng = np.random.default_rng(abs(hash(tag)) % (2**32))
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        args = [jnp.asarray(a[idx]) for a in dataset_arrays]
+        lr = cosine_lr(base_lr, step, steps)
+        params, state, loss, aux = step_fn(params, state, lr, *args)
+        if step % 10 == 0 or step == steps - 1:
+            cls_l, box_l = float(aux[0]), float(aux[1])
+            log.append(
+                {"step": step, "loss": float(loss), "cls": cls_l, "box": box_l}
+            )
+            print(
+                f"[{tag}] step {step:4d} loss {float(loss):8.4f} "
+                f"(cls {cls_l:7.4f} box {box_l:7.4f}) "
+                f"{time.time() - t0:6.1f}s",
+                flush=True,
+            )
+    return params, log
+
+
+def make_scmii_loss(variant, align_maps):
+    maps = [None] + [jnp.asarray(m, dtype=jnp.int32) for m in align_maps[1:]]
+
+    def single(params, pts0, pts1, cls_t, box_t):
+        cls, box = model_mod.scmii_fn(
+            params, [pts0, pts1], variant, maps, CFG, use_kernels=False
+        )
+        return detection_loss(cls, box, cls_t, box_t)
+
+    def batched(params, pts0, pts1, cls_t, box_t):
+        total, cls_l, box_l = jax.vmap(single, in_axes=(None, 0, 0, 0, 0))(
+            params, pts0, pts1, cls_t, box_t
+        )
+        return total.mean(), (cls_l.mean(), box_l.mean())
+
+    return batched
+
+
+def make_single_loss(align_map):
+    amap = None if align_map is None else jnp.asarray(align_map, dtype=jnp.int32)
+
+    def single(params, pts, cls_t, box_t):
+        feat = model_mod.head_fn(params["head"], pts, CFG)
+        if amap is not None:
+            from .kernels.ref import gather_align_ref
+
+            feat = gather_align_ref(feat, amap)
+        cls, box = model_mod.backbone_fn(params["backbone"], feat, CFG)
+        return detection_loss(cls, box, cls_t, box_t)
+
+    def batched(params, pts, cls_t, box_t):
+        total, cls_l, box_l = jax.vmap(single, in_axes=(None, 0, 0, 0))(
+            params, pts, cls_t, box_t
+        )
+        return total.mean(), (cls_l.mean(), box_l.mean())
+
+    return batched
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--calib", default="../artifacts/calib.json")
+    ap.add_argument("--out", default="../artifacts/weights")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("SCMII_STEPS", 900)))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--skip-existing",
+        action="store_true",
+        help="skip models whose .npz already exists in --out (resume support)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    split = data_mod.load_split(args.data, "train")
+    calib = data_mod.load_calib(args.calib)
+    print(f"train frames: {split['points'][0].shape[0]}, devices: {len(split['points'])}")
+
+    print("assigning anchor targets ...", flush=True)
+    cls_t, box_t = targets_mod.assign_split(split["labels"], CFG)
+    print(f"positives/frame: {(cls_t > 0.5).sum() / len(cls_t):.1f}")
+
+    align_maps = [None] + [
+        build_align_map(CFG.grid, calib[d].reshape(-1), 1)
+        for d in range(1, len(calib))
+    ]
+
+    key = jax.random.PRNGKey(args.seed)
+    logs = {}
+
+    def done_already(tag):
+        path = os.path.join(args.out, f"{tag}.npz")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[{tag}] exists, skipping")
+            return True
+        return False
+
+    # SC-MII variants.
+    for i, variant in enumerate(VARIANTS):
+        if done_already(variant):
+            continue
+        params = model_mod.init_variant_params(jax.random.fold_in(key, i), variant, CFG)
+        loss_fn = make_scmii_loss(variant, align_maps)
+        arrays = (split["points"][0], split["points"][1], cls_t, box_t)
+        params, log = train_model(
+            jax.random.fold_in(key, 100 + i), params, loss_fn, arrays,
+            args.steps, args.batch, args.lr, variant,
+        )
+        np.savez(os.path.join(args.out, f"{variant}.npz"), **flatten_params(params))
+        logs[variant] = log
+
+    # Single-LiDAR baselines (device 1 detects in its local frame, then
+    # aligns its features into the common frame — it still needs the
+    # extrinsics to report in the shared ground-truth frame).
+    for dev in range(len(split["points"])):
+        if done_already(single_name(dev)):
+            continue
+        params = model_mod.init_single_params(jax.random.fold_in(key, 200 + dev), CFG)
+        amap = align_maps[dev]
+        loss_fn = make_single_loss(amap)
+        arrays = (split["points"][dev], cls_t, box_t)
+        tag = single_name(dev)
+        params, log = train_model(
+            jax.random.fold_in(key, 300 + dev), params, loss_fn, arrays,
+            args.steps, args.batch, args.lr, tag,
+        )
+        np.savez(os.path.join(args.out, f"{tag}.npz"), **flatten_params(params))
+        logs[tag] = log
+
+    # Input-integration baseline on merged common-frame clouds.
+    if done_already(INPUT_INTEGRATION):
+        with open(os.path.join(args.out, "loss_log.json"), "w") as f:
+            json.dump(logs, f, indent=1)
+        with open(os.path.join(args.out, "DONE"), "w") as f:
+            f.write("ok\n")
+        print("training complete (resumed)")
+        return
+    print("merging clouds for the input-integration baseline ...", flush=True)
+    merged = data_mod.build_merged_split(split, calib)
+    params = model_mod.init_single_params(jax.random.fold_in(key, 400), CFG)
+    loss_fn = make_single_loss(None)
+    params, log = train_model(
+        jax.random.fold_in(key, 500), params, loss_fn, (merged, cls_t, box_t),
+        args.steps, args.batch, args.lr, INPUT_INTEGRATION,
+    )
+    np.savez(
+        os.path.join(args.out, f"{INPUT_INTEGRATION}.npz"), **flatten_params(params)
+    )
+    logs[INPUT_INTEGRATION] = log
+
+    with open(os.path.join(args.out, "loss_log.json"), "w") as f:
+        json.dump(logs, f, indent=1)
+    with open(os.path.join(args.out, "DONE"), "w") as f:
+        f.write("ok\n")
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Point-cloud voxelization in jnp (mirrors rust/src/voxel/features.rs).
+
+Produces a dense (D, H, W, 6) feature map from an (N, 4) point tensor via
+segment-sum scatter. Pad points (z <= -999) and out-of-range points fall
+into a discard bin. The six statistics per occupied voxel:
+
+  0: min(count, CLIP)/CLIP
+  1: mean x offset / dx      2: mean y offset / dy
+  3: mean z offset / dz      4: mean intensity
+  5: (max_z - z_min) / z_span
+"""
+
+import jax.numpy as jnp
+import jax
+
+from .configs import COUNT_CLIP, GridConfig
+
+
+def voxelize(points, grid: GridConfig):
+    """points: (N, 4) f32 [x, y, z, intensity] -> (D, H, W, 6) f32."""
+    W, H, D = grid.dims
+    n_vox = W * H * D
+    x, y, z, inten = points[:, 0], points[:, 1], points[:, 2], points[:, 3]
+
+    fx = (x - grid.range_min[0]) / grid.voxel[0]
+    fy = (y - grid.range_min[1]) / grid.voxel[1]
+    fz = (z - grid.range_min[2]) / grid.voxel[2]
+    ix = jnp.floor(fx).astype(jnp.int32)
+    iy = jnp.floor(fy).astype(jnp.int32)
+    iz = jnp.floor(fz).astype(jnp.int32)
+
+    valid = (
+        (fx >= 0)
+        & (fy >= 0)
+        & (fz >= 0)
+        & (ix < W)
+        & (iy < H)
+        & (iz < D)
+        & (z > -999.0)
+    )
+    flat = (iz * H + iy) * W + ix
+    flat = jnp.where(valid, flat, n_vox)  # discard bin
+
+    # Offsets from voxel centers (normalized by voxel size).
+    cx = grid.range_min[0] + (ix.astype(jnp.float32) + 0.5) * grid.voxel[0]
+    cy = grid.range_min[1] + (iy.astype(jnp.float32) + 0.5) * grid.voxel[1]
+    cz = grid.range_min[2] + (iz.astype(jnp.float32) + 0.5) * grid.voxel[2]
+    dx = (x - cx) / grid.voxel[0]
+    dy = (y - cy) / grid.voxel[1]
+    dz = (z - cz) / grid.voxel[2]
+
+    ns = n_vox + 1
+    # One fused scatter for all sum statistics (5 columns) — a single
+    # segment_sum over an (N, 5) matrix is ~4x faster on CPU XLA than five
+    # scalar scatters (see EXPERIMENTS.md §Perf L2).
+    cols = jnp.stack([valid.astype(jnp.float32), dx, dy, dz, inten], axis=-1)
+    cols = jnp.where(valid[:, None], cols, 0.0)
+    sums = jax.ops.segment_sum(cols, flat, num_segments=ns)
+    max_z = jax.ops.segment_max(
+        jnp.where(valid, z, -jnp.inf), flat, num_segments=ns
+    )
+
+    count = sums[:n_vox, 0]
+    sum_dx = sums[:, 1]
+    sum_dy = sums[:, 2]
+    sum_dz = sums[:, 3]
+    sum_i = sums[:, 4]
+    occupied = count > 0
+    inv_n = jnp.where(occupied, 1.0 / jnp.maximum(count, 1.0), 0.0)
+    z_span = grid.range_max[2] - grid.range_min[2]
+
+    f0 = jnp.minimum(count, COUNT_CLIP) / COUNT_CLIP
+    f1 = sum_dx[:n_vox] * inv_n
+    f2 = sum_dy[:n_vox] * inv_n
+    f3 = sum_dz[:n_vox] * inv_n
+    f4 = sum_i[:n_vox] * inv_n
+    f5 = jnp.where(
+        occupied, (max_z[:n_vox] - grid.range_min[2]) / z_span, 0.0
+    )
+    feats = jnp.stack([f0, f1, f2, f3, f4, f5], axis=-1)
+    return feats.reshape(D, H, W, 6)

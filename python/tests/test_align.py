@@ -1,0 +1,88 @@
+"""Alignment index-map construction (mirrors rust/src/align tests — both
+implementations are pinned to the same contract, including rounding)."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.align import build_align_map, identity_map
+from compile.configs import CFG
+
+GRID = CFG.grid
+settings.register_profile("align", deadline=None, max_examples=15)
+settings.load_profile("align")
+
+
+def mat4(tx=0.0, ty=0.0, tz=0.0, yaw=0.0):
+    c, s = math.cos(yaw), math.sin(yaw)
+    return np.array(
+        [[c, -s, 0, tx], [s, c, 0, ty], [0, 0, 1, tz], [0, 0, 0, 1]], np.float64
+    )
+
+
+def test_identity_map_is_identity():
+    m = identity_map(GRID)
+    np.testing.assert_array_equal(m, np.arange(GRID.n_voxels()))
+
+
+def test_translation_by_one_voxel():
+    m = build_align_map(GRID, mat4(tx=GRID.voxel[0]))
+    w, h, _ = GRID.dims
+    # output voxel (ix=1, iy=0, iz=0) sources device voxel 0
+    assert m[1] == 0
+    # leftmost column unmapped
+    assert m[0] == -1
+
+
+def test_rotation_coverage():
+    m = build_align_map(GRID, mat4(tx=3.0, ty=-2.0, yaw=0.9))
+    valid = (m >= 0).mean()
+    assert valid > 0.3
+    assert m.max() < GRID.n_voxels()
+
+
+def test_stride_halves_dims():
+    m = identity_map(GRID, stride=2)
+    assert m.shape == ((GRID.W // 2) * (GRID.H // 2) * (GRID.D // 2),)
+    np.testing.assert_array_equal(m, np.arange(len(m)))
+
+
+@given(
+    tx=st.floats(-8, 8),
+    ty=st.floats(-8, 8),
+    yaw=st.floats(-math.pi, math.pi),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_physical_consistency(tx, ty, yaw, seed):
+    """A device-frame point P maps to the common voxel containing T(P)
+    (within one voxel of rounding)."""
+    t = mat4(tx, ty, 0.3, yaw)
+    m = build_align_map(GRID, t)
+    rng = np.random.default_rng(seed)
+    w, h, d = GRID.dims
+    p_dev = np.array(
+        [rng.uniform(-10, 25), rng.uniform(-10, 25), rng.uniform(-5.5, -0.5)]
+    )
+    # device voxel of p_dev
+    f = (p_dev - np.array(GRID.range_min)) / np.array(GRID.voxel)
+    if np.any(f < 0):
+        return
+    ji = f.astype(int)
+    if ji[0] >= w or ji[1] >= h or ji[2] >= d:
+        return
+    p_common = t[:3, :3] @ p_dev + t[:3, 3]
+    fc = (p_common - np.array(GRID.range_min)) / np.array(GRID.voxel)
+    if np.any(fc < 0):
+        return
+    oc = fc.astype(int)
+    if oc[0] >= w or oc[1] >= h or oc[2] >= d:
+        return
+    out_flat = (oc[2] * h + oc[1]) * w + oc[0]
+    src = m[out_flat]
+    assert src >= 0
+    sz, rem = divmod(int(src), h * w)
+    sy, sx = divmod(rem, w)
+    assert abs(sx - ji[0]) <= 1
+    assert abs(sy - ji[1]) <= 1
+    assert abs(sz - ji[2]) <= 1

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and the gather's index distribution); every
+kernel must match its ref to float32 tolerance on every drawn case.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_integrate_conv import fused_integrate_conv
+from compile.kernels.gather_align import gather_align
+from compile.kernels.max_integrate import max_integrate
+
+settings.register_profile("kernels", deadline=None, max_examples=20)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+dims = st.tuples(
+    st.integers(1, 6),  # D
+    st.integers(1, 12),  # H
+    st.integers(1, 12),  # W
+    st.integers(1, 8),  # C
+)
+
+
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_max_integrate_matches_ref(dims, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, *dims)
+    b = rand(rng, *dims)
+    got = max_integrate(a, b)
+    want = ref.max_integrate_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@given(dims=dims, co=st.integers(1, 8), k=st.sampled_from([1, 3]),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_integrate_conv_matches_ref(dims, co, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, *dims)
+    b = rand(rng, *dims)
+    c = dims[-1]
+    w = rand(rng, k, k, k, 2 * c, co)
+    bias = rand(rng, co)
+    got = fused_integrate_conv(a, b, w, bias)
+    want = ref.fused_integrate_conv_ref(a, b, w, bias)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    d=st.integers(1, 4),
+    h=st.integers(1, 8),
+    w=st.integers(1, 8),
+    c=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_align_matches_ref(d, h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    feat = rand(rng, d, h, w, c)
+    v = d * h * w
+    idx = jnp.asarray(rng.integers(-1, v, size=(v,)).astype(np.int32))
+    got = gather_align(feat, idx)
+    want = ref.gather_align_ref(feat, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_gather_align_identity_is_noop():
+    rng = np.random.default_rng(0)
+    feat = rand(rng, 4, 8, 8, 6)
+    idx = jnp.arange(4 * 8 * 8, dtype=jnp.int32)
+    got = gather_align(feat, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(feat))
+
+
+def test_gather_align_all_invalid_is_zero():
+    rng = np.random.default_rng(1)
+    feat = rand(rng, 2, 4, 4, 3)
+    idx = jnp.full((2 * 4 * 4,), -1, dtype=jnp.int32)
+    got = gather_align(feat, idx)
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_max_integrate_canonical_shape():
+    """The production shape (8, 64, 64, 8) runs through the kernel path."""
+    rng = np.random.default_rng(2)
+    a = rand(rng, 8, 64, 64, 8)
+    b = rand(rng, 8, 64, 64, 8)
+    got = max_integrate(a, b)
+    want = ref.max_integrate_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_conv_k3_z_boundary():
+    """Zero padding at the z boundary (the kernel masks the halo)."""
+    rng = np.random.default_rng(3)
+    a = rand(rng, 2, 4, 4, 2)
+    b = rand(rng, 2, 4, 4, 2)
+    w = rand(rng, 3, 3, 3, 4, 2)
+    bias = jnp.zeros((2,), jnp.float32)
+    got = fused_integrate_conv(a, b, w, bias)
+    want = ref.fused_integrate_conv_ref(a, b, w, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_conv_rejects_even_kernel():
+    rng = np.random.default_rng(4)
+    a = rand(rng, 2, 4, 4, 2)
+    w = rand(rng, 2, 2, 2, 4, 2)
+    with pytest.raises(ValueError):
+        fused_integrate_conv(a, a, w, jnp.zeros((2,), jnp.float32))

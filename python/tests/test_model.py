@@ -1,0 +1,146 @@
+"""Model shape/behaviour tests: head/tail/full graphs, split-point
+semantics, integration variants, encode/decode conventions."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as m
+from compile.configs import CFG
+from compile.targets import assign_frame, encode_box
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+
+
+def rand_points(n=512):
+    return jnp.asarray(
+        np.stack(
+            [
+                RNG.uniform(-15, 30, n),
+                RNG.uniform(-15, 30, n),
+                RNG.uniform(-5.5, -0.5, n),
+                RNG.uniform(0, 1, n),
+            ],
+            axis=-1,
+        ).astype(np.float32)
+    )
+
+
+def test_head_output_shape():
+    params = m.init_head_params(KEY)
+    out = m.head_fn(params, rand_points())
+    g = CFG.grid
+    assert out.shape == (g.D, g.H, g.W, g.c_head)
+    # ReLU at the split point
+    assert float(out.min()) >= 0.0
+
+
+def test_head_is_local_to_points():
+    """The head must not smear information beyond one conv3d receptive
+    field — a point cluster far from a voxel leaves it zero."""
+    params = m.init_head_params(KEY)
+    pts = rand_points(64)
+    out = np.asarray(m.head_fn(params, pts))
+    # A corner of the grid with no points within ~2 voxels must be zero.
+    assert np.all(out[:, :2, :2, :] == 0.0) or np.all(out[:, -2:, -2:, :] == 0.0)
+
+
+def test_tail_variants_shapes():
+    g = CFG.grid
+    maps = [None, jnp.arange(g.n_voxels(), dtype=jnp.int32)]
+    feats = [
+        jnp.asarray(RNG.standard_normal((g.D, g.H, g.W, g.c_head)).astype(np.float32))
+        for _ in range(2)
+    ]
+    for variant in ("max", "conv_k1", "conv_k3"):
+        params = m.init_variant_params(KEY, variant)
+        cls, box = m.tail_fn(params, feats, variant, maps)
+        assert cls.shape == tuple(CFG.bev_dims) + (CFG.n_anchors,)
+        assert box.shape == tuple(CFG.bev_dims) + (CFG.n_anchors, 8)
+
+
+def test_scmii_equals_head_plus_tail():
+    """Split-computing invariant: running head then tail equals the
+    end-to-end graph (same params, same integration)."""
+    g = CFG.grid
+    maps = [None, jnp.arange(g.n_voxels(), dtype=jnp.int32)]
+    params = m.init_variant_params(KEY, "conv_k1")
+    pts = [rand_points(256), rand_points(256)]
+    cls_a, box_a = m.scmii_fn(params, pts, "conv_k1", maps)
+    feats = [m.head_fn(hp, p) for hp, p in zip(params["heads"], pts)]
+    cls_b, box_b = m.tail_fn(params, feats, "conv_k1", maps)
+    np.testing.assert_allclose(np.asarray(cls_a), np.asarray(cls_b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(box_a), np.asarray(box_b), atol=1e-5)
+
+
+def test_kernel_and_ref_paths_agree():
+    """use_kernels=True (serving) vs False (training) must match."""
+    g = CFG.grid
+    maps = [None, jnp.arange(g.n_voxels(), dtype=jnp.int32)]
+    feats = [
+        jnp.asarray(RNG.standard_normal((g.D, g.H, g.W, g.c_head)).astype(np.float32))
+        for _ in range(2)
+    ]
+    for variant in ("max", "conv_k1", "conv_k3"):
+        params = m.init_variant_params(KEY, variant)
+        a = m.integrate_fn(params.get("integration", {}), feats, variant, maps,
+                           CFG, use_kernels=True)
+        b = m.integrate_fn(params.get("integration", {}), feats, variant, maps,
+                           CFG, use_kernels=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_max_integration_dominates_single():
+    """Max integration of f with zeros returns relu-like f (paper's
+    max-selection semantics: absent device = no evidence)."""
+    g = CFG.grid
+    maps = [None, None]
+    f = jnp.abs(
+        jnp.asarray(RNG.standard_normal((g.D, g.H, g.W, g.c_head)).astype(np.float32))
+    )
+    z = jnp.zeros_like(f)
+    out = m.integrate_fn({}, [f, z], "max", maps, CFG, use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(f))
+
+
+def test_target_assignment_basics():
+    labels = np.zeros((2, 8), np.float32)
+    labels[0] = [5.0, 5.0, -3.7, 4.5, 1.9, 1.6, 0.0, 0]  # car
+    labels[1] = [-5.0, 8.0, -3.65, 0.8, 0.8, 1.7, 0.0, 1]  # pedestrian
+    cls_t, box_t = assign_frame(labels)
+    assert cls_t.shape == tuple(CFG.bev_dims) + (CFG.n_anchors,)
+    assert (cls_t == 1).sum() >= 2, "both GTs must be assigned"
+    # positives only on matching-class anchors
+    assert (cls_t[:, :, 2] == 1).sum() >= 1  # ped anchor fired
+    assert (cls_t[:, :, 0] == 1).sum() + (cls_t[:, :, 1] == 1).sum() >= 1
+
+
+def test_car_anchor_orientation_preference():
+    labels = np.zeros((1, 8), np.float32)
+    labels[0] = [0.0, 0.0, -3.7, 4.5, 1.9, 1.6, math.pi / 2, 0]  # car at 90°
+    cls_t, _ = assign_frame(labels)
+    # the 90° anchor (index 1) takes it, not the 0° anchor
+    assert (cls_t[:, :, 1] == 1).sum() >= 1
+    assert (cls_t[:, :, 0] == 1).sum() == 0
+
+
+def test_encode_box_roundtrip_convention():
+    """Pin the encoding rust decodes (model::decode_raw)."""
+    anchor = CFG.anchors[0]
+    gt = np.array([10.3, -4.2, -3.5, 4.2, 1.8, 1.5, 0.25], np.float32)
+    enc = encode_box(gt, (10.0, -4.0), anchor)
+    diag = math.sqrt(anchor.size[0] ** 2 + anchor.size[1] ** 2)
+    # decode manually
+    x = 10.0 + enc[0] * diag
+    y = -4.0 + enc[1] * diag
+    z = anchor.z_center + enc[2] * anchor.size[2]
+    l = anchor.size[0] * math.exp(enc[3])
+    yaw = anchor.yaw + math.atan2(enc[6], enc[7])
+    assert abs(x - gt[0]) < 1e-5
+    assert abs(y - gt[1]) < 1e-5
+    assert abs(z - gt[2]) < 1e-5
+    assert abs(l - gt[3]) < 1e-4
+    assert abs(yaw - gt[6]) < 1e-6

@@ -1,0 +1,113 @@
+"""jnp voxelizer semantics (mirrors rust/src/voxel/features.rs tests so
+the two implementations are pinned to the same contract)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import CFG, COUNT_CLIP, PAD_Z
+from compile.voxelize import voxelize
+
+GRID = CFG.grid
+settings.register_profile("vox", deadline=None, max_examples=15)
+settings.load_profile("vox")
+
+
+def vox_center(ix, iy, iz):
+    return (
+        GRID.range_min[0] + (ix + 0.5) * GRID.voxel[0],
+        GRID.range_min[1] + (iy + 0.5) * GRID.voxel[1],
+        GRID.range_min[2] + (iz + 0.5) * GRID.voxel[2],
+    )
+
+
+def run(points):
+    return np.asarray(voxelize(jnp.asarray(np.asarray(points, np.float32)), GRID))
+
+
+def test_empty_cloud_zero_map():
+    pts = np.zeros((16, 4), np.float32)
+    pts[:, 2] = PAD_Z
+    out = run(pts)
+    assert out.shape == (GRID.D, GRID.H, GRID.W, 6)
+    assert np.all(out == 0.0)
+
+
+def test_single_point_stats():
+    cx, cy, cz = vox_center(32, 16, 4)
+    pts = np.array([[cx, cy, cz, 0.7]], np.float32)
+    out = run(pts)
+    v = out[4, 16, 32]
+    assert abs(v[0] - 1.0 / COUNT_CLIP) < 1e-6
+    assert np.all(np.abs(v[1:4]) < 1e-4)
+    assert abs(v[4] - 0.7) < 1e-6
+    z_norm = (cz - GRID.range_min[2]) / (GRID.range_max[2] - GRID.range_min[2])
+    assert abs(v[5] - z_norm) < 1e-4
+    assert (out != 0).any(axis=-1).sum() == 1
+
+
+def test_offset_normalization():
+    cx, cy, cz = vox_center(10, 10, 2)
+    pts = np.array([[cx + 0.2, cy, cz, 0.0]], np.float32)
+    out = run(pts)
+    assert abs(out[2, 10, 10, 1] - 0.25) < 1e-4
+
+
+def test_count_clip():
+    cx, cy, cz = vox_center(5, 5, 1)
+    pts = np.tile(np.array([[cx, cy, cz, 0.0]], np.float32), (40, 1))
+    out = run(pts)
+    assert abs(out[1, 5, 5, 0] - 1.0) < 1e-6
+
+
+def test_out_of_range_dropped():
+    pts = np.array(
+        [[1000.0, 0.0, -3.0, 0.0], [0.0, 0.0, 100.0, 0.0], [0.0, 0.0, PAD_Z, 0.0]],
+        np.float32,
+    )
+    out = run(pts)
+    assert np.all(out == 0.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 512))
+def test_matches_numpy_reference(seed, n):
+    """Dense property check against an independent numpy implementation."""
+    rng = np.random.default_rng(seed)
+    pts = np.stack(
+        [
+            rng.uniform(-25, 40, n),
+            rng.uniform(-25, 40, n),
+            rng.uniform(-7, 1, n),
+            rng.uniform(0, 1, n),
+        ],
+        axis=-1,
+    ).astype(np.float32)
+    out = run(pts)
+
+    # numpy reference
+    w, h, d = GRID.dims
+    ref = np.zeros((d, h, w, 6), np.float32)
+    acc = {}
+    for x, y, z, i in pts:
+        fx = (x - GRID.range_min[0]) / GRID.voxel[0]
+        fy = (y - GRID.range_min[1]) / GRID.voxel[1]
+        fz = (z - GRID.range_min[2]) / GRID.voxel[2]
+        if fx < 0 or fy < 0 or fz < 0:
+            continue
+        ix, iy, iz = int(fx), int(fy), int(fz)
+        if ix >= w or iy >= h or iz >= d:
+            continue
+        acc.setdefault((iz, iy, ix), []).append((x, y, z, i))
+    for (iz, iy, ix), plist in acc.items():
+        cx, cy, cz = vox_center(ix, iy, iz)
+        xs = np.array(plist)
+        nvox = len(plist)
+        ref[iz, iy, ix, 0] = min(nvox, COUNT_CLIP) / COUNT_CLIP
+        ref[iz, iy, ix, 1] = np.mean(xs[:, 0] - cx) / GRID.voxel[0]
+        ref[iz, iy, ix, 2] = np.mean(xs[:, 1] - cy) / GRID.voxel[1]
+        ref[iz, iy, ix, 3] = np.mean(xs[:, 2] - cz) / GRID.voxel[2]
+        ref[iz, iy, ix, 4] = np.mean(xs[:, 3])
+        ref[iz, iy, ix, 5] = (xs[:, 2].max() - GRID.range_min[2]) / (
+            GRID.range_max[2] - GRID.range_min[2]
+        )
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=2e-4)

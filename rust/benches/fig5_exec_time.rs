@@ -1,0 +1,71 @@
+//! Bench target regenerating **Fig 5** (paper §IV-D): execution-time
+//! comparison under the testbed latency model, plus sweeps over link
+//! bandwidth and edge-device speed (the paper §IV-E's network-sensitivity
+//! discussion). Measurements run once; every sweep point re-models the
+//! same raw timings.
+//!
+//! `cargo bench --bench fig5_exec_time`
+
+use scmii::config::{default_paths, LatencyConfig};
+use scmii::latency::harness::{measure_raw, model_methods, print_exec_time};
+use scmii::utils::stats;
+
+fn main() {
+    scmii::utils::logging::init();
+    let paths = default_paths();
+    if !scmii::config::artifacts_present(&paths) {
+        println!("SKIP fig5_exec_time: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let frames = std::env::var("SCMII_EVAL_FRAMES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16);
+
+    let raw = match measure_raw(&paths, frames) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("fig5_exec_time failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let cfg = LatencyConfig::default();
+    print_exec_time(&model_methods(&raw, &cfg));
+
+    // Bandwidth sweep ablation: where does offloading stop paying?
+    println!("\n=== bandwidth sweep (mean inference time, ms) ===");
+    println!("{:<10} {:>14} {:>16} {:>10}", "link", "edge-only", "scmii conv_k3", "speedup");
+    for gbps in [10.0, 1.0, 0.3, 0.1, 0.03, 0.01] {
+        let mut c = cfg.clone();
+        c.bandwidth_bps = gbps * 1e9;
+        let m = model_methods(&raw, &c);
+        let base = stats::mean(&m[0].inference) * 1e3;
+        let best = stats::mean(&m[m.len() - 1].inference) * 1e3;
+        println!(
+            "{:<10} {:>14.1} {:>16.1} {:>9.2}x",
+            format!("{gbps} Gbps"),
+            base,
+            best,
+            base / best
+        );
+    }
+
+    // Edge-factor sweep: how much slower must the edge device be before
+    // splitting helps (and how the advantage grows on weaker devices)?
+    println!("\n=== edge-device factor sweep (mean inference time, ms) ===");
+    println!("{:<12} {:>14} {:>16} {:>10}", "edge factor", "edge-only", "scmii conv_k3", "speedup");
+    for ef in [1.0, 2.0, 4.0, 6.0, 12.0, 24.0] {
+        let mut c = cfg.clone();
+        c.edge_factor = ef;
+        let m = model_methods(&raw, &c);
+        let base = stats::mean(&m[0].inference) * 1e3;
+        let best = stats::mean(&m[m.len() - 1].inference) * 1e3;
+        println!(
+            "{:<12} {:>14.1} {:>16.1} {:>9.2}x",
+            format!("{ef}x"),
+            base,
+            best,
+            base / best
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Partial-data-loss ablation (paper §IV-E future work, implemented):
+//! accuracy when one device's intermediate output is dropped and the
+//! server zero-fills it, per integration method. Quantifies how much of
+//! the multi-LiDAR gain survives a device outage.
+//!
+//! `cargo bench --bench loss_tolerance`
+
+use scmii::config::{default_paths, IntegrationKind};
+use scmii::coordinator::pipeline::ScMiiPipeline;
+use scmii::eval::ap::{evaluate_map, EvalFrame};
+use scmii::geom::Box3;
+use scmii::runtime::HostTensor;
+
+fn main() {
+    scmii::utils::logging::init();
+    let paths = default_paths();
+    if !scmii::config::artifacts_present(&paths) {
+        println!("SKIP loss_tolerance: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let n = std::env::var("SCMII_EVAL_FRAMES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+    let frames = scmii::sim::dataset::load_split(&paths.data.join("val")).expect("load val");
+    let frames: Vec<_> = frames.into_iter().take(n).collect();
+
+    println!("=== accuracy under single-device feature loss (zero-fill) ===");
+    println!(
+        "{:<24} {:>10} {:>12} {:>12}",
+        "variant", "loss", "mAP@0.3", "mAP@0.5"
+    );
+    for kind in IntegrationKind::all() {
+        let pipeline = ScMiiPipeline::load(&paths, kind).expect("load pipeline");
+        let g = &pipeline.meta.grid;
+        let feat_shape = [g.dims[2], g.dims[1], g.dims[0], g.c_head];
+        let n_classes = pipeline.meta.classes.len();
+        for drop_dev in [None, Some(0usize), Some(1usize)] {
+            let mut eval_frames = Vec::new();
+            for f in &frames {
+                let mut feats = Vec::new();
+                for (dev, cloud) in f.clouds.iter().enumerate() {
+                    if Some(dev) == drop_dev {
+                        feats.push(HostTensor::zeros(&feat_shape));
+                    } else {
+                        feats.push(pipeline.run_head(dev, cloud).expect("head"));
+                    }
+                }
+                let (cls, boxes) = pipeline.run_tail(&feats).expect("tail");
+                let dets = pipeline.postprocess_raw(&cls, &boxes);
+                let gt = f
+                    .labels
+                    .iter()
+                    .map(|l| {
+                        (
+                            Box3::from_xyzlwh_yaw(&[
+                                l[0], l[1], l[2], l[3], l[4], l[5], l[6],
+                            ]),
+                            l[7] as usize,
+                        )
+                    })
+                    .collect();
+                eval_frames.push(EvalFrame { detections: dets, ground_truth: gt });
+            }
+            let m30 = evaluate_map(&eval_frames, n_classes, 0.3);
+            let m50 = evaluate_map(&eval_frames, n_classes, 0.5);
+            let loss_desc = match drop_dev {
+                None => "none".to_string(),
+                Some(d) => format!("device {d}"),
+            };
+            println!(
+                "{:<24} {:>10} {:>11.2}% {:>11.2}%",
+                kind.name(),
+                loss_desc,
+                m30.map * 100.0,
+                m50.map * 100.0
+            );
+        }
+    }
+}

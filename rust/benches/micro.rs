@@ -1,0 +1,114 @@
+//! L3 hot-path microbenchmarks: the coordinator-side operations on the
+//! request path (voxelization mirror, alignment gather, max integration,
+//! wire serialization, NMS, raycast) plus the runtime's HLO execution when
+//! artifacts are present.
+//!
+//! `cargo bench --bench micro`
+
+use scmii::align::AlignMap;
+use scmii::config::{default_paths, GridConfig, IntegrationKind, ModelMeta};
+use scmii::geom::Pose;
+use scmii::model::{postprocess, DecodeParams};
+use scmii::net::{read_msg, write_msg, Msg};
+use scmii::runtime::HostTensor;
+use scmii::utils::bench::Bench;
+use scmii::utils::rng::Pcg64;
+use scmii::voxel::{voxelize, FeatureMap, Point};
+
+fn main() {
+    scmii::utils::logging::init();
+    let mut bench = Bench::auto();
+    let grid = GridConfig::default();
+    let mut rng = Pcg64::new(7);
+
+    // Synthetic cloud + feature maps at production shapes.
+    let cloud: Vec<Point> = (0..grid.max_points)
+        .map(|_| {
+            Point::new(
+                rng.range(-15.0, 30.0) as f32,
+                rng.range(-15.0, 30.0) as f32,
+                rng.range(-5.5, -0.5) as f32,
+                rng.uniform_f32(),
+            )
+        })
+        .collect();
+    let [w, h, d] = grid.dims;
+    let mut fa = FeatureMap::zeros(d, h, w, grid.c_head);
+    let mut fb = FeatureMap::zeros(d, h, w, grid.c_head);
+    for i in 0..fa.data.len() {
+        fa.data[i] = rng.uniform_f32();
+        fb.data[i] = rng.uniform_f32();
+    }
+
+    bench.run("voxelize 4096 pts -> 64x64x8x6", || {
+        std::hint::black_box(voxelize(&cloud, &grid));
+    });
+
+    let pose = Pose::from_xyz_rpy(15.0, 15.0, 0.7, 0.0, 0.0, 3.3);
+    bench.run("align-map build (rigid, 32k voxels)", || {
+        std::hint::black_box(AlignMap::build(&grid, &pose, 1));
+    });
+    let amap = AlignMap::build(&grid, &pose, 1);
+    bench.run("align-map apply (gather 32k x 8ch)", || {
+        std::hint::black_box(amap.apply(&fb));
+    });
+
+    bench.run("max integrate (native, 32k x 8ch)", || {
+        std::hint::black_box(scmii::integrate::max_integrate(&[fa.clone(), fb.clone()]));
+    });
+
+    let tensor = HostTensor::new(vec![d, h, w, grid.c_head], fa.data.clone()).unwrap();
+    bench.run("wire encode Features (1 MiB)", || {
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::Features { frame_id: 1, device_id: 0, tensor: tensor.clone() },
+        )
+        .unwrap();
+        std::hint::black_box(buf.len());
+    });
+    let mut encoded = Vec::new();
+    write_msg(&mut encoded, &Msg::Features { frame_id: 1, device_id: 0, tensor })
+        .unwrap();
+    bench.run("wire decode Features (1 MiB)", || {
+        std::hint::black_box(read_msg(&mut encoded.as_slice()).unwrap());
+    });
+
+    // Decode + NMS on dense fake logits.
+    let meta = ModelMeta::test_default();
+    let [hb, wb] = meta.bev_dims;
+    let a = meta.anchors.len();
+    let cls: Vec<f32> = (0..hb * wb * a).map(|_| rng.range(-6.0, 1.0) as f32).collect();
+    let boxes: Vec<f32> =
+        (0..hb * wb * a * 8).map(|_| rng.range(-0.3, 0.3) as f32).collect();
+    bench.run("decode + rotated NMS (32x32x3 anchors)", || {
+        std::hint::black_box(postprocess(&cls, &boxes, &meta, &DecodeParams::default()));
+    });
+
+    // Raycast one frame (datagen hot path).
+    let scene = scmii::sim::Scene::new(3, 8, 5);
+    let rig = scmii::sim::dataset::sensor_rig();
+    bench.run("raycast OS1-64 frame (512 az)", || {
+        let mut r = Pcg64::new(1);
+        std::hint::black_box(rig[0].scan(&scene, &mut r).len());
+    });
+
+    // HLO execution through PJRT (only when artifacts exist).
+    let paths = default_paths();
+    if scmii::config::artifacts_present(&paths) {
+        let pipeline =
+            scmii::coordinator::pipeline::ScMiiPipeline::load(&paths, IntegrationKind::ConvK3)
+                .expect("pipeline");
+        let feats: Vec<HostTensor> = (0..2)
+            .map(|dev| pipeline.run_head(dev, &cloud).expect("head"))
+            .collect();
+        bench.run("HLO head exec (points -> features)", || {
+            std::hint::black_box(pipeline.run_head(0, &cloud).unwrap());
+        });
+        bench.run("HLO tail exec conv_k3 (2 feats -> dets)", || {
+            std::hint::black_box(pipeline.run_tail(&feats).unwrap());
+        });
+    } else {
+        println!("(artifacts missing — skipping PJRT execution benches)");
+    }
+}

@@ -1,0 +1,42 @@
+//! Setup-phase benchmark (paper Fig 4): NDT scan-matching quality and
+//! cost vs calibration-scan density. Needs no artifacts.
+//!
+//! `cargo bench --bench ndt_bench`
+
+use scmii::ndt::{calibrate, NdtParams};
+use scmii::sim::{self, SimConfig};
+use std::time::Instant;
+
+fn main() {
+    scmii::utils::logging::init();
+    println!("=== NDT calibration quality vs scan density ===");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>10}",
+        "points", "rot err", "trans err", "score", "time"
+    );
+    for &points in &[2048usize, 4096, 8192, 16384] {
+        let cfg = SimConfig { calib_points: points, ..Default::default() };
+        let scans = sim::dataset::calibration_scans(&cfg);
+        let rig = sim::dataset::sensor_rig();
+        let truth = sim::dataset::true_device_transform(&rig, 1);
+        let t0 = Instant::now();
+        let result = calibrate(&scans[0], &scans[1], &NdtParams::default());
+        let secs = t0.elapsed().as_secs_f64();
+        let (rot, trans) = result.pose.error_to(&truth);
+        println!(
+            "{:>10} {:>9.4} rad {:>10.3} m {:>12.4} {:>8.2} s",
+            points, rot, trans, result.score, secs
+        );
+    }
+
+    // Map-build microbench.
+    let cfg = SimConfig::default();
+    let scans = sim::dataset::calibration_scans(&cfg);
+    let mut bench = scmii::utils::bench::Bench::auto();
+    for &res in &[4.0, 2.0, 1.0] {
+        bench.run(&format!("ndt_map_build res={res}"), || {
+            let m = scmii::ndt::NdtMap::build(&scans[0], res);
+            std::hint::black_box(m.n_cells());
+        });
+    }
+}

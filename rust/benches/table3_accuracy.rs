@@ -1,0 +1,29 @@
+//! Bench target regenerating **Table III** (paper §IV-C): accuracy of
+//! every configuration. Not a timing bench — it reruns the full accuracy
+//! harness and prints the paper's table. Skips (successfully) when the
+//! AOT artifacts haven't been built.
+//!
+//! `cargo bench --bench table3_accuracy`
+
+use scmii::config::default_paths;
+use scmii::eval::harness::{print_accuracy, run_accuracy};
+
+fn main() {
+    scmii::utils::logging::init();
+    let paths = default_paths();
+    if !scmii::config::artifacts_present(&paths) {
+        println!("SKIP table3_accuracy: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let frames = std::env::var("SCMII_EVAL_FRAMES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(80);
+    match run_accuracy(&paths, frames) {
+        Ok(rows) => print_accuracy(&rows),
+        Err(e) => {
+            eprintln!("table3_accuracy failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Coordinate transformation of intermediate outputs (paper §III-A.2).
+//!
+//! Voxel indices of a device's feature map are converted to physical
+//! coordinates (scaled by the effective voxel size, shifted by the grid
+//! origin), pushed through the rigid calibration transform, and converted
+//! back to voxel indices in the common grid, rounded to nearest and
+//! clipped to the integration range. Because the transform is fixed after
+//! setup, the whole chain collapses to a **static gather index map**
+//! computed once per (device, transform) pair — this module builds that
+//! map and applies it. `python/compile/align.py` builds the identical map
+//! for training and in-model alignment; a pytest cross-checks the two.
+
+use crate::config::GridConfig;
+use crate::geom::Pose;
+use crate::voxel::FeatureMap;
+
+/// Precomputed gather map: for each output voxel (in the common grid),
+/// the flat index of the source voxel in the device's local grid, or -1
+/// when the source location falls outside the device grid.
+#[derive(Clone, Debug)]
+pub struct AlignMap {
+    /// One entry per output voxel, layout (D, H, W) flattened.
+    pub src_flat: Vec<i64>,
+    pub dims: [usize; 3], // W, H, D
+}
+
+impl AlignMap {
+    /// Build the map for a device whose local frame maps to the common
+    /// frame via `device_to_common`. Both grids share `grid`'s geometry
+    /// (paper's common-resolution/common-origin assumption). The
+    /// `stride` accounts for spatial downscaling between voxelization and
+    /// the split point (1 for SC-MII's split after the first s=1 conv).
+    pub fn build(grid: &GridConfig, device_to_common: &Pose, stride: usize) -> AlignMap {
+        let common_to_device = device_to_common.inverse();
+        let [w, h, d] = grid.dims;
+        let (w_s, h_s, d_s) = (w / stride, h / stride, d / stride);
+        let eff = [
+            grid.voxel[0] * stride as f64,
+            grid.voxel[1] * stride as f64,
+            grid.voxel[2] * stride as f64,
+        ];
+        let mut src_flat = Vec::with_capacity(d_s * h_s * w_s);
+        for iz in 0..d_s {
+            for iy in 0..h_s {
+                for ix in 0..w_s {
+                    // Voxel center in common-frame physical coordinates.
+                    let px = grid.range_min[0] + (ix as f64 + 0.5) * eff[0];
+                    let py = grid.range_min[1] + (iy as f64 + 0.5) * eff[1];
+                    let pz = grid.range_min[2] + (iz as f64 + 0.5) * eff[2];
+                    // Into the device's local frame.
+                    let local = common_to_device.apply(crate::geom::Vec3::new(px, py, pz));
+                    // Back to (rounded) voxel indices on the device grid.
+                    let fx = (local.x - grid.range_min[0]) / eff[0] - 0.5;
+                    let fy = (local.y - grid.range_min[1]) / eff[1] - 0.5;
+                    let fz = (local.z - grid.range_min[2]) / eff[2] - 0.5;
+                    let jx = fx.round() as i64;
+                    let jy = fy.round() as i64;
+                    let jz = fz.round() as i64;
+                    let flat = if jx >= 0
+                        && jx < w_s as i64
+                        && jy >= 0
+                        && jy < h_s as i64
+                        && jz >= 0
+                        && jz < d_s as i64
+                    {
+                        (jz * h_s as i64 + jy) * w_s as i64 + jx
+                    } else {
+                        -1
+                    };
+                    src_flat.push(flat);
+                }
+            }
+        }
+        AlignMap { src_flat, dims: [w_s, h_s, d_s] }
+    }
+
+    /// Identity map (device 0 — the reference sensor).
+    pub fn identity(grid: &GridConfig, stride: usize) -> AlignMap {
+        Self::build(grid, &Pose::IDENTITY, stride)
+    }
+
+    /// Fraction of output voxels with a valid source (coverage diagnostics).
+    pub fn coverage(&self) -> f64 {
+        let valid = self.src_flat.iter().filter(|&&v| v >= 0).count();
+        valid as f64 / self.src_flat.len().max(1) as f64
+    }
+
+    /// Apply the gather to a feature map: out[v] = src[map[v]] (zeros when
+    /// unmapped). This is the rust-native mirror of the in-HLO gather.
+    pub fn apply(&self, src: &FeatureMap) -> FeatureMap {
+        let [w, h, d] = self.dims;
+        assert_eq!([src.w, src.h, src.d], [w, h, d], "grid mismatch");
+        let c = src.c;
+        let mut out = FeatureMap::zeros(d, h, w, c);
+        for (vox, &s) in self.src_flat.iter().enumerate() {
+            if s >= 0 {
+                let src_base = s as usize * c;
+                let dst_base = vox * c;
+                out.data[dst_base..dst_base + c]
+                    .copy_from_slice(&src.data[src_base..src_base + c]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Vec3;
+
+    fn grid() -> GridConfig {
+        GridConfig::default()
+    }
+
+    #[test]
+    fn identity_map_is_identity() {
+        let g = grid();
+        let m = AlignMap::identity(&g, 1);
+        assert!((m.coverage() - 1.0).abs() < 1e-12);
+        for (i, &s) in m.src_flat.iter().enumerate() {
+            assert_eq!(s, i as i64);
+        }
+        // applying to a random map returns it unchanged
+        let mut src = FeatureMap::zeros(g.dims[2], g.dims[1], g.dims[0], 2);
+        for (i, v) in src.data.iter_mut().enumerate() {
+            *v = (i % 97) as f32 * 0.1;
+        }
+        let out = m.apply(&src);
+        assert_eq!(out.data, src.data);
+    }
+
+    #[test]
+    fn pure_translation_shifts_indices() {
+        let g = grid();
+        // device frame = common frame shifted +1 voxel in x (0.8 m):
+        // a feature at device voxel (ix) appears at common voxel (ix+1).
+        let t = Pose::from_xyz_rpy(0.8, 0.0, 0.0, 0.0, 0.0, 0.0);
+        let m = AlignMap::build(&g, &t, 1);
+        let [w, h, _] = m.dims;
+        // output voxel (1,0,0) should source device voxel (0,0,0)
+        let out_idx = 0 * h * w + 0 * w + 1;
+        assert_eq!(m.src_flat[out_idx], 0);
+        // leftmost column has no source
+        assert_eq!(m.src_flat[0], -1);
+        let _ = h;
+    }
+
+    #[test]
+    fn rotation_preserves_occupancy_roughly() {
+        let g = grid();
+        let t = Pose::from_xyz_rpy(3.0, -2.0, 0.0, 0.0, 0.0, 0.9);
+        let m = AlignMap::build(&g, &t, 1);
+        // coverage limited but substantial for an in-range transform
+        assert!(m.coverage() > 0.3, "coverage {}", m.coverage());
+        // all source indices in range
+        let n = (g.dims[0] * g.dims[1] * g.dims[2]) as i64;
+        for &s in &m.src_flat {
+            assert!(s >= -1 && s < n);
+        }
+    }
+
+    #[test]
+    fn feature_value_follows_transform() {
+        let g = grid();
+        let t = Pose::from_xyz_rpy(1.6, 0.8, 0.0, 0.0, 0.0, 0.0); // +2 x, +1 y voxels
+        let m = AlignMap::build(&g, &t, 1);
+        let [w, h, d] = m.dims;
+        let mut src = FeatureMap::zeros(d, h, w, 1);
+        src.set(3, 10, 10, 0, 5.0);
+        let out = m.apply(&src);
+        assert_eq!(out.get(3, 11, 12, 0), 5.0);
+        assert_eq!(out.get(3, 10, 10, 0), 0.0);
+    }
+
+    #[test]
+    fn physical_point_consistency() {
+        // A feature at the device voxel containing physical point P (in
+        // device frame) must land at the common voxel containing T(P).
+        let g = grid();
+        let t = Pose::from_xyz_rpy(4.3, -1.7, 0.4, 0.0, 0.0, 0.35);
+        let m = AlignMap::build(&g, &t, 1);
+        let p_dev = Vec3::new(10.0, 5.0, -3.0);
+        let [ix, iy, iz] = g.voxel_of(p_dev.x, p_dev.y, p_dev.z).unwrap();
+        let p_common = t.apply(p_dev);
+        if let Some([ox, oy, oz]) = g.voxel_of(p_common.x, p_common.y, p_common.z) {
+            let [w, h, _] = m.dims;
+            let out_flat = (oz * h + oy) * w + ox;
+            let src = m.src_flat[out_flat];
+            assert!(src >= 0);
+            let (sz, rem) = ((src as usize) / (h * w), (src as usize) % (h * w));
+            let (sy, sx) = (rem / w, rem % w);
+            // rounding can move one voxel; allow ±1 in each axis
+            assert!((sx as i64 - ix as i64).abs() <= 1, "x {sx} vs {ix}");
+            assert!((sy as i64 - iy as i64).abs() <= 1, "y {sy} vs {iy}");
+            assert!((sz as i64 - iz as i64).abs() <= 1, "z {sz} vs {iz}");
+        }
+    }
+
+    #[test]
+    fn stride_halves_dims() {
+        let g = grid();
+        let m = AlignMap::identity(&g, 2);
+        assert_eq!(m.dims, [32, 32, 4]);
+        assert_eq!(m.src_flat.len(), 32 * 32 * 4);
+    }
+}

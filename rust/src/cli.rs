@@ -1,0 +1,182 @@
+//! Hand-rolled command-line parsing (clap is not in the offline image).
+//!
+//! Supports `scmii <subcommand> --flag value --switch` style invocations
+//! with typed accessors, defaults and a generated usage string.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Declared option for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value` / `--key=value` / `--switch` / positionals.
+    pub fn parse<I: Iterator<Item = String>>(mut iter: I) -> Result<Args> {
+        let mut args = Args::default();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.values.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: a following token not starting with -- is the value.
+                    match iter.next() {
+                        Some(next) if !next.starts_with("--") => {
+                            args.values.insert(stripped.to_string(), next);
+                        }
+                        Some(next) => {
+                            args.switches.push(stripped.to_string());
+                            // `next` is another flag; recurse manually.
+                            if let Some(s2) = next.strip_prefix("--") {
+                                if let Some((k, v)) = s2.split_once('=') {
+                                    args.values.insert(k.to_string(), v.to_string());
+                                } else {
+                                    match iter.next() {
+                                        Some(v) if !v.starts_with("--") => {
+                                            args.values.insert(s2.to_string(), v);
+                                        }
+                                        Some(v) => {
+                                            args.switches.push(s2.to_string());
+                                            bail!(
+                                                "cannot parse flag sequence near --{s2} {v}; \
+                                                 use --key=value for flag-like values"
+                                            );
+                                        }
+                                        None => args.switches.push(s2.to_string()),
+                                    }
+                                }
+                            }
+                        }
+                        None => args.switches.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn str_req(&self, key: &str) -> Result<String> {
+        self.values.get(key).cloned().with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.values.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Unknown-flag guard: every provided key must appear in `known`.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.values.keys().chain(self.switches.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known flags: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Render usage text for a subcommand table.
+pub fn usage(prog: &str, subcommands: &[(&str, &str)]) -> String {
+    let mut s = format!("usage: {prog} <command> [--flags]\n\ncommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<16} {help}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--out", "data", "--seed=42", "--verbose"]);
+        assert_eq!(a.str_opt("out"), Some("data"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse(&["--x", "1"]);
+        assert_eq!(a.usize_or("x", 9).unwrap(), 1);
+        assert_eq!(a.usize_or("y", 9).unwrap(), 9);
+        assert!(a.str_req("missing").is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["infer", "--n", "5", "frame.npy"]);
+        assert_eq!(a.positional(), &["infer".to_string(), "frame.npy".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["--bogus", "1"]);
+        assert!(a.check_known(&["out", "seed"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["--fast"]);
+        assert!(a.switch("fast"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

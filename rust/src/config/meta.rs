@@ -1,0 +1,330 @@
+//! `artifacts/model_meta.json` — the contract between the python AOT
+//! path and the rust runtime. Describes the lowered artifacts (which HLO
+//! file implements which model part), the anchor layout the detection
+//! heads were trained with, and the grid geometry.
+
+use super::GridConfig;
+use crate::utils::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Integration method of a SC-MII variant (paper §III-A.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntegrationKind {
+    /// Element-wise max across device feature maps.
+    Max,
+    /// Concat along channels + conv3d with kernel size 1.
+    ConvK1,
+    /// Concat along channels + conv3d with kernel size 3.
+    ConvK3,
+}
+
+impl IntegrationKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "max" => Ok(IntegrationKind::Max),
+            "conv_k1" => Ok(IntegrationKind::ConvK1),
+            "conv_k3" => Ok(IntegrationKind::ConvK3),
+            other => bail!("unknown integration kind {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IntegrationKind::Max => "max",
+            IntegrationKind::ConvK1 => "conv_k1",
+            IntegrationKind::ConvK3 => "conv_k3",
+        }
+    }
+
+    pub fn all() -> [IntegrationKind; 3] {
+        [IntegrationKind::Max, IntegrationKind::ConvK1, IntegrationKind::ConvK3]
+    }
+}
+
+/// One trained SC-MII variant and its artifact names.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub integration: IntegrationKind,
+    /// Artifact name of the head model per device (index = device id).
+    pub heads: Vec<String>,
+    /// Artifact name of the tail model (takes all aligned head outputs).
+    pub tail: String,
+}
+
+/// An anchor template of the detection head.
+#[derive(Clone, Copy, Debug)]
+pub struct Anchor {
+    /// (length, width, height), metres.
+    pub size: [f64; 3],
+    /// z of the anchor box center in the common frame.
+    pub z_center: f64,
+    pub yaw: f64,
+    /// Index into `classes`.
+    pub class_id: usize,
+}
+
+/// Full metadata for a set of lowered artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub grid: GridConfig,
+    pub classes: Vec<String>,
+    pub anchors: Vec<Anchor>,
+    /// BEV head resolution (rows = y cells, cols = x cells).
+    pub bev_dims: [usize; 2],
+    pub variants: Vec<VariantMeta>,
+    /// Full single-LiDAR models (accuracy baseline), one per device.
+    pub single_full: Vec<String>,
+    /// Full model over merged raw point clouds (paper's accuracy
+    /// upper bound and the edge-only latency baseline).
+    pub input_integration_full: String,
+    pub num_devices: usize,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let j = json::read_file(path)?;
+        Self::from_json(&j).with_context(|| format!("parse {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelMeta> {
+        let grid = GridConfig::from_json(j.req("grid")?)?;
+        let classes = j
+            .req("classes")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let anchors = j
+            .req("anchors")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                let size = a.req("size")?.as_f64_vec()?;
+                anyhow::ensure!(size.len() == 3, "anchor size must have 3 entries");
+                Ok(Anchor {
+                    size: [size[0], size[1], size[2]],
+                    z_center: a.req("z_center")?.as_f64()?,
+                    yaw: a.req("yaw")?.as_f64()?,
+                    class_id: a.req("class_id")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let bev = j.req("bev_dims")?.as_usize_vec()?;
+        anyhow::ensure!(bev.len() == 2, "bev_dims must have 2 entries");
+        let variants = j
+            .req("variants")?
+            .as_arr()?
+            .iter()
+            .map(|v| {
+                Ok(VariantMeta {
+                    integration: IntegrationKind::parse(v.req("integration")?.as_str()?)?,
+                    heads: v
+                        .req("heads")?
+                        .as_arr()?
+                        .iter()
+                        .map(|h| Ok(h.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                    tail: v.req("tail")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let single_full = j
+            .req("single_full")?
+            .as_arr()?
+            .iter()
+            .map(|h| Ok(h.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let meta = ModelMeta {
+            grid,
+            classes,
+            anchors,
+            bev_dims: [bev[0], bev[1]],
+            variants,
+            single_full,
+            input_integration_full: j.req("input_integration_full")?.as_str()?.to_string(),
+            num_devices: j.req("num_devices")?.as_usize()?,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.num_devices >= 1, "need at least one device");
+        anyhow::ensure!(!self.anchors.is_empty(), "no anchors");
+        anyhow::ensure!(!self.classes.is_empty(), "no classes");
+        for a in &self.anchors {
+            anyhow::ensure!(a.class_id < self.classes.len(), "anchor class out of range");
+        }
+        for v in &self.variants {
+            anyhow::ensure!(
+                v.heads.len() == self.num_devices,
+                "variant {} has {} heads for {} devices",
+                v.tail,
+                v.heads.len(),
+                self.num_devices
+            );
+        }
+        anyhow::ensure!(
+            self.single_full.len() == self.num_devices,
+            "single_full count != num_devices"
+        );
+        Ok(())
+    }
+
+    pub fn variant(&self, kind: IntegrationKind) -> Result<&VariantMeta> {
+        self.variants
+            .iter()
+            .find(|v| v.integration == kind)
+            .with_context(|| format!("no variant {:?} in model_meta", kind))
+    }
+
+    /// BEV cell center (x, y) in metres for a head output cell.
+    /// Row index runs along y, column along x.
+    pub fn bev_cell_center(&self, row: usize, col: usize) -> (f64, f64) {
+        let g = &self.grid;
+        let cell_x = (g.range_max[0] - g.range_min[0]) / self.bev_dims[1] as f64;
+        let cell_y = (g.range_max[1] - g.range_min[1]) / self.bev_dims[0] as f64;
+        (
+            g.range_min[0] + (col as f64 + 0.5) * cell_x,
+            g.range_min[1] + (row as f64 + 0.5) * cell_y,
+        )
+    }
+
+    /// A default meta for unit tests that don't need real artifacts.
+    pub fn test_default() -> ModelMeta {
+        let grid = GridConfig::default();
+        ModelMeta {
+            grid,
+            classes: vec!["car".into(), "pedestrian".into()],
+            // z_center is in the common (sensor-1) frame: ground sits at
+            // z = -4.5, so a 1.6 m car is centered at -3.7.
+            anchors: vec![
+                Anchor { size: [4.5, 1.9, 1.6], z_center: -3.7, yaw: 0.0, class_id: 0 },
+                Anchor {
+                    size: [4.5, 1.9, 1.6],
+                    z_center: -3.7,
+                    yaw: std::f64::consts::FRAC_PI_2,
+                    class_id: 0,
+                },
+                Anchor { size: [0.8, 0.8, 1.7], z_center: -3.65, yaw: 0.0, class_id: 1 },
+            ],
+            bev_dims: [32, 32],
+            variants: IntegrationKind::all()
+                .iter()
+                .map(|&k| VariantMeta {
+                    integration: k,
+                    heads: vec![
+                        format!("head_{}_dev0", k.name()),
+                        format!("head_{}_dev1", k.name()),
+                    ],
+                    tail: format!("tail_{}", k.name()),
+                })
+                .collect(),
+            single_full: vec!["single_dev0".into(), "single_dev1".into()],
+            input_integration_full: "input_integration".into(),
+            num_devices: 2,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("grid", self.grid.to_json());
+        j.set("classes", Json::Arr(self.classes.iter().map(|c| Json::Str(c.clone())).collect()));
+        j.set(
+            "anchors",
+            Json::Arr(
+                self.anchors
+                    .iter()
+                    .map(|a| {
+                        let mut o = Json::obj();
+                        o.set("size", Json::from_f64_slice(&a.size))
+                            .set("z_center", Json::Num(a.z_center))
+                            .set("yaw", Json::Num(a.yaw))
+                            .set("class_id", Json::Num(a.class_id as f64));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("bev_dims", Json::from_usize_slice(&self.bev_dims));
+        j.set(
+            "variants",
+            Json::Arr(
+                self.variants
+                    .iter()
+                    .map(|v| {
+                        let mut o = Json::obj();
+                        o.set("integration", Json::Str(v.integration.name().into()))
+                            .set(
+                                "heads",
+                                Json::Arr(
+                                    v.heads.iter().map(|h| Json::Str(h.clone())).collect(),
+                                ),
+                            )
+                            .set("tail", Json::Str(v.tail.clone()));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "single_full",
+            Json::Arr(self.single_full.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        j.set("input_integration_full", Json::Str(self.input_integration_full.clone()));
+        j.set("num_devices", Json::Num(self.num_devices as f64));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_json_roundtrip() {
+        let meta = ModelMeta::test_default();
+        let j = meta.to_json();
+        let back = ModelMeta::from_json(&j).unwrap();
+        assert_eq!(back.classes, meta.classes);
+        assert_eq!(back.anchors.len(), meta.anchors.len());
+        assert_eq!(back.variants.len(), 3);
+        assert_eq!(back.num_devices, 2);
+    }
+
+    #[test]
+    fn variant_lookup() {
+        let meta = ModelMeta::test_default();
+        assert_eq!(meta.variant(IntegrationKind::ConvK3).unwrap().tail, "tail_conv_k3");
+        assert_eq!(meta.variant(IntegrationKind::Max).unwrap().heads.len(), 2);
+    }
+
+    #[test]
+    fn bev_cell_centers_cover_range() {
+        let meta = ModelMeta::test_default();
+        let (x0, y0) = meta.bev_cell_center(0, 0);
+        let (x1, y1) = meta.bev_cell_center(31, 31);
+        assert!((x0 - -17.3).abs() < 1e-9, "{x0}");
+        assert!((y0 - -17.3).abs() < 1e-9, "{y0}");
+        assert!((x1 - 32.3).abs() < 1e-9, "{x1}");
+        assert!((y1 - 32.3).abs() < 1e-9, "{y1}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_meta() {
+        let mut meta = ModelMeta::test_default();
+        meta.anchors[0].class_id = 99;
+        assert!(meta.validate().is_err());
+        let mut meta2 = ModelMeta::test_default();
+        meta2.variants[0].heads.pop();
+        assert!(meta2.validate().is_err());
+    }
+
+    #[test]
+    fn integration_kind_parse() {
+        assert_eq!(IntegrationKind::parse("max").unwrap(), IntegrationKind::Max);
+        assert_eq!(IntegrationKind::parse("conv_k3").unwrap(), IntegrationKind::ConvK3);
+        assert!(IntegrationKind::parse("bogus").is_err());
+    }
+}

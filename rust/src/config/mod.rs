@@ -1,0 +1,284 @@
+//! Run-time configuration: detection-grid geometry, testbed latency
+//! model, artifact metadata emitted by the python AOT path.
+//!
+//! The single source of truth for model geometry is
+//! `python/compile/configs.py`; `aot.py` serializes it into
+//! `artifacts/model_meta.json`, which [`ModelMeta::load`] parses. The
+//! rust defaults below mirror the same canonical profile so unit tests
+//! and the simulator run without artifacts present.
+
+pub mod meta;
+
+pub use meta::{IntegrationKind, ModelMeta, VariantMeta};
+
+use crate::utils::json::Json;
+use anyhow::Result;
+use std::path::Path;
+
+/// Voxel-grid geometry of the detector (matches python `configs.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridConfig {
+    /// Detection range minimum corner (x, y, z) in the common frame, metres.
+    pub range_min: [f64; 3],
+    /// Detection range maximum corner.
+    pub range_max: [f64; 3],
+    /// Voxel edge lengths (dx, dy, dz), metres.
+    pub voxel: [f64; 3],
+    /// Grid dimensions (W = x cells, H = y cells, D = z cells).
+    pub dims: [usize; 3],
+    /// Per-voxel input feature channels (voxelization statistics).
+    pub c_in: usize,
+    /// Head output channels (the intermediate output that crosses the wire).
+    pub c_head: usize,
+    /// Max points per LiDAR fed to the model (fixed-size padding).
+    pub max_points: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        // The common frame is LiDAR 1's local frame (paper: one sensor is
+        // the reference). The sensor sits ~4.5 m above ground, so the
+        // detection volume lies below the origin; x/y bounds are chosen so
+        // the grid covers the intersection the rig observes (sensor at
+        // world (-7.5, -7.5), intersection at world (0, 0), world extent
+        // ±25.6 m around it).
+        GridConfig {
+            range_min: [-18.1, -18.1, -6.0],
+            range_max: [33.1, 33.1, 0.0],
+            voxel: [0.8, 0.8, 0.75],
+            dims: [64, 64, 8],
+            c_in: 6,
+            c_head: 8,
+            max_points: 4096,
+        }
+    }
+}
+
+impl GridConfig {
+    /// Total voxel count (W·H·D).
+    pub fn n_voxels(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.dims[2]
+    }
+
+    /// Intermediate-output element count (W·H·D·c_head).
+    pub fn feature_len(&self) -> usize {
+        self.n_voxels() * self.c_head
+    }
+
+    /// Intermediate-output payload in bytes (f32).
+    pub fn feature_bytes(&self) -> usize {
+        self.feature_len() * 4
+    }
+
+    /// Voxel index (ix, iy, iz) of a point, if inside range.
+    pub fn voxel_of(&self, x: f64, y: f64, z: f64) -> Option<[usize; 3]> {
+        let fx = (x - self.range_min[0]) / self.voxel[0];
+        let fy = (y - self.range_min[1]) / self.voxel[1];
+        let fz = (z - self.range_min[2]) / self.voxel[2];
+        if fx < 0.0 || fy < 0.0 || fz < 0.0 {
+            return None;
+        }
+        let (ix, iy, iz) = (fx as usize, fy as usize, fz as usize);
+        if ix >= self.dims[0] || iy >= self.dims[1] || iz >= self.dims[2] {
+            return None;
+        }
+        Some([ix, iy, iz])
+    }
+
+    /// Center of a voxel in metres.
+    pub fn voxel_center(&self, ix: usize, iy: usize, iz: usize) -> [f64; 3] {
+        [
+            self.range_min[0] + (ix as f64 + 0.5) * self.voxel[0],
+            self.range_min[1] + (iy as f64 + 0.5) * self.voxel[1],
+            self.range_min[2] + (iz as f64 + 0.5) * self.voxel[2],
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("range_min", Json::from_f64_slice(&self.range_min))
+            .set("range_max", Json::from_f64_slice(&self.range_max))
+            .set("voxel", Json::from_f64_slice(&self.voxel))
+            .set("dims", Json::from_usize_slice(&self.dims))
+            .set("c_in", Json::Num(self.c_in as f64))
+            .set("c_head", Json::Num(self.c_head as f64))
+            .set("max_points", Json::Num(self.max_points as f64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<GridConfig> {
+        let vec3 = |key: &str| -> Result<[f64; 3]> {
+            let v = j.req(key)?.as_f64_vec()?;
+            anyhow::ensure!(v.len() == 3, "{key} must have 3 entries");
+            Ok([v[0], v[1], v[2]])
+        };
+        let dims = j.req("dims")?.as_usize_vec()?;
+        anyhow::ensure!(dims.len() == 3, "dims must have 3 entries");
+        Ok(GridConfig {
+            range_min: vec3("range_min")?,
+            range_max: vec3("range_max")?,
+            voxel: vec3("voxel")?,
+            dims: [dims[0], dims[1], dims[2]],
+            c_in: j.req("c_in")?.as_usize()?,
+            c_head: j.req("c_head")?.as_usize()?,
+            max_points: j.req("max_points")?.as_usize()?,
+        })
+    }
+}
+
+/// Testbed latency model standing in for the paper's hardware (Table I):
+/// Jetson Orin Nano edge devices, RTX-4090 server, 1 Gbps wired LAN.
+///
+/// We measure compute on this machine's CPU PJRT backend and scale by
+/// device factors. Fig 5 compares *arrangements* of the same compute, so
+/// ratios survive the substitution (see DESIGN.md §4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyConfig {
+    /// Edge-device slowdown vs the measurement machine (Jetson Orin Nano
+    /// running the 3D backbone vs our CPU baseline).
+    pub edge_factor: f64,
+    /// Server speedup/slowdown vs the measurement machine (RTX 4090).
+    pub server_factor: f64,
+    /// Link bandwidth, bits per second (paper: 1 Gbps wired LAN).
+    pub bandwidth_bps: f64,
+    /// Fixed per-message latency (framing + kernel + switch), seconds.
+    pub base_rtt: f64,
+}
+
+impl Default for LatencyConfig {
+    fn default() -> Self {
+        LatencyConfig {
+            edge_factor: 6.0,
+            server_factor: 0.25,
+            bandwidth_bps: 1e9,
+            base_rtt: 0.5e-3,
+        }
+    }
+}
+
+impl LatencyConfig {
+    /// Transmission time for a payload of `bytes`.
+    pub fn tx_time(&self, bytes: usize) -> f64 {
+        self.base_rtt + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Where artifacts/data live; every binary takes these as flags.
+#[derive(Clone, Debug)]
+pub struct Paths {
+    pub artifacts: std::path::PathBuf,
+    pub data: std::path::PathBuf,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        Paths { artifacts: "artifacts".into(), data: "data".into() }
+    }
+}
+
+impl Paths {
+    pub fn new(artifacts: &str, data: &str) -> Paths {
+        Paths { artifacts: artifacts.into(), data: data.into() }
+    }
+
+    pub fn model_meta(&self) -> std::path::PathBuf {
+        self.artifacts.join("model_meta.json")
+    }
+
+    pub fn calib(&self) -> std::path::PathBuf {
+        self.artifacts.join("calib.json")
+    }
+
+    pub fn hlo(&self, name: &str) -> std::path::PathBuf {
+        self.artifacts.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// Find the repository root (directory containing Cargo.toml) so tests and
+/// examples work from any cwd.
+pub fn repo_root() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return ".".into();
+        }
+    }
+}
+
+/// Paths anchored at the repo root (used by tests/examples).
+pub fn default_paths() -> Paths {
+    let root = repo_root();
+    Paths { artifacts: root.join("artifacts"), data: root.join("data") }
+}
+
+/// True when the AOT artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_present(paths: &Paths) -> bool {
+    paths.model_meta().exists()
+}
+
+/// Convenience: load grid config from model_meta.json if present, else default.
+pub fn grid_or_default(paths: &Paths) -> GridConfig {
+    fn load(p: &Path) -> Result<GridConfig> {
+        let j = crate::utils::json::read_file(p)?;
+        GridConfig::from_json(j.req("grid")?)
+    }
+    load(&paths.model_meta()).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_dims_consistent_with_range() {
+        let g = GridConfig::default();
+        for a in 0..3 {
+            let extent = g.range_max[a] - g.range_min[a];
+            let cells = (extent / g.voxel[a]).round() as usize;
+            assert_eq!(cells, g.dims[a], "axis {a}");
+        }
+    }
+
+    #[test]
+    fn voxel_of_bounds() {
+        let g = GridConfig::default();
+        assert_eq!(g.voxel_of(-18.1, -18.1, -6.0), Some([0, 0, 0]));
+        assert_eq!(g.voxel_of(33.09, 33.09, -0.01), Some([63, 63, 7]));
+        assert_eq!(g.voxel_of(33.2, 0.0, -1.0), None);
+        assert_eq!(g.voxel_of(0.0, 0.0, 0.5), None);
+    }
+
+    #[test]
+    fn voxel_center_inverts_voxel_of() {
+        let g = GridConfig::default();
+        let c = g.voxel_center(10, 20, 3);
+        assert_eq!(g.voxel_of(c[0], c[1], c[2]), Some([10, 20, 3]));
+    }
+
+    #[test]
+    fn grid_json_roundtrip() {
+        let g = GridConfig::default();
+        let j = g.to_json();
+        let g2 = GridConfig::from_json(&j).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn feature_payload_is_1mib() {
+        let g = GridConfig::default();
+        assert_eq!(g.feature_bytes(), 64 * 64 * 8 * 8 * 4);
+    }
+
+    #[test]
+    fn tx_time_scales_with_bytes() {
+        let l = LatencyConfig::default();
+        let t1 = l.tx_time(1_000_000);
+        let t2 = l.tx_time(2_000_000);
+        assert!(t2 > t1);
+        // 1 MB over 1 Gbps = 8 ms plus base
+        assert!((t1 - (0.5e-3 + 8e-3)).abs() < 1e-9);
+    }
+}

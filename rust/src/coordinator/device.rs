@@ -1,0 +1,153 @@
+//! Edge-device worker: runs the head model on local point clouds and
+//! streams intermediate outputs to the edge server (Fig 2, left half).
+
+use crate::cli::Args;
+use crate::config::{IntegrationKind, LatencyConfig, ModelMeta, Paths};
+use crate::metrics::Metrics;
+use crate::net::{write_msg, Msg, ShapedWriter};
+use crate::runtime::{Engine, HostTensor};
+use crate::voxel::{points_to_tensor, Point};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Device worker configuration.
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    pub device_id: usize,
+    pub server: String,
+    pub variant: IntegrationKind,
+    /// Inter-frame period (paper: 10 Hz sensors). `None` = as fast as
+    /// possible (throughput mode).
+    pub period: Option<Duration>,
+    /// Shape outgoing bytes to this line rate (paper: 1 Gbps LAN).
+    pub bandwidth_bps: Option<f64>,
+    pub max_frames: usize,
+    /// u8-quantize intermediate outputs before transmission (paper §IV-E
+    /// compressed intermediate outputs: 4× smaller payload).
+    pub quantize: bool,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            device_id: 0,
+            server: "127.0.0.1:7321".into(),
+            variant: IntegrationKind::ConvK3,
+            period: Some(Duration::from_millis(100)),
+            bandwidth_bps: Some(1e9),
+            max_frames: 32,
+            quantize: false,
+        }
+    }
+}
+
+/// Run the worker over pre-loaded frames (each entry = this device's local
+/// cloud for one frame). Returns per-frame (head_secs, tx_secs).
+pub fn run_device(
+    paths: &Paths,
+    cfg: &DeviceConfig,
+    frames: &[Vec<Point>],
+) -> Result<Vec<(f64, f64)>> {
+    let meta = ModelMeta::load(&paths.model_meta())?;
+    let vm = meta.variant(cfg.variant)?;
+    let head_name = vm.heads[cfg.device_id].clone();
+    let mut engine = Engine::cpu()?;
+    engine.load(paths, &head_name)?;
+
+    let stream = TcpStream::connect(&cfg.server)
+        .with_context(|| format!("connect to {}", cfg.server))?;
+    stream.set_nodelay(true)?;
+    let mut writer = match cfg.bandwidth_bps {
+        Some(bw) => ShapedWriter::new(stream, bw),
+        None => ShapedWriter::unshaped(stream),
+    };
+    write_msg(&mut writer, &Msg::Hello { device_id: cfg.device_id as u32 })?;
+
+    let metrics = Metrics::new();
+    let mut out = Vec::new();
+    let n = frames.len().min(cfg.max_frames.max(1));
+    for (frame_id, cloud) in frames.iter().take(n).enumerate() {
+        let cycle_start = Instant::now();
+        let input = HostTensor::new(
+            vec![meta.grid.max_points, 4],
+            points_to_tensor(cloud, meta.grid.max_points),
+        )?;
+        let t0 = Instant::now();
+        let mut feat = engine.exec(&head_name, &[input])?;
+        let head_secs = t0.elapsed().as_secs_f64();
+        metrics.record("head_exec", head_secs);
+
+        let t0 = Instant::now();
+        let msg = if cfg.quantize {
+            Msg::FeaturesQ {
+                frame_id: frame_id as u64,
+                device_id: cfg.device_id as u32,
+                tensor: crate::net::quantize(&feat.remove(0)),
+            }
+        } else {
+            Msg::Features {
+                frame_id: frame_id as u64,
+                device_id: cfg.device_id as u32,
+                tensor: feat.remove(0),
+            }
+        };
+        write_msg(&mut writer, &msg)?;
+        writer.flush()?;
+        let tx_secs = t0.elapsed().as_secs_f64();
+        metrics.record("tx", tx_secs);
+        out.push((head_secs, tx_secs));
+
+        if let Some(period) = cfg.period {
+            let elapsed = cycle_start.elapsed();
+            if elapsed < period {
+                std::thread::sleep(period - elapsed);
+            }
+        }
+    }
+    write_msg(&mut writer, &Msg::Bye)?;
+    log::info!("device {} done:\n{}", cfg.device_id, metrics.report());
+    Ok(out)
+}
+
+/// `scmii device` CLI entry: stream frames from the dataset.
+pub fn cmd_device(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts",
+        "data",
+        "device",
+        "server",
+        "variant",
+        "hz",
+        "bandwidth-gbps",
+        "max-frames",
+        "split",
+        "unshaped",
+        "quantize",
+    ])?;
+    let paths = Paths::new(
+        &args.str_or("artifacts", "artifacts"),
+        &args.str_or("data", "data"),
+    );
+    let mut cfg = DeviceConfig::default();
+    cfg.device_id = args.usize_or("device", 0)?;
+    cfg.server = args.str_or("server", &cfg.server);
+    cfg.variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
+    let hz = args.f64_or("hz", 10.0)?;
+    cfg.period = if hz > 0.0 { Some(Duration::from_secs_f64(1.0 / hz)) } else { None };
+    cfg.bandwidth_bps = if args.switch("unshaped") {
+        None
+    } else {
+        Some(args.f64_or("bandwidth-gbps", LatencyConfig::default().bandwidth_bps / 1e9)? * 1e9)
+    };
+    cfg.max_frames = args.usize_or("max-frames", 32)?;
+    cfg.quantize = args.switch("quantize");
+
+    let split = args.str_or("split", "val");
+    let frames = crate::sim::dataset::load_split(&paths.data.join(&split))?;
+    let clouds: Vec<Vec<Point>> =
+        frames.into_iter().map(|mut f| f.clouds.swap_remove(cfg.device_id)).collect();
+    run_device(&paths, &cfg, &clouds)?;
+    Ok(())
+}

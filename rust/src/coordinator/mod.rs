@@ -1,0 +1,15 @@
+//! The SC-MII coordinator — the paper's system contribution at layer 3.
+//!
+//! Three deployment shapes share the same compute:
+//! - [`pipeline`] — in-process split pipeline (deterministic; eval/bench).
+//! - [`server`] + [`device`] — the distributed deployment: one edge
+//!   server (tail model) and one worker per LiDAR (head model), talking
+//!   the `net` protocol over TCP with bandwidth shaping.
+//! - [`scheduler`] — the server-side frame synchronizer pairing
+//!   intermediate outputs by frame id, with timeout and partial-loss
+//!   policies (paper §IV-E future work, implemented here).
+
+pub mod device;
+pub mod pipeline;
+pub mod scheduler;
+pub mod server;

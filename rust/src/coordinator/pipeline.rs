@@ -1,0 +1,266 @@
+//! In-process SC-MII pipeline: the full inference flow of Fig 2 on one
+//! machine, deterministic and instrumented. The accuracy evaluation
+//! (Table III) and the execution-time model (Fig 5) both drive this.
+//!
+//! Spatial alignment executes *inside the tail HLO* as a static gather
+//! whose index map `python/compile/aot.py` baked from `calib.json` —
+//! i.e. the edge server performs the coordinate transformation, as in
+//! the paper; it just does so within the compiled tail graph.
+
+use crate::cli::Args;
+use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
+use crate::geom::Pose;
+use crate::model::{postprocess, DecodeParams, Detection};
+use crate::runtime::{Engine, HostTensor};
+use crate::voxel::{merge_clouds, points_to_tensor, Point};
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Per-frame timing breakdown (seconds measured on this machine; the
+/// latency model scales them to the paper's testbed).
+#[derive(Clone, Debug, Default)]
+pub struct FrameTiming {
+    /// Head execution per device.
+    pub head_secs: Vec<f64>,
+    /// Intermediate-output payload per device, bytes.
+    pub payload_bytes: Vec<usize>,
+    /// Tail execution (alignment + integration + backbone + heads).
+    pub tail_secs: f64,
+    /// Post-processing (decode + NMS).
+    pub post_secs: f64,
+}
+
+/// Load the calibration transforms written by `scmii setup`.
+pub fn load_calib(paths: &Paths) -> Result<Vec<Pose>> {
+    let j = crate::utils::json::read_file(&paths.calib())?;
+    let arr = j.req("transforms")?.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for t in arr {
+        let v = t.as_f64_vec()?;
+        anyhow::ensure!(v.len() == 16, "transform must be 4x4");
+        let mut m = [0.0; 16];
+        m.copy_from_slice(&v);
+        out.push(Pose::from_mat4(&m));
+    }
+    Ok(out)
+}
+
+/// The in-process pipeline for one integration variant.
+pub struct ScMiiPipeline {
+    pub meta: ModelMeta,
+    pub variant: IntegrationKind,
+    engine: Engine,
+    decode: DecodeParams,
+    head_names: Vec<String>,
+    tail_name: String,
+    calib: Vec<Pose>,
+}
+
+impl ScMiiPipeline {
+    /// Load artifacts for `variant` (heads + tail) plus calibration.
+    pub fn load(paths: &Paths, variant: IntegrationKind) -> Result<ScMiiPipeline> {
+        anyhow::ensure!(
+            artifacts_present(paths),
+            "artifacts missing under {} — run `make artifacts`",
+            paths.artifacts.display()
+        );
+        let meta = ModelMeta::load(&paths.model_meta())?;
+        let vm = meta.variant(variant)?.clone();
+        let mut engine = Engine::cpu()?;
+        for h in &vm.heads {
+            engine.load(paths, h)?;
+        }
+        engine.load(paths, &vm.tail)?;
+        let calib = load_calib(paths).context("load calib.json (run `scmii setup`)")?;
+        Ok(ScMiiPipeline {
+            meta,
+            variant,
+            engine,
+            decode: DecodeParams::default(),
+            head_names: vm.heads,
+            tail_name: vm.tail,
+            calib,
+        })
+    }
+
+    /// Also load baseline artifacts (single-LiDAR fulls + input
+    /// integration) into the same engine for the eval harness.
+    pub fn load_baselines(&mut self, paths: &Paths) -> Result<()> {
+        let singles = self.meta.single_full.clone();
+        for name in &singles {
+            self.engine.load(paths, name)?;
+        }
+        let full = self.meta.input_integration_full.clone();
+        self.engine.load(paths, &full)?;
+        Ok(())
+    }
+
+    pub fn decode_params(&mut self) -> &mut DecodeParams {
+        &mut self.decode
+    }
+
+    /// Run one device's head model on its local point cloud.
+    pub fn run_head(&self, device: usize, points: &[Point]) -> Result<HostTensor> {
+        let input = HostTensor::new(
+            vec![self.meta.grid.max_points, 4],
+            points_to_tensor(points, self.meta.grid.max_points),
+        )?;
+        let mut out = self.engine.exec(&self.head_names[device], &[input])?;
+        anyhow::ensure!(out.len() == 1, "head returns one tensor");
+        Ok(out.remove(0))
+    }
+
+    /// Run the tail on per-device features (alignment happens inside).
+    pub fn run_tail(&self, features: &[HostTensor]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.engine.exec(&self.tail_name, features)?;
+        anyhow::ensure!(out.len() == 2, "tail returns (cls, boxes)");
+        Ok((out[0].data.clone(), out[1].data.clone()))
+    }
+
+    /// Full SC-MII inference over one frame (all devices' local clouds).
+    pub fn infer(&self, clouds: &[Vec<Point>]) -> Result<(Vec<Detection>, FrameTiming)> {
+        anyhow::ensure!(clouds.len() == self.meta.num_devices, "cloud count mismatch");
+        let mut timing = FrameTiming::default();
+        let mut features = Vec::with_capacity(clouds.len());
+        for (dev, cloud) in clouds.iter().enumerate() {
+            let t0 = Instant::now();
+            let feat = self.run_head(dev, cloud)?;
+            timing.head_secs.push(t0.elapsed().as_secs_f64());
+            timing.payload_bytes.push(feat.data.len() * 4);
+            features.push(feat);
+        }
+        let t0 = Instant::now();
+        let (cls, boxes) = self.run_tail(&features)?;
+        timing.tail_secs = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let dets = postprocess(&cls, &boxes, &self.meta, &self.decode);
+        timing.post_secs = t0.elapsed().as_secs_f64();
+        Ok((dets, timing))
+    }
+
+    /// Baseline: single-LiDAR full model on one device's cloud.
+    pub fn infer_single(&self, device: usize, cloud: &[Point]) -> Result<(Vec<Detection>, f64)> {
+        let name = &self.meta.single_full[device];
+        let input = HostTensor::new(
+            vec![self.meta.grid.max_points, 4],
+            points_to_tensor(cloud, self.meta.grid.max_points),
+        )?;
+        let t0 = Instant::now();
+        let out = self.engine.exec(name, &[input])?;
+        let secs = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(out.len() == 2, "full model returns (cls, boxes)");
+        Ok((postprocess(&out[0].data, &out[1].data, &self.meta, &self.decode), secs))
+    }
+
+    /// Baseline: input point-cloud integration — transform device clouds
+    /// into the common frame with the calibration transforms, merge, run
+    /// the full model (paper Table III row "Input point clouds"; also the
+    /// compute graph of the edge-only Fig-5 baseline).
+    pub fn infer_input_integration(
+        &self,
+        clouds: &[Vec<Point>],
+    ) -> Result<(Vec<Detection>, f64)> {
+        let merged = self.merge_to_common(clouds);
+        let input = HostTensor::new(
+            vec![self.meta.grid.max_points, 4],
+            points_to_tensor(&merged, self.meta.grid.max_points),
+        )?;
+        let t0 = Instant::now();
+        let out = self.engine.exec(&self.meta.input_integration_full, &[input])?;
+        let secs = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(out.len() == 2, "full model returns (cls, boxes)");
+        Ok((postprocess(&out[0].data, &out[1].data, &self.meta, &self.decode), secs))
+    }
+
+    /// Transform per-device clouds into the common frame and interleave.
+    pub fn merge_to_common(&self, clouds: &[Vec<Point>]) -> Vec<Point> {
+        let transformed: Vec<Vec<Point>> = clouds
+            .iter()
+            .enumerate()
+            .map(|(dev, cloud)| {
+                let t = self.calib.get(dev).copied().unwrap_or(Pose::IDENTITY);
+                cloud
+                    .iter()
+                    .filter(|p| !p.is_pad())
+                    .map(|p| {
+                        let v = t.apply(crate::geom::Vec3::new(
+                            p.x as f64, p.y as f64, p.z as f64,
+                        ));
+                        Point::new(v.x as f32, v.y as f32, v.z as f32, p.intensity)
+                    })
+                    .collect()
+            })
+            .collect();
+        merge_clouds(&transformed, self.meta.grid.max_points)
+    }
+
+    pub fn calib(&self) -> &[Pose] {
+        &self.calib
+    }
+
+    /// Post-process raw tail outputs (used by the TCP server path).
+    pub fn postprocess_raw(&self, cls: &[f32], boxes: &[f32]) -> Vec<Detection> {
+        postprocess(cls, boxes, &self.meta, &self.decode)
+    }
+}
+
+/// `scmii infer` — run the pipeline over validation frames and report.
+pub fn cmd_infer(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "data", "variant", "frames", "split", "dump"])?;
+    let paths = Paths::new(
+        &args.str_or("artifacts", "artifacts"),
+        &args.str_or("data", "data"),
+    );
+    let variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
+    let split = args.str_or("split", "val");
+    let n = args.usize_or("frames", 8)?;
+
+    let pipeline = ScMiiPipeline::load(&paths, variant)?;
+    let frames = crate::sim::dataset::load_split(&paths.data.join(&split))?;
+
+    // Debug hook: dump the raw tail outputs of frame 0 for cross-checking
+    // against the python reference path.
+    if let Some(dir) = args.str_opt("dump") {
+        let f = &frames[0];
+        let feats: Vec<_> = (0..pipeline.meta.num_devices)
+            .map(|d| pipeline.run_head(d, &f.clouds[d]).unwrap())
+            .collect();
+        let (cls, boxes) = pipeline.run_tail(&feats)?;
+        let dir = std::path::Path::new(dir);
+        crate::utils::npy::write(
+            &dir.join("rust_cls.npy"),
+            &crate::utils::npy::NpyArray::from_f32(&[cls.len()], &cls),
+        )?;
+        crate::utils::npy::write(
+            &dir.join("rust_box.npy"),
+            &crate::utils::npy::NpyArray::from_f32(&[boxes.len()], &boxes),
+        )?;
+        for (d, feat) in feats.iter().enumerate() {
+            crate::utils::npy::write(
+                &dir.join(format!("rust_feat{d}.npy")),
+                &crate::utils::npy::NpyArray::from_f32(&feat.shape, &feat.data),
+            )?;
+        }
+        log::info!("dumped rust tail outputs to {}", dir.display());
+    }
+
+    let metrics = crate::metrics::Metrics::new();
+    for (i, frame) in frames.iter().take(n).enumerate() {
+        let t0 = Instant::now();
+        let (dets, timing) = pipeline.infer(&frame.clouds)?;
+        metrics.record("e2e", t0.elapsed().as_secs_f64());
+        metrics.record("tail", timing.tail_secs);
+        for (d, &h) in timing.head_secs.iter().enumerate() {
+            metrics.record(&format!("head_dev{d}"), h);
+        }
+        println!(
+            "frame {i}: {} detections ({} gt), heads {:?} ms, tail {:.1} ms",
+            dets.len(),
+            frame.labels.len(),
+            timing.head_secs.iter().map(|s| (s * 1e3 * 10.0).round() / 10.0).collect::<Vec<_>>(),
+            timing.tail_secs * 1e3
+        );
+    }
+    print!("{}", metrics.report());
+    Ok(())
+}

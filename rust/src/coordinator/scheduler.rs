@@ -1,0 +1,240 @@
+//! Frame synchronizer: pairs per-device intermediate outputs by frame id
+//! before integration.
+//!
+//! The paper's inference flow assumes both devices' features arrive for a
+//! frame; real links lose or delay messages, so the synchronizer adds a
+//! deadline and a configurable policy for incomplete frames — the
+//! robustness direction §IV-E calls out ("systems designed to tolerate
+//! partial data loss without retransmission").
+
+use crate::runtime::HostTensor;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// What to do when the deadline fires with devices missing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossPolicy {
+    /// Drop the frame entirely.
+    Drop,
+    /// Run the tail with zero-filled features for missing devices
+    /// (integration methods degrade gracefully: max treats zeros as
+    /// "no evidence"; conv was trained with both inputs but remains
+    /// usable — the Table-III-style ablation quantifies the hit).
+    ZeroFill,
+}
+
+/// A completed (or force-completed) frame ready for the tail model.
+#[derive(Debug)]
+pub struct ReadyFrame {
+    pub frame_id: u64,
+    /// Per-device features; `None` only under `ZeroFill` accounting
+    /// (already replaced by zeros in `tensors`).
+    pub tensors: Vec<HostTensor>,
+    /// Devices that actually contributed.
+    pub present: Vec<bool>,
+    /// Arrival of the first device's features (latency accounting).
+    pub first_arrival: Instant,
+}
+
+struct Pending {
+    slots: Vec<Option<HostTensor>>,
+    first_arrival: Instant,
+}
+
+/// The synchronizer. Not thread-safe by itself — wrap in a `Mutex`.
+pub struct FrameSync {
+    n_devices: usize,
+    deadline: Duration,
+    policy: LossPolicy,
+    /// Shape used for zero-fill when a device never reported.
+    feature_shape: Vec<usize>,
+    pending: HashMap<u64, Pending>,
+    /// Frames already emitted (late arrivals for these are dropped).
+    emitted: HashMap<u64, Instant>,
+    pub stats: SyncStats,
+}
+
+/// Counters for observability / tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncStats {
+    pub complete: u64,
+    pub timed_out: u64,
+    pub dropped_frames: u64,
+    pub late_arrivals: u64,
+    pub duplicates: u64,
+}
+
+impl FrameSync {
+    pub fn new(
+        n_devices: usize,
+        deadline: Duration,
+        policy: LossPolicy,
+        feature_shape: Vec<usize>,
+    ) -> FrameSync {
+        FrameSync {
+            n_devices,
+            deadline,
+            policy,
+            feature_shape,
+            pending: HashMap::new(),
+            emitted: HashMap::new(),
+            stats: SyncStats::default(),
+        }
+    }
+
+    /// Register features from a device. Returns the frame when complete.
+    pub fn add(&mut self, frame_id: u64, device_id: usize, tensor: HostTensor) -> Option<ReadyFrame> {
+        assert!(device_id < self.n_devices, "device {device_id} out of range");
+        if self.emitted.contains_key(&frame_id) {
+            self.stats.late_arrivals += 1;
+            return None;
+        }
+        let pending = self.pending.entry(frame_id).or_insert_with(|| Pending {
+            slots: vec![None; self.n_devices],
+            first_arrival: Instant::now(),
+        });
+        if pending.slots[device_id].is_some() {
+            self.stats.duplicates += 1;
+            return None;
+        }
+        pending.slots[device_id] = Some(tensor);
+        if pending.slots.iter().all(|s| s.is_some()) {
+            let pending = self.pending.remove(&frame_id).unwrap();
+            self.emitted.insert(frame_id, Instant::now());
+            self.gc_emitted();
+            self.stats.complete += 1;
+            return Some(ReadyFrame {
+                frame_id,
+                present: vec![true; self.n_devices],
+                tensors: pending.slots.into_iter().map(|s| s.unwrap()).collect(),
+                first_arrival: pending.first_arrival,
+            });
+        }
+        None
+    }
+
+    /// Collect frames whose deadline has expired, resolving them per the
+    /// loss policy. Call periodically (the server does so between reads).
+    pub fn poll_expired(&mut self) -> Vec<ReadyFrame> {
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| now.duration_since(p.first_arrival) >= self.deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut out = Vec::new();
+        for id in expired {
+            let pending = self.pending.remove(&id).unwrap();
+            self.emitted.insert(id, now);
+            match self.policy {
+                LossPolicy::Drop => {
+                    self.stats.timed_out += 1;
+                    self.stats.dropped_frames += 1;
+                }
+                LossPolicy::ZeroFill => {
+                    self.stats.timed_out += 1;
+                    let present: Vec<bool> =
+                        pending.slots.iter().map(|s| s.is_some()).collect();
+                    let tensors: Vec<HostTensor> = pending
+                        .slots
+                        .into_iter()
+                        .map(|s| s.unwrap_or_else(|| HostTensor::zeros(&self.feature_shape)))
+                        .collect();
+                    out.push(ReadyFrame {
+                        frame_id: id,
+                        tensors,
+                        present,
+                        first_arrival: pending.first_arrival,
+                    });
+                }
+            }
+        }
+        self.gc_emitted();
+        out
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn gc_emitted(&mut self) {
+        // Bound memory: forget emission records after 30 s.
+        if self.emitted.len() > 4096 {
+            let cutoff = Instant::now() - Duration::from_secs(30);
+            self.emitted.retain(|_, t| *t > cutoff);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> HostTensor {
+        HostTensor::zeros(&[2, 2])
+    }
+
+    #[test]
+    fn completes_when_all_devices_report() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        assert!(s.add(1, 0, t()).is_none());
+        let ready = s.add(1, 1, t()).unwrap();
+        assert_eq!(ready.frame_id, 1);
+        assert_eq!(ready.tensors.len(), 2);
+        assert_eq!(ready.present, vec![true, true]);
+        assert_eq!(s.stats.complete, 1);
+        assert_eq!(s.pending_len(), 0);
+    }
+
+    #[test]
+    fn interleaved_frames() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        assert!(s.add(1, 0, t()).is_none());
+        assert!(s.add(2, 0, t()).is_none());
+        assert!(s.add(2, 1, t()).is_some());
+        assert!(s.add(1, 1, t()).is_some());
+    }
+
+    #[test]
+    fn duplicate_device_report_counted() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        assert!(s.add(1, 0, t()).is_none());
+        assert!(s.add(1, 0, t()).is_none());
+        assert_eq!(s.stats.duplicates, 1);
+    }
+
+    #[test]
+    fn timeout_drop_policy() {
+        let mut s = FrameSync::new(2, Duration::from_millis(10), LossPolicy::Drop, vec![2, 2]);
+        s.add(5, 0, t());
+        std::thread::sleep(Duration::from_millis(20));
+        let ready = s.poll_expired();
+        assert!(ready.is_empty());
+        assert_eq!(s.stats.dropped_frames, 1);
+        // late arrival after emission is ignored
+        assert!(s.add(5, 1, t()).is_none());
+        assert_eq!(s.stats.late_arrivals, 1);
+    }
+
+    #[test]
+    fn timeout_zero_fill_policy() {
+        let mut s =
+            FrameSync::new(2, Duration::from_millis(10), LossPolicy::ZeroFill, vec![2, 2]);
+        s.add(5, 1, t());
+        std::thread::sleep(Duration::from_millis(20));
+        let ready = s.poll_expired();
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].present, vec![false, true]);
+        assert_eq!(ready[0].tensors.len(), 2);
+        assert!(ready[0].tensors[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn no_expiry_before_deadline() {
+        let mut s = FrameSync::new(2, Duration::from_secs(5), LossPolicy::ZeroFill, vec![2, 2]);
+        s.add(1, 0, t());
+        assert!(s.poll_expired().is_empty());
+        assert_eq!(s.pending_len(), 1);
+    }
+}

@@ -1,0 +1,280 @@
+//! The edge server: receives intermediate outputs from device workers
+//! over TCP, synchronizes them per frame, runs the tail model
+//! (alignment + integration + detection heads) and publishes results.
+
+use super::scheduler::{FrameSync, LossPolicy};
+use crate::cli::Args;
+use crate::config::{IntegrationKind, ModelMeta, Paths};
+use crate::metrics::Metrics;
+use crate::model::{postprocess, DecodeParams};
+use crate::net::{read_msg, write_msg, Msg, WireDetection};
+use crate::runtime::{EngineActor, EngineHandle};
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub port: u16,
+    pub variant: IntegrationKind,
+    pub deadline: Duration,
+    pub policy: LossPolicy,
+    /// Stop after this many frames (None = run until Ctrl-C).
+    pub max_frames: Option<u64>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            port: 7321,
+            variant: IntegrationKind::ConvK3,
+            deadline: Duration::from_millis(200),
+            policy: LossPolicy::ZeroFill,
+            max_frames: None,
+        }
+    }
+}
+
+struct Shared {
+    sync: Mutex<FrameSync>,
+    subscribers: Mutex<Vec<TcpStream>>,
+    metrics: Metrics,
+    done: std::sync::atomic::AtomicBool,
+    frames_out: std::sync::atomic::AtomicU64,
+}
+
+/// Run the edge server until `max_frames` results have been produced.
+/// Returns the metrics collected.
+pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<Metrics>> {
+    let meta = ModelMeta::load(&paths.model_meta())?;
+    let vm = meta.variant(cfg.variant)?.clone();
+    let actor = EngineActor::spawn(paths.clone(), &[vm.tail.clone()])?;
+    let engine = actor.handle();
+
+    let grid = &meta.grid;
+    let feat_shape = vec![grid.dims[2], grid.dims[1], grid.dims[0], grid.c_head];
+    let shared = Arc::new(Shared {
+        sync: Mutex::new(FrameSync::new(meta.num_devices, cfg.deadline, cfg.policy, feat_shape)),
+        subscribers: Mutex::new(Vec::new()),
+        metrics: Metrics::new(),
+        done: std::sync::atomic::AtomicBool::new(false),
+        frames_out: std::sync::atomic::AtomicU64::new(0),
+    });
+
+    let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+        .with_context(|| format!("bind port {}", cfg.port))?;
+    listener.set_nonblocking(true)?;
+    log::info!(
+        "edge server on 127.0.0.1:{} variant={} devices={}",
+        cfg.port,
+        cfg.variant.name(),
+        meta.num_devices
+    );
+
+    let mut conn_threads = Vec::new();
+    let deadline_poll = Duration::from_millis(20);
+    loop {
+        if shared.done.load(std::sync::atomic::Ordering::SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                log::debug!("connection from {addr}");
+                let shared = Arc::clone(&shared);
+                let engine = engine.clone();
+                let meta = meta.clone();
+                let tail = vm.tail.clone();
+                let cfg = cfg.clone();
+                conn_threads.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, shared, engine, meta, tail, cfg) {
+                        log::debug!("connection ended: {e:#}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Poll expired frames while idle.
+                let expired = shared.sync.lock().unwrap().poll_expired();
+                for ready in expired {
+                    process_ready(&shared, &engine, &meta, &vm.tail, cfg, ready);
+                }
+                std::thread::sleep(deadline_poll);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for t in conn_threads {
+        let _ = t.join();
+    }
+    // Metrics live in Shared; clone the report out via Arc.
+    let shared2 = Arc::clone(&shared);
+    drop(shared);
+    // Safe: all threads joined; extract metrics by Arc::try_unwrap fallback.
+    Ok(Arc::new(match Arc::try_unwrap(shared2) {
+        Ok(s) => s.metrics,
+        Err(arc) => {
+            // Still referenced (should not happen); clone the report only.
+            let m = Metrics::new();
+            m.incr("metrics_clone_fallback", 1);
+            log::warn!("metrics still shared; report:\n{}", arc.metrics.report());
+            m
+        }
+    }))
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    shared: Arc<Shared>,
+    engine: EngineHandle,
+    meta: ModelMeta,
+    tail: String,
+    cfg: ServerConfig,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    // Read timeout so the thread re-checks `done` even on idle
+    // connections (e.g. a subscriber that only listens).
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    loop {
+        if shared.done.load(std::sync::atomic::Ordering::SeqCst) {
+            return Ok(());
+        }
+        let msg = match read_msg(&mut reader) {
+            Ok(m) => m,
+            Err(e) => {
+                // Timeout (no header byte yet): keep polling. Any other
+                // error means the peer closed or the stream desynced.
+                let timed_out = e.downcast_ref::<std::io::Error>().map_or(false, |io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if timed_out {
+                    continue;
+                }
+                return Ok(()); // connection closed
+            }
+        };
+        match msg {
+            Msg::Hello { device_id } => {
+                log::info!("device {device_id} connected");
+            }
+            Msg::Subscribe => {
+                shared.subscribers.lock().unwrap().push(stream.try_clone()?);
+                log::info!("result subscriber attached");
+            }
+            Msg::Features { frame_id, device_id, tensor } => {
+                shared.metrics.incr("features_rx", 1);
+                let ready =
+                    shared.sync.lock().unwrap().add(frame_id, device_id as usize, tensor);
+                if let Some(ready) = ready {
+                    process_ready(&shared, &engine, &meta, &tail, &cfg, ready);
+                }
+                // Opportunistically resolve expirations on traffic too.
+                let expired = shared.sync.lock().unwrap().poll_expired();
+                for r in expired {
+                    process_ready(&shared, &engine, &meta, &tail, &cfg, r);
+                }
+            }
+            Msg::FeaturesQ { frame_id, device_id, tensor } => {
+                // Compressed intermediate output (paper §IV-E): dequantize
+                // at the server edge, then flow through the same path.
+                shared.metrics.incr("features_rx_quantized", 1);
+                match crate::net::dequantize(&tensor) {
+                    Ok(full) => {
+                        let ready = shared
+                            .sync
+                            .lock()
+                            .unwrap()
+                            .add(frame_id, device_id as usize, full);
+                        if let Some(ready) = ready {
+                            process_ready(&shared, &engine, &meta, &tail, &cfg, ready);
+                        }
+                    }
+                    Err(e) => {
+                        shared.metrics.incr("decode_errors", 1);
+                        log::warn!("bad quantized features: {e:#}");
+                    }
+                }
+            }
+            Msg::Bye => return Ok(()),
+            Msg::Result { .. } => {
+                log::warn!("unexpected Result from client");
+            }
+        }
+    }
+}
+
+fn process_ready(
+    shared: &Arc<Shared>,
+    engine: &EngineHandle,
+    meta: &ModelMeta,
+    tail: &str,
+    cfg: &ServerConfig,
+    ready: super::scheduler::ReadyFrame,
+) {
+    let t0 = Instant::now();
+    let result = engine.exec(tail, ready.tensors);
+    let tail_secs = t0.elapsed().as_secs_f64();
+    shared.metrics.record("tail_exec", tail_secs);
+    shared
+        .metrics
+        .record("sync_wait", t0.duration_since(ready.first_arrival).as_secs_f64());
+    let dets = match result {
+        Ok(out) if out.len() == 2 => {
+            postprocess(&out[0].data, &out[1].data, meta, &DecodeParams::default())
+        }
+        Ok(_) | Err(_) => {
+            shared.metrics.incr("tail_errors", 1);
+            Vec::new()
+        }
+    };
+    shared.metrics.incr("frames_done", 1);
+    let wire: Vec<WireDetection> = dets
+        .iter()
+        .map(|d| WireDetection {
+            bbox: d.bbox.to_array(),
+            score: d.score,
+            class_id: d.class_id as u32,
+        })
+        .collect();
+    let msg = Msg::Result {
+        frame_id: ready.frame_id,
+        detections: wire,
+        server_micros: (tail_secs * 1e6) as u64,
+    };
+    let mut subs = shared.subscribers.lock().unwrap();
+    subs.retain_mut(|s| write_msg(s, &msg).is_ok());
+    drop(subs);
+
+    let done = shared
+        .frames_out
+        .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
+        + 1;
+    if let Some(max) = cfg.max_frames {
+        if done >= max {
+            shared.done.store(true, std::sync::atomic::Ordering::SeqCst);
+        }
+    }
+}
+
+/// `scmii serve` CLI entry.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "port", "variant", "deadline-ms", "policy", "max-frames"])?;
+    let paths = Paths::new(&args.str_or("artifacts", "artifacts"), "data");
+    let mut cfg = ServerConfig::default();
+    cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
+    cfg.variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
+    cfg.deadline = Duration::from_millis(args.u64_or("deadline-ms", 200)?);
+    cfg.policy = match args.str_or("policy", "zero-fill").as_str() {
+        "drop" => LossPolicy::Drop,
+        _ => LossPolicy::ZeroFill,
+    };
+    let max = args.u64_or("max-frames", 0)?;
+    cfg.max_frames = if max > 0 { Some(max) } else { None };
+    let metrics = run_server(&paths, &cfg)?;
+    print!("{}", metrics.report());
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Average precision (VOC-style, all-point interpolation) at BEV-IoU
+//! thresholds — the metric behind Table III.
+//!
+//! Matching protocol: detections are sorted by descending score across
+//! the whole split; each detection greedily matches the highest-IoU
+//! unmatched ground truth of the same class in its frame; IoU below the
+//! threshold → false positive. AP is the area under the precision
+//! envelope; mAP averages over classes.
+
+use crate::geom::{bev_iou, Box3};
+use crate::model::Detection;
+
+/// Ground truths + detections for one frame.
+#[derive(Clone, Debug, Default)]
+pub struct EvalFrame {
+    pub detections: Vec<Detection>,
+    /// (box, class_id)
+    pub ground_truth: Vec<(Box3, usize)>,
+}
+
+/// Result of a mAP evaluation at one IoU threshold.
+#[derive(Clone, Debug)]
+pub struct MapResult {
+    /// Per-class AP (index = class id; NaN when the class has no GT).
+    pub per_class: Vec<f64>,
+    /// Mean over classes that have ground truth.
+    pub map: f64,
+    pub iou_threshold: f64,
+}
+
+/// AP for one class at one IoU threshold.
+pub fn average_precision(frames: &[EvalFrame], class_id: usize, iou_thr: f64) -> Option<f64> {
+    let n_gt: usize = frames
+        .iter()
+        .map(|f| f.ground_truth.iter().filter(|(_, c)| *c == class_id).count())
+        .sum();
+    if n_gt == 0 {
+        return None;
+    }
+
+    // Collect (score, frame_idx, det) for the class, sort by score desc.
+    let mut dets: Vec<(f32, usize, &Detection)> = Vec::new();
+    for (fi, f) in frames.iter().enumerate() {
+        for d in &f.detections {
+            if d.class_id == class_id {
+                dets.push((d.score, fi, d));
+            }
+        }
+    }
+    dets.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // Greedy matching with per-frame matched flags.
+    let mut matched: Vec<Vec<bool>> = frames
+        .iter()
+        .map(|f| vec![false; f.ground_truth.len()])
+        .collect();
+    let mut tp = Vec::with_capacity(dets.len());
+    for (_, fi, d) in &dets {
+        let gts = &frames[*fi].ground_truth;
+        let mut best: Option<(usize, f64)> = None;
+        for (gi, (gbox, gclass)) in gts.iter().enumerate() {
+            if *gclass != class_id || matched[*fi][gi] {
+                continue;
+            }
+            let iou = bev_iou(&d.bbox, gbox);
+            if iou >= iou_thr && best.map(|(_, b)| iou > b).unwrap_or(true) {
+                best = Some((gi, iou));
+            }
+        }
+        if let Some((gi, _)) = best {
+            matched[*fi][gi] = true;
+            tp.push(true);
+        } else {
+            tp.push(false);
+        }
+    }
+
+    // Precision/recall curve + all-point interpolated area.
+    let mut cum_tp = 0usize;
+    let mut precisions = Vec::with_capacity(tp.len());
+    let mut recalls = Vec::with_capacity(tp.len());
+    for (i, &is_tp) in tp.iter().enumerate() {
+        if is_tp {
+            cum_tp += 1;
+        }
+        precisions.push(cum_tp as f64 / (i + 1) as f64);
+        recalls.push(cum_tp as f64 / n_gt as f64);
+    }
+    // Precision envelope (monotone non-increasing from the right).
+    for i in (0..precisions.len().saturating_sub(1)).rev() {
+        if precisions[i] < precisions[i + 1] {
+            precisions[i] = precisions[i + 1];
+        }
+    }
+    let mut ap = 0.0;
+    let mut prev_recall = 0.0;
+    for i in 0..recalls.len() {
+        ap += (recalls[i] - prev_recall) * precisions[i];
+        prev_recall = recalls[i];
+    }
+    Some(ap)
+}
+
+/// mAP over all classes at one threshold.
+pub fn evaluate_map(frames: &[EvalFrame], n_classes: usize, iou_thr: f64) -> MapResult {
+    let mut per_class = Vec::with_capacity(n_classes);
+    let mut sum = 0.0;
+    let mut n = 0;
+    for c in 0..n_classes {
+        match average_precision(frames, c, iou_thr) {
+            Some(ap) => {
+                per_class.push(ap);
+                sum += ap;
+                n += 1;
+            }
+            None => per_class.push(f64::NAN),
+        }
+    }
+    MapResult { per_class, map: if n > 0 { sum / n as f64 } else { 0.0 }, iou_threshold: iou_thr }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Vec3;
+
+    fn gt(x: f64, y: f64) -> (Box3, usize) {
+        (Box3::new(Vec3::new(x, y, 0.0), Vec3::new(4.5, 1.9, 1.6), 0.0), 0)
+    }
+
+    fn det(x: f64, y: f64, score: f32) -> Detection {
+        Detection {
+            bbox: Box3::new(Vec3::new(x, y, 0.0), Vec3::new(4.5, 1.9, 1.6), 0.0),
+            score,
+            class_id: 0,
+        }
+    }
+
+    #[test]
+    fn perfect_detections_ap_one() {
+        let frames = vec![EvalFrame {
+            detections: vec![det(0.0, 0.0, 0.9), det(10.0, 0.0, 0.8)],
+            ground_truth: vec![gt(0.0, 0.0), gt(10.0, 0.0)],
+        }];
+        let ap = average_precision(&frames, 0, 0.5).unwrap();
+        assert!((ap - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn misses_reduce_ap() {
+        let frames = vec![EvalFrame {
+            detections: vec![det(0.0, 0.0, 0.9)],
+            ground_truth: vec![gt(0.0, 0.0), gt(10.0, 0.0)],
+        }];
+        let ap = average_precision(&frames, 0, 0.5).unwrap();
+        assert!((ap - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn false_positives_reduce_ap() {
+        // fp ranked above the tp: precision at recall 1.0 is 0.5
+        let frames = vec![EvalFrame {
+            detections: vec![det(50.0, 50.0, 0.95), det(0.0, 0.0, 0.9)],
+            ground_truth: vec![gt(0.0, 0.0)],
+        }];
+        let ap = average_precision(&frames, 0, 0.5).unwrap();
+        assert!((ap - 0.5).abs() < 1e-12);
+        // fp ranked below the tp: AP stays 1.0
+        let frames2 = vec![EvalFrame {
+            detections: vec![det(0.0, 0.0, 0.95), det(50.0, 50.0, 0.9)],
+            ground_truth: vec![gt(0.0, 0.0)],
+        }];
+        let ap2 = average_precision(&frames2, 0, 0.5).unwrap();
+        assert!((ap2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_detections_count_once() {
+        // A trailing duplicate is an FP but full recall is already
+        // reached, so VOC all-point AP stays 1.0 ...
+        let frames = vec![EvalFrame {
+            detections: vec![det(0.0, 0.0, 0.9), det(0.1, 0.0, 0.8)],
+            ground_truth: vec![gt(0.0, 0.0)],
+        }];
+        let ap = average_precision(&frames, 0, 0.5).unwrap();
+        assert!((ap - 1.0).abs() < 1e-12);
+        // ... but a duplicate ranked ABOVE a second GT's match does hurt.
+        let frames2 = vec![EvalFrame {
+            detections: vec![det(0.0, 0.0, 0.9), det(0.1, 0.0, 0.8), det(20.0, 0.0, 0.7)],
+            ground_truth: vec![gt(0.0, 0.0), gt(20.0, 0.0)],
+        }];
+        let ap2 = average_precision(&frames2, 0, 0.5).unwrap();
+        assert!(ap2 < 1.0, "duplicate above a TP must cost precision, ap = {ap2}");
+    }
+
+    #[test]
+    fn looser_threshold_is_more_forgiving() {
+        // detection offset 2 m along x: IoU = 2.5/ (9-2.5) ≈ 0.38 —
+        // misses at IoU 0.5, matches at 0.3
+        let frames = vec![EvalFrame {
+            detections: vec![det(2.0, 0.0, 0.9)],
+            ground_truth: vec![gt(0.0, 0.0)],
+        }];
+        let strict = average_precision(&frames, 0, 0.5).unwrap();
+        let loose = average_precision(&frames, 0, 0.3).unwrap();
+        assert!(loose > strict, "loose {loose} vs strict {strict}");
+        assert_eq!(loose, 1.0);
+        assert_eq!(strict, 0.0);
+    }
+
+    #[test]
+    fn class_without_gt_is_none() {
+        let frames = vec![EvalFrame { detections: vec![det(0.0, 0.0, 0.9)], ground_truth: vec![] }];
+        assert!(average_precision(&frames, 0, 0.5).is_none());
+    }
+
+    #[test]
+    fn map_averages_classes() {
+        let mut f = EvalFrame::default();
+        f.ground_truth = vec![gt(0.0, 0.0), (Box3::new(Vec3::new(10.0, 0.0, 0.0), Vec3::new(0.8, 0.8, 1.7), 0.0), 1)];
+        f.detections = vec![det(0.0, 0.0, 0.9)]; // class 0 perfect, class 1 missed
+        let r = evaluate_map(&[f], 2, 0.5);
+        assert!((r.per_class[0] - 1.0).abs() < 1e-12);
+        assert!((r.per_class[1] - 0.0).abs() < 1e-12);
+        assert!((r.map - 0.5).abs() < 1e-12);
+    }
+}

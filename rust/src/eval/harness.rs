@@ -1,0 +1,133 @@
+//! Table-III harness: detection accuracy of every sensor configuration /
+//! integration method on the validation split.
+
+use super::ap::{evaluate_map, EvalFrame};
+use crate::cli::Args;
+use crate::config::{IntegrationKind, Paths};
+use crate::coordinator::pipeline::ScMiiPipeline;
+use crate::geom::Box3;
+use crate::model::Detection;
+use crate::utils::bench::print_table;
+use anyhow::Result;
+
+/// Accuracy of one configuration row.
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub name: String,
+    pub ap30: f64,
+    pub ap50: f64,
+    /// Per-class AP at 0.5 (diagnostics).
+    pub per_class50: Vec<f64>,
+}
+
+fn frame_gt(frame: &crate::sim::dataset::Frame) -> Vec<(Box3, usize)> {
+    frame
+        .labels
+        .iter()
+        .map(|l| {
+            let bbox = Box3::from_xyzlwh_yaw(&[l[0], l[1], l[2], l[3], l[4], l[5], l[6]]);
+            (bbox, l[7] as usize)
+        })
+        .collect()
+}
+
+fn score_config<F>(
+    frames: &[crate::sim::dataset::Frame],
+    n_classes: usize,
+    name: &str,
+    mut infer: F,
+) -> Result<AccuracyRow>
+where
+    F: FnMut(&crate::sim::dataset::Frame) -> Result<Vec<Detection>>,
+{
+    let mut eval_frames = Vec::with_capacity(frames.len());
+    for f in frames {
+        eval_frames.push(EvalFrame { detections: infer(f)?, ground_truth: frame_gt(f) });
+    }
+    let r30 = evaluate_map(&eval_frames, n_classes, 0.3);
+    let r50 = evaluate_map(&eval_frames, n_classes, 0.5);
+    Ok(AccuracyRow {
+        name: name.to_string(),
+        ap30: r30.map * 100.0,
+        ap50: r50.map * 100.0,
+        per_class50: r50.per_class.iter().map(|v| v * 100.0).collect(),
+    })
+}
+
+/// Run the full Table-III sweep.
+pub fn run_accuracy(paths: &Paths, n_frames: usize) -> Result<Vec<AccuracyRow>> {
+    let frames = crate::sim::dataset::load_split(&paths.data.join("val"))?;
+    let frames: Vec<_> = frames.into_iter().take(n_frames).collect();
+    anyhow::ensure!(!frames.is_empty(), "no validation frames");
+
+    let mut rows = Vec::new();
+
+    // Baselines share one pipeline instance (engine holds all artifacts).
+    let mut base = ScMiiPipeline::load(paths, IntegrationKind::Max)?;
+    base.load_baselines(paths)?;
+    let n_classes = base.meta.classes.len();
+    let n_dev = base.meta.num_devices;
+
+    for dev in 0..n_dev {
+        rows.push(score_config(
+            &frames,
+            n_classes,
+            &format!("LiDAR {} (no integration)", dev + 1),
+            |f| Ok(base.infer_single(dev, &f.clouds[dev])?.0),
+        )?);
+    }
+    rows.push(score_config(&frames, n_classes, "Input point clouds", |f| {
+        Ok(base.infer_input_integration(&f.clouds)?.0)
+    })?);
+
+    for kind in IntegrationKind::all() {
+        let pipeline = ScMiiPipeline::load(paths, kind)?;
+        let name = match kind {
+            IntegrationKind::Max => "SC-MII max value selection",
+            IntegrationKind::ConvK1 => "SC-MII conv kernel size 1",
+            IntegrationKind::ConvK3 => "SC-MII conv kernel size 3",
+        };
+        rows.push(score_config(&frames, n_classes, name, |f| {
+            Ok(pipeline.infer(&f.clouds)?.0)
+        })?);
+    }
+    Ok(rows)
+}
+
+/// Print Table III.
+pub fn print_accuracy(rows: &[AccuracyRow]) {
+    let table: Vec<(String, Vec<String>)> = rows
+        .iter()
+        .map(|r| {
+            (r.name.clone(), vec![format!("{:.2}", r.ap30), format!("{:.2}", r.ap50)])
+        })
+        .collect();
+    print_table("Table III — overall accuracy (mAP %)", &["AP@0.3", "AP@0.5"], &table);
+
+    // Paper headline: SC-MII within ~1.1 points of input integration.
+    let input = rows.iter().find(|r| r.name.starts_with("Input"));
+    let best_scmii = rows
+        .iter()
+        .filter(|r| r.name.starts_with("SC-MII"))
+        .max_by(|a, b| a.ap50.partial_cmp(&b.ap50).unwrap());
+    if let (Some(i), Some(s)) = (input, best_scmii) {
+        println!(
+            "\nSC-MII best vs input integration: ΔAP@0.3 = {:+.2}, ΔAP@0.5 = {:+.2}",
+            s.ap30 - i.ap30,
+            s.ap50 - i.ap50
+        );
+    }
+}
+
+/// `scmii eval-accuracy` CLI entry.
+pub fn cmd_eval_accuracy(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "data", "frames"])?;
+    let paths = Paths::new(
+        &args.str_or("artifacts", "artifacts"),
+        &args.str_or("data", "data"),
+    );
+    let n = args.usize_or("frames", 80)?;
+    let rows = run_accuracy(&paths, n)?;
+    print_accuracy(&rows);
+    Ok(())
+}

@@ -1,0 +1,7 @@
+//! Detection evaluation: AP / mAP at BEV-IoU thresholds, reproducing the
+//! paper's Table III metrics (AP@0.3 and AP@0.5).
+
+pub mod ap;
+pub mod harness;
+
+pub use ap::{average_precision, evaluate_map, EvalFrame, MapResult};

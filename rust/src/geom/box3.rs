@@ -1,0 +1,167 @@
+//! Oriented 3D bounding boxes (7-DoF: center xyz, size lwh, yaw).
+//!
+//! The encoding matches the python target assigner
+//! (`python/compile/targets.py`): length along the box's local +x at
+//! yaw = 0, width along +y, height along +z, yaw about +z.
+
+use super::pose::Mat3;
+use super::vec::Vec3;
+
+/// Oriented box. `size = (length, width, height)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Box3 {
+    pub center: Vec3,
+    pub size: Vec3,
+    pub yaw: f64,
+}
+
+impl Box3 {
+    pub fn new(center: Vec3, size: Vec3, yaw: f64) -> Box3 {
+        Box3 { center, size, yaw }
+    }
+
+    pub fn from_xyzlwh_yaw(v: &[f32; 7]) -> Box3 {
+        Box3 {
+            center: Vec3::new(v[0] as f64, v[1] as f64, v[2] as f64),
+            size: Vec3::new(v[3] as f64, v[4] as f64, v[5] as f64),
+            yaw: v[6] as f64,
+        }
+    }
+
+    pub fn to_array(&self) -> [f32; 7] {
+        [
+            self.center.x as f32,
+            self.center.y as f32,
+            self.center.z as f32,
+            self.size.x as f32,
+            self.size.y as f32,
+            self.size.z as f32,
+            self.yaw as f32,
+        ]
+    }
+
+    /// BEV footprint corners, counter-clockwise.
+    pub fn bev_corners(&self) -> [(f64, f64); 4] {
+        let (s, c) = self.yaw.sin_cos();
+        let hl = self.size.x / 2.0;
+        let hw = self.size.y / 2.0;
+        let local = [(hl, hw), (-hl, hw), (-hl, -hw), (hl, -hw)];
+        let mut out = [(0.0, 0.0); 4];
+        for (i, (lx, ly)) in local.iter().enumerate() {
+            out[i] = (
+                self.center.x + c * lx - s * ly,
+                self.center.y + s * lx + c * ly,
+            );
+        }
+        out
+    }
+
+    /// All eight corners in world coordinates.
+    pub fn corners(&self) -> [Vec3; 8] {
+        let rot = Mat3::rot_z(self.yaw);
+        let h = self.size / 2.0;
+        let mut out = [Vec3::ZERO; 8];
+        let mut i = 0;
+        for &sx in &[-1.0, 1.0] {
+            for &sy in &[-1.0, 1.0] {
+                for &sz in &[-1.0, 1.0] {
+                    out[i] =
+                        self.center + rot.apply(Vec3::new(sx * h.x, sy * h.y, sz * h.z));
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn z_min(&self) -> f64 {
+        self.center.z - self.size.z / 2.0
+    }
+
+    pub fn z_max(&self) -> f64 {
+        self.center.z + self.size.z / 2.0
+    }
+
+    pub fn bev_area(&self) -> f64 {
+        self.size.x * self.size.y
+    }
+
+    pub fn volume(&self) -> f64 {
+        self.size.x * self.size.y * self.size.z
+    }
+
+    /// Is a world point inside this box?
+    pub fn contains(&self, p: Vec3) -> bool {
+        let local = Mat3::rot_z(-self.yaw).apply(p - self.center);
+        local.x.abs() <= self.size.x / 2.0
+            && local.y.abs() <= self.size.y / 2.0
+            && local.z.abs() <= self.size.z / 2.0
+    }
+
+    /// Transform the box by a pose (rigid; yaw-only rotation assumed, i.e.
+    /// the pose's roll/pitch must be small — true for our sensor rigs).
+    pub fn transformed(&self, rot_yaw: f64, rot: &Mat3, trans: Vec3) -> Box3 {
+        Box3 {
+            center: rot.apply(self.center) + trans,
+            size: self.size,
+            yaw: normalize_angle(self.yaw + rot_yaw),
+        }
+    }
+}
+
+/// Wrap an angle into (-π, π].
+pub fn normalize_angle(a: f64) -> f64 {
+    let mut a = a % (2.0 * std::f64::consts::PI);
+    if a <= -std::f64::consts::PI {
+        a += 2.0 * std::f64::consts::PI;
+    } else if a > std::f64::consts::PI {
+        a -= 2.0 * std::f64::consts::PI;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bev_corners_axis_aligned() {
+        let b = Box3::new(Vec3::new(1.0, 2.0, 0.0), Vec3::new(4.0, 2.0, 1.5), 0.0);
+        let cs = b.bev_corners();
+        assert!((cs[0].0 - 3.0).abs() < 1e-12 && (cs[0].1 - 3.0).abs() < 1e-12);
+        assert!((cs[2].0 - -1.0).abs() < 1e-12 && (cs[2].1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contains_respects_yaw() {
+        let b = Box3::new(Vec3::ZERO, Vec3::new(4.0, 2.0, 2.0), std::f64::consts::FRAC_PI_2);
+        // after 90° yaw the long axis is along y
+        assert!(b.contains(Vec3::new(0.0, 1.9, 0.0)));
+        assert!(!b.contains(Vec3::new(1.9, 0.0, 0.0)));
+    }
+
+    #[test]
+    fn corners_count_and_extent() {
+        let b = Box3::new(Vec3::new(0.0, 0.0, 1.0), Vec3::new(2.0, 2.0, 2.0), 0.3);
+        let cs = b.corners();
+        for c in cs {
+            assert!((c - b.center).norm() <= (3.0f64).sqrt() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn normalize_angle_range() {
+        for k in -10..10 {
+            let a = 0.5 + k as f64 * 2.0 * std::f64::consts::PI;
+            assert!((normalize_angle(a) - 0.5).abs() < 1e-9);
+        }
+        assert!(normalize_angle(std::f64::consts::PI + 0.1) < 0.0);
+    }
+
+    #[test]
+    fn roundtrip_array() {
+        let b = Box3::new(Vec3::new(1.0, 2.0, 3.0), Vec3::new(4.0, 5.0, 6.0), 0.7);
+        let b2 = Box3::from_xyzlwh_yaw(&b.to_array());
+        assert!((b.center - b2.center).norm() < 1e-6);
+    }
+}

@@ -1,0 +1,13 @@
+//! Geometry substrate: vectors, SE(3) poses, oriented 3D boxes, rotated
+//! IoU (polygon clipping) and ray intersections for the LiDAR simulator.
+
+pub mod box3;
+pub mod iou;
+pub mod pose;
+pub mod ray;
+pub mod vec;
+
+pub use box3::Box3;
+pub use iou::{bev_iou, iou_3d, polygon_area, polygon_clip};
+pub use pose::{Mat3, Pose};
+pub use vec::Vec3;

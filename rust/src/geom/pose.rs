@@ -1,0 +1,254 @@
+//! SE(3) rigid transforms and 3×3 rotation matrices.
+//!
+//! Poses describe sensor extrinsics: `pose.apply(p)` maps a point from the
+//! sensor's local frame into the world/common frame. NDT scan matching
+//! (`crate::ndt`) estimates these; the alignment index maps
+//! (`crate::align`) consume them.
+
+use super::vec::Vec3;
+
+/// Row-major 3×3 matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f64; 3]; 3],
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3 { m: [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]] };
+
+    pub fn from_rows(r0: [f64; 3], r1: [f64; 3], r2: [f64; 3]) -> Mat3 {
+        Mat3 { m: [r0, r1, r2] }
+    }
+
+    /// Rotation about +z by `yaw` radians (counter-clockwise looking down).
+    pub fn rot_z(yaw: f64) -> Mat3 {
+        let (s, c) = yaw.sin_cos();
+        Mat3::from_rows([c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0])
+    }
+
+    /// Rotation about +y by `pitch` radians.
+    pub fn rot_y(pitch: f64) -> Mat3 {
+        let (s, c) = pitch.sin_cos();
+        Mat3::from_rows([c, 0.0, s], [0.0, 1.0, 0.0], [-s, 0.0, c])
+    }
+
+    /// Rotation about +x by `roll` radians.
+    pub fn rot_x(roll: f64) -> Mat3 {
+        let (s, c) = roll.sin_cos();
+        Mat3::from_rows([1.0, 0.0, 0.0], [0.0, c, -s], [0.0, s, c])
+    }
+
+    /// ZYX Euler composition: `rot_z(yaw) * rot_y(pitch) * rot_x(roll)`.
+    pub fn from_euler(roll: f64, pitch: f64, yaw: f64) -> Mat3 {
+        Mat3::rot_z(yaw) * Mat3::rot_y(pitch) * Mat3::rot_x(roll)
+    }
+
+    /// Extract (roll, pitch, yaw) assuming ZYX composition.
+    pub fn to_euler(&self) -> (f64, f64, f64) {
+        let m = &self.m;
+        let pitch = (-m[2][0]).asin();
+        let roll = m[2][1].atan2(m[2][2]);
+        let yaw = m[1][0].atan2(m[0][0]);
+        (roll, pitch, yaw)
+    }
+
+    pub fn transpose(&self) -> Mat3 {
+        let m = &self.m;
+        Mat3::from_rows(
+            [m[0][0], m[1][0], m[2][0]],
+            [m[0][1], m[1][1], m[2][1]],
+            [m[0][2], m[1][2], m[2][2]],
+        )
+    }
+
+    pub fn apply(&self, v: Vec3) -> Vec3 {
+        let m = &self.m;
+        Vec3::new(
+            m[0][0] * v.x + m[0][1] * v.y + m[0][2] * v.z,
+            m[1][0] * v.x + m[1][1] * v.y + m[1][2] * v.z,
+            m[2][0] * v.x + m[2][1] * v.y + m[2][2] * v.z,
+        )
+    }
+
+    pub fn det(&self) -> f64 {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    /// Inverse of a general 3×3 (adjugate / det). Panics on singular.
+    pub fn inverse(&self) -> Mat3 {
+        let m = &self.m;
+        let det = self.det();
+        assert!(det.abs() > 1e-18, "singular matrix");
+        let inv_det = 1.0 / det;
+        Mat3::from_rows(
+            [
+                (m[1][1] * m[2][2] - m[1][2] * m[2][1]) * inv_det,
+                (m[0][2] * m[2][1] - m[0][1] * m[2][2]) * inv_det,
+                (m[0][1] * m[1][2] - m[0][2] * m[1][1]) * inv_det,
+            ],
+            [
+                (m[1][2] * m[2][0] - m[1][0] * m[2][2]) * inv_det,
+                (m[0][0] * m[2][2] - m[0][2] * m[2][0]) * inv_det,
+                (m[0][2] * m[1][0] - m[0][0] * m[1][2]) * inv_det,
+            ],
+            [
+                (m[1][0] * m[2][1] - m[1][1] * m[2][0]) * inv_det,
+                (m[0][1] * m[2][0] - m[0][0] * m[2][1]) * inv_det,
+                (m[0][0] * m[1][1] - m[0][1] * m[1][0]) * inv_det,
+            ],
+        )
+    }
+
+    /// Solve `self * x = b` (via inverse; 3×3 only ever).
+    pub fn solve(&self, b: Vec3) -> Vec3 {
+        self.inverse().apply(b)
+    }
+}
+
+impl std::ops::Mul for Mat3 {
+    type Output = Mat3;
+    fn mul(self, o: Mat3) -> Mat3 {
+        let mut out = [[0.0; 3]; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                out[i][j] = (0..3).map(|k| self.m[i][k] * o.m[k][j]).sum();
+            }
+        }
+        Mat3 { m: out }
+    }
+}
+
+/// Rigid transform: `world = rot * local + trans`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pose {
+    pub rot: Mat3,
+    pub trans: Vec3,
+}
+
+impl Pose {
+    pub const IDENTITY: Pose = Pose { rot: Mat3::IDENTITY, trans: Vec3::ZERO };
+
+    pub fn new(rot: Mat3, trans: Vec3) -> Pose {
+        Pose { rot, trans }
+    }
+
+    /// Pose from xyz translation + ZYX euler angles.
+    pub fn from_xyz_rpy(x: f64, y: f64, z: f64, roll: f64, pitch: f64, yaw: f64) -> Pose {
+        Pose::new(Mat3::from_euler(roll, pitch, yaw), Vec3::new(x, y, z))
+    }
+
+    pub fn apply(&self, p: Vec3) -> Vec3 {
+        self.rot.apply(p) + self.trans
+    }
+
+    /// Rotate a direction (no translation).
+    pub fn apply_dir(&self, d: Vec3) -> Vec3 {
+        self.rot.apply(d)
+    }
+
+    pub fn inverse(&self) -> Pose {
+        let rt = self.rot.transpose();
+        Pose::new(rt, -rt.apply(self.trans))
+    }
+
+    /// `self ∘ other`: apply `other` first, then `self`.
+    pub fn compose(&self, other: &Pose) -> Pose {
+        Pose::new(self.rot * other.rot, self.rot.apply(other.trans) + self.trans)
+    }
+
+    /// Row-major 4×4 homogeneous matrix (for calib.json interchange).
+    pub fn to_mat4(&self) -> [f64; 16] {
+        let m = &self.rot.m;
+        [
+            m[0][0], m[0][1], m[0][2], self.trans.x, //
+            m[1][0], m[1][1], m[1][2], self.trans.y, //
+            m[2][0], m[2][1], m[2][2], self.trans.z, //
+            0.0, 0.0, 0.0, 1.0,
+        ]
+    }
+
+    pub fn from_mat4(m: &[f64; 16]) -> Pose {
+        Pose::new(
+            Mat3::from_rows([m[0], m[1], m[2]], [m[4], m[5], m[6]], [m[8], m[9], m[10]]),
+            Vec3::new(m[3], m[7], m[11]),
+        )
+    }
+
+    /// Rotation/translation distance to another pose, for calibration
+    /// error reporting: (rotation angle in radians, translation metres).
+    pub fn error_to(&self, other: &Pose) -> (f64, f64) {
+        let rel = self.inverse().compose(other);
+        let trace = rel.rot.m[0][0] + rel.rot.m[1][1] + rel.rot.m[2][2];
+        let angle = ((trace - 1.0) / 2.0).clamp(-1.0, 1.0).acos();
+        (angle, rel.trans.norm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rot_z_quarter_turn() {
+        let r = Mat3::rot_z(std::f64::consts::FRAC_PI_2);
+        let v = r.apply(Vec3::new(1.0, 0.0, 0.0));
+        assert!((v - Vec3::new(0.0, 1.0, 0.0)).norm() < 1e-12);
+    }
+
+    #[test]
+    fn euler_roundtrip() {
+        let (roll, pitch, yaw) = (0.1, -0.2, 1.3);
+        let r = Mat3::from_euler(roll, pitch, yaw);
+        let (r2, p2, y2) = r.to_euler();
+        assert!((roll - r2).abs() < 1e-12);
+        assert!((pitch - p2).abs() < 1e-12);
+        assert!((yaw - y2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrips_points() {
+        let pose = Pose::from_xyz_rpy(1.0, -2.0, 3.0, 0.05, -0.1, 2.2);
+        let inv = pose.inverse();
+        let p = Vec3::new(4.0, 5.0, -6.0);
+        assert!((inv.apply(pose.apply(p)) - p).norm() < 1e-12);
+        assert!((pose.apply(inv.apply(p)) - p).norm() < 1e-12);
+    }
+
+    #[test]
+    fn compose_associates_with_apply() {
+        let a = Pose::from_xyz_rpy(1.0, 0.0, 0.0, 0.0, 0.0, 0.7);
+        let b = Pose::from_xyz_rpy(0.0, 2.0, 0.5, 0.1, 0.0, -0.3);
+        let p = Vec3::new(0.3, -0.4, 0.5);
+        let lhs = a.compose(&b).apply(p);
+        let rhs = a.apply(b.apply(p));
+        assert!((lhs - rhs).norm() < 1e-12);
+    }
+
+    #[test]
+    fn mat4_roundtrip() {
+        let pose = Pose::from_xyz_rpy(10.0, -5.0, 4.5, 0.0, 0.02, 1.9);
+        let back = Pose::from_mat4(&pose.to_mat4());
+        let (ang, t) = pose.error_to(&back);
+        assert!(ang < 1e-12 && t < 1e-12);
+    }
+
+    #[test]
+    fn error_to_measures_rotation() {
+        let a = Pose::IDENTITY;
+        let b = Pose::from_xyz_rpy(0.0, 0.0, 0.0, 0.0, 0.0, 0.25);
+        let (ang, t) = a.error_to(&b);
+        assert!((ang - 0.25).abs() < 1e-12);
+        assert!(t < 1e-12);
+    }
+
+    #[test]
+    fn mat3_inverse_solves() {
+        let m = Mat3::from_rows([2.0, 1.0, 0.0], [0.0, 3.0, 1.0], [1.0, 0.0, 2.0]);
+        let x = Vec3::new(1.0, -2.0, 0.5);
+        let b = m.apply(x);
+        assert!((m.solve(b) - x).norm() < 1e-10);
+    }
+}

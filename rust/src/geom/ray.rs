@@ -1,0 +1,132 @@
+//! Ray intersections used by the LiDAR raycaster: ray vs oriented box
+//! (slab test in the box frame) and ray vs ground plane.
+
+use super::box3::Box3;
+use super::pose::Mat3;
+use super::vec::Vec3;
+
+/// A ray `origin + t * dir`, `dir` unit length.
+#[derive(Clone, Copy, Debug)]
+pub struct Ray {
+    pub origin: Vec3,
+    pub dir: Vec3,
+}
+
+impl Ray {
+    pub fn new(origin: Vec3, dir: Vec3) -> Ray {
+        Ray { origin, dir: dir.normalized() }
+    }
+
+    pub fn at(&self, t: f64) -> Vec3 {
+        self.origin + self.dir * t
+    }
+}
+
+/// Distance along `ray` to the first intersection with `b`, if any
+/// (t must be positive — hits behind the origin are ignored).
+pub fn ray_box(ray: &Ray, b: &Box3) -> Option<f64> {
+    // Transform the ray into the box's local frame.
+    let inv_rot = Mat3::rot_z(-b.yaw);
+    let o = inv_rot.apply(ray.origin - b.center);
+    let d = inv_rot.apply(ray.dir);
+    let half = b.size / 2.0;
+
+    let mut t_min = f64::NEG_INFINITY;
+    let mut t_max = f64::INFINITY;
+    for (oc, dc, hc) in [(o.x, d.x, half.x), (o.y, d.y, half.y), (o.z, d.z, half.z)] {
+        if dc.abs() < 1e-12 {
+            if oc.abs() > hc {
+                return None;
+            }
+        } else {
+            let inv = 1.0 / dc;
+            let (mut t0, mut t1) = ((-hc - oc) * inv, (hc - oc) * inv);
+            if t0 > t1 {
+                std::mem::swap(&mut t0, &mut t1);
+            }
+            t_min = t_min.max(t0);
+            t_max = t_max.min(t1);
+            if t_min > t_max {
+                return None;
+            }
+        }
+    }
+    if t_max < 0.0 {
+        return None;
+    }
+    Some(if t_min >= 0.0 { t_min } else { t_max })
+}
+
+/// Distance along `ray` to the plane `z = z0` (None if parallel or behind).
+pub fn ray_ground(ray: &Ray, z0: f64) -> Option<f64> {
+    if ray.dir.z.abs() < 1e-12 {
+        return None;
+    }
+    let t = (z0 - ray.origin.z) / ray.dir.z;
+    if t > 0.0 {
+        Some(t)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ray_hits_axis_aligned_box() {
+        let b = Box3::new(Vec3::new(10.0, 0.0, 0.0), Vec3::new(2.0, 2.0, 2.0), 0.0);
+        let r = Ray::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0));
+        let t = ray_box(&r, &b).unwrap();
+        assert!((t - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ray_misses_offset_box() {
+        let b = Box3::new(Vec3::new(10.0, 5.0, 0.0), Vec3::new(2.0, 2.0, 2.0), 0.0);
+        let r = Ray::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0));
+        assert!(ray_box(&r, &b).is_none());
+    }
+
+    #[test]
+    fn ray_hits_rotated_box() {
+        // 45°-rotated long box: the ray along x should clip its corner region
+        let b = Box3::new(
+            Vec3::new(10.0, 0.0, 0.0),
+            Vec3::new(6.0, 1.0, 2.0),
+            std::f64::consts::FRAC_PI_4,
+        );
+        let r = Ray::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0));
+        let t = ray_box(&r, &b).unwrap();
+        let hit = r.at(t);
+        assert!(b.contains(hit + r.dir * 1e-9) || b.contains(hit - r.dir * 1e-9));
+    }
+
+    #[test]
+    fn origin_inside_box_returns_exit() {
+        let b = Box3::new(Vec3::ZERO, Vec3::new(4.0, 4.0, 4.0), 0.3);
+        let r = Ray::new(Vec3::ZERO, Vec3::new(0.0, 1.0, 0.0));
+        let t = ray_box(&r, &b).unwrap();
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn ground_intersection() {
+        // sensor looking down from 4.5 m
+        let r = Ray::new(Vec3::new(0.0, 0.0, 4.5), Vec3::new(1.0, 0.0, -0.5));
+        let t = ray_ground(&r, 0.0).unwrap();
+        let p = r.at(t);
+        assert!(p.z.abs() < 1e-9);
+        // upward ray never hits ground
+        let r_up = Ray::new(Vec3::new(0.0, 0.0, 4.5), Vec3::new(1.0, 0.0, 0.5));
+        assert!(ray_ground(&r_up, 0.0).is_none());
+    }
+
+    #[test]
+    fn behind_origin_ignored() {
+        let b = Box3::new(Vec3::new(-10.0, 0.0, 0.0), Vec3::new(2.0, 2.0, 2.0), 0.0);
+        let r = Ray::new(Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0));
+        assert!(ray_box(&r, &b).is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration of aligned intermediate outputs (paper §III-A.3).
+//!
+//! The paper's three integration methods are: element-wise max, and
+//! concat + single conv3d with kernel 1 or 3. The conv variants carry
+//! trained weights and therefore execute inside the tail HLO (lowered
+//! from the Pallas kernels in `python/compile/kernels/`); this module
+//! provides the rust-native **max** integration (weight-free, usable on
+//! the coordinator's native path) plus reference conv integration used by
+//! tests to validate the HLO numerics independently.
+
+use crate::voxel::FeatureMap;
+
+/// Element-wise max across device feature maps.
+pub fn max_integrate(maps: &[FeatureMap]) -> FeatureMap {
+    assert!(!maps.is_empty());
+    let mut out = maps[0].clone();
+    for m in &maps[1..] {
+        assert_eq!(m.shape(), out.shape(), "feature map shape mismatch");
+        for (o, &v) in out.data.iter_mut().zip(&m.data) {
+            if v > *o {
+                *o = v;
+            }
+        }
+    }
+    out
+}
+
+/// Reference concat + conv3d integration (NCDHW-free, pure rust, used to
+/// cross-check the Pallas kernel through the runtime tests).
+///
+/// `weights` has layout `(k, k, k, c_in_total, c_out)` (matches the jax
+/// `conv_general_dilated` DHWIO layout used by the python side);
+/// `bias` has length `c_out`. Zero ("same") padding.
+pub fn conv_integrate(
+    maps: &[FeatureMap],
+    weights: &[f32],
+    bias: &[f32],
+    k: usize,
+) -> FeatureMap {
+    assert!(!maps.is_empty());
+    let [d, h, w, c_each] = maps[0].shape();
+    for m in maps {
+        assert_eq!(m.shape(), maps[0].shape());
+    }
+    let c_in = c_each * maps.len();
+    let c_out = bias.len();
+    assert_eq!(weights.len(), k * k * k * c_in * c_out, "weight shape mismatch");
+    assert!(k % 2 == 1, "odd kernels only");
+    let half = (k / 2) as i64;
+
+    let mut out = FeatureMap::zeros(d, h, w, c_out);
+    for oz in 0..d as i64 {
+        for oy in 0..h as i64 {
+            for ox in 0..w as i64 {
+                for oc in 0..c_out {
+                    let mut acc = bias[oc];
+                    for kz in 0..k as i64 {
+                        let iz = oz + kz - half;
+                        if iz < 0 || iz >= d as i64 {
+                            continue;
+                        }
+                        for ky in 0..k as i64 {
+                            let iy = oy + ky - half;
+                            if iy < 0 || iy >= h as i64 {
+                                continue;
+                            }
+                            for kx in 0..k as i64 {
+                                let ix = ox + kx - half;
+                                if ix < 0 || ix >= w as i64 {
+                                    continue;
+                                }
+                                // weight index base for (kz,ky,kx)
+                                let wbase =
+                                    (((kz as usize * k + ky as usize) * k + kx as usize) * c_in)
+                                        * c_out;
+                                for (mi, m) in maps.iter().enumerate() {
+                                    let src = m.voxel(iz as usize, iy as usize, ix as usize);
+                                    let cbase = wbase + mi * c_each * c_out;
+                                    for ci in 0..c_each {
+                                        acc += src[ci] * weights[cbase + ci * c_out + oc];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    out.set(oz as usize, oy as usize, ox as usize, oc, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(m: &mut FeatureMap, f: impl Fn(usize) -> f32) {
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = f(i);
+        }
+    }
+
+    #[test]
+    fn max_picks_larger_values() {
+        let mut a = FeatureMap::zeros(2, 2, 2, 2);
+        let mut b = FeatureMap::zeros(2, 2, 2, 2);
+        fill(&mut a, |i| i as f32);
+        fill(&mut b, |i| 15.0 - i as f32);
+        let m = max_integrate(&[a.clone(), b.clone()]);
+        for i in 0..m.data.len() {
+            assert_eq!(m.data[i], a.data[i].max(b.data[i]));
+        }
+    }
+
+    #[test]
+    fn max_is_commutative_and_idempotent() {
+        let mut a = FeatureMap::zeros(2, 3, 3, 4);
+        let mut b = FeatureMap::zeros(2, 3, 3, 4);
+        fill(&mut a, |i| ((i * 7) % 13) as f32 - 6.0);
+        fill(&mut b, |i| ((i * 5) % 11) as f32 - 5.0);
+        assert_eq!(max_integrate(&[a.clone(), b.clone()]).data, max_integrate(&[b.clone(), a.clone()]).data);
+        assert_eq!(max_integrate(&[a.clone(), a.clone()]).data, a.data);
+    }
+
+    #[test]
+    fn conv_k1_is_per_voxel_linear() {
+        // k=1: out[oc] = bias[oc] + Σ_ci in[ci] * w[ci][oc]
+        let mut a = FeatureMap::zeros(1, 2, 2, 2);
+        let mut b = FeatureMap::zeros(1, 2, 2, 2);
+        fill(&mut a, |i| i as f32);
+        fill(&mut b, |i| 2.0 * i as f32);
+        // c_in = 4, c_out = 2
+        let mut w = vec![0.0f32; 4 * 2];
+        w[0 * 2 + 0] = 1.0; // a ch0 -> out0
+        w[2 * 2 + 0] = 1.0; // b ch0 -> out0
+        w[1 * 2 + 1] = 0.5; // a ch1 -> out1
+        let bias = vec![0.1f32, -0.1];
+        let out = conv_integrate(&[a.clone(), b.clone()], &w, &bias, 1);
+        for vox in 0..4 {
+            let a0 = a.data[vox * 2];
+            let a1 = a.data[vox * 2 + 1];
+            let b0 = b.data[vox * 2];
+            assert!((out.data[vox * 2] - (0.1 + a0 + b0)).abs() < 1e-6);
+            assert!((out.data[vox * 2 + 1] - (-0.1 + 0.5 * a1)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_k3_identity_kernel_passes_through() {
+        // kernel with 1.0 at the center tap copying channel 0
+        let mut a = FeatureMap::zeros(3, 4, 4, 1);
+        fill(&mut a, |i| (i % 10) as f32);
+        let k = 3;
+        let c_in = 2; // two maps, 1 channel each
+        let c_out = 1;
+        let mut w = vec![0.0f32; k * k * k * c_in * c_out];
+        let center = ((1 * k + 1) * k + 1) * c_in * c_out; // (kz=1,ky=1,kx=1)
+        w[center] = 1.0; // map 0 channel 0 -> out
+        let b = FeatureMap::zeros(3, 4, 4, 1);
+        let out = conv_integrate(&[a.clone(), b], &w, &[0.0], 3);
+        assert_eq!(out.data, a.data);
+    }
+
+    #[test]
+    fn conv_k3_averaging_blurs() {
+        let mut a = FeatureMap::zeros(3, 3, 3, 1);
+        a.set(1, 1, 1, 0, 27.0);
+        let k = 3;
+        let w = vec![1.0f32 / 27.0; k * k * k];
+        let out = conv_integrate(&[a], &w, &[0.0], 3);
+        // every voxel sees the impulse through exactly one tap
+        for &v in &out.data {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Fig-5 harness: execution-time comparison of SC-MII variants against
+//! the edge-only input-integration baseline.
+//!
+//! Measurement is separated from modeling: the expensive part (running
+//! every variant's HLO over validation frames) happens once in
+//! [`measure_raw`]; any number of testbed configurations (bandwidth
+//! sweeps, device-factor ablations) are then modeled from the same
+//! measurements.
+
+use crate::cli::Args;
+use crate::config::{IntegrationKind, LatencyConfig, Paths};
+use crate::coordinator::pipeline::{FrameTiming, ScMiiPipeline};
+use crate::latency::TestbedModel;
+use crate::utils::bench::print_table;
+use crate::utils::stats;
+use anyhow::Result;
+
+/// Raw per-frame measurements on this machine.
+#[derive(Clone, Debug)]
+pub struct RawTimings {
+    /// Per SC-MII variant: per-frame pipeline timing breakdowns.
+    pub scmii: Vec<(IntegrationKind, Vec<FrameTiming>)>,
+    /// Edge-only baseline: per-frame full-model seconds.
+    pub edge_full_secs: Vec<f64>,
+    /// Raw-cloud bytes the edge-only baseline pulls from remote sensors.
+    pub remote_raw_bytes: usize,
+    pub n_devices: usize,
+}
+
+/// Measured + modeled numbers for one method.
+#[derive(Clone, Debug)]
+pub struct MethodTiming {
+    pub name: String,
+    /// Modeled end-to-end inference times per frame (seconds).
+    pub inference: Vec<f64>,
+    /// Modeled per-device edge execution time per frame.
+    pub edge_per_device: Vec<Vec<f64>>,
+}
+
+/// Execute every configuration over `n_frames` validation frames.
+pub fn measure_raw(paths: &Paths, n_frames: usize) -> Result<RawTimings> {
+    let frames = crate::sim::dataset::load_split(&paths.data.join("val"))?;
+    let frames: Vec<_> = frames.into_iter().take(n_frames).collect();
+    anyhow::ensure!(!frames.is_empty(), "no validation frames");
+
+    let mut base = ScMiiPipeline::load(paths, IntegrationKind::Max)?;
+    base.load_baselines(paths)?;
+    let n_devices = base.meta.num_devices;
+    let remote_raw_bytes = base.meta.grid.max_points * 16 * (n_devices - 1);
+    // Warm-up (compile effects, caches) before measuring.
+    let _ = base.infer_input_integration(&frames[0].clouds)?;
+    let mut edge_full_secs = Vec::new();
+    for f in &frames {
+        let (_, secs) = base.infer_input_integration(&f.clouds)?;
+        edge_full_secs.push(secs);
+    }
+
+    let mut scmii = Vec::new();
+    for kind in IntegrationKind::all() {
+        let pipeline = ScMiiPipeline::load(paths, kind)?;
+        let _ = pipeline.infer(&frames[0].clouds)?; // warm-up
+        let mut timings = Vec::new();
+        for f in &frames {
+            let (_, t) = pipeline.infer(&f.clouds)?;
+            timings.push(t);
+        }
+        scmii.push((kind, timings));
+    }
+    Ok(RawTimings { scmii, edge_full_secs, remote_raw_bytes, n_devices })
+}
+
+/// Model one testbed configuration from raw measurements.
+pub fn model_methods(raw: &RawTimings, lat_cfg: &LatencyConfig) -> Vec<MethodTiming> {
+    let model = TestbedModel::new(lat_cfg.clone());
+    let mut out = Vec::new();
+
+    let edge_only: Vec<f64> = raw
+        .edge_full_secs
+        .iter()
+        .map(|&s| model.edge_only(s, raw.remote_raw_bytes))
+        .collect();
+    out.push(MethodTiming {
+        name: "Edge-only (input integration)".into(),
+        edge_per_device: vec![edge_only.clone(); raw.n_devices],
+        inference: edge_only,
+    });
+
+    for (kind, timings) in &raw.scmii {
+        let mut inference = Vec::new();
+        let mut edge: Vec<Vec<f64>> = vec![Vec::new(); raw.n_devices];
+        for t in timings {
+            let b = model.scmii(t);
+            inference.push(b.inference);
+            for d in 0..raw.n_devices {
+                edge[d].push(b.edge_total[d]);
+            }
+        }
+        out.push(MethodTiming {
+            name: format!("SC-MII ({})", pretty(*kind)),
+            inference,
+            edge_per_device: edge,
+        });
+    }
+    out
+}
+
+/// Measurement + modeling in one call (examples / CLI).
+pub fn run_exec_time(
+    paths: &Paths,
+    n_frames: usize,
+    lat_cfg: &LatencyConfig,
+) -> Result<Vec<MethodTiming>> {
+    let raw = measure_raw(paths, n_frames)?;
+    Ok(model_methods(&raw, lat_cfg))
+}
+
+fn pretty(kind: IntegrationKind) -> &'static str {
+    match kind {
+        IntegrationKind::Max => "max value selection",
+        IntegrationKind::ConvK1 => "conv kernel 1",
+        IntegrationKind::ConvK3 => "conv kernel 3",
+    }
+}
+
+/// Print the Fig-5 tables + headline ratios.
+pub fn print_exec_time(methods: &[MethodTiming]) {
+    let ms = |v: f64| format!("{:.1}", v * 1e3);
+    let rows: Vec<(String, Vec<String>)> = methods
+        .iter()
+        .map(|m| {
+            let mean = stats::mean(&m.inference);
+            let max = m.inference.iter().cloned().fold(0.0, f64::max);
+            (m.name.clone(), vec![ms(mean), ms(max)])
+        })
+        .collect();
+    print_table("Fig 5a — inference time (ms)", &["mean", "max"], &rows);
+
+    let n_dev = methods.iter().map(|m| m.edge_per_device.len()).max().unwrap_or(0);
+    let mut rows = Vec::new();
+    for m in methods {
+        let mut vals = Vec::new();
+        for d in 0..n_dev {
+            let xs = m.edge_per_device.get(d).map(|v| v.as_slice()).unwrap_or(&[]);
+            vals.push(ms(stats::mean(xs)));
+        }
+        rows.push((m.name.clone(), vals));
+    }
+    let cols: Vec<String> = (0..n_dev).map(|d| format!("device {}", d + 1)).collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    print_table("Fig 5b — edge device execution time (ms, mean)", &col_refs, &rows);
+
+    // Headline claims (paper: 2.19x average speedup; 71.6% average edge
+    // reduction on the loaded device).
+    if let (Some(base), Some(best)) = (methods.first(), methods.last()) {
+        let base_mean = stats::mean(&base.inference);
+        let speedups: Vec<f64> = methods[1..]
+            .iter()
+            .map(|m| base_mean / stats::mean(&m.inference))
+            .collect();
+        if !speedups.is_empty() {
+            let best_speedup = speedups.iter().cloned().fold(0.0, f64::max);
+            println!(
+                "\nspeedup vs edge-only: mean over SC-MII variants {:.2}x, best {:.2}x",
+                stats::mean(&speedups),
+                best_speedup
+            );
+        }
+        if let (Some(bd), Some(sd)) =
+            (base.edge_per_device.last(), best.edge_per_device.last())
+        {
+            let reduction = 1.0 - stats::mean(sd) / stats::mean(bd);
+            println!(
+                "edge-device time reduction on device {} (most loaded): {:.1}%",
+                base.edge_per_device.len(),
+                reduction * 100.0
+            );
+        }
+    }
+}
+
+/// `scmii exec-time` CLI entry.
+pub fn cmd_exec_time(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts",
+        "data",
+        "frames",
+        "edge-factor",
+        "server-factor",
+        "bandwidth-gbps",
+    ])?;
+    let paths = Paths::new(
+        &args.str_or("artifacts", "artifacts"),
+        &args.str_or("data", "data"),
+    );
+    let n = args.usize_or("frames", 16)?;
+    let mut cfg = LatencyConfig::default();
+    cfg.edge_factor = args.f64_or("edge-factor", cfg.edge_factor)?;
+    cfg.server_factor = args.f64_or("server-factor", cfg.server_factor)?;
+    cfg.bandwidth_bps = args.f64_or("bandwidth-gbps", cfg.bandwidth_bps / 1e9)? * 1e9;
+    let methods = run_exec_time(&paths, n, &cfg)?;
+    print_exec_time(&methods);
+    Ok(())
+}

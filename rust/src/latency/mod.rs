@@ -1,0 +1,124 @@
+//! Testbed latency model (Fig 5 reproduction).
+//!
+//! We measure compute on this machine's CPU PJRT backend and scale by
+//! device factors to model the paper's heterogeneous testbed (Jetson
+//! Orin Nano edge devices + RTX 4090 server + 1 Gbps LAN). Because Fig 5
+//! compares *arrangements of the same compute graph*, ratios between
+//! arrangements survive the scaling (DESIGN.md §4). A real-wall-clock
+//! mode (TCP + bandwidth shaping) cross-checks the ordering.
+
+pub mod harness;
+
+use crate::config::LatencyConfig;
+use crate::coordinator::pipeline::FrameTiming;
+
+/// Modeled execution-time breakdown for one SC-MII frame.
+#[derive(Clone, Debug)]
+pub struct ScMiiBreakdown {
+    /// Per device: head compute on the edge device (scaled).
+    pub edge_compute: Vec<f64>,
+    /// Per device: intermediate-output transmission time.
+    pub tx: Vec<f64>,
+    /// Per device: "edge device execution time" in the paper's sense —
+    /// input to completion of intermediate-output transmission.
+    pub edge_total: Vec<f64>,
+    /// Server-side tail compute (scaled) + post-processing.
+    pub server: f64,
+    /// End-to-end inference time: devices run in parallel, the server
+    /// starts when the slowest device's features arrive.
+    pub inference: f64,
+}
+
+/// The latency model.
+#[derive(Clone, Debug, Default)]
+pub struct TestbedModel {
+    pub cfg: LatencyConfig,
+}
+
+impl TestbedModel {
+    pub fn new(cfg: LatencyConfig) -> TestbedModel {
+        TestbedModel { cfg }
+    }
+
+    /// Model SC-MII from measured in-process timings.
+    pub fn scmii(&self, t: &FrameTiming) -> ScMiiBreakdown {
+        let edge_compute: Vec<f64> =
+            t.head_secs.iter().map(|s| s * self.cfg.edge_factor).collect();
+        let tx: Vec<f64> =
+            t.payload_bytes.iter().map(|&b| self.cfg.tx_time(b)).collect();
+        let edge_total: Vec<f64> =
+            edge_compute.iter().zip(&tx).map(|(c, x)| c + x).collect();
+        let server = (t.tail_secs + t.post_secs) * self.cfg.server_factor;
+        let slowest_device =
+            edge_total.iter().cloned().fold(0.0, f64::max);
+        ScMiiBreakdown {
+            edge_compute,
+            tx,
+            edge_total,
+            server,
+            inference: slowest_device + server,
+        }
+    }
+
+    /// Model the edge-only baseline: the full model (input point-cloud
+    /// integration included) runs on a single Jetson-class device; raw
+    /// points from the *other* sensors must first cross the LAN.
+    pub fn edge_only(&self, full_model_secs: f64, remote_raw_bytes: usize) -> f64 {
+        self.cfg.tx_time(remote_raw_bytes) + full_model_secs * self.cfg.edge_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing() -> FrameTiming {
+        FrameTiming {
+            head_secs: vec![0.010, 0.012],
+            payload_bytes: vec![1 << 20, 1 << 20],
+            tail_secs: 0.040,
+            post_secs: 0.002,
+        }
+    }
+
+    #[test]
+    fn breakdown_composes() {
+        let m = TestbedModel::new(LatencyConfig {
+            edge_factor: 6.0,
+            server_factor: 0.25,
+            bandwidth_bps: 1e9,
+            base_rtt: 0.5e-3,
+        });
+        let b = m.scmii(&timing());
+        // device 0: 60 ms compute + ~8.9 ms tx
+        assert!((b.edge_compute[0] - 0.060).abs() < 1e-9);
+        assert!((b.tx[0] - (0.5e-3 + 8.0 * (1 << 20) as f64 / 1e9)).abs() < 1e-9);
+        assert!((b.edge_total[0] - (b.edge_compute[0] + b.tx[0])).abs() < 1e-12);
+        // inference gated by the slower device (device 1)
+        assert!(b.edge_total[1] > b.edge_total[0]);
+        assert!((b.inference - (b.edge_total[1] + b.server)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scmii_beats_edge_only_when_tail_dominates() {
+        let m = TestbedModel::default();
+        let b = m.scmii(&timing());
+        // full model ≈ head + tail on one device
+        let edge_only = m.edge_only(0.012 + 0.042, 4096 * 16);
+        assert!(
+            b.inference < edge_only,
+            "scmii {} vs edge-only {}",
+            b.inference,
+            edge_only
+        );
+    }
+
+    #[test]
+    fn zero_bandwidth_penalizes_scmii() {
+        let mut cfg = LatencyConfig::default();
+        cfg.bandwidth_bps = 1e6; // 1 Mbps: 1 MiB payload takes ~8.4 s
+        let m = TestbedModel::new(cfg);
+        let b = m.scmii(&timing());
+        assert!(b.inference > 8.0, "{}", b.inference);
+    }
+}

@@ -1,0 +1,38 @@
+//! # SC-MII
+//!
+//! Reproduction of *SC-MII: Infrastructure LiDAR-based 3D Object Detection
+//! on Edge Devices for Split Computing with Multiple Intermediate Outputs
+//! Integration* as a three-layer rust + JAX + Pallas serving stack.
+//!
+//! Layer 3 (this crate) is the runtime coordinator: edge-device head
+//! workers, the edge-server frame synchronizer + integration + tail
+//! execution, and every substrate the paper depends on (LiDAR simulator,
+//! NDT scan matching, evaluation, networking). Layers 2/1 (JAX model and
+//! Pallas kernels, under `python/`) run only at build time; the artifacts
+//! they emit (`artifacts/*.hlo.txt`) are loaded here through PJRT.
+//!
+//! Entry points:
+//! - [`coordinator::pipeline::ScMiiPipeline`] — in-process split-computing
+//!   pipeline (deterministic; used by evaluation and benchmarks).
+//! - [`coordinator::server`] / [`coordinator::device`] — the distributed
+//!   TCP deployment (edge server + one worker per LiDAR).
+//! - [`sim::dataset`] — synthetic intersection dataset generator standing
+//!   in for V2X-Real.
+//! - [`ndt`] — setup-phase extrinsic calibration via NDT scan matching.
+
+pub mod align;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod geom;
+pub mod integrate;
+pub mod latency;
+pub mod metrics;
+pub mod model;
+pub mod ndt;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod utils;
+pub mod voxel;

@@ -1,0 +1,199 @@
+//! `scmii` — leader CLI for the SC-MII reproduction.
+//!
+//! Subcommands cover the paper's full lifecycle: dataset generation
+//! (V2X-Real substitute), setup-phase NDT calibration, the distributed
+//! TCP deployment (server + device workers), and the Table-III / Fig-5
+//! evaluation harnesses.
+
+use anyhow::{bail, Result};
+use scmii::cli::{usage, Args};
+use scmii::config::GridConfig;
+use scmii::utils::logging;
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("datagen", "generate the synthetic two-LiDAR intersection dataset"),
+    ("setup", "setup phase: NDT calibration -> artifacts/calib.json"),
+    ("serve", "run the edge server (tail model) on a TCP port"),
+    ("device", "run one edge-device worker (head model) against a server"),
+    ("infer", "run the in-process pipeline on dataset frames"),
+    ("eval-accuracy", "reproduce Table III (mAP per integration method)"),
+    ("exec-time", "reproduce Fig 5 (execution-time comparison)"),
+    ("version", "print version info"),
+];
+
+fn main() {
+    logging::init();
+    let mut argv = std::env::args().skip(1);
+    let Some(cmd) = argv.next() else {
+        eprint!("{}", usage("scmii", SUBCOMMANDS));
+        std::process::exit(2);
+    };
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "datagen" => cmd_datagen(&args),
+        "setup" => cmd_setup(&args),
+        "serve" => scmii::coordinator::server::cmd_serve(&args),
+        "device" => scmii::coordinator::device::cmd_device(&args),
+        "infer" => scmii::coordinator::pipeline::cmd_infer(&args),
+        "eval-accuracy" => scmii::eval::harness::cmd_eval_accuracy(&args),
+        "exec-time" => scmii::latency::harness::cmd_exec_time(&args),
+        "run-hlo" => cmd_run_hlo(&args),
+        "version" => {
+            println!("scmii {} (SC-MII reproduction)", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "--help" | "help" => {
+            print!("{}", usage("scmii", SUBCOMMANDS));
+            Ok(())
+        }
+        other => {
+            eprint!("{}", usage("scmii", SUBCOMMANDS));
+            Err(anyhow::anyhow!("unknown command {other:?}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "out",
+        "seed",
+        "train-frames",
+        "val-frames",
+        "cars",
+        "peds",
+        "max-points",
+    ])?;
+    let out = args.str_or("out", "data");
+    let mut cfg = scmii::sim::SimConfig::default();
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.train_frames = args.usize_or("train-frames", cfg.train_frames)?;
+    cfg.val_frames = args.usize_or("val-frames", cfg.val_frames)?;
+    cfg.n_cars = args.usize_or("cars", cfg.n_cars)?;
+    cfg.n_peds = args.usize_or("peds", cfg.n_peds)?;
+    cfg.max_points = args.usize_or("max-points", cfg.max_points)?;
+    let grid = GridConfig::default();
+    scmii::sim::generate_dataset(&cfg, &grid, std::path::Path::new(&out))
+}
+
+/// Debug utility: execute any artifact on npy inputs, dump npy outputs.
+/// Used to cross-check individual lowered ops against the python path.
+fn cmd_run_hlo(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "name", "inputs", "out"])?;
+    let paths = scmii::config::Paths::new(&args.str_or("artifacts", "artifacts"), "data");
+    let name = args.str_req("name")?;
+    let out_dir = args.str_or("out", "/tmp/scmii_hlo_out");
+    let mut engine = scmii::runtime::Engine::cpu()?;
+    engine.load(&paths, &name)?;
+    let mut inputs = Vec::new();
+    if let Some(spec) = args.str_opt("inputs") {
+        for p in spec.split(',') {
+            let arr = scmii::utils::npy::read(std::path::Path::new(p))?;
+            inputs.push(scmii::runtime::HostTensor::new(arr.shape.clone(), arr.as_f32()?)?);
+        }
+    }
+    let outputs = engine.exec(&name, &inputs)?;
+    std::fs::create_dir_all(&out_dir)?;
+    for (i, t) in outputs.iter().enumerate() {
+        let path = std::path::Path::new(&out_dir).join(format!("out{i}.npy"));
+        scmii::utils::npy::write(
+            &path,
+            &scmii::utils::npy::NpyArray::from_f32(&t.shape, &t.data),
+        )?;
+        println!("wrote {} shape {:?}", path.display(), t.shape);
+    }
+    Ok(())
+}
+
+fn cmd_setup(args: &Args) -> Result<()> {
+    args.check_known(&["data", "out", "max-iters"])?;
+    let data = args.str_or("data", "data");
+    let out = args.str_or("out", "artifacts/calib.json");
+    let data = std::path::Path::new(&data);
+
+    // Load calibration scans written by datagen.
+    let mut clouds = Vec::new();
+    let mut dev = 0;
+    loop {
+        let p = data.join("calib").join(format!("calib_dev{dev}.npy"));
+        if !p.exists() {
+            break;
+        }
+        let arr = scmii::utils::npy::read(&p)?;
+        clouds.push(scmii::voxel::tensor_to_points(&arr.as_f32()?));
+        dev += 1;
+    }
+    if clouds.len() < 2 {
+        bail!("need at least two calibration scans under {}/calib", data.display());
+    }
+
+    let mut params = scmii::ndt::NdtParams::default();
+    params.max_iters = args.usize_or("max-iters", params.max_iters)?;
+
+    use scmii::utils::json::Json;
+    let mut transforms = vec![scmii::geom::Pose::IDENTITY];
+    let mut diagnostics = Vec::new();
+    for (i, cloud) in clouds.iter().enumerate().skip(1) {
+        log::info!("NDT: registering device {i} onto device 0 ...");
+        let t0 = std::time::Instant::now();
+        let result = scmii::ndt::calibrate(&clouds[0], cloud, &params);
+        let secs = t0.elapsed().as_secs_f64();
+        log::info!(
+            "NDT device {i}: score {:.3}, {} iters, {:.2}s",
+            result.score,
+            result.iterations,
+            secs
+        );
+        let mut d = Json::obj();
+        d.set("device", Json::Num(i as f64))
+            .set("score", Json::Num(result.score))
+            .set("iterations", Json::Num(result.iterations as f64))
+            .set("seconds", Json::Num(secs));
+        // Validate against the simulator's true rig if meta.json is present.
+        if let Ok(meta) = scmii::utils::json::read_file(&data.join("meta.json")) {
+            if let Ok(sensors) = meta.req("sensors").map(|s| s.as_arr().unwrap_or(&[]).to_vec()) {
+                let pose_of = |j: &Json| -> Result<scmii::geom::Pose> {
+                    let v = j.req("true_pose_world")?.as_f64_vec()?;
+                    anyhow::ensure!(v.len() == 16, "pose must be 4x4");
+                    let mut arr = [0.0; 16];
+                    arr.copy_from_slice(&v);
+                    Ok(scmii::geom::Pose::from_mat4(&arr))
+                };
+                if sensors.len() > i {
+                    if let (Ok(p0), Ok(pi)) = (pose_of(&sensors[0]), pose_of(&sensors[i])) {
+                        let truth = p0.inverse().compose(&pi);
+                        let (ang, trans) = result.pose.error_to(&truth);
+                        log::info!(
+                            "NDT device {i} vs truth: rot {:.4} rad, trans {:.3} m",
+                            ang,
+                            trans
+                        );
+                        d.set("rot_error_rad", Json::Num(ang))
+                            .set("trans_error_m", Json::Num(trans));
+                    }
+                }
+            }
+        }
+        diagnostics.push(d);
+        transforms.push(result.pose);
+    }
+
+    let mut calib = Json::obj();
+    calib.set(
+        "transforms",
+        Json::Arr(transforms.iter().map(|t| Json::from_f64_slice(&t.to_mat4())).collect()),
+    );
+    calib.set("diagnostics", Json::Arr(diagnostics));
+    scmii::utils::json::write_file(std::path::Path::new(&out), &calib)?;
+    log::info!("wrote {}", out);
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Serving metrics: latency histograms, throughput counters, breakdowns.
+
+use crate::utils::stats;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A named collection of latency samples (seconds), thread-safe.
+#[derive(Default)]
+pub struct Metrics {
+    series: Mutex<BTreeMap<String, Vec<f64>>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    start: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { series: Mutex::default(), counters: Mutex::default(), start: Some(Instant::now()) }
+    }
+
+    pub fn record(&self, name: &str, seconds: f64) {
+        self.series.lock().unwrap().entry(name.to_string()).or_default().push(seconds);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot one series.
+    pub fn samples(&self, name: &str) -> Vec<f64> {
+        self.series.lock().unwrap().get(name).cloned().unwrap_or_default()
+    }
+
+    /// Summary over one series: (count, mean, p50, p99, max).
+    pub fn summary(&self, name: &str) -> (usize, f64, f64, f64, f64) {
+        let xs = self.samples(name);
+        let (_, max) = stats::min_max(&xs);
+        (
+            xs.len(),
+            stats::mean(&xs),
+            stats::percentile(&xs, 50.0),
+            stats::percentile(&xs, 99.0),
+            if xs.is_empty() { 0.0 } else { max },
+        )
+    }
+
+    /// Events/second for a counter since construction.
+    pub fn rate(&self, name: &str) -> f64 {
+        let elapsed = self.start.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            self.counter(name) as f64 / elapsed
+        }
+    }
+
+    /// Human-readable report of every series and counter.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let series = self.series.lock().unwrap();
+        for (name, xs) in series.iter() {
+            out.push_str(&format!(
+                "{name:<32} n={:<6} mean={:>9.3}ms p50={:>9.3}ms p99={:>9.3}ms\n",
+                xs.len(),
+                stats::mean(xs) * 1e3,
+                stats::percentile(xs, 50.0) * 1e3,
+                stats::percentile(xs, 99.0) * 1e3,
+            ));
+        }
+        let counters = self.counters.lock().unwrap();
+        for (name, v) in counters.iter() {
+            out.push_str(&format!("{name:<32} count={v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record("lat", i as f64 * 1e-3);
+        }
+        let (n, mean, p50, p99, max) = m.summary("lat");
+        assert_eq!(n, 100);
+        assert!((mean - 0.0505).abs() < 1e-9);
+        assert!((p50 - 0.0505).abs() < 1e-3);
+        assert!(p99 > 0.098 && p99 <= 0.1);
+        assert!((max - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("frames", 3);
+        m.incr("frames", 4);
+        assert_eq!(m.counter("frames"), 7);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn time_records_a_sample() {
+        let m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.samples("op").len(), 1);
+    }
+
+    #[test]
+    fn report_contains_series() {
+        let m = Metrics::new();
+        m.record("x", 0.001);
+        m.incr("c", 1);
+        let r = m.report();
+        assert!(r.contains("x") && r.contains("c"));
+    }
+}

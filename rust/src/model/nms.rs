@@ -1,0 +1,79 @@
+//! Rotated (BEV) non-maximum suppression.
+
+use super::Detection;
+use crate::geom::bev_iou;
+
+/// Greedy NMS over score-sorted detections using rotated BEV IoU.
+/// Input need not be sorted; output is sorted by descending score.
+pub fn rotated_nms(mut dets: Vec<Detection>, iou_threshold: f64, max_keep: usize) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut kept: Vec<Detection> = Vec::new();
+    for d in dets {
+        if kept.len() >= max_keep {
+            break;
+        }
+        let suppressed = kept.iter().any(|k| bev_iou(&k.bbox, &d.bbox) > iou_threshold);
+        if !suppressed {
+            kept.push(d);
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::{Box3, Vec3};
+
+    fn det(x: f64, y: f64, yaw: f64, score: f32) -> Detection {
+        Detection {
+            bbox: Box3::new(Vec3::new(x, y, 0.0), Vec3::new(4.5, 1.9, 1.6), yaw),
+            score,
+            class_id: 0,
+        }
+    }
+
+    #[test]
+    fn keeps_highest_of_overlapping_pair() {
+        let dets = vec![det(0.0, 0.0, 0.0, 0.6), det(0.5, 0.0, 0.0, 0.9)];
+        let kept = rotated_nms(dets, 0.3, 10);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.9);
+    }
+
+    #[test]
+    fn keeps_disjoint_detections() {
+        let dets = vec![det(0.0, 0.0, 0.0, 0.9), det(20.0, 0.0, 0.0, 0.8), det(0.0, 20.0, 1.0, 0.7)];
+        let kept = rotated_nms(dets, 0.3, 10);
+        assert_eq!(kept.len(), 3);
+    }
+
+    #[test]
+    fn respects_max_keep() {
+        let dets: Vec<Detection> =
+            (0..20).map(|i| det(i as f64 * 10.0, 0.0, 0.0, 1.0 - i as f32 * 0.01)).collect();
+        let kept = rotated_nms(dets, 0.3, 5);
+        assert_eq!(kept.len(), 5);
+        assert!(kept[0].score >= kept[4].score);
+    }
+
+    #[test]
+    fn rotated_overlap_detected() {
+        // same center, crossed at 90°: inter = 1.9² = 3.61,
+        // union = 2·8.55 − 3.61 = 13.49 → IoU ≈ 0.268
+        let dets = vec![det(0.0, 0.0, 0.0, 0.9), det(0.0, 0.0, std::f64::consts::FRAC_PI_2, 0.8)];
+        let kept = rotated_nms(dets, 0.25, 10);
+        assert_eq!(kept.len(), 1);
+        let kept2 = rotated_nms(
+            vec![det(0.0, 0.0, 0.0, 0.9), det(0.0, 0.0, std::f64::consts::FRAC_PI_2, 0.8)],
+            0.3,
+            10,
+        );
+        assert_eq!(kept2.len(), 2, "looser threshold keeps both");
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(rotated_nms(Vec::new(), 0.3, 10).is_empty());
+    }
+}

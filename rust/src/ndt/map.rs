@@ -1,0 +1,178 @@
+//! NDT voxel map: per-cell Gaussian statistics of the reference cloud.
+
+use crate::geom::{Mat3, Vec3};
+use crate::voxel::Point;
+use std::collections::HashMap;
+
+/// Gaussian model of one NDT cell.
+#[derive(Clone, Debug)]
+pub struct GaussianCell {
+    pub mean: Vec3,
+    /// Inverse covariance (regularized).
+    pub cov_inv: Mat3,
+    pub n: usize,
+}
+
+/// Sparse voxel map of Gaussians at one resolution.
+pub struct NdtMap {
+    pub cell_size: f64,
+    cells: HashMap<(i32, i32, i32), GaussianCell>,
+}
+
+/// Minimum points for a cell to contribute a Gaussian.
+const MIN_POINTS: usize = 5;
+
+impl NdtMap {
+    /// Build the map from the reference cloud.
+    pub fn build(points: &[Point], cell_size: f64) -> NdtMap {
+        let mut acc: HashMap<(i32, i32, i32), (Vec3, usize)> = HashMap::new();
+        let key = |p: &Point| {
+            (
+                (p.x as f64 / cell_size).floor() as i32,
+                (p.y as f64 / cell_size).floor() as i32,
+                (p.z as f64 / cell_size).floor() as i32,
+            )
+        };
+        for p in points {
+            if p.is_pad() {
+                continue;
+            }
+            let e = acc.entry(key(p)).or_insert((Vec3::ZERO, 0));
+            e.0 += Vec3::new(p.x as f64, p.y as f64, p.z as f64);
+            e.1 += 1;
+        }
+        // Second pass: covariance around the mean.
+        let mut cov_acc: HashMap<(i32, i32, i32), [[f64; 3]; 3]> = HashMap::new();
+        for p in points {
+            if p.is_pad() {
+                continue;
+            }
+            let k = key(p);
+            let Some(&(sum, n)) = acc.get(&k) else { continue };
+            if n < MIN_POINTS {
+                continue;
+            }
+            let mean = sum / n as f64;
+            let d = Vec3::new(p.x as f64, p.y as f64, p.z as f64) - mean;
+            let m = cov_acc.entry(k).or_insert([[0.0; 3]; 3]);
+            let dv = [d.x, d.y, d.z];
+            for i in 0..3 {
+                for j in 0..3 {
+                    m[i][j] += dv[i] * dv[j];
+                }
+            }
+        }
+        let mut cells = HashMap::new();
+        for (k, cov_sum) in cov_acc {
+            let (sum, n) = acc[&k];
+            let mean = sum / n as f64;
+            let mut cov = [[0.0; 3]; 3];
+            for i in 0..3 {
+                for j in 0..3 {
+                    cov[i][j] = cov_sum[i][j] / (n as f64 - 1.0);
+                }
+            }
+            // Regularize: planar cells (walls/ground) have a near-zero
+            // eigenvalue. A fixed tiny epsilon keeps the thin direction so
+            // sharp that a decimetre offset already scores zero, flattening
+            // the optimization basin (this is why classic NDT clamps
+            // eigenvalue ratios). Inflate the diagonal proportionally to
+            // the cell's mean variance instead.
+            let mean_var = (cov[0][0] + cov[1][1] + cov[2][2]) / 3.0;
+            let eps = (0.05 * mean_var).max(1e-3);
+            for (i, row) in cov.iter_mut().enumerate() {
+                row[i] += eps;
+            }
+            let cov_m = Mat3 { m: cov };
+            if cov_m.det().abs() < 1e-12 {
+                continue;
+            }
+            cells.insert(k, GaussianCell { mean, cov_inv: cov_m.inverse(), n });
+        }
+        NdtMap { cell_size, cells }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Gaussian score contribution of a world point: the likelihood under
+    /// the Gaussian of its own cell plus face-adjacent cells (smooths the
+    /// objective across cell boundaries).
+    pub fn point_score(&self, p: Vec3) -> f64 {
+        let kx = (p.x / self.cell_size).floor() as i32;
+        let ky = (p.y / self.cell_size).floor() as i32;
+        let kz = (p.z / self.cell_size).floor() as i32;
+        let mut score = 0.0;
+        const NB: [(i32, i32, i32); 7] =
+            [(0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1)];
+        for (dx, dy, dz) in NB {
+            if let Some(cell) = self.cells.get(&(kx + dx, ky + dy, kz + dz)) {
+                let d = p - cell.mean;
+                let md = d.dot(cell.cov_inv.apply(d));
+                if md < 50.0 {
+                    score += (-0.5 * md).exp();
+                }
+            }
+        }
+        score
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::rng::Pcg64;
+
+    fn plane_cloud(n: usize, seed: u64) -> Vec<Point> {
+        // points on z = 0 plane with small noise
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|_| {
+                Point::new(
+                    rng.range(-10.0, 10.0) as f32,
+                    rng.range(-10.0, 10.0) as f32,
+                    rng.gauss(0.0, 0.02) as f32,
+                    0.5,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builds_cells_for_dense_cloud() {
+        let cloud = plane_cloud(5000, 1);
+        let map = NdtMap::build(&cloud, 2.0);
+        assert!(map.n_cells() >= 80, "{}", map.n_cells());
+    }
+
+    #[test]
+    fn score_peaks_on_surface() {
+        let cloud = plane_cloud(5000, 2);
+        let map = NdtMap::build(&cloud, 2.0);
+        let on = map.point_score(Vec3::new(1.0, 1.0, 0.0));
+        let off = map.point_score(Vec3::new(1.0, 1.0, 1.5));
+        assert!(on > off * 2.0, "on={on} off={off}");
+    }
+
+    #[test]
+    fn sparse_cells_are_skipped() {
+        // 3 points in isolation: below MIN_POINTS, no cell
+        let cloud = vec![
+            Point::new(100.0, 100.0, 0.0, 0.0),
+            Point::new(100.1, 100.0, 0.0, 0.0),
+            Point::new(100.0, 100.1, 0.0, 0.0),
+        ];
+        let map = NdtMap::build(&cloud, 2.0);
+        assert_eq!(map.n_cells(), 0);
+    }
+
+    #[test]
+    fn pads_ignored() {
+        let mut cloud = plane_cloud(1000, 3);
+        let n_before = NdtMap::build(&cloud, 2.0).n_cells();
+        cloud.extend(std::iter::repeat(Point::pad()).take(500));
+        let n_after = NdtMap::build(&cloud, 2.0).n_cells();
+        assert_eq!(n_before, n_after);
+    }
+}

@@ -1,0 +1,16 @@
+//! NDT scan matching (paper §II-C, setup phase §III-B.1).
+//!
+//! Implements the Normal Distributions Transform of Biber & Straßer: the
+//! reference cloud is modelled as per-voxel Gaussians; a source cloud is
+//! registered by maximizing the sum of Gaussian likelihoods of its
+//! transformed points over SE(3). Optimization is multi-resolution
+//! (coarse→fine cell sizes) gradient ascent with backtracking line search
+//! and a yaw-sweep multi-start for global initialization (infrastructure
+//! installs can differ by arbitrary yaw; real deployments seed this from
+//! a survey — the sweep plays that role here).
+
+mod map;
+mod register;
+
+pub use map::{GaussianCell, NdtMap};
+pub use register::{calibrate, register, score_pose, NdtParams, NdtResult};

@@ -1,0 +1,11 @@
+//! Wire protocol between edge devices and the edge server, plus the
+//! 1 Gbps-LAN bandwidth shaper used to emulate the paper's testbed link
+//! on localhost TCP.
+
+mod proto;
+mod quant;
+mod shaper;
+
+pub use proto::{read_msg, write_msg, Msg, WireDetection};
+pub use quant::{dequantize, quantize, QuantTensor};
+pub use shaper::ShapedWriter;

@@ -1,0 +1,357 @@
+//! Length-prefixed binary framing (serde is not in the image).
+//!
+//! Frame layout: `MAGIC(4) | type(1) | payload_len(4, LE) | payload`.
+//! Tensors: `ndim(1) | dims(u32 LE each) | f32 LE data`.
+
+use crate::runtime::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: [u8; 4] = *b"SCMI";
+/// Upper bound on a frame payload (guards against protocol desync).
+const MAX_PAYLOAD: usize = 256 << 20;
+
+/// A detection on the wire (matches `model::Detection`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireDetection {
+    pub bbox: [f32; 7],
+    pub score: f32,
+    pub class_id: u32,
+}
+
+/// Protocol messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Device announces itself after connecting.
+    Hello { device_id: u32 },
+    /// Head-model output for one frame.
+    Features { frame_id: u64, device_id: u32, tensor: HostTensor },
+    /// u8-quantized head output (paper §IV-E compressed intermediate
+    /// outputs — 4× smaller payload).
+    FeaturesQ { frame_id: u64, device_id: u32, tensor: super::QuantTensor },
+    /// Final detections for one frame (server → subscriber).
+    Result { frame_id: u64, detections: Vec<WireDetection>, server_micros: u64 },
+    /// A subscriber asks to receive `Result`s.
+    Subscribe,
+    /// Graceful shutdown.
+    Bye,
+}
+
+impl Msg {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Features { .. } => 2,
+            Msg::Result { .. } => 3,
+            Msg::Subscribe => 4,
+            Msg::Bye => 5,
+            Msg::FeaturesQ { .. } => 6,
+        }
+    }
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
+    buf.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        put_u32(buf, d as u32);
+    }
+    // bulk-copy f32 data as LE bytes
+    buf.reserve(t.data.len() * 4);
+    for &v in &t.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated message");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn tensor(&mut self) -> Result<HostTensor> {
+        let ndim = self.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u32()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        HostTensor::new(shape, data)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in message", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+/// Serialize a message to its payload bytes (without framing).
+pub fn encode_payload(msg: &Msg) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match msg {
+        Msg::Hello { device_id } => put_u32(&mut buf, *device_id),
+        Msg::Features { frame_id, device_id, tensor } => {
+            put_u64(&mut buf, *frame_id);
+            put_u32(&mut buf, *device_id);
+            put_tensor(&mut buf, tensor);
+        }
+        Msg::Result { frame_id, detections, server_micros } => {
+            put_u64(&mut buf, *frame_id);
+            put_u64(&mut buf, *server_micros);
+            put_u32(&mut buf, detections.len() as u32);
+            for d in detections {
+                for v in d.bbox {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                buf.extend_from_slice(&d.score.to_le_bytes());
+                put_u32(&mut buf, d.class_id);
+            }
+        }
+        Msg::FeaturesQ { frame_id, device_id, tensor } => {
+            put_u64(&mut buf, *frame_id);
+            put_u32(&mut buf, *device_id);
+            buf.push(tensor.shape.len() as u8);
+            for &d in &tensor.shape {
+                put_u32(&mut buf, d as u32);
+            }
+            buf.extend_from_slice(&tensor.min.to_le_bytes());
+            buf.extend_from_slice(&tensor.scale.to_le_bytes());
+            buf.extend_from_slice(&tensor.data);
+        }
+        Msg::Subscribe | Msg::Bye => {}
+    }
+    buf
+}
+
+fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let msg = match ty {
+        1 => Msg::Hello { device_id: c.u32()? },
+        2 => {
+            let frame_id = c.u64()?;
+            let device_id = c.u32()?;
+            let tensor = c.tensor()?;
+            Msg::Features { frame_id, device_id, tensor }
+        }
+        3 => {
+            let frame_id = c.u64()?;
+            let server_micros = c.u64()?;
+            let n = c.u32()? as usize;
+            if n > 100_000 {
+                bail!("implausible detection count {n}");
+            }
+            let mut detections = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut bbox = [0.0f32; 7];
+                for b in &mut bbox {
+                    *b = c.f32()?;
+                }
+                let score = c.f32()?;
+                let class_id = c.u32()?;
+                detections.push(WireDetection { bbox, score, class_id });
+            }
+            Msg::Result { frame_id, detections, server_micros }
+        }
+        4 => Msg::Subscribe,
+        5 => Msg::Bye,
+        6 => {
+            let frame_id = c.u64()?;
+            let device_id = c.u32()?;
+            let ndim = c.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u32()? as usize);
+            }
+            let min = c.f32()?;
+            let scale = c.f32()?;
+            let n: usize = shape.iter().product();
+            let data = c.take(n)?.to_vec();
+            Msg::FeaturesQ {
+                frame_id,
+                device_id,
+                tensor: super::QuantTensor { shape, min, scale, data },
+            }
+        }
+        other => bail!("unknown message type {other}"),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Write one framed message.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let payload = encode_payload(msg);
+    w.write_all(&MAGIC)?;
+    w.write_all(&[msg.type_byte()])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message (blocking).
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let mut head = [0u8; 9];
+    r.read_exact(&mut head).context("read frame header")?;
+    if head[0..4] != MAGIC {
+        bail!("bad magic {:?}", &head[0..4]);
+    }
+    let ty = head[4];
+    let len = u32::from_le_bytes(head[5..9].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        bail!("payload too large: {len}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    decode_payload(ty, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let back = read_msg(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_messages() {
+        roundtrip(Msg::Hello { device_id: 3 });
+        roundtrip(Msg::Subscribe);
+        roundtrip(Msg::Bye);
+        roundtrip(Msg::Features {
+            frame_id: 42,
+            device_id: 1,
+            tensor: HostTensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap(),
+        });
+        roundtrip(Msg::FeaturesQ {
+            frame_id: 43,
+            device_id: 0,
+            tensor: crate::net::QuantTensor {
+                shape: vec![2, 2],
+                min: -1.5,
+                scale: 0.01,
+                data: vec![0, 127, 200, 255],
+            },
+        });
+        roundtrip(Msg::Result {
+            frame_id: 7,
+            server_micros: 1234,
+            detections: vec![WireDetection {
+                bbox: [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.5],
+                score: 0.9,
+                class_id: 1,
+            }],
+        });
+    }
+
+    #[test]
+    fn multiple_messages_in_stream() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Hello { device_id: 1 }).unwrap();
+        write_msg(&mut buf, &Msg::Bye).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_msg(&mut r).unwrap(), Msg::Hello { device_id: 1 });
+        assert_eq!(read_msg(&mut r).unwrap(), Msg::Bye);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Bye).unwrap();
+        buf[0] = b'X';
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::Features {
+                frame_id: 1,
+                device_id: 0,
+                tensor: HostTensor::zeros(&[4]),
+            },
+        )
+        .unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_inside_payload() {
+        // craft: Bye with nonzero payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"SCMI");
+        buf.push(5);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0, 0]);
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn feature_payload_size_matches_design() {
+        // The 64x64x8x8 intermediate output should serialize to ~1 MiB.
+        let t = HostTensor::zeros(&[8, 64, 64, 8]);
+        let payload = encode_payload(&Msg::Features { frame_id: 0, device_id: 0, tensor: t });
+        assert!(payload.len() > (1 << 20) && payload.len() < (1 << 20) + 64);
+    }
+
+    #[test]
+    fn quantized_payload_is_4x_smaller() {
+        let t = HostTensor::zeros(&[8, 64, 64, 8]);
+        let full = encode_payload(&Msg::Features {
+            frame_id: 0,
+            device_id: 0,
+            tensor: t.clone(),
+        })
+        .len();
+        let q = crate::net::quantize(&t);
+        let small =
+            encode_payload(&Msg::FeaturesQ { frame_id: 0, device_id: 0, tensor: q }).len();
+        assert!(small * 4 < full + 128, "quant {small} vs full {full}");
+    }
+}

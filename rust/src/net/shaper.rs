@@ -1,0 +1,104 @@
+//! Token-bucket bandwidth shaping for localhost TCP.
+//!
+//! The paper's testbed uses a 1 Gbps wired LAN (Table I); loopback is
+//! orders of magnitude faster, so the distributed demo wraps its sockets
+//! in a [`ShapedWriter`] that paces writes to the configured line rate —
+//! transmission time then matches `bytes·8 / bandwidth` like the real
+//! link.
+
+use std::io::{self, Write};
+use std::time::{Duration, Instant};
+
+/// A writer that caps sustained throughput at `bytes_per_sec`.
+pub struct ShapedWriter<W: Write> {
+    inner: W,
+    bytes_per_sec: f64,
+    /// Time before which we must not send more (accumulated pacing debt).
+    next_free: Instant,
+    /// Max chunk written between sleeps (keeps pacing smooth).
+    chunk: usize,
+}
+
+impl<W: Write> ShapedWriter<W> {
+    pub fn new(inner: W, bits_per_sec: f64) -> ShapedWriter<W> {
+        ShapedWriter {
+            inner,
+            bytes_per_sec: bits_per_sec / 8.0,
+            next_free: Instant::now(),
+            chunk: 64 * 1024,
+        }
+    }
+
+    /// Unshaped writer (infinite bandwidth).
+    pub fn unshaped(inner: W) -> ShapedWriter<W> {
+        ShapedWriter { inner, bytes_per_sec: f64::INFINITY, next_free: Instant::now(), chunk: usize::MAX }
+    }
+
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.inner
+    }
+}
+
+impl<W: Write> Write for ShapedWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.bytes_per_sec.is_infinite() {
+            return self.inner.write(buf);
+        }
+        let n = buf.len().min(self.chunk);
+        let now = Instant::now();
+        if self.next_free > now {
+            std::thread::sleep(self.next_free - now);
+        }
+        let written = self.inner.write(&buf[..n])?;
+        let cost = Duration::from_secs_f64(written as f64 / self.bytes_per_sec);
+        let base = self.next_free.max(Instant::now() - Duration::from_millis(5));
+        self.next_free = base + cost;
+        Ok(written)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shaped_write_takes_expected_time() {
+        // 8 Mbit/s -> 1 MB/s; writing 200 KB should take ~0.2 s
+        let sink: Vec<u8> = Vec::new();
+        let mut w = ShapedWriter::new(sink, 8e6);
+        let data = vec![0u8; 200 * 1024];
+        let t0 = Instant::now();
+        w.write_all(&data).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(secs > 0.12 && secs < 0.5, "took {secs}s");
+        assert_eq!(w.get_mut().len(), data.len());
+    }
+
+    #[test]
+    fn unshaped_is_fast() {
+        let sink: Vec<u8> = Vec::new();
+        let mut w = ShapedWriter::unshaped(sink);
+        let data = vec![0u8; 4 << 20];
+        let t0 = Instant::now();
+        w.write_all(&data).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.5);
+    }
+
+    #[test]
+    fn small_writes_accumulate_debt() {
+        // 1000 writes of 1 KB at 8 Mbit/s = 1 MB total ≈ 1 s... use less:
+        // 100 KB total ≈ 0.1 s
+        let sink: Vec<u8> = Vec::new();
+        let mut w = ShapedWriter::new(sink, 8e6);
+        let t0 = Instant::now();
+        for _ in 0..100 {
+            w.write_all(&[0u8; 1024]).unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(secs > 0.06, "took {secs}s");
+    }
+}

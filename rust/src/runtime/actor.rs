@@ -1,0 +1,122 @@
+//! Actor wrapper: owns an [`Engine`] on a dedicated thread so that
+//! non-`Send` PJRT handles can serve requests from many threads.
+
+use super::{Engine, HostTensor};
+use crate::config::Paths;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::thread;
+
+enum Request {
+    Exec { name: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
+    Load { name: String, reply: mpsc::Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Owns the engine thread; dropping shuts it down.
+pub struct EngineActor {
+    tx: mpsc::Sender<Request>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+/// Cloneable, `Send` handle for submitting work to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl EngineActor {
+    /// Spawn the engine thread and pre-load `names`.
+    pub fn spawn(paths: Paths, names: &[String]) -> Result<EngineActor> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let names = names.to_vec();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = thread::Builder::new().name("pjrt-engine".into()).spawn(move || {
+            let mut engine = match Engine::cpu() {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            for n in &names {
+                if let Err(e) = engine.load(&paths, n) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            }
+            let _ = ready_tx.send(Ok(()));
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Exec { name, inputs, reply } => {
+                        let _ = reply.send(engine.exec(&name, &inputs));
+                    }
+                    Request::Load { name, reply } => {
+                        let _ = reply.send(engine.load(&paths, &name));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        })?;
+        ready_rx.recv().context("engine thread died during startup")??;
+        Ok(EngineActor { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for EngineActor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    pub fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { name: name.to_string(), inputs, reply })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread dropped reply")?
+    }
+
+    pub fn load(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Load { name: name.to_string(), reply })
+            .context("engine thread gone")?;
+        rx.recv().context("engine thread dropped reply")?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn actor_spawns_and_errors_on_missing_artifact() {
+        let paths = Paths::new("/nonexistent", "/nonexistent");
+        let actor = EngineActor::spawn(paths, &[]).unwrap();
+        let h = actor.handle();
+        assert!(h.exec("ghost", vec![]).is_err());
+        assert!(h.load("ghost").is_err());
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_when_preload_missing() {
+        let paths = Paths::new("/nonexistent", "/nonexistent");
+        let r = EngineActor::spawn(paths, &["ghost".to_string()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn handle_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<EngineHandle>();
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) emitted
+//! by `python/compile/aot.py` and executes them on the request path.
+//!
+//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects
+//! serialized protos from jax ≥ 0.5 (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate's handles are not `Send` (raw pointers), so the engine
+//! is either used thread-locally ([`Engine`]) or behind the actor wrapper
+//! ([`EngineActor`]) whose cloneable handle can cross threads; requests
+//! are serialized onto the engine thread, which matches PJRT-CPU's
+//! effectively-serial execution anyway.
+
+mod actor;
+
+pub use actor::{EngineActor, EngineHandle};
+
+use crate::config::Paths;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// A host-side tensor (f32, row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "tensor shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4 + self.shape.len() * 8 + 16
+    }
+}
+
+/// Compiled-executable registry over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine on the CPU PJRT backend.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by name (`artifacts/<name>.hlo.txt`).
+    pub fn load(&mut self, paths: &Paths, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = paths.hlo(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("load HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+            .with_context(|| format!("compile {}", name))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load several artifacts.
+    pub fn load_all(&mut self, paths: &Paths, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(paths, n)?;
+        }
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        self.executables.keys().cloned().collect()
+    }
+
+    /// Execute a loaded artifact. All jax functions are lowered with
+    /// `return_tuple=True`, so the single output is a tuple which we
+    /// decompose into one [`HostTensor`] per element.
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data =
+                    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                HostTensor::new(dims, data)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_validates_shape() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let z = HostTensor::zeros(&[4, 4]);
+        assert_eq!(z.len(), 16);
+    }
+
+    #[test]
+    fn engine_starts_on_cpu() {
+        let engine = Engine::cpu().unwrap();
+        assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+        assert!(!engine.is_loaded("nope"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let mut engine = Engine::cpu().unwrap();
+        let paths = Paths::new("/nonexistent", "/nonexistent");
+        assert!(engine.load(&paths, "ghost").is_err());
+        assert!(engine.exec("ghost", &[]).is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Spinning-LiDAR sensor model with occlusion raycasting.
+//!
+//! Emulates the two Ouster sensors the paper deploys (Table II):
+//! OS1-64 (64 beams) on device 1 and OS1-128 (128 beams) on device 2,
+//! both 10 Hz, vertical FoV ±22.5°. Rays are cast against the scene's
+//! occluder boxes and the ground plane; the nearest hit wins (that *is*
+//! occlusion). Gaussian range noise and per-ray dropout model real
+//! returns. Output points are expressed in the sensor's local frame.
+
+use super::scene::Scene;
+use crate::geom::ray::{ray_box, ray_ground, Ray};
+use crate::geom::{Pose, Vec3};
+use crate::utils::rng::Pcg64;
+use crate::voxel::Point;
+
+/// Static description of a sensor model.
+#[derive(Clone, Debug)]
+pub struct LidarSpec {
+    pub name: &'static str,
+    pub beams: usize,
+    /// Azimuth samples per revolution (decimated from the real 1024 to
+    /// keep datagen fast; density ratios between sensors are preserved).
+    pub azimuth_steps: usize,
+    /// Vertical field of view (radians, down/up from horizontal).
+    pub fov_down: f64,
+    pub fov_up: f64,
+    pub max_range: f64,
+    /// 1-σ range noise, metres.
+    pub range_noise: f64,
+    /// Probability a valid return is dropped.
+    pub dropout: f64,
+}
+
+impl LidarSpec {
+    /// Ouster OS1-64 emulation.
+    pub fn os1_64() -> LidarSpec {
+        LidarSpec {
+            name: "OS1-64",
+            beams: 64,
+            azimuth_steps: 512,
+            fov_down: -22.5f64.to_radians(),
+            fov_up: 22.5f64.to_radians(),
+            max_range: 90.0,
+            range_noise: 0.025,
+            dropout: 0.05,
+        }
+    }
+
+    /// Ouster OS1-128 emulation (twice the beams of the OS1-64 — device 2
+    /// processes roughly twice the points, as in the paper §IV-A).
+    pub fn os1_128() -> LidarSpec {
+        LidarSpec {
+            name: "OS1-128",
+            beams: 128,
+            azimuth_steps: 512,
+            fov_down: -22.5f64.to_radians(),
+            fov_up: 22.5f64.to_radians(),
+            max_range: 90.0,
+            range_noise: 0.025,
+            dropout: 0.05,
+        }
+    }
+}
+
+/// A sensor instance: spec + mounting pose (sensor → world).
+#[derive(Clone, Debug)]
+pub struct LidarModel {
+    pub spec: LidarSpec,
+    pub pose: Pose,
+}
+
+impl LidarModel {
+    pub fn new(spec: LidarSpec, pose: Pose) -> LidarModel {
+        LidarModel { spec, pose }
+    }
+
+    /// Capture one scan of `scene`. Returns points in the sensor's local
+    /// frame. `rng` drives noise/dropout (fork it per frame for
+    /// determinism).
+    pub fn scan(&self, scene: &Scene, rng: &mut Pcg64) -> Vec<Point> {
+        let occluders = scene.occluders();
+        let inv = self.pose.inverse();
+        let origin = self.pose.trans;
+        let mut out = Vec::with_capacity(self.spec.beams * self.spec.azimuth_steps / 4);
+
+        for b in 0..self.spec.beams {
+            let frac = if self.spec.beams == 1 { 0.5 } else { b as f64 / (self.spec.beams - 1) as f64 };
+            let elev = self.spec.fov_down + frac * (self.spec.fov_up - self.spec.fov_down);
+            let (sin_e, cos_e) = elev.sin_cos();
+            for a in 0..self.spec.azimuth_steps {
+                let az = a as f64 / self.spec.azimuth_steps as f64 * std::f64::consts::TAU;
+                let (sin_a, cos_a) = az.sin_cos();
+                // Direction in sensor frame, rotated to world.
+                let dir_local = Vec3::new(cos_e * cos_a, cos_e * sin_a, sin_e);
+                let dir = self.pose.apply_dir(dir_local);
+                let ray = Ray { origin, dir };
+
+                // Nearest hit among boxes and ground.
+                let mut best_t = f64::INFINITY;
+                let mut best_refl = 0.0f32;
+                for (bbox, refl) in &occluders {
+                    if let Some(t) = ray_box(&ray, bbox) {
+                        if t < best_t {
+                            best_t = t;
+                            best_refl = *refl;
+                        }
+                    }
+                }
+                if let Some(t) = ray_ground(&ray, 0.0) {
+                    if t < best_t {
+                        best_t = t;
+                        best_refl = 0.15; // asphalt
+                    }
+                }
+                if !best_t.is_finite() || best_t > self.spec.max_range {
+                    continue;
+                }
+                if rng.chance(self.spec.dropout) {
+                    continue;
+                }
+                let t_noisy = best_t + rng.gauss(0.0, self.spec.range_noise);
+                let world_pt = ray.at(t_noisy);
+                let local = inv.apply(world_pt);
+                // Intensity: reflectivity attenuated by range (1/r² folded
+                // into a soft falloff, clamped).
+                let atten = (1.0 - (best_t / self.spec.max_range)).clamp(0.05, 1.0) as f32;
+                out.push(Point::new(
+                    local.x as f32,
+                    local.y as f32,
+                    local.z as f32,
+                    (best_refl * atten).clamp(0.0, 1.0),
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Mat3;
+
+    fn test_sensor(beams: usize) -> LidarModel {
+        let spec = LidarSpec {
+            name: "test",
+            beams,
+            azimuth_steps: 128,
+            fov_down: -22.5f64.to_radians(),
+            fov_up: 22.5f64.to_radians(),
+            max_range: 90.0,
+            range_noise: 0.0,
+            dropout: 0.0,
+        };
+        let pose =
+            Pose::new(Mat3::rot_z(0.0), Vec3::new(-7.5, -7.5, 4.5));
+        LidarModel::new(spec, pose)
+    }
+
+    #[test]
+    fn scan_produces_points_in_local_frame() {
+        let scene = Scene::new(1, 6, 3);
+        let lidar = test_sensor(16);
+        let mut rng = Pcg64::new(9);
+        let pts = lidar.scan(&scene, &mut rng);
+        assert!(!pts.is_empty());
+        // Ground hits: in local frame the sensor is at origin, ground at
+        // z ≈ -4.5.
+        let ground_pts = pts.iter().filter(|p| (p.z + 4.5).abs() < 0.2).count();
+        assert!(ground_pts > pts.len() / 8, "{} of {}", ground_pts, pts.len());
+    }
+
+    #[test]
+    fn more_beams_more_points() {
+        let scene = Scene::new(2, 6, 3);
+        let small = test_sensor(16);
+        let big = test_sensor(32);
+        let mut r1 = Pcg64::new(1);
+        let mut r2 = Pcg64::new(1);
+        let n_small = small.scan(&scene, &mut r1).len();
+        let n_big = big.scan(&scene, &mut r2).len();
+        let ratio = n_big as f64 / n_small as f64;
+        assert!(ratio > 1.6 && ratio < 2.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn occlusion_hides_object_behind_building() {
+        // An object directly behind the (16,16) building as seen from the
+        // sensor pole should receive no points.
+        let mut scene = Scene::new(3, 0, 0);
+        scene.objects.push(super::super::scene::SceneObject {
+            class: super::super::scene::ObjClass::Car,
+            bbox: crate::geom::Box3::new(Vec3::new(26.0, 26.0, 0.8), Vec3::new(4.5, 1.9, 1.6), 0.0),
+            speed: 0.0,
+            reflectivity: 0.9,
+        });
+        let lidar = test_sensor(64);
+        let mut rng = Pcg64::new(5);
+        let pts = lidar.scan(&scene, &mut rng);
+        // Count points near the hidden car (local frame: car at world
+        // (26,26) minus sensor (-7.5,-7.5,4.5) = (33.5,33.5,-3.7)).
+        let near_car = pts
+            .iter()
+            .filter(|p| (p.x - 33.5).abs() < 3.0 && (p.y - 33.5).abs() < 3.0 && p.z > -4.0)
+            .count();
+        assert_eq!(near_car, 0, "car behind building must be occluded");
+    }
+
+    #[test]
+    fn visible_object_gets_points() {
+        let mut scene = Scene::new(4, 0, 0);
+        // Car in the open intersection, visible from the pole.
+        scene.objects.push(super::super::scene::SceneObject {
+            class: super::super::scene::ObjClass::Car,
+            bbox: crate::geom::Box3::new(Vec3::new(0.0, 0.0, 0.8), Vec3::new(4.5, 1.9, 1.6), 0.3),
+            speed: 0.0,
+            reflectivity: 0.9,
+        });
+        let lidar = test_sensor(64);
+        let mut rng = Pcg64::new(6);
+        let pts = lidar.scan(&scene, &mut rng);
+        let world_box = &scene.objects[0].bbox;
+        let on_car = pts
+            .iter()
+            .filter(|p| {
+                let w = lidar.pose.apply(Vec3::new(p.x as f64, p.y as f64, p.z as f64));
+                world_box.contains(w + Vec3::new(0.0, 0.0, 0.0))
+            })
+            .count();
+        assert!(on_car > 10, "visible car got {} points", on_car);
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let scene = Scene::new(8, 4, 2);
+        let lidar = test_sensor(16);
+        let a = lidar.scan(&scene, &mut Pcg64::new(3));
+        let b = lidar.scan(&scene, &mut Pcg64::new(3));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic intersection + infrastructure-LiDAR simulator.
+//!
+//! Stands in for the V2X-Real dataset (DESIGN.md §4): two fixed LiDARs —
+//! an emulated Ouster OS1-64 and OS1-128 — observe a four-way
+//! intersection with moving cars and pedestrians, static corner buildings
+//! and ground. Each sensor reports points in its **own local frame**; the
+//! rigid transform between frames is exactly what the setup phase (NDT)
+//! must recover.
+//!
+//! The properties the paper's evaluation depends on are reproduced:
+//! overlapping fields of view with disjoint occlusion shadows, roughly 2×
+//! the point count on device 2, and a common frame fixed to sensor 1.
+
+pub mod dataset;
+pub mod lidar;
+pub mod scene;
+
+pub use dataset::{generate_dataset, SimConfig};
+pub use lidar::{LidarModel, LidarSpec};
+pub use scene::{ObjClass, Scene, SceneObject};

@@ -1,0 +1,334 @@
+//! Intersection scene: static structure + dynamic traffic.
+//!
+//! World frame: ground plane z = 0, roads along the x and y axes crossing
+//! at the origin. Cars follow straight lanes through the intersection;
+//! pedestrians cross on crosswalks. Four corner buildings produce the
+//! occlusion that motivates multi-LiDAR fusion.
+
+use crate::geom::{Box3, Vec3};
+use crate::utils::rng::Pcg64;
+
+/// Object category (matches `classes` in model_meta.json).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjClass {
+    Car = 0,
+    Pedestrian = 1,
+}
+
+impl ObjClass {
+    pub fn id(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_id(id: usize) -> Option<ObjClass> {
+        match id {
+            0 => Some(ObjClass::Car),
+            1 => Some(ObjClass::Pedestrian),
+            _ => None,
+        }
+    }
+}
+
+/// A dynamic object: box + constant velocity along its heading.
+#[derive(Clone, Debug)]
+pub struct SceneObject {
+    pub class: ObjClass,
+    pub bbox: Box3,
+    /// Speed along the heading (m/s).
+    pub speed: f64,
+    /// Reflectivity in [0, 1] (feeds the intensity channel).
+    pub reflectivity: f32,
+}
+
+impl SceneObject {
+    pub fn step(&mut self, dt: f64) {
+        let dir = Vec3::new(self.bbox.yaw.cos(), self.bbox.yaw.sin(), 0.0);
+        self.bbox.center += dir * (self.speed * dt);
+    }
+}
+
+/// Static obstacle (building facade / parked trailer).
+#[derive(Clone, Debug)]
+pub struct StaticObstacle {
+    pub bbox: Box3,
+    pub reflectivity: f32,
+}
+
+/// Scene state at one instant.
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub objects: Vec<SceneObject>,
+    pub statics: Vec<StaticObstacle>,
+    /// Half-extent of the simulated world (objects beyond this despawn).
+    pub world_half: f64,
+    rng: Pcg64,
+    /// Target number of live cars / pedestrians.
+    target_cars: usize,
+    target_peds: usize,
+}
+
+/// Lane offsets from the road centerline (two lanes per direction).
+const LANE_OFFSETS: [f64; 2] = [2.0, -2.0];
+/// Road half-width (keeps pedestrians off the roadway except crosswalks).
+const ROAD_HALF: f64 = 5.0;
+
+impl Scene {
+    /// Build the static intersection and spawn initial traffic.
+    pub fn new(seed: u64, target_cars: usize, target_peds: usize) -> Scene {
+        let mut statics = Vec::new();
+        // Corner structures, deliberately asymmetric (like any real
+        // intersection): two office buildings, a low kiosk, and a parking
+        // lot with two parked cars on the fourth corner. Asymmetry matters
+        // twice over — it creates different occlusion shadows per sensor
+        // (the paper's blind-spot story) and it breaks the 180° rotational
+        // near-symmetry that would otherwise make NDT's yaw estimate
+        // ambiguous.
+        let corners: [(f64, f64, f64, f64, f32); 3] = [
+            // (cx, cy, half_footprint, height, reflectivity)
+            (16.0, 16.0, 7.0, 9.0, 0.35),  // NE office block
+            (-17.0, 15.0, 6.0, 7.0, 0.4),  // NW office block
+            (17.0, -14.0, 2.5, 3.2, 0.45), // SE kiosk
+        ];
+        for (cx, cy, half, height, refl) in corners {
+            statics.push(StaticObstacle {
+                bbox: Box3::new(
+                    Vec3::new(cx, cy, height / 2.0),
+                    Vec3::new(half * 2.0, half * 2.0, height),
+                    0.0,
+                ),
+                reflectivity: refl,
+            });
+        }
+        // SW parking lot: two parked cars.
+        statics.push(StaticObstacle {
+            bbox: Box3::new(Vec3::new(-13.0, -11.0, 0.75), Vec3::new(4.6, 1.9, 1.5), 0.3),
+            reflectivity: 0.6,
+        });
+        statics.push(StaticObstacle {
+            bbox: Box3::new(Vec3::new(-17.0, -13.0, 0.7), Vec3::new(4.4, 1.8, 1.4), 1.2),
+            reflectivity: 0.55,
+        });
+        // A parked box-truck near one curb: occludes part of one street for
+        // sensor 1 but not sensor 2 — the paper's blind-spot scenario.
+        statics.push(StaticObstacle {
+            bbox: Box3::new(Vec3::new(-8.5, 6.8, 1.4), Vec3::new(7.0, 2.4, 2.8), 0.0),
+            reflectivity: 0.5,
+        });
+
+        let mut scene = Scene {
+            objects: Vec::new(),
+            statics,
+            world_half: 30.0,
+            rng: Pcg64::new(seed),
+            target_cars,
+            target_peds,
+        };
+        // Pre-roll so frame 0 already has traffic mid-scene. Cars spawn at
+        // the upstream world edge, so advance them 0..1.6·world_half along
+        // their heading (stays inside the despawn boundary).
+        for _ in 0..scene.target_cars {
+            let mut car = scene.spawn_car();
+            let along = scene.rng.range(0.0, 1.6) * scene.world_half;
+            let dir = Vec3::new(car.bbox.yaw.cos(), car.bbox.yaw.sin(), 0.0);
+            car.bbox.center += dir * along;
+            scene.objects.push(car);
+        }
+        for _ in 0..scene.target_peds {
+            let ped = scene.spawn_pedestrian();
+            scene.objects.push(ped);
+        }
+        scene
+    }
+
+    fn spawn_car(&mut self) -> SceneObject {
+        let rng = &mut self.rng;
+        let length = rng.range(4.1, 4.9);
+        let width = rng.range(1.75, 2.0);
+        let height = rng.range(1.45, 1.75);
+        // Pick a road (x or y), a direction (+ or -) and a lane.
+        let along_x = rng.chance(0.5);
+        let forward = rng.chance(0.5);
+        let lane = *rng.choose(&LANE_OFFSETS);
+        let speed = rng.range(4.0, 12.0);
+        let half = self.world_half;
+        let (center, yaw) = if along_x {
+            let y = if forward { -lane } else { lane };
+            let x = if forward { -half } else { half };
+            (Vec3::new(x, y, height / 2.0), if forward { 0.0 } else { std::f64::consts::PI })
+        } else {
+            let x = if forward { lane } else { -lane };
+            let y = if forward { -half } else { half };
+            (
+                Vec3::new(x, y, height / 2.0),
+                if forward { std::f64::consts::FRAC_PI_2 } else { -std::f64::consts::FRAC_PI_2 },
+            )
+        };
+        SceneObject {
+            class: ObjClass::Car,
+            bbox: Box3::new(center, Vec3::new(length, width, height), yaw),
+            speed,
+            reflectivity: rng.range(0.3, 0.9) as f32,
+        }
+    }
+
+    fn spawn_pedestrian(&mut self) -> SceneObject {
+        let rng = &mut self.rng;
+        let size = rng.range(0.55, 0.85);
+        let height = rng.range(1.55, 1.85);
+        // Walk along a sidewalk (just outside the road) or cross at the
+        // crosswalk band near the intersection.
+        let crossing = rng.chance(0.35);
+        let (center, yaw) = if crossing {
+            let along_x = rng.chance(0.5);
+            let sgn = if rng.chance(0.5) { 1.0 } else { -1.0 };
+            let band = rng.range(ROAD_HALF + 0.5, ROAD_HALF + 1.5) * sgn;
+            let start = rng.range(-ROAD_HALF, ROAD_HALF);
+            if along_x {
+                // crossing the y-road: walk along x at y = band
+                (Vec3::new(start, band, height / 2.0), if sgn > 0.0 { 0.0 } else { std::f64::consts::PI })
+            } else {
+                (Vec3::new(band, start, height / 2.0), sgn * std::f64::consts::FRAC_PI_2)
+            }
+        } else {
+            let along_x = rng.chance(0.5);
+            let side = rng.range(ROAD_HALF + 0.8, ROAD_HALF + 2.5)
+                * if rng.chance(0.5) { 1.0 } else { -1.0 };
+            let along = rng.range(-0.7, 0.7) * self.world_half;
+            let forward = rng.chance(0.5);
+            if along_x {
+                (
+                    Vec3::new(along, side, height / 2.0),
+                    if forward { 0.0 } else { std::f64::consts::PI },
+                )
+            } else {
+                (
+                    Vec3::new(side, along, height / 2.0),
+                    if forward {
+                        std::f64::consts::FRAC_PI_2
+                    } else {
+                        -std::f64::consts::FRAC_PI_2
+                    },
+                )
+            }
+        };
+        SceneObject {
+            class: ObjClass::Pedestrian,
+            bbox: Box3::new(center, Vec3::new(size, size, height), yaw),
+            speed: rng.range(0.6, 1.8),
+            reflectivity: rng.range(0.2, 0.6) as f32,
+        }
+    }
+
+    /// Advance all objects by `dt` seconds, despawning those that leave
+    /// the world and respawning replacements at the edges.
+    pub fn step(&mut self, dt: f64) {
+        for obj in &mut self.objects {
+            obj.step(dt);
+        }
+        let half = self.world_half;
+        self.objects.retain(|o| {
+            o.bbox.center.x.abs() <= half + 3.0 && o.bbox.center.y.abs() <= half + 3.0
+        });
+        while self.count(ObjClass::Car) < self.target_cars {
+            let car = self.spawn_car();
+            self.objects.push(car);
+        }
+        while self.count(ObjClass::Pedestrian) < self.target_peds {
+            let ped = self.spawn_pedestrian();
+            self.objects.push(ped);
+        }
+    }
+
+    fn count(&self, class: ObjClass) -> usize {
+        self.objects.iter().filter(|o| o.class == class).count()
+    }
+
+    /// All occluder boxes a LiDAR ray can hit (dynamic + static).
+    pub fn occluders(&self) -> Vec<(Box3, f32)> {
+        self.objects
+            .iter()
+            .map(|o| (o.bbox, o.reflectivity))
+            .chain(self.statics.iter().map(|s| (s.bbox, s.reflectivity)))
+            .collect()
+    }
+
+    /// Scene with traffic removed (for calibration scans: NDT aligns on
+    /// static structure the way the paper collects setup-phase clouds).
+    pub fn static_only(&self) -> Scene {
+        Scene {
+            objects: Vec::new(),
+            statics: self.statics.clone(),
+            world_half: self.world_half,
+            rng: Pcg64::new(0),
+            target_cars: 0,
+            target_peds: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_population_matches_targets() {
+        let s = Scene::new(1, 8, 4);
+        assert_eq!(s.count(ObjClass::Car), 8);
+        assert_eq!(s.count(ObjClass::Pedestrian), 4);
+        assert_eq!(s.statics.len(), 6);
+    }
+
+    #[test]
+    fn cars_move_pedestrians_slower() {
+        let mut s = Scene::new(2, 4, 4);
+        let before: Vec<Vec3> = s.objects.iter().map(|o| o.bbox.center).collect();
+        // Small step: no object reaches the despawn boundary, so the
+        // object list (and its order) is stable across the step.
+        s.step(0.2);
+        assert_eq!(s.objects.len(), before.len());
+        for (obj, b) in s.objects.iter().zip(&before) {
+            let moved = (obj.bbox.center - *b).norm();
+            match obj.class {
+                ObjClass::Car => assert!(moved >= 0.2 * 3.9, "car moved {moved}"),
+                ObjClass::Pedestrian => assert!(moved <= 0.2 * 1.9, "ped moved {moved}"),
+            }
+        }
+    }
+
+    #[test]
+    fn population_is_maintained_over_time() {
+        let mut s = Scene::new(3, 6, 3);
+        for _ in 0..200 {
+            s.step(0.1);
+        }
+        assert_eq!(s.count(ObjClass::Car), 6);
+        assert_eq!(s.count(ObjClass::Pedestrian), 3);
+        for o in &s.objects {
+            assert!(o.bbox.center.x.abs() <= s.world_half + 3.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Scene::new(42, 5, 5);
+        let mut b = Scene::new(42, 5, 5);
+        for _ in 0..50 {
+            a.step(0.1);
+            b.step(0.1);
+        }
+        for (x, y) in a.objects.iter().zip(&b.objects) {
+            assert_eq!(x.bbox.center, y.bbox.center);
+        }
+    }
+
+    #[test]
+    fn objects_stay_on_ground() {
+        let mut s = Scene::new(7, 6, 4);
+        for _ in 0..100 {
+            s.step(0.1);
+        }
+        for o in &s.objects {
+            assert!((o.bbox.z_min()).abs() < 1e-9, "object floats: {:?}", o.bbox);
+        }
+    }
+}

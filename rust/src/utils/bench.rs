@@ -1,0 +1,182 @@
+//! Micro-benchmark harness (criterion is not in the offline image).
+//!
+//! `cargo bench` targets use [`Bench`] to time closures with warmup,
+//! outlier-robust reporting and throughput accounting, and to print table
+//! rows the paper-reproduction benches share.
+
+use super::stats;
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// Per-iteration wall time, seconds.
+    pub times: Vec<f64>,
+}
+
+impl Sample {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.times)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.times, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.times, 99.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.times)
+    }
+}
+
+/// Bench runner with a global time budget per case.
+pub struct Bench {
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    budget: Duration,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 2000,
+            budget: Duration::from_secs(3),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cheaper settings for CI-ish runs (`SCMII_BENCH_FAST=1`).
+    pub fn auto() -> Self {
+        if std::env::var("SCMII_BENCH_FAST").is_ok() {
+            Bench {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 50,
+                budget: Duration::from_millis(500),
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    /// Time `f` until the budget or `max_iters` is exhausted; prints and
+    /// records a summary line.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Sample {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (start.elapsed() < self.budget && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let sample = Sample { name: name.to_string(), times };
+        println!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  (n={})",
+            sample.name,
+            fmt_time(sample.mean()),
+            fmt_time(sample.p50()),
+            fmt_time(sample.p99()),
+            sample.times.len()
+        );
+        self.results.push(sample);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Print a relative comparison against a named baseline case.
+    pub fn compare(&self, baseline: &str) {
+        let Some(base) = self.results.iter().find(|s| s.name == baseline) else {
+            return;
+        };
+        println!("\nrelative to {baseline}:");
+        for s in &self.results {
+            println!("  {:<42} {:>6.2}x", s.name, base.mean() / s.mean());
+        }
+    }
+}
+
+/// Human format for seconds.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Pretty-print a table: header + rows of (label, values).
+pub fn print_table(title: &str, columns: &[&str], rows: &[(String, Vec<String>)]) {
+    println!("\n=== {title} ===");
+    let label_w = rows.iter().map(|(l, _)| l.len()).chain([16]).max().unwrap();
+    print!("{:<w$}", "", w = label_w + 2);
+    for c in columns {
+        print!("{c:>14}");
+    }
+    println!();
+    for (label, vals) in rows {
+        print!("{label:<w$}", w = label_w + 2);
+        for v in vals {
+            print!("{v:>14}");
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(20)).with_iters(3, 10);
+        let s = b.run("noop", || {});
+        assert!(s.times.len() >= 3);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.5).ends_with(" s"));
+        assert!(fmt_time(2.5e-3).ends_with(" ms"));
+        assert!(fmt_time(2.5e-6).ends_with(" µs"));
+        assert!(fmt_time(2.5e-9).ends_with(" ns"));
+    }
+}

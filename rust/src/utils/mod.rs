@@ -1,0 +1,13 @@
+//! Self-contained substrates replacing crates unavailable in the offline
+//! image (serde/rand/criterion/proptest/clap): npy I/O, a minimal JSON
+//! value model, a PCG64 RNG, a micro-bench harness, a property-test
+//! driver, logging, and small stats helpers.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod npy;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

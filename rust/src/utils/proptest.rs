@@ -1,0 +1,147 @@
+//! Property-testing driver (proptest/quickcheck are not in the image).
+//!
+//! Runs a property over many seeded-random cases and, on failure, reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use scmii::utils::proptest::{property, Gen};
+//! property("abs is non-negative", 256, |g: &mut Gen| {
+//!     let x = g.f64_range(-1e6, 1e6);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+//!
+//! `SCMII_PROP_SEED` replays a single failing case; `SCMII_PROP_CASES`
+//! overrides the case count.
+
+use super::rng::Pcg64;
+
+/// Case-local generator handed to each property invocation.
+pub struct Gen {
+    rng: Pcg64,
+    /// Seed of this case (for failure reports).
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::new(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.int_range(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.int_range(lo, hi)
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of f32 drawn uniformly from [lo, hi).
+    pub fn f32_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_range(lo, hi)).collect()
+    }
+
+    /// Choose an element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Access the raw rng (e.g. to fork sub-streams).
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated cases; panics with the failing seed.
+pub fn property<F: FnMut(&mut Gen) + std::panic::UnwindSafe + Copy>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) {
+    if let Ok(seed) = std::env::var("SCMII_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("SCMII_PROP_SEED must be u64");
+        let mut g = Gen::new(seed);
+        let mut p = prop;
+        p(&mut g);
+        return;
+    }
+    let cases = std::env::var("SCMII_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(cases);
+    for case in 0..cases {
+        // Derive a per-case seed from the property name + index so
+        // distinct properties explore distinct streams.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let seed = h ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(move || {
+            let mut g = Gen::new(seed);
+            let mut p = prop;
+            p(&mut g);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {case} (replay with \
+                 SCMII_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property("add commutes", 64, |g| {
+            let a = g.i64_range(-1000, 1000);
+            let b = g.i64_range(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            property("always fails", 8, |_g| {
+                panic!("boom");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("SCMII_PROP_SEED="), "{msg}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Fixed-size thread pool (no rayon/tokio in the offline image).
+//!
+//! Used by the dataset generator (per-frame raycasting fans out across
+//! cores) and the evaluation harness. Jobs are `FnOnce` closures; `scope`
+//! offers a rayon-like structured-parallel map.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple work-stealing-free thread pool with a shared queue.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (clamped to at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&receiver);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers }
+    }
+
+    /// Pool sized to the machine (cores, capped at 16).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(16);
+        Self::new(n)
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender.as_ref().expect("pool shut down").send(Box::new(f)).expect("workers died");
+    }
+
+    /// Apply `f` to every index 0..n in parallel and collect results in
+    /// order. Results must be `Send`; `f` is cloned per job.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + Clone + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..n {
+            let tx = tx.clone();
+            let f = f.clone();
+            self.execute(move || {
+                let _ = tx.send((i, f(i)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            out[i] = Some(v);
+        }
+        out.into_iter().map(|v| v.expect("worker panicked before sending")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map(64, |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Point-cloud → voxel-statistics featurization (mirrors
+//! `python/compile/voxelize.py`).
+//!
+//! Per occupied voxel the features are (C = 6):
+//!   0: clipped count      min(n, CLIP) / CLIP
+//!   1: mean x offset      mean(x - cx) / dx
+//!   2: mean y offset      mean(y - cy) / dy
+//!   3: mean z offset      mean(z - cz) / dz
+//!   4: mean intensity
+//!   5: max-z level        (max_z - range_min_z) / (range_max_z - range_min_z)
+//! Empty voxels are all-zero.
+
+use super::{FeatureMap, Point};
+use crate::config::GridConfig;
+
+/// Count clip for feature 0 (python: `configs.COUNT_CLIP`).
+pub const VOXEL_COUNT_CLIP: f32 = 16.0;
+
+/// Voxelize a point cloud into the dense `(D, H, W, 6)` feature map.
+/// Pad points and out-of-range points are dropped.
+pub fn voxelize(points: &[Point], grid: &GridConfig) -> FeatureMap {
+    let [w, h, d] = grid.dims;
+    let c = grid.c_in;
+    assert_eq!(c, 6, "voxelize produces 6 statistics");
+    let n_vox = w * h * d;
+
+    // Accumulators per voxel: count, sum_dx, sum_dy, sum_dz, sum_int, max_z
+    let mut count = vec![0u32; n_vox];
+    let mut sums = vec![[0.0f32; 4]; n_vox];
+    let mut max_z = vec![f32::NEG_INFINITY; n_vox];
+
+    for p in points {
+        if p.is_pad() {
+            continue;
+        }
+        let Some([ix, iy, iz]) = grid.voxel_of(p.x as f64, p.y as f64, p.z as f64) else {
+            continue;
+        };
+        let flat = (iz * h + iy) * w + ix;
+        let center = grid.voxel_center(ix, iy, iz);
+        count[flat] += 1;
+        sums[flat][0] += p.x - center[0] as f32;
+        sums[flat][1] += p.y - center[1] as f32;
+        sums[flat][2] += p.z - center[2] as f32;
+        sums[flat][3] += p.intensity;
+        if p.z > max_z[flat] {
+            max_z[flat] = p.z;
+        }
+    }
+
+    let z_span = (grid.range_max[2] - grid.range_min[2]) as f32;
+    let mut out = FeatureMap::zeros(d, h, w, c);
+    for flat in 0..n_vox {
+        let n = count[flat];
+        if n == 0 {
+            continue;
+        }
+        let inv_n = 1.0 / n as f32;
+        let base = flat * c;
+        out.data[base] = (n as f32).min(VOXEL_COUNT_CLIP) / VOXEL_COUNT_CLIP;
+        out.data[base + 1] = sums[flat][0] * inv_n / grid.voxel[0] as f32;
+        out.data[base + 2] = sums[flat][1] * inv_n / grid.voxel[1] as f32;
+        out.data[base + 3] = sums[flat][2] * inv_n / grid.voxel[2] as f32;
+        out.data[base + 4] = sums[flat][3] * inv_n;
+        out.data[base + 5] = (max_z[flat] - grid.range_min[2] as f32) / z_span;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> GridConfig {
+        GridConfig::default()
+    }
+
+    #[test]
+    fn empty_cloud_gives_zero_map() {
+        let m = voxelize(&[], &grid());
+        assert!(m.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn single_point_at_voxel_center() {
+        let g = grid();
+        let c = g.voxel_center(32, 32, 4);
+        let p = Point::new(c[0] as f32, c[1] as f32, c[2] as f32, 0.7);
+        let m = voxelize(&[p], &g);
+        let v = m.voxel(4, 32, 32);
+        assert!((v[0] - 1.0 / VOXEL_COUNT_CLIP).abs() < 1e-6);
+        assert!(v[1].abs() < 1e-5 && v[2].abs() < 1e-5 && v[3].abs() < 1e-5);
+        assert!((v[4] - 0.7).abs() < 1e-6);
+        let z_norm = (c[2] - g.range_min[2]) / (g.range_max[2] - g.range_min[2]);
+        assert!((v[5] - z_norm as f32).abs() < 1e-5);
+        assert_eq!(m.occupied_voxels(), 1);
+    }
+
+    #[test]
+    fn offsets_normalized_by_voxel_size() {
+        let g = grid();
+        let c = g.voxel_center(10, 10, 2);
+        // offset 0.2 m in x = 0.25 voxel widths
+        let p = Point::new(c[0] as f32 + 0.2, c[1] as f32, c[2] as f32, 0.0);
+        let m = voxelize(&[p], &g);
+        let v = m.voxel(2, 10, 10);
+        assert!((v[1] - 0.25).abs() < 1e-5, "{}", v[1]);
+    }
+
+    #[test]
+    fn count_clips() {
+        let g = grid();
+        let c = g.voxel_center(5, 5, 1);
+        let pts: Vec<Point> =
+            (0..40).map(|_| Point::new(c[0] as f32, c[1] as f32, c[2] as f32, 0.0)).collect();
+        let m = voxelize(&pts, &g);
+        assert!((m.voxel(1, 5, 5)[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pads_and_out_of_range_dropped() {
+        let g = grid();
+        let pts = vec![Point::pad(), Point::new(1000.0, 0.0, 0.0, 0.0)];
+        let m = voxelize(&pts, &g);
+        assert_eq!(m.occupied_voxels(), 0);
+    }
+
+    #[test]
+    fn mean_of_two_points() {
+        let g = grid();
+        let c = g.voxel_center(8, 8, 3);
+        let pts = vec![
+            Point::new(c[0] as f32 - 0.1, c[1] as f32, c[2] as f32, 0.2),
+            Point::new(c[0] as f32 + 0.3, c[1] as f32, c[2] as f32, 0.6),
+        ];
+        let m = voxelize(&pts, &g);
+        let v = m.voxel(3, 8, 8);
+        assert!((v[0] - 2.0 / VOXEL_COUNT_CLIP).abs() < 1e-6);
+        assert!((v[1] - (0.1 / 0.8)).abs() < 1e-4, "{}", v[1]);
+        assert!((v[4] - 0.4).abs() < 1e-6);
+    }
+}

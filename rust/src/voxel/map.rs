@@ -1,0 +1,122 @@
+//! Dense `(D, H, W, C)` f32 feature maps — the intermediate outputs that
+//! cross the wire in SC-MII.
+
+use anyhow::{ensure, Result};
+
+/// A dense voxel feature map with shape `(D, H, W, C)`, C order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureMap {
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl FeatureMap {
+    pub fn zeros(d: usize, h: usize, w: usize, c: usize) -> FeatureMap {
+        FeatureMap { d, h, w, c, data: vec![0.0; d * h * w * c] }
+    }
+
+    pub fn from_vec(d: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Result<FeatureMap> {
+        ensure!(
+            data.len() == d * h * w * c,
+            "feature map data length {} != {}x{}x{}x{}",
+            data.len(),
+            d,
+            h,
+            w,
+            c
+        );
+        Ok(FeatureMap { d, h, w, c, data })
+    }
+
+    #[inline]
+    pub fn idx(&self, iz: usize, iy: usize, ix: usize, ic: usize) -> usize {
+        ((iz * self.h + iy) * self.w + ix) * self.c + ic
+    }
+
+    #[inline]
+    pub fn get(&self, iz: usize, iy: usize, ix: usize, ic: usize) -> f32 {
+        self.data[self.idx(iz, iy, ix, ic)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, iz: usize, iy: usize, ix: usize, ic: usize, v: f32) {
+        let i = self.idx(iz, iy, ix, ic);
+        self.data[i] = v;
+    }
+
+    /// Slice of all channels at a voxel.
+    #[inline]
+    pub fn voxel(&self, iz: usize, iy: usize, ix: usize) -> &[f32] {
+        let i = self.idx(iz, iy, ix, 0);
+        &self.data[i..i + self.c]
+    }
+
+    pub fn shape(&self) -> [usize; 4] {
+        [self.d, self.h, self.w, self.c]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of voxels with any non-zero channel (sparsity diagnostics —
+    /// infrastructure LiDAR grids are typically 90–98% empty, which is
+    /// what makes the paper's compact intermediate outputs viable).
+    pub fn occupied_voxels(&self) -> usize {
+        let mut n = 0;
+        for v in self.data.chunks_exact(self.c) {
+            if v.iter().any(|&x| x != 0.0) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Max |value| difference to another map (test helper).
+    pub fn max_abs_diff(&self, other: &FeatureMap) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_dhwc() {
+        let mut m = FeatureMap::zeros(2, 3, 4, 5);
+        m.set(1, 2, 3, 4, 7.0);
+        // last element of the buffer
+        assert_eq!(m.data[2 * 3 * 4 * 5 - 1], 7.0);
+        assert_eq!(m.get(1, 2, 3, 4), 7.0);
+        m.set(0, 0, 0, 0, 1.0);
+        assert_eq!(m.data[0], 1.0);
+    }
+
+    #[test]
+    fn occupied_count() {
+        let mut m = FeatureMap::zeros(1, 2, 2, 3);
+        assert_eq!(m.occupied_voxels(), 0);
+        m.set(0, 1, 1, 2, 0.5);
+        m.set(0, 0, 0, 0, -0.5);
+        assert_eq!(m.occupied_voxels(), 2);
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(FeatureMap::from_vec(2, 2, 2, 2, vec![0.0; 15]).is_err());
+        assert!(FeatureMap::from_vec(2, 2, 2, 2, vec![0.0; 16]).is_ok());
+    }
+}

@@ -1,0 +1,127 @@
+//! Voxel feature maps and point-cloud voxelization.
+//!
+//! The rust voxelizer mirrors `python/compile/voxelize.py` (same formulas;
+//! f32 reduction order differs only in tree shape, tolerance ~1e-5). It
+//! exists so the coordinator can do native sanity checks and so tests can
+//! validate the HLO head against an independent implementation.
+//!
+//! Layout: feature maps are dense `(D, H, W, C)` row-major f32 tensors —
+//! exactly the shape the lowered HLO consumes/produces. `W` indexes x,
+//! `H` indexes y, `D` indexes z.
+
+mod features;
+mod map;
+
+pub use features::{voxelize, VOXEL_COUNT_CLIP};
+pub use map::FeatureMap;
+
+use crate::config::GridConfig;
+
+/// A single LiDAR return: xyz in the sensor/common frame + intensity.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Point {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub intensity: f32,
+}
+
+impl Point {
+    pub fn new(x: f32, y: f32, z: f32, intensity: f32) -> Point {
+        Point { x, y, z, intensity }
+    }
+
+    /// The padding sentinel: far below the detection range so voxelizers
+    /// on both sides drop it. Python uses the same constant
+    /// (`configs.PAD_Z`).
+    pub fn pad() -> Point {
+        Point { x: 0.0, y: 0.0, z: -1000.0, intensity: 0.0 }
+    }
+
+    pub fn is_pad(&self) -> bool {
+        self.z <= -999.0
+    }
+}
+
+/// Flatten points to the `(N, 4)` f32 buffer the HLO inputs expect,
+/// padding or truncating to `max_points`.
+pub fn points_to_tensor(points: &[Point], max_points: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(max_points * 4);
+    for p in points.iter().take(max_points) {
+        out.extend_from_slice(&[p.x, p.y, p.z, p.intensity]);
+    }
+    let pad = Point::pad();
+    for _ in points.len().min(max_points)..max_points {
+        out.extend_from_slice(&[pad.x, pad.y, pad.z, pad.intensity]);
+    }
+    out
+}
+
+/// Parse a `(N, 4)` tensor back into points (pads preserved).
+pub fn tensor_to_points(data: &[f32]) -> Vec<Point> {
+    data.chunks_exact(4).map(|c| Point::new(c[0], c[1], c[2], c[3])).collect()
+}
+
+/// Merge several clouds (already in a common frame), truncating to
+/// `max_points` — the paper's "input point cloud integration" baseline.
+pub fn merge_clouds(clouds: &[Vec<Point>], max_points: usize) -> Vec<Point> {
+    // Interleave so truncation doesn't drop one sensor entirely.
+    let mut out = Vec::with_capacity(max_points);
+    let longest = clouds.iter().map(|c| c.len()).max().unwrap_or(0);
+    'outer: for i in 0..longest {
+        for cloud in clouds {
+            if let Some(p) = cloud.get(i) {
+                if out.len() >= max_points {
+                    break 'outer;
+                }
+                out.push(*p);
+            }
+        }
+    }
+    out
+}
+
+/// Count points falling inside the detection grid (diagnostics).
+pub fn in_range_count(points: &[Point], grid: &GridConfig) -> usize {
+    points
+        .iter()
+        .filter(|p| {
+            !p.is_pad() && grid.voxel_of(p.x as f64, p.y as f64, p.z as f64).is_some()
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrip_with_padding() {
+        let pts = vec![Point::new(1.0, 2.0, 3.0, 0.5), Point::new(-1.0, 0.0, 1.0, 0.9)];
+        let t = points_to_tensor(&pts, 4);
+        assert_eq!(t.len(), 16);
+        let back = tensor_to_points(&t);
+        assert_eq!(back[0], pts[0]);
+        assert_eq!(back[1], pts[1]);
+        assert!(back[2].is_pad() && back[3].is_pad());
+    }
+
+    #[test]
+    fn truncation() {
+        let pts: Vec<Point> = (0..10).map(|i| Point::new(i as f32, 0.0, 0.0, 0.0)).collect();
+        let t = points_to_tensor(&pts, 4);
+        assert_eq!(t.len(), 16);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[12], 3.0);
+    }
+
+    #[test]
+    fn merge_interleaves() {
+        let a = vec![Point::new(1.0, 0.0, 0.0, 0.0); 10];
+        let b = vec![Point::new(2.0, 0.0, 0.0, 0.0); 10];
+        let merged = merge_clouds(&[a, b], 6);
+        assert_eq!(merged.len(), 6);
+        let ones = merged.iter().filter(|p| p.x == 1.0).count();
+        assert_eq!(ones, 3, "truncation must keep both sensors");
+    }
+}

@@ -1,0 +1,158 @@
+//! Cross-module integration tests that do NOT require AOT artifacts:
+//! simulator → NDT setup phase → alignment maps → native integration.
+
+use scmii::config::GridConfig;
+use scmii::geom::{Pose, Vec3};
+use scmii::ndt;
+use scmii::sim::{self, SimConfig};
+use scmii::voxel;
+
+fn tiny_cfg() -> SimConfig {
+    SimConfig {
+        seed: 99,
+        train_frames: 2,
+        val_frames: 1,
+        dt: 0.1,
+        n_cars: 6,
+        n_peds: 3,
+        max_points: 2048,
+        calib_points: 12288,
+    }
+}
+
+/// The paper's setup phase end-to-end on simulated scans: NDT must
+/// recover the true inter-sensor transform well enough for voxel-level
+/// alignment (≤ one 0.8 m voxel translation, ≤ ~2° rotation).
+#[cfg_attr(debug_assertions, ignore = "NDT global search is release-speed only; run with --release (make test)")]
+#[test]
+fn ndt_calibration_recovers_rig_extrinsics() {
+    let cfg = tiny_cfg();
+    let scans = sim::dataset::calibration_scans(&cfg);
+    assert_eq!(scans.len(), 2);
+    let rig = sim::dataset::sensor_rig();
+    let truth = sim::dataset::true_device_transform(&rig, 1);
+
+    let params = ndt::NdtParams::default();
+    let result = ndt::calibrate(&scans[0], &scans[1], &params);
+    let (rot_err, trans_err) = result.pose.error_to(&truth);
+
+    let score_truth = ndt::score_pose(&scans[0], &scans[1], &truth, 2.0);
+    let score_est = ndt::score_pose(&scans[0], &scans[1], &result.pose, 2.0);
+    println!(
+        "NDT: est score {:.4} vs truth score {:.4}; rot err {:.4} rad, trans err {:.3} m",
+        score_est, score_truth, rot_err, trans_err
+    );
+    println!(
+        "NDT est trans ({:.3},{:.3},{:.3}) vs truth ({:.3},{:.3},{:.3})",
+        result.pose.trans.x,
+        result.pose.trans.y,
+        result.pose.trans.z,
+        truth.trans.x,
+        truth.trans.y,
+        truth.trans.z
+    );
+    assert!(trans_err < 0.8, "translation error {trans_err}");
+    assert!(rot_err < 0.04, "rotation error {rot_err}");
+}
+
+/// Voxelizing a frame's cloud in each device's local grid and aligning
+/// device 1 features into the common grid must land features near where
+/// voxelizing the transformed points directly would put them.
+#[test]
+fn alignment_consistent_with_point_transform() {
+    let cfg = tiny_cfg();
+    let grid = GridConfig::default();
+    let frames = sim::dataset::simulate_frames(&cfg, 0x7EA1, 1, &grid);
+    let frame = &frames[0];
+    let rig = sim::dataset::sensor_rig();
+    let truth = sim::dataset::true_device_transform(&rig, 1);
+
+    // Path A: voxelize device-1 cloud locally, then gather-align.
+    let local = voxel::voxelize(&frame.clouds[1], &grid);
+    let amap = scmii::align::AlignMap::build(&grid, &truth, 1);
+    let aligned = amap.apply(&local);
+
+    // Path B: transform the points into the common frame, voxelize there.
+    let transformed: Vec<voxel::Point> = frame.clouds[1]
+        .iter()
+        .filter(|p| !p.is_pad())
+        .map(|p| {
+            let v = truth.apply(Vec3::new(p.x as f64, p.y as f64, p.z as f64));
+            voxel::Point::new(v.x as f32, v.y as f32, v.z as f32, p.intensity)
+        })
+        .collect();
+    let direct = voxel::voxelize(&transformed, &grid);
+
+    // LiDAR occupancy is a thin shell; nearest-neighbor index resampling
+    // legitimately shifts voxels by ±1, so strict jaccard is low even
+    // when alignment is correct. Use dilated agreement instead: every
+    // gather-aligned occupied voxel must have a directly-voxelized
+    // occupied voxel within Chebyshev distance 1.
+    let occ_a = aligned.occupied_voxels();
+    let occ_b = direct.occupied_voxels();
+    assert!(occ_a > 0 && occ_b > 0);
+    let occupied = |m: &scmii::voxel::FeatureMap, iz: i64, iy: i64, ix: i64| {
+        if iz < 0
+            || iy < 0
+            || ix < 0
+            || iz >= m.d as i64
+            || iy >= m.h as i64
+            || ix >= m.w as i64
+        {
+            return false;
+        }
+        m.voxel(iz as usize, iy as usize, ix as usize).iter().any(|&v| v != 0.0)
+    };
+    let mut matched = 0usize;
+    for iz in 0..aligned.d as i64 {
+        for iy in 0..aligned.h as i64 {
+            for ix in 0..aligned.w as i64 {
+                if !occupied(&aligned, iz, iy, ix) {
+                    continue;
+                }
+                let mut near = false;
+                'nb: for dz in -1..=1 {
+                    for dy in -1..=1 {
+                        for dx in -1..=1 {
+                            if occupied(&direct, iz + dz, iy + dy, ix + dx) {
+                                near = true;
+                                break 'nb;
+                            }
+                        }
+                    }
+                }
+                if near {
+                    matched += 1;
+                }
+            }
+        }
+    }
+    let agreement = matched as f64 / occ_a as f64;
+    println!("dilated occupancy agreement {agreement:.3} (A {occ_a} vs B {occ_b})");
+    assert!(agreement > 0.9, "alignment disagrees with point transform: {agreement}");
+}
+
+/// Setup-phase calib.json round-trips through the pipeline loader.
+#[test]
+fn calib_json_roundtrip() {
+    let dir = std::env::temp_dir().join("scmii_calib_rt");
+    let _ = std::fs::create_dir_all(&dir);
+    let pose = Pose::from_xyz_rpy(15.0, 15.0, 0.7, 0.0, 0.0, 3.3);
+    use scmii::utils::json::Json;
+    let mut calib = Json::obj();
+    calib.set(
+        "transforms",
+        Json::Arr(vec![
+            Json::from_f64_slice(&Pose::IDENTITY.to_mat4()),
+            Json::from_f64_slice(&pose.to_mat4()),
+        ]),
+    );
+    let path = dir.join("calib.json");
+    scmii::utils::json::write_file(&path, &calib).unwrap();
+
+    let paths = scmii::config::Paths { artifacts: dir.clone(), data: dir };
+    let loaded = scmii::coordinator::pipeline::load_calib(&paths).unwrap();
+    assert_eq!(loaded.len(), 2);
+    let (ang, trans) = loaded[1].error_to(&pose);
+    assert!(ang < 1e-12 && trans < 1e-12);
+}

@@ -1,0 +1,157 @@
+//! End-to-end tests over the AOT artifacts: HLO heads/tails through PJRT,
+//! SC-MII pipeline vs baselines, HLO-vs-native cross-checks.
+//!
+//! These tests skip (pass vacuously with a notice) when `make artifacts`
+//! has not run — unit tests must not depend on the build pipeline.
+
+use scmii::config::{artifacts_present, default_paths, IntegrationKind};
+use scmii::coordinator::pipeline::{load_calib, ScMiiPipeline};
+use scmii::runtime::HostTensor;
+use scmii::voxel::Point;
+
+macro_rules! require_artifacts {
+    ($paths:ident) => {
+        let $paths = default_paths();
+        if !artifacts_present(&$paths) {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn val_frames(paths: &scmii::config::Paths, n: usize) -> Vec<scmii::sim::dataset::Frame> {
+    scmii::sim::dataset::load_split(&paths.data.join("val"))
+        .expect("val split (run `make artifacts`)")
+        .into_iter()
+        .take(n)
+        .collect()
+}
+
+#[test]
+fn head_produces_feature_map_of_meta_shape() {
+    require_artifacts!(paths);
+    let pipeline = ScMiiPipeline::load(&paths, IntegrationKind::Max).unwrap();
+    let g = &pipeline.meta.grid;
+    let frames = val_frames(&paths, 1);
+    let feat = pipeline.run_head(0, &frames[0].clouds[0]).unwrap();
+    assert_eq!(feat.shape, vec![g.dims[2], g.dims[1], g.dims[0], g.c_head]);
+    // ReLU split point: non-negative, and a real cloud must activate it
+    assert!(feat.data.iter().all(|&v| v >= 0.0));
+    assert!(feat.data.iter().any(|&v| v > 0.0));
+}
+
+#[test]
+fn head_zero_input_gives_zero_features() {
+    require_artifacts!(paths);
+    let pipeline = ScMiiPipeline::load(&paths, IntegrationKind::Max).unwrap();
+    let pads = vec![Point::pad(); 16];
+    let feat = pipeline.run_head(0, &pads).unwrap();
+    // voxel grid is empty -> stem conv sees zeros -> bias could make
+    // outputs nonzero pre-ReLU, but occupancy features are all zero so
+    // outputs equal relu(bias) everywhere; verify spatial uniformity.
+    let c = pipeline.meta.grid.c_head;
+    let first = &feat.data[..c];
+    for chunk in feat.data.chunks(c) {
+        for (a, b) in chunk.iter().zip(first) {
+            assert!((a - b).abs() < 1e-6, "zero input must give uniform features");
+        }
+    }
+}
+
+#[test]
+fn tail_runs_all_variants_and_shapes_match_meta() {
+    require_artifacts!(paths);
+    let frames = val_frames(&paths, 1);
+    for kind in IntegrationKind::all() {
+        let pipeline = ScMiiPipeline::load(&paths, kind).unwrap();
+        let meta = &pipeline.meta;
+        let feats: Vec<HostTensor> = (0..meta.num_devices)
+            .map(|d| pipeline.run_head(d, &frames[0].clouds[d]).unwrap())
+            .collect();
+        let (cls, boxes) = pipeline.run_tail(&feats).unwrap();
+        let [hb, wb] = meta.bev_dims;
+        assert_eq!(cls.len(), hb * wb * meta.anchors.len(), "{kind:?} cls shape");
+        assert_eq!(boxes.len(), hb * wb * meta.anchors.len() * 8, "{kind:?} box shape");
+        assert!(cls.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn full_pipeline_detects_objects() {
+    require_artifacts!(paths);
+    let pipeline = ScMiiPipeline::load(&paths, IntegrationKind::ConvK3).unwrap();
+    let frames = val_frames(&paths, 4);
+    let mut total_dets = 0;
+    for f in &frames {
+        let (dets, timing) = pipeline.infer(&f.clouds).unwrap();
+        total_dets += dets.len();
+        assert_eq!(timing.head_secs.len(), pipeline.meta.num_devices);
+        assert!(timing.tail_secs > 0.0);
+        for d in &dets {
+            assert!(d.score >= 0.0 && d.score <= 1.0);
+            assert!(d.class_id < pipeline.meta.classes.len());
+            assert!(d.bbox.size.x > 0.0 && d.bbox.size.y > 0.0);
+        }
+    }
+    assert!(total_dets > 0, "trained model must detect something on val frames");
+}
+
+#[test]
+fn baselines_run_and_return_detections() {
+    require_artifacts!(paths);
+    let mut pipeline = ScMiiPipeline::load(&paths, IntegrationKind::Max).unwrap();
+    pipeline.load_baselines(&paths).unwrap();
+    let frames = val_frames(&paths, 2);
+    for f in &frames {
+        for dev in 0..pipeline.meta.num_devices {
+            let (dets, secs) = pipeline.infer_single(dev, &f.clouds[dev]).unwrap();
+            assert!(secs > 0.0);
+            let _ = dets;
+        }
+        let (dets, _) = pipeline.infer_input_integration(&f.clouds).unwrap();
+        let _ = dets;
+    }
+}
+
+#[test]
+fn hlo_max_tail_matches_native_integration_on_impulse() {
+    // Cross-check: the tail's internal alignment gather must agree with
+    // the rust-native AlignMap when fed an impulse feature map. We can't
+    // compare through the backbone (trained weights mix channels), so we
+    // compare alignment maps directly against the calib transform.
+    require_artifacts!(paths);
+    let pipeline = ScMiiPipeline::load(&paths, IntegrationKind::Max).unwrap();
+    let calib = load_calib(&paths).unwrap();
+    let grid = &pipeline.meta.grid;
+    let amap = scmii::align::AlignMap::build(grid, &calib[1], 1);
+    assert!(amap.coverage() > 0.1, "calib transform yields empty overlap");
+    // identity for device 0
+    let a0 = scmii::align::AlignMap::build(grid, &calib[0], 1);
+    assert!((a0.coverage() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn single_lidar_misses_what_fusion_sees() {
+    // The paper's core claim in microcosm: on frames where device 0 is
+    // occluded, fusion must not be worse than the worst single view.
+    require_artifacts!(paths);
+    let mut pipeline = ScMiiPipeline::load(&paths, IntegrationKind::ConvK3).unwrap();
+    pipeline.load_baselines(&paths).unwrap();
+    let frames = val_frames(&paths, 12);
+    let mut fused_total = 0usize;
+    let mut single_best_total = 0usize;
+    for f in &frames {
+        let (fused, _) = pipeline.infer(&f.clouds).unwrap();
+        let (s0, _) = pipeline.infer_single(0, &f.clouds[0]).unwrap();
+        let (s1, _) = pipeline.infer_single(1, &f.clouds[1]).unwrap();
+        fused_total += fused.len();
+        single_best_total += s0.len().max(s1.len());
+    }
+    // Not a strict per-frame guarantee, but in aggregate fusion should
+    // find at least ~80% of the best single view's detections (and
+    // usually more).
+    assert!(
+        fused_total * 10 >= single_best_total * 8,
+        "fusion found {fused_total}, best-single {single_best_total}"
+    );
+}

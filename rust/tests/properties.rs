@@ -1,0 +1,281 @@
+//! Property-based tests (hand-rolled driver, see `utils::proptest`) over
+//! the geometric and protocol invariants the coordinator relies on.
+
+use scmii::config::GridConfig;
+use scmii::geom::{bev_iou, iou_3d, Box3, Mat3, Pose, Vec3};
+use scmii::model::{rotated_nms, Detection};
+use scmii::net::{read_msg, write_msg, Msg};
+use scmii::runtime::HostTensor;
+use scmii::utils::proptest::{property, Gen};
+use scmii::voxel::{points_to_tensor, tensor_to_points, Point};
+
+fn random_pose(g: &mut Gen) -> Pose {
+    Pose::from_xyz_rpy(
+        g.f64_range(-20.0, 20.0),
+        g.f64_range(-20.0, 20.0),
+        g.f64_range(-2.0, 2.0),
+        g.f64_range(-0.1, 0.1),
+        g.f64_range(-0.1, 0.1),
+        g.f64_range(-std::f64::consts::PI, std::f64::consts::PI),
+    )
+}
+
+fn random_box(g: &mut Gen) -> Box3 {
+    Box3::new(
+        Vec3::new(g.f64_range(-20.0, 20.0), g.f64_range(-20.0, 20.0), g.f64_range(-5.0, 0.0)),
+        Vec3::new(g.f64_range(0.5, 6.0), g.f64_range(0.5, 3.0), g.f64_range(0.5, 2.5)),
+        g.f64_range(-std::f64::consts::PI, std::f64::consts::PI),
+    )
+}
+
+#[test]
+fn pose_inverse_roundtrip() {
+    property("pose inverse roundtrips points", 256, |g| {
+        let pose = random_pose(g);
+        let p = Vec3::new(
+            g.f64_range(-50.0, 50.0),
+            g.f64_range(-50.0, 50.0),
+            g.f64_range(-10.0, 10.0),
+        );
+        let q = pose.inverse().apply(pose.apply(p));
+        assert!((q - p).norm() < 1e-9, "{:?} vs {:?}", q, p);
+    });
+}
+
+#[test]
+fn pose_composition_associative() {
+    property("pose composition associates", 128, |g| {
+        let a = random_pose(g);
+        let b = random_pose(g);
+        let c = random_pose(g);
+        let p = Vec3::new(g.f64_range(-10.0, 10.0), g.f64_range(-10.0, 10.0), 0.0);
+        let lhs = a.compose(&b.compose(&c)).apply(p);
+        let rhs = a.compose(&b).compose(&c).apply(p);
+        assert!((lhs - rhs).norm() < 1e-9);
+    });
+}
+
+#[test]
+fn rotation_matrices_orthonormal() {
+    property("rotations are orthonormal with det 1", 256, |g| {
+        let r = Mat3::from_euler(
+            g.f64_range(-1.0, 1.0),
+            g.f64_range(-1.0, 1.0),
+            g.f64_range(-3.1, 3.1),
+        );
+        let rtr = r.transpose() * r;
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((rtr.m[i][j] - expect).abs() < 1e-12);
+            }
+        }
+        assert!((r.det() - 1.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn iou_bounds_and_symmetry() {
+    property("IoU in [0,1], symmetric, 1 iff identical", 256, |g| {
+        let a = random_box(g);
+        let b = random_box(g);
+        let ab = bev_iou(&a, &b);
+        let ba = bev_iou(&b, &a);
+        assert!((0.0..=1.0).contains(&ab));
+        assert!((ab - ba).abs() < 1e-9, "asymmetric: {ab} vs {ba}");
+        assert!((bev_iou(&a, &a) - 1.0).abs() < 1e-9);
+        let i3 = iou_3d(&a, &b);
+        assert!((0.0..=1.0).contains(&i3));
+    });
+}
+
+#[test]
+fn iou_translation_invariance() {
+    property("IoU invariant under common translation", 128, |g| {
+        let a = random_box(g);
+        let b = random_box(g);
+        let dx = g.f64_range(-30.0, 30.0);
+        let dy = g.f64_range(-30.0, 30.0);
+        let shift = |bx: &Box3| Box3::new(bx.center + Vec3::new(dx, dy, 0.0), bx.size, bx.yaw);
+        let before = bev_iou(&a, &b);
+        let after = bev_iou(&shift(&a), &shift(&b));
+        assert!((before - after).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn nms_output_is_conflict_free_and_sorted() {
+    property("NMS keeps no overlapping pair above threshold", 64, |g| {
+        let n = g.usize_range(0, 40);
+        let dets: Vec<Detection> = (0..n)
+            .map(|_| Detection {
+                bbox: random_box(g),
+                score: g.f32_range(0.0, 1.0),
+                class_id: 0,
+            })
+            .collect();
+        let thr = g.f64_range(0.1, 0.6);
+        let kept = rotated_nms(dets.clone(), thr, 100);
+        assert!(kept.len() <= dets.len());
+        for i in 0..kept.len() {
+            if i > 0 {
+                assert!(kept[i - 1].score >= kept[i].score, "not sorted");
+            }
+            for j in i + 1..kept.len() {
+                let iou = bev_iou(&kept[i].bbox, &kept[j].bbox);
+                assert!(iou <= thr + 1e-9, "kept overlapping pair iou {iou} thr {thr}");
+            }
+        }
+    });
+}
+
+#[test]
+fn align_map_indices_in_bounds_and_local() {
+    property("align map: in-bounds indices, locality preserved", 24, |g| {
+        let grid = GridConfig::default();
+        let pose = Pose::from_xyz_rpy(
+            g.f64_range(-6.0, 6.0),
+            g.f64_range(-6.0, 6.0),
+            g.f64_range(-1.0, 1.0),
+            0.0,
+            0.0,
+            g.f64_range(-3.1, 3.1),
+        );
+        let map = scmii::align::AlignMap::build(&grid, &pose, 1);
+        let n = grid.n_voxels() as i64;
+        for &s in &map.src_flat {
+            assert!(s >= -1 && s < n);
+        }
+        // locality: neighbours in output space map to nearby sources
+        let [w, h, _] = map.dims;
+        let mut checked = 0;
+        for i in 0..map.src_flat.len() - 1 {
+            let (a, b) = (map.src_flat[i], map.src_flat[i + 1]);
+            if a >= 0 && b >= 0 && (i % w) != w - 1 {
+                let (az, ar) = ((a as usize) / (h * w), (a as usize) % (h * w));
+                let (bz, br) = ((b as usize) / (h * w), (b as usize) % (h * w));
+                let (ay, ax) = (ar / w, ar % w);
+                let (by, bx) = (br / w, br % w);
+                let d = (ax as i64 - bx as i64).abs().max((ay as i64 - by as i64).abs());
+                assert!(az == bz, "rigid yaw-only transform must keep z-slabs");
+                assert!(d <= 2, "adjacent outputs map {d} voxels apart");
+                checked += 1;
+            }
+        }
+        assert!(checked > 0 || map.coverage() < 0.05);
+    });
+}
+
+#[test]
+fn point_tensor_roundtrip() {
+    property("points_to_tensor/tensor_to_points roundtrip", 64, |g| {
+        let n = g.usize_range(0, 200);
+        let max_points = g.usize_range(1, 256);
+        let pts: Vec<Point> = (0..n)
+            .map(|_| {
+                Point::new(
+                    g.f32_range(-50.0, 50.0),
+                    g.f32_range(-50.0, 50.0),
+                    g.f32_range(-10.0, 10.0),
+                    g.f32_range(0.0, 1.0),
+                )
+            })
+            .collect();
+        let t = points_to_tensor(&pts, max_points);
+        assert_eq!(t.len(), max_points * 4);
+        let back = tensor_to_points(&t);
+        for (orig, round) in pts.iter().take(max_points).zip(&back) {
+            assert_eq!(orig, round);
+        }
+        for p in back.iter().skip(pts.len().min(max_points)) {
+            assert!(p.is_pad());
+        }
+    });
+}
+
+#[test]
+fn wire_protocol_roundtrip_random_tensors() {
+    property("wire protocol roundtrips arbitrary tensors", 64, |g| {
+        let ndim = g.usize_range(1, 4);
+        let shape: Vec<usize> = (0..ndim).map(|_| g.usize_range(1, 12)).collect();
+        let n: usize = shape.iter().product();
+        let data = g.f32_vec(n, -1e6, 1e6);
+        let msg = Msg::Features {
+            frame_id: g.u64(),
+            device_id: g.usize_range(0, 3) as u32,
+            tensor: HostTensor::new(shape, data).unwrap(),
+        };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let back = read_msg(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+    });
+}
+
+#[test]
+fn voxelize_respects_grid_bounds() {
+    property("voxelize: only in-range points contribute", 32, |g| {
+        let grid = GridConfig::default();
+        let n = g.usize_range(1, 300);
+        let pts: Vec<Point> = (0..n)
+            .map(|_| {
+                Point::new(
+                    g.f32_range(-60.0, 60.0),
+                    g.f32_range(-60.0, 60.0),
+                    g.f32_range(-12.0, 6.0),
+                    g.f32_range(0.0, 1.0),
+                )
+            })
+            .collect();
+        let map = scmii::voxel::voxelize(&pts, &grid);
+        let in_range = scmii::voxel::in_range_count(&pts, &grid);
+        let occupied = map.occupied_voxels();
+        assert!(occupied <= in_range, "{occupied} occupied > {in_range} in-range");
+        if in_range > 0 {
+            assert!(occupied > 0);
+        }
+        // count feature bounded by 1
+        for v in map.data.chunks(grid.c_in) {
+            assert!(v[0] >= 0.0 && v[0] <= 1.0);
+        }
+    });
+}
+
+#[test]
+fn ap_monotone_in_iou_threshold() {
+    property("AP non-increasing in IoU threshold", 32, |g| {
+        use scmii::eval::ap::{average_precision, EvalFrame};
+        let n_gt = g.usize_range(1, 8);
+        let mut frame = EvalFrame::default();
+        for _ in 0..n_gt {
+            frame.ground_truth.push((random_box(g), 0));
+        }
+        // detections = noisy copies of gts + random clutter
+        for (gt, _) in frame.ground_truth.clone() {
+            let noisy = Box3::new(
+                gt.center + Vec3::new(g.f64_range(-1.0, 1.0), g.f64_range(-1.0, 1.0), 0.0),
+                gt.size,
+                gt.yaw + g.f64_range(-0.2, 0.2),
+            );
+            frame.detections.push(Detection {
+                bbox: noisy,
+                score: g.f32_range(0.3, 1.0),
+                class_id: 0,
+            });
+        }
+        for _ in 0..g.usize_range(0, 4) {
+            frame.detections.push(Detection {
+                bbox: random_box(g),
+                score: g.f32_range(0.0, 0.5),
+                class_id: 0,
+            });
+        }
+        let frames = vec![frame];
+        let mut prev = f64::INFINITY;
+        for thr in [0.1, 0.3, 0.5, 0.7] {
+            let ap = average_precision(&frames, 0, thr).unwrap();
+            assert!(ap <= prev + 1e-9, "AP increased with stricter threshold");
+            prev = ap;
+        }
+    });
+}

@@ -1,0 +1,142 @@
+//! Distributed-deployment tests: edge server + device workers over real
+//! TCP on localhost, including the partial-loss path. Skip without
+//! artifacts.
+
+use scmii::config::{artifacts_present, default_paths, IntegrationKind};
+use scmii::coordinator::device::{run_device, DeviceConfig};
+use scmii::coordinator::scheduler::LossPolicy;
+use scmii::coordinator::server::{run_server, ServerConfig};
+use scmii::net::{read_msg, write_msg, Msg};
+use std::net::TcpStream;
+use std::time::Duration;
+
+macro_rules! require_artifacts {
+    ($paths:ident) => {
+        let $paths = default_paths();
+        if !artifacts_present(&$paths) {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn spawn_server(
+    paths: &scmii::config::Paths,
+    port: u16,
+    max_frames: u64,
+    deadline: Duration,
+) -> std::thread::JoinHandle<anyhow::Result<std::sync::Arc<scmii::metrics::Metrics>>> {
+    let paths = paths.clone();
+    let cfg = ServerConfig {
+        port,
+        variant: IntegrationKind::Max,
+        deadline,
+        policy: LossPolicy::ZeroFill,
+        max_frames: Some(max_frames),
+    };
+    std::thread::spawn(move || run_server(&paths, &cfg))
+}
+
+#[test]
+fn two_devices_serve_frames_end_to_end() {
+    require_artifacts!(paths);
+    let port = 7551;
+    let n_frames = 3usize;
+    let server = spawn_server(&paths, port, n_frames as u64, Duration::from_secs(5));
+    std::thread::sleep(Duration::from_millis(2000)); // tail compile
+
+    // Subscriber collects results.
+    let sub = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut sub_w = sub.try_clone().unwrap();
+    write_msg(&mut sub_w, &Msg::Subscribe).unwrap();
+    let subscriber = std::thread::spawn(move || {
+        let mut reader = std::io::BufReader::new(sub);
+        let mut got = Vec::new();
+        while got.len() < n_frames {
+            match read_msg(&mut reader) {
+                Ok(Msg::Result { frame_id, detections, .. }) => {
+                    got.push((frame_id, detections.len()))
+                }
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        got
+    });
+
+    let frames = scmii::sim::dataset::load_split(&paths.data.join("val")).unwrap();
+    let frames: Vec<_> = frames.into_iter().take(n_frames).collect();
+    let mut threads = Vec::new();
+    for dev in 0..2 {
+        let clouds: Vec<_> = frames.iter().map(|f| f.clouds[dev].clone()).collect();
+        let paths = paths.clone();
+        let cfg = DeviceConfig {
+            device_id: dev,
+            server: format!("127.0.0.1:{port}"),
+            variant: IntegrationKind::Max,
+            period: None,
+            bandwidth_bps: Some(1e9),
+            max_frames: n_frames,
+            // device 1 ships compressed intermediate outputs (paper
+            // §IV-E): exercises the mixed full/quantized path.
+            quantize: dev == 1,
+        };
+        threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
+    }
+    for t in threads {
+        let times = t.join().unwrap().unwrap();
+        assert_eq!(times.len(), n_frames);
+        for (head, tx) in times {
+            assert!(head > 0.0 && tx > 0.0);
+        }
+    }
+    let results = subscriber.join().unwrap();
+    assert_eq!(results.len(), n_frames, "all frames must produce results");
+    let metrics = server.join().unwrap().unwrap();
+    assert_eq!(metrics.counter("frames_done"), n_frames as u64);
+    assert_eq!(metrics.counter("tail_errors"), 0);
+}
+
+#[test]
+fn missing_device_zero_fill_still_produces_results() {
+    require_artifacts!(paths);
+    let port = 7552;
+    let n_frames = 2usize;
+    // Short deadline: device 1 never connects, frames resolve by timeout.
+    let server = spawn_server(&paths, port, n_frames as u64, Duration::from_millis(300));
+    std::thread::sleep(Duration::from_millis(2000));
+
+    let sub = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut sub_w = sub.try_clone().unwrap();
+    write_msg(&mut sub_w, &Msg::Subscribe).unwrap();
+    let subscriber = std::thread::spawn(move || {
+        let mut reader = std::io::BufReader::new(sub);
+        let mut got = 0usize;
+        while got < n_frames {
+            match read_msg(&mut reader) {
+                Ok(Msg::Result { .. }) => got += 1,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        got
+    });
+
+    let frames = scmii::sim::dataset::load_split(&paths.data.join("val")).unwrap();
+    let clouds: Vec<_> = frames.iter().take(n_frames).map(|f| f.clouds[0].clone()).collect();
+    let cfg = DeviceConfig {
+        device_id: 0,
+        server: format!("127.0.0.1:{port}"),
+        variant: IntegrationKind::Max,
+        period: None,
+        bandwidth_bps: None,
+        max_frames: n_frames,
+        quantize: false,
+    };
+    run_device(&paths, &cfg, &clouds).unwrap();
+
+    let got = subscriber.join().unwrap();
+    assert_eq!(got, n_frames, "zero-fill must produce a result per frame");
+    let metrics = server.join().unwrap().unwrap();
+    assert_eq!(metrics.counter("frames_done"), n_frames as u64);
+}
