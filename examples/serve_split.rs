@@ -12,7 +12,7 @@ use scmii::cli::Args;
 use scmii::config::{default_paths, IntegrationKind};
 use scmii::coordinator::device::{run_device, DeviceConfig};
 use scmii::coordinator::server::{run_server, ServerConfig};
-use scmii::net::{read_msg, write_msg, Msg};
+use scmii::net::{read_msg, write_msg, Msg, DEFAULT_SESSION};
 use scmii::utils::stats;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -56,7 +56,7 @@ fn main() -> Result<()> {
     // Subscriber: receives final detections, timestamps completion.
     let sub = TcpStream::connect(("127.0.0.1", port))?;
     let mut sub_w = sub.try_clone()?;
-    write_msg(&mut sub_w, &Msg::Subscribe)?;
+    write_msg(&mut sub_w, &Msg::Subscribe { session: DEFAULT_SESSION.into() })?;
     let n_expect = frames.len();
     let subscriber =
         std::thread::spawn(move || -> Result<Vec<(u64, Instant, usize, u64)>> {
@@ -83,6 +83,7 @@ fn main() -> Result<()> {
         let cfg = DeviceConfig {
             device_id: dev,
             server: format!("127.0.0.1:{port}"),
+            session: DEFAULT_SESSION.into(),
             variant,
             period: if hz > 0.0 { Some(Duration::from_secs_f64(1.0 / hz)) } else { None },
             bandwidth_bps: Some(1e9),
@@ -97,7 +98,8 @@ fn main() -> Result<()> {
         send_times.push(t.join().expect("device thread panicked")?);
     }
     let results = subscriber.join().expect("subscriber panicked")?;
-    let server_metrics = server.join().expect("server panicked")?;
+    let registry = server.join().expect("server panicked")?;
+    let session = registry.get(DEFAULT_SESSION).expect("default session");
     let wall = t_start.elapsed().as_secs_f64();
 
     // Report.
@@ -124,6 +126,11 @@ fn main() -> Result<()> {
         );
     }
     println!("detections/frame : mean {:.1}", stats::mean(&det_counts));
-    println!("\nserver metrics:\n{}", server_metrics.report());
+    let sync = session.sync_stats();
+    println!(
+        "frame sync       : {} complete, {} timed out, {} late, {} dup",
+        sync.complete, sync.timed_out, sync.late_arrivals, sync.duplicates
+    );
+    println!("\nserver metrics (session {DEFAULT_SESSION:?}):\n{}", session.metrics().report());
     Ok(())
 }

@@ -62,14 +62,27 @@ fn main() {
         let mut buf = Vec::new();
         write_msg(
             &mut buf,
-            &Msg::Features { frame_id: 1, device_id: 0, tensor: tensor.clone() },
+            &Msg::Features {
+                frame_id: 1,
+                device_id: 0,
+                tensor: tensor.clone(),
+                session: scmii::net::DEFAULT_SESSION.into(),
+            },
         )
         .unwrap();
         std::hint::black_box(buf.len());
     });
     let mut encoded = Vec::new();
-    write_msg(&mut encoded, &Msg::Features { frame_id: 1, device_id: 0, tensor })
-        .unwrap();
+    write_msg(
+        &mut encoded,
+        &Msg::Features {
+            frame_id: 1,
+            device_id: 0,
+            tensor,
+            session: scmii::net::DEFAULT_SESSION.into(),
+        },
+    )
+    .unwrap();
     bench.run("wire decode Features (1 MiB)", || {
         std::hint::black_box(read_msg(&mut encoded.as_slice()).unwrap());
     });
@@ -105,7 +118,10 @@ fn main() {
         bench.run("HLO head exec (points -> features)", || {
             std::hint::black_box(pipeline.run_head(0, &cloud).unwrap());
         });
-        bench.run("HLO tail exec conv_k3 (2 feats -> dets)", || {
+        // run_tail crosses the engine-actor thread, so this number
+        // includes the feature copy + channel hop the serving core pays
+        // on its borrowed-input path (infer() moves tensors instead).
+        bench.run("HLO tail exec conv_k3 (2 feats -> dets, via session)", || {
             std::hint::black_box(pipeline.run_tail(&feats).unwrap());
         });
     } else {

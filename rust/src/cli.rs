@@ -95,6 +95,13 @@ impl Args {
         }
     }
 
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.values.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
@@ -178,5 +185,14 @@ mod tests {
     fn bad_number_errors() {
         let a = parse(&["--n", "abc"]);
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn f32_accessor() {
+        let a = parse(&["--score-thresh", "0.4"]);
+        assert!((a.f32_or("score-thresh", 0.25).unwrap() - 0.4).abs() < 1e-6);
+        assert!((a.f32_or("missing", 0.25).unwrap() - 0.25).abs() < 1e-6);
+        let bad = parse(&["--score-thresh", "abc"]);
+        assert!(bad.f32_or("score-thresh", 0.25).is_err());
     }
 }

@@ -17,6 +17,9 @@ use std::time::{Duration, Instant};
 pub struct DeviceConfig {
     pub device_id: usize,
     pub server: String,
+    /// Named [`DetectorSession`](super::session::DetectorSession) on the
+    /// server this worker feeds (multi-intersection hosting).
+    pub session: String,
     pub variant: IntegrationKind,
     /// Inter-frame period (paper: 10 Hz sensors). `None` = as fast as
     /// possible (throughput mode).
@@ -34,6 +37,7 @@ impl Default for DeviceConfig {
         DeviceConfig {
             device_id: 0,
             server: "127.0.0.1:7321".into(),
+            session: crate::net::DEFAULT_SESSION.into(),
             variant: IntegrationKind::ConvK3,
             period: Some(Duration::from_millis(100)),
             bandwidth_bps: Some(1e9),
@@ -50,6 +54,12 @@ pub fn run_device(
     cfg: &DeviceConfig,
     frames: &[Vec<Point>],
 ) -> Result<Vec<(f64, f64)>> {
+    anyhow::ensure!(
+        !cfg.session.is_empty() && cfg.session.len() <= crate::net::MAX_SESSION_NAME,
+        "session name must be 1..={} bytes, got {:?}",
+        crate::net::MAX_SESSION_NAME,
+        cfg.session
+    );
     let meta = ModelMeta::load(&paths.model_meta())?;
     let vm = meta.variant(cfg.variant)?;
     let head_name = vm.heads[cfg.device_id].clone();
@@ -63,7 +73,10 @@ pub fn run_device(
         Some(bw) => ShapedWriter::new(stream, bw),
         None => ShapedWriter::unshaped(stream),
     };
-    write_msg(&mut writer, &Msg::Hello { device_id: cfg.device_id as u32 })?;
+    write_msg(
+        &mut writer,
+        &Msg::Hello { device_id: cfg.device_id as u32, session: cfg.session.clone() },
+    )?;
 
     let metrics = Metrics::new();
     let mut out = Vec::new();
@@ -85,12 +98,14 @@ pub fn run_device(
                 frame_id: frame_id as u64,
                 device_id: cfg.device_id as u32,
                 tensor: crate::net::quantize(&feat.remove(0)),
+                session: cfg.session.clone(),
             }
         } else {
             Msg::Features {
                 frame_id: frame_id as u64,
                 device_id: cfg.device_id as u32,
                 tensor: feat.remove(0),
+                session: cfg.session.clone(),
             }
         };
         write_msg(&mut writer, &msg)?;
@@ -118,6 +133,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         "data",
         "device",
         "server",
+        "session",
         "variant",
         "hz",
         "bandwidth-gbps",
@@ -133,6 +149,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
     let mut cfg = DeviceConfig::default();
     cfg.device_id = args.usize_or("device", 0)?;
     cfg.server = args.str_or("server", &cfg.server);
+    cfg.session = args.str_or("session", &cfg.session);
     cfg.variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
     let hz = args.f64_or("hz", 10.0)?;
     cfg.period = if hz > 0.0 { Some(Duration::from_secs_f64(1.0 / hz)) } else { None };

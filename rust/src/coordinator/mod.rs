@@ -1,15 +1,21 @@
 //! The SC-MII coordinator — the paper's system contribution at layer 3.
 //!
-//! Three deployment shapes share the same compute:
-//! - [`pipeline`] — in-process split pipeline (deterministic; eval/bench).
+//! One serving core, three frontends:
+//! - [`session`] — the transport-agnostic `DetectorSession` core (frame
+//!   sync → integration + tail → decode/NMS) plus the `SessionRegistry`
+//!   that lets one process host many named sessions.
+//! - [`pipeline`] — in-process driver over the session core
+//!   (deterministic; eval/bench).
 //! - [`server`] + [`device`] — the distributed deployment: one edge
-//!   server (tail model) and one worker per LiDAR (head model), talking
-//!   the `net` protocol over TCP with bandwidth shaping.
-//! - [`scheduler`] — the server-side frame synchronizer pairing
-//!   intermediate outputs by frame id, with timeout and partial-loss
-//!   policies (paper §IV-E future work, implemented here).
+//!   server (pure I/O over the session core) and one worker per LiDAR
+//!   (head model), talking the `net` protocol over TCP with bandwidth
+//!   shaping.
+//! - [`scheduler`] — the frame synchronizer pairing intermediate outputs
+//!   by frame id, with timeout and partial-loss policies (paper §IV-E
+//!   future work, implemented here). Owned by the session core.
 
 pub mod device;
 pub mod pipeline;
 pub mod scheduler;
 pub mod server;
+pub mod session;

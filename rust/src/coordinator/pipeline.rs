@@ -1,20 +1,30 @@
-//! In-process SC-MII pipeline: the full inference flow of Fig 2 on one
+//! In-process SC-MII frontend: the full inference flow of Fig 2 on one
 //! machine, deterministic and instrumented. The accuracy evaluation
 //! (Table III) and the execution-time model (Fig 5) both drive this.
+//!
+//! This is a *thin driver* over the
+//! [`DetectorSession`](super::session::DetectorSession) serving core: it
+//! runs the head models locally, submits the intermediate outputs to the
+//! session, and reads the completed frame back — exactly the code path
+//! the TCP server exercises, minus the sockets. Post-processing and
+//! decode parameters live in the session, so eval numbers measure what
+//! serving returns.
 //!
 //! Spatial alignment executes *inside the tail HLO* as a static gather
 //! whose index map `python/compile/aot.py` baked from `calib.json` —
 //! i.e. the edge server performs the coordinate transformation, as in
 //! the paper; it just does so within the compiled tail graph.
 
+use super::session::{DetectorSession, FeaturePayload, FrameResult, SessionConfig, SessionEvent};
 use crate::cli::Args;
 use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
 use crate::geom::Pose;
-use crate::model::{postprocess, DecodeParams, Detection};
-use crate::runtime::{Engine, HostTensor};
+use crate::model::{DecodeParams, Detection};
+use crate::runtime::{EngineActor, EngineHandle, HostTensor};
 use crate::voxel::{merge_clouds, points_to_tensor, Point};
 use anyhow::{Context, Result};
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 /// Per-frame timing breakdown (seconds measured on this machine; the
 /// latency model scales them to the paper's testbed).
@@ -45,15 +55,20 @@ pub fn load_calib(paths: &Paths) -> Result<Vec<Pose>> {
     Ok(out)
 }
 
-/// The in-process pipeline for one integration variant.
+/// The in-process frontend for one integration variant: heads + a
+/// [`DetectorSession`] sharing one engine actor.
 pub struct ScMiiPipeline {
     pub meta: ModelMeta,
     pub variant: IntegrationKind,
-    engine: Engine,
-    decode: DecodeParams,
+    /// Keeps the engine thread alive for the session/handle.
+    _actor: EngineActor,
+    engine: EngineHandle,
+    session: DetectorSession,
     head_names: Vec<String>,
-    tail_name: String,
     calib: Vec<Pose>,
+    /// Monotone frame ids so the session's synchronizer never sees a
+    /// frame id reused across `infer` calls.
+    next_frame: AtomicU64,
 }
 
 impl ScMiiPipeline {
@@ -66,37 +81,46 @@ impl ScMiiPipeline {
         );
         let meta = ModelMeta::load(&paths.model_meta())?;
         let vm = meta.variant(variant)?.clone();
-        let mut engine = Engine::cpu()?;
-        for h in &vm.heads {
-            engine.load(paths, h)?;
-        }
-        engine.load(paths, &vm.tail)?;
+        let mut names = vm.heads.clone();
+        names.push(vm.tail.clone());
+        let actor = EngineActor::spawn(paths.clone(), &names)?;
+        let engine = actor.handle();
         let calib = load_calib(paths).context("load calib.json (run `scmii setup`)")?;
+        // In-process frames complete synchronously: a generous deadline +
+        // Drop policy means the session never zero-fills mid-`infer`.
+        let cfg = SessionConfig::new(variant)
+            .deadline(Duration::from_secs(3600))
+            .policy(super::scheduler::LossPolicy::Drop);
+        let session = DetectorSession::new("pipeline", meta.clone(), engine.clone(), cfg)?;
         Ok(ScMiiPipeline {
             meta,
             variant,
+            _actor: actor,
             engine,
-            decode: DecodeParams::default(),
+            session,
             head_names: vm.heads,
-            tail_name: vm.tail,
             calib,
+            next_frame: AtomicU64::new(0),
         })
     }
 
     /// Also load baseline artifacts (single-LiDAR fulls + input
     /// integration) into the same engine for the eval harness.
-    pub fn load_baselines(&mut self, paths: &Paths) -> Result<()> {
-        let singles = self.meta.single_full.clone();
-        for name in &singles {
-            self.engine.load(paths, name)?;
+    pub fn load_baselines(&mut self, _paths: &Paths) -> Result<()> {
+        for name in &self.meta.single_full {
+            self.engine.load(name)?;
         }
-        let full = self.meta.input_integration_full.clone();
-        self.engine.load(paths, &full)?;
+        self.engine.load(&self.meta.input_integration_full)?;
         Ok(())
     }
 
+    /// The serving core this pipeline drives (metrics, sync stats).
+    pub fn session(&self) -> &DetectorSession {
+        &self.session
+    }
+
     pub fn decode_params(&mut self) -> &mut DecodeParams {
-        &mut self.decode
+        self.session.decode_params_mut()
     }
 
     /// Run one device's head model on its local point cloud.
@@ -105,51 +129,73 @@ impl ScMiiPipeline {
             vec![self.meta.grid.max_points, 4],
             points_to_tensor(points, self.meta.grid.max_points),
         )?;
-        let mut out = self.engine.exec(&self.head_names[device], &[input])?;
+        let mut out = self.engine.exec(&self.head_names[device], vec![input])?;
         anyhow::ensure!(out.len() == 1, "head returns one tensor");
         Ok(out.remove(0))
     }
 
     /// Run the tail on per-device features (alignment happens inside).
+    /// Clones `features` to cross the engine-actor thread; callers that
+    /// can give up ownership should prefer driving [`Self::infer`],
+    /// which moves tensors into the session without copying.
     pub fn run_tail(&self, features: &[HostTensor]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let out = self.engine.exec(&self.tail_name, features)?;
-        anyhow::ensure!(out.len() == 2, "tail returns (cls, boxes)");
-        Ok((out[0].data.clone(), out[1].data.clone()))
+        self.session.run_tail(features.to_vec())
     }
 
-    /// Full SC-MII inference over one frame (all devices' local clouds).
+    /// Full SC-MII inference over one frame (all devices' local clouds):
+    /// heads here, everything downstream in the [`DetectorSession`].
     pub fn infer(&self, clouds: &[Vec<Point>]) -> Result<(Vec<Detection>, FrameTiming)> {
         anyhow::ensure!(clouds.len() == self.meta.num_devices, "cloud count mismatch");
+        let frame_id = self.next_frame.fetch_add(1, Ordering::SeqCst);
         let mut timing = FrameTiming::default();
-        let mut features = Vec::with_capacity(clouds.len());
-        for (dev, cloud) in clouds.iter().enumerate() {
-            let t0 = Instant::now();
-            let feat = self.run_head(dev, cloud)?;
-            timing.head_secs.push(t0.elapsed().as_secs_f64());
-            timing.payload_bytes.push(feat.data.len() * 4);
-            features.push(feat);
-        }
-        let t0 = Instant::now();
-        let (cls, boxes) = self.run_tail(&features)?;
-        timing.tail_secs = t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
-        let dets = postprocess(&cls, &boxes, &self.meta, &self.decode);
-        timing.post_secs = t0.elapsed().as_secs_f64();
-        Ok((dets, timing))
+        let drive = |timing: &mut FrameTiming| -> Result<Option<FrameResult>> {
+            let mut completed = None;
+            for (dev, cloud) in clouds.iter().enumerate() {
+                let t0 = Instant::now();
+                let feat = self.run_head(dev, cloud)?;
+                timing.head_secs.push(t0.elapsed().as_secs_f64());
+                timing.payload_bytes.push(feat.data.len() * 4);
+                for event in self.session.submit(frame_id, dev, FeaturePayload::Raw(feat))? {
+                    if let SessionEvent::Result(r) = event {
+                        if r.frame_id == frame_id {
+                            completed = Some(r);
+                        }
+                    }
+                }
+            }
+            Ok(completed)
+        };
+        let completed = match drive(&mut timing) {
+            Ok(c) => c,
+            Err(e) => {
+                // Release any tensors already buffered for this frame so a
+                // failed head doesn't pin memory until the deadline.
+                self.session.abort_frame(frame_id);
+                return Err(e);
+            }
+        };
+        let Some(r) = completed else {
+            self.session.abort_frame(frame_id);
+            anyhow::bail!("session did not complete a fully-submitted frame");
+        };
+        anyhow::ensure!(!r.tail_error, "tail execution failed for frame {frame_id}");
+        timing.tail_secs = r.tail_secs;
+        timing.post_secs = r.post_secs;
+        Ok((r.detections, timing))
     }
 
     /// Baseline: single-LiDAR full model on one device's cloud.
     pub fn infer_single(&self, device: usize, cloud: &[Point]) -> Result<(Vec<Detection>, f64)> {
-        let name = &self.meta.single_full[device];
+        let name = self.meta.single_full[device].clone();
         let input = HostTensor::new(
             vec![self.meta.grid.max_points, 4],
             points_to_tensor(cloud, self.meta.grid.max_points),
         )?;
         let t0 = Instant::now();
-        let out = self.engine.exec(name, &[input])?;
+        let out = self.engine.exec(&name, vec![input])?;
         let secs = t0.elapsed().as_secs_f64();
         anyhow::ensure!(out.len() == 2, "full model returns (cls, boxes)");
-        Ok((postprocess(&out[0].data, &out[1].data, &self.meta, &self.decode), secs))
+        Ok((self.session.decode_detections(&out[0].data, &out[1].data), secs))
     }
 
     /// Baseline: input point-cloud integration — transform device clouds
@@ -165,11 +211,12 @@ impl ScMiiPipeline {
             vec![self.meta.grid.max_points, 4],
             points_to_tensor(&merged, self.meta.grid.max_points),
         )?;
+        let name = self.meta.input_integration_full.clone();
         let t0 = Instant::now();
-        let out = self.engine.exec(&self.meta.input_integration_full, &[input])?;
+        let out = self.engine.exec(&name, vec![input])?;
         let secs = t0.elapsed().as_secs_f64();
         anyhow::ensure!(out.len() == 2, "full model returns (cls, boxes)");
-        Ok((postprocess(&out[0].data, &out[1].data, &self.meta, &self.decode), secs))
+        Ok((self.session.decode_detections(&out[0].data, &out[1].data), secs))
     }
 
     /// Transform per-device clouds into the common frame and interleave.
@@ -198,9 +245,10 @@ impl ScMiiPipeline {
         &self.calib
     }
 
-    /// Post-process raw tail outputs (used by the TCP server path).
+    /// Post-process raw tail outputs with this pipeline's session
+    /// parameters (ablation benches).
     pub fn postprocess_raw(&self, cls: &[f32], boxes: &[f32]) -> Vec<Detection> {
-        postprocess(cls, boxes, &self.meta, &self.decode)
+        self.session.decode_detections(cls, boxes)
     }
 }
 
@@ -262,5 +310,6 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
         );
     }
     print!("{}", metrics.report());
+    print!("{}", pipeline.session().metrics().report());
     Ok(())
 }

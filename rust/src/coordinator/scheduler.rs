@@ -41,6 +41,9 @@ struct Pending {
     first_arrival: Instant,
 }
 
+/// How long an emission record is kept to classify late arrivals.
+const DEFAULT_EMITTED_HORIZON: Duration = Duration::from_secs(30);
+
 /// The synchronizer. Not thread-safe by itself — wrap in a `Mutex`.
 pub struct FrameSync {
     n_devices: usize,
@@ -51,6 +54,10 @@ pub struct FrameSync {
     pending: HashMap<u64, Pending>,
     /// Frames already emitted (late arrivals for these are dropped).
     emitted: HashMap<u64, Instant>,
+    /// Retention window for `emitted` records.
+    emitted_horizon: Duration,
+    /// Frame ids discarded under [`LossPolicy::Drop`], awaiting collection.
+    dropped_log: Vec<u64>,
     pub stats: SyncStats,
 }
 
@@ -78,8 +85,16 @@ impl FrameSync {
             feature_shape,
             pending: HashMap::new(),
             emitted: HashMap::new(),
+            emitted_horizon: DEFAULT_EMITTED_HORIZON,
+            dropped_log: Vec::new(),
             stats: SyncStats::default(),
         }
+    }
+
+    /// Override the retention window for emission records (tests and
+    /// high-frame-rate deployments).
+    pub fn set_emitted_horizon(&mut self, horizon: Duration) {
+        self.emitted_horizon = horizon;
     }
 
     /// Register features from a device. Returns the frame when complete.
@@ -131,6 +146,7 @@ impl FrameSync {
                 LossPolicy::Drop => {
                     self.stats.timed_out += 1;
                     self.stats.dropped_frames += 1;
+                    self.dropped_log.push(id);
                 }
                 LossPolicy::ZeroFill => {
                     self.stats.timed_out += 1;
@@ -158,10 +174,32 @@ impl FrameSync {
         self.pending.len()
     }
 
+    /// Number of retained emission records (observability / tests).
+    pub fn emitted_len(&self) -> usize {
+        self.emitted.len()
+    }
+
+    /// Drain the frame ids discarded under [`LossPolicy::Drop`] since the
+    /// last call (the session core turns these into `Dropped` events).
+    pub fn take_dropped(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.dropped_log)
+    }
+
+    /// Discard a pending frame and its buffered tensors without emitting
+    /// anything (a frontend abandoned the frame mid-submission). Returns
+    /// whether the frame was pending.
+    pub fn abort(&mut self, frame_id: u64) -> bool {
+        self.pending.remove(&frame_id).is_some()
+    }
+
     fn gc_emitted(&mut self) {
-        // Bound memory: forget emission records after 30 s.
-        if self.emitted.len() > 4096 {
-            let cutoff = Instant::now() - Duration::from_secs(30);
+        // Bound memory: forget emission records past the horizon. This must
+        // run on time, not on size — a slow trickle of frames would
+        // otherwise grow `emitted` unboundedly below any size threshold.
+        if self.emitted.is_empty() {
+            return;
+        }
+        if let Some(cutoff) = Instant::now().checked_sub(self.emitted_horizon) {
             self.emitted.retain(|_, t| *t > cutoff);
         }
     }
@@ -228,6 +266,49 @@ mod tests {
         assert_eq!(ready[0].present, vec![false, true]);
         assert_eq!(ready[0].tensors.len(), 2);
         assert!(ready[0].tensors[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn emitted_records_gc_on_time_basis() {
+        // Regression: gc must fire below the old 4096-entry threshold —
+        // emission records older than the horizon are forgotten on the
+        // next add/poll even with only a handful of frames in flight.
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        s.set_emitted_horizon(Duration::from_millis(30));
+        for id in 0..8u64 {
+            s.add(id, 0, t());
+            s.add(id, 1, t());
+        }
+        assert!(s.emitted_len() > 0);
+        std::thread::sleep(Duration::from_millis(60));
+        // Any synchronizer activity past the horizon triggers the gc.
+        s.add(100, 0, t());
+        s.add(100, 1, t());
+        assert!(
+            s.emitted_len() <= 1,
+            "stale emission records must be collected, have {}",
+            s.emitted_len()
+        );
+    }
+
+    #[test]
+    fn abort_discards_pending_frame() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::ZeroFill, vec![2, 2]);
+        s.add(3, 0, t());
+        assert_eq!(s.pending_len(), 1);
+        assert!(s.abort(3));
+        assert_eq!(s.pending_len(), 0);
+        assert!(!s.abort(3), "second abort is a no-op");
+    }
+
+    #[test]
+    fn dropped_frames_are_reported_once() {
+        let mut s = FrameSync::new(2, Duration::from_millis(10), LossPolicy::Drop, vec![2, 2]);
+        s.add(7, 0, t());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(s.poll_expired().is_empty());
+        assert_eq!(s.take_dropped(), vec![7]);
+        assert!(s.take_dropped().is_empty(), "drain must be one-shot");
     }
 
     #[test]

@@ -1,28 +1,43 @@
-//! The edge server: receives intermediate outputs from device workers
-//! over TCP, synchronizes them per frame, runs the tail model
-//! (alignment + integration + detection heads) and publishes results.
+//! The edge server, reduced to pure I/O: sockets in, [`Msg`]s decoded,
+//! everything else delegated to the [`DetectorSession`] serving core.
+//! One process hosts N named sessions (multiple intersections, A/B
+//! integration variants) through a [`SessionRegistry`]; wire messages
+//! address a session by name, with pre-session clients landing on
+//! [`DEFAULT_SESSION`].
 
-use super::scheduler::{FrameSync, LossPolicy};
+use super::scheduler::LossPolicy;
+use super::session::{
+    DetectorSession, FeaturePayload, FrameResult, ResultSink, SessionConfig, SessionEvent,
+    SessionRegistry,
+};
 use crate::cli::Args;
 use crate::config::{IntegrationKind, ModelMeta, Paths};
-use crate::metrics::Metrics;
-use crate::model::{postprocess, DecodeParams};
-use crate::net::{read_msg, write_msg, Msg, WireDetection};
-use crate::runtime::{EngineActor, EngineHandle};
+use crate::model::DecodeParams;
+use crate::net::{write_msg, Msg, WireDetection, DEFAULT_SESSION};
+use crate::runtime::EngineActor;
 use anyhow::{Context, Result};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-/// Server configuration.
+/// Server configuration. The top-level fields describe the `"default"`
+/// session; `extra_sessions` adds more, each with its own
+/// [`SessionConfig`].
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub port: u16,
     pub variant: IntegrationKind,
     pub deadline: Duration,
     pub policy: LossPolicy,
-    /// Stop after this many frames (None = run until Ctrl-C).
+    /// Decode parameters for the default session (satellite fix: the old
+    /// server silently post-processed with `DecodeParams::default()`).
+    pub decode: DecodeParams,
+    /// Stop after this many frames across all sessions (None = run until
+    /// Ctrl-C).
     pub max_frames: Option<u64>,
+    /// Additional named sessions hosted alongside the default one.
+    pub extra_sessions: Vec<(String, SessionConfig)>,
 }
 
 impl Default for ServerConfig {
@@ -32,73 +47,170 @@ impl Default for ServerConfig {
             variant: IntegrationKind::ConvK3,
             deadline: Duration::from_millis(200),
             policy: LossPolicy::ZeroFill,
+            decode: DecodeParams::default(),
             max_frames: None,
+            extra_sessions: Vec::new(),
         }
     }
 }
 
-struct Shared {
-    sync: Mutex<FrameSync>,
-    subscribers: Mutex<Vec<TcpStream>>,
-    metrics: Metrics,
-    done: std::sync::atomic::AtomicBool,
-    frames_out: std::sync::atomic::AtomicU64,
+impl ServerConfig {
+    /// Every session this server hosts: the default one first, then the
+    /// extras. Duplicate names are a configuration error — the registry
+    /// would silently keep only the last one.
+    pub fn session_specs(&self) -> Result<Vec<(String, SessionConfig)>> {
+        let mut specs = vec![(
+            DEFAULT_SESSION.to_string(),
+            SessionConfig::new(self.variant)
+                .deadline(self.deadline)
+                .policy(self.policy)
+                .decode(self.decode.clone()),
+        )];
+        specs.extend(self.extra_sessions.iter().cloned());
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, _) in &specs {
+            anyhow::ensure!(
+                seen.insert(name.clone()),
+                "duplicate session name {name:?} (the default session is named {DEFAULT_SESSION:?})"
+            );
+        }
+        Ok(specs)
+    }
 }
 
-/// Run the edge server until `max_frames` results have been produced.
-/// Returns the metrics collected.
-pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<Metrics>> {
-    let meta = ModelMeta::load(&paths.model_meta())?;
-    let vm = meta.variant(cfg.variant)?.clone();
-    let actor = EngineActor::spawn(paths.clone(), &[vm.tail.clone()])?;
-    let engine = actor.handle();
+/// Forwards completed frames to one subscriber connection. The stream is
+/// shared behind a mutex so one connection subscribed to several
+/// sessions gets whole frames, not interleaved writes from two sessions
+/// delivering concurrently.
+struct TcpSink {
+    stream: Arc<std::sync::Mutex<TcpStream>>,
+}
 
-    let grid = &meta.grid;
-    let feat_shape = vec![grid.dims[2], grid.dims[1], grid.dims[0], grid.c_head];
+impl ResultSink for TcpSink {
+    fn deliver(&mut self, _session: &str, result: &FrameResult) -> Result<()> {
+        let detections: Vec<WireDetection> = result
+            .detections
+            .iter()
+            .map(|d| WireDetection {
+                bbox: d.bbox.to_array(),
+                score: d.score,
+                class_id: d.class_id as u32,
+            })
+            .collect();
+        let stream = self.stream.lock().unwrap();
+        let mut writer = &*stream;
+        let out = write_msg(
+            &mut writer,
+            &Msg::Result {
+                frame_id: result.frame_id,
+                detections,
+                server_micros: (result.tail_secs * 1e6) as u64,
+            },
+        );
+        if let Err(e) = &out {
+            // A timed-out write may have left a torn frame on the socket;
+            // the sink is about to be detached, so close the stream —
+            // otherwise the subscriber would block forever on a partial
+            // frame with no signal that delivery stopped.
+            log::warn!("subscriber write failed, closing its stream: {e:#}");
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        out
+    }
+}
+
+struct Shared {
+    registry: Arc<SessionRegistry>,
+    done: AtomicBool,
+    frames_out: AtomicU64,
+    max_frames: Option<u64>,
+}
+
+impl Shared {
+    /// Count completed frames toward the shutdown budget.
+    fn note_events(&self, events: &[SessionEvent]) {
+        let n = events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::Result(_)))
+            .count() as u64;
+        if n == 0 {
+            return;
+        }
+        let done = self.frames_out.fetch_add(n, Ordering::SeqCst) + n;
+        if let Some(max) = self.max_frames {
+            if done >= max {
+                self.done.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn poll_sessions(&self) {
+        for (_, events) in self.registry.poll_all() {
+            self.note_events(&events);
+        }
+    }
+}
+
+/// Run the edge server until `max_frames` results have been produced
+/// across all sessions. Returns the registry so callers can inspect
+/// per-session metrics.
+pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegistry>> {
+    let meta = ModelMeta::load(&paths.model_meta())?;
+    let specs = cfg.session_specs()?;
+
+    // One engine actor serves every session; preload each distinct tail.
+    let mut tails: Vec<String> = Vec::new();
+    for (_, sc) in &specs {
+        let tail = meta.variant(sc.variant)?.tail.clone();
+        if !tails.contains(&tail) {
+            tails.push(tail);
+        }
+    }
+    let actor = EngineActor::spawn(paths.clone(), &tails)?;
+
+    let registry = Arc::new(SessionRegistry::new());
+    for (name, sc) in specs {
+        registry.insert(DetectorSession::new(&name, meta.clone(), actor.handle(), sc)?);
+    }
     let shared = Arc::new(Shared {
-        sync: Mutex::new(FrameSync::new(meta.num_devices, cfg.deadline, cfg.policy, feat_shape)),
-        subscribers: Mutex::new(Vec::new()),
-        metrics: Metrics::new(),
-        done: std::sync::atomic::AtomicBool::new(false),
-        frames_out: std::sync::atomic::AtomicU64::new(0),
+        registry: Arc::clone(&registry),
+        done: AtomicBool::new(false),
+        frames_out: AtomicU64::new(0),
+        max_frames: cfg.max_frames,
     });
 
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))
         .with_context(|| format!("bind port {}", cfg.port))?;
     listener.set_nonblocking(true)?;
     log::info!(
-        "edge server on 127.0.0.1:{} variant={} devices={}",
+        "edge server on 127.0.0.1:{} sessions={:?} devices={} resident={:?}",
         cfg.port,
-        cfg.variant.name(),
-        meta.num_devices
+        registry.names(),
+        meta.num_devices,
+        actor.handle().loaded().unwrap_or_default()
     );
 
     let mut conn_threads = Vec::new();
     let deadline_poll = Duration::from_millis(20);
     loop {
-        if shared.done.load(std::sync::atomic::Ordering::SeqCst) {
+        if shared.done.load(Ordering::SeqCst) {
             break;
         }
         match listener.accept() {
             Ok((stream, addr)) => {
                 log::debug!("connection from {addr}");
                 let shared = Arc::clone(&shared);
-                let engine = engine.clone();
-                let meta = meta.clone();
-                let tail = vm.tail.clone();
-                let cfg = cfg.clone();
                 conn_threads.push(std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, shared, engine, meta, tail, cfg) {
-                        log::debug!("connection ended: {e:#}");
+                    if let Err(e) = handle_conn(stream, shared) {
+                        // Clean disconnects return Ok; an Err here is a
+                        // protocol violation (e.g. unknown session).
+                        log::warn!("connection closed with error: {e:#}");
                     }
                 }));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // Poll expired frames while idle.
-                let expired = shared.sync.lock().unwrap().poll_expired();
-                for ready in expired {
-                    process_ready(&shared, &engine, &meta, &vm.tail, cfg, ready);
-                }
+                // Resolve expired frames while idle.
+                shared.poll_sessions();
                 std::thread::sleep(deadline_poll);
             }
             Err(e) => return Err(e.into()),
@@ -107,40 +219,25 @@ pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<Metrics>> {
     for t in conn_threads {
         let _ = t.join();
     }
-    // Metrics live in Shared; clone the report out via Arc.
-    let shared2 = Arc::clone(&shared);
-    drop(shared);
-    // Safe: all threads joined; extract metrics by Arc::try_unwrap fallback.
-    Ok(Arc::new(match Arc::try_unwrap(shared2) {
-        Ok(s) => s.metrics,
-        Err(arc) => {
-            // Still referenced (should not happen); clone the report only.
-            let m = Metrics::new();
-            m.incr("metrics_clone_fallback", 1);
-            log::warn!("metrics still shared; report:\n{}", arc.metrics.report());
-            m
-        }
-    }))
+    Ok(registry)
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    shared: Arc<Shared>,
-    engine: EngineHandle,
-    meta: ModelMeta,
-    tail: String,
-    cfg: ServerConfig,
-) -> Result<()> {
+/// One connection: decode messages, route them to the addressed session.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     stream.set_nodelay(true)?;
     // Read timeout so the thread re-checks `done` even on idle
     // connections (e.g. a subscriber that only listens).
     stream.set_read_timeout(Some(Duration::from_millis(250)))?;
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    // One write handle per connection, shared by every sink this
+    // connection subscribes, so concurrent sessions cannot interleave
+    // frames on the socket.
+    let mut sink_stream: Option<Arc<std::sync::Mutex<TcpStream>>> = None;
     loop {
-        if shared.done.load(std::sync::atomic::Ordering::SeqCst) {
+        if shared.done.load(Ordering::SeqCst) {
             return Ok(());
         }
-        let msg = match read_msg(&mut reader) {
+        let msg = match crate::net::read_msg(&mut reader) {
             Ok(m) => m,
             Err(e) => {
                 // Timeout (no header byte yet): keep polling. Any other
@@ -154,50 +251,60 @@ fn handle_conn(
                 if timed_out {
                     continue;
                 }
-                return Ok(()); // connection closed
+                // Peer closed, or the stream desynced / failed to decode:
+                // keep a trace, the other end may be wondering why its
+                // frames stopped landing.
+                log::debug!("connection read ended: {e:#}");
+                return Ok(());
             }
         };
         match msg {
-            Msg::Hello { device_id } => {
-                log::info!("device {device_id} connected");
+            Msg::Hello { device_id, session } => {
+                // Unknown session: closing the connection is the only
+                // signal the protocol can give the peer — silently
+                // dropping its traffic would let a typoed `--session`
+                // "succeed" while every frame is discarded.
+                anyhow::ensure!(
+                    shared.registry.get(&session).is_some(),
+                    "device {device_id} greeted unknown session {session:?} (have {:?})",
+                    shared.registry.names()
+                );
+                log::info!("device {device_id} connected to session {session:?}");
             }
-            Msg::Subscribe => {
-                shared.subscribers.lock().unwrap().push(stream.try_clone()?);
-                log::info!("result subscriber attached");
-            }
-            Msg::Features { frame_id, device_id, tensor } => {
-                shared.metrics.incr("features_rx", 1);
-                let ready =
-                    shared.sync.lock().unwrap().add(frame_id, device_id as usize, tensor);
-                if let Some(ready) = ready {
-                    process_ready(&shared, &engine, &meta, &tail, &cfg, ready);
-                }
-                // Opportunistically resolve expirations on traffic too.
-                let expired = shared.sync.lock().unwrap().poll_expired();
-                for r in expired {
-                    process_ready(&shared, &engine, &meta, &tail, &cfg, r);
-                }
-            }
-            Msg::FeaturesQ { frame_id, device_id, tensor } => {
-                // Compressed intermediate output (paper §IV-E): dequantize
-                // at the server edge, then flow through the same path.
-                shared.metrics.incr("features_rx_quantized", 1);
-                match crate::net::dequantize(&tensor) {
-                    Ok(full) => {
-                        let ready = shared
-                            .sync
-                            .lock()
-                            .unwrap()
-                            .add(frame_id, device_id as usize, full);
-                        if let Some(ready) = ready {
-                            process_ready(&shared, &engine, &meta, &tail, &cfg, ready);
+            Msg::Subscribe { session } => match shared.registry.get(&session) {
+                Some(s) => {
+                    let shared_stream = match &sink_stream {
+                        Some(st) => Arc::clone(st),
+                        None => {
+                            let st = stream.try_clone()?;
+                            // Bound sink writes so one stalled subscriber
+                            // cannot wedge result delivery for the whole
+                            // session.
+                            st.set_write_timeout(Some(Duration::from_secs(5)))?;
+                            let st = Arc::new(std::sync::Mutex::new(st));
+                            sink_stream = Some(Arc::clone(&st));
+                            st
                         }
-                    }
-                    Err(e) => {
-                        shared.metrics.incr("decode_errors", 1);
-                        log::warn!("bad quantized features: {e:#}");
-                    }
+                    };
+                    s.attach_sink(Box::new(TcpSink { stream: shared_stream }));
+                    log::info!("result subscriber attached to session {session:?}");
                 }
+                None => anyhow::bail!(
+                    "subscribe to unknown session {session:?} (have {:?})",
+                    shared.registry.names()
+                ),
+            },
+            Msg::Features { frame_id, device_id, tensor, session } => {
+                submit(&shared, &session, frame_id, device_id, FeaturePayload::Raw(tensor))?;
+            }
+            Msg::FeaturesQ { frame_id, device_id, tensor, session } => {
+                submit(
+                    &shared,
+                    &session,
+                    frame_id,
+                    device_id,
+                    FeaturePayload::Quantized(tensor),
+                )?;
             }
             Msg::Bye => return Ok(()),
             Msg::Result { .. } => {
@@ -207,63 +314,88 @@ fn handle_conn(
     }
 }
 
-fn process_ready(
-    shared: &Arc<Shared>,
-    engine: &EngineHandle,
-    meta: &ModelMeta,
-    tail: &str,
-    cfg: &ServerConfig,
-    ready: super::scheduler::ReadyFrame,
-) {
-    let t0 = Instant::now();
-    let result = engine.exec(tail, ready.tensors);
-    let tail_secs = t0.elapsed().as_secs_f64();
-    shared.metrics.record("tail_exec", tail_secs);
-    shared
-        .metrics
-        .record("sync_wait", t0.duration_since(ready.first_arrival).as_secs_f64());
-    let dets = match result {
-        Ok(out) if out.len() == 2 => {
-            postprocess(&out[0].data, &out[1].data, meta, &DecodeParams::default())
-        }
-        Ok(_) | Err(_) => {
-            shared.metrics.incr("tail_errors", 1);
-            Vec::new()
-        }
+/// Route one intermediate output into its session; dequantization and
+/// post-processing happen inside the session core. An unknown session is
+/// an error (closes the connection); a bad payload is logged and
+/// tolerated so one corrupt frame doesn't kill a healthy device link.
+fn submit(
+    shared: &Shared,
+    session: &str,
+    frame_id: u64,
+    device_id: u32,
+    payload: FeaturePayload,
+) -> Result<()> {
+    let Some(sess) = shared.registry.get(session) else {
+        anyhow::bail!(
+            "features for unknown session {session:?} (have {:?})",
+            shared.registry.names()
+        );
     };
-    shared.metrics.incr("frames_done", 1);
-    let wire: Vec<WireDetection> = dets
-        .iter()
-        .map(|d| WireDetection {
-            bbox: d.bbox.to_array(),
-            score: d.score,
-            class_id: d.class_id as u32,
-        })
-        .collect();
-    let msg = Msg::Result {
-        frame_id: ready.frame_id,
-        detections: wire,
-        server_micros: (tail_secs * 1e6) as u64,
-    };
-    let mut subs = shared.subscribers.lock().unwrap();
-    subs.retain_mut(|s| write_msg(s, &msg).is_ok());
-    drop(subs);
-
-    let done = shared
-        .frames_out
-        .fetch_add(1, std::sync::atomic::Ordering::SeqCst)
-        + 1;
-    if let Some(max) = cfg.max_frames {
-        if done >= max {
-            shared.done.store(true, std::sync::atomic::Ordering::SeqCst);
-        }
+    // Addressing errors close the connection (a misconfigured worker
+    // must not look like it is succeeding); a corrupt payload is logged
+    // and tolerated so one bad frame doesn't kill a healthy link.
+    anyhow::ensure!(
+        (device_id as usize) < sess.meta().num_devices,
+        "device {device_id} out of range for session {session:?} ({} devices)",
+        sess.meta().num_devices
+    );
+    // submit() already resolves this session's expirations; other
+    // sessions are polled by the accept loop every 20 ms. Polling them
+    // here too would make this connection thread run (and block on)
+    // other sessions' work — breaking per-session isolation.
+    match sess.submit(frame_id, device_id as usize, payload) {
+        Ok(events) => shared.note_events(&events),
+        Err(e) => log::warn!("submit to session {session:?} failed: {e:#}"),
     }
+    Ok(())
 }
 
-/// `scmii serve` CLI entry.
-pub fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["artifacts", "port", "variant", "deadline-ms", "policy", "max-frames"])?;
-    let paths = Paths::new(&args.str_or("artifacts", "artifacts"), "data");
+/// Parse `--sessions name=variant[:deadline_ms],...` into extra session
+/// configs; unset knobs inherit the default session's.
+pub fn parse_session_specs(
+    spec: &str,
+    base: &ServerConfig,
+) -> Result<Vec<(String, SessionConfig)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|s| !s.is_empty()) {
+        let (name, rest) = part
+            .split_once('=')
+            .with_context(|| format!("session spec {part:?} must be name=variant[:deadline_ms]"))?;
+        anyhow::ensure!(!name.is_empty(), "empty session name in {part:?}");
+        let (variant, deadline) = match rest.split_once(':') {
+            Some((v, ms)) => {
+                let ms: u64 = ms
+                    .parse()
+                    .with_context(|| format!("bad deadline {ms:?} in session spec {part:?}"))?;
+                (IntegrationKind::parse(v)?, Duration::from_millis(ms))
+            }
+            None => (IntegrationKind::parse(rest)?, base.deadline),
+        };
+        out.push((
+            name.to_string(),
+            SessionConfig::new(variant)
+                .deadline(deadline)
+                .policy(base.policy)
+                .decode(base.decode.clone()),
+        ));
+    }
+    Ok(out)
+}
+
+/// Build the server configuration from `scmii serve` flags (separated
+/// from `cmd_serve` so flag wiring is unit-testable).
+pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
+    args.check_known(&[
+        "artifacts",
+        "port",
+        "variant",
+        "deadline-ms",
+        "policy",
+        "max-frames",
+        "score-thresh",
+        "nms-iou",
+        "sessions",
+    ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
     cfg.variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
@@ -272,9 +404,117 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         "drop" => LossPolicy::Drop,
         _ => LossPolicy::ZeroFill,
     };
+    cfg.decode.score_threshold = args.f32_or("score-thresh", cfg.decode.score_threshold)?;
+    cfg.decode.nms_iou = args.f64_or("nms-iou", cfg.decode.nms_iou)?;
     let max = args.u64_or("max-frames", 0)?;
     cfg.max_frames = if max > 0 { Some(max) } else { None };
-    let metrics = run_server(&paths, &cfg)?;
-    print!("{}", metrics.report());
+    if let Some(spec) = args.str_opt("sessions") {
+        cfg.extra_sessions = parse_session_specs(spec, &cfg)?;
+    }
+    Ok(cfg)
+}
+
+/// `scmii serve` CLI entry.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let paths = Paths::new(&args.str_or("artifacts", "artifacts"), "data");
+    let cfg = server_config_from_args(args)?;
+    let registry = run_server(&paths, &cfg)?;
+    for name in registry.names() {
+        if let Some(s) = registry.get(&name) {
+            println!("--- session {name} ---");
+            print!("{}", s.metrics().report());
+        }
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn serve_flags_thread_decode_params() {
+        let cfg = server_config_from_args(&args(&[
+            "--score-thresh",
+            "0.4",
+            "--nms-iou",
+            "0.6",
+            "--deadline-ms",
+            "150",
+            "--policy",
+            "drop",
+        ]))
+        .unwrap();
+        assert!((cfg.decode.score_threshold - 0.4).abs() < 1e-6);
+        assert!((cfg.decode.nms_iou - 0.6).abs() < 1e-9);
+        assert_eq!(cfg.deadline, Duration::from_millis(150));
+        assert_eq!(cfg.policy, LossPolicy::Drop);
+        // ... and the session spec inherits them.
+        let specs = cfg.session_specs().unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].0, DEFAULT_SESSION);
+        assert!((specs[0].1.decode.score_threshold - 0.4).abs() < 1e-6);
+        assert_eq!(specs[0].1.policy, LossPolicy::Drop);
+    }
+
+    #[test]
+    fn serve_flags_default_decode_unchanged() {
+        let cfg = server_config_from_args(&args(&[])).unwrap();
+        let d = DecodeParams::default();
+        assert!((cfg.decode.score_threshold - d.score_threshold).abs() < 1e-9);
+        assert!((cfg.decode.nms_iou - d.nms_iou).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_serve_flag_rejected() {
+        assert!(server_config_from_args(&args(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn session_spec_parsing() {
+        let base = ServerConfig::default();
+        let specs = parse_session_specs("north=max,south=conv_k1:150", &base).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].0, "north");
+        assert_eq!(specs[0].1.variant, IntegrationKind::Max);
+        assert_eq!(specs[0].1.deadline, base.deadline);
+        assert_eq!(specs[1].0, "south");
+        assert_eq!(specs[1].1.variant, IntegrationKind::ConvK1);
+        assert_eq!(specs[1].1.deadline, Duration::from_millis(150));
+
+        assert!(parse_session_specs("noequals", &base).is_err());
+        assert!(parse_session_specs("x=notavariant", &base).is_err());
+        assert!(parse_session_specs("x=max:notanumber", &base).is_err());
+        assert!(parse_session_specs("=max", &base).is_err());
+    }
+
+    #[test]
+    fn server_config_lists_all_sessions() {
+        let mut cfg = ServerConfig::default();
+        cfg.extra_sessions =
+            vec![("aux".to_string(), SessionConfig::new(IntegrationKind::Max))];
+        let specs = cfg.session_specs().unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].0, DEFAULT_SESSION);
+        assert_eq!(specs[1].0, "aux");
+    }
+
+    #[test]
+    fn duplicate_session_names_rejected() {
+        let mut cfg = ServerConfig::default();
+        cfg.extra_sessions = vec![
+            ("north".to_string(), SessionConfig::new(IntegrationKind::Max)),
+            ("north".to_string(), SessionConfig::new(IntegrationKind::ConvK1)),
+        ];
+        assert!(cfg.session_specs().is_err(), "repeated extra name must fail");
+
+        let mut cfg = ServerConfig::default();
+        cfg.extra_sessions =
+            vec![(DEFAULT_SESSION.to_string(), SessionConfig::new(IntegrationKind::Max))];
+        assert!(cfg.session_specs().is_err(), "shadowing the default must fail");
+    }
 }

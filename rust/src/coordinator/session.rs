@@ -1,0 +1,754 @@
+//! The transport-agnostic serving core: one `DetectorSession` per hosted
+//! detector (paper Fig 2, right half — frame sync → integration + tail →
+//! decode/NMS), shared by every frontend.
+//!
+//! Before this module existed the Fig-2 flow was implemented three times
+//! — in `ScMiiPipeline::infer`, in the TCP server's ready-frame handler,
+//! and again (implicitly) in the eval/latency harnesses. Each copy had
+//! its own decode parameters and its own metrics, so a fix in one path
+//! silently missed the others. Now:
+//!
+//! - [`ScMiiPipeline`](super::pipeline::ScMiiPipeline) is a thin
+//!   synchronous driver: run heads, [`DetectorSession::submit`], read the
+//!   [`SessionEvent`]s back.
+//! - The TCP server is pure I/O: socket ⇄ [`Msg`](crate::net::Msg) ⇄
+//!   session, with results fanned out through [`ResultSink`]s.
+//! - The harnesses measure through the pipeline and therefore through
+//!   this exact code path — benchmark numbers come from the code that
+//!   serves traffic.
+//!
+//! A [`SessionRegistry`] lets one server process host N named sessions
+//! (multiple intersections, or A/B integration variants) addressed by the
+//! wire `session` field; each session keeps isolated state, config, and
+//! [`Metrics`].
+
+use super::scheduler::{FrameSync, LossPolicy, ReadyFrame, SyncStats};
+use crate::config::{IntegrationKind, ModelMeta};
+use crate::metrics::Metrics;
+use crate::model::{postprocess, DecodeParams, Detection};
+use crate::net::QuantTensor;
+use crate::runtime::{EngineHandle, HostTensor};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// An intermediate output arriving at the session, in whichever encoding
+/// the transport used. Dequantization lives *here*, not in per-transport
+/// match arms, so every frontend handles compressed payloads identically.
+#[derive(Clone, Debug)]
+pub enum FeaturePayload {
+    /// Full-precision f32 feature map.
+    Raw(HostTensor),
+    /// u8-quantized feature map (paper §IV-E compressed intermediate
+    /// outputs — 4× smaller on the wire).
+    Quantized(QuantTensor),
+}
+
+impl FeaturePayload {
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, FeaturePayload::Quantized(_))
+    }
+
+    /// Approximate wire size of this payload in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            FeaturePayload::Raw(t) => t.byte_len(),
+            FeaturePayload::Quantized(q) => q.byte_len(),
+        }
+    }
+
+    /// Decode to the full-precision tensor the tail model consumes.
+    pub fn into_tensor(self) -> Result<HostTensor> {
+        match self {
+            FeaturePayload::Raw(t) => Ok(t),
+            FeaturePayload::Quantized(q) => crate::net::dequantize(&q),
+        }
+    }
+}
+
+impl From<HostTensor> for FeaturePayload {
+    fn from(t: HostTensor) -> FeaturePayload {
+        FeaturePayload::Raw(t)
+    }
+}
+
+impl From<QuantTensor> for FeaturePayload {
+    fn from(q: QuantTensor) -> FeaturePayload {
+        FeaturePayload::Quantized(q)
+    }
+}
+
+/// Per-session configuration, built fluently:
+///
+/// ```ignore
+/// SessionConfig::new(IntegrationKind::ConvK3)
+///     .deadline(Duration::from_millis(150))
+///     .policy(LossPolicy::Drop)
+///     .decode(DecodeParams { score_threshold: 0.4, ..Default::default() })
+/// ```
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub variant: IntegrationKind,
+    pub deadline: Duration,
+    pub policy: LossPolicy,
+    pub decode: DecodeParams,
+}
+
+impl SessionConfig {
+    pub fn new(variant: IntegrationKind) -> SessionConfig {
+        SessionConfig {
+            variant,
+            deadline: Duration::from_millis(200),
+            policy: LossPolicy::ZeroFill,
+            decode: DecodeParams::default(),
+        }
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> SessionConfig {
+        self.deadline = deadline;
+        self
+    }
+
+    pub fn policy(mut self, policy: LossPolicy) -> SessionConfig {
+        self.policy = policy;
+        self
+    }
+
+    pub fn decode(mut self, decode: DecodeParams) -> SessionConfig {
+        self.decode = decode;
+        self
+    }
+}
+
+/// A completed frame: decoded detections plus the timings the latency
+/// model consumes.
+#[derive(Clone, Debug)]
+pub struct FrameResult {
+    pub frame_id: u64,
+    pub detections: Vec<Detection>,
+    /// Which devices actually contributed (false = zero-filled).
+    pub present: Vec<bool>,
+    /// Tail (alignment + integration + backbone + heads) execution time.
+    pub tail_secs: f64,
+    /// Decode + NMS time.
+    pub post_secs: f64,
+    /// First-arrival → tail-start wait (sync latency accounting).
+    pub sync_wait_secs: f64,
+    /// True when the tail failed and `detections` is empty for that
+    /// reason (the frame still completes so frontends stay in lockstep).
+    pub tail_error: bool,
+}
+
+/// What a [`DetectorSession`] hands back from [`submit`](DetectorSession::submit)
+/// / [`poll`](DetectorSession::poll).
+#[derive(Clone, Debug)]
+pub enum SessionEvent {
+    /// A frame completed (possibly with zero-filled devices).
+    Result(FrameResult),
+    /// A frame expired under [`LossPolicy::Drop`] and was discarded.
+    Dropped { frame_id: u64 },
+}
+
+/// Delivery hook for completed frames. The TCP server attaches one per
+/// subscriber connection; tests attach collectors. A sink returning an
+/// error is detached.
+pub trait ResultSink: Send {
+    fn deliver(&mut self, session: &str, result: &FrameResult) -> Result<()>;
+}
+
+/// The serving core for one detector: owns the frame synchronizer, the
+/// engine handle for the tail model, decode parameters, and metrics.
+/// Thread-safe behind `&self`; share it across connection threads in an
+/// `Arc`.
+pub struct DetectorSession {
+    name: String,
+    cfg: SessionConfig,
+    meta: ModelMeta,
+    tail: String,
+    /// MSRV guard: `EngineHandle` wraps an `mpsc::Sender`, which is only
+    /// `Sync` on rustc ≥ 1.72 — the mutex (a cheap lock + handle clone
+    /// per frame, vs. ms-scale tail execs) keeps the session `Sync` on
+    /// older toolchains too.
+    engine: Mutex<EngineHandle>,
+    sync: Mutex<FrameSync>,
+    sinks: Mutex<Vec<Box<dyn ResultSink>>>,
+    metrics: Arc<Metrics>,
+    frames_done: AtomicU64,
+}
+
+impl DetectorSession {
+    /// Build a session for `cfg.variant`. The tail artifact must already
+    /// be loaded (or loadable) in the engine behind `engine`.
+    pub fn new(
+        name: &str,
+        meta: ModelMeta,
+        engine: EngineHandle,
+        cfg: SessionConfig,
+    ) -> Result<DetectorSession> {
+        anyhow::ensure!(!name.is_empty(), "session name must be non-empty");
+        anyhow::ensure!(
+            name.len() <= crate::net::MAX_SESSION_NAME,
+            "session name longer than {} bytes",
+            crate::net::MAX_SESSION_NAME
+        );
+        let tail = meta.variant(cfg.variant)?.tail.clone();
+        let g = &meta.grid;
+        let feat_shape = vec![g.dims[2], g.dims[1], g.dims[0], g.c_head];
+        let sync = FrameSync::new(meta.num_devices, cfg.deadline, cfg.policy, feat_shape);
+        Ok(DetectorSession {
+            name: name.to_string(),
+            cfg,
+            meta,
+            tail,
+            engine: Mutex::new(engine),
+            sync: Mutex::new(sync),
+            sinks: Mutex::new(Vec::new()),
+            metrics: Arc::new(Metrics::new()),
+            frames_done: AtomicU64::new(0),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn tail_name(&self) -> &str {
+        &self.tail
+    }
+
+    /// Shared handle to this session's metrics (isolated per session).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Frames this session has completed (including zero-filled ones).
+    pub fn frames_done(&self) -> u64 {
+        self.frames_done.load(Ordering::SeqCst)
+    }
+
+    /// Snapshot of the synchronizer counters.
+    pub fn sync_stats(&self) -> SyncStats {
+        self.sync.lock().unwrap().stats
+    }
+
+    /// Mutable access to decode parameters (in-process tuning; the TCP
+    /// deployment sets them up front via [`SessionConfig`]).
+    pub fn decode_params_mut(&mut self) -> &mut DecodeParams {
+        &mut self.cfg.decode
+    }
+
+    /// Attach a delivery sink; it receives every completed frame until it
+    /// errors (then it is dropped).
+    pub fn attach_sink(&self, sink: Box<dyn ResultSink>) {
+        self.sinks.lock().unwrap().push(sink);
+    }
+
+    /// Register one device's intermediate output for `frame_id`. Returns
+    /// the events this submission resolved: the completed frame when this
+    /// was the last missing device, plus any frames the deadline expired
+    /// while we were at it.
+    pub fn submit(
+        &self,
+        frame_id: u64,
+        device_id: usize,
+        payload: FeaturePayload,
+    ) -> Result<Vec<SessionEvent>> {
+        self.metrics.incr("features_rx", 1);
+        if payload.is_quantized() {
+            self.metrics.incr("features_rx_quantized", 1);
+        }
+        if device_id >= self.meta.num_devices {
+            self.metrics.incr("bad_device", 1);
+            anyhow::bail!(
+                "device {device_id} out of range for session {:?} ({} devices)",
+                self.name,
+                self.meta.num_devices
+            );
+        }
+        let tensor = match payload.into_tensor() {
+            Ok(t) => t,
+            Err(e) => {
+                self.metrics.incr("decode_errors", 1);
+                return Err(e).context("decode feature payload");
+            }
+        };
+        let ready = {
+            let mut sync = self.sync.lock().unwrap();
+            sync.add(frame_id, device_id, tensor)
+        };
+        let mut events = Vec::new();
+        if let Some(ready) = ready {
+            events.push(self.process_ready(ready));
+        }
+        // Opportunistically resolve expirations on traffic too.
+        events.extend(self.poll());
+        if !events.is_empty() {
+            self.publish_sync_stats();
+        }
+        Ok(events)
+    }
+
+    /// Abandon a frame mid-submission, releasing any tensors already
+    /// buffered for it (the in-process frontend calls this when a later
+    /// head fails, so partial frames don't pin memory until the
+    /// deadline).
+    pub fn abort_frame(&self, frame_id: u64) -> bool {
+        self.sync.lock().unwrap().abort(frame_id)
+    }
+
+    /// Resolve frames whose deadline expired. Frontends call this
+    /// periodically (the TCP server does so between accepts).
+    pub fn poll(&self) -> Vec<SessionEvent> {
+        let (expired, dropped) = {
+            let mut sync = self.sync.lock().unwrap();
+            let expired = sync.poll_expired();
+            let dropped = sync.take_dropped();
+            (expired, dropped)
+        };
+        let mut events: Vec<SessionEvent> = dropped
+            .into_iter()
+            .map(|frame_id| SessionEvent::Dropped { frame_id })
+            .collect();
+        for ready in expired {
+            events.push(self.process_ready(ready));
+        }
+        if !events.is_empty() {
+            self.publish_sync_stats();
+        }
+        events
+    }
+
+    /// Decode + NMS with this session's parameters — the single
+    /// post-processing call site every frontend funnels through.
+    pub fn decode_detections(&self, cls: &[f32], boxes: &[f32]) -> Vec<Detection> {
+        postprocess(cls, boxes, &self.meta, &self.cfg.decode)
+    }
+
+    /// Execute the tail on already-synchronized features and return the
+    /// raw (cls, boxes) outputs (debug dumps and cross-check tests).
+    pub fn run_tail(&self, features: Vec<HostTensor>) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.engine().exec(&self.tail, features)?;
+        anyhow::ensure!(out.len() == 2, "tail returns (cls, boxes)");
+        let mut it = out.into_iter();
+        let cls = it.next().unwrap().data;
+        let boxes = it.next().unwrap().data;
+        Ok((cls, boxes))
+    }
+
+    fn engine(&self) -> EngineHandle {
+        self.engine.lock().unwrap().clone()
+    }
+
+    /// Fig-2 right half for one synchronized frame: tail → decode/NMS →
+    /// metrics → sinks.
+    fn process_ready(&self, ready: ReadyFrame) -> SessionEvent {
+        let t0 = Instant::now();
+        let sync_wait_secs = t0.duration_since(ready.first_arrival).as_secs_f64();
+        let result = self.engine().exec(&self.tail, ready.tensors);
+        let tail_secs = t0.elapsed().as_secs_f64();
+        self.metrics.record("tail_exec", tail_secs);
+        self.metrics.record("sync_wait", sync_wait_secs);
+
+        let t1 = Instant::now();
+        let (detections, tail_error) = match result {
+            Ok(out) if out.len() == 2 => {
+                (self.decode_detections(&out[0].data, &out[1].data), false)
+            }
+            Ok(out) => {
+                self.metrics.incr("tail_errors", 1);
+                log::warn!("tail returned {} outputs, expected 2", out.len());
+                (Vec::new(), true)
+            }
+            Err(e) => {
+                self.metrics.incr("tail_errors", 1);
+                log::warn!("tail execution failed: {e:#}");
+                (Vec::new(), true)
+            }
+        };
+        let post_secs = t1.elapsed().as_secs_f64();
+        self.metrics.record("post", post_secs);
+        self.metrics.incr("frames_done", 1);
+        self.frames_done.fetch_add(1, Ordering::SeqCst);
+
+        let result = FrameResult {
+            frame_id: ready.frame_id,
+            detections,
+            present: ready.present,
+            tail_secs,
+            post_secs,
+            sync_wait_secs,
+            tail_error,
+        };
+        let mut sinks = self.sinks.lock().unwrap();
+        sinks.retain_mut(|s| s.deliver(&self.name, &result).is_ok());
+        drop(sinks);
+        SessionEvent::Result(result)
+    }
+
+    /// Mirror the synchronizer counters into this session's metrics so
+    /// one report shows the full picture. Holds the sync lock across the
+    /// writes so a stale snapshot cannot overwrite a newer one (the
+    /// gauges must never go backwards).
+    fn publish_sync_stats(&self) {
+        let sync = self.sync.lock().unwrap();
+        let stats = sync.stats;
+        self.metrics.set("sync_complete", stats.complete);
+        self.metrics.set("sync_timed_out", stats.timed_out);
+        self.metrics.set("sync_dropped", stats.dropped_frames);
+        self.metrics.set("sync_late", stats.late_arrivals);
+        self.metrics.set("sync_dup", stats.duplicates);
+    }
+}
+
+/// Named sessions hosted by one process. Lookups are by the wire
+/// `session` field; state, config, and metrics are isolated per entry.
+#[derive(Default)]
+pub struct SessionRegistry {
+    sessions: Mutex<BTreeMap<String, Arc<DetectorSession>>>,
+}
+
+impl SessionRegistry {
+    pub fn new() -> SessionRegistry {
+        SessionRegistry::default()
+    }
+
+    /// Register a session under its own name, replacing any previous
+    /// holder of that name. Returns the shared handle.
+    pub fn insert(&self, session: DetectorSession) -> Arc<DetectorSession> {
+        let arc = Arc::new(session);
+        self.sessions
+            .lock()
+            .unwrap()
+            .insert(arc.name().to_string(), Arc::clone(&arc));
+        arc
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<DetectorSession>> {
+        self.sessions.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.sessions.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.lock().unwrap().is_empty()
+    }
+
+    /// Poll every session for expired frames. The engine runs outside
+    /// the registry lock.
+    pub fn poll_all(&self) -> Vec<(String, Vec<SessionEvent>)> {
+        let sessions: Vec<Arc<DetectorSession>> =
+            self.sessions.lock().unwrap().values().cloned().collect();
+        sessions
+            .into_iter()
+            .map(|s| {
+                let events = s.poll();
+                (s.name().to_string(), events)
+            })
+            .collect()
+    }
+
+    /// Total frames completed across all sessions.
+    pub fn frames_done_total(&self) -> u64 {
+        self.sessions
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.frames_done())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Paths;
+    use crate::runtime::EngineActor;
+
+    /// Engine with no artifacts: spawns fine, every exec errors — which
+    /// exercises the session's tail-error path without PJRT artifacts.
+    fn empty_engine() -> (EngineActor, EngineHandle) {
+        let actor = EngineActor::spawn(Paths::new("/nonexistent", "/nonexistent"), &[]).unwrap();
+        let handle = actor.handle();
+        (actor, handle)
+    }
+
+    fn feat() -> HostTensor {
+        let g = crate::config::GridConfig::default();
+        HostTensor::zeros(&[g.dims[2], g.dims[1], g.dims[0], g.c_head])
+    }
+
+    struct CollectSink {
+        got: Arc<Mutex<Vec<(String, u64)>>>,
+    }
+
+    impl ResultSink for CollectSink {
+        fn deliver(&mut self, session: &str, result: &FrameResult) -> Result<()> {
+            self.got.lock().unwrap().push((session.to_string(), result.frame_id));
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn config_builder_defaults_and_overrides() {
+        let cfg = SessionConfig::new(IntegrationKind::Max);
+        assert_eq!(cfg.deadline, Duration::from_millis(200));
+        assert_eq!(cfg.policy, LossPolicy::ZeroFill);
+        assert!((cfg.decode.score_threshold - 0.25).abs() < 1e-9);
+
+        let cfg = SessionConfig::new(IntegrationKind::ConvK1)
+            .deadline(Duration::from_millis(50))
+            .policy(LossPolicy::Drop)
+            .decode(DecodeParams { score_threshold: 0.5, ..Default::default() });
+        assert_eq!(cfg.variant, IntegrationKind::ConvK1);
+        assert_eq!(cfg.deadline, Duration::from_millis(50));
+        assert_eq!(cfg.policy, LossPolicy::Drop);
+        assert!((cfg.decode.score_threshold - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn payload_decodes_raw_and_quantized() {
+        let t = HostTensor::new(vec![4], vec![0.0, 0.5, 1.0, 1.5]).unwrap();
+        let raw = FeaturePayload::from(t.clone());
+        assert!(!raw.is_quantized());
+        assert_eq!(raw.into_tensor().unwrap(), t);
+
+        let q = FeaturePayload::from(crate::net::quantize(&t));
+        assert!(q.is_quantized());
+        assert!(q.wire_bytes() < t.byte_len());
+        let back = q.into_tensor().unwrap();
+        assert_eq!(back.shape, t.shape);
+        for (a, b) in t.data.iter().zip(&back.data) {
+            assert!((a - b).abs() <= 1.5 / 255.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn session_completes_frame_and_delivers_to_sinks() {
+        let (_actor, engine) = empty_engine();
+        let meta = ModelMeta::test_default();
+        let session = DetectorSession::new(
+            "test",
+            meta,
+            engine,
+            SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        let got = Arc::new(Mutex::new(Vec::new()));
+        session.attach_sink(Box::new(CollectSink { got: Arc::clone(&got) }));
+
+        let events = session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        assert!(events.is_empty(), "frame incomplete after one device");
+        let events = session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            SessionEvent::Result(r) => {
+                assert_eq!(r.frame_id, 1);
+                assert_eq!(r.present, vec![true, true]);
+                // No artifacts behind the engine: tail errors, frame still
+                // completes with empty detections.
+                assert!(r.tail_error);
+                assert!(r.detections.is_empty());
+            }
+            other => panic!("expected Result, got {other:?}"),
+        }
+        assert_eq!(session.frames_done(), 1);
+        assert_eq!(session.metrics().counter("frames_done"), 1);
+        assert_eq!(session.metrics().counter("tail_errors"), 1);
+        assert_eq!(session.metrics().counter("features_rx"), 2);
+        assert_eq!(session.metrics().counter("sync_complete"), 1);
+        assert_eq!(got.lock().unwrap().as_slice(), &[("test".to_string(), 1u64)]);
+    }
+
+    #[test]
+    fn quantized_submission_counted_and_decoded() {
+        let (_actor, engine) = empty_engine();
+        let session = DetectorSession::new(
+            "q",
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        let q = crate::net::quantize(&feat());
+        session.submit(3, 0, FeaturePayload::Quantized(q)).unwrap();
+        assert_eq!(session.metrics().counter("features_rx_quantized"), 1);
+        assert_eq!(session.metrics().counter("features_rx"), 1);
+    }
+
+    #[test]
+    fn out_of_range_device_rejected_not_panicking() {
+        let (_actor, engine) = empty_engine();
+        let session = DetectorSession::new(
+            "r",
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max),
+        )
+        .unwrap();
+        assert!(session.submit(1, 99, FeaturePayload::Raw(feat())).is_err());
+        assert_eq!(session.metrics().counter("bad_device"), 1);
+    }
+
+    #[test]
+    fn drop_policy_emits_dropped_event() {
+        let (_actor, engine) = empty_engine();
+        let session = DetectorSession::new(
+            "d",
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max)
+                .deadline(Duration::from_millis(10))
+                .policy(LossPolicy::Drop),
+        )
+        .unwrap();
+        session.submit(5, 0, FeaturePayload::Raw(feat())).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+        let events = session.poll();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(events[0], SessionEvent::Dropped { frame_id: 5 }));
+        assert_eq!(session.frames_done(), 0);
+        assert_eq!(session.metrics().counter("sync_dropped"), 1);
+    }
+
+    #[test]
+    fn zero_fill_policy_completes_partial_frame() {
+        let (_actor, engine) = empty_engine();
+        let session = DetectorSession::new(
+            "z",
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max)
+                .deadline(Duration::from_millis(10))
+                .policy(LossPolicy::ZeroFill),
+        )
+        .unwrap();
+        session.submit(6, 1, FeaturePayload::Raw(feat())).unwrap();
+        std::thread::sleep(Duration::from_millis(25));
+        let events = session.poll();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            SessionEvent::Result(r) => {
+                assert_eq!(r.frame_id, 6);
+                assert_eq!(r.present, vec![false, true]);
+            }
+            other => panic!("expected Result, got {other:?}"),
+        }
+        assert_eq!(session.metrics().counter("sync_timed_out"), 1);
+    }
+
+    #[test]
+    fn abort_frame_releases_partial_submission() {
+        let (_actor, engine) = empty_engine();
+        let session = DetectorSession::new(
+            "ab",
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_millis(10)),
+        )
+        .unwrap();
+        session.submit(9, 0, FeaturePayload::Raw(feat())).unwrap();
+        assert!(session.abort_frame(9));
+        assert!(!session.abort_frame(9));
+        // The aborted frame never resolves — not even after its deadline.
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(session.poll().is_empty());
+        assert_eq!(session.frames_done(), 0);
+    }
+
+    #[test]
+    fn failing_sink_is_detached() {
+        struct FailSink;
+        impl ResultSink for FailSink {
+            fn deliver(&mut self, _s: &str, _r: &FrameResult) -> Result<()> {
+                anyhow::bail!("broken pipe")
+            }
+        }
+        let (_actor, engine) = empty_engine();
+        let session = DetectorSession::new(
+            "f",
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        session.attach_sink(Box::new(FailSink));
+        session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(session.sinks.lock().unwrap().len(), 0, "failed sink must detach");
+    }
+
+    #[test]
+    fn registry_isolates_sessions() {
+        let (_actor, engine) = empty_engine();
+        let registry = SessionRegistry::new();
+        let a = registry.insert(
+            DetectorSession::new(
+                "a",
+                ModelMeta::test_default(),
+                engine.clone(),
+                SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+            )
+            .unwrap(),
+        );
+        let b = registry.insert(
+            DetectorSession::new(
+                "b",
+                ModelMeta::test_default(),
+                engine,
+                SessionConfig::new(IntegrationKind::ConvK3).deadline(Duration::from_secs(60)),
+            )
+            .unwrap(),
+        );
+        assert_eq!(registry.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(registry.get("missing").is_none());
+
+        a.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        a.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(a.frames_done(), 1);
+        assert_eq!(b.frames_done(), 0, "traffic must not leak across sessions");
+        assert_eq!(a.metrics().counter("features_rx"), 2);
+        assert_eq!(b.metrics().counter("features_rx"), 0);
+        assert_eq!(registry.frames_done_total(), 1);
+
+        // poll_all touches both without cross-talk.
+        let polled = registry.poll_all();
+        assert_eq!(polled.len(), 2);
+        assert!(polled.iter().all(|(_, ev)| ev.is_empty()));
+    }
+
+    #[test]
+    fn session_name_validation() {
+        let (_actor, engine) = empty_engine();
+        assert!(DetectorSession::new(
+            "",
+            ModelMeta::test_default(),
+            engine.clone(),
+            SessionConfig::new(IntegrationKind::Max),
+        )
+        .is_err());
+        let long = "x".repeat(300);
+        assert!(DetectorSession::new(
+            &long,
+            ModelMeta::test_default(),
+            engine,
+            SessionConfig::new(IntegrationKind::Max),
+        )
+        .is_err());
+    }
+}

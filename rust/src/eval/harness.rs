@@ -1,5 +1,11 @@
 //! Table-III harness: detection accuracy of every sensor configuration /
 //! integration method on the validation split.
+//!
+//! Every row is produced through the `DetectorSession` serving core (via
+//! the in-process pipeline frontend): the same frame sync → tail →
+//! decode/NMS path — with the same decode parameters — that the TCP
+//! server runs in production, so Table III scores exactly what serving
+//! returns.
 
 use super::ap::{evaluate_map, EvalFrame};
 use crate::cli::Args;

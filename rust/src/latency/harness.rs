@@ -6,6 +6,11 @@
 //! [`measure_raw`]; any number of testbed configurations (bandwidth
 //! sweeps, device-factor ablations) are then modeled from the same
 //! measurements.
+//!
+//! Timings are taken through the `DetectorSession` serving core (the
+//! pipeline frontend drives it synchronously), so the tail/post numbers
+//! modeled here come from the same code path that serves TCP traffic —
+//! not from a parallel reimplementation.
 
 use crate::cli::Args;
 use crate::config::{IntegrationKind, LatencyConfig, Paths};

@@ -4,21 +4,43 @@
 //! on Edge Devices for Split Computing with Multiple Intermediate Outputs
 //! Integration* as a three-layer rust + JAX + Pallas serving stack.
 //!
-//! Layer 3 (this crate) is the runtime coordinator: edge-device head
-//! workers, the edge-server frame synchronizer + integration + tail
-//! execution, and every substrate the paper depends on (LiDAR simulator,
-//! NDT scan matching, evaluation, networking). Layers 2/1 (JAX model and
-//! Pallas kernels, under `python/`) run only at build time; the artifacts
-//! they emit (`artifacts/*.hlo.txt`) are loaded here through PJRT.
+//! Layer 3 (this crate) is the runtime coordinator plus every substrate
+//! the paper depends on (LiDAR simulator, NDT scan matching, evaluation,
+//! networking). Layers 2/1 (JAX model and Pallas kernels, under
+//! `python/`) run only at build time; the artifacts they emit
+//! (`artifacts/*.hlo.txt`) are loaded here through PJRT.
 //!
-//! Entry points:
-//! - [`coordinator::pipeline::ScMiiPipeline`] — in-process split-computing
-//!   pipeline (deterministic; used by evaluation and benchmarks).
-//! - [`coordinator::server`] / [`coordinator::device`] — the distributed
-//!   TCP deployment (edge server + one worker per LiDAR).
+//! ## The serving core
+//!
+//! The paper's Fig-2 flow — per-device heads → frame sync → integration +
+//! tail → decode/NMS — is implemented **once**, in
+//! [`coordinator::session::DetectorSession`]. Every frontend is a thin
+//! adapter over it:
+//!
+//! - [`coordinator::pipeline::ScMiiPipeline`] — in-process driver (runs
+//!   the heads locally, submits to the session synchronously); the
+//!   Table-III accuracy harness ([`eval`]) and Fig-5 latency harness
+//!   ([`latency`]) measure through it, so published numbers come from
+//!   the code path that serves traffic.
+//! - [`coordinator::server`] — the distributed TCP deployment, reduced to
+//!   pure I/O: socket ⇄ [`net::Msg`] ⇄ session. One process hosts many
+//!   named sessions (multiple intersections, A/B integration variants)
+//!   via [`coordinator::session::SessionRegistry`]; wire messages carry a
+//!   `session` field, with pre-session clients routed to the default
+//!   session. Results fan out through
+//!   [`coordinator::session::ResultSink`]s.
+//! - [`coordinator::device`] — one worker per LiDAR (head model),
+//!   streaming raw or u8-quantized intermediate outputs.
+//!
+//! ## Supporting layers
+//!
 //! - [`sim::dataset`] — synthetic intersection dataset generator standing
 //!   in for V2X-Real.
 //! - [`ndt`] — setup-phase extrinsic calibration via NDT scan matching.
+//! - [`net`] — length-prefixed wire protocol with bandwidth shaping and
+//!   quantized payloads.
+//!
+//! See `docs/ARCHITECTURE.md` for the full design write-up.
 
 pub mod align;
 pub mod cli;

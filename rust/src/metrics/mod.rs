@@ -34,6 +34,12 @@ impl Metrics {
         *self.counters.lock().unwrap().entry(name.to_string()).or_default() += by;
     }
 
+    /// Overwrite a counter with an absolute value (gauge semantics; used
+    /// to mirror externally-accumulated stats like `SyncStats`).
+    pub fn set(&self, name: &str, value: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
@@ -112,6 +118,16 @@ mod tests {
         m.incr("frames", 4);
         assert_eq!(m.counter("frames"), 7);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn set_overwrites_counter() {
+        let m = Metrics::new();
+        m.incr("sync_complete", 2);
+        m.set("sync_complete", 9);
+        assert_eq!(m.counter("sync_complete"), 9);
+        m.set("sync_complete", 3);
+        assert_eq!(m.counter("sync_complete"), 3);
     }
 
     #[test]

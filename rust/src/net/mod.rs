@@ -6,6 +6,6 @@ mod proto;
 mod quant;
 mod shaper;
 
-pub use proto::{read_msg, write_msg, Msg, WireDetection};
+pub use proto::{read_msg, write_msg, Msg, WireDetection, DEFAULT_SESSION, MAX_SESSION_NAME};
 pub use quant::{dequantize, quantize, QuantTensor};
 pub use shaper::ShapedWriter;

@@ -2,6 +2,16 @@
 //!
 //! Frame layout: `MAGIC(4) | type(1) | payload_len(4, LE) | payload`.
 //! Tensors: `ndim(1) | dims(u32 LE each) | f32 LE data`.
+//!
+//! ## Sessions on the wire
+//!
+//! `Hello`, `Features`, `FeaturesQ` and `Subscribe` carry the name of the
+//! [`DetectorSession`](crate::coordinator::session::DetectorSession) they
+//! address, encoded as a trailing `len(u8) | utf-8 bytes` string. The
+//! field is *optional on decode*: a payload that ends before it yields
+//! [`DEFAULT_SESSION`], so pre-session clients keep working against new
+//! servers unchanged. (New clients always encode it, so new-client →
+//! old-server is not supported — the compat direction the rollout needs.)
 
 use crate::runtime::HostTensor;
 use anyhow::{bail, Context, Result};
@@ -10,6 +20,12 @@ use std::io::{Read, Write};
 const MAGIC: [u8; 4] = *b"SCMI";
 /// Upper bound on a frame payload (guards against protocol desync).
 const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Session addressed by messages that omit the wire `session` field.
+pub const DEFAULT_SESSION: &str = "default";
+
+/// Longest session name accepted on the wire (u8 length prefix).
+pub const MAX_SESSION_NAME: usize = 255;
 
 /// A detection on the wire (matches `model::Detection`).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -23,27 +39,51 @@ pub struct WireDetection {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Device announces itself after connecting.
-    Hello { device_id: u32 },
+    Hello { device_id: u32, session: String },
     /// Head-model output for one frame.
-    Features { frame_id: u64, device_id: u32, tensor: HostTensor },
+    Features { frame_id: u64, device_id: u32, tensor: HostTensor, session: String },
     /// u8-quantized head output (paper §IV-E compressed intermediate
     /// outputs — 4× smaller payload).
-    FeaturesQ { frame_id: u64, device_id: u32, tensor: super::QuantTensor },
+    FeaturesQ { frame_id: u64, device_id: u32, tensor: super::QuantTensor, session: String },
     /// Final detections for one frame (server → subscriber).
     Result { frame_id: u64, detections: Vec<WireDetection>, server_micros: u64 },
-    /// A subscriber asks to receive `Result`s.
-    Subscribe,
+    /// A subscriber asks to receive `Result`s for one session.
+    Subscribe { session: String },
     /// Graceful shutdown.
     Bye,
 }
 
 impl Msg {
+    /// The session this message addresses, if it carries one.
+    fn session(&self) -> Option<&str> {
+        match self {
+            Msg::Hello { session, .. }
+            | Msg::Features { session, .. }
+            | Msg::FeaturesQ { session, .. }
+            | Msg::Subscribe { session } => Some(session),
+            Msg::Result { .. } | Msg::Bye => None,
+        }
+    }
+
+    /// Check the message is encodable to a decodable wire form (the
+    /// decoder rejects empty and >255-byte session names).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(session) = self.session() {
+            anyhow::ensure!(!session.is_empty(), "session name must be non-empty");
+            anyhow::ensure!(
+                session.len() <= MAX_SESSION_NAME,
+                "session name longer than {MAX_SESSION_NAME} bytes"
+            );
+        }
+        Ok(())
+    }
+
     fn type_byte(&self) -> u8 {
         match self {
             Msg::Hello { .. } => 1,
             Msg::Features { .. } => 2,
             Msg::Result { .. } => 3,
-            Msg::Subscribe => 4,
+            Msg::Subscribe { .. } => 4,
             Msg::Bye => 5,
             Msg::FeaturesQ { .. } => 6,
         }
@@ -56,6 +96,15 @@ fn put_u32(buf: &mut Vec<u8>, v: u32) {
 
 fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_session(buf: &mut Vec<u8>, session: &str) {
+    let bytes = session.as_bytes();
+    // write_msg validates via Msg::validate; this assert only backstops
+    // direct encode_payload callers.
+    assert!(bytes.len() <= MAX_SESSION_NAME, "session name longer than 255 bytes");
+    buf.push(bytes.len() as u8);
+    buf.extend_from_slice(bytes);
 }
 
 fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
@@ -116,6 +165,21 @@ impl<'a> Cursor<'a> {
         HostTensor::new(shape, data)
     }
 
+    /// Trailing session name; a payload ending here is a pre-session
+    /// client and addresses [`DEFAULT_SESSION`].
+    fn session_or_default(&mut self) -> Result<String> {
+        if self.pos == self.buf.len() {
+            return Ok(DEFAULT_SESSION.to_string());
+        }
+        let len = self.u8()? as usize;
+        let bytes = self.take(len)?;
+        let s = std::str::from_utf8(bytes).map_err(|_| anyhow::anyhow!("session name not utf-8"))?;
+        if s.is_empty() {
+            bail!("empty session name");
+        }
+        Ok(s.to_string())
+    }
+
     fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("{} trailing bytes in message", self.buf.len() - self.pos);
@@ -128,11 +192,15 @@ impl<'a> Cursor<'a> {
 pub fn encode_payload(msg: &Msg) -> Vec<u8> {
     let mut buf = Vec::new();
     match msg {
-        Msg::Hello { device_id } => put_u32(&mut buf, *device_id),
-        Msg::Features { frame_id, device_id, tensor } => {
+        Msg::Hello { device_id, session } => {
+            put_u32(&mut buf, *device_id);
+            put_session(&mut buf, session);
+        }
+        Msg::Features { frame_id, device_id, tensor, session } => {
             put_u64(&mut buf, *frame_id);
             put_u32(&mut buf, *device_id);
             put_tensor(&mut buf, tensor);
+            put_session(&mut buf, session);
         }
         Msg::Result { frame_id, detections, server_micros } => {
             put_u64(&mut buf, *frame_id);
@@ -146,7 +214,7 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
                 put_u32(&mut buf, d.class_id);
             }
         }
-        Msg::FeaturesQ { frame_id, device_id, tensor } => {
+        Msg::FeaturesQ { frame_id, device_id, tensor, session } => {
             put_u64(&mut buf, *frame_id);
             put_u32(&mut buf, *device_id);
             buf.push(tensor.shape.len() as u8);
@@ -156,8 +224,10 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
             buf.extend_from_slice(&tensor.min.to_le_bytes());
             buf.extend_from_slice(&tensor.scale.to_le_bytes());
             buf.extend_from_slice(&tensor.data);
+            put_session(&mut buf, session);
         }
-        Msg::Subscribe | Msg::Bye => {}
+        Msg::Subscribe { session } => put_session(&mut buf, session),
+        Msg::Bye => {}
     }
     buf
 }
@@ -165,12 +235,17 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
 fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
     let mut c = Cursor { buf: payload, pos: 0 };
     let msg = match ty {
-        1 => Msg::Hello { device_id: c.u32()? },
+        1 => {
+            let device_id = c.u32()?;
+            let session = c.session_or_default()?;
+            Msg::Hello { device_id, session }
+        }
         2 => {
             let frame_id = c.u64()?;
             let device_id = c.u32()?;
             let tensor = c.tensor()?;
-            Msg::Features { frame_id, device_id, tensor }
+            let session = c.session_or_default()?;
+            Msg::Features { frame_id, device_id, tensor, session }
         }
         3 => {
             let frame_id = c.u64()?;
@@ -191,7 +266,7 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
             }
             Msg::Result { frame_id, detections, server_micros }
         }
-        4 => Msg::Subscribe,
+        4 => Msg::Subscribe { session: c.session_or_default()? },
         5 => Msg::Bye,
         6 => {
             let frame_id = c.u64()?;
@@ -205,10 +280,12 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
             let scale = c.f32()?;
             let n: usize = shape.iter().product();
             let data = c.take(n)?.to_vec();
+            let session = c.session_or_default()?;
             Msg::FeaturesQ {
                 frame_id,
                 device_id,
                 tensor: super::QuantTensor { shape, min, scale, data },
+                session,
             }
         }
         other => bail!("unknown message type {other}"),
@@ -217,8 +294,10 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
     Ok(msg)
 }
 
-/// Write one framed message.
+/// Write one framed message. Fails (without writing) on messages the
+/// peer could not decode, e.g. an empty or oversized session name.
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    msg.validate()?;
     let payload = encode_payload(msg);
     w.write_all(&MAGIC)?;
     w.write_all(&[msg.type_byte()])?;
@@ -228,10 +307,54 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
     Ok(())
 }
 
-/// Read one framed message (blocking).
+/// Fill `buf` from `r`. With `idle_ok`, a timeout (`WouldBlock` /
+/// `TimedOut`) before the first byte propagates so idle pollers can back
+/// off and re-check shutdown flags. Once any byte of the frame has been
+/// consumed — or when `idle_ok` is false (payload follows a header) —
+/// timeouts are retried with a bounded budget, so a slow link (e.g. a
+/// bandwidth-shaped 1 MiB feature map spanning many read-timeout
+/// windows) cannot desync the stream mid-message.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], idle_ok: bool, what: &str) -> Result<()> {
+    let mut filled = 0usize;
+    let mut stalls = 0u32;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => bail!(
+                "connection closed while reading {what} ({filled}/{} bytes)",
+                buf.len()
+            ),
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if filled == 0 && idle_ok {
+                    return Err(e.into());
+                }
+                stalls += 1;
+                // ~40 read-timeout windows (≥10 s at the server's 250 ms
+                // read timeout): the peer stalled mid-frame; give up
+                // rather than wait forever.
+                if stalls > 40 {
+                    bail!("peer stalled mid-{what} ({filled}/{} bytes)", buf.len());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).with_context(|| format!("read {what}")),
+        }
+    }
+    Ok(())
+}
+
+/// Read one framed message (blocking; timeout-tolerant mid-frame).
 pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
     let mut head = [0u8; 9];
-    r.read_exact(&mut head).context("read frame header")?;
+    read_full(r, &mut head, true, "frame header")?;
     if head[0..4] != MAGIC {
         bail!("bad magic {:?}", &head[0..4]);
     }
@@ -241,7 +364,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
         bail!("payload too large: {len}");
     }
     let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("read frame payload")?;
+    read_full(r, &mut payload, false, "frame payload")?;
     decode_payload(ty, &payload)
 }
 
@@ -258,13 +381,16 @@ mod tests {
 
     #[test]
     fn roundtrip_all_messages() {
-        roundtrip(Msg::Hello { device_id: 3 });
-        roundtrip(Msg::Subscribe);
+        roundtrip(Msg::Hello { device_id: 3, session: DEFAULT_SESSION.into() });
+        roundtrip(Msg::Hello { device_id: 3, session: "intersection-7".into() });
+        roundtrip(Msg::Subscribe { session: DEFAULT_SESSION.into() });
+        roundtrip(Msg::Subscribe { session: "aux".into() });
         roundtrip(Msg::Bye);
         roundtrip(Msg::Features {
             frame_id: 42,
             device_id: 1,
             tensor: HostTensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap(),
+            session: "intersection-7".into(),
         });
         roundtrip(Msg::FeaturesQ {
             frame_id: 43,
@@ -275,6 +401,7 @@ mod tests {
                 scale: 0.01,
                 data: vec![0, 127, 200, 255],
             },
+            session: DEFAULT_SESSION.into(),
         });
         roundtrip(Msg::Result {
             frame_id: 7,
@@ -285,16 +412,211 @@ mod tests {
                 class_id: 1,
             }],
         });
+        roundtrip(Msg::Result { frame_id: 8, server_micros: 0, detections: vec![] });
     }
 
     #[test]
     fn multiple_messages_in_stream() {
+        let hello = Msg::Hello { device_id: 1, session: DEFAULT_SESSION.into() };
         let mut buf = Vec::new();
-        write_msg(&mut buf, &Msg::Hello { device_id: 1 }).unwrap();
+        write_msg(&mut buf, &hello).unwrap();
         write_msg(&mut buf, &Msg::Bye).unwrap();
         let mut r = buf.as_slice();
-        assert_eq!(read_msg(&mut r).unwrap(), Msg::Hello { device_id: 1 });
+        assert_eq!(read_msg(&mut r).unwrap(), hello);
         assert_eq!(read_msg(&mut r).unwrap(), Msg::Bye);
+    }
+
+    /// Hand-build a frame the way pre-session clients did (payload
+    /// without the trailing session string).
+    fn legacy_frame(ty: u8, payload: &[u8]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(ty);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(payload);
+        buf
+    }
+
+    #[test]
+    fn legacy_messages_decode_to_default_session() {
+        // Hello: just the device id.
+        let buf = legacy_frame(1, &5u32.to_le_bytes());
+        assert_eq!(
+            read_msg(&mut buf.as_slice()).unwrap(),
+            Msg::Hello { device_id: 5, session: DEFAULT_SESSION.into() }
+        );
+
+        // Subscribe: empty payload.
+        let buf = legacy_frame(4, &[]);
+        assert_eq!(
+            read_msg(&mut buf.as_slice()).unwrap(),
+            Msg::Subscribe { session: DEFAULT_SESSION.into() }
+        );
+
+        // Features: frame id, device id, tensor — nothing after the data.
+        let tensor = HostTensor::new(vec![2, 2], vec![0.5, -0.5, 1.0, 0.0]).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&9u64.to_le_bytes());
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        put_tensor(&mut payload, &tensor);
+        let buf = legacy_frame(2, &payload);
+        assert_eq!(
+            read_msg(&mut buf.as_slice()).unwrap(),
+            Msg::Features { frame_id: 9, device_id: 1, tensor, session: DEFAULT_SESSION.into() }
+        );
+
+        // FeaturesQ: quant tensor with no trailing session.
+        let q = crate::net::QuantTensor {
+            shape: vec![3],
+            min: 0.0,
+            scale: 0.5,
+            data: vec![0, 1, 2],
+        };
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&11u64.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.push(1);
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        payload.extend_from_slice(&q.min.to_le_bytes());
+        payload.extend_from_slice(&q.scale.to_le_bytes());
+        payload.extend_from_slice(&q.data);
+        let buf = legacy_frame(6, &payload);
+        assert_eq!(
+            read_msg(&mut buf.as_slice()).unwrap(),
+            Msg::FeaturesQ { frame_id: 11, device_id: 0, tensor: q, session: DEFAULT_SESSION.into() }
+        );
+    }
+
+    #[test]
+    fn quantized_features_roundtrip_within_half_step() {
+        // quantize → serialize → deserialize → dequantize: the wire must
+        // not add error beyond the quantizer's half-step bound.
+        let data: Vec<f32> = (0..512).map(|i| ((i as f32) * 0.173).sin() * 2.5).collect();
+        let t = HostTensor::new(vec![8, 8, 8], data.clone()).unwrap();
+        let q = crate::net::quantize(&t);
+        let step = q.scale;
+        let msg = Msg::FeaturesQ { frame_id: 1, device_id: 0, tensor: q, session: "x".into() };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let back = match read_msg(&mut buf.as_slice()).unwrap() {
+            Msg::FeaturesQ { tensor, .. } => crate::net::dequantize(&tensor).unwrap(),
+            other => panic!("unexpected message {other:?}"),
+        };
+        assert_eq!(back.shape, vec![8, 8, 8]);
+        let max_err = data
+            .iter()
+            .zip(&back.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err <= step * 0.5 + 1e-6, "wire error {max_err} vs half-step {}", step * 0.5);
+    }
+
+    #[test]
+    fn write_msg_rejects_undecodable_session_names() {
+        let mut buf = Vec::new();
+        assert!(write_msg(&mut buf, &Msg::Subscribe { session: String::new() }).is_err());
+        assert!(write_msg(&mut buf, &Msg::Subscribe { session: "x".repeat(300) }).is_err());
+        assert!(buf.is_empty(), "nothing may reach the wire on validation failure");
+        assert!(write_msg(&mut buf, &Msg::Subscribe { session: "ok".into() }).is_ok());
+    }
+
+    #[test]
+    fn rejects_short_header() {
+        // Fewer bytes than the 9-byte frame header: must error, not hang
+        // or panic.
+        let buf = [b'S', b'C', b'M'];
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+        let buf: [u8; 0] = [];
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_session_suffix() {
+        // A session length byte promising more bytes than remain.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&7u32.to_le_bytes());
+        payload.push(9); // claims a 9-byte name, none follow
+        let buf = legacy_frame(1, &payload);
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    /// Yields the stream in 5-byte chunks with a timeout error between
+    /// every chunk — a bandwidth-shaped link as the server's read loop
+    /// sees it.
+    struct StutterReader {
+        data: Vec<u8>,
+        pos: usize,
+        timeout_next: bool,
+    }
+
+    impl Read for StutterReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.timeout_next {
+                self.timeout_next = false;
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "timeout"));
+            }
+            self.timeout_next = true;
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let n = 5.min(self.data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn slow_link_does_not_desync_stream() {
+        // Two messages trickling in with timeouts between every 5 bytes:
+        // the reader must retry mid-frame instead of discarding partial
+        // bytes, and both messages must decode cleanly.
+        let msg1 = Msg::Features {
+            frame_id: 1,
+            device_id: 0,
+            tensor: HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
+            session: "slow".into(),
+        };
+        let msg2 = Msg::Bye;
+        let mut data = Vec::new();
+        write_msg(&mut data, &msg1).unwrap();
+        write_msg(&mut data, &msg2).unwrap();
+        let mut r = StutterReader { data, pos: 0, timeout_next: false };
+
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            match read_msg(&mut r) {
+                Ok(m) => got.push(m),
+                Err(e) => {
+                    // Idle timeout between frames: retry, like the server.
+                    let timed_out = e
+                        .downcast_ref::<std::io::Error>()
+                        .map_or(false, |io| io.kind() == std::io::ErrorKind::WouldBlock);
+                    assert!(timed_out, "unexpected error on slow link: {e:#}");
+                }
+            }
+        }
+        assert_eq!(got[0], msg1);
+        assert_eq!(got[1], msg2);
+    }
+
+    #[test]
+    fn idle_timeout_surfaces_before_first_byte() {
+        // No bytes at all: the timeout must propagate (so pollers can
+        // re-check shutdown flags) rather than being swallowed.
+        let mut r = StutterReader { data: Vec::new(), pos: 0, timeout_next: true };
+        let err = read_msg(&mut r).unwrap_err();
+        let io = err.downcast_ref::<std::io::Error>().expect("io error");
+        assert_eq!(io.kind(), std::io::ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn rejects_oversized_payload_header() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(5);
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_msg(&mut buf.as_slice()).is_err());
     }
 
     #[test]
@@ -314,6 +636,7 @@ mod tests {
                 frame_id: 1,
                 device_id: 0,
                 tensor: HostTensor::zeros(&[4]),
+                session: DEFAULT_SESSION.into(),
             },
         )
         .unwrap();
@@ -336,7 +659,12 @@ mod tests {
     fn feature_payload_size_matches_design() {
         // The 64x64x8x8 intermediate output should serialize to ~1 MiB.
         let t = HostTensor::zeros(&[8, 64, 64, 8]);
-        let payload = encode_payload(&Msg::Features { frame_id: 0, device_id: 0, tensor: t });
+        let payload = encode_payload(&Msg::Features {
+            frame_id: 0,
+            device_id: 0,
+            tensor: t,
+            session: DEFAULT_SESSION.into(),
+        });
         assert!(payload.len() > (1 << 20) && payload.len() < (1 << 20) + 64);
     }
 
@@ -347,11 +675,17 @@ mod tests {
             frame_id: 0,
             device_id: 0,
             tensor: t.clone(),
+            session: DEFAULT_SESSION.into(),
         })
         .len();
         let q = crate::net::quantize(&t);
-        let small =
-            encode_payload(&Msg::FeaturesQ { frame_id: 0, device_id: 0, tensor: q }).len();
+        let small = encode_payload(&Msg::FeaturesQ {
+            frame_id: 0,
+            device_id: 0,
+            tensor: q,
+            session: DEFAULT_SESSION.into(),
+        })
+        .len();
         assert!(small * 4 < full + 128, "quant {small} vs full {full}");
     }
 }

@@ -10,6 +10,7 @@ use std::thread;
 enum Request {
     Exec { name: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
     Load { name: String, reply: mpsc::Sender<Result<()>> },
+    Loaded { reply: mpsc::Sender<Vec<String>> },
     Shutdown,
 }
 
@@ -54,6 +55,9 @@ impl EngineActor {
                     Request::Load { name, reply } => {
                         let _ = reply.send(engine.load(&paths, &name));
                     }
+                    Request::Loaded { reply } => {
+                        let _ = reply.send(engine.loaded_names());
+                    }
                     Request::Shutdown => break,
                 }
             }
@@ -92,6 +96,14 @@ impl EngineHandle {
             .context("engine thread gone")?;
         rx.recv().context("engine thread dropped reply")?
     }
+
+    /// Names of the artifacts resident on the engine thread (server
+    /// startup logging / diagnostics).
+    pub fn loaded(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Request::Loaded { reply }).context("engine thread gone")?;
+        rx.recv().context("engine thread dropped reply")
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +117,7 @@ mod tests {
         let h = actor.handle();
         assert!(h.exec("ghost", vec![]).is_err());
         assert!(h.load("ghost").is_err());
+        assert!(h.loaded().unwrap().is_empty());
     }
 
     #[test]

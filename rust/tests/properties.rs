@@ -204,6 +204,7 @@ fn wire_protocol_roundtrip_random_tensors() {
             frame_id: g.u64(),
             device_id: g.usize_range(0, 3) as u32,
             tensor: HostTensor::new(shape, data).unwrap(),
+            session: scmii::net::DEFAULT_SESSION.into(),
         };
         let mut buf = Vec::new();
         write_msg(&mut buf, &msg).unwrap();

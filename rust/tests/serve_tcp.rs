@@ -1,13 +1,16 @@
 //! Distributed-deployment tests: edge server + device workers over real
-//! TCP on localhost, including the partial-loss path. Skip without
-//! artifacts.
+//! TCP on localhost, including the partial-loss path, multi-session
+//! hosting, and pre-session wire compatibility. Skip without artifacts.
 
 use scmii::config::{artifacts_present, default_paths, IntegrationKind};
 use scmii::coordinator::device::{run_device, DeviceConfig};
 use scmii::coordinator::scheduler::LossPolicy;
 use scmii::coordinator::server::{run_server, ServerConfig};
-use scmii::net::{read_msg, write_msg, Msg};
+use scmii::coordinator::session::{SessionConfig, SessionRegistry};
+use scmii::model::DecodeParams;
+use scmii::net::{read_msg, write_msg, Msg, DEFAULT_SESSION};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
 macro_rules! require_artifacts {
@@ -20,39 +23,39 @@ macro_rules! require_artifacts {
     };
 }
 
-fn spawn_server(
-    paths: &scmii::config::Paths,
-    port: u16,
-    max_frames: u64,
-    deadline: Duration,
-) -> std::thread::JoinHandle<anyhow::Result<std::sync::Arc<scmii::metrics::Metrics>>> {
-    let paths = paths.clone();
-    let cfg = ServerConfig {
+fn base_server_cfg(port: u16, max_frames: u64, deadline: Duration) -> ServerConfig {
+    ServerConfig {
         port,
         variant: IntegrationKind::Max,
         deadline,
         policy: LossPolicy::ZeroFill,
+        decode: DecodeParams::default(),
         max_frames: Some(max_frames),
-    };
+        extra_sessions: Vec::new(),
+    }
+}
+
+fn spawn_server(
+    paths: &scmii::config::Paths,
+    cfg: ServerConfig,
+) -> std::thread::JoinHandle<anyhow::Result<Arc<SessionRegistry>>> {
+    let paths = paths.clone();
     std::thread::spawn(move || run_server(&paths, &cfg))
 }
 
-#[test]
-fn two_devices_serve_frames_end_to_end() {
-    require_artifacts!(paths);
-    let port = 7551;
-    let n_frames = 3usize;
-    let server = spawn_server(&paths, port, n_frames as u64, Duration::from_secs(5));
-    std::thread::sleep(Duration::from_millis(2000)); // tail compile
-
-    // Subscriber collects results.
+/// Subscribe to `session` and collect `n` results.
+fn spawn_subscriber(
+    port: u16,
+    session: &str,
+    n: usize,
+) -> std::thread::JoinHandle<Vec<(u64, usize)>> {
     let sub = TcpStream::connect(("127.0.0.1", port)).unwrap();
     let mut sub_w = sub.try_clone().unwrap();
-    write_msg(&mut sub_w, &Msg::Subscribe).unwrap();
-    let subscriber = std::thread::spawn(move || {
+    write_msg(&mut sub_w, &Msg::Subscribe { session: session.to_string() }).unwrap();
+    std::thread::spawn(move || {
         let mut reader = std::io::BufReader::new(sub);
         let mut got = Vec::new();
-        while got.len() < n_frames {
+        while got.len() < n {
             match read_msg(&mut reader) {
                 Ok(Msg::Result { frame_id, detections, .. }) => {
                     got.push((frame_id, detections.len()))
@@ -62,7 +65,32 @@ fn two_devices_serve_frames_end_to_end() {
             }
         }
         got
-    });
+    })
+}
+
+fn device_cfg(port: u16, dev: usize, session: &str, n_frames: usize) -> DeviceConfig {
+    DeviceConfig {
+        device_id: dev,
+        server: format!("127.0.0.1:{port}"),
+        session: session.to_string(),
+        variant: IntegrationKind::Max,
+        period: None,
+        bandwidth_bps: Some(1e9),
+        max_frames: n_frames,
+        quantize: false,
+    }
+}
+
+#[test]
+fn two_devices_serve_frames_end_to_end() {
+    require_artifacts!(paths);
+    let port = 7551;
+    let n_frames = 3usize;
+    let server =
+        spawn_server(&paths, base_server_cfg(port, n_frames as u64, Duration::from_secs(5)));
+    std::thread::sleep(Duration::from_millis(2000)); // tail compile
+
+    let subscriber = spawn_subscriber(port, DEFAULT_SESSION, n_frames);
 
     let frames = scmii::sim::dataset::load_split(&paths.data.join("val")).unwrap();
     let frames: Vec<_> = frames.into_iter().take(n_frames).collect();
@@ -70,17 +98,10 @@ fn two_devices_serve_frames_end_to_end() {
     for dev in 0..2 {
         let clouds: Vec<_> = frames.iter().map(|f| f.clouds[dev].clone()).collect();
         let paths = paths.clone();
-        let cfg = DeviceConfig {
-            device_id: dev,
-            server: format!("127.0.0.1:{port}"),
-            variant: IntegrationKind::Max,
-            period: None,
-            bandwidth_bps: Some(1e9),
-            max_frames: n_frames,
-            // device 1 ships compressed intermediate outputs (paper
-            // §IV-E): exercises the mixed full/quantized path.
-            quantize: dev == 1,
-        };
+        let mut cfg = device_cfg(port, dev, DEFAULT_SESSION, n_frames);
+        // device 1 ships compressed intermediate outputs (paper §IV-E):
+        // exercises the mixed full/quantized path.
+        cfg.quantize = dev == 1;
         threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
     }
     for t in threads {
@@ -92,9 +113,15 @@ fn two_devices_serve_frames_end_to_end() {
     }
     let results = subscriber.join().unwrap();
     assert_eq!(results.len(), n_frames, "all frames must produce results");
-    let metrics = server.join().unwrap().unwrap();
+    let registry = server.join().unwrap().unwrap();
+    let session = registry.get(DEFAULT_SESSION).unwrap();
+    let metrics = session.metrics();
     assert_eq!(metrics.counter("frames_done"), n_frames as u64);
     assert_eq!(metrics.counter("tail_errors"), 0);
+    assert_eq!(metrics.counter("features_rx_quantized"), n_frames as u64);
+    // SyncStats surfaced into the session metrics (satellite task).
+    assert_eq!(metrics.counter("sync_complete"), n_frames as u64);
+    assert_eq!(metrics.counter("sync_timed_out"), 0);
 }
 
 #[test]
@@ -103,40 +130,153 @@ fn missing_device_zero_fill_still_produces_results() {
     let port = 7552;
     let n_frames = 2usize;
     // Short deadline: device 1 never connects, frames resolve by timeout.
-    let server = spawn_server(&paths, port, n_frames as u64, Duration::from_millis(300));
+    let server =
+        spawn_server(&paths, base_server_cfg(port, n_frames as u64, Duration::from_millis(300)));
     std::thread::sleep(Duration::from_millis(2000));
 
-    let sub = TcpStream::connect(("127.0.0.1", port)).unwrap();
-    let mut sub_w = sub.try_clone().unwrap();
-    write_msg(&mut sub_w, &Msg::Subscribe).unwrap();
-    let subscriber = std::thread::spawn(move || {
-        let mut reader = std::io::BufReader::new(sub);
-        let mut got = 0usize;
-        while got < n_frames {
-            match read_msg(&mut reader) {
-                Ok(Msg::Result { .. }) => got += 1,
-                Ok(_) => {}
-                Err(_) => break,
-            }
-        }
-        got
-    });
+    let subscriber = spawn_subscriber(port, DEFAULT_SESSION, n_frames);
 
     let frames = scmii::sim::dataset::load_split(&paths.data.join("val")).unwrap();
     let clouds: Vec<_> = frames.iter().take(n_frames).map(|f| f.clouds[0].clone()).collect();
-    let cfg = DeviceConfig {
-        device_id: 0,
-        server: format!("127.0.0.1:{port}"),
-        variant: IntegrationKind::Max,
-        period: None,
-        bandwidth_bps: None,
-        max_frames: n_frames,
-        quantize: false,
-    };
+    let mut cfg = device_cfg(port, 0, DEFAULT_SESSION, n_frames);
+    cfg.bandwidth_bps = None;
     run_device(&paths, &cfg, &clouds).unwrap();
 
     let got = subscriber.join().unwrap();
-    assert_eq!(got, n_frames, "zero-fill must produce a result per frame");
-    let metrics = server.join().unwrap().unwrap();
+    assert_eq!(got.len(), n_frames, "zero-fill must produce a result per frame");
+    let registry = server.join().unwrap().unwrap();
+    let metrics = registry.get(DEFAULT_SESSION).unwrap().metrics();
     assert_eq!(metrics.counter("frames_done"), n_frames as u64);
+    assert_eq!(metrics.counter("sync_timed_out"), n_frames as u64);
+}
+
+#[test]
+fn two_sessions_hosted_in_one_process_are_isolated() {
+    require_artifacts!(paths);
+    let port = 7553;
+    let n_default = 2usize;
+    let n_aux = 1usize;
+    // The aux session runs the same variant with a different config: an
+    // unsatisfiable score threshold (sigmoid ≤ 1), so its zero detection
+    // counts also prove decode params are per-session.
+    let mut cfg =
+        base_server_cfg(port, (n_default + n_aux) as u64, Duration::from_secs(5));
+    cfg.extra_sessions = vec![(
+        "aux".to_string(),
+        SessionConfig::new(IntegrationKind::Max)
+            .deadline(Duration::from_secs(5))
+            .decode(DecodeParams { score_threshold: 2.0, ..Default::default() }),
+    )];
+    let server = spawn_server(&paths, cfg);
+    std::thread::sleep(Duration::from_millis(2000));
+
+    let sub_default = spawn_subscriber(port, DEFAULT_SESSION, n_default);
+    let sub_aux = spawn_subscriber(port, "aux", n_aux);
+
+    let frames = scmii::sim::dataset::load_split(&paths.data.join("val")).unwrap();
+    let frames: Vec<_> = frames.into_iter().take(n_default).collect();
+    let mut threads = Vec::new();
+    for (session, n_frames) in [(DEFAULT_SESSION, n_default), ("aux", n_aux)] {
+        for dev in 0..2 {
+            let clouds: Vec<_> =
+                frames.iter().take(n_frames).map(|f| f.clouds[dev].clone()).collect();
+            let paths = paths.clone();
+            let cfg = device_cfg(port, dev, session, n_frames);
+            threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
+        }
+    }
+    for t in threads {
+        t.join().unwrap().unwrap();
+    }
+
+    let default_results = sub_default.join().unwrap();
+    let aux_results = sub_aux.join().unwrap();
+    assert_eq!(default_results.len(), n_default);
+    assert_eq!(aux_results.len(), n_aux);
+    // Per-session decode: the aux threshold keeps everything out.
+    assert!(aux_results.iter().all(|(_, n)| *n == 0), "aux threshold must filter all");
+
+    let registry = server.join().unwrap().unwrap();
+    let d = registry.get(DEFAULT_SESSION).unwrap();
+    let a = registry.get("aux").unwrap();
+    // Metrics are isolated per session.
+    assert_eq!(d.metrics().counter("frames_done"), n_default as u64);
+    assert_eq!(a.metrics().counter("frames_done"), n_aux as u64);
+    assert_eq!(d.metrics().counter("features_rx"), (2 * n_default) as u64);
+    assert_eq!(a.metrics().counter("features_rx"), (2 * n_aux) as u64);
+    assert_eq!(d.metrics().counter("sync_complete"), n_default as u64);
+    assert_eq!(a.metrics().counter("sync_complete"), n_aux as u64);
+    assert_eq!(registry.frames_done_total(), (n_default + n_aux) as u64);
+}
+
+/// Hand-encode one frame the way pre-session clients did: payloads end
+/// without the trailing session string.
+fn write_legacy_frame(stream: &mut TcpStream, ty: u8, payload: &[u8]) {
+    use std::io::Write;
+    let mut buf = Vec::with_capacity(payload.len() + 9);
+    buf.extend_from_slice(b"SCMI");
+    buf.push(ty);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    stream.write_all(&buf).unwrap();
+    stream.flush().unwrap();
+}
+
+fn legacy_tensor_payload(frame_id: u64, device_id: u32, shape: &[usize]) -> Vec<u8> {
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&frame_id.to_le_bytes());
+    payload.extend_from_slice(&device_id.to_le_bytes());
+    payload.push(shape.len() as u8);
+    for &d in shape {
+        payload.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    let n: usize = shape.iter().product();
+    payload.extend(std::iter::repeat(0u8).take(n * 4)); // zero f32 data
+    payload
+}
+
+#[test]
+fn legacy_client_without_session_field_is_served() {
+    require_artifacts!(paths);
+    let port = 7554;
+    let server = spawn_server(&paths, base_server_cfg(port, 1, Duration::from_secs(5)));
+    std::thread::sleep(Duration::from_millis(2000));
+
+    // Legacy subscriber: Subscribe with an empty payload.
+    let sub = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut sub_w = sub.try_clone().unwrap();
+    write_legacy_frame(&mut sub_w, 4, &[]);
+    let subscriber = std::thread::spawn(move || {
+        let mut reader = std::io::BufReader::new(sub);
+        loop {
+            match read_msg(&mut reader) {
+                Ok(Msg::Result { frame_id, .. }) => return Some(frame_id),
+                Ok(_) => {}
+                Err(_) => return None,
+            }
+        }
+    });
+
+    // Unlike a real device worker, this client sends instantly (no head
+    // compile), so give the subscriber's Subscribe a moment to attach.
+    std::thread::sleep(Duration::from_millis(300));
+
+    // Legacy device: Hello { device_id } then Features without session.
+    let meta = scmii::config::ModelMeta::load(&paths.model_meta()).unwrap();
+    let g = &meta.grid;
+    let shape = [g.dims[2], g.dims[1], g.dims[0], g.c_head];
+    let mut dev = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    write_legacy_frame(&mut dev, 1, &0u32.to_le_bytes());
+    for device_id in 0..2u32 {
+        let payload = legacy_tensor_payload(0, device_id, &shape);
+        write_legacy_frame(&mut dev, 2, &payload);
+    }
+    write_legacy_frame(&mut dev, 5, &[]); // Bye
+
+    let got = subscriber.join().unwrap();
+    assert_eq!(got, Some(0), "legacy client must receive a result");
+    let registry = server.join().unwrap().unwrap();
+    let metrics = registry.get(DEFAULT_SESSION).unwrap().metrics();
+    assert_eq!(metrics.counter("frames_done"), 1);
+    assert_eq!(metrics.counter("features_rx"), 2);
 }
