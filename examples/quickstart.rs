@@ -20,10 +20,11 @@ fn main() -> Result<()> {
     // Load the paper's best variant: concat + conv3d kernel size 3.
     let pipeline = ScMiiPipeline::load(&paths, IntegrationKind::ConvK3)?;
     println!(
-        "loaded SC-MII pipeline: {} devices, grid {:?}, intermediate output {} KiB/device",
+        "loaded SC-MII pipeline: {} devices, grid {:?}, intermediate output {} KiB/device, backend {}",
         pipeline.meta.num_devices,
         pipeline.meta.grid.dims,
-        pipeline.meta.grid.feature_bytes() / 1024
+        pipeline.meta.grid.feature_bytes() / 1024,
+        pipeline.backend().backend_name()
     );
 
     let frames = scmii::sim::dataset::load_split(&paths.data.join("val"))?;

@@ -24,6 +24,10 @@ fn main() -> Result<()> {
     let port = args.usize_or("port", 7441)? as u16;
     let hz = args.f64_or("hz", 10.0)?;
     let variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
+    let backend = scmii::runtime::BackendKind::parse(
+        &args.str_or("backend", scmii::runtime::BackendKind::default_kind().name()),
+    )?;
+    let backend_threads = args.usize_or("backend-threads", 2)?;
 
     let paths = default_paths();
     if !scmii::config::artifacts_present(&paths) {
@@ -34,20 +38,26 @@ fn main() -> Result<()> {
     let frames: Vec<_> = frames.into_iter().take(frames_n).collect();
     let n_dev = frames[0].clouds.len();
     println!(
-        "serving {} frames at {:.0} Hz across {} devices + 1 edge server (variant {})",
+        "serving {} frames at {:.0} Hz across {} devices + 1 edge server \
+         (variant {}, backend {} x{} threads)",
         frames.len(),
         hz,
         n_dev,
-        variant.name()
+        variant.name(),
+        backend.name(),
+        backend_threads
     );
 
-    // Edge server.
+    // Edge server: a multi-threaded backend pool, so tails of
+    // back-to-back frames overlap instead of queueing on one engine.
     let server_paths = paths.clone();
     let server_cfg = ServerConfig {
         port,
         variant,
         deadline: Duration::from_millis(400),
         max_frames: Some(frames.len() as u64),
+        backend,
+        backend_threads,
         ..Default::default()
     };
     let server = std::thread::spawn(move || run_server(&server_paths, &server_cfg));
@@ -89,6 +99,7 @@ fn main() -> Result<()> {
             bandwidth_bps: Some(1e9),
             max_frames: frames.len(),
             quantize: false,
+            backend,
         };
         device_threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
     }

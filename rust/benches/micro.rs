@@ -118,9 +118,10 @@ fn main() {
         bench.run("HLO head exec (points -> features)", || {
             std::hint::black_box(pipeline.run_head(0, &cloud).unwrap());
         });
-        // run_tail crosses the engine-actor thread, so this number
-        // includes the feature copy + channel hop the serving core pays
-        // on its borrowed-input path (infer() moves tensors instead).
+        // run_tail hands the backend owned tensors, so this number
+        // includes the feature copy (+ pool queue hop on the XLA
+        // backend) the serving core pays on its borrowed-input path
+        // (infer() moves tensors instead).
         bench.run("HLO tail exec conv_k3 (2 feats -> dets, via session)", || {
             std::hint::black_box(pipeline.run_tail(&feats).unwrap());
         });

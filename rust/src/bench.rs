@@ -1,0 +1,226 @@
+//! `scmii bench` — machine-readable micro-benchmarks of the serving hot
+//! path, emitted as `BENCH_decode.json`, `BENCH_integrate.json` and
+//! `BENCH_tail.json` so the performance trajectory is tracked from one
+//! PR to the next (each entry: op, p50/p95 seconds, backend, samples).
+//!
+//! Everything here runs on synthetic inputs at fixed shapes and needs no
+//! artifacts, so the numbers are comparable across machines-with-caveats
+//! and, more importantly, across commits on the same machine / CI runner.
+
+use crate::cli::Args;
+use crate::config::ModelMeta;
+use crate::model::{decode_raw, postprocess, DecodeParams};
+use crate::utils::bench::Bench;
+use crate::utils::json::Json;
+use crate::utils::rng::Pcg64;
+use crate::utils::stats;
+use crate::voxel::FeatureMap;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One benchmark row destined for a `BENCH_*.json` file.
+struct Entry {
+    op: String,
+    backend: String,
+    p50_secs: f64,
+    p95_secs: f64,
+    samples: usize,
+}
+
+impl Entry {
+    fn from_sample(sample: &crate::utils::bench::Sample, backend: &str) -> Entry {
+        Entry {
+            op: sample.name.clone(),
+            backend: backend.to_string(),
+            p50_secs: sample.p50(),
+            p95_secs: stats::percentile(&sample.times, 95.0),
+            samples: sample.times.len(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("op", Json::Str(self.op.clone()))
+            .set("backend", Json::Str(self.backend.clone()))
+            .set("p50_secs", Json::Num(self.p50_secs))
+            .set("p95_secs", Json::Num(self.p95_secs))
+            .set("samples", Json::Num(self.samples as f64));
+        j
+    }
+}
+
+fn write_entries(path: &Path, entries: &[Entry]) -> Result<()> {
+    let json = Json::Arr(entries.iter().map(|e| e.to_json()).collect());
+    crate::utils::json::write_file(path, &json)
+        .with_context(|| format!("write {}", path.display()))?;
+    println!("wrote {} ({} ops)", path.display(), entries.len());
+    Ok(())
+}
+
+/// Synthetic head outputs at the production decode shape.
+fn synthetic_logits(meta: &ModelMeta, rng: &mut Pcg64) -> (Vec<f32>, Vec<f32>) {
+    let [hb, wb] = meta.bev_dims;
+    let a = meta.anchors.len();
+    let n = hb * wb * a;
+    // Logits mostly negative so a realistic minority clears the score
+    // threshold (dense all-pass decodes would overstate NMS cost).
+    let cls: Vec<f32> = (0..n).map(|_| rng.uniform_f32() * 8.0 - 6.0).collect();
+    let boxes: Vec<f32> = (0..n * 8).map(|_| rng.uniform_f32() - 0.5).collect();
+    (cls, boxes)
+}
+
+fn bench_decode(bench: &mut Bench) -> Vec<Entry> {
+    let meta = ModelMeta::test_default();
+    let mut rng = Pcg64::new(41);
+    let (cls, boxes) = synthetic_logits(&meta, &mut rng);
+    let params = DecodeParams::default();
+    let s = bench.run("decode_raw", || {
+        let d = decode_raw(&cls, &boxes, &meta, &params);
+        std::hint::black_box(d.len());
+    });
+    let mut out = vec![Entry::from_sample(s, "host")];
+    let s = bench.run("postprocess", || {
+        let d = postprocess(&cls, &boxes, &meta, &params);
+        std::hint::black_box(d.len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    out
+}
+
+fn bench_integrate(bench: &mut Bench) -> Vec<Entry> {
+    // Fixed bench shape (quarter-resolution grid): big enough to be
+    // representative, small enough for conv k3 in debug builds. Shape is
+    // part of the contract — changing it breaks cross-commit comparison.
+    let (d, h, w, c) = (4usize, 16usize, 16usize, 8usize);
+    let mut rng = Pcg64::new(42);
+    let mut maps = Vec::new();
+    for _ in 0..2 {
+        let mut m = FeatureMap::zeros(d, h, w, c);
+        for v in m.data.iter_mut() {
+            // ~90% empty voxels, mirroring infrastructure-LiDAR sparsity.
+            *v = if rng.uniform_f32() < 0.1 { rng.uniform_f32() } else { 0.0 };
+        }
+        maps.push(m);
+    }
+    let c_in = 2 * c;
+    let mut conv_w = |k: usize| -> Vec<f32> {
+        (0..k * k * k * c_in * c).map(|_| (rng.uniform_f32() - 0.5) * 0.2).collect()
+    };
+    let w1 = conv_w(1);
+    let w3 = conv_w(3);
+    let bias = vec![0.01f32; c];
+
+    let mut out = Vec::new();
+    let s = bench.run("max_integrate", || {
+        std::hint::black_box(crate::integrate::max_integrate(&maps).len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    let s = bench.run("conv_integrate_k1", || {
+        std::hint::black_box(crate::integrate::conv_integrate(&maps, &w1, &bias, 1).len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    let s = bench.run("conv_integrate_k3", || {
+        std::hint::black_box(crate::integrate::conv_integrate(&maps, &w3, &bias, 3).len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    out
+}
+
+#[cfg(feature = "native")]
+fn bench_tail(bench: &mut Bench) -> Result<Vec<Entry>> {
+    use crate::config::IntegrationKind;
+    use crate::geom::Pose;
+    use crate::runtime::{native::NativeBackend, ExecBackend, HostTensor};
+
+    // Half-resolution meta so the bench stays fast in debug builds; the
+    // shape is fixed, so numbers remain comparable across commits.
+    let mut meta = ModelMeta::test_default();
+    meta.grid.dims = [32, 32, 4];
+    meta.grid.max_points = 1024;
+    meta.bev_dims = [16, 16];
+    let backend = NativeBackend::new(
+        meta.clone(),
+        vec![Pose::IDENTITY; meta.num_devices],
+        None,
+    )?;
+
+    let g = &meta.grid;
+    let shape = [g.dims[2], g.dims[1], g.dims[0], g.c_head];
+    let mut rng = Pcg64::new(43);
+    let mut feature = || {
+        let mut t = HostTensor::zeros(&shape);
+        for v in t.data.iter_mut() {
+            *v = if rng.uniform_f32() < 0.1 { rng.uniform_f32() } else { 0.0 };
+        }
+        t
+    };
+    let inputs = vec![feature(), feature()];
+
+    let mut out = Vec::new();
+    for kind in IntegrationKind::all() {
+        let tail = meta.variant(kind)?.tail.clone();
+        backend.load(&tail)?;
+        let s = bench.run(&format!("native_tail_{}", kind.name()), || {
+            let r = backend.exec(&tail, inputs.clone()).expect("native tail exec");
+            std::hint::black_box(r.len());
+        });
+        out.push(Entry::from_sample(s, "native"));
+    }
+    Ok(out)
+}
+
+#[cfg(not(feature = "native"))]
+fn bench_tail(_bench: &mut Bench) -> Result<Vec<Entry>> {
+    log::warn!("built without the `native` feature — BENCH_tail.json will be empty");
+    Ok(Vec::new())
+}
+
+/// `scmii bench` CLI entry.
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    args.check_known(&["out", "budget-ms"])?;
+    let out_dir = args.str_or("out", ".");
+    let out_dir = Path::new(&out_dir);
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("create bench output dir {}", out_dir.display()))?;
+    let budget = std::time::Duration::from_millis(args.u64_or("budget-ms", 1000)?);
+
+    let mut bench = Bench::auto().with_budget(budget).with_iters(3, 500);
+    write_entries(&out_dir.join("BENCH_decode.json"), &bench_decode(&mut bench))?;
+    write_entries(&out_dir.join("BENCH_integrate.json"), &bench_integrate(&mut bench))?;
+    write_entries(&out_dir.join("BENCH_tail.json"), &bench_tail(&mut bench)?)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_emits_all_three_json_files() {
+        let dir = std::env::temp_dir().join("scmii_bench_cmd_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = Args::parse(
+            ["--out", dir.to_str().unwrap(), "--budget-ms", "1"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        cmd_bench(&args).unwrap();
+        for f in ["BENCH_decode.json", "BENCH_integrate.json", "BENCH_tail.json"] {
+            let j = crate::utils::json::read_file(&dir.join(f)).unwrap();
+            let arr = j.as_arr().unwrap();
+            if f != "BENCH_tail.json" || cfg!(feature = "native") {
+                assert!(!arr.is_empty(), "{f} must have entries");
+            }
+            for e in arr {
+                assert!(e.req("op").unwrap().as_str().is_ok());
+                assert!(e.req("backend").unwrap().as_str().is_ok());
+                assert!(e.req("p50_secs").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(
+                    e.req("p95_secs").unwrap().as_f64().unwrap()
+                        >= e.req("p50_secs").unwrap().as_f64().unwrap()
+                );
+            }
+        }
+    }
+}

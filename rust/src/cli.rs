@@ -81,6 +81,17 @@ impl Args {
         self.values.get(key).cloned().with_context(|| format!("missing required --{key}"))
     }
 
+    /// Enumerated flag: the value (or `default` when absent) must be one
+    /// of `allowed` — a typo errors instead of silently meaning the
+    /// default.
+    pub fn str_one_of(&self, key: &str, allowed: &[&str], default: &str) -> Result<String> {
+        let v = self.str_or(key, default);
+        if !allowed.contains(&v.as_str()) {
+            bail!("--{key} expects one of {}, got {v:?}", allowed.join("|"));
+        }
+        Ok(v)
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.values.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
@@ -185,6 +196,19 @@ mod tests {
     fn bad_number_errors() {
         let a = parse(&["--n", "abc"]);
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn str_one_of_validates() {
+        let a = parse(&["--policy", "drop"]);
+        assert_eq!(a.str_one_of("policy", &["zero-fill", "drop"], "zero-fill").unwrap(), "drop");
+        assert_eq!(
+            a.str_one_of("missing", &["x", "y"], "x").unwrap(),
+            "x",
+            "absent flag takes the default"
+        );
+        let bad = parse(&["--policy", "bogus"]);
+        assert!(bad.str_one_of("policy", &["zero-fill", "drop"], "zero-fill").is_err());
     }
 
     #[test]

@@ -219,6 +219,22 @@ pub fn artifacts_present(paths: &Paths) -> bool {
     paths.model_meta().exists()
 }
 
+/// Load the calibration transforms written by `scmii setup`
+/// (`artifacts/calib.json`), one device→common pose per device.
+pub fn load_calib(paths: &Paths) -> Result<Vec<crate::geom::Pose>> {
+    let j = crate::utils::json::read_file(&paths.calib())?;
+    let arr = j.req("transforms")?.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for t in arr {
+        let v = t.as_f64_vec()?;
+        anyhow::ensure!(v.len() == 16, "transform must be 4x4");
+        let mut m = [0.0; 16];
+        m.copy_from_slice(&v);
+        out.push(crate::geom::Pose::from_mat4(&m));
+    }
+    Ok(out)
+}
+
 /// Convenience: load grid config from model_meta.json if present, else default.
 pub fn grid_or_default(paths: &Paths) -> GridConfig {
     fn load(p: &Path) -> Result<GridConfig> {

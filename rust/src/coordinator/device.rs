@@ -5,7 +5,7 @@ use crate::cli::Args;
 use crate::config::{IntegrationKind, LatencyConfig, ModelMeta, Paths};
 use crate::metrics::Metrics;
 use crate::net::{write_msg, Msg, ShapedWriter};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{build_backend, BackendKind, HostTensor};
 use crate::voxel::{points_to_tensor, Point};
 use anyhow::{Context, Result};
 use std::io::Write;
@@ -30,6 +30,8 @@ pub struct DeviceConfig {
     /// u8-quantize intermediate outputs before transmission (paper §IV-E
     /// compressed intermediate outputs: 4× smaller payload).
     pub quantize: bool,
+    /// Execution backend running the head model on this worker.
+    pub backend: BackendKind,
 }
 
 impl Default for DeviceConfig {
@@ -43,6 +45,7 @@ impl Default for DeviceConfig {
             bandwidth_bps: Some(1e9),
             max_frames: 32,
             quantize: false,
+            backend: BackendKind::default_kind(),
         }
     }
 }
@@ -63,8 +66,9 @@ pub fn run_device(
     let meta = ModelMeta::load(&paths.model_meta())?;
     let vm = meta.variant(cfg.variant)?;
     let head_name = vm.heads[cfg.device_id].clone();
-    let mut engine = Engine::cpu()?;
-    engine.load(paths, &head_name)?;
+    // One worker, one head model, one frame in flight: a single-threaded
+    // backend is all a device needs.
+    let backend = build_backend(paths, &meta, cfg.backend, 1, &[head_name.clone()])?;
 
     let stream = TcpStream::connect(&cfg.server)
         .with_context(|| format!("connect to {}", cfg.server))?;
@@ -88,7 +92,7 @@ pub fn run_device(
             points_to_tensor(cloud, meta.grid.max_points),
         )?;
         let t0 = Instant::now();
-        let mut feat = engine.exec(&head_name, &[input])?;
+        let mut feat = backend.exec(&head_name, vec![input])?;
         let head_secs = t0.elapsed().as_secs_f64();
         metrics.record("head_exec", head_secs);
 
@@ -141,6 +145,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         "split",
         "unshaped",
         "quantize",
+        "backend",
     ])?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
@@ -160,6 +165,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
     };
     cfg.max_frames = args.usize_or("max-frames", 32)?;
     cfg.quantize = args.switch("quantize");
+    cfg.backend = BackendKind::parse(&args.str_or("backend", cfg.backend.name()))?;
 
     let split = args.str_or("split", "val");
     let frames = crate::sim::dataset::load_split(&paths.data.join(&split))?;

@@ -10,20 +10,22 @@
 //! decode parameters live in the session, so eval numbers measure what
 //! serving returns.
 //!
-//! Spatial alignment executes *inside the tail HLO* as a static gather
-//! whose index map `python/compile/aot.py` baked from `calib.json` —
-//! i.e. the edge server performs the coordinate transformation, as in
-//! the paper; it just does so within the compiled tail graph.
+//! Spatial alignment executes *inside the tail* as a static gather —
+//! baked into the compiled graph by `python/compile/aot.py` on the XLA
+//! backend, built from the same `calib.json` poses by the native
+//! backend — i.e. the edge server performs the coordinate
+//! transformation, as in the paper, whichever substrate runs the math.
 
 use super::session::{DetectorSession, FeaturePayload, FrameResult, SessionConfig, SessionEvent};
 use crate::cli::Args;
 use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
 use crate::geom::Pose;
 use crate::model::{DecodeParams, Detection};
-use crate::runtime::{EngineActor, EngineHandle, HostTensor};
+use crate::runtime::{build_backend, BackendKind, ExecBackend, HostTensor};
 use crate::voxel::{merge_clouds, points_to_tensor, Point};
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-frame timing breakdown (seconds measured on this machine; the
@@ -41,28 +43,41 @@ pub struct FrameTiming {
 }
 
 /// Load the calibration transforms written by `scmii setup`.
-pub fn load_calib(paths: &Paths) -> Result<Vec<Pose>> {
-    let j = crate::utils::json::read_file(&paths.calib())?;
-    let arr = j.req("transforms")?.as_arr()?;
-    let mut out = Vec::with_capacity(arr.len());
-    for t in arr {
-        let v = t.as_f64_vec()?;
-        anyhow::ensure!(v.len() == 16, "transform must be 4x4");
-        let mut m = [0.0; 16];
-        m.copy_from_slice(&v);
-        out.push(Pose::from_mat4(&m));
+pub use crate::config::load_calib;
+
+/// Which backend the in-process pipeline executes on (CLI `--backend` /
+/// `--backend-threads`).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineBackend {
+    pub kind: BackendKind,
+    /// Engine-pool threads (XLA backend; the native backend runs on the
+    /// caller thread and ignores this).
+    pub threads: usize,
+}
+
+impl Default for PipelineBackend {
+    fn default() -> Self {
+        PipelineBackend { kind: BackendKind::default_kind(), threads: 1 }
     }
-    Ok(out)
+}
+
+impl PipelineBackend {
+    /// Parse `--backend` / `--backend-threads` flags.
+    pub fn from_args(args: &Args) -> Result<PipelineBackend> {
+        let d = PipelineBackend::default();
+        Ok(PipelineBackend {
+            kind: BackendKind::parse(&args.str_or("backend", d.kind.name()))?,
+            threads: args.usize_or("backend-threads", d.threads)?,
+        })
+    }
 }
 
 /// The in-process frontend for one integration variant: heads + a
-/// [`DetectorSession`] sharing one engine actor.
+/// [`DetectorSession`] sharing one execution backend.
 pub struct ScMiiPipeline {
     pub meta: ModelMeta,
     pub variant: IntegrationKind,
-    /// Keeps the engine thread alive for the session/handle.
-    _actor: EngineActor,
-    engine: EngineHandle,
+    backend: Arc<dyn ExecBackend>,
     session: DetectorSession,
     head_names: Vec<String>,
     calib: Vec<Pose>,
@@ -72,8 +87,18 @@ pub struct ScMiiPipeline {
 }
 
 impl ScMiiPipeline {
-    /// Load artifacts for `variant` (heads + tail) plus calibration.
+    /// Load models for `variant` (heads + tail) plus calibration on the
+    /// build's default backend.
     pub fn load(paths: &Paths, variant: IntegrationKind) -> Result<ScMiiPipeline> {
+        Self::load_with(paths, variant, &PipelineBackend::default())
+    }
+
+    /// Load on an explicit backend choice.
+    pub fn load_with(
+        paths: &Paths,
+        variant: IntegrationKind,
+        be: &PipelineBackend,
+    ) -> Result<ScMiiPipeline> {
         anyhow::ensure!(
             artifacts_present(paths),
             "artifacts missing under {} — run `make artifacts`",
@@ -83,20 +108,19 @@ impl ScMiiPipeline {
         let vm = meta.variant(variant)?.clone();
         let mut names = vm.heads.clone();
         names.push(vm.tail.clone());
-        let actor = EngineActor::spawn(paths.clone(), &names)?;
-        let engine = actor.handle();
+        let backend = build_backend(paths, &meta, be.kind, be.threads, &names)?;
         let calib = load_calib(paths).context("load calib.json (run `scmii setup`)")?;
         // In-process frames complete synchronously: a generous deadline +
         // Drop policy means the session never zero-fills mid-`infer`.
         let cfg = SessionConfig::new(variant)
             .deadline(Duration::from_secs(3600))
             .policy(super::scheduler::LossPolicy::Drop);
-        let session = DetectorSession::new("pipeline", meta.clone(), engine.clone(), cfg)?;
+        let session =
+            DetectorSession::new("pipeline", meta.clone(), Arc::clone(&backend), cfg)?;
         Ok(ScMiiPipeline {
             meta,
             variant,
-            _actor: actor,
-            engine,
+            backend,
             session,
             head_names: vm.heads,
             calib,
@@ -104,14 +128,19 @@ impl ScMiiPipeline {
         })
     }
 
-    /// Also load baseline artifacts (single-LiDAR fulls + input
-    /// integration) into the same engine for the eval harness.
+    /// Also load baseline models (single-LiDAR fulls + input
+    /// integration) into the same backend for the eval harness.
     pub fn load_baselines(&mut self, _paths: &Paths) -> Result<()> {
         for name in &self.meta.single_full {
-            self.engine.load(name)?;
+            self.backend.load(name)?;
         }
-        self.engine.load(&self.meta.input_integration_full)?;
+        self.backend.load(&self.meta.input_integration_full)?;
         Ok(())
+    }
+
+    /// The execution backend this pipeline runs on.
+    pub fn backend(&self) -> &Arc<dyn ExecBackend> {
+        &self.backend
     }
 
     /// The serving core this pipeline drives (metrics, sync stats).
@@ -129,13 +158,13 @@ impl ScMiiPipeline {
             vec![self.meta.grid.max_points, 4],
             points_to_tensor(points, self.meta.grid.max_points),
         )?;
-        let mut out = self.engine.exec(&self.head_names[device], vec![input])?;
+        let mut out = self.backend.exec(&self.head_names[device], vec![input])?;
         anyhow::ensure!(out.len() == 1, "head returns one tensor");
         Ok(out.remove(0))
     }
 
     /// Run the tail on per-device features (alignment happens inside).
-    /// Clones `features` to cross the engine-actor thread; callers that
+    /// Clones `features` to hand the backend ownership; callers that
     /// can give up ownership should prefer driving [`Self::infer`],
     /// which moves tensors into the session without copying.
     pub fn run_tail(&self, features: &[HostTensor]) -> Result<(Vec<f32>, Vec<f32>)> {
@@ -192,7 +221,7 @@ impl ScMiiPipeline {
             points_to_tensor(cloud, self.meta.grid.max_points),
         )?;
         let t0 = Instant::now();
-        let out = self.engine.exec(&name, vec![input])?;
+        let out = self.backend.exec(&name, vec![input])?;
         let secs = t0.elapsed().as_secs_f64();
         anyhow::ensure!(out.len() == 2, "full model returns (cls, boxes)");
         Ok((self.session.decode_detections(&out[0].data, &out[1].data), secs))
@@ -213,7 +242,7 @@ impl ScMiiPipeline {
         )?;
         let name = self.meta.input_integration_full.clone();
         let t0 = Instant::now();
-        let out = self.engine.exec(&name, vec![input])?;
+        let out = self.backend.exec(&name, vec![input])?;
         let secs = t0.elapsed().as_secs_f64();
         anyhow::ensure!(out.len() == 2, "full model returns (cls, boxes)");
         Ok((self.session.decode_detections(&out[0].data, &out[1].data), secs))
@@ -254,7 +283,16 @@ impl ScMiiPipeline {
 
 /// `scmii infer` — run the pipeline over validation frames and report.
 pub fn cmd_infer(args: &Args) -> Result<()> {
-    args.check_known(&["artifacts", "data", "variant", "frames", "split", "dump"])?;
+    args.check_known(&[
+        "artifacts",
+        "data",
+        "variant",
+        "frames",
+        "split",
+        "dump",
+        "backend",
+        "backend-threads",
+    ])?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
         &args.str_or("data", "data"),
@@ -262,8 +300,10 @@ pub fn cmd_infer(args: &Args) -> Result<()> {
     let variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
     let split = args.str_or("split", "val");
     let n = args.usize_or("frames", 8)?;
+    let be = PipelineBackend::from_args(args)?;
 
-    let pipeline = ScMiiPipeline::load(&paths, variant)?;
+    let pipeline = ScMiiPipeline::load_with(&paths, variant, &be)?;
+    log::info!("pipeline backend: {}", pipeline.backend().backend_name());
     let frames = crate::sim::dataset::load_split(&paths.data.join(&split))?;
 
     // Debug hook: dump the raw tail outputs of frame 0 for cross-checking

@@ -152,10 +152,20 @@ impl FrameSync {
                     self.stats.timed_out += 1;
                     let present: Vec<bool> =
                         pending.slots.iter().map(|s| s.is_some()).collect();
+                    // Zero-fill with the shape of a present sibling tensor
+                    // when one exists: arrived payloads may legitimately
+                    // differ from the configured shape (e.g. quantized→
+                    // dequantized tensors with trimmed dims), and the tail
+                    // needs every device input to agree.
+                    let fill_shape: Vec<usize> = pending
+                        .slots
+                        .iter()
+                        .find_map(|s| s.as_ref().map(|t| t.shape.clone()))
+                        .unwrap_or_else(|| self.feature_shape.clone());
                     let tensors: Vec<HostTensor> = pending
                         .slots
                         .into_iter()
-                        .map(|s| s.unwrap_or_else(|| HostTensor::zeros(&self.feature_shape)))
+                        .map(|s| s.unwrap_or_else(|| HostTensor::zeros(&fill_shape)))
                         .collect();
                     out.push(ReadyFrame {
                         frame_id: id,
@@ -289,6 +299,23 @@ mod tests {
             "stale emission records must be collected, have {}",
             s.emitted_len()
         );
+    }
+
+    #[test]
+    fn zero_fill_matches_present_sibling_shape() {
+        // Regression: a frame whose arrived tensor has a different shape
+        // than the configured feature_shape (e.g. a trimmed quantized
+        // payload) must be zero-filled to the *sibling's* shape, not the
+        // configured one — the tail needs agreeing device inputs.
+        let mut s =
+            FrameSync::new(2, Duration::from_millis(10), LossPolicy::ZeroFill, vec![2, 2]);
+        s.add(9, 1, HostTensor::zeros(&[3, 5]));
+        std::thread::sleep(Duration::from_millis(20));
+        let ready = s.poll_expired();
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].present, vec![false, true]);
+        assert_eq!(ready[0].tensors[0].shape, vec![3, 5], "fill from sibling");
+        assert_eq!(ready[0].tensors[1].shape, vec![3, 5]);
     }
 
     #[test]

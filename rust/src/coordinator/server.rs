@@ -14,7 +14,7 @@ use crate::cli::Args;
 use crate::config::{IntegrationKind, ModelMeta, Paths};
 use crate::model::DecodeParams;
 use crate::net::{write_msg, Msg, WireDetection, DEFAULT_SESSION};
-use crate::runtime::EngineActor;
+use crate::runtime::{build_backend, BackendKind};
 use anyhow::{Context, Result};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -38,6 +38,11 @@ pub struct ServerConfig {
     pub max_frames: Option<u64>,
     /// Additional named sessions hosted alongside the default one.
     pub extra_sessions: Vec<(String, SessionConfig)>,
+    /// Execution backend for every hosted session.
+    pub backend: BackendKind,
+    /// Engine-pool threads (`--backend-threads`): how many tails can
+    /// execute concurrently on the XLA backend.
+    pub backend_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -50,6 +55,8 @@ impl Default for ServerConfig {
             decode: DecodeParams::default(),
             max_frames: None,
             extra_sessions: Vec::new(),
+            backend: BackendKind::default_kind(),
+            backend_threads: 1,
         }
     }
 }
@@ -158,7 +165,9 @@ pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegist
     let meta = ModelMeta::load(&paths.model_meta())?;
     let specs = cfg.session_specs()?;
 
-    // One engine actor serves every session; preload each distinct tail.
+    // One backend serves every session; preload each distinct tail. On
+    // the XLA backend this is a pool of `backend_threads` engine
+    // threads, so different sessions' tails execute concurrently.
     let mut tails: Vec<String> = Vec::new();
     for (_, sc) in &specs {
         let tail = meta.variant(sc.variant)?.tail.clone();
@@ -166,11 +175,11 @@ pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegist
             tails.push(tail);
         }
     }
-    let actor = EngineActor::spawn(paths.clone(), &tails)?;
+    let backend = build_backend(paths, &meta, cfg.backend, cfg.backend_threads, &tails)?;
 
     let registry = Arc::new(SessionRegistry::new());
     for (name, sc) in specs {
-        registry.insert(DetectorSession::new(&name, meta.clone(), actor.handle(), sc)?);
+        registry.insert(DetectorSession::new(&name, meta.clone(), Arc::clone(&backend), sc)?);
     }
     let shared = Arc::new(Shared {
         registry: Arc::clone(&registry),
@@ -183,11 +192,13 @@ pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegist
         .with_context(|| format!("bind port {}", cfg.port))?;
     listener.set_nonblocking(true)?;
     log::info!(
-        "edge server on 127.0.0.1:{} sessions={:?} devices={} resident={:?}",
+        "edge server on 127.0.0.1:{} sessions={:?} devices={} backend={} threads={} resident={:?}",
         cfg.port,
         registry.names(),
         meta.num_devices,
-        actor.handle().loaded().unwrap_or_default()
+        backend.backend_name(),
+        cfg.backend_threads,
+        backend.loaded_names()
     );
 
     let mut conn_threads = Vec::new();
@@ -395,15 +406,21 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         "score-thresh",
         "nms-iou",
         "sessions",
+        "backend",
+        "backend-threads",
     ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
     cfg.variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
     cfg.deadline = Duration::from_millis(args.u64_or("deadline-ms", 200)?);
-    cfg.policy = match args.str_or("policy", "zero-fill").as_str() {
+    cfg.policy = match args.str_one_of("policy", &["zero-fill", "drop"], "zero-fill")?.as_str() {
         "drop" => LossPolicy::Drop,
         _ => LossPolicy::ZeroFill,
     };
+    // Same flags, same defaults as the in-process pipeline — one parser.
+    let be = super::pipeline::PipelineBackend::from_args(args)?;
+    cfg.backend = be.kind;
+    cfg.backend_threads = be.threads;
     cfg.decode.score_threshold = args.f32_or("score-thresh", cfg.decode.score_threshold)?;
     cfg.decode.nms_iou = args.f64_or("nms-iou", cfg.decode.nms_iou)?;
     let max = args.u64_or("max-frames", 0)?;
@@ -472,6 +489,26 @@ mod tests {
     #[test]
     fn unknown_serve_flag_rejected() {
         assert!(server_config_from_args(&args(&["--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn serve_backend_flags_parse() {
+        let cfg = server_config_from_args(&args(&[
+            "--backend",
+            "native",
+            "--backend-threads",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.backend, BackendKind::Native);
+        assert_eq!(cfg.backend_threads, 4);
+        let d = server_config_from_args(&args(&[])).unwrap();
+        assert_eq!(d.backend, BackendKind::default_kind());
+        assert_eq!(d.backend_threads, 1);
+        assert!(server_config_from_args(&args(&["--backend", "gpu"])).is_err());
+        // Satellite regression: a typoed policy used to silently mean
+        // zero-fill; it must now be rejected.
+        assert!(server_config_from_args(&args(&["--policy", "bogus"])).is_err());
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::config::{IntegrationKind, ModelMeta};
 use crate::metrics::Metrics;
 use crate::model::{postprocess, DecodeParams, Detection};
 use crate::net::QuantTensor;
-use crate::runtime::{EngineHandle, HostTensor};
+use crate::runtime::{ExecBackend, HostTensor};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -159,19 +159,19 @@ pub trait ResultSink: Send {
 }
 
 /// The serving core for one detector: owns the frame synchronizer, the
-/// engine handle for the tail model, decode parameters, and metrics.
-/// Thread-safe behind `&self`; share it across connection threads in an
-/// `Arc`.
+/// execution backend running the tail model, decode parameters, and
+/// metrics. Thread-safe behind `&self`; share it across connection
+/// threads in an `Arc`.
+///
+/// The backend is shared (`Arc<dyn ExecBackend>`): many sessions point
+/// at one engine pool, and tails of different sessions execute
+/// concurrently up to the pool size.
 pub struct DetectorSession {
     name: String,
     cfg: SessionConfig,
     meta: ModelMeta,
     tail: String,
-    /// MSRV guard: `EngineHandle` wraps an `mpsc::Sender`, which is only
-    /// `Sync` on rustc ≥ 1.72 — the mutex (a cheap lock + handle clone
-    /// per frame, vs. ms-scale tail execs) keeps the session `Sync` on
-    /// older toolchains too.
-    engine: Mutex<EngineHandle>,
+    backend: Arc<dyn ExecBackend>,
     sync: Mutex<FrameSync>,
     sinks: Mutex<Vec<Box<dyn ResultSink>>>,
     metrics: Arc<Metrics>,
@@ -179,12 +179,12 @@ pub struct DetectorSession {
 }
 
 impl DetectorSession {
-    /// Build a session for `cfg.variant`. The tail artifact must already
-    /// be loaded (or loadable) in the engine behind `engine`.
+    /// Build a session for `cfg.variant`. The tail model must already be
+    /// loaded (or loadable) in `backend`.
     pub fn new(
         name: &str,
         meta: ModelMeta,
-        engine: EngineHandle,
+        backend: Arc<dyn ExecBackend>,
         cfg: SessionConfig,
     ) -> Result<DetectorSession> {
         anyhow::ensure!(!name.is_empty(), "session name must be non-empty");
@@ -202,7 +202,7 @@ impl DetectorSession {
             cfg,
             meta,
             tail,
-            engine: Mutex::new(engine),
+            backend,
             sync: Mutex::new(sync),
             sinks: Mutex::new(Vec::new()),
             metrics: Arc::new(Metrics::new()),
@@ -224,6 +224,11 @@ impl DetectorSession {
 
     pub fn tail_name(&self) -> &str {
         &self.tail
+    }
+
+    /// The execution backend this session runs its tail on.
+    pub fn backend(&self) -> &Arc<dyn ExecBackend> {
+        &self.backend
     }
 
     /// Shared handle to this session's metrics (isolated per session).
@@ -337,7 +342,7 @@ impl DetectorSession {
     /// Execute the tail on already-synchronized features and return the
     /// raw (cls, boxes) outputs (debug dumps and cross-check tests).
     pub fn run_tail(&self, features: Vec<HostTensor>) -> Result<(Vec<f32>, Vec<f32>)> {
-        let out = self.engine().exec(&self.tail, features)?;
+        let out = self.backend.exec(&self.tail, features)?;
         anyhow::ensure!(out.len() == 2, "tail returns (cls, boxes)");
         let mut it = out.into_iter();
         let cls = it.next().unwrap().data;
@@ -345,16 +350,12 @@ impl DetectorSession {
         Ok((cls, boxes))
     }
 
-    fn engine(&self) -> EngineHandle {
-        self.engine.lock().unwrap().clone()
-    }
-
     /// Fig-2 right half for one synchronized frame: tail → decode/NMS →
     /// metrics → sinks.
     fn process_ready(&self, ready: ReadyFrame) -> SessionEvent {
         let t0 = Instant::now();
         let sync_wait_secs = t0.duration_since(ready.first_arrival).as_secs_f64();
-        let result = self.engine().exec(&self.tail, ready.tensors);
+        let result = self.backend.exec(&self.tail, ready.tensors);
         let tail_secs = t0.elapsed().as_secs_f64();
         self.metrics.record("tail_exec", tail_secs);
         self.metrics.record("sync_wait", sync_wait_secs);
@@ -477,15 +478,28 @@ impl SessionRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Paths;
-    use crate::runtime::EngineActor;
 
-    /// Engine with no artifacts: spawns fine, every exec errors — which
-    /// exercises the session's tail-error path without PJRT artifacts.
-    fn empty_engine() -> (EngineActor, EngineHandle) {
-        let actor = EngineActor::spawn(Paths::new("/nonexistent", "/nonexistent"), &[]).unwrap();
-        let handle = actor.handle();
-        (actor, handle)
+    /// Backend with no models: every exec errors — which exercises the
+    /// session's tail-error path without PJRT, artifacts, or weights.
+    struct EmptyBackend;
+
+    impl ExecBackend for EmptyBackend {
+        fn backend_name(&self) -> &str {
+            "empty"
+        }
+        fn exec(&self, name: &str, _inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            anyhow::bail!("model {name:?} not loaded")
+        }
+        fn load(&self, name: &str) -> Result<()> {
+            anyhow::bail!("model {name:?} not loadable")
+        }
+        fn loaded_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+    }
+
+    fn empty_backend() -> Arc<dyn ExecBackend> {
+        Arc::new(EmptyBackend)
     }
 
     fn feat() -> HostTensor {
@@ -540,12 +554,12 @@ mod tests {
 
     #[test]
     fn session_completes_frame_and_delivers_to_sinks() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let meta = ModelMeta::test_default();
         let session = DetectorSession::new(
             "test",
             meta,
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
         )
         .unwrap();
@@ -560,7 +574,7 @@ mod tests {
             SessionEvent::Result(r) => {
                 assert_eq!(r.frame_id, 1);
                 assert_eq!(r.present, vec![true, true]);
-                // No artifacts behind the engine: tail errors, frame still
+                // No models behind the backend: tail errors, frame still
                 // completes with empty detections.
                 assert!(r.tail_error);
                 assert!(r.detections.is_empty());
@@ -577,11 +591,11 @@ mod tests {
 
     #[test]
     fn quantized_submission_counted_and_decoded() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let session = DetectorSession::new(
             "q",
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
         )
         .unwrap();
@@ -593,11 +607,11 @@ mod tests {
 
     #[test]
     fn out_of_range_device_rejected_not_panicking() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let session = DetectorSession::new(
             "r",
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max),
         )
         .unwrap();
@@ -607,11 +621,11 @@ mod tests {
 
     #[test]
     fn drop_policy_emits_dropped_event() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let session = DetectorSession::new(
             "d",
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max)
                 .deadline(Duration::from_millis(10))
                 .policy(LossPolicy::Drop),
@@ -628,11 +642,11 @@ mod tests {
 
     #[test]
     fn zero_fill_policy_completes_partial_frame() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let session = DetectorSession::new(
             "z",
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max)
                 .deadline(Duration::from_millis(10))
                 .policy(LossPolicy::ZeroFill),
@@ -654,11 +668,11 @@ mod tests {
 
     #[test]
     fn abort_frame_releases_partial_submission() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let session = DetectorSession::new(
             "ab",
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_millis(10)),
         )
         .unwrap();
@@ -679,11 +693,11 @@ mod tests {
                 anyhow::bail!("broken pipe")
             }
         }
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let session = DetectorSession::new(
             "f",
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
         )
         .unwrap();
@@ -695,13 +709,13 @@ mod tests {
 
     #[test]
     fn registry_isolates_sessions() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         let registry = SessionRegistry::new();
         let a = registry.insert(
             DetectorSession::new(
                 "a",
                 ModelMeta::test_default(),
-                engine.clone(),
+                backend.clone(),
                 SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
             )
             .unwrap(),
@@ -710,7 +724,7 @@ mod tests {
             DetectorSession::new(
                 "b",
                 ModelMeta::test_default(),
-                engine,
+                backend,
                 SessionConfig::new(IntegrationKind::ConvK3).deadline(Duration::from_secs(60)),
             )
             .unwrap(),
@@ -734,11 +748,11 @@ mod tests {
 
     #[test]
     fn session_name_validation() {
-        let (_actor, engine) = empty_engine();
+        let backend = empty_backend();
         assert!(DetectorSession::new(
             "",
             ModelMeta::test_default(),
-            engine.clone(),
+            backend.clone(),
             SessionConfig::new(IntegrationKind::Max),
         )
         .is_err());
@@ -746,7 +760,7 @@ mod tests {
         assert!(DetectorSession::new(
             &long,
             ModelMeta::test_default(),
-            engine,
+            backend,
             SessionConfig::new(IntegrationKind::Max),
         )
         .is_err());

@@ -10,7 +10,7 @@
 use super::ap::{evaluate_map, EvalFrame};
 use crate::cli::Args;
 use crate::config::{IntegrationKind, Paths};
-use crate::coordinator::pipeline::ScMiiPipeline;
+use crate::coordinator::pipeline::{PipelineBackend, ScMiiPipeline};
 use crate::geom::Box3;
 use crate::model::Detection;
 use crate::utils::bench::print_table;
@@ -60,16 +60,27 @@ where
     })
 }
 
-/// Run the full Table-III sweep.
+/// Run the full Table-III sweep on the build's default backend.
 pub fn run_accuracy(paths: &Paths, n_frames: usize) -> Result<Vec<AccuracyRow>> {
+    run_accuracy_with(paths, n_frames, &PipelineBackend::default())
+}
+
+/// Run the full Table-III sweep on an explicit backend — every row goes
+/// through the `DetectorSession` core on that backend, so e.g.
+/// `--backend native` scores the artifact-free path.
+pub fn run_accuracy_with(
+    paths: &Paths,
+    n_frames: usize,
+    be: &PipelineBackend,
+) -> Result<Vec<AccuracyRow>> {
     let frames = crate::sim::dataset::load_split(&paths.data.join("val"))?;
     let frames: Vec<_> = frames.into_iter().take(n_frames).collect();
     anyhow::ensure!(!frames.is_empty(), "no validation frames");
 
     let mut rows = Vec::new();
 
-    // Baselines share one pipeline instance (engine holds all artifacts).
-    let mut base = ScMiiPipeline::load(paths, IntegrationKind::Max)?;
+    // Baselines share one pipeline instance (backend holds all models).
+    let mut base = ScMiiPipeline::load_with(paths, IntegrationKind::Max, be)?;
     base.load_baselines(paths)?;
     let n_classes = base.meta.classes.len();
     let n_dev = base.meta.num_devices;
@@ -87,7 +98,7 @@ pub fn run_accuracy(paths: &Paths, n_frames: usize) -> Result<Vec<AccuracyRow>> 
     })?);
 
     for kind in IntegrationKind::all() {
-        let pipeline = ScMiiPipeline::load(paths, kind)?;
+        let pipeline = ScMiiPipeline::load_with(paths, kind, be)?;
         let name = match kind {
             IntegrationKind::Max => "SC-MII max value selection",
             IntegrationKind::ConvK1 => "SC-MII conv kernel size 1",
@@ -127,13 +138,14 @@ pub fn print_accuracy(rows: &[AccuracyRow]) {
 
 /// `scmii eval-accuracy` CLI entry.
 pub fn cmd_eval_accuracy(args: &Args) -> Result<()> {
-    args.check_known(&["artifacts", "data", "frames"])?;
+    args.check_known(&["artifacts", "data", "frames", "backend", "backend-threads"])?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
         &args.str_or("data", "data"),
     );
     let n = args.usize_or("frames", 80)?;
-    let rows = run_accuracy(&paths, n)?;
+    let be = PipelineBackend::from_args(args)?;
+    let rows = run_accuracy_with(&paths, n, &be)?;
     print_accuracy(&rows);
     Ok(())
 }

@@ -14,7 +14,7 @@
 
 use crate::cli::Args;
 use crate::config::{IntegrationKind, LatencyConfig, Paths};
-use crate::coordinator::pipeline::{FrameTiming, ScMiiPipeline};
+use crate::coordinator::pipeline::{FrameTiming, PipelineBackend, ScMiiPipeline};
 use crate::latency::TestbedModel;
 use crate::utils::bench::print_table;
 use crate::utils::stats;
@@ -42,13 +42,24 @@ pub struct MethodTiming {
     pub edge_per_device: Vec<Vec<f64>>,
 }
 
-/// Execute every configuration over `n_frames` validation frames.
+/// Execute every configuration over `n_frames` validation frames on the
+/// build's default backend.
 pub fn measure_raw(paths: &Paths, n_frames: usize) -> Result<RawTimings> {
+    measure_raw_with(paths, n_frames, &PipelineBackend::default())
+}
+
+/// Execute every configuration on an explicit backend, so Fig-5 numbers
+/// can be produced for each substrate (xla vs native) separately.
+pub fn measure_raw_with(
+    paths: &Paths,
+    n_frames: usize,
+    be: &PipelineBackend,
+) -> Result<RawTimings> {
     let frames = crate::sim::dataset::load_split(&paths.data.join("val"))?;
     let frames: Vec<_> = frames.into_iter().take(n_frames).collect();
     anyhow::ensure!(!frames.is_empty(), "no validation frames");
 
-    let mut base = ScMiiPipeline::load(paths, IntegrationKind::Max)?;
+    let mut base = ScMiiPipeline::load_with(paths, IntegrationKind::Max, be)?;
     base.load_baselines(paths)?;
     let n_devices = base.meta.num_devices;
     let remote_raw_bytes = base.meta.grid.max_points * 16 * (n_devices - 1);
@@ -62,7 +73,7 @@ pub fn measure_raw(paths: &Paths, n_frames: usize) -> Result<RawTimings> {
 
     let mut scmii = Vec::new();
     for kind in IntegrationKind::all() {
-        let pipeline = ScMiiPipeline::load(paths, kind)?;
+        let pipeline = ScMiiPipeline::load_with(paths, kind, be)?;
         let _ = pipeline.infer(&frames[0].clouds)?; // warm-up
         let mut timings = Vec::new();
         for f in &frames {
@@ -115,7 +126,17 @@ pub fn run_exec_time(
     n_frames: usize,
     lat_cfg: &LatencyConfig,
 ) -> Result<Vec<MethodTiming>> {
-    let raw = measure_raw(paths, n_frames)?;
+    run_exec_time_with(paths, n_frames, lat_cfg, &PipelineBackend::default())
+}
+
+/// Measurement + modeling on an explicit backend.
+pub fn run_exec_time_with(
+    paths: &Paths,
+    n_frames: usize,
+    lat_cfg: &LatencyConfig,
+    be: &PipelineBackend,
+) -> Result<Vec<MethodTiming>> {
+    let raw = measure_raw_with(paths, n_frames, be)?;
     Ok(model_methods(&raw, lat_cfg))
 }
 
@@ -192,6 +213,8 @@ pub fn cmd_exec_time(args: &Args) -> Result<()> {
         "edge-factor",
         "server-factor",
         "bandwidth-gbps",
+        "backend",
+        "backend-threads",
     ])?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
@@ -202,7 +225,8 @@ pub fn cmd_exec_time(args: &Args) -> Result<()> {
     cfg.edge_factor = args.f64_or("edge-factor", cfg.edge_factor)?;
     cfg.server_factor = args.f64_or("server-factor", cfg.server_factor)?;
     cfg.bandwidth_bps = args.f64_or("bandwidth-gbps", cfg.bandwidth_bps / 1e9)? * 1e9;
-    let methods = run_exec_time(&paths, n, &cfg)?;
+    let be = PipelineBackend::from_args(args)?;
+    let methods = run_exec_time_with(&paths, n, &cfg, &be)?;
     print_exec_time(&methods);
     Ok(())
 }

@@ -10,6 +10,26 @@
 //! `python/`) run only at build time; the artifacts they emit
 //! (`artifacts/*.hlo.txt`) are loaded here through PJRT.
 //!
+//! ## Execution backends
+//!
+//! All model execution goes through [`runtime::ExecBackend`]
+//! (`Arc<dyn ExecBackend>` everywhere above the runtime layer):
+//!
+//! - `runtime::XlaBackend` (feature `xla`, default) runs the AOT HLO
+//!   artifacts through PJRT on a **pool of N engine threads** with
+//!   shared-queue work stealing — independent sessions and frames
+//!   execute tails concurrently (`scmii serve --backend-threads N`).
+//!   The engine is *not* single-threaded anymore; one serialized actor
+//!   thread was the pre-backend design.
+//! - `runtime::native::NativeBackend` (feature `native`) is a
+//!   pure-Rust head/tail implementation (voxelize → linear head; gather
+//!   alignment → integration → BEV conv → detection heads) requiring no
+//!   HLO artifacts or native libraries: `cargo test --no-default-features
+//!   --features native` exercises the full serving stack.
+//!
+//! Select per process with `scmii serve/infer/device --backend
+//! xla|native`.
+//!
 //! ## The serving core
 //!
 //! The paper's Fig-2 flow — per-device heads → frame sync → integration +
@@ -43,6 +63,7 @@
 //! See `docs/ARCHITECTURE.md` for the full design write-up.
 
 pub mod align;
+pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

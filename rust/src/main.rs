@@ -18,6 +18,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("infer", "run the in-process pipeline on dataset frames"),
     ("eval-accuracy", "reproduce Table III (mAP per integration method)"),
     ("exec-time", "reproduce Fig 5 (execution-time comparison)"),
+    ("bench", "hot-path micro-benchmarks -> BENCH_*.json"),
     ("version", "print version info"),
 ];
 
@@ -43,7 +44,14 @@ fn main() {
         "infer" => scmii::coordinator::pipeline::cmd_infer(&args),
         "eval-accuracy" => scmii::eval::harness::cmd_eval_accuracy(&args),
         "exec-time" => scmii::latency::harness::cmd_exec_time(&args),
+        "bench" => scmii::bench::cmd_bench(&args),
+        #[cfg(feature = "xla")]
         "run-hlo" => cmd_run_hlo(&args),
+        #[cfg(not(feature = "xla"))]
+        "run-hlo" => Err(anyhow::anyhow!(
+            "run-hlo executes HLO artifacts and needs the `xla` feature (this build has only {:?})",
+            scmii::runtime::BackendKind::default_kind().name()
+        )),
         "version" => {
             println!("scmii {} (SC-MII reproduction)", env!("CARGO_PKG_VERSION"));
             Ok(())
@@ -87,6 +95,7 @@ fn cmd_datagen(args: &Args) -> Result<()> {
 
 /// Debug utility: execute any artifact on npy inputs, dump npy outputs.
 /// Used to cross-check individual lowered ops against the python path.
+#[cfg(feature = "xla")]
 fn cmd_run_hlo(args: &Args) -> Result<()> {
     args.check_known(&["artifacts", "name", "inputs", "out"])?;
     let paths = scmii::config::Paths::new(&args.str_or("artifacts", "artifacts"), "data");

@@ -65,7 +65,10 @@ pub fn decode_raw(
             for k in 0..a {
                 let idx = (row * wb + col) * a + k;
                 let score = sigmoid(cls_logits[idx]);
-                if score < params.score_threshold {
+                // Negated >= so NaN scores fail the filter here (a NaN
+                // comparison is always false) instead of slipping through
+                // and sorting unpredictably downstream.
+                if !(score >= params.score_threshold) {
                     continue;
                 }
                 let anchor = &meta.anchors[k];
@@ -90,8 +93,21 @@ pub fn decode_raw(
             }
         }
     }
-    out.sort_by(|p, q| q.score.partial_cmp(&p.score).unwrap());
-    out.truncate(params.pre_nms_top_k);
+    // Top-k selection instead of a full sort: candidates are O(H·W·A),
+    // the kept set is `pre_nms_top_k` — select_nth partitions in O(n),
+    // then only the kept prefix is sorted. `total_cmp` keeps the sort
+    // panic-proof even if NaN scores ever reached it (the threshold
+    // filter above already drops them).
+    let k = params.pre_nms_top_k;
+    if k == 0 {
+        out.clear();
+        return out;
+    }
+    if out.len() > k {
+        out.select_nth_unstable_by(k - 1, |p, q| q.score.total_cmp(&p.score));
+        out.truncate(k);
+    }
+    out.sort_unstable_by(|p, q| q.score.total_cmp(&p.score));
     out
 }
 
@@ -102,14 +118,21 @@ pub fn postprocess(
     meta: &ModelMeta,
     params: &DecodeParams,
 ) -> Vec<Detection> {
-    let candidates = decode_raw(cls_logits, box_deltas, meta, params);
+    let mut candidates = decode_raw(cls_logits, box_deltas, meta, params);
+    // Partition in place per class: a stable sort by class keeps the
+    // descending score order inside each class run, then each run is
+    // split off and moved into NMS — no per-class clones.
+    candidates.sort_by_key(|d| d.class_id);
     let mut kept = Vec::new();
-    for class_id in 0..meta.classes.len() {
-        let class_dets: Vec<Detection> =
-            candidates.iter().filter(|d| d.class_id == class_id).cloned().collect();
-        kept.extend(rotated_nms(class_dets, params.nms_iou, params.max_detections));
+    let mut rest = candidates;
+    while !rest.is_empty() {
+        let class_id = rest[0].class_id;
+        let split = rest.partition_point(|d| d.class_id == class_id);
+        let tail = rest.split_off(split);
+        kept.extend(rotated_nms(rest, params.nms_iou, params.max_detections));
+        rest = tail;
     }
-    kept.sort_by(|p, q| q.score.partial_cmp(&p.score).unwrap());
+    kept.sort_unstable_by(|p, q| q.score.total_cmp(&p.score));
     kept.truncate(params.max_detections);
     kept
 }
@@ -208,6 +231,46 @@ mod tests {
         let dets = postprocess(&cls, &boxes, &m, &DecodeParams::default());
         assert_eq!(dets.len(), 1, "NMS should keep one of the overlapping pair");
         assert!(dets[0].score > 0.9);
+    }
+
+    #[test]
+    fn nan_logits_are_handled_without_panicking() {
+        // Regression: partial_cmp().unwrap() used to panic on NaN scores
+        // mid-serve, and NaN used to slip past the `<` threshold test.
+        // Now the threshold filter drops NaN (NaN comparisons are false
+        // either way, so `!(score >= t)` rejects it) and total_cmp keeps
+        // every sort panic-free.
+        let m = meta();
+        let [hb, wb] = m.bev_dims;
+        let a = m.anchors.len();
+        let mut cls = vec![-10.0f32; hb * wb * a];
+        let boxes = vec![0.0f32; hb * wb * a * 8];
+        cls[0] = f32::NAN;
+        cls[(10 * wb + 12) * a] = 5.0;
+        let dets = postprocess(&cls, &boxes, &m, &DecodeParams::default());
+        assert_eq!(dets.len(), 1, "NaN-scored candidate must be filtered out");
+        assert!(dets[0].score > 0.9, "the valid detection survives");
+        assert!(dets.iter().all(|d| d.score.is_finite()));
+    }
+
+    #[test]
+    fn top_k_selection_keeps_global_best() {
+        let m = meta();
+        let [hb, wb] = m.bev_dims;
+        let a = m.anchors.len();
+        let n = hb * wb * a;
+        // Strictly increasing logits, all above threshold.
+        let cls: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+        let boxes = vec![0.0f32; n * 8];
+        let params = DecodeParams { score_threshold: 0.1, pre_nms_top_k: 7, ..Default::default() };
+        let dets = decode_raw(&cls, &boxes, &m, &params);
+        assert_eq!(dets.len(), 7);
+        for w in dets.windows(2) {
+            assert!(w[0].score >= w[1].score, "output must stay score-sorted");
+        }
+        let top_logit = (n - 1) as f32 / n as f32;
+        let expect = 1.0 / (1.0 + (-top_logit).exp());
+        assert!((dets[0].score - expect).abs() < 1e-6, "must keep the global best");
     }
 
     #[test]

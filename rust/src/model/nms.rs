@@ -6,7 +6,12 @@ use crate::geom::bev_iou;
 /// Greedy NMS over score-sorted detections using rotated BEV IoU.
 /// Input need not be sorted; output is sorted by descending score.
 pub fn rotated_nms(mut dets: Vec<Detection>, iou_threshold: f64, max_keep: usize) -> Vec<Detection> {
-    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    // Drop NaN scores up front: in the descending total order +NaN would
+    // rank first and suppress every overlapping real detection. total_cmp
+    // then keeps the sort panic-free (the old partial_cmp().unwrap()
+    // panicked mid-serve).
+    dets.retain(|d| !d.score.is_nan());
+    dets.sort_unstable_by(|a, b| b.score.total_cmp(&a.score));
     let mut kept: Vec<Detection> = Vec::new();
     for d in dets {
         if kept.len() >= max_keep {
@@ -75,5 +80,15 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(rotated_nms(Vec::new(), 0.3, 10).is_empty());
+    }
+
+    #[test]
+    fn nan_scores_are_dropped_not_seeded() {
+        // A NaN-scored box fully overlapping a real one must not become
+        // the NMS seed that suppresses it.
+        let dets = vec![det(0.0, 0.0, 0.0, f32::NAN), det(0.0, 0.0, 0.0, 0.8)];
+        let kept = rotated_nms(dets, 0.3, 10);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.8);
     }
 }

@@ -1,23 +1,42 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) emitted
-//! by `python/compile/aot.py` and executes them on the request path.
+//! Execution backends: every model exec in the system (heads, tails,
+//! baselines) goes through the [`ExecBackend`] trait, so the serving
+//! layers never know which substrate runs the math.
 //!
-//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects
-//! serialized protos from jax ≥ 0.5 (64-bit instruction ids); the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! Two implementations ship:
 //!
-//! The `xla` crate's handles are not `Send` (raw pointers), so the engine
-//! is either used thread-locally ([`Engine`]) or behind the actor wrapper
-//! ([`EngineActor`]) whose cloneable handle can cross threads; requests
-//! are serialized onto the engine thread, which matches PJRT-CPU's
-//! effectively-serial execution anyway.
+//! - [`XlaBackend`] (feature `xla`, default): loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) emitted by `python/compile/aot.py` and
+//!   executes them through PJRT. The `xla` crate's handles are not
+//!   `Send` (raw pointers), so the backend owns a **pool of N engine
+//!   threads** ([`pool::BackendPool`]), each with its own PJRT client and
+//!   compiled executables; requests land in one shared queue and idle
+//!   workers steal them, so independent sessions/frames execute
+//!   concurrently up to the pool size (`scmii serve --backend-threads N`).
+//! - [`native::NativeBackend`] (feature `native`): a pure-Rust
+//!   implementation of the SC-MII graph (voxelize → per-voxel head,
+//!   gather alignment → integration → BEV conv → detection heads) that
+//!   needs **no HLO artifacts and no native libraries**; weights come
+//!   from `.npy` files under `artifacts/native/` or a deterministic
+//!   synthetic fallback.
+//!
+//! Interchange for the XLA path is HLO **text** — the image's
+//! xla_extension 0.5.1 rejects serialized protos from jax ≥ 0.5 (64-bit
+//! instruction ids); the text parser reassigns ids (see
+//! /opt/xla-example/README.md).
 
-mod actor;
+#[cfg(feature = "native")]
+pub mod native;
+pub mod pool;
 
-pub use actor::{EngineActor, EngineHandle};
+pub use pool::{BackendPool, PoolExecutor};
 
 use crate::config::Paths;
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// A host-side tensor (f32, row-major).
 #[derive(Clone, Debug, PartialEq)]
@@ -54,12 +73,109 @@ impl HostTensor {
     }
 }
 
-/// Compiled-executable registry over one PJRT client.
+/// One execution substrate hosting named models. Implementations must be
+/// callable from any thread (`&self`, `Send + Sync`); serving code holds
+/// them as `Arc<dyn ExecBackend>`.
+pub trait ExecBackend: Send + Sync {
+    /// Short backend identifier for logs/metrics ("xla", "native", ...).
+    fn backend_name(&self) -> &str;
+
+    /// Execute a loaded model. Every model returns a tuple of tensors
+    /// (the lowered jax functions use `return_tuple=True`; the native
+    /// models mirror that convention).
+    fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>>;
+
+    /// Make `name` executable (compile the HLO artifact / build the
+    /// native model). Idempotent.
+    fn load(&self, name: &str) -> Result<()>;
+
+    /// Names currently resident (diagnostics / startup logging).
+    fn loaded_names(&self) -> Vec<String>;
+}
+
+/// Which [`ExecBackend`] implementation to construct (CLI `--backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Xla,
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "xla" => Ok(BackendKind::Xla),
+            "native" => Ok(BackendKind::Native),
+            other => anyhow::bail!("unknown backend {other:?} (expected xla|native)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        }
+    }
+
+    /// The backend this build prefers: XLA when compiled in, else native.
+    pub fn default_kind() -> BackendKind {
+        #[cfg(feature = "xla")]
+        return BackendKind::Xla;
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Native
+    }
+}
+
+/// Construct a backend of `kind`, preloading `preload` model names.
+/// `threads` sizes the XLA engine pool (the native backend executes on
+/// caller threads and is inherently concurrent).
+pub fn build_backend(
+    paths: &Paths,
+    meta: &crate::config::ModelMeta,
+    kind: BackendKind,
+    threads: usize,
+    preload: &[String],
+) -> Result<Arc<dyn ExecBackend>> {
+    match kind {
+        BackendKind::Xla => {
+            #[cfg(feature = "xla")]
+            {
+                let _ = meta;
+                Ok(Arc::new(XlaBackend::spawn(paths.clone(), preload, threads)?))
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                let _ = (paths, meta, threads, preload);
+                anyhow::bail!("backend \"xla\" unavailable: built without the `xla` feature")
+            }
+        }
+        BackendKind::Native => {
+            #[cfg(feature = "native")]
+            {
+                let _ = threads;
+                let backend = native::NativeBackend::from_paths(paths, meta)?;
+                for name in preload {
+                    backend.load(name)?;
+                }
+                Ok(Arc::new(backend))
+            }
+            #[cfg(not(feature = "native"))]
+            {
+                let _ = (paths, meta, threads, preload);
+                anyhow::bail!("backend \"native\" unavailable: built without the `native` feature")
+            }
+        }
+    }
+}
+
+/// Compiled-executable registry over one PJRT client. Not `Send` —
+/// use thread-locally or behind [`XlaBackend`].
+#[cfg(feature = "xla")]
 pub struct Engine {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     /// Create an engine on the CPU PJRT backend.
     pub fn cpu() -> Result<Engine> {
@@ -145,6 +261,78 @@ impl Engine {
     }
 }
 
+/// Pool worker owning one thread-local [`Engine`].
+#[cfg(feature = "xla")]
+struct EngineWorker {
+    engine: Engine,
+    paths: Paths,
+}
+
+#[cfg(feature = "xla")]
+impl PoolExecutor for EngineWorker {
+    fn exec(&mut self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.engine.exec(name, &inputs)
+    }
+
+    fn load(&mut self, name: &str) -> Result<()> {
+        self.engine.load(&self.paths, name)
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        self.engine.loaded_names()
+    }
+}
+
+/// PJRT/HLO backend: a pool of engine threads sharing one work queue.
+/// `load` broadcasts to every worker (each thread compiles its own copy
+/// — PJRT executables are not `Send`); `exec` is served by whichever
+/// worker is free first.
+#[cfg(feature = "xla")]
+pub struct XlaBackend {
+    pool: BackendPool,
+}
+
+#[cfg(feature = "xla")]
+impl XlaBackend {
+    /// Spawn `threads` engine threads (clamped to ≥ 1), each pre-loading
+    /// the `preload` artifacts.
+    pub fn spawn(paths: Paths, preload: &[String], threads: usize) -> Result<XlaBackend> {
+        let preload = preload.to_vec();
+        let pool = BackendPool::spawn("xla", threads, move |_worker| {
+            let mut engine = Engine::cpu()?;
+            for name in &preload {
+                engine.load(&paths, name)?;
+            }
+            Ok(EngineWorker { engine, paths: paths.clone() })
+        })?;
+        Ok(XlaBackend { pool })
+    }
+
+    /// Number of engine threads.
+    pub fn pool_size(&self) -> usize {
+        self.pool.size()
+    }
+}
+
+#[cfg(feature = "xla")]
+impl ExecBackend for XlaBackend {
+    fn backend_name(&self) -> &str {
+        "xla"
+    }
+
+    fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.pool.exec(name, inputs)
+    }
+
+    fn load(&self, name: &str) -> Result<()> {
+        self.pool.load(name)
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        self.pool.loaded_names()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,17 +346,42 @@ mod tests {
     }
 
     #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Xla.name(), "xla");
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+
+    #[cfg(feature = "xla")]
+    #[test]
     fn engine_starts_on_cpu() {
         let engine = Engine::cpu().unwrap();
         assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
         assert!(!engine.is_loaded("nope"));
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn missing_artifact_errors() {
         let mut engine = Engine::cpu().unwrap();
         let paths = Paths::new("/nonexistent", "/nonexistent");
         assert!(engine.load(&paths, "ghost").is_err());
         assert!(engine.exec("ghost", &[]).is_err());
+    }
+
+    #[cfg(feature = "xla")]
+    #[test]
+    fn xla_backend_pool_spawns_and_errors_on_missing_artifact() {
+        let paths = Paths::new("/nonexistent", "/nonexistent");
+        let backend = XlaBackend::spawn(paths.clone(), &[], 2).unwrap();
+        assert_eq!(backend.pool_size(), 2);
+        assert_eq!(backend.backend_name(), "xla");
+        assert!(backend.exec("ghost", vec![]).is_err());
+        assert!(backend.load("ghost").is_err());
+        assert!(backend.loaded_names().is_empty());
+        // Preload failure surfaces at spawn.
+        assert!(XlaBackend::spawn(paths, &["ghost".to_string()], 1).is_err());
     }
 }

@@ -1,0 +1,691 @@
+//! Pure-Rust execution backend (feature `native`): the SC-MII graph with
+//! no HLO artifacts, no PJRT, no native libraries.
+//!
+//! Model structure mirrors the lowered jax graphs at reduced capacity:
+//!
+//! - **head** — voxelize the `(max_points, 4)` cloud into `(D, H, W, c_in)`
+//!   statistics, then a per-voxel linear projection to `c_head` + ReLU
+//!   (the split-point intermediate output).
+//! - **tail** — spatial alignment of each device map via the static
+//!   [`AlignMap`] gather built from the calibration [`Pose`]s, then the
+//!   variant's integration ([`max_integrate`] /
+//!   [`conv_integrate`](crate::integrate::conv_integrate)), then the
+//!   [`BevStage`]: depth collapsed into channels, one strided 3×3 BEV
+//!   conv + ReLU, and 1×1 cls/box heads.
+//! - **full** (baselines) — head + [`BevStage`] on a single cloud.
+//!
+//! Weights load from `.npy` files under `artifacts/native/` as
+//! `<model>.<layer>.npy` (layers: `head_w`, `head_b`, `integrate_w`,
+//! `integrate_b`, `bev_w`, `bev_b`, `cls_w`, `cls_b`, `box_w`, `box_b`);
+//! any missing file falls back to a deterministic synthetic tensor seeded
+//! from the model/layer names, so the backend always runs — tests and
+//! benches exercise real code on synthetic weights.
+//!
+//! Execution happens on the caller's thread (`&self`), so the backend is
+//! inherently concurrent — no pool needed.
+
+use super::{ExecBackend, HostTensor};
+use crate::align::AlignMap;
+use crate::config::{IntegrationKind, ModelMeta, Paths};
+use crate::geom::Pose;
+use crate::integrate::{conv_integrate, max_integrate};
+use crate::utils::npy;
+use crate::utils::rng::Pcg64;
+use crate::voxel::{tensor_to_points, voxelize, FeatureMap};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Hidden channels of the BEV conv (the native backbone's capacity knob).
+pub const NATIVE_C_MID: usize = 16;
+
+/// `(D, H, W, C)` → `(H, W, D·C)` — depth becomes channels so the 3D map
+/// can feed a 2D BEV conv (mirror of the lowered reshape).
+pub fn bev_collapse(m: &FeatureMap) -> Vec<f32> {
+    let [d, h, w, c] = m.shape();
+    let mut out = vec![0.0f32; h * w * d * c];
+    for iz in 0..d {
+        for iy in 0..h {
+            for ix in 0..w {
+                let src = m.idx(iz, iy, ix, 0);
+                let dst = (iy * w + ix) * (d * c) + iz * c;
+                out[dst..dst + c].copy_from_slice(&m.data[src..src + c]);
+            }
+        }
+    }
+    out
+}
+
+/// 2D convolution over an `(H, W, C_in)` HWC input with HWIO weights
+/// `(k, k, C_in, C_out)`, zero ("same") padding, stride `s`, optional
+/// ReLU. Output `(H/s, W/s, C_out)`. Skips zero activations — BEV maps
+/// from infrastructure LiDAR are overwhelmingly sparse.
+pub fn conv2d(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    c_in: usize,
+    weights: &[f32],
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let c_out = bias.len();
+    assert_eq!(input.len(), h * w * c_in, "conv2d input shape mismatch");
+    assert_eq!(weights.len(), k * k * c_in * c_out, "conv2d weight shape mismatch");
+    assert!(k % 2 == 1, "odd kernels only");
+    let (ho, wo) = (h / stride, w / stride);
+    let half = (k / 2) as i64;
+    let mut out = vec![0.0f32; ho * wo * c_out];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let obase = (oy * wo + ox) * c_out;
+            out[obase..obase + c_out].copy_from_slice(bias);
+            for ky in 0..k {
+                let iy = (oy * stride) as i64 + ky as i64 - half;
+                if iy < 0 || iy >= h as i64 {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride) as i64 + kx as i64 - half;
+                    if ix < 0 || ix >= w as i64 {
+                        continue;
+                    }
+                    let ibase = (iy as usize * w + ix as usize) * c_in;
+                    let wbase = (ky * k + kx) * c_in * c_out;
+                    for ci in 0..c_in {
+                        let v = input[ibase + ci];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let wrow = wbase + ci * c_out;
+                        for oc in 0..c_out {
+                            out[obase + oc] += v * weights[wrow + oc];
+                        }
+                    }
+                }
+            }
+            if relu {
+                for oc in 0..c_out {
+                    if out[obase + oc] < 0.0 {
+                        out[obase + oc] = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-cell dense layer: `(cells, c_in) × (c_in, c_out) + bias` —
+/// equivalent to a 1×1 conv. Skips zero activations.
+pub fn dense_per_cell(
+    input: &[f32],
+    cells: usize,
+    c_in: usize,
+    w: &[f32],
+    b: &[f32],
+) -> Vec<f32> {
+    let c_out = b.len();
+    assert_eq!(input.len(), cells * c_in, "dense input shape mismatch");
+    assert_eq!(w.len(), c_in * c_out, "dense weight shape mismatch");
+    let mut out = vec![0.0f32; cells * c_out];
+    for cell in 0..cells {
+        let ibase = cell * c_in;
+        let obase = cell * c_out;
+        out[obase..obase + c_out].copy_from_slice(b);
+        for ci in 0..c_in {
+            let v = input[ibase + ci];
+            if v == 0.0 {
+                continue;
+            }
+            let wrow = ci * c_out;
+            for oc in 0..c_out {
+                out[obase + oc] += v * w[wrow + oc];
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic synthetic weights, seeded from the model/layer names —
+/// stable across runs and platforms, so parity tests can rebuild the
+/// exact reference graph.
+pub fn synthetic_weights(model: &str, layer: &str, len: usize) -> Vec<f32> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model.bytes().chain([b'/']).chain(layer.bytes()) {
+        h = (h ^ b as u64).wrapping_mul(0x1_0000_0000_01b3);
+    }
+    let mut rng = Pcg64::new(h);
+    (0..len).map(|_| (rng.uniform_f32() - 0.5) * 0.2).collect()
+}
+
+/// Shared BEV trunk: `(D, H, W, C)` map → depth-collapsed BEV → strided
+/// 3×3 conv + ReLU → 1×1 cls/box heads at the head resolution.
+#[derive(Clone, Debug)]
+pub struct BevStage {
+    pub c_in: usize,
+    pub c_mid: usize,
+    pub stride: usize,
+    pub n_anchors: usize,
+    /// 3×3 conv, HWIO `(3, 3, c_in, c_mid)`.
+    pub conv_w: Vec<f32>,
+    pub conv_b: Vec<f32>,
+    /// 1×1 heads, `(c_mid, A)` / `(c_mid, A·8)`.
+    pub cls_w: Vec<f32>,
+    pub cls_b: Vec<f32>,
+    pub box_w: Vec<f32>,
+    pub box_b: Vec<f32>,
+}
+
+impl BevStage {
+    /// Returns `(cls (hb, wb, A), boxes (hb, wb, A, 8))`.
+    pub fn run(&self, integrated: &FeatureMap) -> Result<(HostTensor, HostTensor)> {
+        let [d, h, w, c] = integrated.shape();
+        anyhow::ensure!(
+            d * c == self.c_in,
+            "BEV stage expects {} collapsed channels, map has {}",
+            self.c_in,
+            d * c
+        );
+        anyhow::ensure!(
+            h % self.stride == 0 && w % self.stride == 0,
+            "grid ({h}, {w}) not divisible by BEV stride {}",
+            self.stride
+        );
+        let bev = bev_collapse(integrated);
+        let mid = conv2d(&bev, h, w, self.c_in, &self.conv_w, &self.conv_b, 3, self.stride, true);
+        let (hb, wb) = (h / self.stride, w / self.stride);
+        let cls = dense_per_cell(&mid, hb * wb, self.c_mid, &self.cls_w, &self.cls_b);
+        let boxes = dense_per_cell(&mid, hb * wb, self.c_mid, &self.box_w, &self.box_b);
+        Ok((
+            HostTensor::new(vec![hb, wb, self.n_anchors], cls)?,
+            HostTensor::new(vec![hb, wb, self.n_anchors, 8], boxes)?,
+        ))
+    }
+}
+
+/// Split-point head: voxel statistics → per-voxel linear → ReLU.
+#[derive(Clone, Debug)]
+pub struct NativeHead {
+    /// `(c_in, c_head)`.
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl NativeHead {
+    pub fn run(&self, meta: &ModelMeta, input: &HostTensor) -> Result<FeatureMap> {
+        let g = &meta.grid;
+        anyhow::ensure!(
+            input.shape == vec![g.max_points, 4],
+            "head expects ({}, 4) points, got {:?}",
+            g.max_points,
+            input.shape
+        );
+        let points = tensor_to_points(&input.data);
+        let vox = voxelize(&points, g);
+        let [d, h, w, c_in] = vox.shape();
+        let mut out = dense_per_cell(&vox.data, d * h * w, c_in, &self.w, &self.b);
+        for v in &mut out {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        FeatureMap::from_vec(d, h, w, self.b.len(), out)
+    }
+}
+
+/// Edge-server tail: align → integrate → BEV trunk + heads.
+#[derive(Clone, Debug)]
+pub struct NativeTail {
+    pub kind: IntegrationKind,
+    /// One gather map per device (device 0 is the identity reference).
+    pub aligns: Vec<AlignMap>,
+    /// Conv-integration weights `(k, k, k, devices·c_head, c_head)`
+    /// (DHWIO, matching [`conv_integrate`]); empty for `Max`.
+    pub integrate_w: Vec<f32>,
+    pub integrate_b: Vec<f32>,
+    pub k: usize,
+    pub bev: BevStage,
+}
+
+impl NativeTail {
+    /// The integration step alone (parity tests cross-check this against
+    /// the reference kernels directly).
+    pub fn integrate(&self, aligned: &[FeatureMap]) -> FeatureMap {
+        match self.kind {
+            IntegrationKind::Max => max_integrate(aligned),
+            IntegrationKind::ConvK1 | IntegrationKind::ConvK3 => {
+                conv_integrate(aligned, &self.integrate_w, &self.integrate_b, self.k)
+            }
+        }
+    }
+
+    pub fn run(&self, meta: &ModelMeta, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == meta.num_devices,
+            "tail expects {} device maps, got {}",
+            meta.num_devices,
+            inputs.len()
+        );
+        let g = &meta.grid;
+        let expect = vec![g.dims[2], g.dims[1], g.dims[0], g.c_head];
+        let mut aligned = Vec::with_capacity(inputs.len());
+        for (dev, t) in inputs.into_iter().enumerate() {
+            anyhow::ensure!(
+                t.shape == expect,
+                "tail input {dev} shape {:?}, expected {:?}",
+                t.shape,
+                expect
+            );
+            let map = FeatureMap::from_vec(expect[0], expect[1], expect[2], expect[3], t.data)?;
+            aligned.push(self.aligns[dev].apply(&map));
+        }
+        let integrated = self.integrate(&aligned);
+        let (cls, boxes) = self.bev.run(&integrated)?;
+        Ok(vec![cls, boxes])
+    }
+}
+
+/// Baseline full model: head + BEV trunk over a single cloud.
+#[derive(Clone, Debug)]
+pub struct NativeFull {
+    pub head: NativeHead,
+    pub bev: BevStage,
+}
+
+impl NativeFull {
+    pub fn run(&self, meta: &ModelMeta, input: &HostTensor) -> Result<Vec<HostTensor>> {
+        let feat = self.head.run(meta, input)?;
+        let (cls, boxes) = self.bev.run(&feat)?;
+        Ok(vec![cls, boxes])
+    }
+}
+
+/// One resident native model.
+#[derive(Clone, Debug)]
+pub enum NativeModel {
+    Head(NativeHead),
+    Tail(NativeTail),
+    Full(NativeFull),
+}
+
+/// The pure-Rust [`ExecBackend`]. Model names resolve against
+/// `model_meta.json` exactly like HLO artifact names do, so the serving
+/// layers are oblivious to the substrate swap.
+pub struct NativeBackend {
+    meta: ModelMeta,
+    /// Device → common-frame calibration poses (index = device id).
+    poses: Vec<Pose>,
+    weights_dir: Option<PathBuf>,
+    models: Mutex<HashMap<String, Arc<NativeModel>>>,
+}
+
+impl NativeBackend {
+    pub fn new(
+        meta: ModelMeta,
+        poses: Vec<Pose>,
+        weights_dir: Option<PathBuf>,
+    ) -> Result<NativeBackend> {
+        anyhow::ensure!(
+            poses.len() >= meta.num_devices,
+            "need one calibration pose per device ({} < {})",
+            poses.len(),
+            meta.num_devices
+        );
+        Ok(NativeBackend { meta, poses, weights_dir, models: Mutex::new(HashMap::new()) })
+    }
+
+    /// Build from the artifact directory: calibration from `calib.json`
+    /// when present, weights from `artifacts/native/`. A *missing*
+    /// calib.json falls back to identity poses (single-rig demos, tests
+    /// with zero artifacts); a present-but-corrupt one is an error —
+    /// silently serving unaligned integration would look like a model
+    /// problem, not a config problem.
+    pub fn from_paths(paths: &Paths, meta: &ModelMeta) -> Result<NativeBackend> {
+        let calib_path = paths.calib();
+        let poses = if calib_path.exists() {
+            crate::config::load_calib(paths)
+                .with_context(|| format!("parse {}", calib_path.display()))?
+        } else {
+            log::warn!(
+                "native backend: {} missing; aligning with identity poses",
+                calib_path.display()
+            );
+            vec![Pose::IDENTITY; meta.num_devices]
+        };
+        NativeBackend::new(meta.clone(), poses, Some(paths.artifacts.join("native")))
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Shared handle to a resident model (parity tests rebuild the
+    /// reference graph from the exact weights the backend runs).
+    pub fn model(&self, name: &str) -> Option<Arc<NativeModel>> {
+        self.models.lock().unwrap().get(name).cloned()
+    }
+
+    /// One weight tensor: `.npy` override when present, deterministic
+    /// synthetic fallback otherwise.
+    fn layer(&self, model: &str, layer: &str, len: usize) -> Result<Vec<f32>> {
+        if let Some(dir) = &self.weights_dir {
+            let path = dir.join(format!("{model}.{layer}.npy"));
+            if path.exists() {
+                let arr = npy::read(&path)?;
+                let data = arr
+                    .as_f32()
+                    .with_context(|| format!("native weight {}", path.display()))?;
+                anyhow::ensure!(
+                    data.len() == len,
+                    "{} has {} values, expected {len}",
+                    path.display(),
+                    data.len()
+                );
+                return Ok(data);
+            }
+        }
+        Ok(synthetic_weights(model, layer, len))
+    }
+
+    fn head_weights(&self, name: &str) -> Result<NativeHead> {
+        let g = &self.meta.grid;
+        Ok(NativeHead {
+            w: self.layer(name, "head_w", g.c_in * g.c_head)?,
+            b: self.layer(name, "head_b", g.c_head)?,
+        })
+    }
+
+    fn bev_weights(&self, name: &str) -> Result<BevStage> {
+        let g = &self.meta.grid;
+        let [hb, wb] = self.meta.bev_dims;
+        anyhow::ensure!(
+            hb > 0 && wb > 0 && g.dims[1] % hb == 0 && g.dims[0] % wb == 0,
+            "bev_dims {:?} must evenly divide grid {:?}",
+            self.meta.bev_dims,
+            g.dims
+        );
+        anyhow::ensure!(
+            g.dims[1] / hb == g.dims[0] / wb,
+            "anisotropic BEV strides unsupported (grid {:?}, bev {:?})",
+            g.dims,
+            self.meta.bev_dims
+        );
+        let stride = g.dims[1] / hb;
+        let c_in = g.dims[2] * g.c_head;
+        let c_mid = NATIVE_C_MID;
+        let a = self.meta.anchors.len();
+        Ok(BevStage {
+            c_in,
+            c_mid,
+            stride,
+            n_anchors: a,
+            conv_w: self.layer(name, "bev_w", 3 * 3 * c_in * c_mid)?,
+            conv_b: self.layer(name, "bev_b", c_mid)?,
+            cls_w: self.layer(name, "cls_w", c_mid * a)?,
+            cls_b: self.layer(name, "cls_b", a)?,
+            box_w: self.layer(name, "box_w", c_mid * a * 8)?,
+            box_b: self.layer(name, "box_b", a * 8)?,
+        })
+    }
+
+    fn build_model(&self, name: &str) -> Result<NativeModel> {
+        let meta = &self.meta;
+        for v in &meta.variants {
+            if v.heads.iter().any(|h| h == name) {
+                return Ok(NativeModel::Head(self.head_weights(name)?));
+            }
+            if v.tail == name {
+                let aligns: Vec<AlignMap> = (0..meta.num_devices)
+                    .map(|d| AlignMap::build(&meta.grid, &self.poses[d], 1))
+                    .collect();
+                let (k, integrate_w, integrate_b) = match v.integration {
+                    IntegrationKind::Max => (1, Vec::new(), Vec::new()),
+                    IntegrationKind::ConvK1 => self.integrate_weights(name, 1)?,
+                    IntegrationKind::ConvK3 => self.integrate_weights(name, 3)?,
+                };
+                return Ok(NativeModel::Tail(NativeTail {
+                    kind: v.integration,
+                    aligns,
+                    integrate_w,
+                    integrate_b,
+                    k,
+                    bev: self.bev_weights(name)?,
+                }));
+            }
+        }
+        if meta.single_full.iter().any(|n| n == name) || meta.input_integration_full == name {
+            return Ok(NativeModel::Full(NativeFull {
+                head: self.head_weights(name)?,
+                bev: self.bev_weights(name)?,
+            }));
+        }
+        bail!("model {name:?} is not described by model_meta (native backend)")
+    }
+
+    fn integrate_weights(&self, name: &str, k: usize) -> Result<(usize, Vec<f32>, Vec<f32>)> {
+        let g = &self.meta.grid;
+        let c_in = self.meta.num_devices * g.c_head;
+        let c_out = g.c_head;
+        Ok((
+            k,
+            self.layer(name, "integrate_w", k * k * k * c_in * c_out)?,
+            self.layer(name, "integrate_b", c_out)?,
+        ))
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn backend_name(&self) -> &str {
+        "native"
+    }
+
+    fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let model = self.models.lock().unwrap().get(name).cloned();
+        let Some(model) = model else {
+            bail!("model {name:?} not loaded in native backend (call load first)");
+        };
+        match &*model {
+            NativeModel::Head(head) => {
+                anyhow::ensure!(inputs.len() == 1, "head takes one input");
+                let feat = head.run(&self.meta, &inputs[0])?;
+                let [d, h, w, c] = feat.shape();
+                Ok(vec![HostTensor::new(vec![d, h, w, c], feat.data)?])
+            }
+            NativeModel::Tail(tail) => tail.run(&self.meta, inputs),
+            NativeModel::Full(full) => {
+                anyhow::ensure!(inputs.len() == 1, "full model takes one input");
+                full.run(&self.meta, &inputs[0])
+            }
+        }
+    }
+
+    fn load(&self, name: &str) -> Result<()> {
+        if self.models.lock().unwrap().contains_key(name) {
+            return Ok(());
+        }
+        // Built outside the lock: alignment-map construction is the
+        // expensive part and must not serialize concurrent execs.
+        let model = self.build_model(name)?;
+        self.models
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(model));
+        Ok(())
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        self.models.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quarter-resolution meta so conv-k3 integration stays fast in
+    /// debug test runs; structure matches production.
+    fn small_meta() -> ModelMeta {
+        let mut meta = ModelMeta::test_default();
+        meta.grid.dims = [16, 16, 4];
+        meta.grid.max_points = 512;
+        meta.bev_dims = [8, 8];
+        meta
+    }
+
+    fn backend() -> NativeBackend {
+        let poses = vec![
+            Pose::IDENTITY,
+            Pose::from_xyz_rpy(0.8, 0.0, 0.0, 0.0, 0.0, 0.0),
+        ];
+        NativeBackend::new(small_meta(), poses, None).unwrap()
+    }
+
+    fn feat_shape(meta: &ModelMeta) -> Vec<usize> {
+        let g = &meta.grid;
+        vec![g.dims[2], g.dims[1], g.dims[0], g.c_head]
+    }
+
+    #[test]
+    fn tail_runs_all_variants_with_correct_shapes() {
+        let b = backend();
+        let meta = b.meta().clone();
+        let shape = feat_shape(&meta);
+        for kind in IntegrationKind::all() {
+            let tail = meta.variant(kind).unwrap().tail.clone();
+            b.load(&tail).unwrap();
+            let inputs = vec![HostTensor::zeros(&shape), HostTensor::zeros(&shape)];
+            let out = b.exec(&tail, inputs).unwrap();
+            assert_eq!(out.len(), 2, "{kind:?}");
+            let [hb, wb] = meta.bev_dims;
+            let a = meta.anchors.len();
+            assert_eq!(out[0].shape, vec![hb, wb, a]);
+            assert_eq!(out[1].shape, vec![hb, wb, a, 8]);
+            assert!(out[0].data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn head_produces_meta_shaped_features() {
+        let b = backend();
+        let meta = b.meta().clone();
+        let head = meta.variant(IntegrationKind::Max).unwrap().heads[0].clone();
+        b.load(&head).unwrap();
+        let g = &meta.grid;
+        let input = HostTensor::zeros(&[g.max_points, 4]);
+        let out = b.exec(&head, vec![input]).unwrap();
+        assert_eq!(out[0].shape, feat_shape(&meta));
+        // ReLU output, and a zero cloud voxelizes to zeros → uniform map.
+        assert!(out[0].data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn full_baseline_runs() {
+        let b = backend();
+        let meta = b.meta().clone();
+        b.load("single_dev0").unwrap();
+        b.load("input_integration").unwrap();
+        let g = &meta.grid;
+        let out = b
+            .exec("single_dev0", vec![HostTensor::zeros(&[g.max_points, 4])])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let b = backend();
+        assert!(b.load("no_such_model").is_err());
+        assert!(b.exec("tail_max", vec![]).is_err(), "exec before load must error");
+        assert!(b.loaded_names().is_empty());
+    }
+
+    #[test]
+    fn exec_is_deterministic() {
+        let b = backend();
+        let meta = b.meta().clone();
+        let tail = meta.variant(IntegrationKind::ConvK1).unwrap().tail.clone();
+        b.load(&tail).unwrap();
+        let shape = feat_shape(&meta);
+        let mut t = HostTensor::zeros(&shape);
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = ((i * 13) % 31) as f32 * 0.05;
+        }
+        let a = b.exec(&tail, vec![t.clone(), t.clone()]).unwrap();
+        let c = b.exec(&tail, vec![t.clone(), t]).unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn npy_weight_override_is_used() {
+        let dir = std::env::temp_dir().join("scmii_native_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let meta = ModelMeta::test_default();
+        let g = &meta.grid;
+        // Zero head weights → head output must be relu(bias) = 0 everywhere.
+        let zeros = vec![0.0f32; g.c_in * g.c_head];
+        npy::write(
+            &dir.join("head_max_dev0.head_w.npy"),
+            &npy::NpyArray::from_f32(&[g.c_in, g.c_head], &zeros),
+        )
+        .unwrap();
+        let zero_b = vec![0.0f32; g.c_head];
+        npy::write(
+            &dir.join("head_max_dev0.head_b.npy"),
+            &npy::NpyArray::from_f32(&[g.c_head], &zero_b),
+        )
+        .unwrap();
+        let b = NativeBackend::new(
+            meta.clone(),
+            vec![Pose::IDENTITY; 2],
+            Some(dir),
+        )
+        .unwrap();
+        b.load("head_max_dev0").unwrap();
+        // A cloud with one in-range point: synthetic weights would give a
+        // non-zero voxel; the zero .npy weights must win.
+        let mut cloud = vec![0.0f32; g.max_points * 4];
+        cloud[0] = 1.0;
+        cloud[1] = 1.0;
+        cloud[2] = -3.0;
+        cloud[3] = 0.5;
+        let input = HostTensor::new(vec![g.max_points, 4], cloud).unwrap();
+        let out = b.exec("head_max_dev0", vec![input]).unwrap();
+        assert!(out[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn synthetic_weights_are_stable_and_name_dependent() {
+        let a = synthetic_weights("tail_max", "bev_w", 16);
+        let b = synthetic_weights("tail_max", "bev_w", 16);
+        let c = synthetic_weights("tail_conv_k1", "bev_w", 16);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|v| v.abs() <= 0.1));
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 kernel, identity weight matrix: output == input.
+        let input: Vec<f32> = (0..4 * 4 * 2).map(|i| i as f32).collect();
+        let mut w = vec![0.0f32; 2 * 2];
+        w[0] = 1.0;
+        w[3] = 1.0;
+        let out = conv2d(&input, 4, 4, 2, &w, &[0.0, 0.0], 1, 1, false);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn conv2d_stride_downsamples() {
+        let input = vec![1.0f32; 4 * 4];
+        let w = vec![1.0f32; 9]; // 3x3, c_in=1, c_out=1
+        let out = conv2d(&input, 4, 4, 1, &w, &[0.0], 3, 2, false);
+        assert_eq!(out.len(), 2 * 2);
+        // Top-left output sees a 2x2 valid patch (corner), value 4.
+        assert_eq!(out[0], 4.0);
+    }
+}

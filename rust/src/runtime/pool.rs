@@ -1,0 +1,472 @@
+//! Fixed-size executor pool behind the [`ExecBackend`] trait.
+//!
+//! Each worker thread owns one thread-local [`PoolExecutor`] (PJRT
+//! handles are not `Send`, so executors are *created inside* their
+//! worker thread by the spawn factory and never cross it). Exec requests
+//! land in one shared queue; whichever worker goes idle first steals the
+//! next job, so independent sessions/frames run concurrently up to the
+//! pool size. `load` is a broadcast — every worker compiles/builds its
+//! own copy of the model, since executables cannot be shared across
+//! threads.
+//!
+//! The pool is backend-agnostic: [`XlaBackend`](super::XlaBackend) wraps
+//! it around PJRT engines, and tests wrap it around slow stub executors
+//! to prove two sessions' tails overlap in time on a 2-thread pool.
+
+use super::{ExecBackend, HostTensor};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// A thread-local model executor living inside one pool worker.
+pub trait PoolExecutor {
+    fn exec(&mut self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>>;
+    fn load(&mut self, name: &str) -> Result<()>;
+    fn loaded_names(&self) -> Vec<String>;
+}
+
+enum Job {
+    Exec { name: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
+    Load { name: String, reply: mpsc::Sender<Result<()>> },
+    Loaded { reply: mpsc::Sender<Vec<String>> },
+}
+
+struct State {
+    /// Shared exec jobs — any idle worker takes the next one.
+    queue: VecDeque<Job>,
+    /// Per-worker jobs (load broadcasts, introspection).
+    control: Vec<VecDeque<Job>>,
+    shutdown: bool,
+}
+
+/// N worker threads + one shared work queue. Dropping shuts the pool
+/// down (workers finish their current job, then exit).
+pub struct BackendPool {
+    label: String,
+    shared: Arc<(Mutex<State>, Condvar)>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl BackendPool {
+    /// Spawn `threads` workers (clamped to ≥ 1). `factory(i)` runs *on*
+    /// worker `i`'s thread to build its executor; any factory error
+    /// aborts the spawn and tears the pool down.
+    pub fn spawn<E, F>(label: &str, threads: usize, factory: F) -> Result<BackendPool>
+    where
+        E: PoolExecutor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        let threads = threads.max(1);
+        let shared = Arc::new((
+            Mutex::new(State {
+                queue: VecDeque::new(),
+                control: (0..threads).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            Condvar::new(),
+        ));
+        let factory = Arc::new(factory);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let worker_shared = Arc::clone(&shared);
+            let worker_factory = Arc::clone(&factory);
+            let worker_ready = ready_tx.clone();
+            let spawned = thread::Builder::new()
+                .name(format!("{label}-worker-{i}"))
+                .spawn(move || {
+                    let mut executor = match worker_factory(i) {
+                        Ok(e) => {
+                            let _ = worker_ready.send(Ok(()));
+                            drop(worker_ready);
+                            e
+                        }
+                        Err(e) => {
+                            let _ = worker_ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    worker_loop(i, &worker_shared, &mut executor);
+                });
+            match spawned {
+                Ok(handle) => workers.push(handle),
+                Err(e) => {
+                    // Tear down the workers already started before
+                    // bailing — constructing the pool makes Drop set
+                    // shutdown and join them instead of leaking parked
+                    // threads (and their executors).
+                    drop(BackendPool { label: label.to_string(), shared, workers });
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("spawn {label} pool worker {i}")));
+                }
+            }
+        }
+        drop(ready_tx);
+
+        let mut startup_err: Option<anyhow::Error> = None;
+        let mut got = 0;
+        while got < threads {
+            match ready_rx.recv() {
+                Ok(Ok(())) => got += 1,
+                Ok(Err(e)) => {
+                    got += 1;
+                    if startup_err.is_none() {
+                        startup_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if startup_err.is_none() {
+                        startup_err =
+                            Some(anyhow::anyhow!("{label} pool worker died during startup"));
+                    }
+                    break;
+                }
+            }
+        }
+        let err_context = format!("start {label} backend pool ({threads} threads)");
+        let pool = BackendPool { label: label.to_string(), shared, workers };
+        match startup_err {
+            // Dropping `pool` joins the workers that did start.
+            Some(e) => Err(e.context(err_context)),
+            None => Ok(pool),
+        }
+    }
+
+    /// Number of worker threads (= max concurrent execs).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn push(&self, job: Job, worker: Option<usize>) {
+        let (lock, cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        match worker {
+            Some(i) => st.control[i].push_back(job),
+            None => st.queue.push_back(job),
+        }
+        // notify_all: a targeted control job must reach its specific
+        // worker, which notify_one could miss.
+        cv.notify_all();
+    }
+
+    /// Execute on whichever worker frees up first.
+    pub fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.push(Job::Exec { name: name.to_string(), inputs, reply }, None);
+        rx.recv()
+            .with_context(|| format!("{} pool worker dropped reply", self.label))?
+    }
+
+    /// Load `name` on **every** worker; first error wins (all workers
+    /// are still waited on, so no stale load is left in flight).
+    pub fn load(&self, name: &str) -> Result<()> {
+        let mut replies = Vec::with_capacity(self.size());
+        for i in 0..self.size() {
+            let (reply, rx) = mpsc::channel();
+            self.push(Job::Load { name: name.to_string(), reply }, Some(i));
+            replies.push(rx);
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for (i, rx) in replies.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("load {name:?} on worker {i}")));
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!(
+                            "{} pool worker {i} gone during load of {name:?}",
+                            self.label
+                        ));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Resident model names (queried from worker 0 — `load` broadcasts,
+    /// so all workers agree).
+    pub fn loaded_names(&self) -> Vec<String> {
+        let (reply, rx) = mpsc::channel();
+        self.push(Job::Loaded { reply }, Some(0));
+        rx.recv().unwrap_or_default()
+    }
+}
+
+impl ExecBackend for BackendPool {
+    fn backend_name(&self) -> &str {
+        &self.label
+    }
+
+    fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        BackendPool::exec(self, name, inputs)
+    }
+
+    fn load(&self, name: &str) -> Result<()> {
+        BackendPool::load(self, name)
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        BackendPool::loaded_names(self)
+    }
+}
+
+impl Drop for BackendPool {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.shared;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<E: PoolExecutor>(idx: usize, shared: &(Mutex<State>, Condvar), executor: &mut E) {
+    let (lock, cv) = shared;
+    loop {
+        let job = {
+            let mut st = lock.lock().unwrap();
+            loop {
+                if let Some(j) = st.control[idx].pop_front() {
+                    break j;
+                }
+                if let Some(j) = st.queue.pop_front() {
+                    break j;
+                }
+                // Drain queued work before honoring shutdown so replies
+                // already promised are still delivered.
+                if st.shutdown {
+                    return;
+                }
+                st = cv.wait(st).unwrap();
+            }
+        };
+        // A panicking executor must not kill the worker: a dead worker's
+        // control queue would absorb later load broadcasts and hang
+        // their callers forever. Catch the unwind, reply with an error,
+        // and keep serving.
+        match job {
+            Job::Exec { name, inputs, reply } => {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    executor.exec(&name, inputs)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("pool worker {idx} panicked executing {name:?}"))
+                });
+                let _ = reply.send(result);
+            }
+            Job::Load { name, reply } => {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    executor.load(&name)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("pool worker {idx} panicked loading {name:?}"))
+                });
+                let _ = reply.send(result);
+            }
+            Job::Loaded { reply } => {
+                let names = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    executor.loaded_names()
+                }))
+                .unwrap_or_default();
+                let _ = reply.send(names);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    /// Stub executor: echoes one tensor, tracks which worker loaded what.
+    struct Echo {
+        worker: usize,
+        loaded: BTreeSet<String>,
+        load_log: Arc<Mutex<Vec<usize>>>,
+        delay: Duration,
+    }
+
+    impl PoolExecutor for Echo {
+        fn exec(&mut self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            if !self.loaded.contains(name) {
+                anyhow::bail!("model {name:?} not loaded");
+            }
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Ok(inputs)
+        }
+
+        fn load(&mut self, name: &str) -> Result<()> {
+            if name == "poison" {
+                anyhow::bail!("cannot load poison");
+            }
+            self.loaded.insert(name.to_string());
+            self.load_log.lock().unwrap().push(self.worker);
+            Ok(())
+        }
+
+        fn loaded_names(&self) -> Vec<String> {
+            self.loaded.iter().cloned().collect()
+        }
+    }
+
+    fn echo_pool(threads: usize, delay: Duration) -> (BackendPool, Arc<Mutex<Vec<usize>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = Arc::clone(&log);
+        let pool = BackendPool::spawn("stub", threads, move |worker| {
+            Ok(Echo {
+                worker,
+                loaded: BTreeSet::new(),
+                load_log: Arc::clone(&log2),
+                delay,
+            })
+        })
+        .unwrap();
+        (pool, log)
+    }
+
+    #[test]
+    fn exec_round_trips_through_a_worker() {
+        let (pool, _) = echo_pool(2, Duration::ZERO);
+        pool.load("m").unwrap();
+        let t = HostTensor::zeros(&[2, 2]);
+        let out = pool.exec("m", vec![t.clone()]).unwrap();
+        assert_eq!(out, vec![t]);
+        assert!(pool.exec("ghost", vec![]).is_err());
+    }
+
+    #[test]
+    fn load_broadcasts_to_every_worker() {
+        let (pool, log) = echo_pool(3, Duration::ZERO);
+        pool.load("m").unwrap();
+        let workers: BTreeSet<usize> = log.lock().unwrap().iter().copied().collect();
+        assert_eq!(workers, (0..3).collect::<BTreeSet<_>>());
+        assert_eq!(pool.loaded_names(), vec!["m".to_string()]);
+        assert!(pool.load("poison").is_err());
+    }
+
+    #[test]
+    fn spawn_factory_error_fails_cleanly() {
+        let r = BackendPool::spawn("bad", 2, |worker| {
+            if worker == 1 {
+                anyhow::bail!("worker 1 refuses to start")
+            }
+            Ok(Echo {
+                worker,
+                loaded: BTreeSet::new(),
+                load_log: Arc::new(Mutex::new(Vec::new())),
+                delay: Duration::ZERO,
+            })
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn two_workers_execute_concurrently() {
+        let (pool, _) = echo_pool(2, Duration::from_millis(200));
+        pool.load("m").unwrap();
+        let pool = Arc::new(pool);
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || pool.exec("m", vec![HostTensor::zeros(&[1])]))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        let wall = t0.elapsed();
+        // Two 200 ms jobs on two workers: serial would be ≥ 400 ms; the
+        // wide margin absorbs CI scheduler hiccups.
+        assert!(wall < Duration::from_millis(360), "jobs serialized: {wall:?}");
+    }
+
+    #[test]
+    fn single_worker_serializes() {
+        let (pool, _) = echo_pool(1, Duration::from_millis(40));
+        pool.load("m").unwrap();
+        let pool = Arc::new(pool);
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || pool.exec("m", vec![HostTensor::zeros(&[1])]))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(80), "one worker must serialize");
+    }
+
+    #[test]
+    fn panicking_executor_replies_error_and_worker_survives() {
+        struct Panicky;
+        impl PoolExecutor for Panicky {
+            fn exec(&mut self, name: &str, i: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+                if name == "boom" {
+                    panic!("executor blew up");
+                }
+                Ok(i)
+            }
+            fn load(&mut self, _n: &str) -> Result<()> {
+                Ok(())
+            }
+            fn loaded_names(&self) -> Vec<String> {
+                Vec::new()
+            }
+        }
+        let pool = BackendPool::spawn("panicky", 1, |_| Ok(Panicky)).unwrap();
+        let err = pool.exec("boom", vec![]).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+        // The worker must still be alive: subsequent jobs are served, not
+        // queued forever (the old actor's dead-thread hang).
+        let t = HostTensor::zeros(&[1]);
+        assert_eq!(pool.exec("fine", vec![t.clone()]).unwrap(), vec![t]);
+        pool.load("m").unwrap();
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct Counting;
+        impl Drop for Counting {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        impl PoolExecutor for Counting {
+            fn exec(&mut self, _n: &str, i: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+                Ok(i)
+            }
+            fn load(&mut self, _n: &str) -> Result<()> {
+                Ok(())
+            }
+            fn loaded_names(&self) -> Vec<String> {
+                Vec::new()
+            }
+        }
+        let pool = BackendPool::spawn("counting", 2, |_| Ok(Counting)).unwrap();
+        assert_eq!(pool.size(), 2);
+        drop(pool);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 2, "workers must be joined on drop");
+    }
+}

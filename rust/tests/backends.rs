@@ -1,0 +1,334 @@
+//! Execution-backend tests that need **no artifacts, no PJRT, no
+//! weights**: native-vs-reference numerical parity on synthetic weights,
+//! and proof that a 2-thread backend pool executes two sessions' tails
+//! concurrently (timestamp-overlap assertion with a slow stub executor).
+
+use scmii::config::ModelMeta;
+use scmii::coordinator::scheduler::LossPolicy;
+use scmii::coordinator::session::{DetectorSession, FeaturePayload, SessionConfig};
+use scmii::model::DecodeParams;
+use scmii::runtime::{BackendPool, ExecBackend, HostTensor, PoolExecutor};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Quarter-resolution meta: same structure as production, fast in debug.
+fn small_meta() -> ModelMeta {
+    let mut meta = ModelMeta::test_default();
+    meta.grid.dims = [16, 16, 4];
+    meta.grid.max_points = 512;
+    meta.bev_dims = [8, 8];
+    meta
+}
+
+fn feat_shape(meta: &ModelMeta) -> Vec<usize> {
+    let g = &meta.grid;
+    vec![g.dims[2], g.dims[1], g.dims[0], g.c_head]
+}
+
+// ---------------------------------------------------------------------
+// Native backend parity
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "native")]
+mod native_parity {
+    use super::*;
+    use scmii::align::AlignMap;
+    use scmii::config::IntegrationKind;
+    use scmii::geom::Pose;
+    use scmii::integrate::{conv_integrate, max_integrate};
+    use scmii::model::postprocess;
+    use scmii::runtime::native::{
+        bev_collapse, conv2d, dense_per_cell, NativeBackend, NativeModel,
+    };
+    use scmii::utils::rng::Pcg64;
+    use scmii::voxel::FeatureMap;
+
+    fn sparse_tensor(shape: &[usize], rng: &mut Pcg64) -> HostTensor {
+        let mut t = HostTensor::zeros(shape);
+        for v in t.data.iter_mut() {
+            if rng.uniform_f32() < 0.15 {
+                *v = rng.uniform_f32() * 2.0 - 0.5;
+            }
+        }
+        t
+    }
+
+    /// The native tail must equal the reference composition — gather
+    /// alignment, `max_integrate`/`conv_integrate`, BEV conv, heads —
+    /// and decode to the same detections, within 1e-4.
+    #[test]
+    fn native_tail_matches_reference_integration_and_decode() {
+        let meta = small_meta();
+        let poses = vec![
+            Pose::IDENTITY,
+            // Off-grid-aligned transform so the gather actually moves data.
+            Pose::from_xyz_rpy(1.6, -0.8, 0.0, 0.0, 0.0, 0.1),
+        ];
+        let backend = NativeBackend::new(meta.clone(), poses.clone(), None).unwrap();
+        let g = meta.grid.clone();
+        let shape = feat_shape(&meta);
+        let mut rng = Pcg64::new(7);
+
+        for kind in IntegrationKind::all() {
+            let tail_name = meta.variant(kind).unwrap().tail.clone();
+            backend.load(&tail_name).unwrap();
+            let inputs =
+                vec![sparse_tensor(&shape, &mut rng), sparse_tensor(&shape, &mut rng)];
+            let out = backend.exec(&tail_name, inputs.clone()).unwrap();
+            assert_eq!(out.len(), 2, "{kind:?}");
+
+            // Rebuild the reference graph from the exact weights the
+            // backend holds.
+            let model = backend.model(&tail_name).unwrap();
+            let tail = match &*model {
+                NativeModel::Tail(t) => t.clone(),
+                other => panic!("expected tail, got {other:?}"),
+            };
+            let aligned: Vec<FeatureMap> = inputs
+                .iter()
+                .enumerate()
+                .map(|(dev, t)| {
+                    let m = FeatureMap::from_vec(
+                        shape[0],
+                        shape[1],
+                        shape[2],
+                        shape[3],
+                        t.data.clone(),
+                    )
+                    .unwrap();
+                    AlignMap::build(&g, &poses[dev], 1).apply(&m)
+                })
+                .collect();
+            let integrated = match kind {
+                IntegrationKind::Max => max_integrate(&aligned),
+                IntegrationKind::ConvK1 | IntegrationKind::ConvK3 => {
+                    conv_integrate(&aligned, &tail.integrate_w, &tail.integrate_b, tail.k)
+                }
+            };
+            let bev = bev_collapse(&integrated);
+            let mid = conv2d(
+                &bev,
+                g.dims[1],
+                g.dims[0],
+                tail.bev.c_in,
+                &tail.bev.conv_w,
+                &tail.bev.conv_b,
+                3,
+                tail.bev.stride,
+                true,
+            );
+            let [hb, wb] = meta.bev_dims;
+            let cls_ref =
+                dense_per_cell(&mid, hb * wb, tail.bev.c_mid, &tail.bev.cls_w, &tail.bev.cls_b);
+            let box_ref =
+                dense_per_cell(&mid, hb * wb, tail.bev.c_mid, &tail.bev.box_w, &tail.bev.box_b);
+
+            for (a, b) in out[0].data.iter().zip(&cls_ref) {
+                assert!((a - b).abs() < 1e-4, "{kind:?} cls mismatch: {a} vs {b}");
+            }
+            for (a, b) in out[1].data.iter().zip(&box_ref) {
+                assert!((a - b).abs() < 1e-4, "{kind:?} box mismatch: {a} vs {b}");
+            }
+
+            // Decode parity: the same detections fall out of both paths.
+            let params = DecodeParams { score_threshold: 0.4, ..Default::default() };
+            let dets = postprocess(&out[0].data, &out[1].data, &meta, &params);
+            let dets_ref = postprocess(&cls_ref, &box_ref, &meta, &params);
+            assert_eq!(dets.len(), dets_ref.len(), "{kind:?} detection count");
+            for (x, y) in dets.iter().zip(&dets_ref) {
+                assert_eq!(x.class_id, y.class_id);
+                assert!((x.score - y.score).abs() < 1e-4);
+                assert!((x.bbox.center.x - y.bbox.center.x).abs() < 1e-4);
+                assert!((x.bbox.center.y - y.bbox.center.y).abs() < 1e-4);
+                assert!((x.bbox.yaw - y.bbox.yaw).abs() < 1e-4);
+            }
+        }
+    }
+
+    /// Same weights + same inputs through a `DetectorSession` on the
+    /// native backend: the serving wrapper must not perturb the numbers.
+    #[test]
+    fn session_on_native_backend_serves_frames() {
+        let meta = small_meta();
+        let backend: Arc<dyn ExecBackend> = Arc::new(
+            NativeBackend::new(meta.clone(), vec![Pose::IDENTITY; 2], None).unwrap(),
+        );
+        let tail = meta.variant(IntegrationKind::Max).unwrap().tail.clone();
+        backend.load(&tail).unwrap();
+        let session = DetectorSession::new(
+            "native-serve",
+            meta.clone(),
+            Arc::clone(&backend),
+            SessionConfig::new(IntegrationKind::Max)
+                .deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        let shape = feat_shape(&meta);
+        let mut rng = Pcg64::new(11);
+        session
+            .submit(1, 0, FeaturePayload::Raw(sparse_tensor(&shape, &mut rng)))
+            .unwrap();
+        let events = session
+            .submit(1, 1, FeaturePayload::Raw(sparse_tensor(&shape, &mut rng)))
+            .unwrap();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            scmii::coordinator::session::SessionEvent::Result(r) => {
+                assert!(!r.tail_error, "native tail must execute");
+                assert_eq!(r.present, vec![true, true]);
+            }
+            other => panic!("expected Result, got {other:?}"),
+        }
+        assert_eq!(session.metrics().counter("tail_errors"), 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pool concurrency through the session layer
+// ---------------------------------------------------------------------
+
+/// Stub executor whose exec sleeps, logging (start, end) per call.
+struct SlowExec {
+    meta: ModelMeta,
+    delay: Duration,
+    log: Arc<Mutex<Vec<(Instant, Instant)>>>,
+}
+
+impl PoolExecutor for SlowExec {
+    fn exec(&mut self, _name: &str, _inputs: Vec<HostTensor>) -> anyhow::Result<Vec<HostTensor>> {
+        let start = Instant::now();
+        std::thread::sleep(self.delay);
+        let end = Instant::now();
+        self.log.lock().unwrap().push((start, end));
+        let [hb, wb] = self.meta.bev_dims;
+        let a = self.meta.anchors.len();
+        Ok(vec![
+            HostTensor::zeros(&[hb, wb, a]),
+            HostTensor::zeros(&[hb, wb, a, 8]),
+        ])
+    }
+
+    fn load(&mut self, _name: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+fn slow_pool(
+    threads: usize,
+    delay: Duration,
+) -> (Arc<dyn ExecBackend>, Arc<Mutex<Vec<(Instant, Instant)>>>) {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let log2 = Arc::clone(&log);
+    let pool = BackendPool::spawn("slow-stub", threads, move |_| {
+        Ok(SlowExec {
+            meta: small_meta(),
+            delay,
+            log: Arc::clone(&log2),
+        })
+    })
+    .unwrap();
+    (Arc::new(pool), log)
+}
+
+fn session_on(backend: &Arc<dyn ExecBackend>, name: &str) -> Arc<DetectorSession> {
+    // High score threshold: the stub's zero logits decode to nothing, so
+    // the test measures exec overlap, not NMS time.
+    let cfg = SessionConfig::new(scmii::config::IntegrationKind::Max)
+        .deadline(Duration::from_secs(60))
+        .policy(LossPolicy::ZeroFill)
+        .decode(DecodeParams { score_threshold: 0.99, ..Default::default() });
+    Arc::new(DetectorSession::new(name, small_meta(), Arc::clone(backend), cfg).unwrap())
+}
+
+/// Drive one full frame through a session from its own thread.
+fn submit_frame(session: Arc<DetectorSession>, frame_id: u64) -> std::thread::JoinHandle<()> {
+    let shape = feat_shape(session.meta());
+    std::thread::spawn(move || {
+        session
+            .submit(frame_id, 0, FeaturePayload::Raw(HostTensor::zeros(&shape)))
+            .unwrap();
+        let events = session
+            .submit(frame_id, 1, FeaturePayload::Raw(HostTensor::zeros(&shape)))
+            .unwrap();
+        assert_eq!(events.len(), 1, "frame must complete");
+    })
+}
+
+/// The tentpole acceptance assertion: on a 2-thread pool, two sessions'
+/// tail executions **overlap in time** — the serialized-engine era is
+/// over. The (start, end) timestamps come from inside the stub execs.
+#[test]
+fn two_sessions_tails_overlap_on_two_thread_pool() {
+    // Generous delay: the second submit thread only needs to be
+    // scheduled within this window for the intervals to overlap, so a
+    // loaded CI runner doesn't flake the hard-gate native job.
+    let delay = Duration::from_millis(400);
+    let (backend, log) = slow_pool(2, delay);
+    let a = session_on(&backend, "north");
+    let b = session_on(&backend, "south");
+
+    let t1 = submit_frame(a, 1);
+    let t2 = submit_frame(b, 1);
+    t1.join().unwrap();
+    t2.join().unwrap();
+
+    let log = log.lock().unwrap();
+    assert_eq!(log.len(), 2, "both tails must have executed");
+    let (s1, e1) = log[0];
+    let (s2, e2) = log[1];
+    let overlap_start = s1.max(s2);
+    let overlap_end = e1.min(e2);
+    assert!(
+        overlap_start < overlap_end,
+        "tails must overlap on a 2-thread pool: [{s1:?}, {e1:?}] vs [{s2:?}, {e2:?}]"
+    );
+}
+
+/// Control: a 1-thread pool serializes the same workload — one tail's
+/// start must order strictly after the other's end.
+#[test]
+fn one_thread_pool_serializes_sessions() {
+    let delay = Duration::from_millis(60);
+    let (backend, log) = slow_pool(1, delay);
+    let a = session_on(&backend, "north");
+    let b = session_on(&backend, "south");
+
+    let t1 = submit_frame(a, 1);
+    let t2 = submit_frame(b, 1);
+    t1.join().unwrap();
+    t2.join().unwrap();
+
+    let log = log.lock().unwrap();
+    assert_eq!(log.len(), 2);
+    let (s1, e1) = log[0];
+    let (s2, e2) = log[1];
+    assert!(
+        e1 <= s2 || e2 <= s1,
+        "one worker must serialize: [{s1:?}, {e1:?}] vs [{s2:?}, {e2:?}]"
+    );
+}
+
+/// Two frames of the *same* session also overlap — per-frame dispatch,
+/// not per-session locking.
+#[test]
+fn same_session_frames_overlap_on_two_thread_pool() {
+    let delay = Duration::from_millis(400);
+    let (backend, log) = slow_pool(2, delay);
+    let s = session_on(&backend, "solo");
+
+    let t1 = submit_frame(Arc::clone(&s), 1);
+    let t2 = submit_frame(Arc::clone(&s), 2);
+    t1.join().unwrap();
+    t2.join().unwrap();
+
+    let log = log.lock().unwrap();
+    assert_eq!(log.len(), 2);
+    let (s1, e1) = log[0];
+    let (s2, e2) = log[1];
+    assert!(s1.max(s2) < e1.min(e2), "same-session frames must overlap");
+    assert_eq!(s.frames_done(), 2);
+}

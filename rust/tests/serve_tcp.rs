@@ -32,6 +32,7 @@ fn base_server_cfg(port: u16, max_frames: u64, deadline: Duration) -> ServerConf
         decode: DecodeParams::default(),
         max_frames: Some(max_frames),
         extra_sessions: Vec::new(),
+        ..ServerConfig::default()
     }
 }
 
@@ -78,6 +79,7 @@ fn device_cfg(port: u16, dev: usize, session: &str, n_frames: usize) -> DeviceCo
         bandwidth_bps: Some(1e9),
         max_frames: n_frames,
         quantize: false,
+        ..DeviceConfig::default()
     }
 }
 
