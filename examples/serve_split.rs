@@ -74,7 +74,7 @@ fn main() -> Result<()> {
             let mut out = Vec::new();
             while out.len() < n_expect {
                 match read_msg(&mut reader)? {
-                    Msg::Result { frame_id, detections, server_micros } => {
+                    Msg::Result { frame_id, detections, server_micros, .. } => {
                         out.push((frame_id, Instant::now(), detections.len(), server_micros));
                     }
                     Msg::Bye => break,
@@ -100,13 +100,14 @@ fn main() -> Result<()> {
             max_frames: frames.len(),
             quantize: false,
             backend,
+            ..DeviceConfig::default()
         };
         device_threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
     }
 
     let mut send_times: Vec<Vec<(f64, f64)>> = Vec::new();
     for t in device_threads {
-        send_times.push(t.join().expect("device thread panicked")?);
+        send_times.push(t.join().expect("device thread panicked")?.frame_times);
     }
     let results = subscriber.join().expect("subscriber panicked")?;
     let registry = server.join().expect("server panicked")?;

@@ -67,6 +67,7 @@ fn main() {
                 device_id: 0,
                 tensor: tensor.clone(),
                 session: scmii::net::DEFAULT_SESSION.into(),
+                capture_micros: 0,
             },
         )
         .unwrap();
@@ -80,6 +81,7 @@ fn main() {
             device_id: 0,
             tensor,
             session: scmii::net::DEFAULT_SESSION.into(),
+            capture_micros: 0,
         },
     )
     .unwrap();

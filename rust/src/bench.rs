@@ -2,6 +2,9 @@
 //! path, emitted as `BENCH_decode.json`, `BENCH_integrate.json` and
 //! `BENCH_tail.json` so the performance trajectory is tracked from one
 //! PR to the next (each entry: op, p50/p95 seconds, backend, samples).
+//! The system-level counterpart is `BENCH_e2e.json` — per-frame
+//! end-to-end latency under a multi-device fleet — emitted by
+//! [`scmii scenario`](crate::scenario).
 //!
 //! Everything here runs on synthetic inputs at fixed shapes and needs no
 //! artifacts, so the numbers are comparable across machines-with-caveats

@@ -1,15 +1,29 @@
 //! Edge-device worker: runs the head model on local point clouds and
 //! streams intermediate outputs to the edge server (Fig 2, left half).
+//!
+//! ## Pipelined runtime
+//!
+//! The worker is a two-stage pipeline: the caller thread runs the head
+//! model (capture → voxelize → head exec → encode), a dedicated writer
+//! thread owns the (bandwidth-shaped, optionally fault-injected) socket.
+//! A one-slot channel between them double-buffers frames, so head
+//! execution of frame *t+1* overlaps transmission of frame *t* and the
+//! steady-state device cycle is **max(head, tx)** instead of
+//! `head + tx` — the latency hiding split computing relies on (PointSplit
+//! makes the same move across heterogeneous accelerators). Frame pacing
+//! uses absolute deadlines (`start + i·period`), so scheduling drift does
+//! not accumulate over long runs and a single slow frame is absorbed by
+//! catching up instead of shifting every later frame.
 
 use crate::cli::Args;
 use crate::config::{IntegrationKind, LatencyConfig, ModelMeta, Paths};
 use crate::metrics::Metrics;
-use crate::net::{write_msg, Msg, ShapedWriter};
+use crate::net::{ImpairConfig, ImpairStats, ImpairedLink, Msg, ShapedWriter};
 use crate::runtime::{build_backend, BackendKind, HostTensor};
 use crate::voxel::{points_to_tensor, Point};
 use anyhow::{Context, Result};
-use std::io::Write;
 use std::net::TcpStream;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// Device worker configuration.
@@ -32,6 +46,15 @@ pub struct DeviceConfig {
     pub quantize: bool,
     /// Execution backend running the head model on this worker.
     pub backend: BackendKind,
+    /// Overlap head execution of frame t+1 with transmission of frame t
+    /// (double-buffered writer thread). Off = the historical serialized
+    /// loop, kept for A/B latency comparisons.
+    pub pipelined: bool,
+    /// Uplink fault injection (loss/delay/reorder); `None` = clean link.
+    pub impair: Option<ImpairConfig>,
+    /// First frame id this worker emits (late-join scenarios: a device
+    /// joining mid-run starts at the fleet's current frame index).
+    pub start_frame: u64,
 }
 
 impl Default for DeviceConfig {
@@ -46,17 +69,132 @@ impl Default for DeviceConfig {
             max_frames: 32,
             quantize: false,
             backend: BackendKind::default_kind(),
+            pipelined: true,
+            impair: None,
+            start_frame: 0,
         }
     }
 }
 
+/// What one worker run produced: per-frame timings plus uplink
+/// fault-injection counters (zeros on a clean link).
+#[derive(Clone, Debug, Default)]
+pub struct DeviceReport {
+    /// Per transmitted frame: (head_secs, tx_secs). `tx_secs` is measured
+    /// on the writer thread and includes injected delay; frames the
+    /// impairment layer dropped still appear (their send returns fast).
+    pub frame_times: Vec<(f64, f64)>,
+    /// Fault-injection counters.
+    pub impair: ImpairStats,
+}
+
+/// Drive `n` frames through a produce (head) / consume (transmit) pair,
+/// returning per-frame `(produce_secs, consume_secs)`.
+///
+/// With `pipelined`, `consume` runs on a dedicated writer thread behind a
+/// one-slot channel: produce of frame *t+1* overlaps consume of frame
+/// *t*, so the steady-state cycle is `max(produce, consume)` rather than
+/// their sum. Without it, the two run back to back on the caller thread.
+///
+/// With a `period`, frame *i* is released no earlier than
+/// `start + i·period` — absolute next-deadline scheduling, so per-cycle
+/// overhead and one slow frame do not shift every subsequent frame the
+/// way `sleep(period - elapsed)` loops do.
+///
+/// Frame ids passed to the callbacks run `start_frame..start_frame + n`.
+pub fn pipeline_frames<M, P, C>(
+    n: usize,
+    start_frame: u64,
+    period: Option<Duration>,
+    pipelined: bool,
+    mut produce: P,
+    mut consume: C,
+) -> Result<Vec<(f64, f64)>>
+where
+    M: Send,
+    P: FnMut(u64) -> Result<M>,
+    C: FnMut(u64, M) -> Result<()> + Send,
+{
+    let start = Instant::now();
+    let pace = |i: usize| {
+        if let Some(p) = period {
+            let deadline = start + Duration::from_secs_f64(p.as_secs_f64() * i as f64);
+            let now = Instant::now();
+            if deadline > now {
+                std::thread::sleep(deadline - now);
+            }
+        }
+    };
+
+    if !pipelined {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            pace(i);
+            let frame_id = start_frame + i as u64;
+            let t0 = Instant::now();
+            let msg = produce(frame_id)?;
+            let produce_secs = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            consume(frame_id, msg)?;
+            out.push((produce_secs, t1.elapsed().as_secs_f64()));
+        }
+        return Ok(out);
+    }
+
+    let (tx, rx) = mpsc::sync_channel::<(u64, M)>(1);
+    let mut produce_times: Vec<(u64, f64)> = Vec::with_capacity(n);
+    let mut produce_err: Option<anyhow::Error> = None;
+    let consume_times = std::thread::scope(|s| {
+        let writer = s.spawn(move || -> Result<Vec<(u64, f64)>> {
+            let mut out = Vec::new();
+            for (frame_id, msg) in rx {
+                let t0 = Instant::now();
+                consume(frame_id, msg)?;
+                out.push((frame_id, t0.elapsed().as_secs_f64()));
+            }
+            Ok(out)
+        });
+        for i in 0..n {
+            pace(i);
+            let frame_id = start_frame + i as u64;
+            let t0 = Instant::now();
+            match produce(frame_id) {
+                Ok(msg) => {
+                    produce_times.push((frame_id, t0.elapsed().as_secs_f64()));
+                    if tx.send((frame_id, msg)).is_err() {
+                        // The writer died; its error surfaces below.
+                        break;
+                    }
+                }
+                Err(e) => {
+                    produce_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(tx); // closes the channel: the writer drains and returns
+        writer.join().expect("device writer thread panicked")
+    });
+    if let Some(e) = produce_err {
+        return Err(e);
+    }
+    let consume_times = consume_times?;
+    // Pair by frame id (frames produced but never written — producer or
+    // writer stopped early — are excluded).
+    let consumed: std::collections::HashMap<u64, f64> = consume_times.into_iter().collect();
+    Ok(produce_times
+        .into_iter()
+        .filter_map(|(id, p)| consumed.get(&id).map(|&c| (p, c)))
+        .collect())
+}
+
 /// Run the worker over pre-loaded frames (each entry = this device's local
-/// cloud for one frame). Returns per-frame (head_secs, tx_secs).
+/// cloud for one frame).
 pub fn run_device(
     paths: &Paths,
     cfg: &DeviceConfig,
     frames: &[Vec<Point>],
-) -> Result<Vec<(f64, f64)>> {
+) -> Result<DeviceReport> {
     anyhow::ensure!(
         !cfg.session.is_empty() && cfg.session.len() <= crate::net::MAX_SESSION_NAME,
         "session name must be 1..={} bytes, got {:?}",
@@ -65,69 +203,77 @@ pub fn run_device(
     );
     let meta = ModelMeta::load(&paths.model_meta())?;
     let vm = meta.variant(cfg.variant)?;
+    // Out-of-range --device used to panic on `vm.heads[cfg.device_id]`;
+    // validate against the rig size instead.
+    anyhow::ensure!(
+        cfg.device_id < vm.heads.len(),
+        "device id {} out of range: variant {:?} has {} heads (devices 0..{})",
+        cfg.device_id,
+        cfg.variant,
+        vm.heads.len(),
+        vm.heads.len()
+    );
     let head_name = vm.heads[cfg.device_id].clone();
-    // One worker, one head model, one frame in flight: a single-threaded
-    // backend is all a device needs.
+    // One worker, one head model, one frame in flight on the backend: a
+    // single-threaded backend is all a device needs (the overlap is
+    // between head exec and transmission, not between head execs).
     let backend = build_backend(paths, &meta, cfg.backend, 1, &[head_name.clone()])?;
 
     let stream = TcpStream::connect(&cfg.server)
         .with_context(|| format!("connect to {}", cfg.server))?;
     stream.set_nodelay(true)?;
-    let mut writer = match cfg.bandwidth_bps {
+    let writer = match cfg.bandwidth_bps {
         Some(bw) => ShapedWriter::new(stream, bw),
         None => ShapedWriter::unshaped(stream),
     };
-    write_msg(
-        &mut writer,
-        &Msg::Hello { device_id: cfg.device_id as u32, session: cfg.session.clone() },
+    let mut link = ImpairedLink::new(writer, cfg.impair);
+    link.send(&Msg::Hello { device_id: cfg.device_id as u32, session: cfg.session.clone() })?;
+
+    let n = frames.len().min(cfg.max_frames.max(1));
+    let device_id = cfg.device_id as u32;
+    let quantize = cfg.quantize;
+    let session = cfg.session.clone();
+    let start_frame = cfg.start_frame;
+    let max_points = meta.grid.max_points;
+
+    let frame_times = pipeline_frames(
+        n,
+        start_frame,
+        cfg.period,
+        cfg.pipelined,
+        |frame_id| -> Result<Msg> {
+            let cloud = &frames[(frame_id - start_frame) as usize];
+            let capture_micros = crate::utils::unix_micros();
+            let input = HostTensor::new(
+                vec![max_points, 4],
+                points_to_tensor(cloud, max_points),
+            )?;
+            let mut feat = backend.exec(&head_name, vec![input])?;
+            anyhow::ensure!(!feat.is_empty(), "head {head_name:?} returned no output");
+            let tensor = feat.remove(0);
+            Ok(if quantize {
+                Msg::FeaturesQ {
+                    frame_id,
+                    device_id,
+                    tensor: crate::net::quantize(&tensor),
+                    session: session.clone(),
+                    capture_micros,
+                }
+            } else {
+                Msg::Features { frame_id, device_id, tensor, session: session.clone(), capture_micros }
+            })
+        },
+        |_frame_id, msg| link.send(&msg),
     )?;
+    link.send(&Msg::Bye)?;
 
     let metrics = Metrics::new();
-    let mut out = Vec::new();
-    let n = frames.len().min(cfg.max_frames.max(1));
-    for (frame_id, cloud) in frames.iter().take(n).enumerate() {
-        let cycle_start = Instant::now();
-        let input = HostTensor::new(
-            vec![meta.grid.max_points, 4],
-            points_to_tensor(cloud, meta.grid.max_points),
-        )?;
-        let t0 = Instant::now();
-        let mut feat = backend.exec(&head_name, vec![input])?;
-        let head_secs = t0.elapsed().as_secs_f64();
+    for &(head_secs, tx_secs) in &frame_times {
         metrics.record("head_exec", head_secs);
-
-        let t0 = Instant::now();
-        let msg = if cfg.quantize {
-            Msg::FeaturesQ {
-                frame_id: frame_id as u64,
-                device_id: cfg.device_id as u32,
-                tensor: crate::net::quantize(&feat.remove(0)),
-                session: cfg.session.clone(),
-            }
-        } else {
-            Msg::Features {
-                frame_id: frame_id as u64,
-                device_id: cfg.device_id as u32,
-                tensor: feat.remove(0),
-                session: cfg.session.clone(),
-            }
-        };
-        write_msg(&mut writer, &msg)?;
-        writer.flush()?;
-        let tx_secs = t0.elapsed().as_secs_f64();
         metrics.record("tx", tx_secs);
-        out.push((head_secs, tx_secs));
-
-        if let Some(period) = cfg.period {
-            let elapsed = cycle_start.elapsed();
-            if elapsed < period {
-                std::thread::sleep(period - elapsed);
-            }
-        }
     }
-    write_msg(&mut writer, &Msg::Bye)?;
     log::info!("device {} done:\n{}", cfg.device_id, metrics.report());
-    Ok(out)
+    Ok(DeviceReport { frame_times, impair: link.stats() })
 }
 
 /// `scmii device` CLI entry: stream frames from the dataset.
@@ -146,6 +292,14 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         "unshaped",
         "quantize",
         "backend",
+        "no-pipeline",
+        "start-frame",
+        "loss",
+        "drop-every",
+        "delay-ms",
+        "jitter-ms",
+        "reorder",
+        "impair-seed",
     ])?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
@@ -166,11 +320,243 @@ pub fn cmd_device(args: &Args) -> Result<()> {
     cfg.max_frames = args.usize_or("max-frames", 32)?;
     cfg.quantize = args.switch("quantize");
     cfg.backend = BackendKind::parse(&args.str_or("backend", cfg.backend.name()))?;
+    cfg.pipelined = !args.switch("no-pipeline");
+    cfg.start_frame = args.u64_or("start-frame", 0)?;
+    let impair = ImpairConfig {
+        loss: args.f64_or("loss", 0.0)?,
+        drop_every: args.u64_or("drop-every", 0)?,
+        delay: Duration::from_millis(args.u64_or("delay-ms", 0)?),
+        jitter: Duration::from_millis(args.u64_or("jitter-ms", 0)?),
+        reorder: args.f64_or("reorder", 0.0)?,
+        seed: args.u64_or("impair-seed", 1)?,
+    };
+    let clean = ImpairConfig { seed: impair.seed, ..Default::default() };
+    if impair != clean {
+        impair.validate()?;
+        cfg.impair = Some(impair);
+    }
 
     let split = args.str_or("split", "val");
     let frames = crate::sim::dataset::load_split(&paths.data.join(&split))?;
+    anyhow::ensure!(!frames.is_empty(), "no frames in split {split:?}");
+    // Out-of-range --device used to panic in `swap_remove`; check the
+    // dataset's rig size up front.
+    let n_dev = frames[0].clouds.len();
+    anyhow::ensure!(
+        cfg.device_id < n_dev,
+        "--device {} out of range: dataset {:?} has {} devices",
+        cfg.device_id,
+        split,
+        n_dev
+    );
     let clouds: Vec<Vec<Point>> =
         frames.into_iter().map(|mut f| f.clouds.swap_remove(cfg.device_id)).collect();
     run_device(&paths, &cfg, &clouds)?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn run_device_rejects_out_of_range_device_id() {
+        // A temp model_meta.json is all the validation path needs — the
+        // error must fire before any backend is built or socket opened.
+        let dir = std::env::temp_dir().join("scmii_device_oob_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = Paths { artifacts: dir.clone(), data: dir };
+        crate::utils::json::write_file(
+            &paths.model_meta(),
+            &ModelMeta::test_default().to_json(),
+        )
+        .unwrap();
+
+        let mut cfg = DeviceConfig::default();
+        cfg.device_id = 99;
+        cfg.variant = IntegrationKind::Max;
+        let err = run_device(&paths, &cfg, &[Vec::new()]).unwrap_err();
+        assert!(
+            err.to_string().contains("out of range"),
+            "expected a device-range error, got: {err:#}"
+        );
+    }
+
+    /// Timestamped spans recorded inside the stub head/writer closures.
+    type SpanLog = Arc<Mutex<Vec<(&'static str, u64, Instant, Instant)>>>;
+
+    fn spans_overlap(a: (Instant, Instant), b: (Instant, Instant)) -> bool {
+        a.0.max(b.0) < a.1.min(b.1)
+    }
+
+    fn run_stub_pipeline(
+        n: usize,
+        head: Duration,
+        tx: Duration,
+        pipelined: bool,
+    ) -> (Vec<(f64, f64)>, SpanLog, Duration) {
+        let log: SpanLog = Arc::new(Mutex::new(Vec::new()));
+        let (hlog, tlog) = (Arc::clone(&log), Arc::clone(&log));
+        let t0 = Instant::now();
+        let times = pipeline_frames(
+            n,
+            0,
+            None,
+            pipelined,
+            move |id| {
+                let s = Instant::now();
+                std::thread::sleep(head);
+                hlog.lock().unwrap().push(("head", id, s, Instant::now()));
+                Ok(id)
+            },
+            move |id, _msg: u64| {
+                let s = Instant::now();
+                std::thread::sleep(tx);
+                tlog.lock().unwrap().push(("tx", id, s, Instant::now()));
+                Ok(())
+            },
+        )
+        .unwrap();
+        let total = t0.elapsed();
+        (times, log, total)
+    }
+
+    /// The tentpole acceptance assertion: with the pipelined runtime the
+    /// device cycle is ≈ max(head, tx), not head + tx. Proven two ways:
+    /// head-exec spans overlap transmission spans (timestamps recorded
+    /// inside the stubs), and the wall clock beats the serial sum by a
+    /// margin no scheduling noise can fake.
+    #[test]
+    fn pipelined_device_cycle_is_max_of_head_and_tx() {
+        let (head, tx) = (Duration::from_millis(25), Duration::from_millis(40));
+        let n = 6;
+        let (times, log, total) = run_stub_pipeline(n, head, tx, true);
+        assert_eq!(times.len(), n);
+
+        // Wall clock: serial would be n·(head+tx) = 390 ms; pipelined is
+        // ≈ head + n·tx = 265 ms. Demand at least one tx of savings.
+        let serial = (head + tx) * n as u32;
+        assert!(
+            total < serial - tx,
+            "pipelined run took {total:?}, serial would be {serial:?}"
+        );
+        // It can't beat the bottleneck stage either.
+        assert!(total >= tx * n as u32, "faster than the bottleneck: {total:?}");
+
+        // Timestamps: head of frame i+1 must overlap tx of frame i.
+        let log = log.lock().unwrap();
+        let span = |kind: &str, id: u64| {
+            log.iter()
+                .find(|(k, i, _, _)| *k == kind && *i == id)
+                .map(|(_, _, s, e)| (*s, *e))
+                .unwrap()
+        };
+        let mut overlaps = 0;
+        for i in 0..(n as u64 - 1) {
+            if spans_overlap(span("head", i + 1), span("tx", i)) {
+                overlaps += 1;
+            }
+        }
+        assert!(
+            overlaps >= 1,
+            "head exec of frame t+1 must overlap tx of frame t at least once"
+        );
+    }
+
+    /// Control: the non-pipelined loop serializes head and tx.
+    #[test]
+    fn non_pipelined_loop_serializes_head_and_tx() {
+        let (head, tx) = (Duration::from_millis(15), Duration::from_millis(20));
+        let n = 4;
+        let (times, log, total) = run_stub_pipeline(n, head, tx, false);
+        assert_eq!(times.len(), n);
+        assert!(total >= (head + tx) * n as u32, "serial loop finished too fast: {total:?}");
+        let log = log.lock().unwrap();
+        for (_, _, s1, e1) in log.iter() {
+            for (_, _, s2, e2) in log.iter() {
+                if s1 != s2 {
+                    assert!(
+                        !spans_overlap((*s1, *e1), (*s2, *e2)),
+                        "no two stages may overlap without pipelining"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite regression: pacing uses absolute deadlines, so one slow
+    /// frame is absorbed by catching up instead of shifting every later
+    /// frame (`sleep(period - elapsed)` drifts by the overshoot forever).
+    #[test]
+    fn absolute_deadline_pacing_absorbs_a_slow_frame() {
+        let period = Duration::from_millis(30);
+        let n = 8;
+        let t0 = Instant::now();
+        let times = pipeline_frames(
+            n,
+            0,
+            Some(period),
+            false,
+            |id| {
+                // Frame 2 blows its budget by ~65 ms; the rest are cheap.
+                if id == 2 {
+                    std::thread::sleep(Duration::from_millis(95));
+                }
+                Ok(id)
+            },
+            |_, _: u64| Ok(()),
+        )
+        .unwrap();
+        let total = t0.elapsed();
+        assert_eq!(times.len(), n);
+        // Last frame is released at (n-1)·period = 210 ms; drifting
+        // relative scheduling would land at ≥ 275 ms (210 + the 65 ms
+        // overshoot it never recovers), so 265 ms discriminates.
+        let budget = period * (n as u32 - 1) + Duration::from_millis(55);
+        assert!(
+            total < budget,
+            "pacing drifted: took {total:?}, absolute schedule allows {budget:?}"
+        );
+        assert!(total >= period * (n as u32 - 1), "finished before the schedule: {total:?}");
+    }
+
+    /// A writer-side failure must surface as the run's error, not hang.
+    #[test]
+    fn writer_error_propagates() {
+        let err = pipeline_frames(
+            8,
+            0,
+            None,
+            true,
+            |id| Ok(id),
+            |id, _: u64| {
+                anyhow::ensure!(id < 2, "link down");
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("link down"));
+    }
+
+    /// Frame ids offset by `start_frame` (late join).
+    #[test]
+    fn start_frame_offsets_ids() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s2 = Arc::clone(&seen);
+        let times = pipeline_frames(
+            3,
+            10,
+            None,
+            true,
+            move |id| {
+                s2.lock().unwrap().push(id);
+                Ok(id)
+            },
+            |_, _: u64| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(times.len(), 3);
+        assert_eq!(*seen.lock().unwrap(), vec![10, 11, 12]);
+    }
 }

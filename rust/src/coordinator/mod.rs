@@ -9,7 +9,10 @@
 //! - [`server`] + [`device`] — the distributed deployment: one edge
 //!   server (pure I/O over the session core) and one worker per LiDAR
 //!   (head model), talking the `net` protocol over TCP with bandwidth
-//!   shaping.
+//!   shaping. The device worker is pipelined: head execution of frame
+//!   t+1 overlaps transmission of frame t behind a writer thread, so the
+//!   device cycle is max(head, tx), not head + tx. Fleet-scale workloads
+//!   over this deployment live in [`crate::scenario`].
 //! - [`scheduler`] — the frame synchronizer pairing intermediate outputs
 //!   by frame id, with timeout and partial-loss policies (paper §IV-E
 //!   future work, implemented here). Owned by the session core.

@@ -23,6 +23,24 @@ pub enum LossPolicy {
     ZeroFill,
 }
 
+impl LossPolicy {
+    /// Canonical CLI/JSON spelling (matches `scmii serve --policy`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LossPolicy::Drop => "drop",
+            LossPolicy::ZeroFill => "zero-fill",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<LossPolicy> {
+        match s {
+            "drop" => Ok(LossPolicy::Drop),
+            "zero-fill" => Ok(LossPolicy::ZeroFill),
+            other => anyhow::bail!("unknown loss policy {other:?} (expected zero-fill|drop)"),
+        }
+    }
+}
+
 /// A completed (or force-completed) frame ready for the tail model.
 #[derive(Debug)]
 pub struct ReadyFrame {
@@ -34,11 +52,16 @@ pub struct ReadyFrame {
     pub present: Vec<bool>,
     /// Arrival of the first device's features (latency accounting).
     pub first_arrival: Instant,
+    /// Earliest device capture stamp (wall-clock µs; 0 = no device
+    /// stamped this frame). End-to-end latency accounting rides on it.
+    pub capture_micros: u64,
 }
 
 struct Pending {
     slots: Vec<Option<HostTensor>>,
     first_arrival: Instant,
+    /// Earliest non-zero capture stamp seen for this frame.
+    capture_micros: u64,
 }
 
 /// How long an emission record is kept to classify late arrivals.
@@ -99,6 +122,19 @@ impl FrameSync {
 
     /// Register features from a device. Returns the frame when complete.
     pub fn add(&mut self, frame_id: u64, device_id: usize, tensor: HostTensor) -> Option<ReadyFrame> {
+        self.add_at(frame_id, device_id, tensor, 0)
+    }
+
+    /// [`add`](Self::add) with the device's capture stamp (wall-clock µs;
+    /// 0 = unstamped). The emitted frame carries the *earliest* stamp —
+    /// end-to-end latency is measured from the first capture.
+    pub fn add_at(
+        &mut self,
+        frame_id: u64,
+        device_id: usize,
+        tensor: HostTensor,
+        capture_micros: u64,
+    ) -> Option<ReadyFrame> {
         assert!(device_id < self.n_devices, "device {device_id} out of range");
         if self.emitted.contains_key(&frame_id) {
             self.stats.late_arrivals += 1;
@@ -107,12 +143,18 @@ impl FrameSync {
         let pending = self.pending.entry(frame_id).or_insert_with(|| Pending {
             slots: vec![None; self.n_devices],
             first_arrival: Instant::now(),
+            capture_micros: 0,
         });
         if pending.slots[device_id].is_some() {
             self.stats.duplicates += 1;
             return None;
         }
         pending.slots[device_id] = Some(tensor);
+        if capture_micros > 0
+            && (pending.capture_micros == 0 || capture_micros < pending.capture_micros)
+        {
+            pending.capture_micros = capture_micros;
+        }
         if pending.slots.iter().all(|s| s.is_some()) {
             let pending = self.pending.remove(&frame_id).unwrap();
             self.emitted.insert(frame_id, Instant::now());
@@ -123,6 +165,7 @@ impl FrameSync {
                 present: vec![true; self.n_devices],
                 tensors: pending.slots.into_iter().map(|s| s.unwrap()).collect(),
                 first_arrival: pending.first_arrival,
+                capture_micros: pending.capture_micros,
             });
         }
         None
@@ -172,6 +215,7 @@ impl FrameSync {
                         tensors,
                         present,
                         first_arrival: pending.first_arrival,
+                        capture_micros: pending.capture_micros,
                     });
                 }
             }
@@ -336,6 +380,34 @@ mod tests {
         assert!(s.poll_expired().is_empty());
         assert_eq!(s.take_dropped(), vec![7]);
         assert!(s.take_dropped().is_empty(), "drain must be one-shot");
+    }
+
+    #[test]
+    fn earliest_capture_stamp_wins() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        assert!(s.add_at(1, 0, t(), 5000).is_none());
+        let ready = s.add_at(1, 1, t(), 3000).unwrap();
+        assert_eq!(ready.capture_micros, 3000, "earliest stamp must win");
+
+        // An unstamped (0) device does not clobber a real stamp; a frame
+        // with no stamps at all emits 0.
+        assert!(s.add_at(2, 0, t(), 0).is_none());
+        let ready = s.add_at(2, 1, t(), 7000).unwrap();
+        assert_eq!(ready.capture_micros, 7000);
+        assert!(s.add(3, 0, t()).is_none());
+        let ready = s.add(3, 1, t()).unwrap();
+        assert_eq!(ready.capture_micros, 0);
+    }
+
+    #[test]
+    fn zero_fill_carries_capture_stamp_through_timeout() {
+        let mut s =
+            FrameSync::new(2, Duration::from_millis(10), LossPolicy::ZeroFill, vec![2, 2]);
+        s.add_at(4, 1, t(), 1234);
+        std::thread::sleep(Duration::from_millis(20));
+        let ready = s.poll_expired();
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].capture_micros, 1234);
     }
 
     #[test]

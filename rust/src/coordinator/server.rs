@@ -112,6 +112,7 @@ impl ResultSink for TcpSink {
                 frame_id: result.frame_id,
                 detections,
                 server_micros: (result.tail_secs * 1e6) as u64,
+                capture_micros: result.capture_micros,
             },
         );
         if let Err(e) = &out {
@@ -128,7 +129,9 @@ impl ResultSink for TcpSink {
 
 struct Shared {
     registry: Arc<SessionRegistry>,
-    done: AtomicBool,
+    /// Shutdown flag: set internally when `max_frames` is reached, or
+    /// externally by the holder of the [`run_server_until`] stop handle.
+    done: Arc<AtomicBool>,
     frames_out: AtomicU64,
     max_frames: Option<u64>,
 }
@@ -162,6 +165,18 @@ impl Shared {
 /// across all sessions. Returns the registry so callers can inspect
 /// per-session metrics.
 pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegistry>> {
+    run_server_until(paths, cfg, Arc::new(AtomicBool::new(false)))
+}
+
+/// [`run_server`] with an external stop handle: the server also exits
+/// when `stop` is set (within one accept-poll / read-timeout window).
+/// The fleet scenario harness uses this to stop a `max_frames: None`
+/// server once its device fleet has drained and stragglers flushed.
+pub fn run_server_until(
+    paths: &Paths,
+    cfg: &ServerConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<Arc<SessionRegistry>> {
     let meta = ModelMeta::load(&paths.model_meta())?;
     let specs = cfg.session_specs()?;
 
@@ -183,7 +198,7 @@ pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegist
     }
     let shared = Arc::new(Shared {
         registry: Arc::clone(&registry),
-        done: AtomicBool::new(false),
+        done: stop,
         frames_out: AtomicU64::new(0),
         max_frames: cfg.max_frames,
     });
@@ -305,16 +320,24 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                     shared.registry.names()
                 ),
             },
-            Msg::Features { frame_id, device_id, tensor, session } => {
-                submit(&shared, &session, frame_id, device_id, FeaturePayload::Raw(tensor))?;
+            Msg::Features { frame_id, device_id, tensor, session, capture_micros } => {
+                submit(
+                    &shared,
+                    &session,
+                    frame_id,
+                    device_id,
+                    FeaturePayload::Raw(tensor),
+                    capture_micros,
+                )?;
             }
-            Msg::FeaturesQ { frame_id, device_id, tensor, session } => {
+            Msg::FeaturesQ { frame_id, device_id, tensor, session, capture_micros } => {
                 submit(
                     &shared,
                     &session,
                     frame_id,
                     device_id,
                     FeaturePayload::Quantized(tensor),
+                    capture_micros,
                 )?;
             }
             Msg::Bye => return Ok(()),
@@ -335,6 +358,7 @@ fn submit(
     frame_id: u64,
     device_id: u32,
     payload: FeaturePayload,
+    capture_micros: u64,
 ) -> Result<()> {
     let Some(sess) = shared.registry.get(session) else {
         anyhow::bail!(
@@ -354,7 +378,7 @@ fn submit(
     // sessions are polled by the accept loop every 20 ms. Polling them
     // here too would make this connection thread run (and block on)
     // other sessions' work — breaking per-session isolation.
-    match sess.submit(frame_id, device_id as usize, payload) {
+    match sess.submit_at(frame_id, device_id as usize, payload, capture_micros) {
         Ok(events) => shared.note_events(&events),
         Err(e) => log::warn!("submit to session {session:?} failed: {e:#}"),
     }
@@ -413,10 +437,10 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
     cfg.variant = IntegrationKind::parse(&args.str_or("variant", "conv_k3"))?;
     cfg.deadline = Duration::from_millis(args.u64_or("deadline-ms", 200)?);
-    cfg.policy = match args.str_one_of("policy", &["zero-fill", "drop"], "zero-fill")?.as_str() {
-        "drop" => LossPolicy::Drop,
-        _ => LossPolicy::ZeroFill,
-    };
+    // One spelling authority: str_one_of rejects typos with the flag
+    // name, LossPolicy::parse owns the string → variant mapping.
+    cfg.policy =
+        LossPolicy::parse(&args.str_one_of("policy", &["zero-fill", "drop"], "zero-fill")?)?;
     // Same flags, same defaults as the in-process pipeline — one parser.
     let be = super::pipeline::PipelineBackend::from_args(args)?;
     cfg.backend = be.kind;

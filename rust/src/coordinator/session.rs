@@ -136,6 +136,10 @@ pub struct FrameResult {
     pub post_secs: f64,
     /// First-arrival → tail-start wait (sync latency accounting).
     pub sync_wait_secs: f64,
+    /// Earliest device capture stamp for this frame (wall-clock µs; 0 =
+    /// no device stamped it). Echoed to subscribers so end-to-end
+    /// latency — capture to decoded detections — can be accounted.
+    pub capture_micros: u64,
     /// True when the tail failed and `detections` is empty for that
     /// reason (the frame still completes so frontends stay in lockstep).
     pub tail_error: bool,
@@ -268,6 +272,20 @@ impl DetectorSession {
         device_id: usize,
         payload: FeaturePayload,
     ) -> Result<Vec<SessionEvent>> {
+        self.submit_at(frame_id, device_id, payload, 0)
+    }
+
+    /// [`submit`](Self::submit) with the device's frame-capture stamp
+    /// (wall-clock µs; 0 = unstamped). When a frame resolves with a
+    /// stamp, the session records capture → decoded-detections latency
+    /// in its `e2e` metric series — the number `scmii scenario` reports.
+    pub fn submit_at(
+        &self,
+        frame_id: u64,
+        device_id: usize,
+        payload: FeaturePayload,
+        capture_micros: u64,
+    ) -> Result<Vec<SessionEvent>> {
         self.metrics.incr("features_rx", 1);
         if payload.is_quantized() {
             self.metrics.incr("features_rx_quantized", 1);
@@ -289,7 +307,7 @@ impl DetectorSession {
         };
         let ready = {
             let mut sync = self.sync.lock().unwrap();
-            sync.add(frame_id, device_id, tensor)
+            sync.add_at(frame_id, device_id, tensor, capture_micros)
         };
         let mut events = Vec::new();
         if let Some(ready) = ready {
@@ -380,6 +398,13 @@ impl DetectorSession {
         self.metrics.record("post", post_secs);
         self.metrics.incr("frames_done", 1);
         self.frames_done.fetch_add(1, Ordering::SeqCst);
+        // End-to-end latency at the paper's finish line: device capture →
+        // decoded detections, about to be handed to the ResultSinks.
+        if ready.capture_micros > 0 {
+            let now = crate::utils::unix_micros();
+            self.metrics
+                .record("e2e", now.saturating_sub(ready.capture_micros) as f64 * 1e-6);
+        }
 
         let result = FrameResult {
             frame_id: ready.frame_id,
@@ -388,6 +413,7 @@ impl DetectorSession {
             tail_secs,
             post_secs,
             sync_wait_secs,
+            capture_micros: ready.capture_micros,
             tail_error,
         };
         let mut sinks = self.sinks.lock().unwrap();
@@ -603,6 +629,34 @@ mod tests {
         session.submit(3, 0, FeaturePayload::Quantized(q)).unwrap();
         assert_eq!(session.metrics().counter("features_rx_quantized"), 1);
         assert_eq!(session.metrics().counter("features_rx"), 1);
+    }
+
+    #[test]
+    fn stamped_submissions_record_e2e_latency() {
+        let backend = empty_backend();
+        let session = DetectorSession::new(
+            "e2e",
+            ModelMeta::test_default(),
+            backend,
+            SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        let capture = crate::utils::unix_micros();
+        session.submit_at(1, 0, FeaturePayload::Raw(feat()), capture).unwrap();
+        let events = session.submit_at(1, 1, FeaturePayload::Raw(feat()), capture).unwrap();
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            SessionEvent::Result(r) => assert_eq!(r.capture_micros, capture),
+            other => panic!("expected Result, got {other:?}"),
+        }
+        let e2e = session.metrics().samples("e2e");
+        assert_eq!(e2e.len(), 1, "stamped frame must record an e2e sample");
+        assert!(e2e[0] >= 0.0 && e2e[0] < 60.0, "implausible e2e {}", e2e[0]);
+
+        // Unstamped frames (legacy clients) record nothing.
+        session.submit(2, 0, FeaturePayload::Raw(feat())).unwrap();
+        session.submit(2, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(session.metrics().samples("e2e").len(), 1);
     }
 
     #[test]

@@ -29,6 +29,17 @@ pub struct ScMiiBreakdown {
     pub inference: f64,
 }
 
+impl ScMiiBreakdown {
+    /// Per device: the steady-state cycle of the *pipelined* device
+    /// runtime, where head execution of frame t+1 overlaps transmission
+    /// of frame t — `max(head, tx)` instead of `head + tx`. This bounds
+    /// sustained throughput; `edge_total` remains the single-frame
+    /// latency (the first frame of a burst still pays head + tx).
+    pub fn pipelined_cycle(&self) -> Vec<f64> {
+        self.edge_compute.iter().zip(&self.tx).map(|(c, x)| c.max(*x)).collect()
+    }
+}
+
 /// The latency model.
 #[derive(Clone, Debug, Default)]
 pub struct TestbedModel {
@@ -97,6 +108,24 @@ mod tests {
         // inference gated by the slower device (device 1)
         assert!(b.edge_total[1] > b.edge_total[0]);
         assert!((b.inference - (b.edge_total[1] + b.server)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_cycle_is_max_not_sum() {
+        let m = TestbedModel::new(LatencyConfig {
+            edge_factor: 6.0,
+            server_factor: 0.25,
+            bandwidth_bps: 1e9,
+            base_rtt: 0.5e-3,
+        });
+        let b = m.scmii(&timing());
+        let cycle = b.pipelined_cycle();
+        assert_eq!(cycle.len(), b.edge_compute.len());
+        for (i, &c) in cycle.iter().enumerate() {
+            let (head, tx) = (b.edge_compute[i], b.tx[i]);
+            assert!((c - head.max(tx)).abs() < 1e-12);
+            assert!(c < b.edge_total[i], "cycle must beat head + tx");
+        }
     }
 
     #[test]

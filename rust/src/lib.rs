@@ -52,13 +52,26 @@
 //! - [`coordinator::device`] — one worker per LiDAR (head model),
 //!   streaming raw or u8-quantized intermediate outputs.
 //!
+//! ## Fleet scenarios and the pipelined device runtime
+//!
+//! [`coordinator::device::run_device`] is a two-stage pipeline: head
+//! execution of frame *t+1* overlaps transmission of frame *t* behind a
+//! one-slot writer-thread channel, so the device cycle is
+//! `max(head, tx)` rather than `head + tx` — the latency hiding the
+//! paper's multi-device numbers rely on. [`scenario`] scales that up
+//! declaratively: N devices × M sessions against a real TCP server, with
+//! per-link bandwidth shaping and fault injection
+//! ([`net::ImpairedLink`]: loss, delay/jitter, reorder), device dropout
+//! and late join, reported as per-frame end-to-end latency
+//! (`BENCH_e2e.json` via `scmii scenario`).
+//!
 //! ## Supporting layers
 //!
 //! - [`sim::dataset`] — synthetic intersection dataset generator standing
 //!   in for V2X-Real.
 //! - [`ndt`] — setup-phase extrinsic calibration via NDT scan matching.
-//! - [`net`] — length-prefixed wire protocol with bandwidth shaping and
-//!   quantized payloads.
+//! - [`net`] — length-prefixed wire protocol with bandwidth shaping,
+//!   quantized payloads, and message-level fault injection.
 //!
 //! See `docs/ARCHITECTURE.md` for the full design write-up.
 
@@ -76,6 +89,7 @@ pub mod model;
 pub mod ndt;
 pub mod net;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod utils;
 pub mod voxel;

@@ -19,6 +19,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("eval-accuracy", "reproduce Table III (mAP per integration method)"),
     ("exec-time", "reproduce Fig 5 (execution-time comparison)"),
     ("bench", "hot-path micro-benchmarks -> BENCH_*.json"),
+    ("scenario", "run a fleet scenario (devices x sessions, lossy links) -> BENCH_e2e.json"),
     ("version", "print version info"),
 ];
 
@@ -45,6 +46,7 @@ fn main() {
         "eval-accuracy" => scmii::eval::harness::cmd_eval_accuracy(&args),
         "exec-time" => scmii::latency::harness::cmd_exec_time(&args),
         "bench" => scmii::bench::cmd_bench(&args),
+        "scenario" => scmii::scenario::cmd_scenario(&args),
         #[cfg(feature = "xla")]
         "run-hlo" => cmd_run_hlo(&args),
         #[cfg(not(feature = "xla"))]

@@ -1,0 +1,305 @@
+//! Message-level link fault injection for the device uplink.
+//!
+//! The paper's testbed is a clean 1 Gbps wired LAN, but the robustness
+//! direction its §IV-E calls out ("systems designed to tolerate partial
+//! data loss without retransmission") needs *lossy* links to exercise —
+//! that is what drives `FrameSync`'s Drop/ZeroFill policies for real.
+//! [`ImpairedLink`] sits between the device worker and its (optionally
+//! bandwidth-shaped) socket and injects faults per *message*:
+//!
+//! - **loss** — data messages are silently discarded, probabilistically
+//!   (`loss`) or deterministically (`drop_every`, for reproducible
+//!   accounting in tests and CI scenarios);
+//! - **delay/jitter** — a fixed + uniformly-jittered latency before each
+//!   data message leaves (models switch/queueing delay; running inside
+//!   the device's writer thread it delays transmission without blocking
+//!   head execution);
+//! - **reorder** — a data message is held back and emitted after the
+//!   next one, swapping adjacent frames on the wire.
+//!
+//! Control messages (`Hello`, `Subscribe`, `Bye`, …) always pass and
+//! flush any held frame first, so handshakes stay intact and `Bye`
+//! remains last on the wire.
+
+use super::proto::{encode_frame, Msg};
+use crate::utils::rng::Pcg64;
+use anyhow::Result;
+use std::io::Write;
+use std::time::Duration;
+
+/// Per-link fault-injection parameters. Defaults are a clean link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ImpairConfig {
+    /// Probability of dropping each data message.
+    pub loss: f64,
+    /// Deterministic loss: drop every k-th data message (0 = off).
+    /// Composes with `loss`; tests and CI gates prefer this knob for
+    /// exact sync-stat accounting.
+    pub drop_every: u64,
+    /// Fixed extra latency per data message.
+    pub delay: Duration,
+    /// Additional uniform jitter in `[0, jitter)` per data message.
+    pub jitter: Duration,
+    /// Probability of holding a data message until after the next one.
+    pub reorder: f64,
+    /// RNG seed — runs are reproducible per (seed, message sequence).
+    pub seed: u64,
+}
+
+impl Default for ImpairConfig {
+    fn default() -> Self {
+        ImpairConfig {
+            loss: 0.0,
+            drop_every: 0,
+            delay: Duration::ZERO,
+            jitter: Duration::ZERO,
+            reorder: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+impl ImpairConfig {
+    /// Reject out-of-range probabilities at configuration time: a
+    /// `--loss 5` meant as "5%" would otherwise silently drop *every*
+    /// message, and a negative value silently means a clean link.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.loss),
+            "loss probability must be in [0, 1], got {}",
+            self.loss
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.reorder),
+            "reorder probability must be in [0, 1], got {}",
+            self.reorder
+        );
+        Ok(())
+    }
+}
+
+/// Counters of what the link actually did (scenario reports / tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ImpairStats {
+    /// Data messages offered to the link (`Features` / `FeaturesQ`).
+    pub data_msgs: u64,
+    /// Data messages discarded by loss injection.
+    pub dropped: u64,
+    /// Data messages that slept a delay/jitter before leaving.
+    pub delayed: u64,
+    /// Data messages held back past their successor.
+    pub reordered: u64,
+}
+
+/// A protocol-message writer with fault injection. `None` config is a
+/// transparent pass-through, so the device runtime always writes through
+/// one code path.
+pub struct ImpairedLink<W: Write> {
+    inner: W,
+    cfg: Option<ImpairConfig>,
+    rng: Pcg64,
+    /// A frame held back for reordering, emitted after the next write.
+    held: Option<Vec<u8>>,
+    stats: ImpairStats,
+}
+
+impl<W: Write> ImpairedLink<W> {
+    pub fn new(inner: W, cfg: Option<ImpairConfig>) -> ImpairedLink<W> {
+        let seed = cfg.as_ref().map(|c| c.seed).unwrap_or(0);
+        ImpairedLink { inner, cfg, rng: Pcg64::new(seed), held: None, stats: ImpairStats::default() }
+    }
+
+    pub fn stats(&self) -> ImpairStats {
+        self.stats
+    }
+
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.inner
+    }
+
+    /// Send one protocol message through the impaired link. Only data
+    /// messages (`Features` / `FeaturesQ`) are subject to faults; control
+    /// messages always pass, flushing any held frame first.
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        let frame = encode_frame(msg)?;
+        let is_data = matches!(msg, Msg::Features { .. } | Msg::FeaturesQ { .. });
+        let Some(cfg) = self.cfg else {
+            return self.write_frame(&frame);
+        };
+        if !is_data {
+            self.release_held()?;
+            return self.write_frame(&frame);
+        }
+        self.stats.data_msgs += 1;
+        let k = self.stats.data_msgs;
+        let deterministic_drop = cfg.drop_every > 0 && k % cfg.drop_every == 0;
+        if deterministic_drop || (cfg.loss > 0.0 && self.rng.uniform() < cfg.loss) {
+            self.stats.dropped += 1;
+            return Ok(());
+        }
+        if cfg.delay > Duration::ZERO || cfg.jitter > Duration::ZERO {
+            let jitter = cfg.jitter.mul_f64(self.rng.uniform());
+            std::thread::sleep(cfg.delay + jitter);
+            self.stats.delayed += 1;
+        }
+        if cfg.reorder > 0.0 && self.held.is_none() && self.rng.uniform() < cfg.reorder {
+            self.held = Some(frame);
+            self.stats.reordered += 1;
+            return Ok(());
+        }
+        self.write_frame(&frame)?;
+        self.release_held()
+    }
+
+    /// Flush any held (reordered) frame; `send`ing a control message does
+    /// this implicitly, but call it before dropping the link if the last
+    /// message might be held.
+    pub fn finish(&mut self) -> Result<()> {
+        self.release_held()
+    }
+
+    fn write_frame(&mut self, frame: &[u8]) -> Result<()> {
+        self.inner.write_all(frame)?;
+        self.inner.flush()?;
+        Ok(())
+    }
+
+    fn release_held(&mut self) -> Result<()> {
+        if let Some(h) = self.held.take() {
+            self.inner.write_all(&h)?;
+            self.inner.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{read_msg, DEFAULT_SESSION};
+    use crate::runtime::HostTensor;
+
+    fn feat(frame_id: u64) -> Msg {
+        Msg::Features {
+            frame_id,
+            device_id: 0,
+            tensor: HostTensor::zeros(&[2]),
+            session: DEFAULT_SESSION.into(),
+            capture_micros: 0,
+        }
+    }
+
+    fn decode_all(mut buf: &[u8]) -> Vec<Msg> {
+        let mut out = Vec::new();
+        while !buf.is_empty() {
+            out.push(read_msg(&mut buf).unwrap());
+        }
+        out
+    }
+
+    fn frame_ids(msgs: &[Msg]) -> Vec<u64> {
+        msgs.iter()
+            .filter_map(|m| match m {
+                Msg::Features { frame_id, .. } => Some(*frame_id),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_probabilities() {
+        assert!(ImpairConfig::default().validate().is_ok());
+        assert!(ImpairConfig { loss: 1.0, reorder: 1.0, ..Default::default() }
+            .validate()
+            .is_ok());
+        assert!(ImpairConfig { loss: 5.0, ..Default::default() }.validate().is_err());
+        assert!(ImpairConfig { loss: -0.1, ..Default::default() }.validate().is_err());
+        assert!(ImpairConfig { reorder: 1.5, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn clean_link_is_a_passthrough() {
+        let mut link = ImpairedLink::new(Vec::new(), None);
+        for i in 0..3 {
+            link.send(&feat(i)).unwrap();
+        }
+        link.send(&Msg::Bye).unwrap();
+        let msgs = decode_all(link.get_mut());
+        assert_eq!(frame_ids(&msgs), vec![0, 1, 2]);
+        assert_eq!(msgs.last(), Some(&Msg::Bye));
+        assert_eq!(link.stats(), ImpairStats::default());
+    }
+
+    #[test]
+    fn drop_every_is_deterministic() {
+        let cfg = ImpairConfig { drop_every: 3, ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        for i in 0..9 {
+            link.send(&feat(i)).unwrap();
+        }
+        // Messages 3, 6, 9 (1-indexed) dropped → frames 2, 5, 8 missing.
+        let msgs = decode_all(link.get_mut());
+        assert_eq!(frame_ids(&msgs), vec![0, 1, 3, 4, 6, 7]);
+        assert_eq!(link.stats().dropped, 3);
+        assert_eq!(link.stats().data_msgs, 9);
+    }
+
+    #[test]
+    fn full_loss_blacks_out_data_but_not_control() {
+        let cfg = ImpairConfig { loss: 1.0, ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        link.send(&Msg::Hello { device_id: 4, session: "s".into() }).unwrap();
+        for i in 0..5 {
+            link.send(&feat(i)).unwrap();
+        }
+        link.send(&Msg::Bye).unwrap();
+        let msgs = decode_all(link.get_mut());
+        assert_eq!(msgs.len(), 2, "only Hello and Bye may pass");
+        assert!(matches!(msgs[0], Msg::Hello { device_id: 4, .. }));
+        assert_eq!(msgs[1], Msg::Bye);
+        assert_eq!(link.stats().dropped, 5);
+    }
+
+    #[test]
+    fn reorder_swaps_adjacent_frames() {
+        let cfg = ImpairConfig { reorder: 1.0, ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        link.send(&feat(0)).unwrap(); // held
+        link.send(&feat(1)).unwrap(); // written, then releases frame 0
+        let msgs = decode_all(link.get_mut());
+        assert_eq!(frame_ids(&msgs), vec![1, 0], "adjacent frames must swap");
+        assert_eq!(link.stats().reordered, 1);
+    }
+
+    #[test]
+    fn control_message_flushes_held_frame_first() {
+        let cfg = ImpairConfig { reorder: 1.0, ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        link.send(&feat(7)).unwrap(); // held
+        link.send(&Msg::Bye).unwrap(); // must release frame 7 first
+        let msgs = decode_all(link.get_mut());
+        assert_eq!(frame_ids(&msgs), vec![7]);
+        assert_eq!(msgs.last(), Some(&Msg::Bye), "Bye stays last on the wire");
+    }
+
+    #[test]
+    fn delay_sleeps_before_emitting() {
+        let cfg = ImpairConfig { delay: Duration::from_millis(20), ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        let t0 = std::time::Instant::now();
+        link.send(&feat(0)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        assert_eq!(link.stats().delayed, 1);
+        assert_eq!(frame_ids(&decode_all(link.get_mut())), vec![0]);
+    }
+
+    #[test]
+    fn finish_releases_a_trailing_held_frame() {
+        let cfg = ImpairConfig { reorder: 1.0, ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        link.send(&feat(3)).unwrap(); // held, nothing follows
+        assert!(decode_all(link.get_mut()).is_empty());
+        link.finish().unwrap();
+        assert_eq!(frame_ids(&decode_all(link.get_mut())), vec![3]);
+    }
+}

@@ -1,11 +1,16 @@
-//! Wire protocol between edge devices and the edge server, plus the
+//! Wire protocol between edge devices and the edge server, the
 //! 1 Gbps-LAN bandwidth shaper used to emulate the paper's testbed link
-//! on localhost TCP.
+//! on localhost TCP, and the message-level fault-injection layer
+//! ([`ImpairedLink`]) that lossy scenarios run their uplinks through.
 
+mod impair;
 mod proto;
 mod quant;
 mod shaper;
 
-pub use proto::{read_msg, write_msg, Msg, WireDetection, DEFAULT_SESSION, MAX_SESSION_NAME};
+pub use impair::{ImpairConfig, ImpairStats, ImpairedLink};
+pub use proto::{
+    encode_frame, read_msg, write_msg, Msg, WireDetection, DEFAULT_SESSION, MAX_SESSION_NAME,
+};
 pub use quant::{dequantize, quantize, QuantTensor};
 pub use shaper::ShapedWriter;

@@ -12,6 +12,19 @@
 //! [`DEFAULT_SESSION`], so pre-session clients keep working against new
 //! servers unchanged. (New clients always encode it, so new-client →
 //! old-server is not supported — the compat direction the rollout needs.)
+//!
+//! ## Capture timestamps
+//!
+//! `Features`/`FeaturesQ` additionally carry a trailing `capture_micros`
+//! (u64 LE, wall-clock µs of the device's frame capture), and `Result`
+//! echoes the earliest stamp of the frame it resolves — the plumbing the
+//! end-to-end latency accounting rides on. The field is optional in
+//! *both* directions: absent on decode ⇒ 0 = "unstamped", and a zero
+//! stamp is **omitted on encode**, so frames from unstamped (legacy)
+//! devices produce `Result` payloads that are byte-identical to the
+//! pre-stamp wire form — old subscribers keep decoding them. Only a
+//! fleet whose devices actually stamp requires its subscribers to be
+//! stamp-aware.
 
 use crate::runtime::HostTensor;
 use anyhow::{bail, Context, Result};
@@ -40,13 +53,34 @@ pub struct WireDetection {
 pub enum Msg {
     /// Device announces itself after connecting.
     Hello { device_id: u32, session: String },
-    /// Head-model output for one frame.
-    Features { frame_id: u64, device_id: u32, tensor: HostTensor, session: String },
+    /// Head-model output for one frame. `capture_micros` is the device's
+    /// wall-clock frame-capture stamp (0 = unstamped legacy client).
+    Features {
+        frame_id: u64,
+        device_id: u32,
+        tensor: HostTensor,
+        session: String,
+        capture_micros: u64,
+    },
     /// u8-quantized head output (paper §IV-E compressed intermediate
     /// outputs — 4× smaller payload).
-    FeaturesQ { frame_id: u64, device_id: u32, tensor: super::QuantTensor, session: String },
+    FeaturesQ {
+        frame_id: u64,
+        device_id: u32,
+        tensor: super::QuantTensor,
+        session: String,
+        capture_micros: u64,
+    },
     /// Final detections for one frame (server → subscriber).
-    Result { frame_id: u64, detections: Vec<WireDetection>, server_micros: u64 },
+    /// `capture_micros` echoes the earliest device capture stamp of the
+    /// frame (0 when no device stamped it), so subscribers on the same
+    /// clock domain can account capture → delivery latency.
+    Result {
+        frame_id: u64,
+        detections: Vec<WireDetection>,
+        server_micros: u64,
+        capture_micros: u64,
+    },
     /// A subscriber asks to receive `Result`s for one session.
     Subscribe { session: String },
     /// Graceful shutdown.
@@ -96,6 +130,15 @@ fn put_u32(buf: &mut Vec<u8>, v: u32) {
 
 fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Trailing capture stamp: omitted when 0 so unstamped messages stay
+/// byte-identical to the pre-stamp wire form (legacy decoders reject
+/// trailing bytes they don't know).
+fn put_capture(buf: &mut Vec<u8>, capture_micros: u64) {
+    if capture_micros > 0 {
+        put_u64(buf, capture_micros);
+    }
 }
 
 fn put_session(buf: &mut Vec<u8>, session: &str) {
@@ -180,6 +223,15 @@ impl<'a> Cursor<'a> {
         Ok(s.to_string())
     }
 
+    /// Trailing capture timestamp; a payload ending here predates the
+    /// stamp and decodes as 0 ("unstamped").
+    fn capture_or_zero(&mut self) -> Result<u64> {
+        if self.pos == self.buf.len() {
+            return Ok(0);
+        }
+        self.u64()
+    }
+
     fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("{} trailing bytes in message", self.buf.len() - self.pos);
@@ -196,13 +248,14 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
             put_u32(&mut buf, *device_id);
             put_session(&mut buf, session);
         }
-        Msg::Features { frame_id, device_id, tensor, session } => {
+        Msg::Features { frame_id, device_id, tensor, session, capture_micros } => {
             put_u64(&mut buf, *frame_id);
             put_u32(&mut buf, *device_id);
             put_tensor(&mut buf, tensor);
             put_session(&mut buf, session);
+            put_capture(&mut buf, *capture_micros);
         }
-        Msg::Result { frame_id, detections, server_micros } => {
+        Msg::Result { frame_id, detections, server_micros, capture_micros } => {
             put_u64(&mut buf, *frame_id);
             put_u64(&mut buf, *server_micros);
             put_u32(&mut buf, detections.len() as u32);
@@ -213,8 +266,9 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
                 buf.extend_from_slice(&d.score.to_le_bytes());
                 put_u32(&mut buf, d.class_id);
             }
+            put_capture(&mut buf, *capture_micros);
         }
-        Msg::FeaturesQ { frame_id, device_id, tensor, session } => {
+        Msg::FeaturesQ { frame_id, device_id, tensor, session, capture_micros } => {
             put_u64(&mut buf, *frame_id);
             put_u32(&mut buf, *device_id);
             buf.push(tensor.shape.len() as u8);
@@ -225,6 +279,7 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
             buf.extend_from_slice(&tensor.scale.to_le_bytes());
             buf.extend_from_slice(&tensor.data);
             put_session(&mut buf, session);
+            put_capture(&mut buf, *capture_micros);
         }
         Msg::Subscribe { session } => put_session(&mut buf, session),
         Msg::Bye => {}
@@ -245,7 +300,8 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
             let device_id = c.u32()?;
             let tensor = c.tensor()?;
             let session = c.session_or_default()?;
-            Msg::Features { frame_id, device_id, tensor, session }
+            let capture_micros = c.capture_or_zero()?;
+            Msg::Features { frame_id, device_id, tensor, session, capture_micros }
         }
         3 => {
             let frame_id = c.u64()?;
@@ -264,7 +320,8 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
                 let class_id = c.u32()?;
                 detections.push(WireDetection { bbox, score, class_id });
             }
-            Msg::Result { frame_id, detections, server_micros }
+            let capture_micros = c.capture_or_zero()?;
+            Msg::Result { frame_id, detections, server_micros, capture_micros }
         }
         4 => Msg::Subscribe { session: c.session_or_default()? },
         5 => Msg::Bye,
@@ -281,11 +338,13 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
             let n: usize = shape.iter().product();
             let data = c.take(n)?.to_vec();
             let session = c.session_or_default()?;
+            let capture_micros = c.capture_or_zero()?;
             Msg::FeaturesQ {
                 frame_id,
                 device_id,
                 tensor: super::QuantTensor { shape, min, scale, data },
                 session,
+                capture_micros,
             }
         }
         other => bail!("unknown message type {other}"),
@@ -294,15 +353,27 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
     Ok(msg)
 }
 
+/// Serialize one message to its complete framed wire form (magic + type +
+/// length + payload). Fails on messages the peer could not decode, e.g.
+/// an empty or oversized session name. The fault-injection layer
+/// ([`ImpairedLink`](super::ImpairedLink)) uses this to hold/reorder
+/// whole frames.
+pub fn encode_frame(msg: &Msg) -> Result<Vec<u8>> {
+    msg.validate()?;
+    let payload = encode_payload(msg);
+    let mut buf = Vec::with_capacity(payload.len() + 9);
+    buf.extend_from_slice(&MAGIC);
+    buf.push(msg.type_byte());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    Ok(buf)
+}
+
 /// Write one framed message. Fails (without writing) on messages the
 /// peer could not decode, e.g. an empty or oversized session name.
 pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
-    msg.validate()?;
-    let payload = encode_payload(msg);
-    w.write_all(&MAGIC)?;
-    w.write_all(&[msg.type_byte()])?;
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&payload)?;
+    let frame = encode_frame(msg)?;
+    w.write_all(&frame)?;
     w.flush()?;
     Ok(())
 }
@@ -391,6 +462,7 @@ mod tests {
             device_id: 1,
             tensor: HostTensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap(),
             session: "intersection-7".into(),
+            capture_micros: 1_700_000_000_000_001,
         });
         roundtrip(Msg::FeaturesQ {
             frame_id: 43,
@@ -402,6 +474,7 @@ mod tests {
                 data: vec![0, 127, 200, 255],
             },
             session: DEFAULT_SESSION.into(),
+            capture_micros: 0,
         });
         roundtrip(Msg::Result {
             frame_id: 7,
@@ -411,8 +484,14 @@ mod tests {
                 score: 0.9,
                 class_id: 1,
             }],
+            capture_micros: 99,
         });
-        roundtrip(Msg::Result { frame_id: 8, server_micros: 0, detections: vec![] });
+        roundtrip(Msg::Result {
+            frame_id: 8,
+            server_micros: 0,
+            detections: vec![],
+            capture_micros: 0,
+        });
     }
 
     #[test]
@@ -462,7 +541,13 @@ mod tests {
         let buf = legacy_frame(2, &payload);
         assert_eq!(
             read_msg(&mut buf.as_slice()).unwrap(),
-            Msg::Features { frame_id: 9, device_id: 1, tensor, session: DEFAULT_SESSION.into() }
+            Msg::Features {
+                frame_id: 9,
+                device_id: 1,
+                tensor,
+                session: DEFAULT_SESSION.into(),
+                capture_micros: 0,
+            }
         );
 
         // FeaturesQ: quant tensor with no trailing session.
@@ -483,7 +568,66 @@ mod tests {
         let buf = legacy_frame(6, &payload);
         assert_eq!(
             read_msg(&mut buf.as_slice()).unwrap(),
-            Msg::FeaturesQ { frame_id: 11, device_id: 0, tensor: q, session: DEFAULT_SESSION.into() }
+            Msg::FeaturesQ {
+                frame_id: 11,
+                device_id: 0,
+                tensor: q,
+                session: DEFAULT_SESSION.into(),
+                capture_micros: 0,
+            }
+        );
+    }
+
+    #[test]
+    fn unstamped_result_is_byte_identical_to_legacy_form() {
+        // The server->subscriber direction must stay decodable by old
+        // subscribers when no device stamped the frame: a zero stamp is
+        // omitted on encode, leaving the pre-stamp byte layout (whose
+        // strict done() check rejects unknown trailing bytes).
+        let msg = Msg::Result {
+            frame_id: 5,
+            server_micros: 77,
+            detections: vec![],
+            capture_micros: 0,
+        };
+        let payload = encode_payload(&msg);
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(&5u64.to_le_bytes());
+        legacy.extend_from_slice(&77u64.to_le_bytes());
+        legacy.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(payload, legacy, "zero stamp must not add trailing bytes");
+
+        // A stamped Result round-trips with the stamp intact.
+        let stamped = Msg::Result {
+            frame_id: 5,
+            server_micros: 77,
+            detections: vec![],
+            capture_micros: 123_456,
+        };
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &stamped).unwrap();
+        assert_eq!(read_msg(&mut buf.as_slice()).unwrap(), stamped);
+    }
+
+    #[test]
+    fn session_without_capture_stamp_decodes_to_zero() {
+        // A PR1/PR2-era payload: session present, no trailing timestamp.
+        let tensor = HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&3u64.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        put_tensor(&mut payload, &tensor);
+        put_session(&mut payload, "mid");
+        let buf = legacy_frame(2, &payload);
+        assert_eq!(
+            read_msg(&mut buf.as_slice()).unwrap(),
+            Msg::Features {
+                frame_id: 3,
+                device_id: 0,
+                tensor,
+                session: "mid".into(),
+                capture_micros: 0,
+            }
         );
     }
 
@@ -495,7 +639,13 @@ mod tests {
         let t = HostTensor::new(vec![8, 8, 8], data.clone()).unwrap();
         let q = crate::net::quantize(&t);
         let step = q.scale;
-        let msg = Msg::FeaturesQ { frame_id: 1, device_id: 0, tensor: q, session: "x".into() };
+        let msg = Msg::FeaturesQ {
+            frame_id: 1,
+            device_id: 0,
+            tensor: q,
+            session: "x".into(),
+            capture_micros: 7,
+        };
         let mut buf = Vec::new();
         write_msg(&mut buf, &msg).unwrap();
         let back = match read_msg(&mut buf.as_slice()).unwrap() {
@@ -576,6 +726,7 @@ mod tests {
             device_id: 0,
             tensor: HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
             session: "slow".into(),
+            capture_micros: 0,
         };
         let msg2 = Msg::Bye;
         let mut data = Vec::new();
@@ -637,6 +788,7 @@ mod tests {
                 device_id: 0,
                 tensor: HostTensor::zeros(&[4]),
                 session: DEFAULT_SESSION.into(),
+                capture_micros: 0,
             },
         )
         .unwrap();
@@ -664,6 +816,7 @@ mod tests {
             device_id: 0,
             tensor: t,
             session: DEFAULT_SESSION.into(),
+            capture_micros: 0,
         });
         assert!(payload.len() > (1 << 20) && payload.len() < (1 << 20) + 64);
     }
@@ -676,6 +829,7 @@ mod tests {
             device_id: 0,
             tensor: t.clone(),
             session: DEFAULT_SESSION.into(),
+            capture_micros: 0,
         })
         .len();
         let q = crate::net::quantize(&t);
@@ -684,6 +838,7 @@ mod tests {
             device_id: 0,
             tensor: q,
             session: DEFAULT_SESSION.into(),
+            capture_micros: 0,
         })
         .len();
         assert!(small * 4 < full + 128, "quant {small} vs full {full}");

@@ -23,14 +23,23 @@ impl QuantTensor {
 }
 
 /// Quantize a feature tensor to u8 with per-tensor affine mapping.
+///
+/// Non-finite inputs must not poison the mapping for the rest of the
+/// tensor: the range is computed over *finite* values only (one stray
+/// ±inf used to collapse the whole tensor onto the constant-encode
+/// path), NaN encodes as the min code, and ±inf saturate to the range
+/// ends.
 pub fn quantize(t: &HostTensor) -> QuantTensor {
     let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
     for &v in &t.data {
-        lo = lo.min(v);
-        hi = hi.max(v);
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
     }
     if !lo.is_finite() || !hi.is_finite() || lo == hi {
-        // constant / empty tensor: scale 0 encodes "all = min"
+        // constant / empty / all-non-finite tensor: scale 0 encodes
+        // "all = min"
         return QuantTensor {
             shape: t.shape.clone(),
             min: if lo.is_finite() { lo } else { 0.0 },
@@ -43,7 +52,14 @@ pub fn quantize(t: &HostTensor) -> QuantTensor {
     let data = t
         .data
         .iter()
-        .map(|&v| (((v - lo) * inv) + 0.5).clamp(0.0, 255.0) as u8)
+        .map(|&v| {
+            if v.is_nan() {
+                0
+            } else {
+                // ±inf saturate through the clamp to code 0 / 255.
+                (((v - lo) * inv) + 0.5).clamp(0.0, 255.0) as u8
+            }
+        })
         .collect();
     QuantTensor { shape: t.shape.clone(), min: lo, scale, data }
 }
@@ -95,6 +111,54 @@ mod tests {
         assert_eq!(q.scale, 0.0);
         let back = dequantize(&q).unwrap();
         assert!(back.data.iter().all(|&v| (v - 2.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn nan_inputs_encode_as_min_without_corrupting_the_range() {
+        // Regression: NaN/inf feature values used to be able to poison
+        // the min/max range; finite values must quantize exactly as if
+        // the NaN were absent, and the NaN slot must decode to min.
+        let clean = vec![0.0f32, 1.0, 2.0, 4.0];
+        let dirty = vec![0.0f32, 1.0, f32::NAN, 2.0, 4.0];
+        let q_clean = quantize(&HostTensor::new(vec![4], clean.clone()).unwrap());
+        let q_dirty = quantize(&HostTensor::new(vec![5], dirty).unwrap());
+        assert_eq!(q_dirty.min, q_clean.min);
+        assert_eq!(q_dirty.scale, q_clean.scale);
+        // Same codes for the shared finite values.
+        assert_eq!(q_dirty.data[0], q_clean.data[0]);
+        assert_eq!(q_dirty.data[1], q_clean.data[1]);
+        assert_eq!(q_dirty.data[3], q_clean.data[2]);
+        assert_eq!(q_dirty.data[4], q_clean.data[3]);
+        // NaN slot carries the min code and decodes to min.
+        assert_eq!(q_dirty.data[2], 0);
+        let back = dequantize(&q_dirty).unwrap();
+        assert_eq!(back.data[2], q_dirty.min);
+    }
+
+    #[test]
+    fn infinity_saturates_instead_of_collapsing_range() {
+        // Regression: one +inf made hi non-finite and collapsed the whole
+        // tensor to the constant-encode path (everything decoded as min).
+        let t = HostTensor::new(vec![4], vec![0.0, f32::INFINITY, 1.0, f32::NEG_INFINITY])
+            .unwrap();
+        let q = quantize(&t);
+        assert!(q.scale > 0.0, "finite values must still define a range");
+        assert_eq!(q.data[1], 255, "+inf saturates high");
+        assert_eq!(q.data[3], 0, "-inf saturates low");
+        let back = dequantize(&q).unwrap();
+        assert!((back.data[0] - 0.0).abs() <= q.scale * 0.5 + 1e-6);
+        assert!((back.data[2] - 1.0).abs() <= q.scale * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn all_nan_tensor_encodes_as_constant_zero() {
+        let t = HostTensor::new(vec![3], vec![f32::NAN; 3]).unwrap();
+        let q = quantize(&t);
+        assert_eq!(q.scale, 0.0);
+        assert_eq!(q.min, 0.0);
+        assert!(q.data.iter().all(|&b| b == 0));
+        let back = dequantize(&q).unwrap();
+        assert!(back.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -51,8 +51,13 @@ impl<W: Write> Write for ShapedWriter<W> {
         }
         let written = self.inner.write(&buf[..n])?;
         let cost = Duration::from_secs_f64(written as f64 / self.bytes_per_sec);
-        let base = self.next_free.max(Instant::now() - Duration::from_millis(5));
-        self.next_free = base + cost;
+        // Cap accumulated pacing credit at 5 ms so an idle link doesn't
+        // bank an unshaped burst. `checked_sub` because early in process
+        // life `Instant::now()` can be within 5 ms of the clock's origin
+        // on some platforms, and bare subtraction would panic.
+        let after = Instant::now();
+        let floor = after.checked_sub(Duration::from_millis(5)).unwrap_or(after);
+        self.next_free = self.next_free.max(floor) + cost;
         Ok(written)
     }
 
@@ -86,6 +91,23 @@ mod tests {
         let t0 = Instant::now();
         w.write_all(&data).unwrap();
         assert!(t0.elapsed().as_secs_f64() < 0.5);
+    }
+
+    #[test]
+    fn first_write_does_not_panic_and_idle_gap_banks_no_credit() {
+        // Regression for the Instant-underflow panic: the very first
+        // write computes `now - 5ms`, which must go through checked_sub.
+        let mut w = ShapedWriter::new(Vec::new(), 8e6); // 1 MB/s
+        w.write_all(&[0u8; 512]).unwrap();
+
+        // Pacing-debt cap behavior must survive the fix: a long idle gap
+        // banks at most ~5 ms of credit, so a burst after it still paces
+        // at the configured rate.
+        std::thread::sleep(Duration::from_millis(60));
+        let t0 = Instant::now();
+        w.write_all(&vec![0u8; 100 * 1024]).unwrap(); // ~0.1 s at 1 MB/s
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(secs > 0.06, "idle gap must not grant pacing credit, took {secs}s");
     }
 
     #[test]

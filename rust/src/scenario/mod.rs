@@ -1,0 +1,1113 @@
+//! Fleet-scale scenario harness (`scmii scenario`).
+//!
+//! The paper's headline numbers — 2.19× end-to-end speed-up, 71.6%
+//! device-time reduction — are properties of *many devices feeding one
+//! server*, not of a single synchronous worker. This module makes that
+//! workload declarative: a [`ScenarioSpec`] describes N devices × M
+//! sessions (intersections), per-link bandwidth and fault injection
+//! (loss / delay / reorder via [`ImpairedLink`](crate::net::ImpairedLink)),
+//! quantization on or off, device dropout (a worker that stops emitting
+//! mid-run) and late join (a worker that connects mid-run at the fleet's
+//! current frame index). [`run_scenario`] then:
+//!
+//! 1. spawns a real [`run_server_until`] on localhost TCP,
+//! 2. spawns the in-process device fleet ([`run_device`], pipelined),
+//! 3. subscribes one collector per session,
+//! 4. drains, settles past the sync deadline, stops the server, and
+//! 5. reports per-session end-to-end latency (device capture → decoded
+//!    detections at the `ResultSink`, via the `e2e` metric series) plus
+//!    the synchronizer's loss accounting — written as `BENCH_e2e.json`.
+//!
+//! Scenarios run with **zero artifacts on disk**: when `model_meta.json`
+//! is absent a reduced synthetic meta is materialized in a temp dir and
+//! the native backend synthesizes weights, which is what lets CI run a
+//! smoke scenario as a hard gate.
+
+use crate::cli::Args;
+use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
+use crate::coordinator::device::{run_device, DeviceConfig, DeviceReport};
+use crate::coordinator::scheduler::LossPolicy;
+use crate::coordinator::server::{run_server_until, ServerConfig};
+use crate::coordinator::session::SessionConfig;
+use crate::net::{read_msg, write_msg, ImpairConfig, Msg, DEFAULT_SESSION};
+use crate::runtime::BackendKind;
+use crate::utils::json::Json;
+use crate::utils::rng::Pcg64;
+use crate::utils::stats;
+use crate::voxel::Point;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One hosted session (intersection) in a scenario.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub name: String,
+    pub variant: IntegrationKind,
+    pub deadline: Duration,
+    pub policy: LossPolicy,
+}
+
+/// One device worker in a scenario.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    /// Session this worker feeds.
+    pub session: String,
+    /// Device slot (0..meta.num_devices) within the session.
+    pub device_id: usize,
+    /// Frames this worker emits. Fewer than its siblings = dropout
+    /// mid-run (the synchronizer sees the device go dark).
+    pub frames: usize,
+    /// First frame id emitted (late join: start where the fleet is).
+    pub start_frame: u64,
+    /// Wait before connecting (late join wall-clock offset).
+    pub start_delay: Duration,
+    /// Frame rate; 0 = unpaced (throughput mode).
+    pub hz: f64,
+    /// Uplink line rate in bits/s; `None` = unshaped.
+    pub bandwidth_bps: Option<f64>,
+    /// Ship u8-quantized intermediate outputs.
+    pub quantize: bool,
+    /// Uplink fault injection; `None` = clean link.
+    pub impair: Option<ImpairConfig>,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec {
+            session: DEFAULT_SESSION.into(),
+            device_id: 0,
+            frames: 8,
+            start_frame: 0,
+            start_delay: Duration::ZERO,
+            hz: 20.0,
+            bandwidth_bps: Some(300e6),
+            quantize: false,
+            impair: None,
+        }
+    }
+}
+
+/// A declarative fleet scenario: sessions hosted by one server, devices
+/// feeding them, and how the links between misbehave.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub seed: u64,
+    /// TCP port; 0 = pick a free one.
+    pub port: u16,
+    pub backend: BackendKind,
+    pub backend_threads: usize,
+    pub sessions: Vec<SessionSpec>,
+    pub devices: Vec<DeviceSpec>,
+    /// Grace period after the fleet drains before stopping the server
+    /// (lets deadline-resolved frames flush). Zero = longest session
+    /// deadline + 500 ms.
+    pub settle: Duration,
+}
+
+impl ScenarioSpec {
+    /// Names `ScenarioSpec::builtin` accepts.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["ci-smoke", "smoke", "churn"]
+    }
+
+    /// A named built-in scenario.
+    ///
+    /// - `ci-smoke` — the CI hard gate: 2 sessions × 2 devices, 6 frames,
+    ///   deterministic loss on one uplink per session. Runs in ~2 s with
+    ///   zero artifacts.
+    /// - `smoke` — the acceptance workload: 4 device workers across 2
+    ///   sessions (ZeroFill and Drop), deterministic loss, quantization
+    ///   on one uplink, delay+jitter on another.
+    /// - `churn` — device dropout mid-run and a late-joining device.
+    pub fn builtin(name: &str) -> Result<ScenarioSpec> {
+        let base = ScenarioSpec {
+            name: name.to_string(),
+            seed: 20260729,
+            port: 0,
+            backend: BackendKind::default_kind(),
+            backend_threads: 2,
+            sessions: Vec::new(),
+            devices: Vec::new(),
+            settle: Duration::ZERO,
+        };
+        let session = |n: &str, v, d: u64, p| SessionSpec {
+            name: n.to_string(),
+            variant: v,
+            deadline: Duration::from_millis(d),
+            policy: p,
+        };
+        let dev = |s: &str, id, frames| DeviceSpec {
+            session: s.to_string(),
+            device_id: id,
+            frames,
+            ..DeviceSpec::default()
+        };
+        match name {
+            "ci-smoke" => Ok(ScenarioSpec {
+                sessions: vec![
+                    session("north", IntegrationKind::Max, 150, LossPolicy::ZeroFill),
+                    session("south", IntegrationKind::Max, 150, LossPolicy::Drop),
+                ],
+                devices: vec![
+                    DeviceSpec { hz: 40.0, ..dev("north", 0, 6) },
+                    DeviceSpec {
+                        hz: 40.0,
+                        impair: Some(ImpairConfig { drop_every: 3, ..Default::default() }),
+                        ..dev("north", 1, 6)
+                    },
+                    DeviceSpec { hz: 40.0, ..dev("south", 0, 6) },
+                    DeviceSpec {
+                        hz: 40.0,
+                        impair: Some(ImpairConfig { drop_every: 3, ..Default::default() }),
+                        ..dev("south", 1, 6)
+                    },
+                ],
+                ..base
+            }),
+            "smoke" => Ok(ScenarioSpec {
+                sessions: vec![
+                    session("north", IntegrationKind::Max, 250, LossPolicy::ZeroFill),
+                    session("south", IntegrationKind::ConvK1, 250, LossPolicy::Drop),
+                ],
+                devices: vec![
+                    dev("north", 0, 16),
+                    DeviceSpec {
+                        quantize: true,
+                        impair: Some(ImpairConfig { drop_every: 3, ..Default::default() }),
+                        ..dev("north", 1, 16)
+                    },
+                    dev("south", 0, 16),
+                    DeviceSpec {
+                        impair: Some(ImpairConfig {
+                            drop_every: 4,
+                            delay: Duration::from_millis(2),
+                            jitter: Duration::from_millis(3),
+                            ..Default::default()
+                        }),
+                        ..dev("south", 1, 16)
+                    },
+                ],
+                ..base
+            }),
+            "churn" => Ok(ScenarioSpec {
+                sessions: vec![
+                    session("dropout", IntegrationKind::Max, 200, LossPolicy::ZeroFill),
+                    session("latejoin", IntegrationKind::Max, 200, LossPolicy::ZeroFill),
+                ],
+                devices: vec![
+                    // Device 1 goes dark after 8 of 24 frames.
+                    dev("dropout", 0, 24),
+                    dev("dropout", 1, 8),
+                    // Device 1 joins 600 ms in, at the fleet's frame index.
+                    dev("latejoin", 0, 24),
+                    DeviceSpec {
+                        start_frame: 12,
+                        start_delay: Duration::from_millis(600),
+                        ..dev("latejoin", 1, 12)
+                    },
+                ],
+                ..base
+            }),
+            other => anyhow::bail!(
+                "unknown scenario {other:?} (built-ins: {})",
+                Self::builtin_names().join(", ")
+            ),
+        }
+    }
+
+    /// Parse a scenario from its JSON form (`scmii scenario --spec f.json`).
+    ///
+    /// ```json
+    /// {
+    ///   "name": "mine", "seed": 7, "port": 0,
+    ///   "backend": "native", "backend_threads": 2, "settle_ms": 0,
+    ///   "sessions": [
+    ///     {"name": "north", "variant": "max", "deadline_ms": 250, "policy": "zero-fill"}
+    ///   ],
+    ///   "devices": [
+    ///     {"session": "north", "device": 0, "frames": 16, "hz": 20,
+    ///      "bandwidth_mbps": 300, "quantize": false,
+    ///      "start_frame": 0, "start_delay_ms": 0,
+    ///      "impair": {"loss": 0.1, "drop_every": 0, "delay_ms": 0,
+    ///                 "jitter_ms": 0, "reorder": 0, "seed": 1}}
+    ///   ]
+    /// }
+    /// ```
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        // Reject typoed keys — a misspelled "drop_evry" must not parse
+        // as a clean link and produce a plausible-looking report (same
+        // stance as Args::check_known on the CLI).
+        let check_keys = |o: &Json, allowed: &[&str], what: &str| -> Result<()> {
+            if let Json::Obj(m) = o {
+                for k in m.keys() {
+                    anyhow::ensure!(
+                        allowed.contains(&k.as_str()),
+                        "unknown key {k:?} in {what} (allowed: {})",
+                        allowed.join(", ")
+                    );
+                }
+            }
+            Ok(())
+        };
+        let f64_or = |o: &Json, key: &str, d: f64| -> Result<f64> {
+            match o.get(key) {
+                Some(v) => v.as_f64(),
+                None => Ok(d),
+            }
+        };
+        // Integers go through as_i64 (rejects fractions) plus a sign
+        // check, so "drop_every": -1 errors instead of casting to 0.
+        let u64_or = |o: &Json, key: &str, d: u64| -> Result<u64> {
+            match o.get(key) {
+                Some(v) => {
+                    let n = v.as_i64()?;
+                    anyhow::ensure!(n >= 0, "{key} must be non-negative, got {n}");
+                    Ok(n as u64)
+                }
+                None => Ok(d),
+            }
+        };
+        let bool_or = |o: &Json, key: &str, d: bool| -> Result<bool> {
+            match o.get(key) {
+                Some(v) => v.as_bool(),
+                None => Ok(d),
+            }
+        };
+
+        check_keys(
+            j,
+            &["name", "seed", "port", "backend", "backend_threads", "settle_ms", "sessions", "devices"],
+            "scenario",
+        )?;
+        let mut sessions = Vec::new();
+        for s in j.req("sessions")?.as_arr()? {
+            check_keys(s, &["name", "variant", "deadline_ms", "policy"], "session")?;
+            sessions.push(SessionSpec {
+                name: s.req("name")?.as_str()?.to_string(),
+                variant: IntegrationKind::parse(match s.get("variant") {
+                    Some(v) => v.as_str()?,
+                    None => "max",
+                })?,
+                deadline: Duration::from_millis(u64_or(s, "deadline_ms", 200)?),
+                policy: LossPolicy::parse(match s.get("policy") {
+                    Some(v) => v.as_str()?,
+                    None => "zero-fill",
+                })?,
+            });
+        }
+        let mut devices = Vec::new();
+        for d in j.req("devices")?.as_arr()? {
+            check_keys(
+                d,
+                &[
+                    "session",
+                    "device",
+                    "frames",
+                    "start_frame",
+                    "start_delay_ms",
+                    "hz",
+                    "bandwidth_mbps",
+                    "quantize",
+                    "impair",
+                ],
+                "device",
+            )?;
+            let impair = match d.get("impair") {
+                Some(i) => {
+                    check_keys(
+                        i,
+                        &["loss", "drop_every", "delay_ms", "jitter_ms", "reorder", "seed"],
+                        "impair",
+                    )?;
+                    let cfg = ImpairConfig {
+                        loss: f64_or(i, "loss", 0.0)?,
+                        drop_every: u64_or(i, "drop_every", 0)?,
+                        delay: Duration::from_millis(u64_or(i, "delay_ms", 0)?),
+                        jitter: Duration::from_millis(u64_or(i, "jitter_ms", 0)?),
+                        reorder: f64_or(i, "reorder", 0.0)?,
+                        seed: u64_or(i, "seed", 1)?,
+                    };
+                    Some(cfg)
+                }
+                None => None,
+            };
+            let bw_mbps = f64_or(d, "bandwidth_mbps", 300.0)?;
+            devices.push(DeviceSpec {
+                session: d.req("session")?.as_str()?.to_string(),
+                device_id: d.req("device")?.as_usize()?,
+                frames: u64_or(d, "frames", 8)? as usize,
+                start_frame: u64_or(d, "start_frame", 0)?,
+                start_delay: Duration::from_millis(u64_or(d, "start_delay_ms", 0)?),
+                hz: f64_or(d, "hz", 20.0)?,
+                bandwidth_bps: if bw_mbps > 0.0 { Some(bw_mbps * 1e6) } else { None },
+                quantize: bool_or(d, "quantize", false)?,
+                impair,
+            });
+        }
+        Ok(ScenarioSpec {
+            name: j.req("name")?.as_str()?.to_string(),
+            seed: u64_or(j, "seed", 20260729)?,
+            port: u64_or(j, "port", 0)? as u16,
+            backend: BackendKind::parse(match j.get("backend") {
+                Some(v) => v.as_str()?,
+                None => BackendKind::default_kind().name(),
+            })?,
+            backend_threads: u64_or(j, "backend_threads", 2)? as usize,
+            sessions,
+            devices,
+            settle: Duration::from_millis(u64_or(j, "settle_ms", 0)?),
+        })
+    }
+
+    fn validate(&self, meta: &ModelMeta) -> Result<()> {
+        anyhow::ensure!(!self.sessions.is_empty(), "scenario has no sessions");
+        anyhow::ensure!(!self.devices.is_empty(), "scenario has no devices");
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.sessions {
+            anyhow::ensure!(seen.insert(&s.name), "duplicate session {:?}", s.name);
+        }
+        let mut slots = std::collections::BTreeSet::new();
+        for d in &self.devices {
+            anyhow::ensure!(
+                self.sessions.iter().any(|s| s.name == d.session),
+                "device {} addresses unknown session {:?}",
+                d.device_id,
+                d.session
+            );
+            anyhow::ensure!(
+                slots.insert((d.session.clone(), d.device_id)),
+                "duplicate device slot {}/{} — two workers would fight over one FrameSync slot",
+                d.session,
+                d.device_id
+            );
+            anyhow::ensure!(
+                d.device_id < meta.num_devices,
+                "device id {} out of range: the rig has {} devices",
+                d.device_id,
+                meta.num_devices
+            );
+            anyhow::ensure!(d.frames > 0, "device {} emits no frames", d.device_id);
+            if let Some(impair) = &d.impair {
+                impair.validate().with_context(|| {
+                    format!("device {}/{}: bad impairment", d.session, d.device_id)
+                })?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-session outcome of a scenario run.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub name: String,
+    pub variant: IntegrationKind,
+    pub policy: LossPolicy,
+    pub frames_done: u64,
+    /// Results the TCP subscriber actually received.
+    pub results_received: u64,
+    pub sync_complete: u64,
+    pub sync_timed_out: u64,
+    pub sync_dropped: u64,
+    pub sync_late: u64,
+    pub sync_dup: u64,
+    /// Per-frame end-to-end latency (device capture → decoded
+    /// detections at the ResultSink), seconds.
+    pub e2e_secs: Vec<f64>,
+    /// Per-frame end-to-end latency as the TCP subscriber sees it
+    /// (device capture → `Result` delivered over the wire), seconds.
+    /// A superset of `e2e_secs` per frame: adds encode + delivery.
+    pub e2e_wire_secs: Vec<f64>,
+}
+
+/// Per-device outcome of a scenario run.
+#[derive(Clone, Debug)]
+pub struct DeviceRow {
+    pub session: String,
+    pub device_id: usize,
+    pub frames_scheduled: usize,
+    pub report: DeviceReport,
+}
+
+/// The full scenario outcome, serialized as `BENCH_e2e.json`.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub backend: String,
+    pub sessions: Vec<SessionReport>,
+    pub devices: Vec<DeviceRow>,
+}
+
+fn ms_summary(xs_secs: &[f64]) -> Json {
+    let ms: Vec<f64> = xs_secs.iter().map(|s| s * 1e3).collect();
+    let (_, max) = stats::min_max(&ms);
+    let mut j = Json::obj();
+    j.set("n", Json::Num(ms.len() as f64))
+        .set("mean", Json::Num(stats::mean(&ms)))
+        .set("p50", Json::Num(stats::percentile(&ms, 50.0)))
+        .set("p95", Json::Num(stats::percentile(&ms, 95.0)))
+        .set("max", Json::Num(if ms.is_empty() { 0.0 } else { max }));
+    j
+}
+
+impl ScenarioReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("scenario", Json::Str(self.scenario.clone()))
+            .set("backend", Json::Str(self.backend.clone()));
+        j.set(
+            "sessions",
+            Json::Arr(
+                self.sessions
+                    .iter()
+                    .map(|s| {
+                        let mut o = Json::obj();
+                        o.set("name", Json::Str(s.name.clone()))
+                            .set("variant", Json::Str(s.variant.name().into()))
+                            .set("policy", Json::Str(s.policy.name().into()))
+                            .set("frames_done", Json::Num(s.frames_done as f64))
+                            .set("results_received", Json::Num(s.results_received as f64))
+                            .set("sync_complete", Json::Num(s.sync_complete as f64))
+                            .set("sync_timed_out", Json::Num(s.sync_timed_out as f64))
+                            .set("sync_dropped", Json::Num(s.sync_dropped as f64))
+                            .set("sync_late", Json::Num(s.sync_late as f64))
+                            .set("sync_dup", Json::Num(s.sync_dup as f64))
+                            .set("e2e_ms", ms_summary(&s.e2e_secs))
+                            .set("e2e_wire_ms", ms_summary(&s.e2e_wire_secs))
+                            .set(
+                                "e2e_frames_ms",
+                                Json::Arr(
+                                    s.e2e_secs.iter().map(|v| Json::Num(v * 1e3)).collect(),
+                                ),
+                            );
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j.set(
+            "devices",
+            Json::Arr(
+                self.devices
+                    .iter()
+                    .map(|d| {
+                        let heads: Vec<f64> =
+                            d.report.frame_times.iter().map(|t| t.0).collect();
+                        let txs: Vec<f64> = d.report.frame_times.iter().map(|t| t.1).collect();
+                        let mut o = Json::obj();
+                        o.set("session", Json::Str(d.session.clone()))
+                            .set("device", Json::Num(d.device_id as f64))
+                            .set("frames_scheduled", Json::Num(d.frames_scheduled as f64))
+                            .set("frames_sent", Json::Num(d.report.frame_times.len() as f64))
+                            .set("head_ms", ms_summary(&heads))
+                            .set("tx_ms", ms_summary(&txs))
+                            .set("tx_dropped", Json::Num(d.report.impair.dropped as f64))
+                            .set("tx_delayed", Json::Num(d.report.impair.delayed as f64))
+                            .set("tx_reordered", Json::Num(d.report.impair.reordered as f64));
+                        o
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Human-readable run summary for the CLI.
+    pub fn summary(&self) -> String {
+        let mut out = format!("scenario {:?} on backend {}\n", self.scenario, self.backend);
+        for s in &self.sessions {
+            let ms: Vec<f64> = s.e2e_secs.iter().map(|v| v * 1e3).collect();
+            let wire_ms: Vec<f64> = s.e2e_wire_secs.iter().map(|v| v * 1e3).collect();
+            out.push_str(&format!(
+                "  session {:<12} [{:>9}] frames={:<4} results={:<4} \
+                 e2e p50={:.1}ms p95={:.1}ms (wire p50={:.1}ms) | \
+                 sync: {} complete, {} timed out, {} dropped\n",
+                s.name,
+                s.policy.name(),
+                s.frames_done,
+                s.results_received,
+                stats::percentile(&ms, 50.0),
+                stats::percentile(&ms, 95.0),
+                stats::percentile(&wire_ms, 50.0),
+                s.sync_complete,
+                s.sync_timed_out,
+                s.sync_dropped,
+            ));
+        }
+        for d in &self.devices {
+            let heads: Vec<f64> = d.report.frame_times.iter().map(|t| t.0 * 1e3).collect();
+            let txs: Vec<f64> = d.report.frame_times.iter().map(|t| t.1 * 1e3).collect();
+            out.push_str(&format!(
+                "  device {}/{}: {} frames, head p50 {:.1}ms, tx p50 {:.1}ms, \
+                 impair drop/delay/reorder {}/{}/{}\n",
+                d.session,
+                d.device_id,
+                d.report.frame_times.len(),
+                stats::percentile(&heads, 50.0),
+                stats::percentile(&txs, 50.0),
+                d.report.impair.dropped,
+                d.report.impair.delayed,
+                d.report.impair.reordered,
+            ));
+        }
+        out
+    }
+}
+
+/// Reduced synthetic model geometry used when no artifacts exist: same
+/// structure as production at 1/4 resolution, fast enough for CI.
+fn scenario_test_meta() -> ModelMeta {
+    let mut meta = ModelMeta::test_default();
+    meta.grid.dims = [16, 16, 4];
+    meta.grid.max_points = 256;
+    meta.bev_dims = [8, 8];
+    meta
+}
+
+/// Artifacts present → use them; otherwise materialize a temp workspace
+/// holding a reduced `model_meta.json` (the native backend synthesizes
+/// weights, so that is all a scenario needs).
+fn materialize_paths(paths: &Paths, scenario: &str) -> Result<Paths> {
+    if artifacts_present(paths) {
+        return Ok(paths.clone());
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("scmii_scenario_{}_{}", scenario, std::process::id()));
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("create scenario workspace {}", dir.display()))?;
+    let out = Paths { artifacts: dir.clone(), data: dir };
+    crate::utils::json::write_file(&out.model_meta(), &scenario_test_meta().to_json())?;
+    log::info!(
+        "scenario: no artifacts under {}; materialized synthetic meta in {}",
+        paths.artifacts.display(),
+        out.artifacts.display()
+    );
+    Ok(out)
+}
+
+/// Deterministic synthetic clouds for one device (points uniform in the
+/// detection grid). Content only needs to be valid head input — the
+/// scenario measures the serving path, not detection quality.
+fn synth_clouds(meta: &ModelMeta, seed: u64, n: usize) -> Vec<Vec<Point>> {
+    let g = &meta.grid;
+    let mut rng = Pcg64::new(seed);
+    let per_frame = g.max_points.min(256);
+    (0..n)
+        .map(|_| {
+            (0..per_frame)
+                .map(|_| {
+                    Point::new(
+                        rng.range(g.range_min[0], g.range_max[0]) as f32,
+                        rng.range(g.range_min[1], g.range_max[1]) as f32,
+                        rng.range(g.range_min[2], g.range_max[2]) as f32,
+                        rng.uniform_f32(),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn free_port() -> Result<u16> {
+    let l = std::net::TcpListener::bind(("127.0.0.1", 0)).context("probe for a free port")?;
+    Ok(l.local_addr()?.port())
+}
+
+fn wait_for_port(port: u16, timeout: Duration) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(_) => return Ok(()),
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("server on port {port} never came up"));
+            }
+        }
+    }
+}
+
+/// Execute a scenario: server + collectors + device fleet, then gather
+/// the report. Blocking; wall clock ≈ longest device schedule + settle.
+pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport> {
+    let synthetic = !artifacts_present(paths);
+    let paths = materialize_paths(paths, &spec.name)?;
+    let meta = ModelMeta::load(&paths.model_meta())?;
+    let mut spec = spec.clone();
+    if synthetic && spec.backend == BackendKind::Xla {
+        // The XLA backend executes HLO artifacts, which a synthetic
+        // workspace does not have — honor the zero-artifact contract by
+        // falling back to the native backend when it is compiled in.
+        #[cfg(feature = "native")]
+        {
+            log::info!("scenario: no HLO artifacts for the XLA backend; using native instead");
+            spec.backend = BackendKind::Native;
+        }
+        #[cfg(not(feature = "native"))]
+        {
+            anyhow::bail!(
+                "scenario {:?} needs artifacts for the XLA backend, and this build \
+                 has no native fallback (`--features native`)",
+                spec.name
+            );
+        }
+    }
+    let spec = &spec;
+    spec.validate(&meta)?;
+
+    let port = if spec.port == 0 { free_port()? } else { spec.port };
+    let mut server_cfg = ServerConfig::default();
+    server_cfg.port = port;
+    server_cfg.backend = spec.backend;
+    server_cfg.backend_threads = spec.backend_threads;
+    server_cfg.max_frames = None; // externally stopped
+    for s in &spec.sessions {
+        let sc = SessionConfig::new(s.variant).deadline(s.deadline).policy(s.policy);
+        if s.name == DEFAULT_SESSION {
+            // The registry always hosts "default"; configure it in place
+            // instead of colliding with it.
+            server_cfg.variant = s.variant;
+            server_cfg.deadline = s.deadline;
+            server_cfg.policy = s.policy;
+        } else {
+            server_cfg.extra_sessions.push((s.name.clone(), sc));
+        }
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let paths = paths.clone();
+        let cfg = server_cfg.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || run_server_until(&paths, &cfg, stop))
+    };
+    if let Err(wait_err) = wait_for_port(port, Duration::from_secs(20)) {
+        stop.store(true, Ordering::SeqCst);
+        return match server.join() {
+            Ok(Err(e)) => Err(e.context("scenario server failed to start")),
+            _ => Err(wait_err),
+        };
+    }
+
+    // One result collector per session: records what a subscriber on the
+    // same clock domain actually receives. The read loop must not rely
+    // on EOF to terminate — the server's `TcpSink` keeps a clone of the
+    // subscriber socket alive inside the registry we hold — so it polls
+    // with a read timeout and exits once the stop flag is set.
+    let mut collectors = Vec::new();
+    for s in &spec.sessions {
+        let stream = TcpStream::connect(("127.0.0.1", port))
+            .with_context(|| format!("collector connect for session {:?}", s.name))?;
+        stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+        let mut w = stream.try_clone()?;
+        write_msg(&mut w, &Msg::Subscribe { session: s.name.clone() })?;
+        let name = s.name.clone();
+        let stop_flag = Arc::clone(&stop);
+        collectors.push((
+            name,
+            std::thread::spawn(move || {
+                let mut reader = std::io::BufReader::new(stream);
+                let mut results: Vec<(u64, usize, u64, u64)> = Vec::new();
+                loop {
+                    match read_msg(&mut reader) {
+                        Ok(Msg::Result { frame_id, detections, capture_micros, .. }) => {
+                            results.push((
+                                frame_id,
+                                detections.len(),
+                                capture_micros,
+                                crate::utils::unix_micros(),
+                            ));
+                        }
+                        Ok(Msg::Bye) => break,
+                        Ok(_) => {}
+                        Err(e) => {
+                            let timed_out =
+                                e.downcast_ref::<std::io::Error>().map_or(false, |io| {
+                                    matches!(
+                                        io.kind(),
+                                        std::io::ErrorKind::WouldBlock
+                                            | std::io::ErrorKind::TimedOut
+                                    )
+                                });
+                            if timed_out {
+                                // Idle: keep polling until the run ends.
+                                if stop_flag.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                continue;
+                            }
+                            // Stream closed / desynced: collection done.
+                            break;
+                        }
+                    }
+                }
+                results
+            }),
+        ));
+    }
+    // Subscribe carries no ack; give the server's connection threads a
+    // beat to attach the sinks before the fleet starts emitting, so the
+    // collectors see frame 0 (accept-loop latency is ~20 ms; this is a
+    // wide margin, not a correctness condition for the server itself).
+    std::thread::sleep(Duration::from_millis(300));
+
+    // The fleet. Each worker owns its clouds, config, and backend.
+    let mut workers = Vec::new();
+    for (i, d) in spec.devices.iter().enumerate() {
+        let session_spec = spec
+            .sessions
+            .iter()
+            .find(|s| s.name == d.session)
+            .expect("validated above");
+        let frames = synth_clouds(
+            &meta,
+            spec.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+            d.frames,
+        );
+        let cfg = DeviceConfig {
+            device_id: d.device_id,
+            server: format!("127.0.0.1:{port}"),
+            session: d.session.clone(),
+            variant: session_spec.variant,
+            period: if d.hz > 0.0 {
+                Some(Duration::from_secs_f64(1.0 / d.hz))
+            } else {
+                None
+            },
+            bandwidth_bps: d.bandwidth_bps,
+            max_frames: d.frames,
+            quantize: d.quantize,
+            backend: spec.backend,
+            pipelined: true,
+            impair: d.impair,
+            start_frame: d.start_frame,
+        };
+        let paths = paths.clone();
+        let delay = d.start_delay;
+        let key = (d.session.clone(), d.device_id, d.frames);
+        workers.push((
+            key,
+            std::thread::spawn(move || {
+                if delay > Duration::ZERO {
+                    std::thread::sleep(delay);
+                }
+                run_device(&paths, &cfg, &frames)
+            }),
+        ));
+    }
+    let mut device_results = Vec::new();
+    for (key, h) in workers {
+        device_results.push((key, h.join()));
+    }
+
+    // Let deadline-resolved stragglers flush, then stop the server.
+    let settle = if spec.settle.is_zero() {
+        spec.sessions.iter().map(|s| s.deadline).max().unwrap_or_default()
+            + Duration::from_millis(500)
+    } else {
+        spec.settle
+    };
+    std::thread::sleep(settle);
+    stop.store(true, Ordering::SeqCst);
+    let registry = server
+        .join()
+        .map_err(|_| anyhow!("server thread panicked"))?
+        .context("scenario server failed")?;
+
+    let mut results_by_session: BTreeMap<String, Vec<(u64, usize, u64, u64)>> = BTreeMap::new();
+    for (name, h) in collectors {
+        let rows = h.join().map_err(|_| anyhow!("collector thread panicked"))?;
+        results_by_session.insert(name, rows);
+    }
+
+    // Surface device failures only after the server is down and joined.
+    let mut devices = Vec::new();
+    for ((session, device_id, frames_scheduled), res) in device_results {
+        let report = res
+            .map_err(|_| anyhow!("device thread panicked"))?
+            .with_context(|| format!("device {device_id} in session {session:?}"))?;
+        devices.push(DeviceRow { session, device_id, frames_scheduled, report });
+    }
+
+    let mut sessions = Vec::new();
+    for s in &spec.sessions {
+        let sess = registry
+            .get(&s.name)
+            .with_context(|| format!("session {:?} missing from registry", s.name))?;
+        let m = sess.metrics();
+        // Subscriber-observed latency: capture stamp echoed in the
+        // Result vs. wall clock at receipt (same machine, same clock).
+        let e2e_wire_secs: Vec<f64> = results_by_session
+            .get(&s.name)
+            .map(|rows| {
+                rows.iter()
+                    .filter(|(_, _, capture, _)| *capture > 0)
+                    .map(|(_, _, capture, recv)| recv.saturating_sub(*capture) as f64 * 1e-6)
+                    .collect()
+            })
+            .unwrap_or_default();
+        sessions.push(SessionReport {
+            name: s.name.clone(),
+            variant: s.variant,
+            policy: s.policy,
+            frames_done: sess.frames_done(),
+            results_received: results_by_session
+                .get(&s.name)
+                .map(|r| r.len() as u64)
+                .unwrap_or(0),
+            sync_complete: m.counter("sync_complete"),
+            sync_timed_out: m.counter("sync_timed_out"),
+            sync_dropped: m.counter("sync_dropped"),
+            sync_late: m.counter("sync_late"),
+            sync_dup: m.counter("sync_dup"),
+            e2e_secs: m.samples("e2e"),
+            e2e_wire_secs,
+        });
+    }
+    Ok(ScenarioReport {
+        scenario: spec.name.clone(),
+        backend: spec.backend.name().to_string(),
+        sessions,
+        devices,
+    })
+}
+
+/// `scmii scenario` CLI entry: run a named or file-specified scenario and
+/// write `BENCH_e2e.json`.
+pub fn cmd_scenario(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "name",
+        "spec",
+        "out",
+        "artifacts",
+        "data",
+        "backend",
+        "backend-threads",
+        "seed",
+        "list",
+    ])?;
+    if args.switch("list") {
+        for n in ScenarioSpec::builtin_names() {
+            println!("{n}");
+        }
+        return Ok(());
+    }
+    let mut spec = match args.str_opt("spec") {
+        Some(path) => {
+            let j = crate::utils::json::read_file(std::path::Path::new(path))?;
+            ScenarioSpec::from_json(&j).with_context(|| format!("parse scenario {path}"))?
+        }
+        None => ScenarioSpec::builtin(&args.str_or("name", "smoke"))?,
+    };
+    if let Some(b) = args.str_opt("backend") {
+        spec.backend = BackendKind::parse(b)?;
+    }
+    spec.backend_threads = args.usize_or("backend-threads", spec.backend_threads)?;
+    spec.seed = args.u64_or("seed", spec.seed)?;
+    let paths = Paths::new(
+        &args.str_or("artifacts", "artifacts"),
+        &args.str_or("data", "data"),
+    );
+
+    let report = run_scenario(&paths, &spec)?;
+    print!("{}", report.summary());
+    let out_dir = PathBuf::from(args.str_or("out", "."));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("create output dir {}", out_dir.display()))?;
+    let out = out_dir.join("BENCH_e2e.json");
+    crate::utils::json::write_file(&out, &report.to_json())?;
+    println!("wrote {}", out.display());
+
+    // Hard-gate semantics for CI: a session that produced nothing means
+    // the fleet path is broken (built-ins are designed to always emit).
+    for s in &report.sessions {
+        anyhow::ensure!(
+            s.results_received > 0,
+            "session {:?} produced no results — fleet path broken",
+            s.name
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_parse_and_validate() {
+        let meta = scenario_test_meta();
+        for name in ScenarioSpec::builtin_names() {
+            let spec = ScenarioSpec::builtin(name).unwrap();
+            spec.validate(&meta).unwrap_or_else(|e| panic!("builtin {name}: {e:#}"));
+            assert!(!spec.sessions.is_empty());
+            assert!(!spec.devices.is_empty());
+        }
+        assert!(ScenarioSpec::builtin("bogus").is_err());
+    }
+
+    #[test]
+    fn smoke_builtin_matches_acceptance_shape() {
+        // The acceptance criterion: ≥ 4 device workers across 2 sessions
+        // with a lossy link.
+        let spec = ScenarioSpec::builtin("smoke").unwrap();
+        assert_eq!(spec.sessions.len(), 2);
+        assert!(spec.devices.len() >= 4);
+        assert!(spec.devices.iter().any(|d| d.impair.is_some()));
+        assert!(spec.devices.iter().any(|d| d.quantize));
+        assert!(spec.sessions.iter().any(|s| s.policy == LossPolicy::Drop));
+        assert!(spec.sessions.iter().any(|s| s.policy == LossPolicy::ZeroFill));
+    }
+
+    #[test]
+    fn spec_json_parses() {
+        let text = r#"{
+            "name": "custom", "seed": 5, "backend_threads": 3,
+            "sessions": [
+                {"name": "a", "variant": "max", "deadline_ms": 100, "policy": "drop"},
+                {"name": "b"}
+            ],
+            "devices": [
+                {"session": "a", "device": 0, "frames": 4, "hz": 0, "bandwidth_mbps": 0},
+                {"session": "b", "device": 1, "frames": 6, "quantize": true,
+                 "start_frame": 3, "start_delay_ms": 250,
+                 "impair": {"drop_every": 2, "delay_ms": 1}}
+            ]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.name, "custom");
+        assert_eq!(spec.seed, 5);
+        assert_eq!(spec.backend_threads, 3);
+        assert_eq!(spec.sessions.len(), 2);
+        assert_eq!(spec.sessions[0].policy, LossPolicy::Drop);
+        assert_eq!(spec.sessions[0].deadline, Duration::from_millis(100));
+        assert_eq!(spec.sessions[1].policy, LossPolicy::ZeroFill, "defaults apply");
+        let d0 = &spec.devices[0];
+        assert_eq!(d0.hz, 0.0);
+        assert_eq!(d0.bandwidth_bps, None, "0 Mbps means unshaped");
+        assert!(d0.impair.is_none());
+        let d1 = &spec.devices[1];
+        assert!(d1.quantize);
+        assert_eq!(d1.start_frame, 3);
+        assert_eq!(d1.start_delay, Duration::from_millis(250));
+        let imp = d1.impair.unwrap();
+        assert_eq!(imp.drop_every, 2);
+        assert_eq!(imp.delay, Duration::from_millis(1));
+        assert_eq!(imp.loss, 0.0);
+
+        assert!(ScenarioSpec::from_json(&crate::utils::json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn spec_json_rejects_typos_and_bad_integers() {
+        let parse = |t: &str| ScenarioSpec::from_json(&crate::utils::json::parse(t).unwrap());
+        let base = |extra_dev: &str| {
+            format!(
+                r#"{{"name": "x", "sessions": [{{"name": "a"}}],
+                    "devices": [{{"session": "a", "device": 0{extra_dev}}}]}}"#
+            )
+        };
+        assert!(parse(&base("")).is_ok());
+        // A typoed impairment key must not parse as a clean link.
+        let err = parse(&base(r#", "impair": {"drop_evry": 3}"#)).unwrap_err();
+        assert!(err.to_string().contains("drop_evry"), "{err:#}");
+        // Typos at the other levels error too.
+        assert!(parse(&base(r#", "bandwith_mbps": 10"#)).is_err());
+        assert!(parse(
+            r#"{"name": "x", "bogus": 1, "sessions": [{"name": "a"}],
+               "devices": [{"session": "a", "device": 0}]}"#
+        )
+        .is_err());
+        // Negative or fractional integers are rejected, not cast.
+        assert!(parse(&base(r#", "frames": -1"#)).is_err());
+        assert!(parse(&base(r#", "impair": {"drop_every": -1}"#)).is_err());
+        assert!(parse(&base(r#", "frames": 2.5"#)).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let meta = scenario_test_meta();
+        let mut spec = ScenarioSpec::builtin("ci-smoke").unwrap();
+        spec.devices[0].session = "ghost".into();
+        assert!(spec.validate(&meta).is_err());
+
+        let mut spec = ScenarioSpec::builtin("ci-smoke").unwrap();
+        spec.devices[0].device_id = 99;
+        assert!(spec.validate(&meta).is_err());
+
+        let mut spec = ScenarioSpec::builtin("ci-smoke").unwrap();
+        spec.sessions.push(spec.sessions[0].clone());
+        assert!(spec.validate(&meta).is_err(), "duplicate session names");
+
+        // A loss "probability" of 5 (meant as 5%) must error, not
+        // silently black out the link.
+        let mut spec = ScenarioSpec::builtin("ci-smoke").unwrap();
+        spec.devices[1].impair = Some(ImpairConfig { loss: 5.0, ..Default::default() });
+        assert!(spec.validate(&meta).is_err(), "out-of-range loss probability");
+
+        // Two workers claiming the same FrameSync slot is a spec typo.
+        let mut spec = ScenarioSpec::builtin("ci-smoke").unwrap();
+        spec.devices[1].device_id = spec.devices[0].device_id;
+        assert!(spec.validate(&meta).is_err(), "duplicate (session, device) slot");
+    }
+
+    #[test]
+    fn report_serializes_required_keys() {
+        let report = ScenarioReport {
+            scenario: "t".into(),
+            backend: "native".into(),
+            sessions: vec![SessionReport {
+                name: "a".into(),
+                variant: IntegrationKind::Max,
+                policy: LossPolicy::ZeroFill,
+                frames_done: 3,
+                results_received: 3,
+                sync_complete: 2,
+                sync_timed_out: 1,
+                sync_dropped: 0,
+                sync_late: 0,
+                sync_dup: 0,
+                e2e_secs: vec![0.010, 0.020, 0.030],
+                e2e_wire_secs: vec![0.011, 0.021, 0.031],
+            }],
+            devices: vec![DeviceRow {
+                session: "a".into(),
+                device_id: 0,
+                frames_scheduled: 3,
+                report: DeviceReport {
+                    frame_times: vec![(0.001, 0.002); 3],
+                    impair: Default::default(),
+                },
+            }],
+        };
+        let j = report.to_json();
+        let s = &j.req("sessions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(s.req("frames_done").unwrap().as_usize().unwrap(), 3);
+        let e2e = s.req("e2e_ms").unwrap();
+        assert_eq!(e2e.req("n").unwrap().as_usize().unwrap(), 3);
+        assert!((e2e.req("p50").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
+        assert!(e2e.req("p95").unwrap().as_f64().unwrap() > 20.0);
+        assert_eq!(
+            s.req("e2e_frames_ms").unwrap().as_arr().unwrap().len(),
+            3,
+            "per-frame latencies must be in the report"
+        );
+        let wire = s.req("e2e_wire_ms").unwrap();
+        assert_eq!(wire.req("n").unwrap().as_usize().unwrap(), 3);
+        assert!(
+            wire.req("p50").unwrap().as_f64().unwrap()
+                > e2e.req("p50").unwrap().as_f64().unwrap(),
+            "wire e2e includes delivery on top of decode"
+        );
+        let d = &j.req("devices").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.req("frames_sent").unwrap().as_usize().unwrap(), 3);
+        assert!(report.summary().contains("session a"));
+    }
+}

@@ -11,3 +11,14 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+
+/// Wall-clock microseconds since the Unix epoch. Used to stamp frame
+/// capture on devices so the server (or an in-process scenario harness)
+/// can account end-to-end latency; 0 means "no stamp" on the wire, so a
+/// pre-epoch clock degrades to the legacy unstamped behavior.
+pub fn unix_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}

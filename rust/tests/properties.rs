@@ -205,6 +205,7 @@ fn wire_protocol_roundtrip_random_tensors() {
             device_id: g.usize_range(0, 3) as u32,
             tensor: HostTensor::new(shape, data).unwrap(),
             session: scmii::net::DEFAULT_SESSION.into(),
+            capture_micros: g.u64(),
         };
         let mut buf = Vec::new();
         write_msg(&mut buf, &msg).unwrap();

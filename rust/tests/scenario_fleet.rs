@@ -1,0 +1,236 @@
+//! Fleet-path tests: ≥4 pipelined device workers across 2 sessions over
+//! real localhost TCP, with injected loss, driven through the scenario
+//! harness. Needs **no artifacts** — the harness materializes a reduced
+//! synthetic meta and the native backend synthesizes weights — so this
+//! is a hard gate in the CI native job.
+
+#![cfg(feature = "native")]
+
+use scmii::config::{IntegrationKind, Paths};
+use scmii::coordinator::scheduler::LossPolicy;
+use scmii::net::ImpairConfig;
+use scmii::runtime::BackendKind;
+use scmii::scenario::{run_scenario, DeviceSpec, ScenarioSpec, SessionSpec};
+use scmii::utils::stats;
+use std::time::Duration;
+
+fn nonexistent_paths() -> Paths {
+    // Force the zero-artifact path even if the checkout has artifacts.
+    let d = std::env::temp_dir().join("scmii_no_artifacts_here");
+    Paths { artifacts: d.clone(), data: d }
+}
+
+fn session(name: &str, policy: LossPolicy) -> SessionSpec {
+    SessionSpec {
+        name: name.into(),
+        variant: IntegrationKind::Max,
+        deadline: Duration::from_millis(300),
+        policy,
+    }
+}
+
+fn device(session: &str, id: usize, frames: usize, impair: Option<ImpairConfig>) -> DeviceSpec {
+    DeviceSpec {
+        session: session.into(),
+        device_id: id,
+        frames,
+        start_frame: 0,
+        start_delay: Duration::ZERO,
+        hz: 0.0,             // unpaced: throughput mode
+        bandwidth_bps: None, // unshaped: the test measures accounting, not wire time
+        quantize: false,
+        impair,
+    }
+}
+
+/// The satellite acceptance test: 4 device workers, 2 sessions, genuine
+/// injected loss over real TCP. Every session must emit results, and the
+/// sync_* metrics must account exactly for dropped / zero-filled frames.
+#[test]
+fn four_devices_two_sessions_with_loss_account_for_every_frame() {
+    let n = 9usize;
+    let spec = ScenarioSpec {
+        name: "fleet-loss-test".into(),
+        seed: 7,
+        port: 0,
+        backend: BackendKind::Native,
+        backend_threads: 2,
+        sessions: vec![
+            session("north", LossPolicy::ZeroFill),
+            session("south", LossPolicy::Drop),
+        ],
+        devices: vec![
+            device("north", 0, n, None),
+            // North device 1's uplink is dead: every frame zero-fills.
+            device("north", 1, n, Some(ImpairConfig { loss: 1.0, ..Default::default() })),
+            device("south", 0, n, None),
+            // South device 1 loses every 3rd message, deterministically.
+            device("south", 1, n, Some(ImpairConfig { drop_every: 3, ..Default::default() })),
+        ],
+        settle: Duration::ZERO,
+    };
+
+    let report = run_scenario(&nonexistent_paths(), &spec).unwrap();
+    assert_eq!(report.sessions.len(), 2);
+    let north = report.sessions.iter().find(|s| s.name == "north").unwrap();
+    let south = report.sessions.iter().find(|s| s.name == "south").unwrap();
+
+    // North (ZeroFill, one device dark): every frame still resolves,
+    // every one by timeout.
+    assert_eq!(north.frames_done, n as u64, "zero-fill must resolve every frame");
+    assert_eq!(north.results_received, n as u64, "every result must reach the subscriber");
+    assert_eq!(north.sync_complete, 0);
+    assert_eq!(north.sync_timed_out, n as u64);
+    assert_eq!(north.sync_dropped, 0);
+
+    // South (Drop, every 3rd message lost): 3 of 9 frames dropped, the
+    // rest complete — and the device's impairment counter matches the
+    // synchronizer's accounting exactly.
+    assert_eq!(south.sync_dropped, 3, "drop_every=3 over 9 frames loses exactly 3");
+    assert_eq!(south.sync_complete, (n - 3) as u64);
+    assert_eq!(south.frames_done, (n - 3) as u64, "dropped frames produce no result");
+    assert_eq!(south.results_received, (n - 3) as u64);
+    assert!(south.results_received > 0, "every session must emit results");
+
+    let south_lossy = report
+        .devices
+        .iter()
+        .find(|d| d.session == "south" && d.device_id == 1)
+        .unwrap();
+    assert_eq!(
+        south_lossy.report.impair.dropped, south.sync_dropped,
+        "injected loss must equal the synchronizer's dropped count"
+    );
+    assert_eq!(south_lossy.report.frame_times.len(), n, "the worker still ran all frames");
+    let north_dark = report
+        .devices
+        .iter()
+        .find(|d| d.session == "north" && d.device_id == 1)
+        .unwrap();
+    assert_eq!(north_dark.report.impair.dropped, n as u64);
+
+    // End-to-end latency is measured for real: zero-filled frames carry
+    // the surviving device's capture stamp and resolve at the deadline,
+    // so north's e2e sits at >= 300 ms while south's completed frames
+    // finish in milliseconds.
+    assert_eq!(north.e2e_secs.len(), n, "every resolved frame records e2e");
+    assert_eq!(south.e2e_secs.len(), n - 3);
+    let north_p50 = stats::percentile(&north.e2e_secs, 50.0);
+    let south_p50 = stats::percentile(&south.e2e_secs, 50.0);
+    assert!(north_p50 >= 0.25, "timeout frames must pay the deadline, p50 {north_p50}");
+    assert!(south_p50 < north_p50, "completed frames must beat timeout frames");
+
+    // The subscriber-observed (wire) e2e covers the same frames and can
+    // only add delivery time on top of the server-internal number.
+    assert_eq!(north.e2e_wire_secs.len(), n, "every delivered result carries its stamp");
+    let north_wire_p50 = stats::percentile(&north.e2e_wire_secs, 50.0);
+    assert!(
+        north_wire_p50 + 1e-9 >= north_p50,
+        "wire e2e ({north_wire_p50}) cannot beat decode e2e ({north_p50})"
+    );
+}
+
+/// Device churn: one worker drops out mid-run, another joins late with a
+/// frame-id offset. The ZeroFill sessions keep producing a result for
+/// every frame their surviving device covers.
+#[test]
+fn dropout_and_late_join_keep_sessions_producing() {
+    let spec = ScenarioSpec {
+        name: "fleet-churn-test".into(),
+        seed: 11,
+        port: 0,
+        backend: BackendKind::Native,
+        backend_threads: 2,
+        sessions: vec![
+            session("dropout", LossPolicy::ZeroFill),
+            session("latejoin", LossPolicy::ZeroFill),
+        ],
+        devices: vec![
+            DeviceSpec { hz: 25.0, ..device("dropout", 0, 16, None) },
+            // Goes dark after 6 of 16 frames.
+            DeviceSpec { hz: 25.0, ..device("dropout", 1, 6, None) },
+            DeviceSpec { hz: 25.0, ..device("latejoin", 0, 16, None) },
+            // Joins ~320 ms in, at the fleet's frame index.
+            DeviceSpec {
+                hz: 25.0,
+                start_frame: 8,
+                start_delay: Duration::from_millis(320),
+                ..device("latejoin", 1, 8, None)
+            },
+        ],
+        settle: Duration::ZERO,
+    };
+
+    let report = run_scenario(&nonexistent_paths(), &spec).unwrap();
+    let dropout = report.sessions.iter().find(|s| s.name == "dropout").unwrap();
+    let latejoin = report.sessions.iter().find(|s| s.name == "latejoin").unwrap();
+
+    // Device 0 covers all 16 frames in both sessions, so ZeroFill
+    // resolves every one of them.
+    assert_eq!(dropout.frames_done, 16);
+    assert_eq!(latejoin.frames_done, 16);
+    // The dropout session must have timed out at least the 10 frames its
+    // second device never sent; the late-join session at least the 8
+    // frames before the joiner arrived.
+    assert!(
+        dropout.sync_timed_out >= 10,
+        "dropout must force timeouts, got {}",
+        dropout.sync_timed_out
+    );
+    assert!(
+        latejoin.sync_timed_out >= 8,
+        "pre-join frames must time out, got {}",
+        latejoin.sync_timed_out
+    );
+    // The joiner contributed: not every late-join frame timed out.
+    assert!(
+        latejoin.sync_complete >= 1,
+        "late joiner must complete at least one frame, got {}",
+        latejoin.sync_complete
+    );
+    assert_eq!(dropout.results_received, 16);
+    assert_eq!(latejoin.results_received, 16);
+}
+
+/// The CLI command end to end: runs the `ci-smoke` built-in (the CI hard
+/// gate) and emits BENCH_e2e.json with per-frame e2e percentiles.
+#[test]
+fn cmd_scenario_emits_bench_e2e_json() {
+    let out_dir = std::env::temp_dir().join("scmii_scenario_cmd_test");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let fake_artifacts = nonexistent_paths();
+    let args = scmii::cli::Args::parse(
+        [
+            "--name",
+            "ci-smoke",
+            "--backend",
+            "native",
+            "--out",
+            out_dir.to_str().unwrap(),
+            "--artifacts",
+            fake_artifacts.artifacts.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    )
+    .unwrap();
+    scmii::scenario::cmd_scenario(&args).unwrap();
+
+    let j = scmii::utils::json::read_file(&out_dir.join("BENCH_e2e.json")).unwrap();
+    assert_eq!(j.req("scenario").unwrap().as_str().unwrap(), "ci-smoke");
+    let sessions = j.req("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(sessions.len(), 2);
+    for s in sessions {
+        assert!(s.req("results_received").unwrap().as_usize().unwrap() > 0);
+        let e2e = s.req("e2e_ms").unwrap();
+        assert!(e2e.req("n").unwrap().as_usize().unwrap() > 0);
+        assert!(e2e.req("p50").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(
+            e2e.req("p95").unwrap().as_f64().unwrap()
+                >= e2e.req("p50").unwrap().as_f64().unwrap()
+        );
+        assert!(!s.req("e2e_frames_ms").unwrap().as_arr().unwrap().is_empty());
+    }
+    let devices = j.req("devices").unwrap().as_arr().unwrap();
+    assert_eq!(devices.len(), 4);
+}

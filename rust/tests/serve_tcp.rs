@@ -107,11 +107,12 @@ fn two_devices_serve_frames_end_to_end() {
         threads.push(std::thread::spawn(move || run_device(&paths, &cfg, &clouds)));
     }
     for t in threads {
-        let times = t.join().unwrap().unwrap();
-        assert_eq!(times.len(), n_frames);
-        for (head, tx) in times {
+        let report = t.join().unwrap().unwrap();
+        assert_eq!(report.frame_times.len(), n_frames);
+        for (head, tx) in report.frame_times {
             assert!(head > 0.0 && tx > 0.0);
         }
+        assert_eq!(report.impair.dropped, 0, "clean links drop nothing");
     }
     let results = subscriber.join().unwrap();
     assert_eq!(results.len(), n_frames, "all frames must produce results");
@@ -124,6 +125,11 @@ fn two_devices_serve_frames_end_to_end() {
     // SyncStats surfaced into the session metrics (satellite task).
     assert_eq!(metrics.counter("sync_complete"), n_frames as u64);
     assert_eq!(metrics.counter("sync_timed_out"), 0);
+    // Capture stamps crossed the wire: every frame has an end-to-end
+    // latency sample (device capture -> decoded detections).
+    let e2e = metrics.samples("e2e");
+    assert_eq!(e2e.len(), n_frames, "every stamped frame must record e2e");
+    assert!(e2e.iter().all(|&s| s > 0.0 && s < 60.0), "implausible e2e: {e2e:?}");
 }
 
 #[test]
