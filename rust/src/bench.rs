@@ -1,10 +1,12 @@
 //! `scmii bench` — machine-readable micro-benchmarks of the serving hot
-//! path, emitted as `BENCH_decode.json`, `BENCH_integrate.json` and
-//! `BENCH_tail.json` so the performance trajectory is tracked from one
-//! PR to the next (each entry: op, p50/p95 seconds, backend, samples).
-//! The system-level counterpart is `BENCH_e2e.json` — per-frame
-//! end-to-end latency under a multi-device fleet — emitted by
-//! [`scmii scenario`](crate::scenario).
+//! path, emitted as `BENCH_decode.json`, `BENCH_integrate.json`,
+//! `BENCH_tail.json` and `BENCH_batch.json` so the performance trajectory
+//! is tracked from one PR to the next (each entry: op, p50/p95 seconds,
+//! backend, samples; batch entries add batch size and backend-calls vs
+//! frames accounting). The system-level counterpart is `BENCH_e2e.json`
+//! — per-frame end-to-end latency under a multi-device fleet — emitted
+//! by [`scmii scenario`](crate::scenario). Schemas and provenance of
+//! every file are documented in `docs/BENCHMARKS.md`.
 //!
 //! Everything here runs on synthetic inputs at fixed shapes and needs no
 //! artifacts, so the numbers are comparable across machines-with-caveats
@@ -178,6 +180,70 @@ fn bench_tail(_bench: &mut Bench) -> Result<Vec<Entry>> {
     Ok(Vec::new())
 }
 
+/// Micro-batched tail execution (`ExecBackend::exec_batch`) at batch
+/// sizes 1/2/4/8: per-batch p50/p95, plus backend-calls vs frames
+/// accounting — the number the cross-session `BatchPlanner` moves.
+#[cfg(feature = "native")]
+fn bench_batch(bench: &mut Bench) -> Result<Vec<Json>> {
+    use crate::config::IntegrationKind;
+    use crate::geom::Pose;
+    use crate::runtime::{native::NativeBackend, ExecBackend, HostTensor};
+
+    // Same fixed half-resolution shape as bench_tail, so per-frame
+    // numbers are directly comparable between the two files.
+    let mut meta = ModelMeta::test_default();
+    meta.grid.dims = [32, 32, 4];
+    meta.grid.max_points = 1024;
+    meta.bev_dims = [16, 16];
+    let backend =
+        NativeBackend::new(meta.clone(), vec![Pose::IDENTITY; meta.num_devices], None)?;
+    let tail = meta.variant(IntegrationKind::Max)?.tail.clone();
+    backend.load(&tail)?;
+
+    let g = &meta.grid;
+    let shape = [g.dims[2], g.dims[1], g.dims[0], g.c_head];
+    let mut rng = Pcg64::new(44);
+    let mut feature = || {
+        let mut t = HostTensor::zeros(&shape);
+        for v in t.data.iter_mut() {
+            *v = if rng.uniform_f32() < 0.1 { rng.uniform_f32() } else { 0.0 };
+        }
+        t
+    };
+
+    let mut out = Vec::new();
+    for batch_size in [1usize, 2, 4, 8] {
+        let batch: Vec<Vec<HostTensor>> =
+            (0..batch_size).map(|_| vec![feature(), feature()]).collect();
+        let s = bench.run(&format!("native_tail_exec_batch_{batch_size}"), || {
+            let results = backend.exec_batch(&tail, batch.clone());
+            for r in &results {
+                assert!(r.is_ok(), "bench batch exec failed");
+            }
+            std::hint::black_box(results.len());
+        });
+        let backend_calls = s.times.len();
+        let mut j = Json::obj();
+        j.set("op", Json::Str("native_tail_exec_batch".into()))
+            .set("backend", Json::Str("native".into()))
+            .set("batch", Json::Num(batch_size as f64))
+            .set("p50_secs", Json::Num(s.p50()))
+            .set("p95_secs", Json::Num(stats::percentile(&s.times, 95.0)))
+            .set("per_frame_p50_secs", Json::Num(s.p50() / batch_size as f64))
+            .set("samples", Json::Num(backend_calls as f64))
+            .set("backend_calls", Json::Num(backend_calls as f64))
+            .set("frames", Json::Num((backend_calls * batch_size) as f64));
+        out.push(j);
+    }
+    Ok(out)
+}
+
+#[cfg(not(feature = "native"))]
+fn bench_batch(_bench: &mut Bench) -> Result<Vec<Json>> {
+    log::warn!("built without the `native` feature — BENCH_batch.json will be empty");
+    Ok(Vec::new())
+}
+
 /// `scmii bench` CLI entry.
 pub fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(&["out", "budget-ms"])?;
@@ -191,6 +257,11 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     write_entries(&out_dir.join("BENCH_decode.json"), &bench_decode(&mut bench))?;
     write_entries(&out_dir.join("BENCH_integrate.json"), &bench_integrate(&mut bench))?;
     write_entries(&out_dir.join("BENCH_tail.json"), &bench_tail(&mut bench)?)?;
+    let batch_rows = bench_batch(&mut bench)?;
+    let batch_path = out_dir.join("BENCH_batch.json");
+    crate::utils::json::write_file(&batch_path, &Json::Arr(batch_rows))
+        .with_context(|| format!("write {}", batch_path.display()))?;
+    println!("wrote {}", batch_path.display());
     Ok(())
 }
 
@@ -199,7 +270,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bench_emits_all_three_json_files() {
+    fn bench_emits_all_json_files() {
         let dir = std::env::temp_dir().join("scmii_bench_cmd_test");
         let _ = std::fs::remove_dir_all(&dir);
         let args = Args::parse(
@@ -209,10 +280,16 @@ mod tests {
         )
         .unwrap();
         cmd_bench(&args).unwrap();
-        for f in ["BENCH_decode.json", "BENCH_integrate.json", "BENCH_tail.json"] {
+        let native_only = ["BENCH_tail.json", "BENCH_batch.json"];
+        for f in [
+            "BENCH_decode.json",
+            "BENCH_integrate.json",
+            "BENCH_tail.json",
+            "BENCH_batch.json",
+        ] {
             let j = crate::utils::json::read_file(&dir.join(f)).unwrap();
             let arr = j.as_arr().unwrap();
-            if f != "BENCH_tail.json" || cfg!(feature = "native") {
+            if !native_only.contains(&f) || cfg!(feature = "native") {
                 assert!(!arr.is_empty(), "{f} must have entries");
             }
             for e in arr {
@@ -222,6 +299,23 @@ mod tests {
                 assert!(
                     e.req("p95_secs").unwrap().as_f64().unwrap()
                         >= e.req("p50_secs").unwrap().as_f64().unwrap()
+                );
+            }
+        }
+        // The batch file additionally accounts backend calls vs frames.
+        if cfg!(feature = "native") {
+            let j = crate::utils::json::read_file(&dir.join("BENCH_batch.json")).unwrap();
+            let arr = j.as_arr().unwrap();
+            assert_eq!(arr.len(), 4, "batch sizes 1/2/4/8");
+            for e in arr {
+                let batch = e.req("batch").unwrap().as_usize().unwrap();
+                let calls = e.req("backend_calls").unwrap().as_usize().unwrap();
+                let frames = e.req("frames").unwrap().as_usize().unwrap();
+                assert!(batch >= 1);
+                assert_eq!(frames, calls * batch, "frames must be calls × batch size");
+                assert!(
+                    e.req("per_frame_p50_secs").unwrap().as_f64().unwrap()
+                        <= e.req("p50_secs").unwrap().as_f64().unwrap() + 1e-12
                 );
             }
         }

@@ -120,6 +120,12 @@ impl Args {
         }
     }
 
+    /// Millisecond flag parsed into a [`Duration`](std::time::Duration)
+    /// (`--foo-ms 250` → 250 ms; absent → `default_ms`).
+    pub fn ms_or(&self, key: &str, default_ms: u64) -> Result<std::time::Duration> {
+        Ok(std::time::Duration::from_millis(self.u64_or(key, default_ms)?))
+    }
+
     pub fn switch(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key) || self.values.get(key).map(|v| v == "true").unwrap_or(false)
     }
@@ -209,6 +215,14 @@ mod tests {
         );
         let bad = parse(&["--policy", "bogus"]);
         assert!(bad.str_one_of("policy", &["zero-fill", "drop"], "zero-fill").is_err());
+    }
+
+    #[test]
+    fn ms_accessor_builds_durations() {
+        let a = parse(&["--batch-window-ms", "7"]);
+        assert_eq!(a.ms_or("batch-window-ms", 2).unwrap(), std::time::Duration::from_millis(7));
+        assert_eq!(a.ms_or("missing-ms", 2).unwrap(), std::time::Duration::from_millis(2));
+        assert!(parse(&["--w-ms", "soon"]).ms_or("w-ms", 0).is_err());
     }
 
     #[test]

@@ -29,17 +29,21 @@ use std::time::{Duration, Instant};
 /// Device worker configuration.
 #[derive(Clone, Debug)]
 pub struct DeviceConfig {
+    /// This worker's device slot (0..num_devices) within the session.
     pub device_id: usize,
+    /// Server address (`host:port`).
     pub server: String,
     /// Named [`DetectorSession`](super::session::DetectorSession) on the
     /// server this worker feeds (multi-intersection hosting).
     pub session: String,
+    /// Integration variant (selects which head model this worker runs).
     pub variant: IntegrationKind,
     /// Inter-frame period (paper: 10 Hz sensors). `None` = as fast as
     /// possible (throughput mode).
     pub period: Option<Duration>,
     /// Shape outgoing bytes to this line rate (paper: 1 Gbps LAN).
     pub bandwidth_bps: Option<f64>,
+    /// Stop after this many frames.
     pub max_frames: usize,
     /// u8-quantize intermediate outputs before transmission (paper §IV-E
     /// compressed intermediate outputs: 4× smaller payload).

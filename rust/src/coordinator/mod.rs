@@ -15,7 +15,10 @@
 //!   over this deployment live in [`crate::scenario`].
 //! - [`scheduler`] — the frame synchronizer pairing intermediate outputs
 //!   by frame id, with timeout and partial-loss policies (paper §IV-E
-//!   future work, implemented here). Owned by the session core.
+//!   future work, implemented here), plus the cross-session
+//!   [`scheduler::BatchPlanner`] that coalesces compatible tail
+//!   executions into stacked backend calls. Both owned by the session
+//!   core.
 
 pub mod device;
 pub mod pipeline;

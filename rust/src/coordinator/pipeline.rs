@@ -49,6 +49,7 @@ pub use crate::config::load_calib;
 /// `--backend-threads`).
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineBackend {
+    /// Which [`ExecBackend`] implementation to run on.
     pub kind: BackendKind,
     /// Engine-pool threads (XLA backend; the native backend runs on the
     /// caller thread and ignores this).
@@ -75,7 +76,9 @@ impl PipelineBackend {
 /// The in-process frontend for one integration variant: heads + a
 /// [`DetectorSession`] sharing one execution backend.
 pub struct ScMiiPipeline {
+    /// Model geometry loaded from `model_meta.json`.
     pub meta: ModelMeta,
+    /// Integration method this pipeline runs.
     pub variant: IntegrationKind,
     backend: Arc<dyn ExecBackend>,
     session: DetectorSession,
@@ -148,6 +151,7 @@ impl ScMiiPipeline {
         &self.session
     }
 
+    /// Mutable access to the session's decode/NMS parameters.
     pub fn decode_params(&mut self) -> &mut DecodeParams {
         self.session.decode_params_mut()
     }
@@ -270,6 +274,7 @@ impl ScMiiPipeline {
         merge_clouds(&transformed, self.meta.grid.max_points)
     }
 
+    /// The calibration poses loaded for this rig (index = device id).
     pub fn calib(&self) -> &[Pose] {
         &self.calib
     }

@@ -1,14 +1,24 @@
-//! Frame synchronizer: pairs per-device intermediate outputs by frame id
-//! before integration.
+//! Frame synchronizer and the cross-session batch planner.
 //!
-//! The paper's inference flow assumes both devices' features arrive for a
-//! frame; real links lose or delay messages, so the synchronizer adds a
-//! deadline and a configurable policy for incomplete frames — the
-//! robustness direction §IV-E calls out ("systems designed to tolerate
-//! partial data loss without retransmission").
+//! [`FrameSync`] pairs per-device intermediate outputs by frame id before
+//! integration. The paper's inference flow assumes both devices' features
+//! arrive for a frame; real links lose or delay messages, so the
+//! synchronizer adds a deadline and a configurable policy for incomplete
+//! frames — the robustness direction §IV-E calls out ("systems designed
+//! to tolerate partial data loss without retransmission").
+//!
+//! [`BatchPlanner`] is the server-side throughput complement: it
+//! coalesces **compatible tail executions** — same executable, same input
+//! shapes — arriving within a configurable window across sessions and
+//! frames into one stacked [`ExecBackend::exec_batch`] call, so the
+//! steady-state backend cost per frame drops from one round-trip to
+//! ~1/B of one under fleet load.
 
-use crate::runtime::HostTensor;
-use std::collections::HashMap;
+use crate::metrics::Metrics;
+use crate::runtime::{ExecBackend, HostTensor};
+use anyhow::Result;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// What to do when the deadline fires with devices missing.
@@ -32,6 +42,7 @@ impl LossPolicy {
         }
     }
 
+    /// Parse the CLI/JSON spelling (`"zero-fill"` | `"drop"`).
     pub fn parse(s: &str) -> anyhow::Result<LossPolicy> {
         match s {
             "drop" => Ok(LossPolicy::Drop),
@@ -44,6 +55,7 @@ impl LossPolicy {
 /// A completed (or force-completed) frame ready for the tail model.
 #[derive(Debug)]
 pub struct ReadyFrame {
+    /// Frame id the devices stamped on their intermediate outputs.
     pub frame_id: u64,
     /// Per-device features; `None` only under `ZeroFill` accounting
     /// (already replaced by zeros in `tensors`).
@@ -81,20 +93,31 @@ pub struct FrameSync {
     emitted_horizon: Duration,
     /// Frame ids discarded under [`LossPolicy::Drop`], awaiting collection.
     dropped_log: Vec<u64>,
+    /// Running counters (reads are cheap; the session mirrors them into
+    /// its metrics).
     pub stats: SyncStats,
 }
 
 /// Counters for observability / tests.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SyncStats {
+    /// Frames emitted with every device present.
     pub complete: u64,
+    /// Frames resolved by deadline expiry (either policy).
     pub timed_out: u64,
+    /// Frames discarded under [`LossPolicy::Drop`].
     pub dropped_frames: u64,
+    /// Submissions for frames already emitted (ignored).
     pub late_arrivals: u64,
+    /// Repeat submissions for a (frame, device) slot (ignored).
     pub duplicates: u64,
 }
 
 impl FrameSync {
+    /// Build a synchronizer for `n_devices` devices; incomplete frames
+    /// resolve per `policy` once `deadline` has passed since their first
+    /// arrival, zero-filling with `feature_shape` when no sibling tensor
+    /// is available.
     pub fn new(
         n_devices: usize,
         deadline: Duration,
@@ -224,6 +247,7 @@ impl FrameSync {
         out
     }
 
+    /// Number of frames currently buffered awaiting devices.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -257,6 +281,383 @@ impl FrameSync {
             self.emitted.retain(|_, t| *t > cutoff);
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Cross-session micro-batching
+// ---------------------------------------------------------------------
+
+/// Tuning for the coordinator's cross-session micro-batching
+/// (`scmii serve --batch-window-ms --max-batch`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Collection window: how long the first request of a batch waits for
+    /// compatible company before the batch executes. A lone request pays
+    /// the **full window as added tail latency** — batching deliberately
+    /// trades light-load latency for per-call efficiency under fleet
+    /// load, so keep the window small relative to the frame period (a
+    /// saturated bucket never waits: a full batch executes immediately).
+    pub window: Duration,
+    /// Upper bound on requests coalesced into one backend call. `<= 1`
+    /// disables batching entirely: requests go straight to the backend on
+    /// the caller's thread — byte-identical to the unbatched serving
+    /// path.
+    pub max_batch: usize,
+    /// Admission control: maximum requests queued in the planner across
+    /// all buckets. Requests beyond it are rejected (the frame completes
+    /// with a tail error) instead of growing the queue without bound
+    /// under overload.
+    pub max_pending: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig { window: Duration::from_millis(2), max_batch: 1, max_pending: 256 }
+    }
+}
+
+/// Requests are stackable when they run the same executable on
+/// identically-shaped inputs.
+type BatchKey = (String, Vec<Vec<usize>>);
+
+/// Per-request reply slot: the batch leader fills it (under the planner
+/// state lock), the owner polls it from the shared wait loop.
+struct ReplySlot {
+    result: Mutex<Option<Result<Vec<HostTensor>>>>,
+}
+
+/// One request waiting to be batched.
+struct BatchReq {
+    session: String,
+    inputs: Vec<HostTensor>,
+    slot: Arc<ReplySlot>,
+}
+
+/// Requests compatible with one executable+shape signature.
+struct Bucket {
+    queue: Vec<BatchReq>,
+    /// Whether a leader thread is currently in this bucket's COLLECTION
+    /// phase (at most one collector at a time; released at drain, so
+    /// execution of one batch overlaps collection of the next).
+    collecting: bool,
+}
+
+struct PlannerState {
+    buckets: HashMap<BatchKey, Bucket>,
+    /// Total queued requests across buckets (admission control).
+    pending: usize,
+}
+
+/// Coalesces compatible tail executions arriving within a window across
+/// sessions and frames into one stacked [`ExecBackend::exec_batch`]
+/// call.
+///
+/// Leader/follower scheme, no dedicated thread: every caller parks in
+/// one shared wait loop; a caller that finds its bucket unled takes
+/// **leadership for exactly one batch** — wait out the window (or until
+/// the bucket holds [`BatchConfig::max_batch`] requests, whichever comes
+/// first), drain with per-session fairness, execute, distribute — and
+/// releases leadership *at drain time*, so the next leader can collect
+/// and launch a batch while this one executes (a hot bucket keeps the
+/// whole backend busy; batching never caps in-flight frames at
+/// `max_batch`). A caller returns as soon as its own result is ready
+/// and is never held captive serving other sessions' backlogs (each
+/// queued request has its own blocked caller thread to lead the batch
+/// that serves it), while a saturated bucket batches continuously: the
+/// moment it holds `max_batch` requests, the next leader's collection
+/// phase is instant.
+///
+/// With `max_batch <= 1` the planner is a transparent pass-through to
+/// [`ExecBackend::exec`] — outputs are byte-identical to the unbatched
+/// path.
+pub struct BatchPlanner {
+    backend: Arc<dyn ExecBackend>,
+    cfg: BatchConfig,
+    state: Mutex<PlannerState>,
+    /// Paired with `state`: wakes parked callers on enqueue (a gathering
+    /// leader may now have a full batch) and after each batch (slots
+    /// filled, leadership free).
+    cv: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+impl BatchPlanner {
+    /// Build a planner over `backend` (shared by every session routing
+    /// tails through it).
+    pub fn new(backend: Arc<dyn ExecBackend>, cfg: BatchConfig) -> Arc<BatchPlanner> {
+        Arc::new(BatchPlanner {
+            backend,
+            cfg,
+            state: Mutex::new(PlannerState { buckets: HashMap::new(), pending: 0 }),
+            cv: Condvar::new(),
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    /// The configuration this planner runs with.
+    pub fn config(&self) -> &BatchConfig {
+        &self.cfg
+    }
+
+    /// Whether batching is actually on (`max_batch > 1`).
+    pub fn enabled(&self) -> bool {
+        self.cfg.max_batch > 1
+    }
+
+    /// Planner observability: counters `batch_backend_calls`,
+    /// `batch_frames`, `batch_rejected`, gauge `batch_pending`, series
+    /// `batch_occupancy` (requests per backend call) and
+    /// `batch_queue_depth` (queue depth sampled at each enqueue).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Execute `inputs` on `name`, possibly coalesced with compatible
+    /// requests from other sessions/frames. Blocks until this request's
+    /// result is available — one collection window plus the batch
+    /// execution in the common case; under sustained overload at most a
+    /// few round-robin sweeps until the fairness drain reaches this
+    /// request's session, never other sessions' entire backlog.
+    ///
+    /// `session` is the fairness key: when a bucket holds more requests
+    /// than fit one batch, the drain round-robins across sessions so one
+    /// chatty device fleet cannot starve the others.
+    pub fn exec(
+        &self,
+        session: &str,
+        name: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        self.exec_many(session, name, vec![inputs])
+            .pop()
+            .expect("exec_many returns one result per entry")
+    }
+
+    /// [`exec`](Self::exec) over several input sets from **one caller** —
+    /// one result per entry, order preserved. All entries are enqueued
+    /// before any waiting happens, so they coalesce with *each other* as
+    /// well as with concurrent traffic: a burst of K deadline-expired
+    /// frames resolved by one polling thread becomes ceil(K/max_batch)
+    /// stacked backend calls sharing one collection window, instead of K
+    /// sequential batch-of-1 calls each paying the window (sequential
+    /// `exec` calls from one thread can never be their own batch-mates).
+    pub fn exec_many(
+        &self,
+        session: &str,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        if self.cfg.max_batch <= 1 {
+            // Pass-through: same thread, same backend calls, bit-identical
+            // outputs to the pre-batching server.
+            return batch.into_iter().map(|inputs| self.backend.exec(name, inputs)).collect();
+        }
+
+        /// One entry's fate: rejected at admission, or parked in a bucket.
+        enum Entry {
+            Rejected(anyhow::Error),
+            Pending { key: BatchKey, slot: Arc<ReplySlot> },
+        }
+
+        // Enqueue every entry under one lock acquisition so the whole
+        // burst is visible to the first leader.
+        let mut entries: Vec<Entry> = Vec::with_capacity(batch.len());
+        {
+            let mut st = self.state.lock().unwrap();
+            for inputs in batch {
+                if st.pending >= self.cfg.max_pending {
+                    self.metrics.incr("batch_rejected", 1);
+                    entries.push(Entry::Rejected(anyhow::anyhow!(
+                        "batch planner queue full ({} pending ≥ {} max); tail request for {name:?} rejected",
+                        st.pending,
+                        self.cfg.max_pending
+                    )));
+                    continue;
+                }
+                st.pending += 1;
+                self.metrics.record("batch_queue_depth", st.pending as f64);
+                self.metrics.set("batch_pending", st.pending as u64);
+                let key: BatchKey =
+                    (name.to_string(), inputs.iter().map(|t| t.shape.clone()).collect());
+                let slot = Arc::new(ReplySlot { result: Mutex::new(None) });
+                st.buckets
+                    .entry(key.clone())
+                    .or_insert_with(|| Bucket { queue: Vec::new(), collecting: false })
+                    .queue
+                    .push(BatchReq {
+                        session: session.to_string(),
+                        inputs,
+                        slot: Arc::clone(&slot),
+                    });
+                entries.push(Entry::Pending { key, slot });
+            }
+            // A gathering leader may now have a full batch.
+            self.cv.notify_all();
+        }
+
+        // Shared wait loop: return once every slot is filled; while any
+        // isn't, take leadership (for one batch) of the first of our
+        // unled buckets. Slots are filled under the state lock, so
+        // checking under it cannot miss a wakeup.
+        loop {
+            let st = self.state.lock().unwrap();
+            let mut lead_key: Option<BatchKey> = None;
+            let mut any_unfilled = false;
+            for entry in &entries {
+                if let Entry::Pending { key, slot } = entry {
+                    if slot.result.lock().unwrap().is_some() {
+                        continue;
+                    }
+                    any_unfilled = true;
+                    if lead_key.is_none()
+                        && st
+                            .buckets
+                            .get(key)
+                            .map_or(false, |b| !b.collecting && !b.queue.is_empty())
+                    {
+                        lead_key = Some(key.clone());
+                    }
+                }
+            }
+            if !any_unfilled {
+                break;
+            }
+            if let Some(key) = lead_key {
+                let mut st = st;
+                st.buckets.get_mut(&key).expect("bucket checked above").collecting = true;
+                drop(st);
+                self.lead_one_batch(&key);
+                continue;
+            }
+            // Timeout is a defensive backstop only — every state change
+            // that matters notifies the condvar.
+            let _ = self.cv.wait_timeout(st, Duration::from_millis(100)).unwrap();
+        }
+
+        entries
+            .into_iter()
+            .map(|entry| match entry {
+                Entry::Rejected(err) => Err(err),
+                Entry::Pending { slot, .. } => {
+                    slot.result.lock().unwrap().take().expect("slot filled before exit")
+                }
+            })
+            .collect()
+    }
+
+    /// One leadership turn over a bucket: collect until the window
+    /// expires or the bucket holds a full batch, drain fairly (releasing
+    /// leadership at drain, so the next batch can collect while this one
+    /// executes), execute, distribute. Never serves more than one batch
+    /// — remaining requests are led by their own caller threads.
+    fn lead_one_batch(&self, key: &BatchKey) {
+        // Collect: wait out the window unless the bucket fills first.
+        let deadline = Instant::now() + self.cfg.window;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let len = st.buckets.get(key).map_or(0, |b| b.queue.len());
+            if len >= self.cfg.max_batch {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+        let taken = {
+            let bucket = st.buckets.get_mut(key).expect("leader owns a live bucket");
+            let taken = drain_fair(&mut bucket.queue, self.cfg.max_batch);
+            // Leadership guards only the COLLECTION phase: release it at
+            // drain time, before executing, so another caller can gather
+            // and launch the next batch while this one runs on the
+            // backend — a hot bucket keeps the whole backend busy instead
+            // of capping in-flight frames at max_batch.
+            bucket.collecting = false;
+            if bucket.queue.is_empty() {
+                // Drop empty buckets so shape churn doesn't grow the map.
+                st.buckets.remove(key);
+            }
+            st.pending -= taken.len();
+            self.metrics.set("batch_pending", st.pending as u64);
+            taken
+        };
+        drop(st);
+        // Wake waiters: the bucket is leaderless again (and may still
+        // hold requests for the next leader).
+        self.cv.notify_all();
+
+        let mut filled = Vec::new();
+        if !taken.is_empty() {
+            self.metrics.incr("batch_backend_calls", 1);
+            self.metrics.incr("batch_frames", taken.len() as u64);
+            self.metrics.record("batch_occupancy", taken.len() as f64);
+            let (slots, batch): (Vec<Arc<ReplySlot>>, Vec<Vec<HostTensor>>) =
+                taken.into_iter().map(|r| (r.slot, r.inputs)).unzip();
+            let name = &key.0;
+            // A panicking backend must not strand the waiters on their
+            // slots: convert the panic into per-entry errors.
+            let mut results = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.backend.exec_batch(name, batch)
+            }))
+            .unwrap_or_else(|_| {
+                (0..slots.len())
+                    .map(|_| {
+                        Err(anyhow::anyhow!(
+                            "backend panicked executing a batch of {name:?}"
+                        ))
+                    })
+                    .collect()
+            });
+            // Backend contract is one result per entry; guard anyway so a
+            // short reply cannot hang a waiter forever.
+            while results.len() < slots.len() {
+                results.push(Err(anyhow::anyhow!(
+                    "backend returned too few results for a batch of {name:?}"
+                )));
+            }
+            filled = slots.into_iter().zip(results).collect();
+        }
+
+        // Distribute under the state lock, so waiters checking their
+        // slots cannot miss the wakeup. (Leadership was already handed
+        // back at drain time.)
+        let _st = self.state.lock().unwrap();
+        for (slot, result) in filled {
+            *slot.result.lock().unwrap() = Some(result);
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Take up to `max` requests from `queue`, round-robin across sessions
+/// (FIFO within each session), so one chatty session cannot monopolize a
+/// batch while others wait.
+fn drain_fair(queue: &mut Vec<BatchReq>, max: usize) -> Vec<BatchReq> {
+    if queue.len() <= max {
+        return std::mem::take(queue);
+    }
+    let mut taken = Vec::with_capacity(max);
+    while taken.len() < max {
+        // One sweep: each distinct session's oldest remaining request.
+        let mut served: BTreeSet<String> = BTreeSet::new();
+        let mut i = 0;
+        let before = taken.len();
+        while i < queue.len() && taken.len() < max {
+            if served.insert(queue[i].session.clone()) {
+                taken.push(queue.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        if taken.len() == before {
+            break;
+        }
+    }
+    taken
 }
 
 #[cfg(test)]
@@ -416,5 +817,238 @@ mod tests {
         s.add(1, 0, t());
         assert!(s.poll_expired().is_empty());
         assert_eq!(s.pending_len(), 1);
+    }
+
+    // --- BatchPlanner ---
+
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Echo backend counting per-request and batched calls.
+    struct CountingEcho {
+        exec_calls: AtomicU64,
+        batch_calls: AtomicU64,
+        batch_sizes: Mutex<Vec<usize>>,
+    }
+
+    impl CountingEcho {
+        fn new() -> Arc<CountingEcho> {
+            Arc::new(CountingEcho {
+                exec_calls: AtomicU64::new(0),
+                batch_calls: AtomicU64::new(0),
+                batch_sizes: Mutex::new(Vec::new()),
+            })
+        }
+    }
+
+    impl ExecBackend for CountingEcho {
+        fn backend_name(&self) -> &str {
+            "counting-echo"
+        }
+        fn exec(&self, _n: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            self.exec_calls.fetch_add(1, Ordering::SeqCst);
+            Ok(inputs)
+        }
+        fn load(&self, _n: &str) -> Result<()> {
+            Ok(())
+        }
+        fn loaded_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+        fn exec_batch(
+            &self,
+            _n: &str,
+            batch: Vec<Vec<HostTensor>>,
+        ) -> Vec<Result<Vec<HostTensor>>> {
+            self.batch_calls.fetch_add(1, Ordering::SeqCst);
+            self.batch_sizes.lock().unwrap().push(batch.len());
+            batch.into_iter().map(Ok).collect()
+        }
+    }
+
+    #[test]
+    fn max_batch_one_is_a_transparent_passthrough() {
+        let backend = CountingEcho::new();
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig { max_batch: 1, ..Default::default() },
+        );
+        assert!(!planner.enabled());
+        let input = vec![HostTensor::new(vec![2], vec![1.0, 2.0]).unwrap()];
+        let out = planner.exec("s", "m", input.clone()).unwrap();
+        assert_eq!(out, input, "pass-through must return the backend's exact output");
+        assert_eq!(backend.exec_calls.load(Ordering::SeqCst), 1, "direct exec, no batching");
+        assert_eq!(backend.batch_calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn concurrent_compatible_requests_coalesce_into_one_call() {
+        let backend = CountingEcho::new();
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig {
+                window: Duration::from_millis(400),
+                max_batch: 8,
+                max_pending: 64,
+            },
+        );
+        let barrier = Arc::new(std::sync::Barrier::new(3));
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                let planner = Arc::clone(&planner);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let input = vec![HostTensor::new(vec![2], vec![i as f32, 0.0]).unwrap()];
+                    planner.exec(&format!("session-{i}"), "tail", input.clone()).unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap();
+            assert_eq!(out[0].data[0], i as f32, "each caller gets its own result back");
+        }
+        assert_eq!(
+            backend.batch_calls.load(Ordering::SeqCst),
+            1,
+            "3 concurrent compatible requests must be one backend call"
+        );
+        assert_eq!(backend.batch_sizes.lock().unwrap().as_slice(), &[3]);
+        let m = planner.metrics();
+        assert_eq!(m.counter("batch_backend_calls"), 1);
+        assert_eq!(m.counter("batch_frames"), 3);
+    }
+
+    #[test]
+    fn incompatible_shapes_do_not_coalesce() {
+        let backend = CountingEcho::new();
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig {
+                window: Duration::from_millis(150),
+                max_batch: 8,
+                max_pending: 64,
+            },
+        );
+        let p2 = Arc::clone(&planner);
+        let h = std::thread::spawn(move || {
+            p2.exec("a", "tail", vec![HostTensor::zeros(&[4])]).unwrap()
+        });
+        let out = planner.exec("b", "tail", vec![HostTensor::zeros(&[2, 2])]).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2]);
+        assert_eq!(h.join().unwrap()[0].shape, vec![4]);
+        assert_eq!(
+            backend.batch_calls.load(Ordering::SeqCst),
+            2,
+            "different shapes are different buckets"
+        );
+    }
+
+    #[test]
+    fn admission_control_rejects_when_queue_is_full() {
+        let backend = CountingEcho::new();
+        // max_pending 0: every batched request is over the bound.
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig {
+                window: Duration::from_millis(10),
+                max_batch: 4,
+                max_pending: 0,
+            },
+        );
+        let err = planner.exec("s", "m", vec![HostTensor::zeros(&[1])]).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err:#}");
+        assert_eq!(planner.metrics().counter("batch_rejected"), 1);
+        assert_eq!(backend.batch_calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn drain_fair_round_robins_across_sessions() {
+        let slot = || Arc::new(ReplySlot { result: Mutex::new(None) });
+        let req = |session: &str, tag: f32| BatchReq {
+            session: session.to_string(),
+            inputs: vec![HostTensor::new(vec![1], vec![tag]).unwrap()],
+            slot: slot(),
+        };
+        // Chatty session A has 4 queued requests, B and C one each.
+        let mut queue = vec![
+            req("a", 0.0),
+            req("a", 1.0),
+            req("a", 2.0),
+            req("b", 10.0),
+            req("a", 3.0),
+            req("c", 20.0),
+        ];
+        let taken = drain_fair(&mut queue, 3);
+        let sessions: Vec<&str> = taken.iter().map(|r| r.session.as_str()).collect();
+        assert_eq!(
+            sessions,
+            vec!["a", "b", "c"],
+            "one per session before any session repeats"
+        );
+        // FIFO within a session: a's oldest went first, the rest remain in
+        // arrival order.
+        assert_eq!(taken[0].inputs[0].data[0], 0.0);
+        let remaining: Vec<f32> = queue.iter().map(|r| r.inputs[0].data[0]).collect();
+        assert_eq!(remaining, vec![1.0, 2.0, 3.0]);
+
+        // Second drain sweeps a twice once b/c are gone.
+        let taken = drain_fair(&mut queue, 8);
+        let tags: Vec<f32> = taken.iter().map(|r| r.inputs[0].data[0]).collect();
+        assert_eq!(tags, vec![1.0, 2.0, 3.0]);
+        assert!(queue.is_empty());
+    }
+
+    #[test]
+    fn exec_many_coalesces_a_single_caller_burst() {
+        // Sequential exec() calls from one thread can never batch with
+        // each other; exec_many must make burst entries batch-mates.
+        let backend = CountingEcho::new();
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig {
+                window: Duration::from_millis(200),
+                max_batch: 2,
+                max_pending: 64,
+            },
+        );
+        let batch: Vec<Vec<HostTensor>> = (0..5)
+            .map(|i| vec![HostTensor::new(vec![2], vec![i as f32, 0.0]).unwrap()])
+            .collect();
+        let t0 = Instant::now();
+        let results = planner.exec_many("s", "tail", batch);
+        assert_eq!(results.len(), 5);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap()[0].data[0], i as f32, "order preserved");
+        }
+        assert_eq!(
+            backend.batch_calls.load(Ordering::SeqCst),
+            3,
+            "5 entries at max_batch 2 must be ceil(5/2) = 3 calls"
+        );
+        // Only the final, unfilled batch may wait a window; the full ones
+        // execute immediately — the burst must not pay 5 windows.
+        assert!(
+            t0.elapsed() < Duration::from_millis(600),
+            "burst serialized through per-entry windows: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(planner.metrics().counter("batch_frames"), 5);
+    }
+
+    #[test]
+    fn lone_request_executes_after_the_window() {
+        let backend = CountingEcho::new();
+        let window = Duration::from_millis(40);
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig { window, max_batch: 4, max_pending: 16 },
+        );
+        let t0 = Instant::now();
+        let out = planner.exec("s", "m", vec![HostTensor::zeros(&[1])]).unwrap();
+        assert_eq!(out[0].shape, vec![1]);
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= window, "an unfilled batch waits out the window: {elapsed:?}");
+        assert_eq!(backend.batch_calls.load(Ordering::SeqCst), 1);
+        assert_eq!(backend.batch_sizes.lock().unwrap().as_slice(), &[1]);
     }
 }

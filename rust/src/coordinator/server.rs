@@ -5,7 +5,7 @@
 //! address a session by name, with pre-session clients landing on
 //! [`DEFAULT_SESSION`].
 
-use super::scheduler::LossPolicy;
+use super::scheduler::{BatchConfig, BatchPlanner, LossPolicy};
 use super::session::{
     DetectorSession, FeaturePayload, FrameResult, ResultSink, SessionConfig, SessionEvent,
     SessionRegistry,
@@ -26,9 +26,13 @@ use std::time::Duration;
 /// [`SessionConfig`].
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// TCP port to listen on.
     pub port: u16,
+    /// Integration method of the default session.
     pub variant: IntegrationKind,
+    /// Frame-sync deadline of the default session.
     pub deadline: Duration,
+    /// Incomplete-frame policy of the default session.
     pub policy: LossPolicy,
     /// Decode parameters for the default session (satellite fix: the old
     /// server silently post-processed with `DecodeParams::default()`).
@@ -43,6 +47,11 @@ pub struct ServerConfig {
     /// Engine-pool threads (`--backend-threads`): how many tails can
     /// execute concurrently on the XLA backend.
     pub backend_threads: usize,
+    /// Cross-session micro-batching of tail executions
+    /// (`--max-batch` / `--batch-window-ms`). `max_batch <= 1` (the
+    /// default) keeps the per-frame path byte-identical to the unbatched
+    /// server.
+    pub batch: BatchConfig,
 }
 
 impl Default for ServerConfig {
@@ -57,6 +66,7 @@ impl Default for ServerConfig {
             extra_sessions: Vec::new(),
             backend: BackendKind::default_kind(),
             backend_threads: 1,
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -104,7 +114,23 @@ impl ResultSink for TcpSink {
                 class_id: d.class_id as u32,
             })
             .collect();
-        let stream = self.stream.lock().unwrap();
+        // Never `unwrap()` this lock: the stream is shared by every sink
+        // of one subscriber connection, and a panic while some other
+        // deliver held it poisons the mutex. Propagating that panic from
+        // here would take down the delivering connection thread (and,
+        // before the session grew panic isolation, every later delivery
+        // on the session). A poisoned stream means a writer died mid-
+        // frame, so the bytes on it can't be trusted anyway — close it
+        // and detach cleanly.
+        let stream = match self.stream.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                let stream = poisoned.into_inner();
+                log::warn!("subscriber stream poisoned by an earlier panic; detaching sink");
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                anyhow::bail!("subscriber stream poisoned; sink detached");
+            }
+        };
         let mut writer = &*stream;
         let out = write_msg(
             &mut writer,
@@ -192,9 +218,22 @@ pub fn run_server_until(
     }
     let backend = build_backend(paths, &meta, cfg.backend, cfg.backend_threads, &tails)?;
 
+    // Cross-session micro-batching: one planner shared by every session,
+    // so compatible tail requests coalesce across sessions and frames
+    // into stacked backend calls (`--max-batch`, `--batch-window-ms`).
+    let planner = if cfg.batch.max_batch > 1 {
+        Some(BatchPlanner::new(Arc::clone(&backend), cfg.batch))
+    } else {
+        None
+    };
+
     let registry = Arc::new(SessionRegistry::new());
     for (name, sc) in specs {
-        registry.insert(DetectorSession::new(&name, meta.clone(), Arc::clone(&backend), sc)?);
+        let mut session = DetectorSession::new(&name, meta.clone(), Arc::clone(&backend), sc)?;
+        if let Some(planner) = &planner {
+            session.set_batch_planner(Arc::clone(planner));
+        }
+        registry.insert(session);
     }
     let shared = Arc::new(Shared {
         registry: Arc::clone(&registry),
@@ -207,12 +246,14 @@ pub fn run_server_until(
         .with_context(|| format!("bind port {}", cfg.port))?;
     listener.set_nonblocking(true)?;
     log::info!(
-        "edge server on 127.0.0.1:{} sessions={:?} devices={} backend={} threads={} resident={:?}",
+        "edge server on 127.0.0.1:{} sessions={:?} devices={} backend={} threads={} \
+         max-batch={} resident={:?}",
         cfg.port,
         registry.names(),
         meta.num_devices,
         backend.backend_name(),
         cfg.backend_threads,
+        cfg.batch.max_batch,
         backend.loaded_names()
     );
 
@@ -244,6 +285,15 @@ pub fn run_server_until(
     }
     for t in conn_threads {
         let _ = t.join();
+    }
+    if let Some(planner) = &planner {
+        let m = planner.metrics();
+        log::info!(
+            "batch planner: {} backend calls for {} frames ({} rejected)",
+            m.counter("batch_backend_calls"),
+            m.counter("batch_frames"),
+            m.counter("batch_rejected"),
+        );
     }
     Ok(registry)
 }
@@ -432,6 +482,8 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         "sessions",
         "backend",
         "backend-threads",
+        "max-batch",
+        "batch-window-ms",
     ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
@@ -447,6 +499,8 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     cfg.backend_threads = be.threads;
     cfg.decode.score_threshold = args.f32_or("score-thresh", cfg.decode.score_threshold)?;
     cfg.decode.nms_iou = args.f64_or("nms-iou", cfg.decode.nms_iou)?;
+    cfg.batch.max_batch = args.usize_or("max-batch", cfg.batch.max_batch)?;
+    cfg.batch.window = args.ms_or("batch-window-ms", cfg.batch.window.as_millis() as u64)?;
     let max = args.u64_or("max-frames", 0)?;
     cfg.max_frames = if max > 0 { Some(max) } else { None };
     if let Some(spec) = args.str_opt("sessions") {
@@ -533,6 +587,58 @@ mod tests {
         // Satellite regression: a typoed policy used to silently mean
         // zero-fill; it must now be rejected.
         assert!(server_config_from_args(&args(&["--policy", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn serve_batch_flags_parse() {
+        let cfg = server_config_from_args(&args(&[
+            "--max-batch",
+            "8",
+            "--batch-window-ms",
+            "5",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.batch.max_batch, 8);
+        assert_eq!(cfg.batch.window, Duration::from_millis(5));
+        // Defaults keep batching off — the per-frame path is untouched.
+        let d = server_config_from_args(&args(&[])).unwrap();
+        assert_eq!(d.batch.max_batch, 1);
+        assert!(server_config_from_args(&args(&["--max-batch", "lots"])).is_err());
+    }
+
+    #[test]
+    fn poisoned_tcp_sink_detaches_instead_of_panicking() {
+        // Regression for the `stream.lock().unwrap()` panic: poison the
+        // shared stream mutex the way a panicking writer would, then
+        // deliver — the sink must return an error (detach), not unwind.
+        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accepted = std::thread::spawn(move || listener.accept().unwrap().0);
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let _server_side = accepted.join().unwrap();
+
+        let shared = Arc::new(std::sync::Mutex::new(client));
+        let poisoner = Arc::clone(&shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("writer dies mid-send");
+        })
+        .join();
+        assert!(shared.lock().is_err(), "mutex must be poisoned for the test to bite");
+
+        let mut sink = TcpSink { stream: shared };
+        let result = FrameResult {
+            frame_id: 1,
+            detections: Vec::new(),
+            present: vec![true, true],
+            tail_secs: 0.0,
+            post_secs: 0.0,
+            sync_wait_secs: 0.0,
+            capture_micros: 0,
+            tail_error: false,
+        };
+        let out = sink.deliver("default", &result);
+        assert!(out.is_err(), "poisoned sink must detach via an error, not a panic");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! wire `session` field; each session keeps isolated state, config, and
 //! [`Metrics`].
 
-use super::scheduler::{FrameSync, LossPolicy, ReadyFrame, SyncStats};
+use super::scheduler::{BatchPlanner, FrameSync, LossPolicy, ReadyFrame, SyncStats};
 use crate::config::{IntegrationKind, ModelMeta};
 use crate::metrics::Metrics;
 use crate::model::{postprocess, DecodeParams, Detection};
@@ -47,6 +47,7 @@ pub enum FeaturePayload {
 }
 
 impl FeaturePayload {
+    /// Whether this payload arrived in the compressed (u8) encoding.
     pub fn is_quantized(&self) -> bool {
         matches!(self, FeaturePayload::Quantized(_))
     }
@@ -90,13 +91,19 @@ impl From<QuantTensor> for FeaturePayload {
 /// ```
 #[derive(Clone, Debug)]
 pub struct SessionConfig {
+    /// Integration method (selects the tail model).
     pub variant: IntegrationKind,
+    /// Frame-sync deadline: how long to wait for missing devices.
     pub deadline: Duration,
+    /// What to do with frames still incomplete at the deadline.
     pub policy: LossPolicy,
+    /// Decode/NMS parameters for this session's post-processing.
     pub decode: DecodeParams,
 }
 
 impl SessionConfig {
+    /// Defaults for `variant`: 200 ms deadline, zero-fill policy,
+    /// default decode parameters.
     pub fn new(variant: IntegrationKind) -> SessionConfig {
         SessionConfig {
             variant,
@@ -106,16 +113,19 @@ impl SessionConfig {
         }
     }
 
+    /// Override the frame-sync deadline.
     pub fn deadline(mut self, deadline: Duration) -> SessionConfig {
         self.deadline = deadline;
         self
     }
 
+    /// Override the incomplete-frame policy.
     pub fn policy(mut self, policy: LossPolicy) -> SessionConfig {
         self.policy = policy;
         self
     }
 
+    /// Override the decode/NMS parameters.
     pub fn decode(mut self, decode: DecodeParams) -> SessionConfig {
         self.decode = decode;
         self
@@ -126,11 +136,17 @@ impl SessionConfig {
 /// model consumes.
 #[derive(Clone, Debug)]
 pub struct FrameResult {
+    /// Frame id the devices stamped on their intermediate outputs.
     pub frame_id: u64,
+    /// Decoded, NMS-filtered detections.
     pub detections: Vec<Detection>,
     /// Which devices actually contributed (false = zero-filled).
     pub present: Vec<bool>,
-    /// Tail (alignment + integration + backbone + heads) execution time.
+    /// Tail-stage latency: alignment + integration + backbone + heads
+    /// execution, **plus** any micro-batching coalescing wait when a
+    /// [`BatchPlanner`] is attached (up to the batch window) — i.e. the
+    /// frame's server-side residence time in the tail stage, not pure
+    /// kernel cost.
     pub tail_secs: f64,
     /// Decode + NMS time.
     pub post_secs: f64,
@@ -152,13 +168,18 @@ pub enum SessionEvent {
     /// A frame completed (possibly with zero-filled devices).
     Result(FrameResult),
     /// A frame expired under [`LossPolicy::Drop`] and was discarded.
-    Dropped { frame_id: u64 },
+    Dropped {
+        /// Id of the discarded frame.
+        frame_id: u64,
+    },
 }
 
 /// Delivery hook for completed frames. The TCP server attaches one per
 /// subscriber connection; tests attach collectors. A sink returning an
 /// error is detached.
 pub trait ResultSink: Send {
+    /// Deliver one completed frame of `session`. Returning an error (or
+    /// panicking) detaches this sink.
     fn deliver(&mut self, session: &str, result: &FrameResult) -> Result<()>;
 }
 
@@ -176,6 +197,9 @@ pub struct DetectorSession {
     meta: ModelMeta,
     tail: String,
     backend: Arc<dyn ExecBackend>,
+    /// When set, tail executions route through the shared cross-session
+    /// batch planner instead of calling the backend directly.
+    planner: Option<Arc<BatchPlanner>>,
     sync: Mutex<FrameSync>,
     sinks: Mutex<Vec<Box<dyn ResultSink>>>,
     metrics: Arc<Metrics>,
@@ -207,6 +231,7 @@ impl DetectorSession {
             meta,
             tail,
             backend,
+            planner: None,
             sync: Mutex::new(sync),
             sinks: Mutex::new(Vec::new()),
             metrics: Arc::new(Metrics::new()),
@@ -214,20 +239,60 @@ impl DetectorSession {
         })
     }
 
+    /// Name this session is addressed by on the wire.
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// This session's configuration.
     pub fn config(&self) -> &SessionConfig {
         &self.cfg
     }
 
+    /// Model geometry (grid, devices, anchors) the session serves.
     pub fn meta(&self) -> &ModelMeta {
         &self.meta
     }
 
+    /// Executable name of the tail model this session runs.
     pub fn tail_name(&self) -> &str {
         &self.tail
+    }
+
+    /// Route this session's tail executions through a shared
+    /// [`BatchPlanner`], coalescing them with compatible requests from
+    /// other sessions and frames (cross-session micro-batching). Call
+    /// before the session starts serving; without a planner — or with a
+    /// planner whose `max_batch` is 1 — tails run directly on the
+    /// backend, byte-identical to the unbatched path.
+    pub fn set_batch_planner(&mut self, planner: Arc<BatchPlanner>) {
+        self.planner = Some(planner);
+    }
+
+    /// The batch planner attached to this session, if any.
+    pub fn batch_planner(&self) -> Option<&Arc<BatchPlanner>> {
+        self.planner.as_ref()
+    }
+
+    /// Execute this session's tail over one or more input sets: through
+    /// the batch planner when one is attached (burst entries become each
+    /// other's batch-mates), directly on the backend otherwise — the
+    /// single dispatch site [`run_tail`](Self::run_tail) and the
+    /// frame-completion path both funnel through.
+    fn exec_tail_many(&self, batch: Vec<Vec<HostTensor>>) -> Vec<Result<Vec<HostTensor>>> {
+        match &self.planner {
+            Some(p) => p.exec_many(&self.name, &self.tail, batch),
+            None => {
+                batch.into_iter().map(|inputs| self.backend.exec(&self.tail, inputs)).collect()
+            }
+        }
+    }
+
+    /// [`exec_tail_many`](Self::exec_tail_many) for a single input set.
+    fn exec_tail(&self, features: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        self.exec_tail_many(vec![features])
+            .pop()
+            .expect("one result per input set")
     }
 
     /// The execution backend this session runs its tail on.
@@ -342,9 +407,12 @@ impl DetectorSession {
             .into_iter()
             .map(|frame_id| SessionEvent::Dropped { frame_id })
             .collect();
-        for ready in expired {
-            events.push(self.process_ready(ready));
-        }
+        // A deadline burst (e.g. a device going dark expires many frames
+        // in one poll) resolves as one bulk tail execution: with a batch
+        // planner attached the burst coalesces into stacked backend calls
+        // sharing a single collection window, instead of paying one
+        // window per frame.
+        events.extend(self.process_ready_batch(expired));
         if !events.is_empty() {
             self.publish_sync_stats();
         }
@@ -360,7 +428,7 @@ impl DetectorSession {
     /// Execute the tail on already-synchronized features and return the
     /// raw (cls, boxes) outputs (debug dumps and cross-check tests).
     pub fn run_tail(&self, features: Vec<HostTensor>) -> Result<(Vec<f32>, Vec<f32>)> {
-        let out = self.backend.exec(&self.tail, features)?;
+        let out = self.exec_tail(features)?;
         anyhow::ensure!(out.len() == 2, "tail returns (cls, boxes)");
         let mut it = out.into_iter();
         let cls = it.next().unwrap().data;
@@ -371,55 +439,93 @@ impl DetectorSession {
     /// Fig-2 right half for one synchronized frame: tail → decode/NMS →
     /// metrics → sinks.
     fn process_ready(&self, ready: ReadyFrame) -> SessionEvent {
-        let t0 = Instant::now();
-        let sync_wait_secs = t0.duration_since(ready.first_arrival).as_secs_f64();
-        let result = self.backend.exec(&self.tail, ready.tensors);
-        let tail_secs = t0.elapsed().as_secs_f64();
-        self.metrics.record("tail_exec", tail_secs);
-        self.metrics.record("sync_wait", sync_wait_secs);
+        self.process_ready_batch(vec![ready]).pop().expect("one event per ready frame")
+    }
 
-        let t1 = Instant::now();
-        let (detections, tail_error) = match result {
-            Ok(out) if out.len() == 2 => {
-                (self.decode_detections(&out[0].data, &out[1].data), false)
-            }
-            Ok(out) => {
-                self.metrics.incr("tail_errors", 1);
-                log::warn!("tail returned {} outputs, expected 2", out.len());
-                (Vec::new(), true)
-            }
-            Err(e) => {
-                self.metrics.incr("tail_errors", 1);
-                log::warn!("tail execution failed: {e:#}");
-                (Vec::new(), true)
-            }
-        };
-        let post_secs = t1.elapsed().as_secs_f64();
-        self.metrics.record("post", post_secs);
-        self.metrics.incr("frames_done", 1);
-        self.frames_done.fetch_add(1, Ordering::SeqCst);
-        // End-to-end latency at the paper's finish line: device capture →
-        // decoded detections, about to be handed to the ResultSinks.
-        if ready.capture_micros > 0 {
-            let now = crate::utils::unix_micros();
-            self.metrics
-                .record("e2e", now.saturating_sub(ready.capture_micros) as f64 * 1e-6);
+    /// [`process_ready`](Self::process_ready) over a burst of frames.
+    /// Tails execute in bulk — through [`BatchPlanner::exec_many`] when a
+    /// planner is attached, so sibling frames of the burst become each
+    /// other's batch-mates — then each frame decodes, records metrics,
+    /// and delivers to the sinks individually. `tail_secs` is the burst's
+    /// shared tail-stage residence time (there is no meaningful per-frame
+    /// split of a stacked backend call).
+    fn process_ready_batch(&self, ready: Vec<ReadyFrame>) -> Vec<SessionEvent> {
+        if ready.is_empty() {
+            return Vec::new();
         }
+        let t0 = Instant::now();
+        type FrameMeta = (u64, Vec<bool>, Instant, u64);
+        let (frames, batch): (Vec<FrameMeta>, Vec<Vec<HostTensor>>) = ready
+            .into_iter()
+            .map(|r| ((r.frame_id, r.present, r.first_arrival, r.capture_micros), r.tensors))
+            .unzip();
+        let results = self.exec_tail_many(batch);
+        let tail_secs = t0.elapsed().as_secs_f64();
 
-        let result = FrameResult {
-            frame_id: ready.frame_id,
-            detections,
-            present: ready.present,
-            tail_secs,
-            post_secs,
-            sync_wait_secs,
-            capture_micros: ready.capture_micros,
-            tail_error,
-        };
-        let mut sinks = self.sinks.lock().unwrap();
-        sinks.retain_mut(|s| s.deliver(&self.name, &result).is_ok());
-        drop(sinks);
-        SessionEvent::Result(result)
+        frames
+            .into_iter()
+            .zip(results)
+            .map(|((frame_id, present, first_arrival, capture_micros), result)| {
+                let sync_wait_secs = t0.duration_since(first_arrival).as_secs_f64();
+                self.metrics.record("tail_exec", tail_secs);
+                self.metrics.record("sync_wait", sync_wait_secs);
+
+                let t1 = Instant::now();
+                let (detections, tail_error) = match result {
+                    Ok(out) if out.len() == 2 => {
+                        (self.decode_detections(&out[0].data, &out[1].data), false)
+                    }
+                    Ok(out) => {
+                        self.metrics.incr("tail_errors", 1);
+                        log::warn!("tail returned {} outputs, expected 2", out.len());
+                        (Vec::new(), true)
+                    }
+                    Err(e) => {
+                        self.metrics.incr("tail_errors", 1);
+                        log::warn!("tail execution failed: {e:#}");
+                        (Vec::new(), true)
+                    }
+                };
+                let post_secs = t1.elapsed().as_secs_f64();
+                self.metrics.record("post", post_secs);
+                self.metrics.incr("frames_done", 1);
+                self.frames_done.fetch_add(1, Ordering::SeqCst);
+                // End-to-end latency at the paper's finish line: device
+                // capture → decoded detections, about to be handed to the
+                // ResultSinks.
+                if capture_micros > 0 {
+                    let now = crate::utils::unix_micros();
+                    self.metrics
+                        .record("e2e", now.saturating_sub(capture_micros) as f64 * 1e-6);
+                }
+
+                let result = FrameResult {
+                    frame_id,
+                    detections,
+                    present,
+                    tail_secs,
+                    post_secs,
+                    sync_wait_secs,
+                    capture_micros,
+                    tail_error,
+                };
+                let mut sinks = self.sinks.lock().unwrap();
+                // A sink that panics mid-deliver (e.g. a poisoned stream
+                // mutex inside a TCP sink) must not unwind out of here
+                // with the sinks lock held — that would poison it and
+                // kill result delivery for every subscriber of this
+                // session, forever. Treat a panic like a delivery error:
+                // detach the sink, keep serving the rest.
+                sinks.retain_mut(|s| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        s.deliver(&self.name, &result)
+                    }))
+                    .map_or(false, |r| r.is_ok())
+                });
+                drop(sinks);
+                SessionEvent::Result(result)
+            })
+            .collect()
     }
 
     /// Mirror the synchronizer counters into this session's metrics so
@@ -445,6 +551,7 @@ pub struct SessionRegistry {
 }
 
 impl SessionRegistry {
+    /// An empty registry.
     pub fn new() -> SessionRegistry {
         SessionRegistry::default()
     }
@@ -460,18 +567,22 @@ impl SessionRegistry {
         arc
     }
 
+    /// Look up a session by its wire name.
     pub fn get(&self, name: &str) -> Option<Arc<DetectorSession>> {
         self.sessions.lock().unwrap().get(name).cloned()
     }
 
+    /// Names of every hosted session, sorted.
     pub fn names(&self) -> Vec<String> {
         self.sessions.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Number of hosted sessions.
     pub fn len(&self) -> usize {
         self.sessions.lock().unwrap().len()
     }
 
+    /// Whether the registry hosts no sessions.
     pub fn is_empty(&self) -> bool {
         self.sessions.lock().unwrap().is_empty()
     }
@@ -759,6 +870,45 @@ mod tests {
         session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
         session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
         assert_eq!(session.sinks.lock().unwrap().len(), 0, "failed sink must detach");
+    }
+
+    #[test]
+    fn panicking_sink_is_detached_without_poisoning_delivery() {
+        // Regression: a sink that panics mid-deliver used to unwind with
+        // the sinks mutex held, poisoning it — every later frame of the
+        // session then panicked on `lock().unwrap()`. Now the panic is
+        // contained, the sink detached, and healthy sinks keep receiving.
+        struct PanicSink;
+        impl ResultSink for PanicSink {
+            fn deliver(&mut self, _s: &str, _r: &FrameResult) -> Result<()> {
+                panic!("subscriber blew up mid-send");
+            }
+        }
+        let backend = empty_backend();
+        let session = DetectorSession::new(
+            "p",
+            ModelMeta::test_default(),
+            backend,
+            SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        let got = Arc::new(Mutex::new(Vec::new()));
+        session.attach_sink(Box::new(PanicSink));
+        session.attach_sink(Box::new(CollectSink { got: Arc::clone(&got) }));
+
+        session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        let events = session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(events.len(), 1, "the frame must still complete");
+        assert_eq!(session.sinks.lock().unwrap().len(), 1, "panicking sink detached");
+
+        // The next frame delivers normally — the mutex is not poisoned.
+        session.submit(2, 0, FeaturePayload::Raw(feat())).unwrap();
+        session.submit(2, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(
+            got.lock().unwrap().as_slice(),
+            &[("p".to_string(), 1u64), ("p".to_string(), 2u64)],
+            "healthy sink must receive every frame"
+        );
     }
 
     #[test]

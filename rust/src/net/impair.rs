@@ -104,15 +104,19 @@ pub struct ImpairedLink<W: Write> {
 }
 
 impl<W: Write> ImpairedLink<W> {
+    /// Wrap `inner` with fault injection; `None` is a transparent
+    /// pass-through.
     pub fn new(inner: W, cfg: Option<ImpairConfig>) -> ImpairedLink<W> {
         let seed = cfg.as_ref().map(|c| c.seed).unwrap_or(0);
         ImpairedLink { inner, cfg, rng: Pcg64::new(seed), held: None, stats: ImpairStats::default() }
     }
 
+    /// What the link has done so far (drop/delay/reorder counters).
     pub fn stats(&self) -> ImpairStats {
         self.stats
     }
 
+    /// The wrapped writer (e.g. to reach socket options).
     pub fn get_mut(&mut self) -> &mut W {
         &mut self.inner
     }

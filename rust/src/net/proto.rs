@@ -43,46 +43,74 @@ pub const MAX_SESSION_NAME: usize = 255;
 /// A detection on the wire (matches `model::Detection`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WireDetection {
+    /// Box as `[x, y, z, dx, dy, dz, yaw]` in the common frame.
     pub bbox: [f32; 7],
+    /// Classification confidence after sigmoid.
     pub score: f32,
+    /// Class index into the model's anchor/class table.
     pub class_id: u32,
 }
 
-/// Protocol messages.
+/// Protocol messages. The full byte-level layout — field order, the
+/// optional-trailing-field compatibility rules, quantization encoding —
+/// is specified in `docs/WIRE_PROTOCOL.md`.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Device announces itself after connecting.
-    Hello { device_id: u32, session: String },
-    /// Head-model output for one frame. `capture_micros` is the device's
-    /// wall-clock frame-capture stamp (0 = unstamped legacy client).
-    Features {
-        frame_id: u64,
+    Hello {
+        /// The device slot this worker claims.
         device_id: u32,
-        tensor: HostTensor,
+        /// Session the device will feed ([`DEFAULT_SESSION`] for legacy
+        /// clients).
         session: String,
+    },
+    /// Head-model output for one frame.
+    Features {
+        /// Frame id the device stamped on this capture.
+        frame_id: u64,
+        /// Sending device's slot.
+        device_id: u32,
+        /// Full-precision intermediate output.
+        tensor: HostTensor,
+        /// Addressed session.
+        session: String,
+        /// Wall-clock frame-capture stamp in µs (0 = unstamped legacy
+        /// client).
         capture_micros: u64,
     },
     /// u8-quantized head output (paper §IV-E compressed intermediate
     /// outputs — 4× smaller payload).
     FeaturesQ {
+        /// Frame id the device stamped on this capture.
         frame_id: u64,
+        /// Sending device's slot.
         device_id: u32,
+        /// Quantized intermediate output.
         tensor: super::QuantTensor,
+        /// Addressed session.
         session: String,
+        /// Wall-clock frame-capture stamp in µs (0 = unstamped).
         capture_micros: u64,
     },
     /// Final detections for one frame (server → subscriber).
-    /// `capture_micros` echoes the earliest device capture stamp of the
-    /// frame (0 when no device stamped it), so subscribers on the same
-    /// clock domain can account capture → delivery latency.
     Result {
+        /// Frame these detections resolve.
         frame_id: u64,
+        /// Decoded, NMS-filtered detections.
         detections: Vec<WireDetection>,
+        /// Server-side tail-stage latency in µs (tail execution plus any
+        /// micro-batching coalescing wait).
         server_micros: u64,
+        /// Echo of the earliest device capture stamp of the frame (0
+        /// when no device stamped it), so subscribers on the same clock
+        /// domain can account capture → delivery latency.
         capture_micros: u64,
     },
     /// A subscriber asks to receive `Result`s for one session.
-    Subscribe { session: String },
+    Subscribe {
+        /// Session to subscribe to.
+        session: String,
+    },
     /// Graceful shutdown.
     Bye,
 }

@@ -10,13 +10,18 @@ use anyhow::Result;
 /// A u8-quantized tensor: `value ≈ scale * q + min`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QuantTensor {
+    /// Dimensions, outermost first (matches the f32 tensor's).
     pub shape: Vec<usize>,
+    /// Value decoded by code 0.
     pub min: f32,
+    /// Step between adjacent codes (0 encodes a constant tensor).
     pub scale: f32,
+    /// One u8 code per element, row-major.
     pub data: Vec<u8>,
 }
 
 impl QuantTensor {
+    /// Approximate serialized size in bytes (payload accounting).
     pub fn byte_len(&self) -> usize {
         self.data.len() + self.shape.len() * 8 + 16
     }

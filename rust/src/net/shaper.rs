@@ -20,6 +20,7 @@ pub struct ShapedWriter<W: Write> {
 }
 
 impl<W: Write> ShapedWriter<W> {
+    /// Wrap `inner`, pacing sustained writes to `bits_per_sec`.
     pub fn new(inner: W, bits_per_sec: f64) -> ShapedWriter<W> {
         ShapedWriter {
             inner,
@@ -34,6 +35,7 @@ impl<W: Write> ShapedWriter<W> {
         ShapedWriter { inner, bytes_per_sec: f64::INFINITY, next_free: Instant::now(), chunk: usize::MAX }
     }
 
+    /// The wrapped writer (e.g. to reach socket options).
     pub fn get_mut(&mut self) -> &mut W {
         &mut self.inner
     }

@@ -4,7 +4,7 @@
 //!
 //! Two implementations ship:
 //!
-//! - [`XlaBackend`] (feature `xla`, default): loads the AOT artifacts
+//! - `XlaBackend` (feature `xla`, default): loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) emitted by `python/compile/aot.py` and
 //!   executes them through PJRT. The `xla` crate's handles are not
 //!   `Send` (raw pointers), so the backend owns a **pool of N engine
@@ -12,12 +12,20 @@
 //!   compiled executables; requests land in one shared queue and idle
 //!   workers steal them, so independent sessions/frames execute
 //!   concurrently up to the pool size (`scmii serve --backend-threads N`).
-//! - [`native::NativeBackend`] (feature `native`): a pure-Rust
+//! - `native::NativeBackend` (feature `native`): a pure-Rust
 //!   implementation of the SC-MII graph (voxelize → per-voxel head,
 //!   gather alignment → integration → BEV conv → detection heads) that
 //!   needs **no HLO artifacts and no native libraries**; weights come
 //!   from `.npy` files under `artifacts/native/` or a deterministic
 //!   synthetic fallback.
+//!
+//! Besides per-request [`ExecBackend::exec`], backends expose
+//! [`ExecBackend::exec_batch`] — one call over a micro-batch of
+//! independent input sets. The coordinator's
+//! [`BatchPlanner`](crate::coordinator::scheduler::BatchPlanner)
+//! coalesces compatible tail requests across sessions into such batches,
+//! dropping the steady-state server cost per frame from one backend
+//! round-trip to ~1/B of one.
 //!
 //! Interchange for the XLA path is HLO **text** — the image's
 //! xla_extension 0.5.1 rejects serialized protos from jax ≥ 0.5 (64-bit
@@ -41,11 +49,14 @@ use std::sync::Arc;
 /// A host-side tensor (f32, row-major).
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
+    /// Dimensions, outermost first (row-major layout).
     pub shape: Vec<usize>,
+    /// Flat element storage; `data.len() == shape.iter().product()`.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// Build a tensor, validating that `shape` matches `data.len()`.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
         anyhow::ensure!(
             shape.iter().product::<usize>() == data.len(),
@@ -56,18 +67,22 @@ impl HostTensor {
         Ok(HostTensor { shape, data })
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> HostTensor {
         HostTensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Approximate serialized size in bytes (payload accounting).
     pub fn byte_len(&self) -> usize {
         self.data.len() * 4 + self.shape.len() * 8 + 16
     }
@@ -91,16 +106,41 @@ pub trait ExecBackend: Send + Sync {
 
     /// Names currently resident (diagnostics / startup logging).
     fn loaded_names(&self) -> Vec<String>;
+
+    /// Execute `name` once per entry of a **micro-batch** of independent
+    /// input sets, returning one result per entry in order.
+    ///
+    /// The default implementation is a sequential loop over
+    /// [`exec`](ExecBackend::exec) — semantically identical to N separate
+    /// calls. Backends that can do better override it: the native backend
+    /// stacks the batch along a leading axis through its BEV/head
+    /// kernels, and the engine pool routes the whole batch as one queue
+    /// job on a single-worker pool while scattering entries across idle
+    /// workers on a multi-worker pool (batching must not forfeit pool
+    /// parallelism). Errors are isolated per entry — one bad input set
+    /// must not fail its batch-mates — which the coordinator's
+    /// [`BatchPlanner`](crate::coordinator::scheduler::BatchPlanner)
+    /// relies on.
+    fn exec_batch(
+        &self,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        batch.into_iter().map(|inputs| self.exec(name, inputs)).collect()
+    }
 }
 
 /// Which [`ExecBackend`] implementation to construct (CLI `--backend`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// PJRT/HLO engine pool (feature `xla`).
     Xla,
+    /// Pure-Rust kernels, no artifacts (feature `native`).
     Native,
 }
 
 impl BackendKind {
+    /// Parse a `--backend` flag value (`"xla"` | `"native"`).
     pub fn parse(s: &str) -> Result<BackendKind> {
         match s {
             "xla" => Ok(BackendKind::Xla),
@@ -109,6 +149,7 @@ impl BackendKind {
         }
     }
 
+    /// Canonical CLI spelling of this backend kind.
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Xla => "xla",
@@ -183,6 +224,7 @@ impl Engine {
         Ok(Engine { client, executables: HashMap::new() })
     }
 
+    /// PJRT platform name of the underlying client (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -214,10 +256,12 @@ impl Engine {
         Ok(())
     }
 
+    /// Whether `name` has been compiled into this engine.
     pub fn is_loaded(&self, name: &str) -> bool {
         self.executables.contains_key(name)
     }
 
+    /// Names of the compiled executables resident in this engine.
     pub fn loaded_names(&self) -> Vec<String> {
         self.executables.keys().cloned().collect()
     }
@@ -331,6 +375,18 @@ impl ExecBackend for XlaBackend {
     fn loaded_names(&self) -> Vec<String> {
         self.pool.loaded_names()
     }
+
+    fn exec_batch(
+        &self,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        // Compiled HLO executables are fixed-shape, so there is no
+        // stacked kernel to run; the pool decides the dispatch strategy —
+        // one job on a single-worker pool (saves N-1 queue round-trips),
+        // scattered entries on a multi-worker pool (keeps parallelism).
+        self.pool.exec_batch(name, batch)
+    }
 }
 
 #[cfg(test)]
@@ -343,6 +399,33 @@ mod tests {
         assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
         let z = HostTensor::zeros(&[4, 4]);
         assert_eq!(z.len(), 16);
+    }
+
+    #[test]
+    fn default_exec_batch_loops_with_per_entry_errors() {
+        /// Echoes non-empty input sets, errors on empty ones.
+        struct Echo;
+        impl ExecBackend for Echo {
+            fn backend_name(&self) -> &str {
+                "echo"
+            }
+            fn exec(&self, _n: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+                anyhow::ensure!(!inputs.is_empty(), "empty input set");
+                Ok(inputs)
+            }
+            fn load(&self, _n: &str) -> Result<()> {
+                Ok(())
+            }
+            fn loaded_names(&self) -> Vec<String> {
+                Vec::new()
+            }
+        }
+        let t = HostTensor::zeros(&[2]);
+        let results = Echo.exec_batch("m", vec![vec![t.clone()], vec![], vec![t.clone()]]);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].as_ref().unwrap(), &vec![t.clone()]);
+        assert!(results[1].is_err(), "bad entry must not fail its batch-mates");
+        assert_eq!(results[2].as_ref().unwrap(), &vec![t]);
     }
 
     #[test]

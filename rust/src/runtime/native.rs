@@ -23,6 +23,17 @@
 //!
 //! Execution happens on the caller's thread (`&self`), so the backend is
 //! inherently concurrent — no pool needed.
+//!
+//! ## Batched tails
+//!
+//! [`ExecBackend::exec_batch`] is overridden for tail models with a
+//! genuinely batched path: per-frame alignment + integration feed a
+//! **stacked** BEV trunk ([`BevStage::run_batch`]) — the 3×3 conv
+//! ([`conv2d_batch`]) reuses every weight row across all frames of the
+//! batch, and the 1×1 cls/box heads run as a single [`dense_per_cell`]
+//! pass over the frames concatenated along a leading batch axis. The
+//! accumulation order per frame is identical to the unbatched kernels,
+//! so batched and unbatched outputs are bit-identical.
 
 use super::{ExecBackend, HostTensor};
 use crate::align::AlignMap;
@@ -119,6 +130,80 @@ pub fn conv2d(
     out
 }
 
+/// [`conv2d`] over a micro-batch of same-shaped `(H, W, C_in)` inputs
+/// sharing one set of weights. The batch loop sits *inside* the kernel
+/// position loop, so each weight row is loaded once and applied to every
+/// frame of the batch — the amortization a per-frame loop cannot get.
+/// Per frame, the accumulation order is identical to [`conv2d`], so
+/// outputs are bit-identical to B separate calls.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_batch(
+    inputs: &[&[f32]],
+    h: usize,
+    w: usize,
+    c_in: usize,
+    weights: &[f32],
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    relu: bool,
+) -> Vec<Vec<f32>> {
+    let c_out = bias.len();
+    for input in inputs {
+        assert_eq!(input.len(), h * w * c_in, "conv2d_batch input shape mismatch");
+    }
+    assert_eq!(weights.len(), k * k * c_in * c_out, "conv2d_batch weight shape mismatch");
+    assert!(k % 2 == 1, "odd kernels only");
+    let (ho, wo) = (h / stride, w / stride);
+    let half = (k / 2) as i64;
+    let mut outs = vec![vec![0.0f32; ho * wo * c_out]; inputs.len()];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let obase = (oy * wo + ox) * c_out;
+            for out in outs.iter_mut() {
+                out[obase..obase + c_out].copy_from_slice(bias);
+            }
+            for ky in 0..k {
+                let iy = (oy * stride) as i64 + ky as i64 - half;
+                if iy < 0 || iy >= h as i64 {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride) as i64 + kx as i64 - half;
+                    if ix < 0 || ix >= w as i64 {
+                        continue;
+                    }
+                    let ibase = (iy as usize * w + ix as usize) * c_in;
+                    let wbase = (ky * k + kx) * c_in * c_out;
+                    for ci in 0..c_in {
+                        let wrow = &weights[wbase + ci * c_out..wbase + (ci + 1) * c_out];
+                        for (bi, input) in inputs.iter().enumerate() {
+                            let v = input[ibase + ci];
+                            if v == 0.0 {
+                                continue;
+                            }
+                            let out = &mut outs[bi][obase..obase + c_out];
+                            for (o, &wv) in out.iter_mut().zip(wrow) {
+                                *o += v * wv;
+                            }
+                        }
+                    }
+                }
+            }
+            if relu {
+                for out in outs.iter_mut() {
+                    for o in &mut out[obase..obase + c_out] {
+                        if *o < 0.0 {
+                            *o = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    outs
+}
+
 /// Per-cell dense layer: `(cells, c_in) × (c_in, c_out) + bias` —
 /// equivalent to a 1×1 conv. Skips zero activations.
 pub fn dense_per_cell(
@@ -166,17 +251,25 @@ pub fn synthetic_weights(model: &str, layer: &str, len: usize) -> Vec<f32> {
 /// 3×3 conv + ReLU → 1×1 cls/box heads at the head resolution.
 #[derive(Clone, Debug)]
 pub struct BevStage {
+    /// Collapsed input channels (`D·C` of the integrated map).
     pub c_in: usize,
+    /// Hidden channels of the BEV conv ([`NATIVE_C_MID`]).
     pub c_mid: usize,
+    /// Spatial stride of the BEV conv (grid → head resolution).
     pub stride: usize,
+    /// Anchors per BEV cell (`A`).
     pub n_anchors: usize,
     /// 3×3 conv, HWIO `(3, 3, c_in, c_mid)`.
     pub conv_w: Vec<f32>,
+    /// 3×3 conv bias, `(c_mid,)`.
     pub conv_b: Vec<f32>,
-    /// 1×1 heads, `(c_mid, A)` / `(c_mid, A·8)`.
+    /// 1×1 cls head, `(c_mid, A)`.
     pub cls_w: Vec<f32>,
+    /// cls head bias, `(A,)`.
     pub cls_b: Vec<f32>,
+    /// 1×1 box head, `(c_mid, A·8)`.
     pub box_w: Vec<f32>,
+    /// box head bias, `(A·8,)`.
     pub box_b: Vec<f32>,
 }
 
@@ -205,17 +298,81 @@ impl BevStage {
             HostTensor::new(vec![hb, wb, self.n_anchors, 8], boxes)?,
         ))
     }
+
+    /// [`run`](Self::run) over a micro-batch of same-shaped integrated
+    /// maps, stacked along a leading batch axis: the BEV conv runs as one
+    /// [`conv2d_batch`] call sharing weight loads across frames, and the
+    /// 1×1 heads run as a single [`dense_per_cell`] pass over all
+    /// `B·hb·wb` cells. Outputs are bit-identical to B [`run`](Self::run)
+    /// calls.
+    pub fn run_batch(&self, batch: &[&FeatureMap]) -> Result<Vec<(HostTensor, HostTensor)>> {
+        let Some(first) = batch.first() else {
+            return Ok(Vec::new());
+        };
+        let [d, h, w, c] = first.shape();
+        for m in batch {
+            anyhow::ensure!(
+                m.shape() == first.shape(),
+                "batched BEV stage needs same-shaped maps: {:?} vs {:?}",
+                m.shape(),
+                first.shape()
+            );
+        }
+        anyhow::ensure!(
+            d * c == self.c_in,
+            "BEV stage expects {} collapsed channels, map has {}",
+            self.c_in,
+            d * c
+        );
+        anyhow::ensure!(
+            h % self.stride == 0 && w % self.stride == 0,
+            "grid ({h}, {w}) not divisible by BEV stride {}",
+            self.stride
+        );
+        let bevs: Vec<Vec<f32>> = batch.iter().map(|m| bev_collapse(m)).collect();
+        let bev_refs: Vec<&[f32]> = bevs.iter().map(|b| b.as_slice()).collect();
+        let mids = conv2d_batch(
+            &bev_refs, h, w, self.c_in, &self.conv_w, &self.conv_b, 3, self.stride, true,
+        );
+        let (hb, wb) = (h / self.stride, w / self.stride);
+        let cells = hb * wb;
+        // Stack the batch along a leading axis for the 1×1 heads: one
+        // dense pass over B·hb·wb cells.
+        let mut stacked = Vec::with_capacity(batch.len() * cells * self.c_mid);
+        for mid in &mids {
+            stacked.extend_from_slice(mid);
+        }
+        let cls_all =
+            dense_per_cell(&stacked, batch.len() * cells, self.c_mid, &self.cls_w, &self.cls_b);
+        let box_all =
+            dense_per_cell(&stacked, batch.len() * cells, self.c_mid, &self.box_w, &self.box_b);
+        let a = self.n_anchors;
+        (0..batch.len())
+            .map(|b| {
+                let cls = cls_all[b * cells * a..(b + 1) * cells * a].to_vec();
+                let boxes = box_all[b * cells * a * 8..(b + 1) * cells * a * 8].to_vec();
+                Ok((
+                    HostTensor::new(vec![hb, wb, a], cls)?,
+                    HostTensor::new(vec![hb, wb, a, 8], boxes)?,
+                ))
+            })
+            .collect()
+    }
 }
 
 /// Split-point head: voxel statistics → per-voxel linear → ReLU.
 #[derive(Clone, Debug)]
 pub struct NativeHead {
-    /// `(c_in, c_head)`.
+    /// Per-voxel projection, `(c_in, c_head)`.
     pub w: Vec<f32>,
+    /// Projection bias, `(c_head,)`.
     pub b: Vec<f32>,
 }
 
 impl NativeHead {
+    /// Voxelize one `(max_points, 4)` cloud and project each voxel's
+    /// statistics to `c_head` channels (+ ReLU) — the intermediate
+    /// output that goes on the wire.
     pub fn run(&self, meta: &ModelMeta, input: &HostTensor) -> Result<FeatureMap> {
         let g = &meta.grid;
         anyhow::ensure!(
@@ -240,14 +397,18 @@ impl NativeHead {
 /// Edge-server tail: align → integrate → BEV trunk + heads.
 #[derive(Clone, Debug)]
 pub struct NativeTail {
+    /// Which integration method this tail applies.
     pub kind: IntegrationKind,
     /// One gather map per device (device 0 is the identity reference).
     pub aligns: Vec<AlignMap>,
     /// Conv-integration weights `(k, k, k, devices·c_head, c_head)`
     /// (DHWIO, matching [`conv_integrate`]); empty for `Max`.
     pub integrate_w: Vec<f32>,
+    /// Conv-integration bias, `(c_head,)`; empty for `Max`.
     pub integrate_b: Vec<f32>,
+    /// Integration kernel size (1 for `Max`/`ConvK1`, 3 for `ConvK3`).
     pub k: usize,
+    /// The shared BEV trunk + detection heads.
     pub bev: BevStage,
 }
 
@@ -263,7 +424,10 @@ impl NativeTail {
         }
     }
 
-    pub fn run(&self, meta: &ModelMeta, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+    /// Per-frame front half of the tail: validate the device maps, apply
+    /// the gather alignment, integrate. Shared by [`run`](Self::run) and
+    /// [`run_batch`](Self::run_batch).
+    fn prepare(&self, meta: &ModelMeta, inputs: Vec<HostTensor>) -> Result<FeatureMap> {
         anyhow::ensure!(
             inputs.len() == meta.num_devices,
             "tail expects {} device maps, got {}",
@@ -283,20 +447,69 @@ impl NativeTail {
             let map = FeatureMap::from_vec(expect[0], expect[1], expect[2], expect[3], t.data)?;
             aligned.push(self.aligns[dev].apply(&map));
         }
-        let integrated = self.integrate(&aligned);
+        Ok(self.integrate(&aligned))
+    }
+
+    /// Run the full tail on one frame's device maps. Returns `[cls, boxes]`.
+    pub fn run(&self, meta: &ModelMeta, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let integrated = self.prepare(meta, inputs)?;
         let (cls, boxes) = self.bev.run(&integrated)?;
         Ok(vec![cls, boxes])
+    }
+
+    /// Run the tail over a micro-batch of frames, one result per entry.
+    ///
+    /// Alignment + integration stay per frame (their cost is
+    /// gather-bound), but the BEV trunk and detection heads run stacked
+    /// along a leading batch axis ([`BevStage::run_batch`]). Errors are
+    /// per entry: a frame with bad shapes gets its own `Err` while its
+    /// batch-mates still execute, and outputs are bit-identical to
+    /// per-frame [`run`](Self::run) calls.
+    pub fn run_batch(
+        &self,
+        meta: &ModelMeta,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        let prepared: Vec<Result<FeatureMap>> =
+            batch.into_iter().map(|inputs| self.prepare(meta, inputs)).collect();
+        let healthy: Vec<&FeatureMap> = prepared.iter().filter_map(|r| r.as_ref().ok()).collect();
+        let heads = match self.bev.run_batch(&healthy) {
+            Ok(h) => h,
+            Err(e) => {
+                // A trunk-level failure (shape mismatch vs the stage
+                // config) applies to every healthy entry identically.
+                let msg = format!("batched BEV stage failed: {e:#}");
+                return prepared
+                    .into_iter()
+                    .map(|r| r.and_then(|_| Err(anyhow::anyhow!("{msg}"))))
+                    .collect();
+            }
+        };
+        let mut heads = heads.into_iter();
+        prepared
+            .into_iter()
+            .map(|r| {
+                r.map(|_| {
+                    let (cls, boxes) =
+                        heads.next().expect("one BEV output per healthy batch entry");
+                    vec![cls, boxes]
+                })
+            })
+            .collect()
     }
 }
 
 /// Baseline full model: head + BEV trunk over a single cloud.
 #[derive(Clone, Debug)]
 pub struct NativeFull {
+    /// The voxelize → per-voxel-linear front half.
     pub head: NativeHead,
+    /// The BEV trunk + detection heads.
     pub bev: BevStage,
 }
 
 impl NativeFull {
+    /// Run the full baseline on one cloud. Returns `[cls, boxes]`.
     pub fn run(&self, meta: &ModelMeta, input: &HostTensor) -> Result<Vec<HostTensor>> {
         let feat = self.head.run(meta, input)?;
         let (cls, boxes) = self.bev.run(&feat)?;
@@ -307,8 +520,11 @@ impl NativeFull {
 /// One resident native model.
 #[derive(Clone, Debug)]
 pub enum NativeModel {
+    /// Split-point head (device side).
     Head(NativeHead),
+    /// Edge-server tail (align → integrate → BEV + heads).
     Tail(NativeTail),
+    /// Single-cloud baseline (head + BEV + heads).
     Full(NativeFull),
 }
 
@@ -324,6 +540,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Build a backend from explicit calibration poses and an optional
+    /// `.npy` weights directory (`None` = synthetic weights only).
     pub fn new(
         meta: ModelMeta,
         poses: Vec<Pose>,
@@ -359,6 +577,7 @@ impl NativeBackend {
         NativeBackend::new(meta.clone(), poses, Some(paths.artifacts.join("native")))
     }
 
+    /// The model geometry this backend was built for.
     pub fn meta(&self) -> &ModelMeta {
         &self.meta
     }
@@ -521,6 +740,32 @@ impl ExecBackend for NativeBackend {
     fn loaded_names(&self) -> Vec<String> {
         self.models.lock().unwrap().keys().cloned().collect()
     }
+
+    fn exec_batch(
+        &self,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        let model = self.models.lock().unwrap().get(name).cloned();
+        let Some(model) = model else {
+            return batch
+                .iter()
+                .map(|_| {
+                    Err(anyhow::anyhow!(
+                        "model {name:?} not loaded in native backend (call load first)"
+                    ))
+                })
+                .collect();
+        };
+        match &*model {
+            // The tail is the server hot path — the one the coordinator's
+            // batch planner feeds — and gets the stacked kernels.
+            NativeModel::Tail(tail) => tail.run_batch(&self.meta, batch),
+            // Heads/baselines run per entry (single-input models; no
+            // server-side batching pressure).
+            _ => batch.into_iter().map(|inputs| self.exec(name, inputs)).collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -618,6 +863,88 @@ mod tests {
         let a = b.exec(&tail, vec![t.clone(), t.clone()]).unwrap();
         let c = b.exec(&tail, vec![t.clone(), t]).unwrap();
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn batched_tail_is_bit_identical_to_per_frame_exec() {
+        let b = backend();
+        let meta = b.meta().clone();
+        let shape = feat_shape(&meta);
+        let mut rng = crate::utils::rng::Pcg64::new(17);
+        let mut feature = || {
+            let mut t = HostTensor::zeros(&shape);
+            for v in t.data.iter_mut() {
+                if rng.uniform_f32() < 0.2 {
+                    *v = rng.uniform_f32() * 2.0 - 0.5;
+                }
+            }
+            t
+        };
+        for kind in IntegrationKind::all() {
+            let tail = meta.variant(kind).unwrap().tail.clone();
+            b.load(&tail).unwrap();
+            let batch: Vec<Vec<HostTensor>> =
+                (0..3).map(|_| vec![feature(), feature()]).collect();
+            let batched = b.exec_batch(&tail, batch.clone());
+            assert_eq!(batched.len(), 3);
+            for (entry, inputs) in batched.into_iter().zip(batch) {
+                let single = b.exec(&tail, inputs).unwrap();
+                assert_eq!(
+                    entry.unwrap(),
+                    single,
+                    "{kind:?}: batched output must be bit-identical to per-frame exec"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_tail_isolates_bad_entries() {
+        let b = backend();
+        let meta = b.meta().clone();
+        let shape = feat_shape(&meta);
+        let tail = meta.variant(IntegrationKind::Max).unwrap().tail.clone();
+        b.load(&tail).unwrap();
+        let good = vec![HostTensor::zeros(&shape), HostTensor::zeros(&shape)];
+        let bad = vec![HostTensor::zeros(&[2, 2])]; // wrong arity + shape
+        let results = b.exec_batch(&tail, vec![good.clone(), bad, good.clone()]);
+        assert_eq!(results.len(), 3);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err(), "bad frame must fail alone");
+        assert!(results[2].is_ok(), "batch-mates of a bad frame must survive");
+        assert_eq!(
+            results[0].as_ref().unwrap(),
+            &b.exec(&tail, good).unwrap(),
+            "surviving entries still match the per-frame path"
+        );
+        // Unloaded model: every entry errors, none panics.
+        let results = b.exec_batch("ghost", vec![vec![], vec![]]);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.is_err()));
+    }
+
+    #[test]
+    fn conv2d_batch_matches_conv2d() {
+        let mut rng = crate::utils::rng::Pcg64::new(23);
+        let (h, w, c_in, c_out, k) = (6usize, 6usize, 3usize, 4usize, 3usize);
+        let mut inputs = Vec::new();
+        for _ in 0..3 {
+            let v: Vec<f32> = (0..h * w * c_in)
+                .map(|_| if rng.uniform_f32() < 0.3 { rng.uniform_f32() - 0.5 } else { 0.0 })
+                .collect();
+            inputs.push(v);
+        }
+        let weights: Vec<f32> =
+            (0..k * k * c_in * c_out).map(|_| rng.uniform_f32() - 0.5).collect();
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.uniform_f32() * 0.1).collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        for stride in [1usize, 2] {
+            let batched = conv2d_batch(&refs, h, w, c_in, &weights, &bias, k, stride, true);
+            for (bi, input) in inputs.iter().enumerate() {
+                let single = conv2d(input, h, w, c_in, &weights, &bias, k, stride, true);
+                assert_eq!(batched[bi], single, "stride {stride}, frame {bi}");
+            }
+        }
     }
 
     #[test]

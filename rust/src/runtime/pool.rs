@@ -9,9 +9,14 @@
 //! own copy of the model, since executables cannot be shared across
 //! threads.
 //!
-//! The pool is backend-agnostic: [`XlaBackend`](super::XlaBackend) wraps
-//! it around PJRT engines, and tests wrap it around slow stub executors
-//! to prove two sessions' tails overlap in time on a 2-thread pool.
+//! The pool is backend-agnostic: `XlaBackend` (feature `xla`) wraps it
+//! around PJRT engines, and tests wrap it around slow stub executors to
+//! prove two sessions' tails overlap in time on a 2-thread pool.
+//!
+//! Micro-batches ([`BackendPool::exec_batch`]) travel as **one** job on
+//! a single-worker pool (one queue round-trip instead of N) and are
+//! scattered as individual jobs on a multi-worker pool, so batching
+//! never forfeits the pool's parallelism.
 
 use super::{ExecBackend, HostTensor};
 use anyhow::{Context, Result};
@@ -22,13 +27,34 @@ use std::thread;
 
 /// A thread-local model executor living inside one pool worker.
 pub trait PoolExecutor {
+    /// Execute a loaded model on one input set.
     fn exec(&mut self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>>;
+
+    /// Make `name` executable on this worker. Idempotent.
     fn load(&mut self, name: &str) -> Result<()>;
+
+    /// Names resident on this worker.
     fn loaded_names(&self) -> Vec<String>;
+
+    /// Execute a micro-batch on this executor, one result per entry.
+    /// Default: a sequential loop over [`exec`](PoolExecutor::exec);
+    /// executors with genuinely batched kernels override it.
+    fn exec_batch(
+        &mut self,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        batch.into_iter().map(|inputs| self.exec(name, inputs)).collect()
+    }
 }
 
 enum Job {
     Exec { name: String, inputs: Vec<HostTensor>, reply: mpsc::Sender<Result<Vec<HostTensor>>> },
+    ExecBatch {
+        name: String,
+        batch: Vec<Vec<HostTensor>>,
+        reply: mpsc::Sender<Vec<Result<Vec<HostTensor>>>>,
+    },
     Load { name: String, reply: mpsc::Sender<Result<()>> },
     Loaded { reply: mpsc::Sender<Vec<String>> },
 }
@@ -159,6 +185,57 @@ impl BackendPool {
             .with_context(|| format!("{} pool worker dropped reply", self.label))?
     }
 
+    /// Execute a micro-batch, one result per entry (order preserved).
+    ///
+    /// On a **single-worker** pool the batch travels as one queue job —
+    /// one round-trip instead of N, which is the whole saving when the
+    /// executor cannot overlap anything anyway. On a **multi-worker**
+    /// pool the entries are scattered as individual jobs instead: one
+    /// worker grinding through B frames serially would forfeit the
+    /// pool's parallelism, which is worth far more than the dispatch
+    /// overhead the single-job route saves.
+    pub fn exec_batch(
+        &self,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        if self.size() <= 1 {
+            let n = batch.len();
+            let (reply, rx) = mpsc::channel();
+            self.push(Job::ExecBatch { name: name.to_string(), batch, reply }, None);
+            return rx.recv().unwrap_or_else(|_| {
+                (0..n)
+                    .map(|_| {
+                        Err(anyhow::anyhow!(
+                            "{} pool worker dropped batch reply for {name:?}",
+                            self.label
+                        ))
+                    })
+                    .collect()
+            });
+        }
+        // Scatter: every entry is its own job, so idle workers pick them
+        // up concurrently; replies are gathered back in entry order.
+        let rxs: Vec<_> = batch
+            .into_iter()
+            .map(|inputs| {
+                let (reply, rx) = mpsc::channel();
+                self.push(Job::Exec { name: name.to_string(), inputs, reply }, None);
+                rx
+            })
+            .collect();
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv().unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!(
+                        "{} pool worker dropped batch-entry reply for {name:?}",
+                        self.label
+                    ))
+                })
+            })
+            .collect()
+    }
+
     /// Load `name` on **every** worker; first error wins (all workers
     /// are still waited on, so no stale load is left in flight).
     pub fn load(&self, name: &str) -> Result<()> {
@@ -218,6 +295,14 @@ impl ExecBackend for BackendPool {
     fn loaded_names(&self) -> Vec<String> {
         BackendPool::loaded_names(self)
     }
+
+    fn exec_batch(
+        &self,
+        name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        BackendPool::exec_batch(self, name, batch)
+    }
 }
 
 impl Drop for BackendPool {
@@ -264,6 +349,22 @@ fn worker_loop<E: PoolExecutor>(idx: usize, shared: &(Mutex<State>, Condvar), ex
                 }))
                 .unwrap_or_else(|_| {
                     Err(anyhow::anyhow!("pool worker {idx} panicked executing {name:?}"))
+                });
+                let _ = reply.send(result);
+            }
+            Job::ExecBatch { name, batch, reply } => {
+                let n = batch.len();
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    executor.exec_batch(&name, batch)
+                }))
+                .unwrap_or_else(|_| {
+                    (0..n)
+                        .map(|_| {
+                            Err(anyhow::anyhow!(
+                                "pool worker {idx} panicked executing a batch of {name:?}"
+                            ))
+                        })
+                        .collect()
                 });
                 let _ = reply.send(result);
             }
@@ -350,6 +451,122 @@ mod tests {
         let out = pool.exec("m", vec![t.clone()]).unwrap();
         assert_eq!(out, vec![t]);
         assert!(pool.exec("ghost", vec![]).is_err());
+    }
+
+    /// Logs which worker ran each batch-level executor call.
+    struct BatchLog {
+        worker: usize,
+        log: Arc<Mutex<Vec<(usize, usize)>>>,
+    }
+    impl PoolExecutor for BatchLog {
+        fn exec(&mut self, _n: &str, i: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            Ok(i)
+        }
+        fn load(&mut self, _n: &str) -> Result<()> {
+            Ok(())
+        }
+        fn loaded_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+        fn exec_batch(
+            &mut self,
+            name: &str,
+            batch: Vec<Vec<HostTensor>>,
+        ) -> Vec<Result<Vec<HostTensor>>> {
+            self.log.lock().unwrap().push((self.worker, batch.len()));
+            batch.into_iter().map(|i| self.exec(name, i)).collect()
+        }
+    }
+
+    fn batch_log_pool(threads: usize) -> (BackendPool, Arc<Mutex<Vec<(usize, usize)>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = Arc::clone(&log);
+        let pool = BackendPool::spawn("batchy", threads, move |worker| {
+            Ok(BatchLog { worker, log: Arc::clone(&log2) })
+        })
+        .unwrap();
+        (pool, log)
+    }
+
+    #[test]
+    fn exec_batch_is_one_job_on_a_single_worker_pool() {
+        let (pool, log) = batch_log_pool(1);
+        let t = HostTensor::zeros(&[1]);
+        let batch: Vec<Vec<HostTensor>> = (0..5).map(|_| vec![t.clone()]).collect();
+        let results = pool.exec_batch("m", batch);
+        assert_eq!(results.len(), 5);
+        for r in &results {
+            assert_eq!(r.as_ref().unwrap(), &vec![t.clone()]);
+        }
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), 1, "the whole batch must be one executor call");
+        assert_eq!(log[0].1, 5, "all 5 entries must travel together");
+    }
+
+    #[test]
+    fn exec_batch_scatters_across_a_multi_worker_pool() {
+        // With 2 workers, the batch must NOT be funneled through one
+        // worker's exec_batch — entries go out as individual jobs so the
+        // pool's parallelism is preserved.
+        let (pool, log) = batch_log_pool(2);
+        let t = HostTensor::zeros(&[2]);
+        let batch: Vec<Vec<HostTensor>> = (0..6).map(|_| vec![t.clone()]).collect();
+        let results = pool.exec_batch("m", batch);
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.as_ref().unwrap(), &vec![t.clone()]);
+        }
+        assert!(
+            log.lock().unwrap().is_empty(),
+            "multi-worker pools must scatter entries, not call executor exec_batch"
+        );
+    }
+
+    #[test]
+    fn scattered_batch_overlaps_across_workers() {
+        // Wall-clock proof: 2 entries of 200 ms on a 2-worker pool must
+        // beat the 400 ms a serial single-worker batch would take.
+        let (pool, _) = echo_pool(2, Duration::from_millis(200));
+        pool.load("m").unwrap();
+        let t0 = std::time::Instant::now();
+        let batch = vec![vec![HostTensor::zeros(&[1])], vec![HostTensor::zeros(&[1])]];
+        let results = pool.exec_batch("m", batch);
+        assert!(results.iter().all(|r| r.is_ok()));
+        let wall = t0.elapsed();
+        assert!(
+            wall < Duration::from_millis(360),
+            "batch entries serialized on a multi-worker pool: {wall:?}"
+        );
+    }
+
+    #[test]
+    fn panicking_batch_replies_per_entry_errors() {
+        struct PanicBatch;
+        impl PoolExecutor for PanicBatch {
+            fn exec(&mut self, _n: &str, i: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+                Ok(i)
+            }
+            fn load(&mut self, _n: &str) -> Result<()> {
+                Ok(())
+            }
+            fn loaded_names(&self) -> Vec<String> {
+                Vec::new()
+            }
+            fn exec_batch(
+                &mut self,
+                _name: &str,
+                _batch: Vec<Vec<HostTensor>>,
+            ) -> Vec<Result<Vec<HostTensor>>> {
+                panic!("batch kernel blew up")
+            }
+        }
+        let pool = BackendPool::spawn("panicky-batch", 1, |_| Ok(PanicBatch)).unwrap();
+        let results = pool.exec_batch("m", vec![vec![], vec![]]);
+        assert_eq!(results.len(), 2, "every entry must get a reply");
+        assert!(results.iter().all(|r| r.is_err()));
+        // The worker survives for later (non-batch) jobs.
+        let t = HostTensor::zeros(&[1]);
+        assert_eq!(pool.exec("m", vec![t.clone()]).unwrap(), vec![t]);
     }
 
     #[test]

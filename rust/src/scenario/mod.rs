@@ -46,9 +46,13 @@ use std::time::{Duration, Instant};
 /// One hosted session (intersection) in a scenario.
 #[derive(Clone, Debug)]
 pub struct SessionSpec {
+    /// Session name devices/subscribers address on the wire.
     pub name: String,
+    /// Integration method this session runs.
     pub variant: IntegrationKind,
+    /// Frame-sync deadline.
     pub deadline: Duration,
+    /// Incomplete-frame policy.
     pub policy: LossPolicy,
 }
 
@@ -96,13 +100,24 @@ impl Default for DeviceSpec {
 /// feeding them, and how the links between misbehave.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
+    /// Scenario name (report label).
     pub name: String,
+    /// Seed for the synthetic clouds (per device: `seed ^ f(index)`).
     pub seed: u64,
     /// TCP port; 0 = pick a free one.
     pub port: u16,
+    /// Execution backend the server (and devices) run on.
     pub backend: BackendKind,
+    /// Engine-pool threads on the server.
     pub backend_threads: usize,
+    /// Cross-session micro-batching of server tails (`max_batch` JSON
+    /// key / `--max-batch`); 1 = off, byte-identical per-frame path.
+    pub max_batch: usize,
+    /// Batch collection window (`batch_window_ms` / `--batch-window-ms`).
+    pub batch_window: Duration,
+    /// Sessions the server hosts.
     pub sessions: Vec<SessionSpec>,
+    /// Device workers feeding them.
     pub devices: Vec<DeviceSpec>,
     /// Grace period after the fleet drains before stopping the server
     /// (lets deadline-resolved frames flush). Zero = longest session
@@ -132,6 +147,8 @@ impl ScenarioSpec {
             port: 0,
             backend: BackendKind::default_kind(),
             backend_threads: 2,
+            max_batch: 1,
+            batch_window: Duration::from_millis(2),
             sessions: Vec::new(),
             devices: Vec::new(),
             settle: Duration::ZERO,
@@ -227,6 +244,7 @@ impl ScenarioSpec {
     /// {
     ///   "name": "mine", "seed": 7, "port": 0,
     ///   "backend": "native", "backend_threads": 2, "settle_ms": 0,
+    ///   "max_batch": 4, "batch_window_ms": 2,
     ///   "sessions": [
     ///     {"name": "north", "variant": "max", "deadline_ms": 250, "policy": "zero-fill"}
     ///   ],
@@ -282,7 +300,18 @@ impl ScenarioSpec {
 
         check_keys(
             j,
-            &["name", "seed", "port", "backend", "backend_threads", "settle_ms", "sessions", "devices"],
+            &[
+                "name",
+                "seed",
+                "port",
+                "backend",
+                "backend_threads",
+                "max_batch",
+                "batch_window_ms",
+                "settle_ms",
+                "sessions",
+                "devices",
+            ],
             "scenario",
         )?;
         let mut sessions = Vec::new();
@@ -359,6 +388,8 @@ impl ScenarioSpec {
                 None => BackendKind::default_kind().name(),
             })?,
             backend_threads: u64_or(j, "backend_threads", 2)? as usize,
+            max_batch: u64_or(j, "max_batch", 1)?.max(1) as usize,
+            batch_window: Duration::from_millis(u64_or(j, "batch_window_ms", 2)?),
             sessions,
             devices,
             settle: Duration::from_millis(u64_or(j, "settle_ms", 0)?),
@@ -406,16 +437,25 @@ impl ScenarioSpec {
 /// Per-session outcome of a scenario run.
 #[derive(Clone, Debug)]
 pub struct SessionReport {
+    /// Session name.
     pub name: String,
+    /// Integration method the session ran.
     pub variant: IntegrationKind,
+    /// Incomplete-frame policy the session ran.
     pub policy: LossPolicy,
+    /// Frames the session completed (including zero-filled ones).
     pub frames_done: u64,
     /// Results the TCP subscriber actually received.
     pub results_received: u64,
+    /// Frames emitted with every device present.
     pub sync_complete: u64,
+    /// Frames resolved by deadline expiry.
     pub sync_timed_out: u64,
+    /// Frames discarded under the drop policy.
     pub sync_dropped: u64,
+    /// Late arrivals for already-emitted frames.
     pub sync_late: u64,
+    /// Duplicate (frame, device) submissions.
     pub sync_dup: u64,
     /// Per-frame end-to-end latency (device capture → decoded
     /// detections at the ResultSink), seconds.
@@ -429,18 +469,26 @@ pub struct SessionReport {
 /// Per-device outcome of a scenario run.
 #[derive(Clone, Debug)]
 pub struct DeviceRow {
+    /// Session this worker fed.
     pub session: String,
+    /// Device slot within the session.
     pub device_id: usize,
+    /// Frames the spec asked this worker to emit.
     pub frames_scheduled: usize,
+    /// What the worker actually did (timings + impairment counters).
     pub report: DeviceReport,
 }
 
 /// The full scenario outcome, serialized as `BENCH_e2e.json`.
 #[derive(Clone, Debug)]
 pub struct ScenarioReport {
+    /// Scenario name.
     pub scenario: String,
+    /// Backend the run executed on.
     pub backend: String,
+    /// Per-session outcomes.
     pub sessions: Vec<SessionReport>,
+    /// Per-device outcomes.
     pub devices: Vec<DeviceRow>,
 }
 
@@ -457,6 +505,8 @@ fn ms_summary(xs_secs: &[f64]) -> Json {
 }
 
 impl ScenarioReport {
+    /// Serialize to the `BENCH_e2e.json` schema (see
+    /// `docs/BENCHMARKS.md`).
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("scenario", Json::Str(self.scenario.clone()))
@@ -667,6 +717,8 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     server_cfg.port = port;
     server_cfg.backend = spec.backend;
     server_cfg.backend_threads = spec.backend_threads;
+    server_cfg.batch.max_batch = spec.max_batch;
+    server_cfg.batch.window = spec.batch_window;
     server_cfg.max_frames = None; // externally stopped
     for s in &spec.sessions {
         let sc = SessionConfig::new(s.variant).deadline(s.deadline).policy(s.policy);
@@ -890,6 +942,8 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         "data",
         "backend",
         "backend-threads",
+        "max-batch",
+        "batch-window-ms",
         "seed",
         "list",
     ])?;
@@ -910,6 +964,9 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         spec.backend = BackendKind::parse(b)?;
     }
     spec.backend_threads = args.usize_or("backend-threads", spec.backend_threads)?;
+    spec.max_batch = args.usize_or("max-batch", spec.max_batch)?.max(1);
+    spec.batch_window =
+        args.ms_or("batch-window-ms", spec.batch_window.as_millis() as u64)?;
     spec.seed = args.u64_or("seed", spec.seed)?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
@@ -985,6 +1042,8 @@ mod tests {
         assert_eq!(spec.name, "custom");
         assert_eq!(spec.seed, 5);
         assert_eq!(spec.backend_threads, 3);
+        assert_eq!(spec.max_batch, 1, "batching defaults off");
+        assert_eq!(spec.batch_window, Duration::from_millis(2));
         assert_eq!(spec.sessions.len(), 2);
         assert_eq!(spec.sessions[0].policy, LossPolicy::Drop);
         assert_eq!(spec.sessions[0].deadline, Duration::from_millis(100));
@@ -1029,6 +1088,26 @@ mod tests {
         assert!(parse(&base(r#", "frames": -1"#)).is_err());
         assert!(parse(&base(r#", "impair": {"drop_every": -1}"#)).is_err());
         assert!(parse(&base(r#", "frames": 2.5"#)).is_err());
+    }
+
+    #[test]
+    fn spec_json_batching_knobs_parse() {
+        let text = r#"{
+            "name": "batched", "max_batch": 4, "batch_window_ms": 7,
+            "sessions": [{"name": "a"}],
+            "devices": [{"session": "a", "device": 0}]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.max_batch, 4);
+        assert_eq!(spec.batch_window, Duration::from_millis(7));
+        // max_batch 0 normalizes to 1 (off), not a divide-by-zero later.
+        let text = r#"{
+            "name": "z", "max_batch": 0,
+            "sessions": [{"name": "a"}],
+            "devices": [{"session": "a", "device": 0}]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.max_batch, 1);
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! Cross-session micro-batched tail execution, end to end through the
+//! `DetectorSession` serving core: N sessions × F frames against a
+//! counting stub backend must produce **at most ceil(N·F / max_batch)**
+//! backend calls — and, on the native backend, outputs identical to the
+//! unbatched path.
+
+use scmii::config::ModelMeta;
+use scmii::coordinator::scheduler::{BatchConfig, BatchPlanner};
+use scmii::coordinator::session::{
+    DetectorSession, FeaturePayload, SessionConfig, SessionEvent,
+};
+use scmii::runtime::{ExecBackend, HostTensor};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Duration;
+
+/// Stub backend that counts calls and returns well-formed (cls, boxes)
+/// outputs whose logits are far below any score threshold.
+struct CountingBackend {
+    meta: ModelMeta,
+    exec_calls: AtomicU64,
+    batch_calls: AtomicU64,
+    frames: AtomicU64,
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl CountingBackend {
+    fn new(meta: ModelMeta) -> Arc<CountingBackend> {
+        Arc::new(CountingBackend {
+            meta,
+            exec_calls: AtomicU64::new(0),
+            batch_calls: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            batch_sizes: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn outputs(&self) -> Vec<HostTensor> {
+        let [hb, wb] = self.meta.bev_dims;
+        let a = self.meta.anchors.len();
+        let mut cls = HostTensor::zeros(&[hb, wb, a]);
+        for v in cls.data.iter_mut() {
+            *v = -10.0; // sigmoid ≈ 0: decodes to zero detections
+        }
+        vec![cls, HostTensor::zeros(&[hb, wb, a, 8])]
+    }
+
+    fn backend_calls(&self) -> u64 {
+        self.exec_calls.load(Ordering::SeqCst) + self.batch_calls.load(Ordering::SeqCst)
+    }
+}
+
+impl ExecBackend for CountingBackend {
+    fn backend_name(&self) -> &str {
+        "counting-stub"
+    }
+
+    fn exec(&self, _name: &str, _inputs: Vec<HostTensor>) -> anyhow::Result<Vec<HostTensor>> {
+        self.exec_calls.fetch_add(1, Ordering::SeqCst);
+        self.frames.fetch_add(1, Ordering::SeqCst);
+        Ok(self.outputs())
+    }
+
+    fn load(&self, _name: &str) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn exec_batch(
+        &self,
+        _name: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<anyhow::Result<Vec<HostTensor>>> {
+        self.batch_calls.fetch_add(1, Ordering::SeqCst);
+        self.frames.fetch_add(batch.len() as u64, Ordering::SeqCst);
+        self.batch_sizes.lock().unwrap().push(batch.len());
+        batch.into_iter().map(|_| Ok(self.outputs())).collect()
+    }
+}
+
+fn feat(meta: &ModelMeta) -> HostTensor {
+    let g = &meta.grid;
+    HostTensor::zeros(&[g.dims[2], g.dims[1], g.dims[0], g.c_head])
+}
+
+fn session_with_planner(
+    name: &str,
+    meta: &ModelMeta,
+    backend: &Arc<CountingBackend>,
+    planner: &Arc<BatchPlanner>,
+) -> Arc<DetectorSession> {
+    let backend: Arc<dyn ExecBackend> = Arc::clone(backend) as Arc<dyn ExecBackend>;
+    let cfg = SessionConfig::new(scmii::config::IntegrationKind::Max)
+        .deadline(Duration::from_secs(60));
+    let mut session = DetectorSession::new(name, meta.clone(), backend, cfg).unwrap();
+    session.set_batch_planner(Arc::clone(planner));
+    Arc::new(session)
+}
+
+/// The accounting criterion: N sessions submit F frames each; with all
+/// N·F tail requests in flight inside one collection window, the
+/// counting stub must see at most ceil(N·F / max_batch) backend calls —
+/// strictly fewer calls than frames.
+#[test]
+fn n_sessions_f_frames_coalesce_to_ceil_nf_over_b_calls() {
+    const N: usize = 3; // sessions
+    const F: usize = 4; // frames per session
+    const MAX_BATCH: usize = 4;
+
+    let meta = ModelMeta::test_default();
+    let backend = CountingBackend::new(meta.clone());
+    let planner = BatchPlanner::new(
+        Arc::clone(&backend) as Arc<dyn ExecBackend>,
+        BatchConfig {
+            // Wide window: every submitter below passes a barrier first,
+            // so all N·F requests are queued long before it expires.
+            window: Duration::from_millis(500),
+            max_batch: MAX_BATCH,
+            max_pending: 256,
+        },
+    );
+
+    let sessions: Vec<Arc<DetectorSession>> = (0..N)
+        .map(|i| session_with_planner(&format!("s{i}"), &meta, &backend, &planner))
+        .collect();
+
+    // Device 0's payload for every (session, frame): submitted up front,
+    // completes nothing.
+    for session in &sessions {
+        for f in 0..F as u64 {
+            let events = session.submit(f, 0, FeaturePayload::Raw(feat(&meta))).unwrap();
+            assert!(events.is_empty(), "one device must not complete a 2-device frame");
+        }
+    }
+
+    // Device 1's payloads land simultaneously from N·F threads: each
+    // completes one frame, whose tail execution enters the planner.
+    let barrier = Arc::new(Barrier::new(N * F));
+    let handles: Vec<_> = sessions
+        .iter()
+        .flat_map(|session| {
+            (0..F as u64).map(|f| {
+                let session = Arc::clone(session);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    session.submit(f, 1, FeaturePayload::Raw(feat(session.meta()))).unwrap()
+                })
+            })
+        })
+        .collect();
+    for h in handles {
+        let events = h.join().unwrap();
+        assert_eq!(events.len(), 1, "each completing submit resolves its frame");
+        match &events[0] {
+            SessionEvent::Result(r) => {
+                assert!(!r.tail_error, "stub tails must succeed");
+                assert!(r.detections.is_empty(), "logits of -10 decode to nothing");
+            }
+            other => panic!("expected Result, got {other:?}"),
+        }
+    }
+
+    for session in &sessions {
+        assert_eq!(session.frames_done(), F as u64);
+    }
+
+    let total_frames = (N * F) as u64;
+    let max_calls = (total_frames + MAX_BATCH as u64 - 1) / MAX_BATCH as u64;
+    let calls = backend.backend_calls();
+    assert_eq!(
+        backend.frames.load(Ordering::SeqCst),
+        total_frames,
+        "every frame must reach the backend exactly once"
+    );
+    assert!(
+        calls <= max_calls,
+        "batching must coalesce: {calls} backend calls for {total_frames} frames \
+         (allowed ceil({total_frames}/{MAX_BATCH}) = {max_calls})"
+    );
+    assert!(calls < total_frames, "must be strictly fewer calls than frames");
+    assert_eq!(backend.exec_calls.load(Ordering::SeqCst), 0, "all traffic batched");
+    for &size in backend.batch_sizes.lock().unwrap().iter() {
+        assert!(size <= MAX_BATCH, "no batch may exceed --max-batch");
+    }
+
+    // The planner's own accounting agrees with the stub's.
+    let m = planner.metrics();
+    assert_eq!(m.counter("batch_frames"), total_frames);
+    assert_eq!(m.counter("batch_backend_calls"), calls);
+    assert_eq!(m.counter("batch_rejected"), 0);
+}
+
+/// A deadline burst — many frames expiring in one poll() — must resolve
+/// as stacked backend calls sharing one collection window, not as K
+/// sequential batch-of-1 calls (the polling thread's frames become each
+/// other's batch-mates via the bulk path).
+#[test]
+fn deadline_burst_coalesces_through_one_poll() {
+    const FRAMES: u64 = 6;
+    const MAX_BATCH: usize = 4;
+
+    let meta = ModelMeta::test_default();
+    let backend = CountingBackend::new(meta.clone());
+    let planner = BatchPlanner::new(
+        Arc::clone(&backend) as Arc<dyn ExecBackend>,
+        BatchConfig {
+            window: Duration::from_millis(150),
+            max_batch: MAX_BATCH,
+            max_pending: 256,
+        },
+    );
+    let backend_dyn: Arc<dyn ExecBackend> = Arc::clone(&backend) as Arc<dyn ExecBackend>;
+    // Deadline wide enough that no frame can expire while the submit
+    // loop is still running, even on a stalled CI runner — the whole
+    // burst must expire together in the explicit poll below.
+    let cfg = SessionConfig::new(scmii::config::IntegrationKind::Max)
+        .deadline(Duration::from_millis(150));
+    let mut session = DetectorSession::new("burst", meta.clone(), backend_dyn, cfg).unwrap();
+    session.set_batch_planner(Arc::clone(&planner));
+    let session = Arc::new(session);
+
+    // One device reports for every frame; the sibling never shows up, so
+    // all frames expire together once the deadline passes.
+    for f in 0..FRAMES {
+        let events = session.submit(f, 0, FeaturePayload::Raw(feat(&meta))).unwrap();
+        assert!(events.is_empty());
+    }
+    std::thread::sleep(Duration::from_millis(250));
+    let events = session.poll();
+    assert_eq!(events.len() as u64, FRAMES, "every expired frame resolves");
+    for e in &events {
+        match e {
+            SessionEvent::Result(r) => {
+                assert!(!r.tail_error);
+                assert_eq!(r.present, vec![true, false], "zero-filled sibling");
+            }
+            other => panic!("expected Result, got {other:?}"),
+        }
+    }
+    let max_calls = (FRAMES + MAX_BATCH as u64 - 1) / MAX_BATCH as u64;
+    let calls = backend.backend_calls();
+    assert_eq!(backend.frames.load(Ordering::SeqCst), FRAMES);
+    assert!(
+        calls <= max_calls,
+        "a one-poll burst must coalesce: {calls} calls for {FRAMES} frames \
+         (allowed {max_calls})"
+    );
+    assert!(calls < FRAMES as u64);
+}
+
+/// `--max-batch 1` (or no planner at all) leaves the per-frame path
+/// untouched: direct exec calls, one per frame.
+#[test]
+fn max_batch_one_keeps_the_per_frame_path() {
+    let meta = ModelMeta::test_default();
+    let backend = CountingBackend::new(meta.clone());
+    let planner = BatchPlanner::new(
+        Arc::clone(&backend) as Arc<dyn ExecBackend>,
+        BatchConfig { max_batch: 1, ..Default::default() },
+    );
+    let session = session_with_planner("solo", &meta, &backend, &planner);
+    for f in 0..3u64 {
+        session.submit(f, 0, FeaturePayload::Raw(feat(&meta))).unwrap();
+        let events = session.submit(f, 1, FeaturePayload::Raw(feat(&meta))).unwrap();
+        assert_eq!(events.len(), 1);
+    }
+    assert_eq!(backend.exec_calls.load(Ordering::SeqCst), 3, "one direct call per frame");
+    assert_eq!(backend.batch_calls.load(Ordering::SeqCst), 0, "exec_batch never invoked");
+}
+
+/// Native-backend parity through the full session path: frames served
+/// through a batching planner decode to exactly the same detections as
+/// the unbatched session (acceptance bound 1e-6; the kernels are in fact
+/// bit-identical).
+#[cfg(feature = "native")]
+#[test]
+fn batched_session_matches_unbatched_on_native_backend() {
+    use scmii::config::IntegrationKind;
+    use scmii::geom::Pose;
+    use scmii::runtime::native::NativeBackend;
+    use scmii::utils::rng::Pcg64;
+
+    let mut meta = ModelMeta::test_default();
+    meta.grid.dims = [16, 16, 4];
+    meta.grid.max_points = 256;
+    meta.bev_dims = [8, 8];
+    let backend: Arc<dyn ExecBackend> = Arc::new(
+        NativeBackend::new(meta.clone(), vec![Pose::IDENTITY; 2], None).unwrap(),
+    );
+    let tail = meta.variant(IntegrationKind::Max).unwrap().tail.clone();
+    backend.load(&tail).unwrap();
+
+    let sparse = |rng: &mut Pcg64| {
+        let g = &meta.grid;
+        let mut t = HostTensor::zeros(&[g.dims[2], g.dims[1], g.dims[0], g.c_head]);
+        for v in t.data.iter_mut() {
+            if rng.uniform_f32() < 0.2 {
+                *v = rng.uniform_f32();
+            }
+        }
+        t
+    };
+    let cfg = || {
+        SessionConfig::new(IntegrationKind::Max)
+            .deadline(Duration::from_secs(60))
+            .decode(scmii::model::DecodeParams { score_threshold: 0.4, ..Default::default() })
+    };
+    let planner = BatchPlanner::new(
+        Arc::clone(&backend),
+        BatchConfig {
+            window: Duration::from_millis(200),
+            max_batch: 4,
+            max_pending: 64,
+        },
+    );
+    let mut batched = DetectorSession::new("batched", meta.clone(), Arc::clone(&backend), cfg())
+        .unwrap();
+    batched.set_batch_planner(Arc::clone(&planner));
+    let batched = Arc::new(batched);
+    let plain =
+        Arc::new(DetectorSession::new("plain", meta.clone(), Arc::clone(&backend), cfg()).unwrap());
+
+    let mut rng = Pcg64::new(31);
+    for f in 0..2u64 {
+        let (d0, d1) = (sparse(&mut rng), sparse(&mut rng));
+
+        plain.submit(f, 0, FeaturePayload::Raw(d0.clone())).unwrap();
+        let plain_events = plain.submit(f, 1, FeaturePayload::Raw(d1.clone())).unwrap();
+
+        // The batched session's lone tail request executes on window
+        // expiry — the path that must still preserve the numbers.
+        batched.submit(f, 0, FeaturePayload::Raw(d0)).unwrap();
+        let batched_events = batched.submit(f, 1, FeaturePayload::Raw(d1)).unwrap();
+
+        let det = |events: &[SessionEvent]| match &events[0] {
+            SessionEvent::Result(r) => {
+                assert!(!r.tail_error);
+                r.detections.clone()
+            }
+            other => panic!("expected Result, got {other:?}"),
+        };
+        let (p, b) = (det(&plain_events), det(&batched_events));
+        assert_eq!(p.len(), b.len(), "frame {f}: same detection count");
+        for (x, y) in p.iter().zip(&b) {
+            assert_eq!(x.class_id, y.class_id);
+            assert!((x.score - y.score).abs() <= 1e-6);
+            assert!((x.bbox.center.x - y.bbox.center.x).abs() <= 1e-6);
+            assert!((x.bbox.center.y - y.bbox.center.y).abs() <= 1e-6);
+            assert!((x.bbox.yaw - y.bbox.yaw).abs() <= 1e-6);
+        }
+    }
+    assert!(planner.metrics().counter("batch_backend_calls") >= 1);
+}

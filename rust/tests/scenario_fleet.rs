@@ -55,6 +55,8 @@ fn four_devices_two_sessions_with_loss_account_for_every_frame() {
         port: 0,
         backend: BackendKind::Native,
         backend_threads: 2,
+        max_batch: 1,
+        batch_window: Duration::from_millis(2),
         sessions: vec![
             session("north", LossPolicy::ZeroFill),
             session("south", LossPolicy::Drop),
@@ -141,6 +143,8 @@ fn dropout_and_late_join_keep_sessions_producing() {
         port: 0,
         backend: BackendKind::Native,
         backend_threads: 2,
+        max_batch: 4,
+        batch_window: Duration::from_millis(2),
         sessions: vec![
             session("dropout", LossPolicy::ZeroFill),
             session("latejoin", LossPolicy::ZeroFill),
