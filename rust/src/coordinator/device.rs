@@ -21,10 +21,11 @@ use crate::metrics::Metrics;
 use crate::net::{ImpairConfig, ImpairStats, ImpairedLink, Msg, ShapedWriter};
 use crate::runtime::{build_backend, BackendKind, HostTensor};
 use crate::voxel::{points_to_tensor, Point};
+use crate::sync::time::Instant;
+use crate::sync::{mpsc, thread};
 use anyhow::{Context, Result};
 use std::net::TcpStream;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Device worker configuration.
 #[derive(Clone, Debug)]
@@ -125,7 +126,7 @@ where
             let deadline = start + Duration::from_secs_f64(p.as_secs_f64() * i as f64);
             let now = Instant::now();
             if deadline > now {
-                std::thread::sleep(deadline - now);
+                thread::sleep(deadline - now);
             }
         }
     };
@@ -148,6 +149,11 @@ where
     let (tx, rx) = mpsc::sync_channel::<(u64, M)>(1);
     let mut produce_times: Vec<(u64, f64)> = Vec::with_capacity(n);
     let mut produce_err: Option<anyhow::Error> = None;
+    // The writer thread borrows `consume` from the caller's stack, so it
+    // needs a scope; the *channel* between the stages is the modeled
+    // primitive (`crate::sync::mpsc`, exercised under loom in
+    // `tests/loom.rs`), while the scope itself stays `std` — loom has no
+    // scoped threads, and model tests drive the channel directly.
     let consume_times = std::thread::scope(|s| {
         let writer = s.spawn(move || -> Result<Vec<(u64, f64)>> {
             let mut out = Vec::new();
@@ -359,7 +365,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::{Arc, Mutex};

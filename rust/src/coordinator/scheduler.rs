@@ -18,8 +18,9 @@ use crate::metrics::Metrics;
 use crate::runtime::{ExecBackend, HostTensor};
 use anyhow::Result;
 use std::collections::{BTreeSet, HashMap};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use crate::sync::time::Instant;
+use crate::sync::{lock_or_recover, wait_timeout_or_recover, Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// What to do when the deadline fires with devices missing.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -466,7 +467,7 @@ impl BatchPlanner {
         // burst is visible to the first leader.
         let mut entries: Vec<Entry> = Vec::with_capacity(batch.len());
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             for inputs in batch {
                 if st.pending >= self.cfg.max_pending {
                     self.metrics.incr("batch_rejected", 1);
@@ -503,12 +504,12 @@ impl BatchPlanner {
         // unled buckets. Slots are filled under the state lock, so
         // checking under it cannot miss a wakeup.
         loop {
-            let st = self.state.lock().unwrap();
+            let st = lock_or_recover(&self.state);
             let mut lead_key: Option<BatchKey> = None;
             let mut any_unfilled = false;
             for entry in &entries {
                 if let Entry::Pending { key, slot } = entry {
-                    if slot.result.lock().unwrap().is_some() {
+                    if lock_or_recover(&slot.result).is_some() {
                         continue;
                     }
                     any_unfilled = true;
@@ -534,7 +535,7 @@ impl BatchPlanner {
             }
             // Timeout is a defensive backstop only — every state change
             // that matters notifies the condvar.
-            let _ = self.cv.wait_timeout(st, Duration::from_millis(100)).unwrap();
+            let _ = wait_timeout_or_recover(&self.cv, st, Duration::from_millis(100));
         }
 
         entries
@@ -542,7 +543,7 @@ impl BatchPlanner {
             .map(|entry| match entry {
                 Entry::Rejected(err) => Err(err),
                 Entry::Pending { slot, .. } => {
-                    slot.result.lock().unwrap().take().expect("slot filled before exit")
+                    lock_or_recover(&slot.result).take().expect("slot filled before exit")
                 }
             })
             .collect()
@@ -556,7 +557,7 @@ impl BatchPlanner {
     fn lead_one_batch(&self, key: &BatchKey) {
         // Collect: wait out the window unless the bucket fills first.
         let deadline = Instant::now() + self.cfg.window;
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.state);
         loop {
             let len = st.buckets.get(key).map_or(0, |b| b.queue.len());
             if len >= self.cfg.max_batch {
@@ -566,7 +567,7 @@ impl BatchPlanner {
             if now >= deadline {
                 break;
             }
-            st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+            st = wait_timeout_or_recover(&self.cv, st, deadline - now);
         }
         let taken = {
             let bucket = st.buckets.get_mut(key).expect("leader owns a live bucket");
@@ -625,9 +626,9 @@ impl BatchPlanner {
         // Distribute under the state lock, so waiters checking their
         // slots cannot miss the wakeup. (Leadership was already handed
         // back at drain time.)
-        let _st = self.state.lock().unwrap();
+        let _st = lock_or_recover(&self.state);
         for (slot, result) in filled {
-            *slot.result.lock().unwrap() = Some(result);
+            *lock_or_recover(&slot.result) = Some(result);
         }
         self.cv.notify_all();
     }
@@ -660,7 +661,7 @@ fn drain_fair(queue: &mut Vec<BatchReq>, max: usize) -> Vec<BatchReq> {
     taken
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -16,9 +16,9 @@ use crate::model::DecodeParams;
 use crate::net::{write_msg, Msg, WireDetection, DEFAULT_SESSION};
 use crate::runtime::{build_backend, BackendKind};
 use anyhow::{Context, Result};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{thread, Arc, Mutex};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
 use std::time::Duration;
 
 /// Server configuration. The top-level fields describe the `"default"`
@@ -100,7 +100,7 @@ impl ServerConfig {
 /// sessions gets whole frames, not interleaved writes from two sessions
 /// delivering concurrently.
 struct TcpSink {
-    stream: Arc<std::sync::Mutex<TcpStream>>,
+    stream: Arc<Mutex<TcpStream>>,
 }
 
 impl ResultSink for TcpSink {
@@ -267,7 +267,7 @@ pub fn run_server_until(
             Ok((stream, addr)) => {
                 log::debug!("connection from {addr}");
                 let shared = Arc::clone(&shared);
-                conn_threads.push(std::thread::spawn(move || {
+                conn_threads.push(thread::spawn(move || {
                     if let Err(e) = handle_conn(stream, shared) {
                         // Clean disconnects return Ok; an Err here is a
                         // protocol violation (e.g. unknown session).
@@ -278,7 +278,7 @@ pub fn run_server_until(
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 // Resolve expired frames while idle.
                 shared.poll_sessions();
-                std::thread::sleep(deadline_poll);
+                thread::sleep(deadline_poll);
             }
             Err(e) => return Err(e.into()),
         }
@@ -308,7 +308,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     // One write handle per connection, shared by every sink this
     // connection subscribes, so concurrent sessions cannot interleave
     // frames on the socket.
-    let mut sink_stream: Option<Arc<std::sync::Mutex<TcpStream>>> = None;
+    let mut sink_stream: Option<Arc<Mutex<TcpStream>>> = None;
     loop {
         if shared.done.load(Ordering::SeqCst) {
             return Ok(());
@@ -357,7 +357,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                             // cannot wedge result delivery for the whole
                             // session.
                             st.set_write_timeout(Some(Duration::from_secs(5)))?;
-                            let st = Arc::new(std::sync::Mutex::new(st));
+                            let st = Arc::new(Mutex::new(st));
                             sink_stream = Some(Arc::clone(&st));
                             st
                         }
@@ -523,7 +523,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -30,9 +30,10 @@ use crate::net::QuantTensor;
 use crate::runtime::{ExecBackend, HostTensor};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::time::Instant;
+use crate::sync::{lock_or_recover, Arc, Mutex};
+use std::time::Duration;
 
 /// An intermediate output arriving at the session, in whichever encoding
 /// the transport used. Dequantization lives *here*, not in per-transport
@@ -312,7 +313,7 @@ impl DetectorSession {
 
     /// Snapshot of the synchronizer counters.
     pub fn sync_stats(&self) -> SyncStats {
-        self.sync.lock().unwrap().stats
+        lock_or_recover(&self.sync).stats
     }
 
     /// Mutable access to decode parameters (in-process tuning; the TCP
@@ -324,7 +325,7 @@ impl DetectorSession {
     /// Attach a delivery sink; it receives every completed frame until it
     /// errors (then it is dropped).
     pub fn attach_sink(&self, sink: Box<dyn ResultSink>) {
-        self.sinks.lock().unwrap().push(sink);
+        lock_or_recover(&self.sinks).push(sink);
     }
 
     /// Register one device's intermediate output for `frame_id`. Returns
@@ -371,7 +372,7 @@ impl DetectorSession {
             }
         };
         let ready = {
-            let mut sync = self.sync.lock().unwrap();
+            let mut sync = lock_or_recover(&self.sync);
             sync.add_at(frame_id, device_id, tensor, capture_micros)
         };
         let mut events = Vec::new();
@@ -391,14 +392,14 @@ impl DetectorSession {
     /// head fails, so partial frames don't pin memory until the
     /// deadline).
     pub fn abort_frame(&self, frame_id: u64) -> bool {
-        self.sync.lock().unwrap().abort(frame_id)
+        lock_or_recover(&self.sync).abort(frame_id)
     }
 
     /// Resolve frames whose deadline expired. Frontends call this
     /// periodically (the TCP server does so between accepts).
     pub fn poll(&self) -> Vec<SessionEvent> {
         let (expired, dropped) = {
-            let mut sync = self.sync.lock().unwrap();
+            let mut sync = lock_or_recover(&self.sync);
             let expired = sync.poll_expired();
             let dropped = sync.take_dropped();
             (expired, dropped)
@@ -509,7 +510,7 @@ impl DetectorSession {
                     capture_micros,
                     tail_error,
                 };
-                let mut sinks = self.sinks.lock().unwrap();
+                let mut sinks = lock_or_recover(&self.sinks);
                 // A sink that panics mid-deliver (e.g. a poisoned stream
                 // mutex inside a TCP sink) must not unwind out of here
                 // with the sinks lock held — that would poison it and
@@ -533,7 +534,7 @@ impl DetectorSession {
     /// writes so a stale snapshot cannot overwrite a newer one (the
     /// gauges must never go backwards).
     fn publish_sync_stats(&self) {
-        let sync = self.sync.lock().unwrap();
+        let sync = lock_or_recover(&self.sync);
         let stats = sync.stats;
         self.metrics.set("sync_complete", stats.complete);
         self.metrics.set("sync_timed_out", stats.timed_out);
@@ -560,38 +561,35 @@ impl SessionRegistry {
     /// holder of that name. Returns the shared handle.
     pub fn insert(&self, session: DetectorSession) -> Arc<DetectorSession> {
         let arc = Arc::new(session);
-        self.sessions
-            .lock()
-            .unwrap()
-            .insert(arc.name().to_string(), Arc::clone(&arc));
+        lock_or_recover(&self.sessions).insert(arc.name().to_string(), Arc::clone(&arc));
         arc
     }
 
     /// Look up a session by its wire name.
     pub fn get(&self, name: &str) -> Option<Arc<DetectorSession>> {
-        self.sessions.lock().unwrap().get(name).cloned()
+        lock_or_recover(&self.sessions).get(name).cloned()
     }
 
     /// Names of every hosted session, sorted.
     pub fn names(&self) -> Vec<String> {
-        self.sessions.lock().unwrap().keys().cloned().collect()
+        lock_or_recover(&self.sessions).keys().cloned().collect()
     }
 
     /// Number of hosted sessions.
     pub fn len(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        lock_or_recover(&self.sessions).len()
     }
 
     /// Whether the registry hosts no sessions.
     pub fn is_empty(&self) -> bool {
-        self.sessions.lock().unwrap().is_empty()
+        lock_or_recover(&self.sessions).is_empty()
     }
 
     /// Poll every session for expired frames. The engine runs outside
     /// the registry lock.
     pub fn poll_all(&self) -> Vec<(String, Vec<SessionEvent>)> {
         let sessions: Vec<Arc<DetectorSession>> =
-            self.sessions.lock().unwrap().values().cloned().collect();
+            lock_or_recover(&self.sessions).values().cloned().collect();
         sessions
             .into_iter()
             .map(|s| {
@@ -603,16 +601,11 @@ impl SessionRegistry {
 
     /// Total frames completed across all sessions.
     pub fn frames_done_total(&self) -> u64 {
-        self.sessions
-            .lock()
-            .unwrap()
-            .values()
-            .map(|s| s.frames_done())
-            .sum()
+        lock_or_recover(&self.sessions).values().map(|s| s.frames_done()).sum()
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -119,6 +119,7 @@ pub mod runtime;
 pub mod scenario;
 #[allow(missing_docs)]
 pub mod sim;
+pub mod sync;
 #[allow(missing_docs)]
 pub mod utils;
 #[allow(missing_docs)]

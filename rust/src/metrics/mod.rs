@@ -1,25 +1,79 @@
 //! Serving metrics: latency histograms, throughput counters, breakdowns.
+//!
+//! Metric names are a closed set: every name the production serving
+//! path records must be listed in [`REGISTERED_METRICS`], and
+//! `cargo run -p xtask -- lint` cross-checks every metric-name string
+//! literal in `rust/src` against that list. One registry means one
+//! place to discover what a server exports, and renaming a metric is an
+//! explicit, reviewable event instead of a silent dashboard breakage.
 
+use crate::sync::time::Instant;
+use crate::sync::{lock_or_recover, Mutex};
 use crate::utils::stats;
 use std::collections::BTreeMap;
-use std::sync::Mutex;
-use std::time::Instant;
+
+/// Every metric name the production serving path records, in
+/// alphabetical order. `xtask lint` parses this list (the string
+/// literals between the `registry-begin`/`registry-end` markers) and
+/// rejects any `Metrics` call in non-test `rust/src` code whose name
+/// literal is missing here — add the name and its doc row together.
+pub const REGISTERED_METRICS: &[&str] = &[
+    // registry-begin
+    "bad_device",          // counter: features addressed to an out-of-range device slot
+    "batch_backend_calls", // counter: stacked exec_batch calls issued by the planner
+    "batch_frames",        // counter: frames executed through the planner
+    "batch_occupancy",     // series: frames per stacked backend call
+    "batch_pending",       // series: planner queue depth after enqueue/drain
+    "batch_queue_depth",   // series: planner queue depth at enqueue time
+    "batch_rejected",      // counter: requests refused because the planner queue was full
+    "decode_errors",       // counter: quantized payloads that failed to dequantize
+    "e2e",                 // series: capture → delivery end-to-end seconds
+    "features_rx",         // counter: feature payloads received
+    "features_rx_quantized", // counter: quantized feature payloads received
+    "frames_done",         // counter: frames fully resolved (delivered or expired)
+    "head_exec",           // series: device-side head execution seconds
+    "post",                // series: decode + NMS post-processing seconds
+    "sync_complete",       // gauge: frames that gathered every device before deadline
+    "sync_dropped",        // gauge: frames dropped by the loss policy
+    "sync_dup",            // gauge: duplicate (frame, device) submissions ignored
+    "sync_late",           // gauge: arrivals for frames already emitted
+    "sync_timed_out",      // gauge: frames resolved incomplete at deadline
+    "sync_wait",           // series: first-arrival → sync-resolution seconds
+    "tail",                // series: in-process pipeline tail seconds
+    "tail_errors",         // counter: tail executions that returned an error
+    "tail_exec",           // series: tail execution seconds
+    "tx",                  // series: device-side transmission seconds
+    // registry-end
+];
 
 /// A named collection of latency samples (seconds), thread-safe.
-#[derive(Default)]
 pub struct Metrics {
     series: Mutex<BTreeMap<String, Vec<f64>>>,
     counters: Mutex<BTreeMap<String, u64>>,
     start: Option<Instant>,
 }
 
+impl Default for Metrics {
+    /// Like [`Metrics::new`] but without a start instant, so [`rate`]
+    /// (which needs a wall-clock origin) reports 0.
+    ///
+    /// [`rate`]: Metrics::rate
+    fn default() -> Metrics {
+        Metrics {
+            series: Mutex::new(BTreeMap::new()),
+            counters: Mutex::new(BTreeMap::new()),
+            start: None,
+        }
+    }
+}
+
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics { series: Mutex::default(), counters: Mutex::default(), start: Some(Instant::now()) }
+        Metrics { start: Some(Instant::now()), ..Metrics::default() }
     }
 
     pub fn record(&self, name: &str, seconds: f64) {
-        self.series.lock().unwrap().entry(name.to_string()).or_default().push(seconds);
+        lock_or_recover(&self.series).entry(name.to_string()).or_default().push(seconds);
     }
 
     /// Time a closure and record it.
@@ -31,22 +85,22 @@ impl Metrics {
     }
 
     pub fn incr(&self, name: &str, by: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_default() += by;
+        *lock_or_recover(&self.counters).entry(name.to_string()).or_default() += by;
     }
 
     /// Overwrite a counter with an absolute value (gauge semantics; used
     /// to mirror externally-accumulated stats like `SyncStats`).
     pub fn set(&self, name: &str, value: u64) {
-        self.counters.lock().unwrap().insert(name.to_string(), value);
+        lock_or_recover(&self.counters).insert(name.to_string(), value);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        lock_or_recover(&self.counters).get(name).copied().unwrap_or(0)
     }
 
     /// Snapshot one series.
     pub fn samples(&self, name: &str) -> Vec<f64> {
-        self.series.lock().unwrap().get(name).cloned().unwrap_or_default()
+        lock_or_recover(&self.series).get(name).cloned().unwrap_or_default()
     }
 
     /// Summary over one series: (count, mean, p50, p99, max).
@@ -75,7 +129,7 @@ impl Metrics {
     /// Human-readable report of every series and counter.
     pub fn report(&self) -> String {
         let mut out = String::new();
-        let series = self.series.lock().unwrap();
+        let series = lock_or_recover(&self.series);
         for (name, xs) in series.iter() {
             out.push_str(&format!(
                 "{name:<32} n={:<6} mean={:>9.3}ms p50={:>9.3}ms p99={:>9.3}ms\n",
@@ -85,7 +139,7 @@ impl Metrics {
                 stats::percentile(xs, 99.0) * 1e3,
             ));
         }
-        let counters = self.counters.lock().unwrap();
+        let counters = lock_or_recover(&self.counters);
         for (name, v) in counters.iter() {
             out.push_str(&format!("{name:<32} count={v}\n"));
         }
@@ -93,7 +147,7 @@ impl Metrics {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -145,5 +199,33 @@ mod tests {
         m.incr("c", 1);
         let r = m.report();
         assert!(r.contains("x") && r.contains("c"));
+    }
+
+    #[test]
+    fn registry_is_sorted_and_duplicate_free() {
+        let mut sorted = REGISTERED_METRICS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(REGISTERED_METRICS, &sorted[..], "keep the registry alphabetical");
+        sorted.dedup();
+        assert_eq!(REGISTERED_METRICS.len(), sorted.len(), "duplicate registry entry");
+    }
+
+    #[test]
+    fn poisoned_metrics_keep_recording() {
+        use crate::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        m.record("lat", 0.5);
+        let poisoner = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = poisoner.series.lock().unwrap();
+            panic!("die holding the series lock");
+        })
+        .join();
+        // The panic above poisoned the mutex; every accessor must keep
+        // working (a metrics sink must never take down the serving path).
+        m.record("lat", 0.7);
+        assert_eq!(m.samples("lat"), vec![0.5, 0.7]);
+        assert_eq!(m.summary("lat").0, 2);
+        assert!(m.report().contains("lat"));
     }
 }

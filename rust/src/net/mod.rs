@@ -7,6 +7,7 @@ mod impair;
 mod proto;
 mod quant;
 mod shaper;
+pub mod spec;
 
 pub use impair::{ImpairConfig, ImpairStats, ImpairedLink};
 pub use proto::{

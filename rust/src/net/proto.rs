@@ -190,6 +190,31 @@ fn put_tensor(buf: &mut Vec<u8>, t: &HostTensor) {
     }
 }
 
+/// Quantized tensor: `ndim(1) | dims(u32 LE each) | min(f32) | scale(f32)
+/// | u8 data`.
+fn put_qtensor(buf: &mut Vec<u8>, t: &super::QuantTensor) {
+    buf.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        put_u32(buf, d as u32);
+    }
+    buf.extend_from_slice(&t.min.to_le_bytes());
+    buf.extend_from_slice(&t.scale.to_le_bytes());
+    buf.extend_from_slice(&t.data);
+}
+
+/// Detection list: `count(u32 LE)` then, per detection,
+/// `bbox(7 × f32 LE) | score(f32 LE) | class_id(u32 LE)`.
+fn put_detections(buf: &mut Vec<u8>, detections: &[WireDetection]) {
+    put_u32(buf, detections.len() as u32);
+    for d in detections {
+        for v in d.bbox {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&d.score.to_le_bytes());
+        put_u32(buf, d.class_id);
+    }
+}
+
 struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -269,6 +294,14 @@ impl<'a> Cursor<'a> {
 }
 
 /// Serialize a message to its payload bytes (without framing).
+///
+/// Every match arm below must be a flat, ordered sequence of
+/// `put_*(&mut buf, field)` calls: `xtask lint` parses this function and
+/// cross-checks each arm's field order and encodings against the
+/// machine-readable spec table in `docs/WIRE_PROTOCOL.md`. Inlining an
+/// encoding here (instead of adding a `put_*` helper and a spec row)
+/// fails the lint by design — the spec cannot describe what it cannot
+/// see.
 pub fn encode_payload(msg: &Msg) -> Vec<u8> {
     let mut buf = Vec::new();
     match msg {
@@ -286,30 +319,19 @@ pub fn encode_payload(msg: &Msg) -> Vec<u8> {
         Msg::Result { frame_id, detections, server_micros, capture_micros } => {
             put_u64(&mut buf, *frame_id);
             put_u64(&mut buf, *server_micros);
-            put_u32(&mut buf, detections.len() as u32);
-            for d in detections {
-                for v in d.bbox {
-                    buf.extend_from_slice(&v.to_le_bytes());
-                }
-                buf.extend_from_slice(&d.score.to_le_bytes());
-                put_u32(&mut buf, d.class_id);
-            }
+            put_detections(&mut buf, detections);
             put_capture(&mut buf, *capture_micros);
         }
         Msg::FeaturesQ { frame_id, device_id, tensor, session, capture_micros } => {
             put_u64(&mut buf, *frame_id);
             put_u32(&mut buf, *device_id);
-            buf.push(tensor.shape.len() as u8);
-            for &d in &tensor.shape {
-                put_u32(&mut buf, d as u32);
-            }
-            buf.extend_from_slice(&tensor.min.to_le_bytes());
-            buf.extend_from_slice(&tensor.scale.to_le_bytes());
-            buf.extend_from_slice(&tensor.data);
+            put_qtensor(&mut buf, tensor);
             put_session(&mut buf, session);
             put_capture(&mut buf, *capture_micros);
         }
-        Msg::Subscribe { session } => put_session(&mut buf, session),
+        Msg::Subscribe { session } => {
+            put_session(&mut buf, session);
+        }
         Msg::Bye => {}
     }
     buf

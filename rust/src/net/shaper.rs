@@ -6,8 +6,10 @@
 //! transmission time then matches `bytes·8 / bandwidth` like the real
 //! link.
 
+use crate::sync::thread;
+use crate::sync::time::Instant;
 use std::io::{self, Write};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A writer that caps sustained throughput at `bytes_per_sec`.
 pub struct ShapedWriter<W: Write> {
@@ -49,7 +51,7 @@ impl<W: Write> Write for ShapedWriter<W> {
         let n = buf.len().min(self.chunk);
         let now = Instant::now();
         if self.next_free > now {
-            std::thread::sleep(self.next_free - now);
+            thread::sleep(self.next_free - now);
         }
         let written = self.inner.write(&buf[..n])?;
         let cost = Duration::from_secs_f64(written as f64 / self.bytes_per_sec);

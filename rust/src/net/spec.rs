@@ -1,0 +1,280 @@
+//! Parser for the machine-readable wire-protocol field table
+//! (`docs/WIRE_PROTOCOL.md`, Appendix A).
+//!
+//! The table is the single source of truth for message field order and
+//! the optional-trailing-field compatibility rules, and this parser is
+//! deliberately shared verbatim by two adversarial consumers:
+//!
+//! * `cargo run -p xtask -- lint` includes this file via `#[path]` and
+//!   cross-checks every row against the `encode_payload` /
+//!   `Msg::type_byte` source in `net/proto.rs` — the table cannot drift
+//!   from the code;
+//! * `tests/wire_spec.rs` generates encode/decode round-trip property
+//!   tests from the same rows across every legal optional-field
+//!   combination — the code cannot drift from the table.
+//!
+//! Self-contained on purpose: no `crate::` paths, no external
+//! dependencies, `String` errors — so the `xtask` crate (which must not
+//! depend on the `scmii` library it lints) can compile it stand-alone.
+
+/// Marker opening the machine-readable region of the protocol doc.
+pub const SPEC_BEGIN: &str = "<!-- wire-spec-begin -->";
+/// Marker closing the machine-readable region of the protocol doc.
+pub const SPEC_END: &str = "<!-- wire-spec-end -->";
+
+/// Every encoding name a table row may use. Each maps 1:1 to a
+/// `put_<encoding>` helper in `net/proto.rs`.
+pub const ENCODINGS: &[&str] =
+    &["u32", "u64", "tensor", "qtensor", "detections", "session", "capture"];
+
+/// Whether (and how) a field may be absent from a payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Presence {
+    /// Always encoded; a payload ending before it is an error.
+    Required,
+    /// Trailing optional: always encoded by current writers, defaulted
+    /// when an (older) writer's payload ends before it.
+    Optional,
+    /// Trailing optional that is additionally *omitted on encode* when
+    /// its value is zero, keeping legacy payloads byte-identical.
+    OptionalOmitZero,
+}
+
+impl Presence {
+    /// Table-cell spelling of this presence class.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Presence::Required => "required",
+            Presence::Optional => "optional",
+            Presence::OptionalOmitZero => "optional-omit-zero",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Presence, String> {
+        match s {
+            "required" => Ok(Presence::Required),
+            "optional" => Ok(Presence::Optional),
+            "optional-omit-zero" => Ok(Presence::OptionalOmitZero),
+            other => Err(format!(
+                "unknown presence {other:?} (want required | optional | optional-omit-zero)"
+            )),
+        }
+    }
+}
+
+/// One field row of the spec table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FieldSpec {
+    /// Field name, matching the `Msg` variant's field identifier.
+    pub name: String,
+    /// Encoding name (one of [`ENCODINGS`]).
+    pub encoding: String,
+    /// Presence class.
+    pub presence: Presence,
+}
+
+/// One wire message: its name, frame type byte, and ordered fields.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MessageSpec {
+    /// Variant name, matching the `Msg` enum (`Hello`, `Features`, ...).
+    pub name: String,
+    /// The `type(1)` byte identifying this message in the frame header.
+    pub type_byte: u8,
+    /// Payload fields in encode order. Empty for payload-less messages.
+    pub fields: Vec<FieldSpec>,
+}
+
+impl MessageSpec {
+    /// The trailing optional fields, in order.
+    pub fn optional_fields(&self) -> Vec<&FieldSpec> {
+        self.fields.iter().filter(|f| f.presence != Presence::Required).collect()
+    }
+}
+
+/// Split one `| a | b | c |` table row into trimmed cells.
+fn cells(row: &str) -> Vec<String> {
+    let row = row.trim();
+    let row = row.strip_prefix('|').unwrap_or(row);
+    let row = row.strip_suffix('|').unwrap_or(row);
+    row.split('|').map(|c| c.trim().to_string()).collect()
+}
+
+/// Parse the spec table out of the full protocol document.
+///
+/// Beyond shape errors, this enforces the evolution invariants the
+/// table exists to protect: messages are contiguous, type bytes are
+/// unique and consistent, and within a message every optional field
+/// trails every required one (optionals are append-only by
+/// construction — a required field after an optional could never be
+/// decoded compatibly).
+pub fn parse_spec_table(doc: &str) -> Result<Vec<MessageSpec>, String> {
+    let begin = doc
+        .find(SPEC_BEGIN)
+        .ok_or_else(|| format!("spec marker {SPEC_BEGIN:?} not found in document"))?;
+    let rest = &doc[begin + SPEC_BEGIN.len()..];
+    let end = rest
+        .find(SPEC_END)
+        .ok_or_else(|| format!("spec marker {SPEC_END:?} not found after {SPEC_BEGIN:?}"))?;
+    let region = &rest[..end];
+
+    let mut rows = region.lines().map(str::trim).filter(|l| l.starts_with('|'));
+    let header = rows.next().ok_or("spec region contains no table")?;
+    let head_cells = cells(header);
+    let want = ["message", "type", "field", "encoding", "presence"];
+    if head_cells.iter().map(String::as_str).collect::<Vec<_>>() != want {
+        return Err(format!("spec table header must be {want:?}, got {head_cells:?}"));
+    }
+    let separator = rows.next().ok_or("spec table missing separator row")?;
+    if !cells(separator).iter().all(|c| !c.is_empty() && c.chars().all(|ch| ch == '-' || ch == ':'))
+    {
+        return Err(format!("second spec row must be the |---| separator, got {separator:?}"));
+    }
+
+    let mut messages: Vec<MessageSpec> = Vec::new();
+    for row in rows {
+        let c = cells(row);
+        if c.len() != 5 {
+            return Err(format!("spec row must have 5 columns, got {} in {row:?}", c.len()));
+        }
+        let (name, ty, field, encoding, presence) = (&c[0], &c[1], &c[2], &c[3], &c[4]);
+        if name.is_empty() {
+            return Err(format!("empty message name in spec row {row:?}"));
+        }
+        let type_byte: u8 = ty
+            .parse()
+            .map_err(|_| format!("bad type byte {ty:?} for message {name:?}"))?;
+
+        let is_new = match messages.last() {
+            Some(last) if last.name == *name => {
+                if last.type_byte != type_byte {
+                    return Err(format!(
+                        "message {name:?} listed with two type bytes ({} and {type_byte})",
+                        last.type_byte
+                    ));
+                }
+                false
+            }
+            _ => true,
+        };
+        if is_new {
+            if messages.iter().any(|m| m.name == *name) {
+                return Err(format!("rows of message {name:?} must be contiguous"));
+            }
+            if let Some(m) = messages.iter().find(|m| m.type_byte == type_byte) {
+                return Err(format!(
+                    "type byte {type_byte} used by both {:?} and {name:?}",
+                    m.name
+                ));
+            }
+            messages.push(MessageSpec { name: name.clone(), type_byte, fields: Vec::new() });
+        }
+        let msg = messages.last_mut().expect("just pushed or matched");
+
+        // `-` in the field column declares a payload-less message.
+        if field == "-" {
+            if encoding != "-" || presence != "-" || !msg.fields.is_empty() {
+                return Err(format!(
+                    "payload-less marker row for {name:?} must be its only row, with `-` cells"
+                ));
+            }
+            continue;
+        }
+        if !ENCODINGS.contains(&encoding.as_str()) {
+            return Err(format!(
+                "unknown encoding {encoding:?} for {name}.{field} (want one of {ENCODINGS:?})"
+            ));
+        }
+        let presence = Presence::parse(presence)
+            .map_err(|e| format!("{name}.{field}: {e}"))?;
+        if msg.fields.iter().any(|f| f.name == *field) {
+            return Err(format!("duplicate field {field:?} in message {name:?}"));
+        }
+        if presence == Presence::Required
+            && msg.fields.iter().any(|f| f.presence != Presence::Required)
+        {
+            return Err(format!(
+                "required field {name}.{field} after an optional field: optionals must trail \
+                 (they are append-only)"
+            ));
+        }
+        msg.fields.push(FieldSpec { name: field.clone(), encoding: encoding.clone(), presence });
+    }
+
+    if messages.is_empty() {
+        return Err("spec table has no message rows".into());
+    }
+    Ok(messages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(rows: &str) -> String {
+        format!(
+            "intro text\n{SPEC_BEGIN}\n\
+             | message | type | field | encoding | presence |\n\
+             |---|---|---|---|---|\n\
+             {rows}\n{SPEC_END}\ntrailing text\n"
+        )
+    }
+
+    #[test]
+    fn parses_a_minimal_table() {
+        let doc = table(
+            "| Hello | 1 | device_id | u32 | required |\n\
+             | Hello | 1 | session | session | optional |\n\
+             | Bye | 5 | - | - | - |",
+        );
+        let spec = parse_spec_table(&doc).unwrap();
+        assert_eq!(spec.len(), 2);
+        assert_eq!(spec[0].name, "Hello");
+        assert_eq!(spec[0].type_byte, 1);
+        assert_eq!(spec[0].fields.len(), 2);
+        assert_eq!(spec[0].fields[1].presence, Presence::Optional);
+        assert_eq!(spec[0].optional_fields().len(), 1);
+        assert_eq!(spec[1].name, "Bye");
+        assert!(spec[1].fields.is_empty());
+    }
+
+    #[test]
+    fn rejects_required_after_optional() {
+        let doc = table(
+            "| M | 1 | a | session | optional |\n\
+             | M | 1 | b | u32 | required |",
+        );
+        let err = parse_spec_table(&doc).unwrap_err();
+        assert!(err.contains("append-only"), "got: {err}");
+    }
+
+    #[test]
+    fn rejects_reused_type_byte_and_split_messages() {
+        let doc = table(
+            "| A | 1 | x | u32 | required |\n\
+             | B | 1 | y | u32 | required |",
+        );
+        assert!(parse_spec_table(&doc).unwrap_err().contains("type byte"));
+
+        let doc = table(
+            "| A | 1 | x | u32 | required |\n\
+             | B | 2 | y | u32 | required |\n\
+             | A | 1 | z | u32 | required |",
+        );
+        assert!(parse_spec_table(&doc).unwrap_err().contains("contiguous"));
+    }
+
+    #[test]
+    fn rejects_unknown_encoding_and_presence() {
+        let doc = table("| A | 1 | x | u16 | required |");
+        assert!(parse_spec_table(&doc).unwrap_err().contains("unknown encoding"));
+        let doc = table("| A | 1 | x | u32 | sometimes |");
+        assert!(parse_spec_table(&doc).unwrap_err().contains("unknown presence"));
+    }
+
+    #[test]
+    fn rejects_missing_markers() {
+        assert!(parse_spec_table("no markers here").is_err());
+        let doc = format!("{SPEC_BEGIN}\n| message | type | field | encoding | presence |\n");
+        assert!(parse_spec_table(&doc).unwrap_err().contains("wire-spec-end"));
+    }
+}

@@ -43,10 +43,10 @@ use crate::integrate::{conv_integrate, max_integrate};
 use crate::utils::npy;
 use crate::utils::rng::Pcg64;
 use crate::voxel::{tensor_to_points, voxelize, FeatureMap};
+use crate::sync::{lock_or_recover, Arc, Mutex};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
 
 /// Hidden channels of the BEV conv (the native backbone's capacity knob).
 pub const NATIVE_C_MID: usize = 16;
@@ -585,7 +585,7 @@ impl NativeBackend {
     /// Shared handle to a resident model (parity tests rebuild the
     /// reference graph from the exact weights the backend runs).
     pub fn model(&self, name: &str) -> Option<Arc<NativeModel>> {
-        self.models.lock().unwrap().get(name).cloned()
+        lock_or_recover(&self.models).get(name).cloned()
     }
 
     /// One weight tensor: `.npy` override when present, deterministic
@@ -703,7 +703,7 @@ impl ExecBackend for NativeBackend {
     }
 
     fn exec(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        let model = self.models.lock().unwrap().get(name).cloned();
+        let model = lock_or_recover(&self.models).get(name).cloned();
         let Some(model) = model else {
             bail!("model {name:?} not loaded in native backend (call load first)");
         };
@@ -723,22 +723,20 @@ impl ExecBackend for NativeBackend {
     }
 
     fn load(&self, name: &str) -> Result<()> {
-        if self.models.lock().unwrap().contains_key(name) {
+        if lock_or_recover(&self.models).contains_key(name) {
             return Ok(());
         }
         // Built outside the lock: alignment-map construction is the
         // expensive part and must not serialize concurrent execs.
         let model = self.build_model(name)?;
-        self.models
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.models)
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(model));
         Ok(())
     }
 
     fn loaded_names(&self) -> Vec<String> {
-        self.models.lock().unwrap().keys().cloned().collect()
+        lock_or_recover(&self.models).keys().cloned().collect()
     }
 
     fn exec_batch(
@@ -746,7 +744,7 @@ impl ExecBackend for NativeBackend {
         name: &str,
         batch: Vec<Vec<HostTensor>>,
     ) -> Vec<Result<Vec<HostTensor>>> {
-        let model = self.models.lock().unwrap().get(name).cloned();
+        let model = lock_or_recover(&self.models).get(name).cloned();
         let Some(model) = model else {
             return batch
                 .iter()

@@ -19,11 +19,9 @@
 //! never forfeits the pool's parallelism.
 
 use super::{ExecBackend, HostTensor};
+use crate::sync::{lock_or_recover, mpsc, thread, wait_or_recover, Arc, Condvar, Mutex};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread;
 
 /// A thread-local model executor living inside one pool worker.
 pub trait PoolExecutor {
@@ -100,22 +98,20 @@ impl BackendPool {
             let worker_shared = Arc::clone(&shared);
             let worker_factory = Arc::clone(&factory);
             let worker_ready = ready_tx.clone();
-            let spawned = thread::Builder::new()
-                .name(format!("{label}-worker-{i}"))
-                .spawn(move || {
-                    let mut executor = match worker_factory(i) {
-                        Ok(e) => {
-                            let _ = worker_ready.send(Ok(()));
-                            drop(worker_ready);
-                            e
-                        }
-                        Err(e) => {
-                            let _ = worker_ready.send(Err(e));
-                            return;
-                        }
-                    };
-                    worker_loop(i, &worker_shared, &mut executor);
-                });
+            let spawned = thread::spawn_named(&format!("{label}-worker-{i}"), move || {
+                let mut executor = match worker_factory(i) {
+                    Ok(e) => {
+                        let _ = worker_ready.send(Ok(()));
+                        drop(worker_ready);
+                        e
+                    }
+                    Err(e) => {
+                        let _ = worker_ready.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(i, &worker_shared, &mut executor);
+            });
             match spawned {
                 Ok(handle) => workers.push(handle),
                 Err(e) => {
@@ -167,7 +163,7 @@ impl BackendPool {
 
     fn push(&self, job: Job, worker: Option<usize>) {
         let (lock, cv) = &*self.shared;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock_or_recover(lock);
         match worker {
             Some(i) => st.control[i].push_back(job),
             None => st.queue.push_back(job),
@@ -309,7 +305,7 @@ impl Drop for BackendPool {
     fn drop(&mut self) {
         {
             let (lock, cv) = &*self.shared;
-            lock.lock().unwrap().shutdown = true;
+            lock_or_recover(lock).shutdown = true;
             cv.notify_all();
         }
         for w in self.workers.drain(..) {
@@ -322,7 +318,7 @@ fn worker_loop<E: PoolExecutor>(idx: usize, shared: &(Mutex<State>, Condvar), ex
     let (lock, cv) = shared;
     loop {
         let job = {
-            let mut st = lock.lock().unwrap();
+            let mut st = lock_or_recover(lock);
             loop {
                 if let Some(j) = st.control[idx].pop_front() {
                     break j;
@@ -335,7 +331,7 @@ fn worker_loop<E: PoolExecutor>(idx: usize, shared: &(Mutex<State>, Condvar), ex
                 if st.shutdown {
                     return;
                 }
-                st = cv.wait(st).unwrap();
+                st = wait_or_recover(cv, st);
             }
         };
         // A panicking executor must not kill the worker: a dead worker's
@@ -388,7 +384,7 @@ fn worker_loop<E: PoolExecutor>(idx: usize, shared: &(Mutex<State>, Condvar), ex
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::collections::BTreeSet;

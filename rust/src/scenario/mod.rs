@@ -35,13 +35,14 @@ use crate::utils::json::Json;
 use crate::utils::rng::Pcg64;
 use crate::utils::stats;
 use crate::voxel::Point;
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::time::Instant;
+use crate::sync::{thread, Arc};
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::net::TcpStream;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// One hosted session (intersection) in a scenario.
 #[derive(Clone, Debug)]
@@ -675,7 +676,7 @@ fn wait_for_port(port: u16, timeout: Duration) -> Result<()> {
         match TcpStream::connect(("127.0.0.1", port)) {
             Ok(_) => return Ok(()),
             Err(_) if Instant::now() < deadline => {
-                std::thread::sleep(Duration::from_millis(50));
+                thread::sleep(Duration::from_millis(50));
             }
             Err(e) => {
                 return Err(e).with_context(|| format!("server on port {port} never came up"));
@@ -738,7 +739,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         let paths = paths.clone();
         let cfg = server_cfg.clone();
         let stop = Arc::clone(&stop);
-        std::thread::spawn(move || run_server_until(&paths, &cfg, stop))
+        thread::spawn(move || run_server_until(&paths, &cfg, stop))
     };
     if let Err(wait_err) = wait_for_port(port, Duration::from_secs(20)) {
         stop.store(true, Ordering::SeqCst);
@@ -764,7 +765,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         let stop_flag = Arc::clone(&stop);
         collectors.push((
             name,
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 let mut reader = std::io::BufReader::new(stream);
                 let mut results: Vec<(u64, usize, u64, u64)> = Vec::new();
                 loop {
@@ -808,7 +809,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     // beat to attach the sinks before the fleet starts emitting, so the
     // collectors see frame 0 (accept-loop latency is ~20 ms; this is a
     // wide margin, not a correctness condition for the server itself).
-    std::thread::sleep(Duration::from_millis(300));
+    thread::sleep(Duration::from_millis(300));
 
     // The fleet. Each worker owns its clouds, config, and backend.
     let mut workers = Vec::new();
@@ -846,9 +847,9 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         let key = (d.session.clone(), d.device_id, d.frames);
         workers.push((
             key,
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 if delay > Duration::ZERO {
-                    std::thread::sleep(delay);
+                    thread::sleep(delay);
                 }
                 run_device(&paths, &cfg, &frames)
             }),
@@ -866,7 +867,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     } else {
         spec.settle
     };
-    std::thread::sleep(settle);
+    thread::sleep(settle);
     stop.store(true, Ordering::SeqCst);
     let registry = server
         .join()
@@ -994,7 +995,7 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

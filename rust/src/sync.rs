@@ -1,0 +1,509 @@
+//! Concurrency primitives with a build-time `loom` switch, plus
+//! poison-tolerant locking helpers.
+//!
+//! Every concurrency-bearing module in this crate imports its
+//! synchronization primitives from here instead of `std::sync` /
+//! `std::thread`. A normal build re-exports the `std` types unchanged
+//! (zero overhead); building with `RUSTFLAGS="--cfg loom"` swaps in the
+//! [loom](https://docs.rs/loom) model-checking equivalents so the
+//! protocol models in `tests/loom.rs` can exhaustively explore thread
+//! interleavings (see `docs/ARCHITECTURE.md`, "Concurrency model &
+//! verification").
+//!
+//! Deliberate exceptions, kept on `std` under both cfgs:
+//!
+//! * [`Arc`] — reference counting never blocks, and swapping in loom's
+//!   `Arc` would change public API types crate-wide for no modeling
+//!   value: none of the modeled protocols synchronize through `Arc`
+//!   itself.
+//! * [`atomic`] — the loom-verified protocols synchronize exclusively
+//!   through [`Mutex`]/[`Condvar`]/[`mpsc`]; the atomics in this crate
+//!   are stat counters and stop flags whose exact orderings are not
+//!   protocol-critical.
+//! * `std::thread::scope` (device pipeline) — loom has no scoped
+//!   threads; the loom model for that protocol exercises the [`mpsc`]
+//!   one-slot channel the scope communicates over, not the scope itself.
+//!
+//! The poison policy lives here too: serving-path code must never
+//! `.lock().unwrap()` (enforced by `cargo run -p xtask -- lint`).
+//! A poisoned mutex means some holder panicked, and the panic has
+//! already been reported and contained where it happened (sink
+//! delivery, backend execution, pool workers all run under
+//! `catch_unwind`); propagating the poison as a *second* panic on an
+//! innocent thread is how one bad frame used to wedge a whole session.
+//! [`lock_or_recover`] logs and continues with the data as the
+//! panicking holder left it — every protected structure in the serving
+//! path is valid (if possibly stale) at every await point.
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Atomically reference-counted pointer. Always `std` (see module docs).
+pub use std::sync::Arc;
+
+/// Atomic integer/bool types. Always `std` (see module docs).
+pub mod atomic {
+    pub use std::sync::atomic::*;
+}
+
+/// Lock `m`, recovering (with a warning) instead of panicking if a
+/// previous holder panicked and poisoned it.
+///
+/// This is the only sanctioned way to take a serving-path lock; the
+/// repo lint rejects `.lock().unwrap()` in serving modules. The guard
+/// hands back the data exactly as the panicking holder left it, which
+/// is safe for every structure in this crate: they are kept
+/// shrink-to-valid at all times (queues of whole items, maps of whole
+/// entries), so the worst case after recovery is a lost in-flight item,
+/// never a torn one.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            log::warn!("recovering a mutex poisoned by an earlier panic");
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`Condvar::wait`] with the same poison-recovery policy as
+/// [`lock_or_recover`]. Callers must re-check their condition in a loop
+/// (spurious wakeups are allowed, and loom exercises them).
+pub fn wait_or_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            log::warn!("recovering a mutex poisoned by an earlier panic (condvar wait)");
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`Condvar::wait_timeout`] with the same poison-recovery policy as
+/// [`lock_or_recover`]. Returns only the guard: callers re-check their
+/// condition and their deadline in a loop, so whether the wakeup was a
+/// timeout, a notification, or spurious is immaterial.
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: std::time::Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((guard, _timed_out)) => guard,
+        Err(poisoned) => {
+            log::warn!("recovering a mutex poisoned by an earlier panic (condvar wait_timeout)");
+            poisoned.into_inner().0
+        }
+    }
+}
+
+/// Thread spawning and sleeping, switched between `std` and loom.
+pub mod thread {
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    /// Spawn a named thread (`std::thread::Builder::name`). Under loom
+    /// the name is dropped — loom has no thread builder — but spawning
+    /// still works, so pools keep their topology in models.
+    #[cfg(not(loom))]
+    pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::Builder::new().name(name.to_string()).spawn(f)
+    }
+
+    /// Spawn a named thread (`std::thread::Builder::name`). Under loom
+    /// the name is dropped — loom has no thread builder — but spawning
+    /// still works, so pools keep their topology in models.
+    #[cfg(loom)]
+    pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let _ = name;
+        Ok(spawn(f))
+    }
+
+    /// Sleep for `d`. Under loom real time does not exist; sleeping
+    /// becomes a yield so the scheduler explores other threads.
+    #[cfg(not(loom))]
+    pub fn sleep(d: std::time::Duration) {
+        std::thread::sleep(d);
+    }
+
+    /// Sleep for `d`. Under loom real time does not exist; sleeping
+    /// becomes a yield so the scheduler explores other threads.
+    #[cfg(loom)]
+    pub fn sleep(d: std::time::Duration) {
+        let _ = d;
+        yield_now();
+    }
+}
+
+/// Monotonic time, switched between `std` and a deterministic fake
+/// under loom.
+pub mod time {
+    #[cfg(not(loom))]
+    pub use std::time::Instant;
+
+    #[cfg(loom)]
+    pub use fake::Instant;
+
+    /// A deterministic stand-in for `std::time::Instant` under loom.
+    ///
+    /// Loom models have no real clock, but the batch planner's
+    /// collection loop and the metrics wall-clock both ask for one.
+    /// Every `now()` call advances a global tick by 100 µs, so
+    /// deadline loops (`while now < deadline { wait_timeout(...) }`)
+    /// terminate after a bounded number of iterations in every
+    /// explored interleaving instead of hanging the model.
+    #[cfg(loom)]
+    pub mod fake {
+        use std::ops::{Add, Sub};
+        use std::time::Duration;
+
+        /// Nanoseconds advanced per `Instant::now()` call.
+        const TICK_NANOS: u64 = 100_000;
+
+        // Deliberately a *std* atomic: this is model bookkeeping, not a
+        // synchronization primitive under test, and loom's own atomics
+        // cannot be used in statics.
+        static TICK: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1 << 30);
+
+        /// Deterministic monotonic timestamp (nanoseconds on a global
+        /// tick that advances 100 µs per `now()` call).
+        #[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+        pub struct Instant(u64);
+
+        impl Instant {
+            /// Current tick; advances the global clock.
+            pub fn now() -> Instant {
+                Instant(TICK.fetch_add(TICK_NANOS, std::sync::atomic::Ordering::Relaxed))
+            }
+
+            /// Time elapsed since `self` (saturating, like std ≥ 1.60).
+            pub fn elapsed(&self) -> Duration {
+                Instant::now().duration_since(*self)
+            }
+
+            /// Saturating difference, mirroring `std::time::Instant`.
+            pub fn duration_since(&self, earlier: Instant) -> Duration {
+                Duration::from_nanos(self.0.saturating_sub(earlier.0))
+            }
+
+            /// Saturating difference, mirroring `std::time::Instant`.
+            pub fn saturating_duration_since(&self, earlier: Instant) -> Duration {
+                self.duration_since(earlier)
+            }
+
+            /// `self - d`, `None` on underflow.
+            pub fn checked_sub(&self, d: Duration) -> Option<Instant> {
+                self.0.checked_sub(d.as_nanos() as u64).map(Instant)
+            }
+
+            /// `self + d`, `None` on overflow.
+            pub fn checked_add(&self, d: Duration) -> Option<Instant> {
+                self.0.checked_add(d.as_nanos() as u64).map(Instant)
+            }
+        }
+
+        impl Add<Duration> for Instant {
+            type Output = Instant;
+            fn add(self, d: Duration) -> Instant {
+                Instant(self.0.saturating_add(d.as_nanos() as u64))
+            }
+        }
+
+        impl Sub<Duration> for Instant {
+            type Output = Instant;
+            fn sub(self, d: Duration) -> Instant {
+                Instant(self.0.saturating_sub(d.as_nanos() as u64))
+            }
+        }
+
+        impl Sub<Instant> for Instant {
+            type Output = Duration;
+            fn sub(self, earlier: Instant) -> Duration {
+                self.duration_since(earlier)
+            }
+        }
+    }
+}
+
+/// Multi-producer channels built on the shim [`Mutex`]/[`Condvar`], so
+/// the identical channel code runs under `std` and under loom.
+///
+/// `std::sync::mpsc` cannot be used directly: loom does not model it,
+/// and mixing an unmodeled blocking primitive into a loom-explored path
+/// deadlocks the model. The API mirrors the `std::sync::mpsc` subset
+/// this crate uses; the one-slot `sync_channel(1)` configuration is
+/// itself one of the loom-verified protocols (device pipeline
+/// double-buffering).
+pub mod mpsc {
+    use super::{lock_or_recover, wait_or_recover, Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
+
+    struct ChanState<T> {
+        queue: VecDeque<T>,
+        /// Bound on queued items; `usize::MAX` for unbounded channels.
+        cap: usize,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Chan<T> {
+        state: Mutex<ChanState<T>>,
+        cv: Condvar,
+    }
+
+    /// Sending half of a channel. Clonable (multi-producer); the channel
+    /// closes for the receiver when the last sender drops.
+    pub struct Sender<T> {
+        chan: Arc<Chan<T>>,
+    }
+
+    /// Receiving half of a channel (single consumer by convention;
+    /// sharing requires an external mutex, as the thread pool does).
+    pub struct Receiver<T> {
+        chan: Arc<Chan<T>>,
+    }
+
+    /// The receiver disconnected before the value could be delivered;
+    /// carries the undelivered value back to the caller.
+    pub struct SendError<T>(pub T);
+
+    /// The channel is empty and every sender has disconnected.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct RecvError;
+
+    impl<T> std::fmt::Debug for SendError<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("SendError(..)")
+        }
+    }
+
+    impl<T> std::fmt::Display for SendError<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("sending on a channel whose receiver disconnected")
+        }
+    }
+
+    impl<T> std::error::Error for SendError<T> {}
+
+    impl std::fmt::Display for RecvError {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str("receiving on an empty channel whose senders all disconnected")
+        }
+    }
+
+    impl std::error::Error for RecvError {}
+
+    fn make<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+        let chan = Arc::new(Chan {
+            state: Mutex::new(ChanState {
+                queue: VecDeque::new(),
+                cap,
+                senders: 1,
+                rx_alive: true,
+            }),
+            cv: Condvar::new(),
+        });
+        (Sender { chan: Arc::clone(&chan) }, Receiver { chan })
+    }
+
+    /// Unbounded channel (`std::sync::mpsc::channel` equivalent).
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        make(usize::MAX)
+    }
+
+    /// Bounded channel: `send` blocks while `cap` items are queued
+    /// (`std::sync::mpsc::sync_channel` equivalent). A capacity of 0 is
+    /// clamped to 1 — rendezvous semantics are not needed here.
+    pub fn sync_channel<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+        make(cap.max(1))
+    }
+
+    impl<T> Sender<T> {
+        /// Queue `t`, blocking while the channel is full. Errors (and
+        /// returns `t`) if the receiver has disconnected.
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut st = lock_or_recover(&self.chan.state);
+            loop {
+                if !st.rx_alive {
+                    return Err(SendError(t));
+                }
+                if st.queue.len() < st.cap {
+                    st.queue.push_back(t);
+                    self.chan.cv.notify_all();
+                    return Ok(());
+                }
+                st = wait_or_recover(&self.chan.cv, st);
+            }
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            lock_or_recover(&self.chan.state).senders += 1;
+            Sender { chan: Arc::clone(&self.chan) }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut st = lock_or_recover(&self.chan.state);
+            st.senders -= 1;
+            if st.senders == 0 {
+                // Wake a receiver blocked in recv() so it observes
+                // disconnection instead of waiting forever.
+                self.chan.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Dequeue the next value, blocking while the channel is empty.
+        /// Errors once the channel is empty *and* every sender dropped.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut st = lock_or_recover(&self.chan.state);
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    // Wake senders blocked on a full bounded queue.
+                    self.chan.cv.notify_all();
+                    return Ok(t);
+                }
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                st = wait_or_recover(&self.chan.cv, st);
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut st = lock_or_recover(&self.chan.state);
+            st.rx_alive = false;
+            // Wake senders blocked on a full queue so they observe the
+            // disconnect (clean shutdown from the consumer side).
+            self.chan.cv.notify_all();
+        }
+    }
+
+    /// Owning iterator over received values; ends when the channel
+    /// closes (every sender dropped and the queue drained).
+    pub struct IntoIter<T> {
+        rx: Receiver<T>,
+    }
+
+    impl<T> Iterator for IntoIter<T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    impl<T> IntoIterator for Receiver<T> {
+        type Item = T;
+        type IntoIter = IntoIter<T>;
+        fn into_iter(self) -> IntoIter<T> {
+            IntoIter { rx: self }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn lock_or_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let poisoner = Arc::clone(&m);
+        let _ = thread::spawn(move || {
+            let _g = poisoner.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must be poisoned for the test to bite");
+        assert_eq!(*lock_or_recover(&m), 7);
+        // And the recovery is durable: taking the lock again still works.
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_or_recover_returns_on_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_or_recover(&m);
+        // Nobody notifies: must come back via the timeout, not hang.
+        let _g = wait_timeout_or_recover(&cv, g, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn mpsc_unbounded_delivers_in_order() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let t = thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let got: Vec<u32> = rx.into_iter().collect();
+        t.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mpsc_bounded_blocks_then_drains() {
+        let (tx, rx) = mpsc::sync_channel::<u32>(1);
+        let t = thread::spawn(move || {
+            // Second send blocks until the consumer pops the first.
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        t.join().unwrap();
+        assert_eq!(rx.recv(), Err(mpsc::RecvError));
+    }
+
+    #[test]
+    fn mpsc_send_errors_after_receiver_drop() {
+        let (tx, rx) = mpsc::sync_channel::<u32>(1);
+        drop(rx);
+        let err = tx.send(9).unwrap_err();
+        assert_eq!(err.0, 9, "undelivered value must come back to the caller");
+    }
+
+    #[test]
+    fn mpsc_receiver_drop_unblocks_full_sender() {
+        let (tx, rx) = mpsc::sync_channel::<u32>(1);
+        tx.send(1).unwrap(); // fill the slot
+        let t = thread::spawn(move || tx.send(2)); // blocks on the full slot
+        thread::sleep(Duration::from_millis(20));
+        drop(rx); // shutdown from the consumer side
+        let out = t.join().unwrap();
+        assert!(out.is_err(), "blocked sender must observe the disconnect");
+    }
+
+    #[test]
+    fn mpsc_clone_counts_senders() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(5).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Ok(5));
+        assert_eq!(rx.recv(), Err(mpsc::RecvError));
+    }
+}

@@ -1,12 +1,16 @@
 //! Fixed-size thread pool (no rayon/tokio in the offline image).
 //!
 //! Used by the dataset generator (per-frame raycasting fans out across
-//! cores) and the evaluation harness. Jobs are `FnOnce` closures; `scope`
+//! cores) and the evaluation harness. Jobs are `FnOnce` closures; `map`
 //! offers a rayon-like structured-parallel map.
+//!
+//! Workers survive panicking jobs: the panic is caught, counted
+//! (`panicked_jobs`), and logged, so one bad closure no longer silently
+//! shrinks the pool for the rest of the run.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::{lock_or_recover, mpsc, thread, Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -14,6 +18,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     sender: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+    panicked: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -22,25 +27,43 @@ impl ThreadPool {
         let n = n.max(1);
         let (sender, receiver) = mpsc::channel::<Job>();
         let receiver = Arc::new(Mutex::new(receiver));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..n)
-            .map(|_| {
+            .map(|i| {
                 let rx = Arc::clone(&receiver);
-                thread::spawn(move || loop {
-                    let job = { rx.lock().unwrap().recv() };
+                let panicked = Arc::clone(&panicked);
+                thread::spawn_named(&format!("scmii-pool-{i}"), move || loop {
+                    let job = { lock_or_recover(&rx).recv() };
                     match job {
-                        Ok(job) => job(),
+                        // A panicking job must not kill its worker — that
+                        // silently shrinks the pool for the rest of the
+                        // run. Contain it, count it, keep serving.
+                        Ok(job) => {
+                            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                panicked.fetch_add(1, Ordering::SeqCst);
+                                log::warn!("thread-pool job panicked; worker continues");
+                            }
+                        }
                         Err(_) => break,
                     }
                 })
+                .expect("spawn thread-pool worker")
             })
             .collect();
-        ThreadPool { sender: Some(sender), workers }
+        ThreadPool { sender: Some(sender), workers, panicked }
     }
 
     /// Pool sized to the machine (cores, capped at 16).
     pub fn default_size() -> Self {
-        let n = thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(16);
+        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(16);
         Self::new(n)
+    }
+
+    /// How many submitted jobs have panicked so far. The panics are
+    /// contained (workers keep running); this is the caller's signal
+    /// that some results never materialized.
+    pub fn panicked_jobs(&self) -> usize {
+        self.panicked.load(Ordering::SeqCst)
     }
 
     /// Submit a fire-and-forget job.
@@ -49,7 +72,9 @@ impl ThreadPool {
     }
 
     /// Apply `f` to every index 0..n in parallel and collect results in
-    /// order. Results must be `Send`; `f` is cloned per job.
+    /// order. Results must be `Send`; `f` is cloned per job. Panics if
+    /// any job panicked (its slot has no result) — use
+    /// [`panicked_jobs`](ThreadPool::panicked_jobs) to diagnose.
     pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -81,10 +106,9 @@ impl Drop for ThreadPool {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -112,5 +136,37 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(5, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_shrink_the_pool() {
+        // Regression: a panicking job used to kill its worker silently.
+        // On a 1-worker pool that left *zero* workers — any later job
+        // would hang forever. Now the worker survives: the panic is
+        // counted and all 50 follow-up jobs still run to completion.
+        let pool = ThreadPool::new(1);
+        let panicked = Arc::clone(&pool.panicked);
+        pool.execute(|| panic!("deliberate test panic"));
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins: hangs here if the worker died
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+        assert_eq!(panicked.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn map_still_works_after_a_panicked_job() {
+        let pool = ThreadPool::new(2);
+        let panicked = Arc::clone(&pool.panicked);
+        pool.execute(|| panic!("boom"));
+        let out = pool.map(16, |i| i * 2);
+        assert_eq!(out, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        drop(pool); // joins, so the panic is certainly counted by now
+        assert_eq!(panicked.load(Ordering::SeqCst), 1);
     }
 }

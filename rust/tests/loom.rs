@@ -1,0 +1,311 @@
+//! Loom model checks for the serving path's concurrency protocols.
+//!
+//! This suite only exists under `RUSTFLAGS="--cfg loom"` (the CI loom
+//! lane); a normal `cargo test` compiles it to nothing. Each `#[test]`
+//! wraps one protocol in [`loom::model`], which exhaustively explores
+//! thread interleavings (bounded by `LOOM_MAX_PREEMPTIONS`) instead of
+//! running the one schedule the host OS happens to pick. The library
+//! code under test is the *real* code — `crate::sync` re-exports loom's
+//! primitives under this cfg, so the planner, the pool, and the channel
+//! run unmodified.
+//!
+//! Three protocols are modeled (see `docs/ARCHITECTURE.md`,
+//! "Concurrency model & verification"):
+//!
+//! 1. **BatchPlanner leadership** — concurrent callers on one bucket:
+//!    exactly one leader per batch, no lost wakeup (every caller's
+//!    result resolves), each request executed exactly once, and each
+//!    caller receives *its own* result after the leader hands off.
+//! 2. **BackendPool dispatch** — a worker panicking mid-batch yields
+//!    per-entry errors instead of a deadlock, the worker survives to
+//!    take the next job, and both the one-job (single worker) and
+//!    scatter (multi worker) paths drain; pool drop joins cleanly.
+//! 3. **One-slot pipeline channel** — the `sync::mpsc::sync_channel(1)`
+//!    double-buffer the device pipeline writes frames through: no frame
+//!    is lost or reordered, and dropping either side shuts the other
+//!    down instead of leaving it blocked forever.
+//!
+//! Every model spawns at most 2 extra threads (loom's default
+//! `MAX_THREADS` is 4, counting the model's own thread).
+#![cfg(loom)]
+
+use anyhow::Result;
+use scmii::coordinator::scheduler::{BatchConfig, BatchPlanner};
+use scmii::runtime::pool::{BackendPool, PoolExecutor};
+use scmii::runtime::{ExecBackend, HostTensor};
+use scmii::sync::{mpsc, thread, Arc};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Run `f` under loom with a preemption bound, so the pool and planner
+/// models (each several lock/condvar operations deep) finish in CI
+/// time. `LOOM_MAX_PREEMPTIONS` in the environment still wins — the
+/// bound here is only the default.
+fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let mut builder = loom::model::Builder::new();
+    if builder.preemption_bound.is_none() {
+        builder.preemption_bound = Some(2);
+    }
+    builder.check(f);
+}
+
+/// A one-element tensor carrying `v`, used to tag which caller a result
+/// belongs to.
+fn marker(v: f32) -> HostTensor {
+    HostTensor::new(vec![1], vec![v]).expect("marker tensor")
+}
+
+// ---------------------------------------------------------------------
+// Protocol 1: BatchPlanner leadership.
+// ---------------------------------------------------------------------
+
+/// Echo backend that counts how many batch entries it executed. The
+/// counters are deliberately `std` atomics: they are model bookkeeping,
+/// not synchronization under test, and keeping them out of loom's state
+/// space keeps the exploration tractable.
+#[derive(Default)]
+struct CountingEcho {
+    batches: AtomicUsize,
+    entries: AtomicUsize,
+}
+
+impl ExecBackend for CountingEcho {
+    fn backend_name(&self) -> &str {
+        "loom-echo"
+    }
+
+    fn exec(&self, _name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        Ok(inputs)
+    }
+
+    fn load(&self, _name: &str) -> Result<()> {
+        Ok(())
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn exec_batch(&self, name: &str, batch: Vec<Vec<HostTensor>>) -> Vec<Result<Vec<HostTensor>>> {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.entries.fetch_add(batch.len(), Ordering::Relaxed);
+        batch.into_iter().map(|inputs| self.exec(name, inputs)).collect()
+    }
+}
+
+/// Two threads race `exec` on one planner bucket. In every interleaving
+/// both calls must resolve (no lost wakeup: whichever caller loses the
+/// leadership race must still be woken when the leader publishes its
+/// result), each caller must get back its *own* marker (results are
+/// never crossed during leader → follower handoff), and the backend
+/// must execute each request exactly once (leadership is exclusive —
+/// two leaders draining one bucket would double-execute).
+fn planner_model(window: Duration) {
+    model(move || {
+        let backend = Arc::new(CountingEcho::default());
+        let planner = BatchPlanner::new(
+            Arc::clone(&backend) as Arc<dyn ExecBackend>,
+            BatchConfig { window, max_batch: 2, max_pending: 8 },
+        );
+
+        let other = Arc::clone(&planner);
+        let racer = thread::spawn(move || {
+            other.exec("cam-a", "tail", vec![marker(1.0)]).expect("racer exec")
+        });
+        let mine = planner.exec("cam-b", "tail", vec![marker(2.0)]).expect("main exec");
+        let theirs = racer.join().expect("racer thread");
+
+        assert_eq!(mine[0].data, vec![2.0], "caller must get its own result back");
+        assert_eq!(theirs[0].data, vec![1.0], "caller must get its own result back");
+        assert_eq!(
+            backend.entries.load(Ordering::Relaxed),
+            2,
+            "each request executes exactly once (no duplicate leaders, no drops)"
+        );
+        let batches = backend.batches.load(Ordering::Relaxed);
+        assert!(
+            batches == 1 || batches == 2,
+            "two requests coalesce into one or two batches, got {batches}"
+        );
+    });
+}
+
+#[test]
+fn planner_concurrent_callers_each_resolve_with_their_own_result() {
+    // A real collection window: the leader waits out the window (the
+    // loom build's fake clock advances 100 µs per read), so the second
+    // caller can join the batch and resolve as a follower.
+    planner_model(Duration::from_micros(300));
+}
+
+#[test]
+fn planner_zero_window_still_resolves_every_caller() {
+    // Degenerate window: the leader drains whatever is in the bucket
+    // the moment it takes leadership. The race between "join the
+    // leader's batch" and "become the next leader" is the interesting
+    // part; both outcomes must resolve both callers.
+    planner_model(Duration::ZERO);
+}
+
+// ---------------------------------------------------------------------
+// Protocol 2: BackendPool dispatch.
+// ---------------------------------------------------------------------
+
+/// Pool executor whose batch entry point dies mid-batch; plain `exec`
+/// still echoes. `resume_unwind` (rather than `panic!`) skips the panic
+/// hook so thousands of explored interleavings don't spam stderr.
+struct BatchBomb;
+
+impl PoolExecutor for BatchBomb {
+    fn exec(&mut self, _name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        Ok(inputs)
+    }
+
+    fn load(&mut self, _name: &str) -> Result<()> {
+        Ok(())
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn exec_batch(
+        &mut self,
+        _name: &str,
+        _batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
+        std::panic::resume_unwind(Box::new("batch bomb"));
+    }
+}
+
+/// Echo executor for the happy-path scatter model.
+struct EchoExec;
+
+impl PoolExecutor for EchoExec {
+    fn exec(&mut self, _name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        Ok(inputs)
+    }
+
+    fn load(&mut self, _name: &str) -> Result<()> {
+        Ok(())
+    }
+
+    fn loaded_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+/// A worker panicking mid-batch must not deadlock the caller: the
+/// `catch_unwind` in the worker loop converts the panic into one error
+/// per batch entry, the worker thread survives to execute the next job,
+/// and dropping the pool joins cleanly in every interleaving.
+#[test]
+fn pool_worker_panic_mid_batch_yields_errors_not_deadlock() {
+    model(|| {
+        let pool =
+            BackendPool::spawn("loom", 1, |_| Ok(BatchBomb)).expect("spawn single-worker pool");
+
+        // Single-worker pool: the batch travels as one queue job.
+        let out = pool.exec_batch("tail", vec![vec![marker(1.0)], vec![marker(2.0)]]);
+        assert_eq!(out.len(), 2, "one reply per batch entry even when the worker panics");
+        for entry in &out {
+            assert!(entry.is_err(), "a mid-batch panic must surface as per-entry errors");
+        }
+
+        // The worker caught the panic and is still alive: a plain exec
+        // on the same (sole) worker must still be served.
+        let ok = pool.exec("tail", vec![marker(3.0)]).expect("worker survives the panic");
+        assert_eq!(ok[0].data, vec![3.0]);
+
+        // Drop joins the worker; loom fails the model if any
+        // interleaving leaves it blocked.
+        drop(pool);
+    });
+}
+
+/// On a multi-worker pool `exec_batch` scatters entries as individual
+/// jobs. Both workers' replies must come back in entry order, and drop
+/// must join both workers in every interleaving.
+#[test]
+fn pool_scatter_path_drains_across_workers() {
+    model(|| {
+        let pool = BackendPool::spawn("loom", 2, |_| Ok(EchoExec)).expect("spawn 2-worker pool");
+
+        let out = pool.exec_batch("tail", vec![vec![marker(1.0)], vec![marker(2.0)]]);
+        assert_eq!(out.len(), 2);
+        let first = out[0].as_ref().expect("scatter entry 0");
+        let second = out[1].as_ref().expect("scatter entry 1");
+        assert_eq!(first[0].data, vec![1.0], "replies gathered in entry order");
+        assert_eq!(second[0].data, vec![2.0], "replies gathered in entry order");
+
+        drop(pool);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Protocol 3: one-slot pipeline writer channel.
+// ---------------------------------------------------------------------
+
+/// The device pipeline's double-buffer: a writer pushing frames through
+/// a one-slot bounded channel. Every frame must arrive, in order, in
+/// every interleaving — the writer blocking on a full slot and the
+/// reader blocking on an empty one must always hand off.
+#[test]
+fn one_slot_channel_loses_no_frame() {
+    model(|| {
+        let (tx, rx) = mpsc::sync_channel::<u64>(1);
+        let writer = thread::spawn(move || {
+            for seq in 0..3u64 {
+                tx.send(seq).expect("reader alive for the whole stream");
+            }
+        });
+        let got: Vec<u64> = rx.into_iter().collect();
+        writer.join().expect("writer thread");
+        assert_eq!(got, vec![0, 1, 2], "no frame lost, duplicated, or reordered");
+    });
+}
+
+/// Consumer-side shutdown: the reader drops while the writer may be
+/// blocked on the full slot. The writer must observe the disconnect
+/// (an error carrying the undelivered frame back) instead of blocking
+/// forever — the no-lost-wakeup half of clean shutdown.
+#[test]
+fn one_slot_channel_reader_drop_unblocks_writer() {
+    model(|| {
+        let (tx, rx) = mpsc::sync_channel::<u64>(1);
+        let writer = thread::spawn(move || {
+            let first = tx.send(1);
+            let second = tx.send(2);
+            (first, second)
+        });
+        drop(rx);
+        let (first, second) = writer.join().expect("writer thread");
+        // Depending on the interleaving the first frame may land before
+        // the reader drops, but the second can never be delivered: the
+        // slot is full and only a disconnect can wake the writer.
+        assert!(second.is_err(), "writer must observe the reader's shutdown");
+        if first.is_err() {
+            // Once the writer has seen the disconnect it stays shut.
+            assert!(second.is_err());
+        }
+    });
+}
+
+/// Producer-side shutdown: the writer sends its last frame and drops.
+/// The reader must drain that frame and then see end-of-stream instead
+/// of blocking forever on the empty channel.
+#[test]
+fn one_slot_channel_writer_drop_ends_stream() {
+    model(|| {
+        let (tx, rx) = mpsc::sync_channel::<u64>(1);
+        let writer = thread::spawn(move || {
+            tx.send(7).expect("slot empty, reader alive");
+        });
+        let got: Vec<u64> = rx.into_iter().collect();
+        writer.join().expect("writer thread");
+        assert_eq!(got, vec![7], "final frame drained before end-of-stream");
+    });
+}

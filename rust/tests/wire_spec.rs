@@ -1,0 +1,391 @@
+//! Spec-table-driven wire-protocol round-trip property tests.
+//!
+//! The machine-readable field table in `docs/WIRE_PROTOCOL.md`
+//! (Appendix A) is the single source of truth for message layout.
+//! `cargo run -p xtask -- lint` checks the *writer* against it by
+//! parsing `encode_payload`; this suite checks the *reader* and the
+//! byte-level compatibility rules by re-encoding every message from the
+//! table alone — field order, encodings, and the trailing-optional
+//! rules are taken from the parsed rows, never from `net/proto.rs` —
+//! and driving the real decoder with the result. Between the two, the
+//! table cannot drift from the code in either direction.
+//!
+//! For every message and every legal optional-field prefix (optionals
+//! are all-or-nothing trailing suffixes, so the legal wire forms are
+//! exactly "all required fields + the first k optionals"):
+//!
+//! * the table-built frame must decode to the expected message, with
+//!   spec defaults (`"default"` session, `0` capture stamp) for the
+//!   absent optionals;
+//! * the full-prefix frame must be byte-identical to what the library's
+//!   own writer produces (`encode_frame`);
+//! * a zero capture stamp must encode byte-identically to the frame
+//!   that omits the stamp entirely (the `optional-omit-zero` rule that
+//!   keeps unstamped traffic decodable by legacy subscribers).
+
+use scmii::net::spec::{parse_spec_table, MessageSpec, Presence};
+use scmii::net::{encode_frame, read_msg, Msg, QuantTensor, WireDetection, DEFAULT_SESSION};
+use scmii::runtime::HostTensor;
+use scmii::utils::proptest::{property, Gen};
+use std::collections::BTreeMap;
+
+/// The protocol document, captured at compile time so the test is
+/// hermetic (no cwd-dependent file reads).
+const DOC: &str = include_str!("../../docs/WIRE_PROTOCOL.md");
+
+/// Frame magic, per the document's frame-layout section. Deliberately
+/// restated here rather than imported: the test models an independent
+/// peer implementing the spec from the page.
+const MAGIC: &[u8; 4] = b"SCMI";
+
+fn spec() -> Vec<MessageSpec> {
+    parse_spec_table(DOC).expect("docs/WIRE_PROTOCOL.md spec table parses")
+}
+
+/// One generated field value, tagged by spec encoding.
+#[derive(Clone, Debug)]
+enum Val {
+    U32(u32),
+    U64(u64),
+    Tensor(HostTensor),
+    QTensor(QuantTensor),
+    Detections(Vec<WireDetection>),
+    Session(String),
+    /// Capture stamp (`optional-omit-zero`: zero never reaches the wire).
+    Capture(u64),
+}
+
+/// Draw a random value for a spec encoding. Capture stamps are drawn
+/// nonzero — a zero stamp is the *omitted* wire form, exercised
+/// separately by the omit-zero check.
+fn gen_val(g: &mut Gen, encoding: &str) -> Val {
+    match encoding {
+        "u32" => Val::U32(g.u64() as u32),
+        "u64" => Val::U64(g.u64()),
+        "session" => {
+            const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-";
+            let len = g.usize_range(1, 12);
+            let name: String = (0..len).map(|_| *g.choose(ALPHABET) as char).collect();
+            Val::Session(name)
+        }
+        "capture" => Val::Capture(g.u64() | 1),
+        "tensor" => {
+            let shape: Vec<usize> =
+                (0..g.usize_range(1, 3)).map(|_| g.usize_range(1, 4)).collect();
+            let n = shape.iter().product();
+            let t = HostTensor::new(shape, g.f32_vec(n, -8.0, 8.0)).expect("consistent shape");
+            Val::Tensor(t)
+        }
+        "qtensor" => {
+            let shape: Vec<usize> =
+                (0..g.usize_range(1, 3)).map(|_| g.usize_range(1, 4)).collect();
+            let n: usize = shape.iter().product();
+            Val::QTensor(QuantTensor {
+                shape,
+                min: g.f32_range(-4.0, 0.0),
+                scale: g.f32_range(0.001, 0.1),
+                data: (0..n).map(|_| g.u64() as u8).collect(),
+            })
+        }
+        "detections" => {
+            let n = g.usize_range(0, 3);
+            let dets = (0..n)
+                .map(|_| {
+                    let mut bbox = [0.0f32; 7];
+                    for b in &mut bbox {
+                        *b = g.f32_range(-50.0, 50.0);
+                    }
+                    WireDetection {
+                        bbox,
+                        score: g.f32_range(0.0, 1.0),
+                        class_id: g.usize_range(0, 7) as u32,
+                    }
+                })
+                .collect();
+            Val::Detections(dets)
+        }
+        other => panic!("spec names unknown encoding {other:?} — update tests/wire_spec.rs"),
+    }
+}
+
+/// Spec default for an optional field that the wire form omits.
+fn default_val(encoding: &str) -> Val {
+    match encoding {
+        "session" => Val::Session(DEFAULT_SESSION.to_string()),
+        "capture" => Val::Capture(0),
+        other => panic!("encoding {other:?} is never optional, so it has no default"),
+    }
+}
+
+/// Append `v`'s wire bytes per the encoding rules in the protocol doc.
+/// This mirrors the *document*, not `net/proto.rs` — that independence
+/// is what makes the round-trip meaningful.
+fn encode_val(buf: &mut Vec<u8>, v: &Val) {
+    match v {
+        Val::U32(x) => buf.extend_from_slice(&x.to_le_bytes()),
+        Val::U64(x) => buf.extend_from_slice(&x.to_le_bytes()),
+        Val::Session(s) => {
+            buf.push(s.len() as u8);
+            buf.extend_from_slice(s.as_bytes());
+        }
+        Val::Capture(x) => {
+            if *x > 0 {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Val::Tensor(t) => {
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &f in &t.data {
+                buf.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+        Val::QTensor(q) => {
+            buf.push(q.shape.len() as u8);
+            for &d in &q.shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            buf.extend_from_slice(&q.min.to_le_bytes());
+            buf.extend_from_slice(&q.scale.to_le_bytes());
+            buf.extend_from_slice(&q.data);
+        }
+        Val::Detections(dets) => {
+            buf.extend_from_slice(&(dets.len() as u32).to_le_bytes());
+            for d in dets {
+                for b in d.bbox {
+                    buf.extend_from_slice(&b.to_le_bytes());
+                }
+                buf.extend_from_slice(&d.score.to_le_bytes());
+                buf.extend_from_slice(&d.class_id.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Wrap a payload in the `MAGIC | type(1) | payload_len(u32 LE)` frame.
+fn frame(type_byte: u8, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(payload.len() + 9);
+    buf.extend_from_slice(MAGIC);
+    buf.push(type_byte);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+impl Val {
+    fn u32(&self) -> u32 {
+        match self {
+            Val::U32(x) => *x,
+            other => panic!("expected u32, got {other:?}"),
+        }
+    }
+    fn u64(&self) -> u64 {
+        match self {
+            Val::U64(x) => *x,
+            other => panic!("expected u64, got {other:?}"),
+        }
+    }
+    fn tensor(&self) -> HostTensor {
+        match self {
+            Val::Tensor(t) => t.clone(),
+            other => panic!("expected tensor, got {other:?}"),
+        }
+    }
+    fn qtensor(&self) -> QuantTensor {
+        match self {
+            Val::QTensor(q) => q.clone(),
+            other => panic!("expected qtensor, got {other:?}"),
+        }
+    }
+    fn detections(&self) -> Vec<WireDetection> {
+        match self {
+            Val::Detections(d) => d.clone(),
+            other => panic!("expected detections, got {other:?}"),
+        }
+    }
+    fn session(&self) -> String {
+        match self {
+            Val::Session(s) => s.clone(),
+            other => panic!("expected session, got {other:?}"),
+        }
+    }
+    fn capture(&self) -> u64 {
+        match self {
+            Val::Capture(x) => *x,
+            other => panic!("expected capture, got {other:?}"),
+        }
+    }
+}
+
+/// Construct the `Msg` a decoder must yield for message `name` with the
+/// given field values (absent optionals already replaced by defaults).
+/// Panics on a spec message the enum does not know — adding a table row
+/// without a variant (or vice versa) fails here by design.
+fn build_msg(name: &str, vals: &BTreeMap<String, Val>) -> Msg {
+    let v = |field: &str| {
+        vals.get(field).unwrap_or_else(|| panic!("spec row missing field {name}.{field}"))
+    };
+    match name {
+        "Hello" => Msg::Hello { device_id: v("device_id").u32(), session: v("session").session() },
+        "Features" => Msg::Features {
+            frame_id: v("frame_id").u64(),
+            device_id: v("device_id").u32(),
+            tensor: v("tensor").tensor(),
+            session: v("session").session(),
+            capture_micros: v("capture_micros").capture(),
+        },
+        "FeaturesQ" => Msg::FeaturesQ {
+            frame_id: v("frame_id").u64(),
+            device_id: v("device_id").u32(),
+            tensor: v("tensor").qtensor(),
+            session: v("session").session(),
+            capture_micros: v("capture_micros").capture(),
+        },
+        "Result" => Msg::Result {
+            frame_id: v("frame_id").u64(),
+            server_micros: v("server_micros").u64(),
+            detections: v("detections").detections(),
+            capture_micros: v("capture_micros").capture(),
+        },
+        "Subscribe" => Msg::Subscribe { session: v("session").session() },
+        "Bye" => Msg::Bye,
+        other => panic!("spec table names unknown message {other:?} — update tests/wire_spec.rs"),
+    }
+}
+
+/// Every `Msg` variant must appear in the table (and nothing else): the
+/// exhaustiveness half of the spec ↔ code contract. `build_msg`'s match
+/// covers the reverse direction — a table row for a variant the enum
+/// lost panics the round-trip property below.
+#[test]
+fn spec_table_covers_every_msg_variant_exactly_once() {
+    let messages = spec();
+    let mut names: Vec<&str> = messages.iter().map(|m| m.name.as_str()).collect();
+    names.sort_unstable();
+    assert_eq!(names, ["Bye", "Features", "FeaturesQ", "Hello", "Result", "Subscribe"]);
+}
+
+/// The core property: every message × every legal optional prefix,
+/// across randomized field values.
+#[test]
+fn every_legal_wire_form_round_trips_per_spec() {
+    let messages = spec();
+    property("spec-driven wire round-trip", 64, |g: &mut Gen| {
+        for m in &messages {
+            let required = m.fields.iter().filter(|f| f.presence == Presence::Required).count();
+            let optionals = m.fields.len() - required;
+
+            // Fresh values per case; shared across this message's
+            // prefixes so the byte-compat checks compare like with like.
+            let vals: Vec<Val> = m.fields.iter().map(|f| gen_val(g, &f.encoding)).collect();
+
+            for k in 0..=optionals {
+                let cut = required + k;
+
+                // Decoder check: the table-built frame yields the
+                // expected message, defaults filling absent optionals.
+                let mut payload = Vec::new();
+                for v in &vals[..cut] {
+                    encode_val(&mut payload, v);
+                }
+                let wire = frame(m.type_byte, &payload);
+                let mut expected = BTreeMap::new();
+                for (i, f) in m.fields.iter().enumerate() {
+                    let v = if i < cut { vals[i].clone() } else { default_val(&f.encoding) };
+                    expected.insert(f.name.clone(), v);
+                }
+                let expected = build_msg(&m.name, &expected);
+                let decoded = read_msg(&mut wire.as_slice())
+                    .unwrap_or_else(|e| panic!("decode {} (prefix {k}): {e:#}", m.name));
+                assert_eq!(decoded, expected, "{} with {k} optionals present", m.name);
+
+                // Writer check, full prefix only: current writers always
+                // encode every optional (nonzero stamp), so the library
+                // frame must match the table frame byte for byte.
+                if k == optionals {
+                    let ours = encode_frame(&expected)
+                        .unwrap_or_else(|e| panic!("encode {}: {e:#}", m.name));
+                    assert_eq!(ours, wire, "{}: writer disagrees with the spec table", m.name);
+                }
+            }
+
+            // Omit-zero check: a zero capture stamp must leave the frame
+            // byte-identical to the form without the stamp, so unstamped
+            // traffic stays decodable by pre-stamp peers.
+            if let Some(last) = m.fields.last() {
+                if last.presence == Presence::OptionalOmitZero {
+                    let mut stamped_zero = BTreeMap::new();
+                    let mut short_payload = Vec::new();
+                    for (i, f) in m.fields.iter().enumerate() {
+                        let v = if i + 1 < m.fields.len() {
+                            encode_val(&mut short_payload, &vals[i]);
+                            vals[i].clone()
+                        } else {
+                            Val::Capture(0)
+                        };
+                        stamped_zero.insert(f.name.clone(), v);
+                    }
+                    let msg = build_msg(&m.name, &stamped_zero);
+                    let ours = encode_frame(&msg)
+                        .unwrap_or_else(|e| panic!("encode {}: {e:#}", m.name));
+                    assert_eq!(
+                        ours,
+                        frame(m.type_byte, &short_payload),
+                        "{}: zero capture stamp must be omitted on encode",
+                        m.name
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Session names at the decoder's documented limits: 1 byte and 255
+/// bytes must round-trip through every session-bearing message.
+#[test]
+fn session_name_boundaries_round_trip() {
+    let messages = spec();
+    for m in &messages {
+        let Some(sess_idx) = m.fields.iter().position(|f| f.encoding == "session") else {
+            continue;
+        };
+        for len in [1usize, 255] {
+            let name = "s".repeat(len);
+            let mut payload = Vec::new();
+            let mut vals = BTreeMap::new();
+            for (i, f) in m.fields.iter().enumerate() {
+                // Deterministic filler for non-session fields; stop at
+                // the session (shortest legal prefix containing it).
+                if i > sess_idx {
+                    vals.insert(f.name.clone(), default_val(&f.encoding));
+                    continue;
+                }
+                let v = if i == sess_idx {
+                    Val::Session(name.clone())
+                } else {
+                    match f.encoding.as_str() {
+                        "u32" => Val::U32(7),
+                        "u64" => Val::U64(9),
+                        "tensor" => Val::Tensor(HostTensor::zeros(&[2])),
+                        "qtensor" => Val::QTensor(QuantTensor {
+                            shape: vec![2],
+                            min: 0.0,
+                            scale: 1.0,
+                            data: vec![1, 2],
+                        }),
+                        "detections" => Val::Detections(Vec::new()),
+                        other => panic!("unexpected required encoding {other:?}"),
+                    }
+                };
+                encode_val(&mut payload, &v);
+                vals.insert(f.name.clone(), v);
+            }
+            let wire = frame(m.type_byte, &payload);
+            let decoded = read_msg(&mut wire.as_slice())
+                .unwrap_or_else(|e| panic!("decode {} ({len}B session): {e:#}", m.name));
+            assert_eq!(decoded, build_msg(&m.name, &vals));
+        }
+    }
+}

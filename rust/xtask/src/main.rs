@@ -1,0 +1,1054 @@
+//! Repo-invariant lints: `cargo run -p xtask -- lint`.
+//!
+//! Three hard CI gates, each protecting an invariant the compiler cannot
+//! see (`.github/workflows/ci.yml` runs this as a required step):
+//!
+//! 1. **Lock hygiene** — serving-path modules must not call
+//!    `.lock().unwrap()` / `.lock().expect(..)`. They use
+//!    [`crate::sync::lock_or_recover`](../../src/sync.rs) so one panicked
+//!    writer cannot poison-cascade the whole serving path. A *bare*
+//!    `.lock()` with an explicit poison `match` stays legal — that is a
+//!    visible, reviewed policy decision (e.g. `TcpSink::deliver`
+//!    detaching a sink whose writer died mid-frame).
+//! 2. **Wire-spec conformance** — every `encode_payload` arm and every
+//!    `Msg::type_byte` arm in `rust/src/net/proto.rs` must match the
+//!    machine-readable field table in `docs/WIRE_PROTOCOL.md`
+//!    (Appendix A), field-for-field and byte-for-byte, in both
+//!    directions. The table parser is `rust/src/net/spec.rs`, included
+//!    here via `#[path]` and shared verbatim with the
+//!    `tests/wire_spec.rs` round-trip property tests.
+//! 3. **Metric registry** — every metric-name string literal passed to a
+//!    `Metrics` method anywhere in non-test `rust/src` code must appear
+//!    in `REGISTERED_METRICS` (`rust/src/metrics/mod.rs`, between the
+//!    `registry-begin`/`registry-end` markers).
+//!
+//! The lints are textual/structural: the crate deliberately does not
+//! depend on `scmii` (a library that fails to build must not take its
+//! linter down too) and has zero external dependencies. Known
+//! limitations, accepted by design so reviewers don't rediscover them:
+//!
+//! * test modules (`#[cfg(test)]` / `#[cfg(all(test, ..))]`) are
+//!   exempt from every lint;
+//! * metric names built dynamically (e.g. `format!("head_dev{d}")` in
+//!   the `exec_time` diagnostic CLI) are not string literals and are out
+//!   of scope;
+//! * `Metrics::set` shares its name with `Json::set`, so it is only
+//!   recognized when the receiver chain ends in `metrics` /
+//!   `metrics()` — which every production call site does.
+
+#[path = "../../src/net/spec.rs"]
+#[allow(dead_code)]
+mod spec;
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories whose every `.rs` file is serving-path code for the lock
+/// lint (satellite modules like `sim/` and `utils/` stay out except for
+/// the explicitly listed files).
+const LOCK_SCOPE_DIRS: &[&str] = &[
+    "rust/src/coordinator",
+    "rust/src/runtime",
+    "rust/src/net",
+    "rust/src/metrics",
+    "rust/src/scenario",
+];
+
+/// Individual serving-path files outside the scoped directories.
+const LOCK_SCOPE_FILES: &[&str] = &["rust/src/utils/threadpool.rs", "rust/src/sync.rs"];
+
+/// Registry markers in `rust/src/metrics/mod.rs`.
+const REGISTRY_BEGIN: &str = "// registry-begin";
+const REGISTRY_END: &str = "// registry-end";
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {}
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            return ExitCode::from(2);
+        }
+    }
+    let root = repo_root();
+    match lint(&root) {
+        Err(e) => {
+            eprintln!("xtask lint: error: {e}");
+            ExitCode::from(2)
+        }
+        Ok(violations) if violations.is_empty() => {
+            println!("xtask lint: OK (lock hygiene, wire spec, metric registry)");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("xtask lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// The repo root, two levels above this crate's manifest
+/// (`<root>/rust/xtask`).
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("xtask lives at <repo>/rust/xtask")
+        .to_path_buf()
+}
+
+/// One lint finding, printed as `path:line: message`.
+struct Violation {
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: {}", self.file, self.line, self.msg)
+        } else {
+            write!(f, "{}: {}", self.file, self.msg)
+        }
+    }
+}
+
+fn lint(root: &Path) -> Result<Vec<Violation>, String> {
+    let mut violations = Vec::new();
+    lint_locks(root, &mut violations)?;
+    lint_wire_spec(root, &mut violations)?;
+    lint_metric_registry(root, &mut violations)?;
+    Ok(violations)
+}
+
+// ---------------------------------------------------------------------------
+// Source classification: byte-accurate comment/string masking so brace
+// matching and pattern scans never trip over `"{"` in a format string or
+// `.lock().unwrap()` in a doc comment.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Class {
+    /// Plain code.
+    Code,
+    /// Line/block comment (also used to mask stripped test modules).
+    Comment,
+    /// String or char literal, including its quotes.
+    Str,
+}
+
+/// Classify every byte of `src`. Handles line comments, nested block
+/// comments, string/byte-string literals with escapes, raw strings up to
+/// `r##"`, and char literals (distinguished from lifetimes by looking
+/// for the closing quote).
+fn classify(src: &str) -> Vec<Class> {
+    let b = src.as_bytes();
+    let mut out = vec![Class::Code; b.len()];
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    out[i] = Class::Comment;
+                    i += 1;
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 0usize;
+                while i < b.len() {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out[i] = Class::Comment;
+                        out[i + 1] = Class::Comment;
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out[i] = Class::Comment;
+                        out[i + 1] = Class::Comment;
+                        i += 2;
+                        if depth == 0 {
+                            break;
+                        }
+                        continue;
+                    }
+                    out[i] = Class::Comment;
+                    i += 1;
+                }
+            }
+            b'"' => i = mask_string(b, &mut out, i),
+            b'r' | b'b' if is_raw_string_start(b, i) => {
+                // r"..."  r#"..."#  br"..." — no escapes, closed by the
+                // quote followed by the same number of `#`s.
+                let start = i;
+                let mut j = i + 1;
+                if b[j] == b'r' {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while b.get(j) == Some(&b'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                j += 1; // opening quote
+                loop {
+                    match b.get(j) {
+                        None => break,
+                        Some(&b'"') if b[j + 1..].iter().take(hashes).all(|&c| c == b'#') => {
+                            j += 1 + hashes;
+                            break;
+                        }
+                        Some(_) => j += 1,
+                    }
+                }
+                for c in out[start..j.min(b.len())].iter_mut() {
+                    *c = Class::Str;
+                }
+                i = j;
+            }
+            b'\'' => {
+                // Char literal vs lifetime: a literal is `'\...'` or
+                // `'<one char>'`; anything else (`'a,`, `'static>`) is a
+                // lifetime/label and stays Code.
+                if b.get(i + 1) == Some(&b'\\') {
+                    let end = mask_char_escape(b, &mut out, i);
+                    i = end;
+                } else if let Some(len) = utf8_len(b.get(i + 1).copied()) {
+                    if b.get(i + 1 + len) == Some(&b'\'') {
+                        for c in out[i..=i + 1 + len].iter_mut() {
+                            *c = Class::Str;
+                        }
+                        i += len + 2;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+/// Whether `b[i]` starts a raw (or raw-byte) string literal and is not
+/// just the tail of an identifier like `var` or a normal string's `r`.
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    if i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_') {
+        return false;
+    }
+    let mut j = i + 1;
+    if b[i] == b'b' {
+        if b.get(j) != Some(&b'r') {
+            return false;
+        }
+        j += 1;
+    }
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    b.get(j) == Some(&b'"')
+}
+
+/// Mask a `"..."` literal (with escapes) starting at `i`; returns the
+/// index just past the closing quote.
+fn mask_string(b: &[u8], out: &mut [Class], i: usize) -> usize {
+    let mut j = i;
+    out[j] = Class::Str;
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'\\' && j + 1 < b.len() {
+            out[j] = Class::Str;
+            out[j + 1] = Class::Str;
+            j += 2;
+            continue;
+        }
+        out[j] = Class::Str;
+        if b[j] == b'"' {
+            return j + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Mask an escaped char literal `'\n'` / `'\u{..}'` starting at `i`;
+/// returns the index just past the closing quote.
+fn mask_char_escape(b: &[u8], out: &mut [Class], i: usize) -> usize {
+    let mut j = i;
+    out[j] = Class::Str;
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'\\' && j + 1 < b.len() {
+            out[j] = Class::Str;
+            out[j + 1] = Class::Str;
+            j += 2;
+            continue;
+        }
+        out[j] = Class::Str;
+        if b[j] == b'\'' {
+            return j + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Byte length of the UTF-8 char starting with `lead`, if valid.
+fn utf8_len(lead: Option<u8>) -> Option<usize> {
+    match lead? {
+        0x00..=0x7f => Some(1),
+        0xc0..=0xdf => Some(2),
+        0xe0..=0xef => Some(3),
+        0xf0..=0xf7 => Some(4),
+        _ => None,
+    }
+}
+
+/// Re-classify every `#[cfg(test)]` / `#[cfg(all(test, ..))]` item body
+/// as Comment, removing test modules from all scans. Brace matching
+/// counts only Code-class braces, so `"{"` inside test strings cannot
+/// desync it.
+fn mask_test_mods(src: &str, classes: &mut [Class]) {
+    let b = src.as_bytes();
+    for marker in ["#[cfg(test)]", "#[cfg(all(test"] {
+        let mut from = 0;
+        while let Some(rel) = src[from..].find(marker) {
+            let at = from + rel;
+            from = at + marker.len();
+            if classes[at] != Class::Code {
+                continue;
+            }
+            let Some(open) = (at..b.len()).find(|&j| classes[j] == Class::Code && b[j] == b'{')
+            else {
+                continue;
+            };
+            let mut depth = 0usize;
+            let mut end = b.len() - 1;
+            for (j, &byte) in b.iter().enumerate().skip(open) {
+                if classes[j] != Class::Code {
+                    continue;
+                }
+                match byte {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = j;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for c in classes[at..=end].iter_mut() {
+                *c = Class::Comment;
+            }
+        }
+    }
+}
+
+/// Whitespace-free projection of the Code bytes of a file (optionally
+/// keeping string literals verbatim), with a byte → source-line map so
+/// findings cite real line numbers. Collapsing whitespace makes every
+/// pattern scan tolerant of rustfmt re-wrapping
+/// (`.lock()\n        .unwrap()` still matches `.lock().unwrap()`).
+struct Condensed {
+    text: String,
+    lines: Vec<usize>,
+}
+
+fn condense(src: &str, classes: &[Class], keep_strings: bool) -> Condensed {
+    let mut text = String::new();
+    let mut lines = Vec::new();
+    let mut line = 1usize;
+    for (i, ch) in src.char_indices() {
+        let keep = match classes[i] {
+            Class::Code => !ch.is_whitespace(),
+            Class::Str => keep_strings,
+            Class::Comment => false,
+        };
+        if keep {
+            text.push(ch);
+            for _ in 0..ch.len_utf8() {
+                lines.push(line);
+            }
+        }
+        if ch == '\n' {
+            line += 1;
+        }
+    }
+    Condensed { text, lines }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("{}: {e}", dir.display()))?.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).display().to_string()
+}
+
+fn read(path: &Path) -> Result<String, String> {
+    fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// Lint 1: lock hygiene in serving-path modules.
+
+fn lint_locks(root: &Path, violations: &mut Vec<Violation>) -> Result<(), String> {
+    let mut files = Vec::new();
+    for dir in LOCK_SCOPE_DIRS {
+        rust_files(&root.join(dir), &mut files)?;
+    }
+    for file in LOCK_SCOPE_FILES {
+        files.push(root.join(file));
+    }
+    files.sort();
+    for path in &files {
+        let src = read(path)?;
+        let mut classes = classify(&src);
+        mask_test_mods(&src, &mut classes);
+        let c = condense(&src, &classes, false);
+        for pat in [".lock().unwrap()", ".lock().expect("] {
+            let mut from = 0;
+            while let Some(at) = c.text[from..].find(pat).map(|r| from + r) {
+                from = at + pat.len();
+                violations.push(Violation {
+                    file: rel(root, path),
+                    line: c.lines[at],
+                    msg: format!(
+                        "`{pat}` in a serving-path module: use \
+                         `crate::sync::lock_or_recover` (or an explicit poison `match` \
+                         when poisoning must change behavior)"
+                    ),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Lint 2: proto.rs ↔ docs/WIRE_PROTOCOL.md spec table.
+
+/// One parsed `encode_payload` arm: message name + ordered
+/// `(encoding, field)` pairs from its `put_*` calls.
+struct EncodeArm {
+    name: String,
+    line: usize,
+    puts: Vec<(String, String)>,
+}
+
+fn lint_wire_spec(root: &Path, violations: &mut Vec<Violation>) -> Result<(), String> {
+    let doc_path = root.join("docs/WIRE_PROTOCOL.md");
+    let doc = read(&doc_path)?;
+    let messages = match spec::parse_spec_table(&doc) {
+        Ok(m) => m,
+        Err(e) => {
+            violations.push(Violation { file: rel(root, &doc_path), line: 0, msg: e });
+            return Ok(());
+        }
+    };
+
+    let proto_path = root.join("rust/src/net/proto.rs");
+    let file = rel(root, &proto_path);
+    let src = read(&proto_path)?;
+    let mut classes = classify(&src);
+    mask_test_mods(&src, &mut classes);
+    let c = condense(&src, &classes, false);
+
+    let arms = match parse_encode_arms(&c) {
+        Ok(a) => a,
+        Err(e) => {
+            violations.push(Violation { file, line: 0, msg: e });
+            return Ok(());
+        }
+    };
+    let type_bytes = match parse_type_bytes(&c) {
+        Ok(t) => t,
+        Err(e) => {
+            violations.push(Violation { file, line: 0, msg: e });
+            return Ok(());
+        }
+    };
+
+    // Spec → code.
+    for m in &messages {
+        let Some(arm) = arms.iter().find(|a| a.name == m.name) else {
+            violations.push(Violation {
+                file: file.clone(),
+                line: 0,
+                msg: format!("spec message {:?} has no encode_payload arm", m.name),
+            });
+            continue;
+        };
+        match type_bytes.iter().find(|(n, _)| n == &m.name) {
+            None => violations.push(Violation {
+                file: file.clone(),
+                line: 0,
+                msg: format!("spec message {:?} has no Msg::type_byte arm", m.name),
+            }),
+            Some((_, tb)) if *tb != m.type_byte => violations.push(Violation {
+                file: file.clone(),
+                line: 0,
+                msg: format!(
+                    "{}: type_byte is {} in proto.rs but {} in the spec table",
+                    m.name, tb, m.type_byte
+                ),
+            }),
+            Some(_) => {}
+        }
+        if arm.puts.len() != m.fields.len() {
+            violations.push(Violation {
+                file: file.clone(),
+                line: arm.line,
+                msg: format!(
+                    "{}: encode_payload writes {} fields, spec table lists {}",
+                    m.name,
+                    arm.puts.len(),
+                    m.fields.len()
+                ),
+            });
+            continue;
+        }
+        for (idx, (put, row)) in arm.puts.iter().zip(&m.fields).enumerate() {
+            let (enc, field) = put;
+            if *enc != row.encoding || *field != row.name {
+                violations.push(Violation {
+                    file: file.clone(),
+                    line: arm.line,
+                    msg: format!(
+                        "{} field {idx}: encode_payload writes put_{enc}(.., {field}), \
+                         spec row says {} ({})",
+                        m.name, row.name, row.encoding
+                    ),
+                });
+            }
+            // Presence classes are determined by the encoder helpers:
+            // put_session is optional-on-decode, put_capture additionally
+            // omits zero, everything else is unconditional.
+            let want = match row.encoding.as_str() {
+                "session" => spec::Presence::Optional,
+                "capture" => spec::Presence::OptionalOmitZero,
+                _ => spec::Presence::Required,
+            };
+            if row.presence != want {
+                violations.push(Violation {
+                    file: rel(root, &doc_path),
+                    line: 0,
+                    msg: format!(
+                        "{}.{}: encoding {:?} implies presence {:?}, table says {:?}",
+                        m.name,
+                        row.name,
+                        row.encoding,
+                        want.as_str(),
+                        row.presence.as_str()
+                    ),
+                });
+            }
+        }
+    }
+
+    // Code → spec.
+    for arm in &arms {
+        if !messages.iter().any(|m| m.name == arm.name) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: arm.line,
+                msg: format!(
+                    "encode_payload arm {:?} is missing from the spec table in \
+                     docs/WIRE_PROTOCOL.md",
+                    arm.name
+                ),
+            });
+        }
+    }
+    for (name, _) in &type_bytes {
+        if !messages.iter().any(|m| &m.name == name) {
+            violations.push(Violation {
+                file: file.clone(),
+                line: 0,
+                msg: format!("Msg::type_byte arm {name:?} is missing from the spec table"),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Index of the `}` matching the `{` at `open` (text must be condensed
+/// Code, so braces inside strings/comments are already gone).
+fn brace_block(text: &str, open: usize) -> Result<usize, String> {
+    let b = text.as_bytes();
+    debug_assert_eq!(b[open], b'{');
+    let mut depth = 0usize;
+    for (j, &byte) in b.iter().enumerate().skip(open) {
+        match byte {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced braces".into())
+}
+
+/// Index of the `)` matching the `(` at `open`.
+fn paren_block(text: &str, open: usize) -> Result<usize, String> {
+    let b = text.as_bytes();
+    debug_assert_eq!(b[open], b'(');
+    let mut depth = 0usize;
+    for (j, &byte) in b.iter().enumerate().skip(open) {
+        match byte {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced parentheses".into())
+}
+
+fn ident_end(text: &str, start: usize) -> usize {
+    let b = text.as_bytes();
+    let mut i = start;
+    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+        i += 1;
+    }
+    i
+}
+
+/// Parse the arms of `encode_payload`'s `match msg { .. }` from the
+/// condensed source of proto.rs.
+fn parse_encode_arms(c: &Condensed) -> Result<Vec<EncodeArm>, String> {
+    let text = &c.text;
+    let f = text
+        .find("fnencode_payload")
+        .ok_or("proto.rs: fn encode_payload not found")?;
+    let m = text[f..]
+        .find("matchmsg{")
+        .map(|r| f + r)
+        .ok_or("encode_payload: `match msg {` not found")?;
+    let open = m + "matchmsg{".len() - 1;
+    let close = brace_block(text, open)?;
+    let b = text.as_bytes();
+    let mut arms = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        if !text[i..close].starts_with("Msg::") {
+            return Err(format!(
+                "encode_payload: expected `Msg::<Variant>` arm, found {:?}",
+                &text[i..close.min(i + 20)]
+            ));
+        }
+        let line = c.lines[i];
+        i += "Msg::".len();
+        let e = ident_end(text, i);
+        let name = text[i..e].to_string();
+        i = e;
+        if b[i] == b'{' {
+            i = brace_block(text, i)? + 1; // destructuring pattern
+        }
+        if !text[i..].starts_with("=>") {
+            return Err(format!("encode_payload arm {name}: expected `=>`"));
+        }
+        i += 2;
+        if b[i] != b'{' {
+            return Err(format!("encode_payload arm {name}: body must be a block"));
+        }
+        let body_close = brace_block(text, i)?;
+        let body = &text[i + 1..body_close];
+        i = body_close + 1;
+        if i < close && b[i] == b',' {
+            i += 1;
+        }
+        let puts = parse_put_sequence(&name, body)?;
+        arms.push(EncodeArm { name, line, puts });
+    }
+    Ok(arms)
+}
+
+/// An encode arm body must be a flat sequence of
+/// `put_<enc>(&mut buf, <field>);` statements — anything else is an
+/// inlined encoding the spec table cannot describe.
+fn parse_put_sequence(msg: &str, body: &str) -> Result<Vec<(String, String)>, String> {
+    let b = body.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < body.len() {
+        if !body[i..].starts_with("put_") {
+            return Err(format!(
+                "encode_payload arm {msg}: non-`put_*` code {:?} — add a put_ helper and a \
+                 spec-table row instead of inlining an encoding",
+                &body[i..body.len().min(i + 24)]
+            ));
+        }
+        i += "put_".len();
+        let e = ident_end(body, i);
+        let enc = body[i..e].to_string();
+        i = e;
+        if b.get(i) != Some(&b'(') {
+            return Err(format!("encode_payload arm {msg}: put_{enc} is not a call"));
+        }
+        let close = paren_block(body, i)?;
+        let args: Vec<&str> = split_top_commas(&body[i + 1..close]);
+        i = close + 1;
+        if b.get(i) != Some(&b';') {
+            return Err(format!("encode_payload arm {msg}: put_{enc} missing `;`"));
+        }
+        i += 1;
+        if args.len() != 2 || args[0] != "&mutbuf" {
+            return Err(format!(
+                "encode_payload arm {msg}: put_{enc} must be called as \
+                 put_{enc}(&mut buf, <field>)"
+            ));
+        }
+        let field = args[1].trim_start_matches(['*', '&']).to_string();
+        if field.is_empty() || !field.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_')
+        {
+            return Err(format!(
+                "encode_payload arm {msg}: put_{enc} argument {field:?} is not a plain \
+                 field identifier"
+            ));
+        }
+        if !spec::ENCODINGS.contains(&enc.as_str()) {
+            return Err(format!(
+                "encode_payload arm {msg}: unknown encoding put_{enc} (spec knows {:?})",
+                spec::ENCODINGS
+            ));
+        }
+        out.push((enc, field));
+    }
+    Ok(out)
+}
+
+/// Split on commas at paren/bracket depth zero.
+fn split_top_commas(args: &str) -> Vec<&str> {
+    let b = args.as_bytes();
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0;
+    for (j, &byte) in b.iter().enumerate() {
+        match byte {
+            b'(' | b'[' | b'<' => depth += 1,
+            b')' | b']' | b'>' => depth = depth.saturating_sub(1),
+            b',' if depth == 0 => {
+                parts.push(&args[start..j]);
+                start = j + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < args.len() {
+        parts.push(&args[start..]);
+    }
+    parts
+}
+
+/// Parse `Msg::type_byte`'s `match self { .. }` into `(variant, byte)`.
+fn parse_type_bytes(c: &Condensed) -> Result<Vec<(String, u8)>, String> {
+    let text = &c.text;
+    let f = text.find("fntype_byte").ok_or("proto.rs: fn type_byte not found")?;
+    let m = text[f..]
+        .find("matchself{")
+        .map(|r| f + r)
+        .ok_or("type_byte: `match self {` not found")?;
+    let open = m + "matchself{".len() - 1;
+    let close = brace_block(text, open)?;
+    let b = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        if !text[i..close].starts_with("Msg::") {
+            return Err(format!(
+                "type_byte: expected `Msg::<Variant>` arm, found {:?}",
+                &text[i..close.min(i + 20)]
+            ));
+        }
+        i += "Msg::".len();
+        let e = ident_end(text, i);
+        let name = text[i..e].to_string();
+        i = e;
+        if b[i] == b'{' {
+            i = brace_block(text, i)? + 1;
+        }
+        if !text[i..].starts_with("=>") {
+            return Err(format!("type_byte arm {name}: expected `=>`"));
+        }
+        i += 2;
+        let e = ident_end(text, i); // digits
+        let byte: u8 = text[i..e]
+            .parse()
+            .map_err(|_| format!("type_byte arm {name}: expected a literal byte"))?;
+        i = e;
+        if i < close && b[i] == b',' {
+            i += 1;
+        }
+        out.push((name, byte));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Lint 3: metric-name literals vs REGISTERED_METRICS.
+
+/// `Metrics` methods whose first argument is a metric name and whose
+/// names are unique to `Metrics` (scanned on any receiver).
+const METRIC_METHODS: &[&str] =
+    &["record", "incr", "counter", "samples", "summary", "rate", "time"];
+
+fn lint_metric_registry(root: &Path, violations: &mut Vec<Violation>) -> Result<(), String> {
+    let registry_path = root.join("rust/src/metrics/mod.rs");
+    let registry_src = read(&registry_path)?;
+    let registry = parse_registry(&registry_src)
+        .map_err(|e| format!("{}: {e}", rel(root, &registry_path)))?;
+
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src"), &mut files)?;
+    files.sort();
+    for path in &files {
+        let src = read(path)?;
+        let mut classes = classify(&src);
+        mask_test_mods(&src, &mut classes);
+        let c = condense(&src, &classes, true);
+        let mut check = |pat: &str, at: usize| {
+            let start = at + pat.len();
+            let Some(end) = c.text[start..].find('"').map(|r| start + r) else {
+                return;
+            };
+            let name = &c.text[start..end];
+            if !registry.contains(name) {
+                violations.push(Violation {
+                    file: rel(root, path),
+                    line: c.lines[at],
+                    msg: format!(
+                        "metric {name:?} is not in REGISTERED_METRICS \
+                         (rust/src/metrics/mod.rs) — register it with a doc row"
+                    ),
+                });
+            }
+        };
+        for method in METRIC_METHODS {
+            let pat = format!(".{method}(\"");
+            let mut from = 0;
+            while let Some(at) = c.text[from..].find(&pat).map(|r| from + r) {
+                from = at + pat.len();
+                check(&pat, at);
+            }
+        }
+        // `set` collides with Json::set; require a metrics receiver.
+        for pat in ["metrics.set(\"", "metrics().set(\""] {
+            let mut from = 0;
+            while let Some(at) = c.text[from..].find(pat).map(|r| from + r) {
+                from = at + pat.len();
+                check(pat, at);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extract the string literals between the registry markers in
+/// `metrics/mod.rs`.
+fn parse_registry(src: &str) -> Result<BTreeSet<String>, String> {
+    let begin = src
+        .find(REGISTRY_BEGIN)
+        .ok_or_else(|| format!("{REGISTRY_BEGIN:?} marker not found"))?;
+    let end = src
+        .find(REGISTRY_END)
+        .ok_or_else(|| format!("{REGISTRY_END:?} marker not found"))?;
+    if end <= begin {
+        return Err("registry-end precedes registry-begin".into());
+    }
+    let classes = classify(src);
+    let b = src.as_bytes();
+    let mut names = BTreeSet::new();
+    let mut i = begin;
+    while i < end {
+        if classes[i] == Class::Str && b[i] == b'"' {
+            let mut j = i + 1;
+            while j < end && b[j] != b'"' {
+                j += 1;
+            }
+            names.insert(src[i + 1..j].to_string());
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    if names.is_empty() {
+        return Err("registry markers enclose no metric names".into());
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn condensed(src: &str, keep_strings: bool) -> Condensed {
+        let mut classes = classify(src);
+        mask_test_mods(src, &mut classes);
+        condense(src, &classes, keep_strings)
+    }
+
+    #[test]
+    fn classify_masks_comments_strings_and_chars() {
+        let src = r#"let a = "x{"; // brace } in comment
+/* block { */ let b = '{'; let c = 'a'; fn f<'a>(x: &'a str) {}"#;
+        let classes = classify(src);
+        let code: String = src
+            .char_indices()
+            .filter(|(i, _)| classes[*i] == Class::Code)
+            .map(|(_, ch)| ch)
+            .collect();
+        assert!(!code.contains("x{"), "string content leaked: {code}");
+        assert!(!code.contains("brace"), "line comment leaked: {code}");
+        assert!(!code.contains("block"), "block comment leaked: {code}");
+        assert!(!code.contains('{') || code.matches('{').count() == code.matches('}').count());
+        assert!(code.contains("fn f<'a>"), "lifetime mangled: {code}");
+    }
+
+    #[test]
+    fn lock_pattern_matches_across_rustfmt_wrapping() {
+        let src = "fn f() { let g = m\n    .lock()\n    .unwrap();\n}";
+        let c = condensed(src, false);
+        assert!(c.text.contains(".lock().unwrap()"));
+        let at = c.text.find(".lock().unwrap()").unwrap();
+        assert_eq!(c.lines[at], 1, "finding cites the statement's line");
+    }
+
+    #[test]
+    fn test_mods_are_exempt() {
+        let src = "fn ok() {}\n#[cfg(test)]\nmod tests {\n    fn t() { m.lock().unwrap(); }\n}";
+        let c = condensed(src, false);
+        assert!(!c.text.contains(".lock().unwrap()"));
+        let src = "#[cfg(all(test, not(loom)))]\nmod tests { fn t() { m.lock().unwrap(); } }";
+        let c = condensed(src, false);
+        assert!(!c.text.contains(".lock().unwrap()"));
+    }
+
+    #[test]
+    fn test_mod_with_brace_in_string_still_terminates() {
+        let src = "#[cfg(test)]\nmod tests { const X: &str = \"}\"; fn t() {} }\n\
+                   fn live() { m.lock().unwrap(); }";
+        let c = condensed(src, false);
+        assert!(
+            c.text.contains(".lock().unwrap()"),
+            "code after the test mod must stay in scope: {}",
+            c.text
+        );
+    }
+
+    #[test]
+    fn parses_put_sequences_and_rejects_inlined_encodings() {
+        let arm = "put_u64(&mutbuf,*frame_id);put_session(&mutbuf,session);";
+        let puts = parse_put_sequence("Features", arm).unwrap();
+        assert_eq!(
+            puts,
+            vec![
+                ("u64".to_string(), "frame_id".to_string()),
+                ("session".to_string(), "session".to_string())
+            ]
+        );
+        let bad = "put_u64(&mutbuf,*frame_id);buf.push(0);";
+        assert!(parse_put_sequence("X", bad).unwrap_err().contains("non-`put_*`"));
+        let bad = "put_u16(&mutbuf,*id);";
+        assert!(parse_put_sequence("X", bad).unwrap_err().contains("unknown encoding"));
+        let bad = "put_u32(&mutbuf,id.len()asu32);";
+        assert!(parse_put_sequence("X", bad).unwrap_err().contains("plain field"));
+    }
+
+    #[test]
+    fn parses_encode_arms_and_type_bytes() {
+        let src = "
+            pub fn encode_payload(msg: &Msg) -> Vec<u8> {
+                let mut buf = Vec::new();
+                match msg {
+                    Msg::Hello { device_id, session } => {
+                        put_u32(&mut buf, *device_id);
+                        put_session(&mut buf, session);
+                    }
+                    Msg::Bye => {}
+                }
+                buf
+            }
+            impl Msg {
+                fn type_byte(&self) -> u8 {
+                    match self {
+                        Msg::Hello { .. } => 1,
+                        Msg::Bye => 5,
+                    }
+                }
+            }";
+        let c = condensed(src, false);
+        let arms = parse_encode_arms(&c).unwrap();
+        assert_eq!(arms.len(), 2);
+        assert_eq!(arms[0].name, "Hello");
+        assert_eq!(arms[0].puts.len(), 2);
+        assert_eq!(arms[1].name, "Bye");
+        assert!(arms[1].puts.is_empty());
+        let tb = parse_type_bytes(&c).unwrap();
+        assert_eq!(tb, vec![("Hello".to_string(), 1), ("Bye".to_string(), 5)]);
+    }
+
+    #[test]
+    fn registry_parse_and_metric_scan() {
+        let reg = "const R: &[&str] = &[\n    // registry-begin\n    \"e2e\", // doc\n    \
+                   \"tail\",\n    // registry-end\n];";
+        let names = parse_registry(reg).unwrap();
+        assert_eq!(names.len(), 2);
+        assert!(names.contains("e2e") && names.contains("tail"));
+
+        // Json::set must not look like a metric call; Metrics::set must.
+        let src = "fn f(m: &Metrics, j: &mut Json) {\n    m.record(\"e2e\", 0.1);\n    \
+                   j.set(\"scenario\", x);\n    self.metrics.set(\"tail\", 1);\n}";
+        let c = condensed(src, true);
+        assert!(c.text.contains(".record(\"e2e\""));
+        assert!(c.text.contains("metrics.set(\"tail\""));
+        assert!(!c.text.contains("metrics.set(\"scenario\""));
+    }
+
+    #[test]
+    fn split_top_commas_respects_nesting() {
+        assert_eq!(split_top_commas("&mutbuf,*frame_id"), vec!["&mutbuf", "*frame_id"]);
+        assert_eq!(split_top_commas("a,f(b,c),d"), vec!["a", "f(b,c)", "d"]);
+    }
+
+    /// The real repo must lint clean — this is the same check CI runs,
+    /// wired into `cargo test -p xtask` so a violation fails both gates.
+    #[test]
+    fn repo_lints_clean() {
+        let root = repo_root();
+        let violations = lint(&root).expect("lint infrastructure error");
+        let report: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+        assert!(violations.is_empty(), "repo has lint violations:\n{}", report.join("\n"));
+    }
+}
