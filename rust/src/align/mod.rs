@@ -89,18 +89,29 @@ impl AlignMap {
     /// unmapped). This is the rust-native mirror of the in-HLO gather.
     pub fn apply(&self, src: &FeatureMap) -> FeatureMap {
         let [w, h, d] = self.dims;
+        let mut out = FeatureMap::zeros(d, h, w, src.c);
+        self.apply_into(src, &mut out.data);
+        out
+    }
+
+    /// [`apply`](Self::apply) into a caller-provided backing slice
+    /// (typically checked out of the tail's
+    /// [`Arena`](crate::runtime::arena::Arena)). The slice **must come in
+    /// zeroed**: unmapped voxels are skipped, not cleared — that contract
+    /// is what lets the gather loop touch only mapped entries.
+    pub fn apply_into(&self, src: &FeatureMap, out: &mut [f32]) {
+        let [w, h, d] = self.dims;
         assert_eq!([src.w, src.h, src.d], [w, h, d], "grid mismatch");
         let c = src.c;
-        let mut out = FeatureMap::zeros(d, h, w, c);
+        assert_eq!(out.len(), src.data.len(), "gather output length mismatch");
         for (vox, &s) in self.src_flat.iter().enumerate() {
             if s >= 0 {
                 let src_base = s as usize * c;
                 let dst_base = vox * c;
-                out.data[dst_base..dst_base + c]
+                out[dst_base..dst_base + c]
                     .copy_from_slice(&src.data[src_base..src_base + c]);
             }
         }
-        out
     }
 }
 

@@ -246,14 +246,21 @@ fn bench_batch(_bench: &mut Bench) -> Result<Vec<Json>> {
 
 /// `scmii bench` CLI entry.
 pub fn cmd_bench(args: &Args) -> Result<()> {
-    args.check_known(&["out", "budget-ms"])?;
+    args.check_known(&["out", "budget-ms", "warmup"])?;
     let out_dir = args.str_or("out", ".");
     let out_dir = Path::new(&out_dir);
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("create bench output dir {}", out_dir.display()))?;
     let budget = std::time::Duration::from_millis(args.u64_or("budget-ms", 1000)?);
 
+    // Inputs for every case are constructed (and reused) outside the
+    // timed closures; warmup runs N untimed iterations first (default 3,
+    // `SCMII_BENCH_FAST` 1) so steady-state p50s aren't polluted by cold
+    // caches or an empty allocator/arena.
     let mut bench = Bench::auto().with_budget(budget).with_iters(3, 500);
+    if args.str_opt("warmup").is_some() {
+        bench = bench.with_warmup(args.usize_or("warmup", 3)?);
+    }
     write_entries(&out_dir.join("BENCH_decode.json"), &bench_decode(&mut bench))?;
     write_entries(&out_dir.join("BENCH_integrate.json"), &bench_integrate(&mut bench))?;
     write_entries(&out_dir.join("BENCH_tail.json"), &bench_tail(&mut bench)?)?;

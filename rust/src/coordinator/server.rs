@@ -17,7 +17,8 @@ use crate::net::{write_msg, Msg, WireDetection, DEFAULT_SESSION};
 use crate::runtime::{build_backend, BackendKind};
 use anyhow::{Context, Result};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::sync::{thread, Arc, Mutex};
+use crate::sync::{lock_or_recover, thread, Arc, Mutex};
+use crate::trace::TraceSink;
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
@@ -52,6 +53,10 @@ pub struct ServerConfig {
     /// default) keeps the per-frame path byte-identical to the unbatched
     /// server.
     pub batch: BatchConfig,
+    /// Tee every received intermediate output (with its arrival stamp)
+    /// into a replayable capture file (`--trace`); `None` = no capture.
+    /// See [`crate::trace`].
+    pub trace: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -67,6 +72,7 @@ impl Default for ServerConfig {
             backend: BackendKind::default_kind(),
             backend_threads: 1,
             batch: BatchConfig::default(),
+            trace: None,
         }
     }
 }
@@ -160,6 +166,9 @@ struct Shared {
     done: Arc<AtomicBool>,
     frames_out: AtomicU64,
     max_frames: Option<u64>,
+    /// Capture tee (`--trace`): every decoded intermediate output is
+    /// re-framed and appended here before being routed to its session.
+    trace: Option<Mutex<TraceSink>>,
 }
 
 impl Shared {
@@ -235,11 +244,16 @@ pub fn run_server_until(
         }
         registry.insert(session);
     }
+    let trace = match &cfg.trace {
+        Some(path) => Some(Mutex::new(TraceSink::create(path)?)),
+        None => None,
+    };
     let shared = Arc::new(Shared {
         registry: Arc::clone(&registry),
         done: stop,
         frames_out: AtomicU64::new(0),
         max_frames: cfg.max_frames,
+        trace,
     });
 
     let listener = TcpListener::bind(("127.0.0.1", cfg.port))
@@ -285,6 +299,11 @@ pub fn run_server_until(
     }
     for t in conn_threads {
         let _ = t.join();
+    }
+    if let Some(sink) = &shared.trace {
+        let mut sink = lock_or_recover(sink);
+        sink.flush()?;
+        log::info!("trace capture: {} records", sink.records());
     }
     if let Some(planner) = &planner {
         let m = planner.metrics();
@@ -334,6 +353,22 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
                 return Ok(());
             }
         };
+        // Capture tee: re-frame feature messages into the trace before
+        // routing. A tee failure degrades the capture, never the serving
+        // path — the frame is still submitted.
+        if let Some(sink) = &shared.trace {
+            if matches!(&msg, Msg::Features { .. } | Msg::FeaturesQ { .. }) {
+                match crate::net::encode_frame(&msg) {
+                    Ok(bytes) => {
+                        let arrival = crate::utils::unix_micros();
+                        if let Err(e) = lock_or_recover(sink).record(arrival, &bytes) {
+                            log::warn!("trace tee write failed: {e:#}");
+                        }
+                    }
+                    Err(e) => log::warn!("trace tee encode failed: {e:#}"),
+                }
+            }
+        }
         match msg {
             Msg::Hello { device_id, session } => {
                 // Unknown session: closing the connection is the only
@@ -424,6 +459,9 @@ fn submit(
         "device {device_id} out of range for session {session:?} ({} devices)",
         sess.meta().num_devices
     );
+    if shared.trace.is_some() {
+        sess.metrics().incr("trace_recorded", 1);
+    }
     // submit() already resolves this session's expirations; other
     // sessions are polled by the accept loop every 20 ms. Polling them
     // here too would make this connection thread run (and block on)
@@ -484,6 +522,7 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         "backend-threads",
         "max-batch",
         "batch-window-ms",
+        "trace",
     ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
@@ -503,6 +542,7 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     cfg.batch.window = args.ms_or("batch-window-ms", cfg.batch.window.as_millis() as u64)?;
     let max = args.u64_or("max-frames", 0)?;
     cfg.max_frames = if max > 0 { Some(max) } else { None };
+    cfg.trace = args.str_opt("trace").map(std::path::PathBuf::from);
     if let Some(spec) = args.str_opt("sessions") {
         cfg.extra_sessions = parse_session_specs(spec, &cfg)?;
     }
@@ -604,6 +644,14 @@ mod tests {
         let d = server_config_from_args(&args(&[])).unwrap();
         assert_eq!(d.batch.max_batch, 1);
         assert!(server_config_from_args(&args(&["--max-batch", "lots"])).is_err());
+    }
+
+    #[test]
+    fn serve_trace_flag_parses() {
+        let cfg = server_config_from_args(&args(&["--trace", "/tmp/cap.scmt"])).unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some(std::path::Path::new("/tmp/cap.scmt")));
+        let d = server_config_from_args(&args(&[])).unwrap();
+        assert!(d.trace.is_none(), "capture is opt-in");
     }
 
     #[test]

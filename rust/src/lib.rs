@@ -120,6 +120,7 @@ pub mod scenario;
 #[allow(missing_docs)]
 pub mod sim;
 pub mod sync;
+pub mod trace;
 #[allow(missing_docs)]
 pub mod utils;
 #[allow(missing_docs)]

@@ -20,6 +20,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("exec-time", "reproduce Fig 5 (execution-time comparison)"),
     ("bench", "hot-path micro-benchmarks -> BENCH_*.json"),
     ("scenario", "run a fleet scenario (devices x sessions, lossy links) -> BENCH_e2e.json"),
+    ("trace", "record/replay wire traces (record|replay|bench) -> BENCH_replay.json"),
     ("version", "print version info"),
 ];
 
@@ -47,6 +48,7 @@ fn main() {
         "exec-time" => scmii::latency::harness::cmd_exec_time(&args),
         "bench" => scmii::bench::cmd_bench(&args),
         "scenario" => scmii::scenario::cmd_scenario(&args),
+        "trace" => scmii::trace::cmd_trace(&args),
         #[cfg(feature = "xla")]
         "run-hlo" => cmd_run_hlo(&args),
         #[cfg(not(feature = "xla"))]

@@ -19,6 +19,8 @@ use std::collections::BTreeMap;
 /// literal is missing here — add the name and its doc row together.
 pub const REGISTERED_METRICS: &[&str] = &[
     // registry-begin
+    "arena_hits",          // gauge: scratch-arena checkouts served without allocating
+    "arena_misses",        // gauge: scratch-arena checkouts that allocated fresh
     "bad_device",          // counter: features addressed to an out-of-range device slot
     "batch_backend_calls", // counter: stacked exec_batch calls issued by the planner
     "batch_frames",        // counter: frames executed through the planner
@@ -42,6 +44,8 @@ pub const REGISTERED_METRICS: &[&str] = &[
     "tail",                // series: in-process pipeline tail seconds
     "tail_errors",         // counter: tail executions that returned an error
     "tail_exec",           // series: tail execution seconds
+    "trace_recorded",      // counter: intermediate outputs teed into a trace capture
+    "trace_replayed",      // counter: trace records submitted by `scmii trace replay`
     "tx",                  // series: device-side transmission seconds
     // registry-end
 ];

@@ -1,0 +1,180 @@
+//! Reusable scratch-buffer arena for the per-frame tail hot path.
+//!
+//! The native tail used to allocate every intermediate (`vec![0.0; ..]`)
+//! per frame: one gather buffer per device map plus the integrated
+//! [`FeatureMap`](crate::voxel::FeatureMap) backing store. Under replay
+//! load those allocations dominate the align/integrate stages. The
+//! [`Arena`] keeps returned buffers in a bounded pool and hands them back
+//! zeroed, so a steady-state frame allocates nothing.
+//!
+//! ## Ownership rules
+//!
+//! - [`Arena::take`] transfers **exclusive ownership** of a buffer to the
+//!   caller. The pool never retains a reference; two concurrent `take`
+//!   calls can never observe the same backing memory (each pops a
+//!   distinct `Vec` or allocates fresh).
+//! - The caller is free to move the buffer into a `FeatureMap` (all
+//!   `FeatureMap` fields are public, so the backing `Vec` can travel in
+//!   and out without copying).
+//! - [`Arena::give`] donates a buffer back. It is always safe to *not*
+//!   give a buffer back — the arena then simply allocates again — so
+//!   error paths may drop buffers without cleanup obligations.
+//! - Buffers are zeroed on `take`, not on `give`, so a dirty donation is
+//!   harmless.
+//!
+//! Hit/miss counters feed the `arena_hits` / `arena_misses` gauges and
+//! `BENCH_replay.json`.
+
+use crate::sync::{lock_or_recover, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Buffers retained per arena; donations beyond this are dropped so a
+/// burst (e.g. a deep batch) cannot pin memory forever.
+const MAX_POOLED: usize = 64;
+
+/// Point-in-time snapshot of the arena's reuse counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// `take` calls satisfied from the pool (no allocation).
+    pub hits: u64,
+    /// `take` calls that had to allocate a fresh buffer.
+    pub misses: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served without allocating (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A pool of reusable `Vec<f32>` scratch buffers (see module docs for the
+/// ownership rules).
+pub struct Arena {
+    pool: Mutex<Vec<Vec<f32>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Arena::new()
+    }
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(f, "Arena {{ hits: {}, misses: {} }}", s.hits, s.misses)
+    }
+}
+
+impl Arena {
+    /// An empty arena.
+    pub fn new() -> Arena {
+        Arena { pool: Mutex::new(Vec::new()), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    /// Check out an exclusively-owned, zeroed buffer of exactly `len`
+    /// elements. Reuses a pooled buffer when one exists (a *hit*),
+    /// allocates otherwise (a *miss*).
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        let pooled = lock_or_recover(&self.pool).pop();
+        match pooled {
+            Some(mut buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                // Zero the reused prefix, then size: `resize` fills any
+                // grown tail with 0.0, so the whole buffer comes out
+                // zeroed without a `vec![]` allocation on the hit path.
+                buf.truncate(len);
+                buf.fill(0.0);
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Donate a buffer back to the pool. Dropped (deallocated) when the
+    /// pool is full or the buffer is empty.
+    pub fn give(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut pool = lock_or_recover(&self.pool);
+        if pool.len() < MAX_POOLED {
+            pool.push(buf);
+        }
+    }
+
+    /// Snapshot the hit/miss counters.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Buffers currently parked in the pool (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        lock_or_recover(&self.pool).len()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_and_reuse_counts_hits() {
+        let a = Arena::new();
+        let mut b = a.take(8);
+        assert_eq!(b, vec![0.0; 8]);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        a.give(b);
+        assert_eq!(a.pooled(), 1);
+        let b2 = a.take(8);
+        assert_eq!(b2, vec![0.0; 8], "reused buffer must come back zeroed");
+        assert_eq!(a.stats(), ArenaStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn reuse_across_sizes() {
+        let a = Arena::new();
+        a.give(vec![1.0; 16]);
+        // Shrinking reuse.
+        let small = a.take(4);
+        assert_eq!(small, vec![0.0; 4]);
+        a.give(small);
+        // Growing reuse.
+        let big = a.take(32);
+        assert_eq!(big, vec![0.0; 32]);
+        assert_eq!(a.stats().hits, 2);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let a = Arena::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            a.give(vec![0.0; 4]);
+        }
+        assert_eq!(a.pooled(), MAX_POOLED);
+        a.give(Vec::new()); // empty donations are dropped, not pooled
+        assert_eq!(a.pooled(), MAX_POOLED);
+    }
+
+    #[test]
+    fn hit_rate_reports() {
+        let s = ArenaStats { hits: 3, misses: 1 };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(ArenaStats::default().hit_rate(), 0.0);
+    }
+}

@@ -32,6 +32,7 @@
 //! instruction ids); the text parser reassigns ids (see
 //! /opt/xla-example/README.md).
 
+pub mod arena;
 #[cfg(feature = "native")]
 pub mod native;
 pub mod pool;

@@ -8,8 +8,8 @@
 //!   (the split-point intermediate output).
 //! - **tail** — spatial alignment of each device map via the static
 //!   [`AlignMap`] gather built from the calibration [`Pose`]s, then the
-//!   variant's integration ([`max_integrate`] /
-//!   [`conv_integrate`](crate::integrate::conv_integrate)), then the
+//!   variant's integration ([`max_integrate_into`] /
+//!   [`conv_integrate_into`]), then the
 //!   [`BevStage`]: depth collapsed into channels, one strided 3×3 BEV
 //!   conv + ReLU, and 1×1 cls/box heads.
 //! - **full** (baselines) — head + [`BevStage`] on a single cloud.
@@ -21,8 +21,11 @@
 //! from the model/layer names, so the backend always runs — tests and
 //! benches exercise real code on synthetic weights.
 //!
-//! Execution happens on the caller's thread (`&self`), so the backend is
-//! inherently concurrent — no pool needed.
+//! Single-frame execution happens on the caller's thread (`&self`), so
+//! the backend is inherently concurrent. Batched tails additionally fan
+//! the per-frame align/integrate stage across a small shared
+//! [`ThreadPool`] (the BEV trunk then runs stacked on the caller's
+//! thread).
 //!
 //! ## Batched tails
 //!
@@ -34,14 +37,33 @@
 //! pass over the frames concatenated along a leading batch axis. The
 //! accumulation order per frame is identical to the unbatched kernels,
 //! so batched and unbatched outputs are bit-identical.
+//!
+//! ## Hot-path kernels, lanes and the arena
+//!
+//! The inner loops below marked `// xtask: hot` are the per-frame hot
+//! path. They follow three rules, enforced by `cargo run -p xtask --
+//! lint`:
+//!
+//! - **No allocation** (`vec![]`) and **no `.clone()`** inside a hot
+//!   function — scratch comes from the tail's shared
+//!   [`Arena`](super::arena::Arena), and public wrapper functions own
+//!   whatever allocation remains.
+//! - **Exact-size lane chunks**: output-channel loops run over 8-wide
+//!   `chunks_exact` array views (`axpy_lanes`-style), so the
+//!   autovectorizer sees fixed-size, bounds-check-free bodies.
+//! - **Fixed summation order**: lane chunking never reorders the per
+//!   output-element addition sequence, so lane-chunked kernels are
+//!   byte-identical to the scalar references in
+//!   [`crate::integrate`] (proven by `tests/kernels.rs`).
 
+use super::arena::Arena;
 use super::{ExecBackend, HostTensor};
 use crate::align::AlignMap;
 use crate::config::{IntegrationKind, ModelMeta, Paths};
 use crate::geom::Pose;
-use crate::integrate::{conv_integrate, max_integrate};
 use crate::utils::npy;
 use crate::utils::rng::Pcg64;
+use crate::utils::threadpool::ThreadPool;
 use crate::voxel::{tensor_to_points, voxelize, FeatureMap};
 use crate::sync::{lock_or_recover, Arc, Mutex};
 use anyhow::{bail, Context, Result};
@@ -68,10 +90,40 @@ pub fn bev_collapse(m: &FeatureMap) -> Vec<f32> {
     out
 }
 
+/// `out[i] += v * w[i]` over two equal-length rows, split into exact
+/// 8-wide lane chunks plus a scalar tail. The `&[f32; 8]` array views
+/// erase bounds checks and give the autovectorizer a fixed-trip-count
+/// body it can map straight onto SIMD lanes. Each output element still
+/// receives exactly one addition per call, in slice order, so results
+/// are byte-identical to the plain scalar loop.
+// xtask: hot
+#[inline]
+fn axpy_lanes(out: &mut [f32], w: &[f32], v: f32) {
+    const LANES: usize = 8;
+    debug_assert_eq!(out.len(), w.len());
+    let split = out.len() - out.len() % LANES;
+    let (out_body, out_tail) = out.split_at_mut(split);
+    let (w_body, w_tail) = w.split_at(split);
+    for (o8, w8) in out_body.chunks_exact_mut(LANES).zip(w_body.chunks_exact(LANES)) {
+        let o8: &mut [f32; LANES] = o8.try_into().expect("exact lane chunk");
+        let w8: &[f32; LANES] = w8.try_into().expect("exact lane chunk");
+        for l in 0..LANES {
+            o8[l] += v * w8[l];
+        }
+    }
+    for (o, &wv) in out_tail.iter_mut().zip(w_tail) {
+        *o += v * wv;
+    }
+}
+
 /// 2D convolution over an `(H, W, C_in)` HWC input with HWIO weights
 /// `(k, k, C_in, C_out)`, zero ("same") padding, stride `s`, optional
 /// ReLU. Output `(H/s, W/s, C_out)`. Skips zero activations — BEV maps
 /// from infrastructure LiDAR are overwhelmingly sparse.
+///
+/// Thin wrapper over [`conv2d_batch`] with B=1, so the lane-chunked
+/// inner loop exists exactly once; outputs are bit-identical to the
+/// historical single-frame kernel (same per-element summation order).
 pub fn conv2d(
     input: &[f32],
     h: usize,
@@ -83,51 +135,9 @@ pub fn conv2d(
     stride: usize,
     relu: bool,
 ) -> Vec<f32> {
-    let c_out = bias.len();
     assert_eq!(input.len(), h * w * c_in, "conv2d input shape mismatch");
-    assert_eq!(weights.len(), k * k * c_in * c_out, "conv2d weight shape mismatch");
-    assert!(k % 2 == 1, "odd kernels only");
-    let (ho, wo) = (h / stride, w / stride);
-    let half = (k / 2) as i64;
-    let mut out = vec![0.0f32; ho * wo * c_out];
-    for oy in 0..ho {
-        for ox in 0..wo {
-            let obase = (oy * wo + ox) * c_out;
-            out[obase..obase + c_out].copy_from_slice(bias);
-            for ky in 0..k {
-                let iy = (oy * stride) as i64 + ky as i64 - half;
-                if iy < 0 || iy >= h as i64 {
-                    continue;
-                }
-                for kx in 0..k {
-                    let ix = (ox * stride) as i64 + kx as i64 - half;
-                    if ix < 0 || ix >= w as i64 {
-                        continue;
-                    }
-                    let ibase = (iy as usize * w + ix as usize) * c_in;
-                    let wbase = (ky * k + kx) * c_in * c_out;
-                    for ci in 0..c_in {
-                        let v = input[ibase + ci];
-                        if v == 0.0 {
-                            continue;
-                        }
-                        let wrow = wbase + ci * c_out;
-                        for oc in 0..c_out {
-                            out[obase + oc] += v * weights[wrow + oc];
-                        }
-                    }
-                }
-            }
-            if relu {
-                for oc in 0..c_out {
-                    if out[obase + oc] < 0.0 {
-                        out[obase + oc] = 0.0;
-                    }
-                }
-            }
-        }
-    }
-    out
+    let mut outs = conv2d_batch(&[input], h, w, c_in, weights, bias, k, stride, relu);
+    outs.pop().expect("B=1 batch yields one output")
 }
 
 /// [`conv2d`] over a micro-batch of same-shaped `(H, W, C_in)` inputs
@@ -155,8 +165,36 @@ pub fn conv2d_batch(
     assert_eq!(weights.len(), k * k * c_in * c_out, "conv2d_batch weight shape mismatch");
     assert!(k % 2 == 1, "odd kernels only");
     let (ho, wo) = (h / stride, w / stride);
-    let half = (k / 2) as i64;
     let mut outs = vec![vec![0.0f32; ho * wo * c_out]; inputs.len()];
+    {
+        let mut out_slices: Vec<&mut [f32]> = outs.iter_mut().map(|o| o.as_mut_slice()).collect();
+        conv2d_batch_into(inputs, h, w, c_in, weights, bias, k, stride, relu, &mut out_slices);
+    }
+    outs
+}
+
+/// Allocation-free inner loop of [`conv2d_batch`]: the batch loop sits
+/// inside the kernel-position loop so each weight row is loaded once per
+/// tap, and the per-channel accumulation runs as 8-wide lane chunks
+/// ([`axpy_lanes`]). Per frame and per output element the addition order
+/// matches the scalar kernel exactly — outputs are byte-identical.
+// xtask: hot
+#[allow(clippy::too_many_arguments)]
+fn conv2d_batch_into(
+    inputs: &[&[f32]],
+    h: usize,
+    w: usize,
+    c_in: usize,
+    weights: &[f32],
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    relu: bool,
+    outs: &mut [&mut [f32]],
+) {
+    let c_out = bias.len();
+    let (ho, wo) = (h / stride, w / stride);
+    let half = (k / 2) as i64;
     for oy in 0..ho {
         for ox in 0..wo {
             let obase = (oy * wo + ox) * c_out;
@@ -182,10 +220,7 @@ pub fn conv2d_batch(
                             if v == 0.0 {
                                 continue;
                             }
-                            let out = &mut outs[bi][obase..obase + c_out];
-                            for (o, &wv) in out.iter_mut().zip(wrow) {
-                                *o += v * wv;
-                            }
+                            axpy_lanes(&mut outs[bi][obase..obase + c_out], wrow, v);
                         }
                     }
                 }
@@ -201,7 +236,6 @@ pub fn conv2d_batch(
             }
         }
     }
-    outs
 }
 
 /// Per-cell dense layer: `(cells, c_in) × (c_in, c_out) + bias` —
@@ -217,6 +251,22 @@ pub fn dense_per_cell(
     assert_eq!(input.len(), cells * c_in, "dense input shape mismatch");
     assert_eq!(w.len(), c_in * c_out, "dense weight shape mismatch");
     let mut out = vec![0.0f32; cells * c_out];
+    dense_per_cell_into(input, cells, c_in, w, b, &mut out);
+    out
+}
+
+/// Allocation-free inner loop of [`dense_per_cell`], lane-chunked via
+/// [`axpy_lanes`]; byte-identical to the scalar loop.
+// xtask: hot
+fn dense_per_cell_into(
+    input: &[f32],
+    cells: usize,
+    c_in: usize,
+    w: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+) {
+    let c_out = b.len();
     for cell in 0..cells {
         let ibase = cell * c_in;
         let obase = cell * c_out;
@@ -226,13 +276,118 @@ pub fn dense_per_cell(
             if v == 0.0 {
                 continue;
             }
-            let wrow = ci * c_out;
-            for oc in 0..c_out {
-                out[obase + oc] += v * w[wrow + oc];
+            axpy_lanes(&mut out[obase..obase + c_out], &w[ci * c_out..(ci + 1) * c_out], v);
+        }
+    }
+}
+
+/// Element-wise max integration into a caller-provided buffer — the
+/// lane-chunked, allocation-free mirror of
+/// [`max_integrate`](crate::integrate::max_integrate). `out` is fully
+/// overwritten (no pre-zeroing contract). Per element, the comparison
+/// sequence matches the reference exactly, so outputs are byte-identical
+/// (including NaN handling: a NaN in a later map never replaces a
+/// finite value).
+// xtask: hot
+pub fn max_integrate_into(maps: &[FeatureMap], out: &mut [f32]) {
+    let (first, rest) = maps.split_first().expect("max integration needs at least one map");
+    assert_eq!(out.len(), first.data.len(), "integration output length mismatch");
+    out.copy_from_slice(&first.data);
+    for m in rest {
+        assert_eq!(m.shape(), first.shape(), "feature map shape mismatch");
+        max_fold_lanes(&m.data, out);
+    }
+}
+
+/// `out[i] = max(out[i], src[i])` in exact 8-wide lane chunks.
+// xtask: hot
+#[inline]
+fn max_fold_lanes(src: &[f32], out: &mut [f32]) {
+    const LANES: usize = 8;
+    let split = out.len() - out.len() % LANES;
+    let (o_body, o_tail) = out.split_at_mut(split);
+    let (s_body, s_tail) = src.split_at(split);
+    for (o8, s8) in o_body.chunks_exact_mut(LANES).zip(s_body.chunks_exact(LANES)) {
+        let o8: &mut [f32; LANES] = o8.try_into().expect("exact lane chunk");
+        let s8: &[f32; LANES] = s8.try_into().expect("exact lane chunk");
+        for l in 0..LANES {
+            if s8[l] > o8[l] {
+                o8[l] = s8[l];
             }
         }
     }
-    out
+    for (o, &s) in o_tail.iter_mut().zip(s_tail) {
+        if s > *o {
+            *o = s;
+        }
+    }
+}
+
+/// Concat + conv3d integration into a caller-provided buffer — the
+/// lane-chunked, allocation-free mirror of
+/// [`conv_integrate`](crate::integrate::conv_integrate). All `c_out`
+/// accumulators advance together through the identical tap/map/channel
+/// sequence the scalar reference walks per output channel, so outputs
+/// are byte-identical. `out` is fully overwritten (accumulation starts
+/// from the bias), length `d·h·w·c_out`.
+// xtask: hot
+pub fn conv_integrate_into(
+    maps: &[FeatureMap],
+    weights: &[f32],
+    bias: &[f32],
+    k: usize,
+    out: &mut [f32],
+) {
+    let first = maps.first().expect("conv integration needs at least one map");
+    let [d, h, w, c_each] = first.shape();
+    for m in maps {
+        assert_eq!(m.shape(), first.shape(), "feature map shape mismatch");
+    }
+    let c_in = c_each * maps.len();
+    let c_out = bias.len();
+    assert_eq!(weights.len(), k * k * k * c_in * c_out, "weight shape mismatch");
+    assert!(k % 2 == 1, "odd kernels only");
+    assert_eq!(out.len(), d * h * w * c_out, "integration output length mismatch");
+    let half = (k / 2) as i64;
+    for oz in 0..d as i64 {
+        for oy in 0..h as i64 {
+            for ox in 0..w as i64 {
+                let obase = ((oz as usize * h + oy as usize) * w + ox as usize) * c_out;
+                let acc = &mut out[obase..obase + c_out];
+                acc.copy_from_slice(bias);
+                for kz in 0..k as i64 {
+                    let iz = oz + kz - half;
+                    if iz < 0 || iz >= d as i64 {
+                        continue;
+                    }
+                    for ky in 0..k as i64 {
+                        let iy = oy + ky - half;
+                        if iy < 0 || iy >= h as i64 {
+                            continue;
+                        }
+                        for kx in 0..k as i64 {
+                            let ix = ox + kx - half;
+                            if ix < 0 || ix >= w as i64 {
+                                continue;
+                            }
+                            let wbase =
+                                (((kz as usize * k + ky as usize) * k + kx as usize) * c_in)
+                                    * c_out;
+                            for (mi, m) in maps.iter().enumerate() {
+                                let src = m.voxel(iz as usize, iy as usize, ix as usize);
+                                let cbase = wbase + mi * c_each * c_out;
+                                for ci in 0..c_each {
+                                    let wrow = &weights[cbase + ci * c_out
+                                        ..cbase + (ci + 1) * c_out];
+                                    axpy_lanes(acc, wrow, src[ci]);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Deterministic synthetic weights, seeded from the model/layer names —
@@ -402,7 +557,8 @@ pub struct NativeTail {
     /// One gather map per device (device 0 is the identity reference).
     pub aligns: Vec<AlignMap>,
     /// Conv-integration weights `(k, k, k, devices·c_head, c_head)`
-    /// (DHWIO, matching [`conv_integrate`]); empty for `Max`.
+    /// (DHWIO, matching [`conv_integrate`](crate::integrate::conv_integrate));
+    /// empty for `Max`.
     pub integrate_w: Vec<f32>,
     /// Conv-integration bias, `(c_head,)`; empty for `Max`.
     pub integrate_b: Vec<f32>,
@@ -410,23 +566,38 @@ pub struct NativeTail {
     pub k: usize,
     /// The shared BEV trunk + detection heads.
     pub bev: BevStage,
+    /// Scratch-buffer arena shared with the owning backend: gather
+    /// buffers and integrated backing stores are checked out per frame
+    /// instead of allocated (see the arena module's ownership rules).
+    pub scratch: Arc<Arena>,
 }
 
 impl NativeTail {
     /// The integration step alone (parity tests cross-check this against
-    /// the reference kernels directly).
+    /// the reference kernels directly). The returned map's backing store
+    /// comes from the arena; callers may [`Arena::give`] it back when the
+    /// map is consumed (dropping it is also fine).
     pub fn integrate(&self, aligned: &[FeatureMap]) -> FeatureMap {
-        match self.kind {
-            IntegrationKind::Max => max_integrate(aligned),
+        let first = aligned.first().expect("integration needs at least one map");
+        let [d, h, w, _] = first.shape();
+        let (c_out, run): (usize, fn(&NativeTail, &[FeatureMap], &mut [f32])) = match self.kind {
+            IntegrationKind::Max => (first.c, |_t, maps, out| max_integrate_into(maps, out)),
             IntegrationKind::ConvK1 | IntegrationKind::ConvK3 => {
-                conv_integrate(aligned, &self.integrate_w, &self.integrate_b, self.k)
+                (self.integrate_b.len(), |t, maps, out| {
+                    conv_integrate_into(maps, &t.integrate_w, &t.integrate_b, t.k, out)
+                })
             }
-        }
+        };
+        let mut out = self.scratch.take(d * h * w * c_out);
+        run(self, aligned, &mut out);
+        FeatureMap::from_vec(d, h, w, c_out, out).expect("integration output shape")
     }
 
     /// Per-frame front half of the tail: validate the device maps, apply
-    /// the gather alignment, integrate. Shared by [`run`](Self::run) and
-    /// [`run_batch`](Self::run_batch).
+    /// the gather alignment (into arena scratch), integrate. Shared by
+    /// [`run`](Self::run) and [`run_batch`](Self::run_batch); the batched
+    /// backend path fans this function across a thread pool. The returned
+    /// map's backing store is arena-owned (see [`integrate`](Self::integrate)).
     fn prepare(&self, meta: &ModelMeta, inputs: Vec<HostTensor>) -> Result<FeatureMap> {
         anyhow::ensure!(
             inputs.len() == meta.num_devices,
@@ -445,15 +616,28 @@ impl NativeTail {
                 expect
             );
             let map = FeatureMap::from_vec(expect[0], expect[1], expect[2], expect[3], t.data)?;
-            aligned.push(self.aligns[dev].apply(&map));
+            // Gather into a zeroed arena buffer (apply_into's contract),
+            // then donate the source map's backing store for reuse.
+            let mut gathered = self.scratch.take(map.data.len());
+            self.aligns[dev].apply_into(&map, &mut gathered);
+            self.scratch.give(map.data);
+            aligned.push(FeatureMap::from_vec(
+                expect[0], expect[1], expect[2], expect[3], gathered,
+            )?);
         }
-        Ok(self.integrate(&aligned))
+        let integrated = self.integrate(&aligned);
+        for m in aligned {
+            self.scratch.give(m.data);
+        }
+        Ok(integrated)
     }
 
     /// Run the full tail on one frame's device maps. Returns `[cls, boxes]`.
     pub fn run(&self, meta: &ModelMeta, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         let integrated = self.prepare(meta, inputs)?;
-        let (cls, boxes) = self.bev.run(&integrated)?;
+        let heads = self.bev.run(&integrated);
+        self.scratch.give(integrated.data);
+        let (cls, boxes) = heads?;
         Ok(vec![cls, boxes])
     }
 
@@ -472,6 +656,15 @@ impl NativeTail {
     ) -> Vec<Result<Vec<HostTensor>>> {
         let prepared: Vec<Result<FeatureMap>> =
             batch.into_iter().map(|inputs| self.prepare(meta, inputs)).collect();
+        self.finish_batch(prepared)
+    }
+
+    /// Back half of [`run_batch`](Self::run_batch): stacked BEV trunk +
+    /// heads over already-prepared (aligned + integrated) frames. Split
+    /// out so the backend can run the prepare stage on a thread pool and
+    /// still share this code. Donates every prepared map's backing store
+    /// back to the arena, on success and failure paths alike.
+    fn finish_batch(&self, prepared: Vec<Result<FeatureMap>>) -> Vec<Result<Vec<HostTensor>>> {
         let healthy: Vec<&FeatureMap> = prepared.iter().filter_map(|r| r.as_ref().ok()).collect();
         let heads = match self.bev.run_batch(&healthy) {
             Ok(h) => h,
@@ -481,7 +674,12 @@ impl NativeTail {
                 let msg = format!("batched BEV stage failed: {e:#}");
                 return prepared
                     .into_iter()
-                    .map(|r| r.and_then(|_| Err(anyhow::anyhow!("{msg}"))))
+                    .map(|r| {
+                        r.and_then(|m| {
+                            self.scratch.give(m.data);
+                            Err(anyhow::anyhow!("{msg}"))
+                        })
+                    })
                     .collect();
             }
         };
@@ -489,7 +687,8 @@ impl NativeTail {
         prepared
             .into_iter()
             .map(|r| {
-                r.map(|_| {
+                r.map(|m| {
+                    self.scratch.give(m.data);
                     let (cls, boxes) =
                         heads.next().expect("one BEV output per healthy batch entry");
                     vec![cls, boxes]
@@ -537,6 +736,11 @@ pub struct NativeBackend {
     poses: Vec<Pose>,
     weights_dir: Option<PathBuf>,
     models: Mutex<HashMap<String, Arc<NativeModel>>>,
+    /// Scratch arena shared by every tail this backend builds.
+    arena: Arc<Arena>,
+    /// Lazily-built pool for the batched tails' parallel prepare stage —
+    /// lazy so single-frame deployments never spawn threads.
+    batch_pool: Mutex<Option<Arc<ThreadPool>>>,
 }
 
 impl NativeBackend {
@@ -553,7 +757,14 @@ impl NativeBackend {
             poses.len(),
             meta.num_devices
         );
-        Ok(NativeBackend { meta, poses, weights_dir, models: Mutex::new(HashMap::new()) })
+        Ok(NativeBackend {
+            meta,
+            poses,
+            weights_dir,
+            models: Mutex::new(HashMap::new()),
+            arena: Arc::new(Arena::new()),
+            batch_pool: Mutex::new(None),
+        })
     }
 
     /// Build from the artifact directory: calibration from `calib.json`
@@ -580,6 +791,24 @@ impl NativeBackend {
     /// The model geometry this backend was built for.
     pub fn meta(&self) -> &ModelMeta {
         &self.meta
+    }
+
+    /// Snapshot the shared scratch arena's hit/miss counters (feeds the
+    /// `arena_*` gauges and `BENCH_replay.json`).
+    pub fn arena_stats(&self) -> super::arena::ArenaStats {
+        self.arena.stats()
+    }
+
+    /// The shared pool for batched prepare, built on first use.
+    fn batch_pool(&self) -> Arc<ThreadPool> {
+        let mut slot = lock_or_recover(&self.batch_pool);
+        if let Some(pool) = slot.as_ref() {
+            return Arc::clone(pool);
+        }
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
+        let pool = Arc::new(ThreadPool::new(n));
+        *slot = Some(Arc::clone(&pool));
+        pool
     }
 
     /// Shared handle to a resident model (parity tests rebuild the
@@ -673,6 +902,7 @@ impl NativeBackend {
                     integrate_b,
                     k,
                     bev: self.bev_weights(name)?,
+                    scratch: Arc::clone(&self.arena),
                 }));
             }
         }
@@ -757,8 +987,31 @@ impl ExecBackend for NativeBackend {
         };
         match &*model {
             // The tail is the server hot path — the one the coordinator's
-            // batch planner feeds — and gets the stacked kernels.
-            NativeModel::Tail(tail) => tail.run_batch(&self.meta, batch),
+            // batch planner feeds — and gets the stacked kernels, with the
+            // per-frame align/integrate stage fanned across the pool.
+            NativeModel::Tail(tail) => {
+                if batch.len() < 2 {
+                    return tail.run_batch(&self.meta, batch);
+                }
+                let n = batch.len();
+                // Each slot is taken exactly once (by its own pool job),
+                // satisfying the pool's Fn-closure bound while still
+                // moving every frame's tensors rather than cloning them.
+                let slots: Arc<Vec<Mutex<Option<Vec<HostTensor>>>>> =
+                    Arc::new(batch.into_iter().map(|inputs| Mutex::new(Some(inputs))).collect());
+                let meta = Arc::new(self.meta.clone());
+                let model = Arc::clone(&model);
+                let prepared = self.batch_pool().map(n, move |i| {
+                    let inputs = lock_or_recover(&slots[i])
+                        .take()
+                        .expect("each batch slot is taken exactly once");
+                    match &*model {
+                        NativeModel::Tail(t) => t.prepare(&meta, inputs),
+                        _ => unreachable!("batched prepare only dispatches tails"),
+                    }
+                });
+                tail.finish_batch(prepared)
+            }
             // Heads/baselines run per entry (single-input models; no
             // server-side batching pressure).
             _ => batch.into_iter().map(|inputs| self.exec(name, inputs)).collect(),

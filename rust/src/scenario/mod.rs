@@ -124,6 +124,11 @@ pub struct ScenarioSpec {
     /// (lets deadline-resolved frames flush). Zero = longest session
     /// deadline + 500 ms.
     pub settle: Duration,
+    /// Tee the server's received intermediate outputs into a replayable
+    /// capture file (`--trace`, used by `scmii trace record`; see
+    /// [`crate::trace`]). Not a JSON spec key — capture is a harness
+    /// concern, not part of the declarative workload.
+    pub trace: Option<PathBuf>,
 }
 
 impl ScenarioSpec {
@@ -153,6 +158,7 @@ impl ScenarioSpec {
             sessions: Vec::new(),
             devices: Vec::new(),
             settle: Duration::ZERO,
+            trace: None,
         };
         let session = |n: &str, v, d: u64, p| SessionSpec {
             name: n.to_string(),
@@ -394,6 +400,7 @@ impl ScenarioSpec {
             sessions,
             devices,
             settle: Duration::from_millis(u64_or(j, "settle_ms", 0)?),
+            trace: None,
         })
     }
 
@@ -613,7 +620,7 @@ impl ScenarioReport {
 
 /// Reduced synthetic model geometry used when no artifacts exist: same
 /// structure as production at 1/4 resolution, fast enough for CI.
-fn scenario_test_meta() -> ModelMeta {
+pub(crate) fn scenario_test_meta() -> ModelMeta {
     let mut meta = ModelMeta::test_default();
     meta.grid.dims = [16, 16, 4];
     meta.grid.max_points = 256;
@@ -623,8 +630,10 @@ fn scenario_test_meta() -> ModelMeta {
 
 /// Artifacts present → use them; otherwise materialize a temp workspace
 /// holding a reduced `model_meta.json` (the native backend synthesizes
-/// weights, so that is all a scenario needs).
-fn materialize_paths(paths: &Paths, scenario: &str) -> Result<Paths> {
+/// weights, so that is all a scenario needs). Shared with trace replay
+/// ([`crate::trace`]), which must resolve the same meta a recording
+/// scenario ran under.
+pub(crate) fn materialize_paths(paths: &Paths, scenario: &str) -> Result<Paths> {
     if artifacts_present(paths) {
         return Ok(paths.clone());
     }
@@ -720,6 +729,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     server_cfg.backend_threads = spec.backend_threads;
     server_cfg.batch.max_batch = spec.max_batch;
     server_cfg.batch.window = spec.batch_window;
+    server_cfg.trace = spec.trace.clone();
     server_cfg.max_frames = None; // externally stopped
     for s in &spec.sessions {
         let sc = SessionConfig::new(s.variant).deadline(s.deadline).policy(s.policy);
@@ -947,6 +957,7 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         "batch-window-ms",
         "seed",
         "list",
+        "trace",
     ])?;
     if args.switch("list") {
         for n in ScenarioSpec::builtin_names() {
@@ -969,6 +980,7 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
     spec.batch_window =
         args.ms_or("batch-window-ms", spec.batch_window.as_millis() as u64)?;
     spec.seed = args.u64_or("seed", spec.seed)?;
+    spec.trace = args.str_opt("trace").map(PathBuf::from);
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
         &args.str_or("data", "data"),

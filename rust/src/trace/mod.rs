@@ -1,0 +1,720 @@
+//! Trace record/replay load generator (`scmii trace`).
+//!
+//! Every performance number this repo emits ultimately depends on the
+//! *load shape*: how many devices feed how many sessions, how bursty
+//! their arrivals are, which (frame, device) slots never arrive. The
+//! fleet scenario harness synthesizes that shape; this module instead
+//! **captures the real one** and plays it back:
+//!
+//! - [`TraceSink`] tees the live wire stream on the server: every
+//!   decoded intermediate output ([`Msg::Features`] / [`Msg::FeaturesQ`])
+//!   is re-framed and appended — with its arrival timestamp — to a
+//!   length-prefixed capture file. Recording is enabled with
+//!   `scmii serve --trace out.scmt` or `scmii trace record` (which runs
+//!   a scenario with the tee on).
+//! - [`TraceSource`] reads a capture back; [`replay`] feeds it into
+//!   fresh [`DetectorSession`](crate::coordinator::session::DetectorSession)s
+//!   at `--speed N` times recorded pace, `--repeat R` times over, and
+//!   verifies the outcome is **identical every repeat** (same
+//!   frames-done and synchronizer accounting) — the determinism gate CI
+//!   runs. With `--connect host:port` the same pacing streams the raw
+//!   frames over real TCP at a live server instead.
+//! - `scmii trace bench` sweeps replay at 1×/4×/16× and writes
+//!   `BENCH_replay.json` (sustained frames/sec plus the scratch-arena
+//!   hit rate; schema in `docs/BENCHMARKS.md`).
+//!
+//! ## Capture file format
+//!
+//! ```text
+//! header:  "SCMT" | u32 version (LE, currently 1)
+//! record:  u64 arrival_micros (LE) | u32 len (LE) | len framed wire bytes
+//! ```
+//!
+//! The payload of each record is a complete wire frame exactly as
+//! [`encode_frame`](crate::net::encode_frame) produces it (magic,
+//! type, length, payload), so a capture can be replayed byte-for-byte
+//! onto a TCP socket without re-encoding, and decoding reuses
+//! [`read_msg`] unchanged.
+
+use crate::cli::Args;
+use crate::config::{IntegrationKind, ModelMeta, Paths};
+use crate::net::{read_msg, Msg};
+use crate::runtime::arena::ArenaStats;
+use crate::utils::json::Json;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Capture-file magic ("SCMT" = SC-MII trace).
+pub const TRACE_MAGIC: [u8; 4] = *b"SCMT";
+/// Capture format version written after the magic.
+pub const TRACE_VERSION: u32 = 1;
+/// Upper bound on a single record's frame length — anything larger
+/// means a corrupt or desynced capture, not a real intermediate output.
+const MAX_RECORD_BYTES: usize = 256 << 20;
+
+/// Appends timestamped wire frames to a capture file (see the module
+/// docs for the format). The server holds one behind a mutex and tees
+/// every decoded feature message into it.
+pub struct TraceSink {
+    w: BufWriter<File>,
+    records: u64,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceSink {{ records: {} }}", self.records)
+    }
+}
+
+impl TraceSink {
+    /// Create (truncate) `path` — parent directories included — and
+    /// write the capture header.
+    pub fn create(path: &Path) -> Result<TraceSink> {
+        if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create trace dir {}", parent.display()))?;
+        }
+        let file = File::create(path)
+            .with_context(|| format!("create trace {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&TRACE_MAGIC)?;
+        w.write_all(&TRACE_VERSION.to_le_bytes())?;
+        Ok(TraceSink { w, records: 0 })
+    }
+
+    /// Append one record: a complete wire frame plus its arrival stamp
+    /// (µs since the Unix epoch, as stamped by the receiver).
+    pub fn record(&mut self, arrival_micros: u64, frame: &[u8]) -> Result<()> {
+        self.w.write_all(&arrival_micros.to_le_bytes())?;
+        self.w.write_all(&(frame.len() as u32).to_le_bytes())?;
+        self.w.write_all(frame)?;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Flush buffered records to disk (called on server shutdown).
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush().context("flush trace")
+    }
+}
+
+/// One captured record: a framed wire message and when it arrived.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    /// Arrival stamp in µs since the Unix epoch.
+    pub arrival_micros: u64,
+    /// The complete framed wire bytes (magic through payload).
+    pub frame: Vec<u8>,
+}
+
+impl TraceRecord {
+    /// Decode the framed bytes back into a [`Msg`].
+    pub fn decode(&self) -> Result<Msg> {
+        read_msg(&mut &self.frame[..])
+    }
+}
+
+/// Streaming reader over a capture file.
+pub struct TraceSource {
+    r: BufReader<File>,
+}
+
+impl TraceSource {
+    /// Open `path` and validate the capture header.
+    pub fn open(path: &Path) -> Result<TraceSource> {
+        let file = File::open(path)
+            .with_context(|| format!("open trace {}", path.display()))?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)
+            .with_context(|| format!("{}: truncated trace header", path.display()))?;
+        anyhow::ensure!(
+            magic == TRACE_MAGIC,
+            "{}: not a trace capture (magic {:?})",
+            path.display(),
+            magic
+        );
+        let mut ver = [0u8; 4];
+        r.read_exact(&mut ver)
+            .with_context(|| format!("{}: truncated trace version", path.display()))?;
+        let version = u32::from_le_bytes(ver);
+        anyhow::ensure!(
+            version == TRACE_VERSION,
+            "{}: unsupported trace version {version} (have {TRACE_VERSION})",
+            path.display()
+        );
+        Ok(TraceSource { r })
+    }
+
+    /// Read the next record; `Ok(None)` at a clean end of file. A file
+    /// that ends mid-record is an error, not a silent short read.
+    pub fn next_record(&mut self) -> Result<Option<TraceRecord>> {
+        let mut head = [0u8; 12];
+        let mut filled = 0;
+        while filled < head.len() {
+            let n = self.r.read(&mut head[filled..])?;
+            if n == 0 {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                bail!("truncated trace record header ({filled} of 12 bytes)");
+            }
+            filled += n;
+        }
+        let arrival_micros = u64::from_le_bytes(head[0..8].try_into().expect("8-byte stamp"));
+        let len = u32::from_le_bytes(head[8..12].try_into().expect("4-byte length")) as usize;
+        anyhow::ensure!(len <= MAX_RECORD_BYTES, "trace record of {len} bytes — corrupt capture");
+        let mut frame = vec![0u8; len];
+        self.r.read_exact(&mut frame).context("truncated trace record body")?;
+        Ok(Some(TraceRecord { arrival_micros, frame }))
+    }
+
+    /// Read every record of the capture at `path` into memory.
+    pub fn read_all(path: &Path) -> Result<Vec<TraceRecord>> {
+        let mut src = TraceSource::open(path)?;
+        let mut out = Vec::new();
+        while let Some(rec) = src.next_record()? {
+            out.push(rec);
+        }
+        Ok(out)
+    }
+}
+
+/// How [`replay`] drives a capture into fresh sessions.
+#[derive(Clone, Debug)]
+pub struct ReplayConfig {
+    /// Pacing multiplier over recorded arrival spacing (1.0 = as
+    /// captured, 16.0 = sixteen times faster).
+    pub speed: f64,
+    /// Times the whole capture is replayed; every repeat must reproduce
+    /// the first one's outcome exactly.
+    pub repeats: usize,
+    /// Integration method the replay sessions run.
+    pub variant: IntegrationKind,
+    /// Frame-sync deadline of the replay sessions.
+    pub deadline: Duration,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            speed: 1.0,
+            repeats: 1,
+            variant: IntegrationKind::Max,
+            deadline: Duration::from_millis(150),
+        }
+    }
+}
+
+/// Outcome of one replay sweep — a row of `BENCH_replay.json`.
+#[derive(Clone, Debug)]
+pub struct ReplayRow {
+    /// Pacing multiplier the sweep ran at.
+    pub speed: f64,
+    /// Repeats executed (all reproduced the same outcome).
+    pub repeats: usize,
+    /// Records in the capture.
+    pub records: usize,
+    /// Frames completed per repeat, summed over sessions.
+    pub frames_done: u64,
+    /// Frames emitted with every device present (per repeat).
+    pub sync_complete: u64,
+    /// Frames resolved by deadline expiry (per repeat).
+    pub sync_timed_out: u64,
+    /// Wall-clock seconds spent replaying (submission through final
+    /// poll, settle included, summed over repeats).
+    pub wall_secs: f64,
+    /// Sustained completed frames per second across all repeats.
+    pub frames_per_sec: f64,
+    /// Scratch-arena counters after the sweep (cumulative per backend).
+    pub arena: ArenaStats,
+}
+
+impl ReplayRow {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "replay {:>4.1}x: {} records -> {} frames/repeat x{} in {:.3}s \
+             ({:.1} frames/s, complete {}, timed_out {}, arena hit rate {:.2})",
+            self.speed,
+            self.records,
+            self.frames_done,
+            self.repeats,
+            self.wall_secs,
+            self.frames_per_sec,
+            self.sync_complete,
+            self.sync_timed_out,
+            self.arena.hit_rate(),
+        )
+    }
+
+    /// The `BENCH_replay.json` row (schema in `docs/BENCHMARKS.md`).
+    pub fn to_json(&self, trace: &Path) -> Json {
+        let mut j = Json::obj();
+        j.set("op", Json::Str("trace_replay".into()))
+            .set("trace", Json::Str(trace.display().to_string()))
+            .set("speed", Json::Num(self.speed))
+            .set("repeats", Json::Num(self.repeats as f64))
+            .set("records", Json::Num(self.records as f64))
+            .set("frames_done", Json::Num(self.frames_done as f64))
+            .set("sync_complete", Json::Num(self.sync_complete as f64))
+            .set("sync_timed_out", Json::Num(self.sync_timed_out as f64))
+            .set("wall_secs", Json::Num(self.wall_secs))
+            .set("frames_per_sec", Json::Num(self.frames_per_sec))
+            .set("arena_hits", Json::Num(self.arena.hits as f64))
+            .set("arena_misses", Json::Num(self.arena.misses as f64))
+            .set("arena_hit_rate", Json::Num(self.arena.hit_rate()));
+        j
+    }
+}
+
+/// Replay a capture into fresh in-process sessions, `cfg.repeats` times
+/// over, verifying every repeat reproduces repeat 0's outcome exactly
+/// (frames done and the full synchronizer accounting, per session).
+/// That check *is* the CI determinism gate — a divergence fails the
+/// command. The execution backend (and its scratch arena) is shared
+/// across repeats, so repeats after the first measure the warm path.
+#[cfg(feature = "native")]
+pub fn replay(paths: &Paths, trace_path: &Path, cfg: &ReplayConfig) -> Result<ReplayRow> {
+    use crate::coordinator::scheduler::LossPolicy;
+    use crate::coordinator::session::{DetectorSession, FeaturePayload, SessionConfig};
+    use crate::runtime::native::NativeBackend;
+    use crate::runtime::ExecBackend;
+    use crate::sync::time::Instant;
+    use crate::sync::Arc;
+
+    anyhow::ensure!(
+        cfg.speed > 0.0 && cfg.speed.is_finite(),
+        "--speed must be a positive number"
+    );
+    anyhow::ensure!(cfg.repeats >= 1, "--repeat must be at least 1");
+    let records = TraceSource::read_all(trace_path)?;
+    anyhow::ensure!(!records.is_empty(), "trace {} holds no records", trace_path.display());
+
+    // Decode everything up front so pacing measures the serving path,
+    // not wire parsing, and so a corrupt capture fails before any
+    // session sees a frame.
+    let mut frames = Vec::with_capacity(records.len());
+    let mut session_names: Vec<String> = Vec::new();
+    for (i, r) in records.iter().enumerate() {
+        let msg = r.decode().with_context(|| format!("decode trace record {i}"))?;
+        match &msg {
+            Msg::Features { session, .. } | Msg::FeaturesQ { session, .. } => {
+                if !session_names.contains(session) {
+                    session_names.push(session.clone());
+                }
+            }
+            other => bail!("trace record {i} is not an intermediate output: {other:?}"),
+        }
+        frames.push((r.arrival_micros, msg));
+    }
+    let t0 = frames.iter().map(|(t, _)| *t).min().unwrap_or(0);
+
+    let paths = crate::scenario::materialize_paths(paths, "trace_replay")?;
+    let meta = ModelMeta::load(&paths.model_meta())?;
+    // A typed backend handle (not `build_backend`'s `dyn` one) so the
+    // arena counters stay reachable; sessions get a coerced clone.
+    let backend = Arc::new(NativeBackend::from_paths(&paths, &meta)?);
+    backend.load(&meta.variant(cfg.variant)?.tail)?;
+    let exec: Arc<dyn ExecBackend> = Arc::clone(&backend) as Arc<dyn ExecBackend>;
+
+    type Outcome = Vec<(String, u64, (u64, u64, u64, u64, u64))>;
+    let mut outcomes: Vec<Outcome> = Vec::new();
+    let mut wall_secs = 0.0;
+    for rep in 0..cfg.repeats {
+        // Fresh sessions every repeat (identical starting state); the
+        // shared backend keeps its arena warm between repeats.
+        let mut sessions: std::collections::BTreeMap<String, DetectorSession> =
+            Default::default();
+        for name in &session_names {
+            let sc = SessionConfig::new(cfg.variant)
+                .deadline(cfg.deadline)
+                .policy(LossPolicy::ZeroFill);
+            sessions.insert(
+                name.clone(),
+                DetectorSession::new(name, meta.clone(), Arc::clone(&exec), sc)?,
+            );
+        }
+        let start = Instant::now();
+        for (arrival, msg) in &frames {
+            let due = Duration::from_micros(arrival - t0).div_f64(cfg.speed);
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+            let (session, frame_id, device_id, payload, capture) = match msg.clone() {
+                Msg::Features { frame_id, device_id, tensor, session, capture_micros } => {
+                    (session, frame_id, device_id, FeaturePayload::Raw(tensor), capture_micros)
+                }
+                Msg::FeaturesQ { frame_id, device_id, tensor, session, capture_micros } => (
+                    session,
+                    frame_id,
+                    device_id,
+                    FeaturePayload::Quantized(tensor),
+                    capture_micros,
+                ),
+                _ => unreachable!("non-feature records rejected during decode"),
+            };
+            anyhow::ensure!(
+                (device_id as usize) < meta.num_devices,
+                "trace device {device_id} out of range ({} devices)",
+                meta.num_devices
+            );
+            let sess = sessions.get(&session).expect("session created for every trace name");
+            let metrics = sess.metrics();
+            metrics.incr("trace_replayed", 1);
+            if let Err(e) = sess.submit_at(frame_id, device_id as usize, payload, capture) {
+                log::warn!("replay submit failed: {e:#}");
+            }
+        }
+        // Settle past the sync deadline, then resolve stragglers: the
+        // replay loop finishes well inside one deadline even at 1x, so
+        // every incomplete frame expires here — at the same point every
+        // repeat — rather than racing the submission loop.
+        std::thread::sleep(cfg.deadline + Duration::from_millis(100));
+        let mut outcome: Outcome = Vec::new();
+        for (name, sess) in &sessions {
+            let _ = sess.poll();
+            let s = sess.sync_stats();
+            outcome.push((
+                name.clone(),
+                sess.frames_done(),
+                (s.complete, s.timed_out, s.dropped_frames, s.late_arrivals, s.duplicates),
+            ));
+        }
+        wall_secs += start.elapsed().as_secs_f64();
+        let arena = backend.arena_stats();
+        for sess in sessions.values() {
+            let metrics = sess.metrics();
+            metrics.set("arena_hits", arena.hits);
+            metrics.set("arena_misses", arena.misses);
+        }
+        if let Some(first) = outcomes.first() {
+            anyhow::ensure!(
+                *first == outcome,
+                "replay repeat {rep} diverged from repeat 0:\n  {outcome:?}\nvs\n  {first:?}"
+            );
+        }
+        outcomes.push(outcome);
+    }
+
+    let first = &outcomes[0];
+    let frames_done: u64 = first.iter().map(|(_, f, _)| *f).sum();
+    let sync_complete: u64 = first.iter().map(|(_, _, s)| s.0).sum();
+    let sync_timed_out: u64 = first.iter().map(|(_, _, s)| s.1).sum();
+    Ok(ReplayRow {
+        speed: cfg.speed,
+        repeats: cfg.repeats,
+        records: records.len(),
+        frames_done,
+        sync_complete,
+        sync_timed_out,
+        wall_secs,
+        frames_per_sec: if wall_secs > 0.0 {
+            (frames_done * cfg.repeats as u64) as f64 / wall_secs
+        } else {
+            0.0
+        },
+        arena: backend.arena_stats(),
+    })
+}
+
+/// Stub for builds without the native backend — in-process replay needs
+/// an execution backend that exists without HLO artifacts.
+#[cfg(not(feature = "native"))]
+pub fn replay(_paths: &Paths, _trace_path: &Path, _cfg: &ReplayConfig) -> Result<ReplayRow> {
+    bail!("`scmii trace replay` needs the native backend (build with `--features native`)")
+}
+
+/// Stream a capture's raw frames to a live server over TCP at `speed`×
+/// recorded pace, `repeats` times over. No re-encoding: the recorded
+/// framed bytes go on the wire verbatim, followed by one `Bye`. Returns
+/// frames sent.
+pub fn replay_over_tcp(
+    trace_path: &Path,
+    addr: &str,
+    speed: f64,
+    repeats: usize,
+) -> Result<u64> {
+    use crate::sync::time::Instant;
+
+    anyhow::ensure!(speed > 0.0 && speed.is_finite(), "--speed must be a positive number");
+    let records = TraceSource::read_all(trace_path)?;
+    anyhow::ensure!(!records.is_empty(), "trace {} holds no records", trace_path.display());
+    let t0 = records.iter().map(|r| r.arrival_micros).min().unwrap_or(0);
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true)?;
+    let mut sent = 0u64;
+    for _ in 0..repeats.max(1) {
+        let start = Instant::now();
+        for r in &records {
+            let due = Duration::from_micros(r.arrival_micros - t0).div_f64(speed);
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+            stream.write_all(&r.frame)?;
+            sent += 1;
+        }
+    }
+    crate::net::write_msg(&mut stream, &Msg::Bye)?;
+    stream.flush()?;
+    Ok(sent)
+}
+
+/// `scmii trace` CLI entry: `record`, `replay` or `bench`.
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional().first().map(String::as_str) {
+        Some("record") => cmd_record(args),
+        Some("replay") => cmd_replay(args),
+        Some("bench") => cmd_bench(args),
+        _ => bail!(
+            "usage: scmii trace record [--name SCENARIO|--spec FILE] [--trace FILE]\n\
+             \x20      scmii trace replay [--trace FILE] [--speed N] [--repeat R] \
+             [--connect HOST:PORT]\n\
+             \x20      scmii trace bench [--trace FILE] [--repeat R] [--out DIR]"
+        ),
+    }
+}
+
+fn paths_from(args: &Args) -> Paths {
+    Paths::new(&args.str_or("artifacts", "artifacts"), &args.str_or("data", "data"))
+}
+
+/// `scmii trace record`: run a scenario with the server tee enabled,
+/// leaving a replayable capture behind.
+fn cmd_record(args: &Args) -> Result<()> {
+    args.check_known(&["name", "spec", "trace", "artifacts", "data", "seed"])?;
+    let trace_path = PathBuf::from(args.str_or("trace", "capture.scmt"));
+    let mut spec = match args.str_opt("spec") {
+        Some(path) => {
+            let j = crate::utils::json::read_file(Path::new(path))?;
+            crate::scenario::ScenarioSpec::from_json(&j)
+                .with_context(|| format!("parse scenario {path}"))?
+        }
+        None => crate::scenario::ScenarioSpec::builtin(&args.str_or("name", "ci-smoke"))?,
+    };
+    spec.seed = args.u64_or("seed", spec.seed)?;
+    spec.trace = Some(trace_path.clone());
+    let report = crate::scenario::run_scenario(&paths_from(args), &spec)?;
+    print!("{}", report.summary());
+    // Hard-gate semantics: an empty capture means the tee is broken.
+    let records = TraceSource::read_all(&trace_path)?;
+    anyhow::ensure!(
+        !records.is_empty(),
+        "recorded trace {} holds no records — server tee broken",
+        trace_path.display()
+    );
+    println!("recorded {} intermediate outputs -> {}", records.len(), trace_path.display());
+    Ok(())
+}
+
+fn replay_config_from(args: &Args) -> Result<ReplayConfig> {
+    Ok(ReplayConfig {
+        speed: args.f64_or("speed", 1.0)?,
+        repeats: args.usize_or("repeat", 1)?.max(1),
+        variant: IntegrationKind::parse(&args.str_or("variant", "max"))?,
+        deadline: args.ms_or("deadline-ms", 150)?,
+    })
+}
+
+fn write_rows(out_dir: &Path, trace: &Path, rows: &[ReplayRow]) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("create output dir {}", out_dir.display()))?;
+    let out = out_dir.join("BENCH_replay.json");
+    let json = Json::Arr(rows.iter().map(|r| r.to_json(trace)).collect());
+    crate::utils::json::write_file(&out, &json)
+        .with_context(|| format!("write {}", out.display()))?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// `scmii trace replay`: one in-process replay (or, with `--connect`,
+/// a raw TCP replay against a live server).
+fn cmd_replay(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "trace",
+        "speed",
+        "repeat",
+        "variant",
+        "deadline-ms",
+        "out",
+        "artifacts",
+        "data",
+        "connect",
+    ])?;
+    let trace_path = PathBuf::from(args.str_or("trace", "capture.scmt"));
+    let cfg = replay_config_from(args)?;
+    if let Some(addr) = args.str_opt("connect") {
+        let sent = replay_over_tcp(&trace_path, addr, cfg.speed, cfg.repeats)?;
+        println!("replayed {sent} frames to {addr} at {}x", cfg.speed);
+        return Ok(());
+    }
+    let row = replay(&paths_from(args), &trace_path, &cfg)?;
+    println!("{}", row.summary());
+    write_rows(Path::new(&args.str_or("out", ".")), &trace_path, &[row])
+}
+
+/// `scmii trace bench`: replay the capture at 1×/4×/16× and write every
+/// row to `BENCH_replay.json`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "trace",
+        "repeat",
+        "variant",
+        "deadline-ms",
+        "out",
+        "artifacts",
+        "data",
+    ])?;
+    let trace_path = PathBuf::from(args.str_or("trace", "capture.scmt"));
+    let base = replay_config_from(args)?;
+    let paths = paths_from(args);
+    let mut rows = Vec::new();
+    for speed in [1.0, 4.0, 16.0] {
+        let row = replay(&paths, &trace_path, &ReplayConfig { speed, ..base.clone() })?;
+        println!("{}", row.summary());
+        rows.push(row);
+    }
+    write_rows(Path::new(&args.str_or("out", ".")), &trace_path, &rows)
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::net::encode_frame;
+    use crate::runtime::HostTensor;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("scmii_trace_{}_{}", name, std::process::id()))
+    }
+
+    fn feature_frame(frame_id: u64, device_id: u32) -> Vec<u8> {
+        encode_frame(&Msg::Features {
+            frame_id,
+            device_id,
+            tensor: HostTensor::zeros(&[1, 2, 2, 3]),
+            session: "north".into(),
+            capture_micros: 7,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn round_trips_records() {
+        let path = tmp("roundtrip");
+        let mut sink = TraceSink::create(&path).unwrap();
+        for i in 0..5u64 {
+            sink.record(1000 + i, &feature_frame(i, (i % 2) as u32)).unwrap();
+        }
+        assert_eq!(sink.records(), 5);
+        sink.flush().unwrap();
+        drop(sink);
+
+        let records = TraceSource::read_all(&path).unwrap();
+        assert_eq!(records.len(), 5);
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.arrival_micros, 1000 + i as u64);
+            match r.decode().unwrap() {
+                Msg::Features { frame_id, session, capture_micros, .. } => {
+                    assert_eq!(frame_id, i as u64);
+                    assert_eq!(session, "north");
+                    assert_eq!(capture_micros, 7);
+                }
+                other => panic!("decoded {other:?}"),
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_capture_is_valid_and_empty() {
+        let path = tmp("empty");
+        TraceSink::create(&path).unwrap().flush().unwrap();
+        assert!(TraceSource::read_all(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(TraceSource::open(&path).is_err());
+        let mut bytes = TRACE_MAGIC.to_vec();
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TraceSource::open(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncated_record_errors_not_silently_ends() {
+        let path = tmp("truncated");
+        let mut sink = TraceSink::create(&path).unwrap();
+        sink.record(1, &feature_frame(0, 0)).unwrap();
+        sink.flush().unwrap();
+        drop(sink);
+        let full = std::fs::read(&path).unwrap();
+        // Cut the last record short: header survives, body does not.
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        let mut src = TraceSource::open(&path).unwrap();
+        assert!(src.next_record().is_err());
+        // Cut into the 12-byte record header itself.
+        std::fs::write(&path, &full[..TRACE_MAGIC.len() + 4 + 6]).unwrap();
+        let mut src = TraceSource::open(&path).unwrap();
+        assert!(src.next_record().is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn replay_config_parses_flags() {
+        let args = Args::parse(
+            ["--speed", "16", "--repeat", "4", "--variant", "max", "--deadline-ms", "90"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cfg = replay_config_from(&args).unwrap();
+        assert_eq!(cfg.speed, 16.0);
+        assert_eq!(cfg.repeats, 4);
+        assert_eq!(cfg.variant, IntegrationKind::Max);
+        assert_eq!(cfg.deadline, Duration::from_millis(90));
+        // Defaults.
+        let cfg =
+            replay_config_from(&Args::parse(std::iter::empty::<String>()).unwrap()).unwrap();
+        assert_eq!(cfg.speed, 1.0);
+        assert_eq!(cfg.repeats, 1);
+    }
+
+    #[test]
+    fn replay_row_json_has_schema_keys() {
+        let row = ReplayRow {
+            speed: 4.0,
+            repeats: 2,
+            records: 20,
+            frames_done: 12,
+            sync_complete: 8,
+            sync_timed_out: 4,
+            wall_secs: 0.5,
+            frames_per_sec: 48.0,
+            arena: ArenaStats { hits: 30, misses: 6 },
+        };
+        let j = row.to_json(Path::new("cap.scmt"));
+        assert_eq!(j.req("op").unwrap().as_str().unwrap(), "trace_replay");
+        assert_eq!(j.req("records").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(j.req("frames_done").unwrap().as_usize().unwrap(), 12);
+        assert!((j.req("arena_hit_rate").unwrap().as_f64().unwrap() - 30.0 / 36.0).abs() < 1e-12);
+        assert!(j.req("frames_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.summary().contains("20 records"));
+    }
+}

@@ -1,0 +1,360 @@
+//! Bit-exactness parity suite for the lane-chunked hot-path kernels.
+//!
+//! The SIMD-lane rewrites in `runtime/native.rs` and `voxel/features.rs`
+//! promise **byte-identical** outputs to the plain scalar loops (fixed
+//! summation order, no FP contraction). This suite holds them to it:
+//! every kernel is compared bit-for-bit (`f32::to_bits`) against a
+//! locally-written scalar reference across shapes chosen to stress the
+//! lane split — channel counts that are not a multiple of the 8-wide
+//! lane, 1×N and N×1 maps, stride 2, and empty (all-zero) grids — plus
+//! an arena aliasing stress test under a real thread pool.
+
+#![cfg(all(feature = "native", not(loom)))]
+
+use scmii::config::GridConfig;
+use scmii::runtime::arena::Arena;
+use scmii::runtime::native::{
+    conv2d, conv2d_batch, conv_integrate_into, dense_per_cell, max_integrate_into,
+};
+use scmii::utils::rng::Pcg64;
+use scmii::utils::threadpool::ThreadPool;
+use scmii::voxel::{voxelize, FeatureMap, Point, VOXEL_COUNT_CLIP};
+use std::sync::Arc;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn sparse_vec(rng: &mut Pcg64, n: usize, density: f32) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.uniform_f32() < density { rng.uniform_f32() * 2.0 - 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn sparse_map(rng: &mut Pcg64, d: usize, h: usize, w: usize, c: usize) -> FeatureMap {
+    FeatureMap::from_vec(d, h, w, c, sparse_vec(rng, d * h * w * c, 0.3)).unwrap()
+}
+
+/// Scalar-reference 2D conv: one output channel at a time, the exact
+/// tap/channel walk the production kernel documents (zero activations
+/// skipped, like the kernel, so `-0.0` biases cannot diverge).
+#[allow(clippy::too_many_arguments)]
+fn conv2d_scalar(
+    input: &[f32],
+    h: usize,
+    w: usize,
+    c_in: usize,
+    weights: &[f32],
+    bias: &[f32],
+    k: usize,
+    stride: usize,
+    relu: bool,
+) -> Vec<f32> {
+    let c_out = bias.len();
+    let (ho, wo) = (h / stride, w / stride);
+    let half = (k / 2) as i64;
+    let mut out = vec![0.0f32; ho * wo * c_out];
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let obase = (oy * wo + ox) * c_out;
+            out[obase..obase + c_out].copy_from_slice(bias);
+            for ky in 0..k {
+                let iy = (oy * stride) as i64 + ky as i64 - half;
+                if iy < 0 || iy >= h as i64 {
+                    continue;
+                }
+                for kx in 0..k {
+                    let ix = (ox * stride) as i64 + kx as i64 - half;
+                    if ix < 0 || ix >= w as i64 {
+                        continue;
+                    }
+                    let ibase = (iy as usize * w + ix as usize) * c_in;
+                    let wbase = (ky * k + kx) * c_in * c_out;
+                    for ci in 0..c_in {
+                        let v = input[ibase + ci];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        for co in 0..c_out {
+                            out[obase + co] += v * weights[wbase + ci * c_out + co];
+                        }
+                    }
+                }
+            }
+            if relu {
+                for o in &mut out[obase..obase + c_out] {
+                    if *o < 0.0 {
+                        *o = 0.0;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn conv2d_matches_scalar_reference_across_odd_shapes() {
+    let mut rng = Pcg64::new(101);
+    // (h, w, c_in, c_out, k, stride): lane-hostile channel counts
+    // (7, 9: straddle the 8-wide split), degenerate 1×N / N×1 maps,
+    // stride 2, and a single-pixel map.
+    let shapes = [
+        (5usize, 6usize, 3usize, 7usize, 3usize, 1usize),
+        (4, 4, 5, 9, 1, 1),
+        (1, 13, 2, 8, 3, 1),
+        (13, 1, 4, 11, 3, 1),
+        (8, 8, 6, 16, 3, 2),
+        (1, 1, 3, 5, 1, 1),
+    ];
+    for (h, w, c_in, c_out, k, stride) in shapes {
+        let input = sparse_vec(&mut rng, h * w * c_in, 0.4);
+        let weights = sparse_vec(&mut rng, k * k * c_in * c_out, 1.0);
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.uniform_f32() - 0.5).collect();
+        for relu in [false, true] {
+            let fast = conv2d(&input, h, w, c_in, &weights, &bias, k, stride, relu);
+            let slow = conv2d_scalar(&input, h, w, c_in, &weights, &bias, k, stride, relu);
+            assert_eq!(
+                bits(&fast),
+                bits(&slow),
+                "conv2d diverged at shape {h}x{w}x{c_in}->{c_out} k{k} s{stride} relu={relu}"
+            );
+        }
+    }
+}
+
+#[test]
+fn conv2d_on_empty_grid_is_bias_image() {
+    let (h, w, c_in, c_out) = (6, 6, 4, 7);
+    let input = vec![0.0f32; h * w * c_in];
+    let weights = vec![0.5f32; 9 * c_in * c_out];
+    let bias: Vec<f32> = (0..c_out).map(|i| i as f32 * 0.1 - 0.3).collect();
+    let out = conv2d(&input, h, w, c_in, &weights, &bias, 3, 1, false);
+    let slow = conv2d_scalar(&input, h, w, c_in, &weights, &bias, 3, 1, false);
+    assert_eq!(bits(&out), bits(&slow));
+    for cell in out.chunks(c_out) {
+        assert_eq!(bits(cell), bits(&bias), "empty input must pass the bias through");
+    }
+}
+
+#[test]
+fn conv2d_batch_is_bit_identical_to_per_frame_calls() {
+    let mut rng = Pcg64::new(102);
+    let (h, w, c_in, c_out, k) = (7, 5, 3, 7, 3);
+    let frames: Vec<Vec<f32>> =
+        (0..4).map(|_| sparse_vec(&mut rng, h * w * c_in, 0.4)).collect();
+    let weights = sparse_vec(&mut rng, k * k * c_in * c_out, 1.0);
+    let bias: Vec<f32> = (0..c_out).map(|_| rng.uniform_f32() - 0.5).collect();
+
+    let refs: Vec<&[f32]> = frames.iter().map(|f| f.as_slice()).collect();
+    let batched = conv2d_batch(&refs, h, w, c_in, &weights, &bias, k, 1, true);
+    for (bi, frame) in frames.iter().enumerate() {
+        let single = conv2d(frame, h, w, c_in, &weights, &bias, k, 1, true);
+        assert_eq!(bits(&batched[bi]), bits(&single), "batch entry {bi} diverged");
+    }
+    // The B=1 route *is* the batched kernel — the dedupe satellite's
+    // contract, checked from the outside.
+    let single_via_batch =
+        conv2d_batch(&refs[..1], h, w, c_in, &weights, &bias, k, 1, true);
+    assert_eq!(bits(&single_via_batch[0]), bits(&batched[0]));
+}
+
+#[test]
+fn dense_per_cell_matches_scalar_reference() {
+    let mut rng = Pcg64::new(103);
+    for (cells, c_in, c_out) in [(12usize, 5usize, 7usize), (1, 3, 9), (40, 2, 8)] {
+        let input = sparse_vec(&mut rng, cells * c_in, 0.5);
+        let w = sparse_vec(&mut rng, c_in * c_out, 1.0);
+        let b: Vec<f32> = (0..c_out).map(|_| rng.uniform_f32() - 0.5).collect();
+        let fast = dense_per_cell(&input, cells, c_in, &w, &b);
+        // Scalar walk, same zero skip.
+        let mut slow = vec![0.0f32; cells * c_out];
+        for cell in 0..cells {
+            slow[cell * c_out..(cell + 1) * c_out].copy_from_slice(&b);
+            for ci in 0..c_in {
+                let v = input[cell * c_in + ci];
+                if v == 0.0 {
+                    continue;
+                }
+                for co in 0..c_out {
+                    slow[cell * c_out + co] += v * w[ci * c_out + co];
+                }
+            }
+        }
+        assert_eq!(bits(&fast), bits(&slow), "dense {cells}x{c_in}->{c_out} diverged");
+    }
+}
+
+#[test]
+fn max_integrate_into_matches_reference_including_nan() {
+    let mut rng = Pcg64::new(104);
+    for (d, h, w, c) in [(2usize, 3usize, 5usize, 7usize), (1, 1, 9, 3), (1, 9, 1, 6)] {
+        let mut maps = vec![
+            sparse_map(&mut rng, d, h, w, c),
+            sparse_map(&mut rng, d, h, w, c),
+            sparse_map(&mut rng, d, h, w, c),
+        ];
+        // NaN in a later map must lose to any finite value, exactly as
+        // the reference's `>` comparison decides.
+        maps[2].data[0] = f32::NAN;
+        maps[2].data[c + 1] = f32::NAN;
+        let reference = scmii::integrate::max_integrate(&maps);
+        let mut fast = vec![0.0f32; reference.data.len()];
+        max_integrate_into(&maps, &mut fast);
+        assert_eq!(bits(&fast), bits(&reference.data), "max diverged at {d}x{h}x{w}x{c}");
+    }
+}
+
+#[test]
+fn conv_integrate_into_matches_reference_across_odd_shapes() {
+    let mut rng = Pcg64::new(105);
+    // c_each / c_out straddle the 8-lane split; include 1×N and N×1.
+    for (d, h, w, c_each, c_out, k) in [
+        (2usize, 3usize, 4usize, 3usize, 7usize, 3usize),
+        (2, 2, 2, 4, 9, 1),
+        (1, 1, 7, 2, 5, 3),
+        (1, 7, 1, 2, 11, 3),
+    ] {
+        let maps = vec![sparse_map(&mut rng, d, h, w, c_each), sparse_map(&mut rng, d, h, w, c_each)];
+        let c_in = c_each * maps.len();
+        let weights = sparse_vec(&mut rng, k * k * k * c_in * c_out, 1.0);
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.uniform_f32() - 0.5).collect();
+        let reference = scmii::integrate::conv_integrate(&maps, &weights, &bias, k);
+        let mut fast = vec![0.0f32; reference.data.len()];
+        conv_integrate_into(&maps, &weights, &bias, k, &mut fast);
+        assert_eq!(
+            bits(&fast),
+            bits(&reference.data),
+            "conv integrate diverged at {d}x{h}x{w} c{c_each}->{c_out} k{k}"
+        );
+    }
+    // Empty (all-zero) maps: reference does not skip zeros, and neither
+    // may the lane kernel — the all-bias output must still match bits.
+    let maps = vec![FeatureMap::zeros(2, 3, 3, 3), FeatureMap::zeros(2, 3, 3, 3)];
+    let weights = vec![0.25f32; 27 * 6 * 7];
+    let bias: Vec<f32> = (0..7).map(|i| i as f32 * 0.1 - 0.2).collect();
+    let reference = scmii::integrate::conv_integrate(&maps, &weights, &bias, 3);
+    let mut fast = vec![0.0f32; reference.data.len()];
+    conv_integrate_into(&maps, &weights, &bias, 3, &mut fast);
+    assert_eq!(bits(&fast), bits(&reference.data));
+}
+
+/// Scalar-reference voxelizer: straight transcription of the documented
+/// per-voxel statistics, accumulated in `points` order.
+fn voxelize_scalar(points: &[Point], grid: &GridConfig) -> Vec<f32> {
+    let [w, h, d] = grid.dims;
+    let n_vox = w * h * d;
+    let mut count = vec![0u32; n_vox];
+    let mut sums = vec![[0.0f32; 4]; n_vox];
+    let mut max_z = vec![f32::NEG_INFINITY; n_vox];
+    for p in points {
+        if p.is_pad() {
+            continue;
+        }
+        let Some([ix, iy, iz]) = grid.voxel_of(p.x as f64, p.y as f64, p.z as f64) else {
+            continue;
+        };
+        let flat = (iz * h + iy) * w + ix;
+        let center = grid.voxel_center(ix, iy, iz);
+        count[flat] += 1;
+        sums[flat][0] += p.x - center[0] as f32;
+        sums[flat][1] += p.y - center[1] as f32;
+        sums[flat][2] += p.z - center[2] as f32;
+        sums[flat][3] += p.intensity;
+        if p.z > max_z[flat] {
+            max_z[flat] = p.z;
+        }
+    }
+    let z_span = (grid.range_max[2] - grid.range_min[2]) as f32;
+    let mut out = vec![0.0f32; n_vox * 6];
+    for vox in 0..n_vox {
+        let n = count[vox];
+        if n == 0 {
+            continue;
+        }
+        let inv_n = 1.0 / n as f32;
+        let lane = &mut out[vox * 6..vox * 6 + 6];
+        lane[0] = (n as f32).min(VOXEL_COUNT_CLIP) / VOXEL_COUNT_CLIP;
+        lane[1] = sums[vox][0] * inv_n / grid.voxel[0] as f32;
+        lane[2] = sums[vox][1] * inv_n / grid.voxel[1] as f32;
+        lane[3] = sums[vox][2] * inv_n / grid.voxel[2] as f32;
+        lane[4] = sums[vox][3] * inv_n;
+        lane[5] = (max_z[vox] - grid.range_min[2] as f32) / z_span;
+    }
+    out
+}
+
+#[test]
+fn voxelize_matches_scalar_reference() {
+    let grid = GridConfig::default();
+    let mut rng = Pcg64::new(106);
+    let span = |lo: f64, hi: f64, u: f32| (lo + (hi - lo) * u as f64) as f32;
+    let mut points: Vec<Point> = (0..4000)
+        .map(|_| {
+            Point::new(
+                span(grid.range_min[0] - 5.0, grid.range_max[0] + 5.0, rng.uniform_f32()),
+                span(grid.range_min[1] - 5.0, grid.range_max[1] + 5.0, rng.uniform_f32()),
+                span(grid.range_min[2] - 1.0, grid.range_max[2] + 1.0, rng.uniform_f32()),
+                rng.uniform_f32(),
+            )
+        })
+        .collect();
+    // Interleave pad points the way real padded clouds arrive.
+    for i in (0..points.len()).step_by(17) {
+        points[i] = Point::pad();
+    }
+    let fast = voxelize(&points, &grid);
+    let slow = voxelize_scalar(&points, &grid);
+    assert_eq!(bits(&fast.data), bits(&slow), "voxelize diverged from scalar reference");
+    // Empty cloud: all-zero map, still byte-identical.
+    let fast = voxelize(&[], &grid);
+    assert_eq!(bits(&fast.data), bits(&voxelize_scalar(&[], &grid)));
+}
+
+/// Arena exclusivity under real concurrency: N workers check buffers in
+/// and out of one shared arena while stamping and re-verifying a unique
+/// pattern. Any aliasing between two concurrently-held buffers (or a
+/// non-zeroed reuse) trips the asserts.
+#[test]
+fn arena_buffers_never_alias_across_threadpool_workers() {
+    let arena = Arc::new(Arena::new());
+    let pool = ThreadPool::new(4);
+    let takes_per_task = 8usize;
+    let n_tasks = 32usize;
+    let results = {
+        let arena = Arc::clone(&arena);
+        pool.map(n_tasks, move |i| {
+            let tag = (i + 1) as f32;
+            let mut held = Vec::new();
+            for round in 0..takes_per_task {
+                let len = 64 + (i % 5) * 17 + round;
+                let mut buf = arena.take(len);
+                assert!(buf.iter().all(|&v| v == 0.0), "arena handed out a dirty buffer");
+                buf.fill(tag);
+                held.push(buf);
+                if held.len() > 2 {
+                    let buf = held.remove(0);
+                    assert!(
+                        buf.iter().all(|&v| v == tag),
+                        "buffer mutated while held — aliased checkout"
+                    );
+                    arena.give(buf);
+                }
+            }
+            for buf in held {
+                assert!(buf.iter().all(|&v| v == tag), "held buffer lost its stamp");
+                arena.give(buf);
+            }
+            takes_per_task
+        })
+    };
+    let total: usize = results.into_iter().sum();
+    assert_eq!(total, n_tasks * takes_per_task);
+    let stats = arena.stats();
+    assert_eq!(
+        (stats.hits + stats.misses) as usize,
+        n_tasks * takes_per_task,
+        "every take must be accounted as a hit or a miss"
+    );
+    assert!(stats.hits > 0, "steady-state churn must reuse buffers");
+}

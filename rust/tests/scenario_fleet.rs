@@ -70,6 +70,7 @@ fn four_devices_two_sessions_with_loss_account_for_every_frame() {
             device("south", 1, n, Some(ImpairConfig { drop_every: 3, ..Default::default() })),
         ],
         settle: Duration::ZERO,
+        trace: None,
     };
 
     let report = run_scenario(&nonexistent_paths(), &spec).unwrap();
@@ -163,6 +164,7 @@ fn dropout_and_late_join_keep_sessions_producing() {
             },
         ],
         settle: Duration::ZERO,
+        trace: None,
     };
 
     let report = run_scenario(&nonexistent_paths(), &spec).unwrap();

@@ -1,6 +1,6 @@
 //! Repo-invariant lints: `cargo run -p xtask -- lint`.
 //!
-//! Three hard CI gates, each protecting an invariant the compiler cannot
+//! Four hard CI gates, each protecting an invariant the compiler cannot
 //! see (`.github/workflows/ci.yml` runs this as a required step):
 //!
 //! 1. **Lock hygiene** — serving-path modules must not call
@@ -21,6 +21,12 @@
 //!    `Metrics` method anywhere in non-test `rust/src` code must appear
 //!    in `REGISTERED_METRICS` (`rust/src/metrics/mod.rs`, between the
 //!    `registry-begin`/`registry-end` markers).
+//! 4. **Hot-path allocation** — functions marked with a standalone
+//!    `// xtask: hot` comment in the kernel files (`runtime/native.rs`,
+//!    `voxel/features.rs`) may not contain `vec![`, `.clone()` or
+//!    `.to_vec(`: the per-frame inner loops take scratch from the
+//!    `Arena` or from caller-owned buffers, and this keeps a casual
+//!    refactor from quietly re-introducing a per-frame allocation.
 //!
 //! The lints are textual/structural: the crate deliberately does not
 //! depend on `scmii` (a library that fails to build must not take its
@@ -64,6 +70,23 @@ const LOCK_SCOPE_FILES: &[&str] = &["rust/src/utils/threadpool.rs", "rust/src/sy
 const REGISTRY_BEGIN: &str = "// registry-begin";
 const REGISTRY_END: &str = "// registry-end";
 
+/// Files whose `// xtask: hot`-marked functions must stay allocation
+/// free (the per-frame kernel inner loops).
+const HOT_SCOPE_FILES: &[&str] =
+    &["rust/src/runtime/native.rs", "rust/src/voxel/features.rs"];
+
+/// A line consisting of exactly this comment marks the *next* function
+/// as a hot path. Mentions inside prose comments don't count — only a
+/// line that is nothing but the marker.
+const HOT_MARKER: &str = "// xtask: hot";
+
+/// Patterns forbidden inside a hot function's body, with the reason.
+const HOT_FORBIDDEN: &[(&str, &str)] = &[
+    ("vec![", "allocates per call"),
+    (".clone()", "deep-copies per call"),
+    (".to_vec(", "allocates a copy per call"),
+];
+
 fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
@@ -80,7 +103,7 @@ fn main() -> ExitCode {
             ExitCode::from(2)
         }
         Ok(violations) if violations.is_empty() => {
-            println!("xtask lint: OK (lock hygiene, wire spec, metric registry)");
+            println!("xtask lint: OK (lock hygiene, wire spec, metric registry, hot paths)");
             ExitCode::SUCCESS
         }
         Ok(violations) => {
@@ -125,6 +148,7 @@ fn lint(root: &Path) -> Result<Vec<Violation>, String> {
     lint_locks(root, &mut violations)?;
     lint_wire_spec(root, &mut violations)?;
     lint_metric_registry(root, &mut violations)?;
+    lint_hot_paths(root, &mut violations)?;
     Ok(violations)
 }
 
@@ -316,8 +340,10 @@ fn utf8_len(lead: Option<u8>) -> Option<usize> {
 /// Re-classify every `#[cfg(test)]` / `#[cfg(all(test, ..))]` item body
 /// as Comment, removing test modules from all scans. Brace matching
 /// counts only Code-class braces, so `"{"` inside test strings cannot
-/// desync it.
-fn mask_test_mods(src: &str, classes: &mut [Class]) {
+/// desync it. Returns the masked byte spans so scans that look inside
+/// comments (the hot-path marker) can honor the exemption too.
+fn mask_test_mods(src: &str, classes: &mut [Class]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
     let b = src.as_bytes();
     for marker in ["#[cfg(test)]", "#[cfg(all(test"] {
         let mut from = 0;
@@ -352,8 +378,10 @@ fn mask_test_mods(src: &str, classes: &mut [Class]) {
             for c in classes[at..=end].iter_mut() {
                 *c = Class::Comment;
             }
+            spans.push((at, end));
         }
     }
+    spans
 }
 
 /// Whitespace-free projection of the Code bytes of a file (optionally
@@ -909,6 +937,141 @@ fn parse_registry(src: &str) -> Result<BTreeSet<String>, String> {
     Ok(names)
 }
 
+// ---------------------------------------------------------------------------
+// Lint 4: no allocation inside `// xtask: hot` functions.
+
+fn lint_hot_paths(root: &Path, violations: &mut Vec<Violation>) -> Result<(), String> {
+    for file in HOT_SCOPE_FILES {
+        let path = root.join(file);
+        let src = read(&path)?;
+        if !src.lines().any(|l| l.trim() == HOT_MARKER) {
+            violations.push(Violation {
+                file: rel(root, &path),
+                line: 0,
+                msg: format!(
+                    "no `{HOT_MARKER}` markers — the hot-path allocation lint gates \
+                     nothing in this file; mark the kernel inner loops (or drop the \
+                     file from HOT_SCOPE_FILES)"
+                ),
+            });
+        }
+        for (line, msg) in scan_hot_source(&src) {
+            violations.push(Violation { file: rel(root, &path), line, msg });
+        }
+    }
+    Ok(())
+}
+
+/// Scan one file for `// xtask: hot` markers and return `(line, message)`
+/// findings for forbidden patterns inside each marked function's body.
+fn scan_hot_source(src: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    let mut classes = classify(src);
+    let test_spans = mask_test_mods(src, &mut classes);
+    let b = src.as_bytes();
+
+    // (marker's line number, byte offset just past the marker line).
+    // Markers inside test modules share their exemption.
+    let mut markers = Vec::new();
+    let mut offset = 0usize;
+    for (idx, line) in src.split_inclusive('\n').enumerate() {
+        let start = offset;
+        offset += line.len();
+        if line.trim() == HOT_MARKER
+            && !test_spans.iter().any(|&(s, e)| start >= s && start <= e)
+        {
+            markers.push((idx + 1, offset));
+        }
+    }
+
+    for (marker_line, from) in markers {
+        let Some(fn_at) = next_fn_keyword(src, &classes, from) else {
+            out.push((
+                marker_line,
+                format!("`{HOT_MARKER}` marker with no function following it"),
+            ));
+            continue;
+        };
+        let rest = &src[fn_at + 2..];
+        let name_start = fn_at + 2 + (rest.len() - rest.trim_start().len());
+        let name = &src[name_start..ident_end(src, name_start)];
+        let Some(open) =
+            (fn_at..b.len()).find(|&j| classes[j] == Class::Code && b[j] == b'{')
+        else {
+            out.push((marker_line, format!("hot fn `{name}` has no body")));
+            continue;
+        };
+        let close = match code_brace_block(b, &classes, open) {
+            Ok(c) => c,
+            Err(e) => {
+                out.push((marker_line, format!("hot fn `{name}`: {e}")));
+                continue;
+            }
+        };
+        let base_line = src[..open].bytes().filter(|&c| c == b'\n').count() + 1;
+        let body = condense(&src[open..=close], &classes[open..=close], false);
+        for (pat, why) in HOT_FORBIDDEN {
+            let mut from = 0;
+            while let Some(at) = body.text[from..].find(pat).map(|r| from + r) {
+                from = at + pat.len();
+                out.push((
+                    base_line + body.lines[at] - 1,
+                    format!(
+                        "`{pat}` in hot-path fn `{name}` (marked `{HOT_MARKER}`): {why} \
+                         — take scratch from the Arena or a caller-owned buffer"
+                    ),
+                ));
+            }
+        }
+    }
+    out.sort_by_key(|&(line, _)| line);
+    out
+}
+
+/// First `fn` keyword (Code class, not part of an identifier) at or
+/// after `from`.
+fn next_fn_keyword(src: &str, classes: &[Class], from: usize) -> Option<usize> {
+    let b = src.as_bytes();
+    let mut i = from;
+    while let Some(rel) = src[i..].find("fn") {
+        let at = i + rel;
+        i = at + 2;
+        if classes[at] != Class::Code {
+            continue;
+        }
+        let prev_ok =
+            at == 0 || !(b[at - 1].is_ascii_alphanumeric() || b[at - 1] == b'_');
+        let next_ok = b.get(at + 2).is_some_and(|c| c.is_ascii_whitespace());
+        if prev_ok && next_ok {
+            return Some(at);
+        }
+    }
+    None
+}
+
+/// Index of the `}` matching the `{` at `open`, counting only
+/// Code-class braces (raw source, unlike [`brace_block`]'s condensed
+/// input).
+fn code_brace_block(b: &[u8], classes: &[Class], open: usize) -> Result<usize, String> {
+    let mut depth = 0usize;
+    for (j, &byte) in b.iter().enumerate().skip(open) {
+        if classes[j] != Class::Code {
+            continue;
+        }
+        match byte {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced braces".into())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1040,6 +1203,57 @@ mod tests {
     fn split_top_commas_respects_nesting() {
         assert_eq!(split_top_commas("&mutbuf,*frame_id"), vec!["&mutbuf", "*frame_id"]);
         assert_eq!(split_top_commas("a,f(b,c),d"), vec!["a", "f(b,c)", "d"]);
+    }
+
+    #[test]
+    fn hot_fn_allocations_are_flagged_with_lines() {
+        let src = "// xtask: hot\nfn hot(out: &mut [f32]) {\n    let t = \
+                   x.to_vec();\n    let v = vec![0.0; 4];\n}\n\
+                   fn cold() { let _ = vec![1]; }\n";
+        let findings = scan_hot_source(src);
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings[0].1.contains(".to_vec(") && findings[0].0 == 3, "{findings:?}");
+        assert!(findings[1].1.contains("vec![") && findings[1].0 == 4, "{findings:?}");
+        assert!(
+            findings.iter().all(|(_, m)| m.contains("`hot`")),
+            "unmarked fn `cold` must stay out of scope: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn hot_scope_ends_at_the_fn_body() {
+        // `.clone()` after the marked fn's closing brace is legal.
+        let src = "// xtask: hot\nfn hot(x: &[f32]) -> f32 { x[0] }\n\
+                   fn wrapper(v: &Vec<f32>) -> Vec<f32> { v.clone() }\n";
+        assert!(scan_hot_source(src).is_empty());
+    }
+
+    #[test]
+    fn hot_marker_in_prose_or_strings_does_not_arm() {
+        // Mentions inside doc prose (extra text on the line) and string
+        // literals are not markers; patterns in comments/strings inside
+        // a genuine hot fn are not code.
+        let src = "//! loops marked `// xtask: hot` are special\n\
+                   fn a() { let _ = vec![1]; }\n\
+                   // xtask: hot\nfn b() {\n    // vec![ in a comment\n    \
+                   let s = \".clone()\";\n    let _ = s;\n}\n";
+        assert!(scan_hot_source(src).is_empty(), "{:?}", scan_hot_source(src));
+    }
+
+    #[test]
+    fn hot_marker_without_fn_is_a_finding() {
+        let src = "fn a() {}\n// xtask: hot\n";
+        let findings = scan_hot_source(src);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].1.contains("no function"), "{findings:?}");
+        assert_eq!(findings[0].0, 2);
+    }
+
+    #[test]
+    fn hot_fn_in_test_mod_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    // xtask: hot\n    fn t() { let _ = \
+                   vec![1]; }\n}\n";
+        assert!(scan_hot_source(src).is_empty());
     }
 
     /// The real repo must lint clean — this is the same check CI runs,
