@@ -4,6 +4,33 @@
 //! integration variants) through a [`SessionRegistry`]; wire messages
 //! address a session by name, with pre-session clients landing on
 //! [`DEFAULT_SESSION`].
+//!
+//! ## Event-loop connection handling
+//!
+//! Connections are multiplexed on **one** readiness-driven event loop
+//! (see [`crate::net::poll`]) instead of one OS thread each, so fleet
+//! size is bounded by fd limits and backend throughput, not by thread
+//! count. Ownership is strict:
+//!
+//! * the **loop thread** owns the listener, every [`TcpStream`], the
+//!   per-connection [`FrameAssembler`]s, and the poller — nothing else
+//!   touches a socket;
+//! * a fixed **worker pool** (`utils/threadpool.rs`) owns decode +
+//!   session dispatch: feature frames are handed over as raw bytes (at
+//!   most one in-flight job per connection, so per-device frame order
+//!   is preserved) and completions come back over a self-pipe-signalled
+//!   [`ReadyQueue`];
+//! * **subscriber delivery** is enqueue-only: sinks push encoded result
+//!   frames into a bounded per-connection queue and the loop flushes it
+//!   on write-readiness, so a slow subscriber drops its own oldest
+//!   frames (`sink_dropped`) instead of stalling sibling subscribers or
+//!   pinning a thread.
+//!
+//! Session deadline sweeps ride the poller's timer wheel; external stop
+//! ([`ServerStop`]) and worker completions wake the loop via the
+//! self-pipe, so stop latency is bounded by a poll wake, not a sleep
+//! window. The wire protocol is untouched — byte-identical to the
+//! thread-per-connection server this replaced.
 
 use super::scheduler::{BatchConfig, BatchPlanner, LossPolicy};
 use super::session::{
@@ -12,15 +39,44 @@ use super::session::{
 };
 use crate::cli::Args;
 use crate::config::{IntegrationKind, ModelMeta, Paths};
+use crate::metrics::Metrics;
 use crate::model::DecodeParams;
-use crate::net::{write_msg, Msg, WireDetection, DEFAULT_SESSION};
+use crate::net::poll::{Event, Interest, Poller, ReadyQueue, TimerWheel, WakeSignal, Waker};
+use crate::net::{FrameAssembler, Msg, RawFrame, WireDetection, DEFAULT_SESSION};
 use crate::runtime::{build_backend, BackendKind};
-use anyhow::{Context, Result};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use crate::sync::{lock_or_recover, thread, Arc, Mutex};
+use crate::sync::time::Instant;
+use crate::sync::{lock_or_recover, Arc, Mutex};
 use crate::trace::TraceSink;
+use crate::utils::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::time::Duration;
+
+/// Poller token of the listening socket.
+const TOKEN_LISTENER: usize = 0;
+/// Timer-wheel token of the recurring session-deadline sweep.
+const TIMER_SESSION_POLL: usize = 1;
+/// First token handed to an accepted connection.
+const FIRST_CONN_TOKEN: usize = 2;
+/// Period of the session-deadline sweep (parity with the 20 ms accept
+/// poll the previous server used).
+const DEADLINE_POLL: Duration = Duration::from_millis(20);
+/// Timer-wheel resolution.
+const WHEEL_TICK: Duration = Duration::from_millis(5);
+/// Timer-wheel buckets.
+const WHEEL_SLOTS: usize = 64;
+/// Max bytes read from one connection per readiness round, so one
+/// firehose connection cannot starve its siblings (level-triggered
+/// readiness re-reports the remainder immediately).
+const READ_BUDGET: usize = 1 << 20;
+/// On stop, keep flushing subscriber queues for at most this long.
+const SHUTDOWN_FLUSH: Duration = Duration::from_millis(500);
+/// Default bound on a subscriber's undelivered-result queue (frames).
+const DEFAULT_SINK_QUEUE: usize = 256;
 
 /// Server configuration. The top-level fields describe the `"default"`
 /// session; `extra_sessions` adds more, each with its own
@@ -57,6 +113,14 @@ pub struct ServerConfig {
     /// into a replayable capture file (`--trace`); `None` = no capture.
     /// See [`crate::trace`].
     pub trace: Option<std::path::PathBuf>,
+    /// Decode/dispatch worker threads behind the event loop
+    /// (`--workers`); 0 = one per core, capped like
+    /// [`ThreadPool::default_size`].
+    pub workers: usize,
+    /// Bound on each subscriber's undelivered-result queue, in frames
+    /// (`--sink-queue`). When a slow subscriber lets it fill, its oldest
+    /// queued frame is dropped and `sink_dropped` incremented.
+    pub sink_queue: usize,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +137,8 @@ impl Default for ServerConfig {
             backend_threads: 1,
             batch: BatchConfig::default(),
             trace: None,
+            workers: 0,
+            sink_queue: DEFAULT_SINK_QUEUE,
         }
     }
 }
@@ -101,12 +167,205 @@ impl ServerConfig {
     }
 }
 
-/// Forwards completed frames to one subscriber connection. The stream is
-/// shared behind a mutex so one connection subscribed to several
-/// sessions gets whole frames, not interleaved writes from two sessions
-/// delivering concurrently.
+/// External stop handle for [`run_server_until`]: set-flag-then-wake.
+///
+/// The event loop installs its [`Waker`] here at startup and re-checks
+/// the flag afterwards, so a `stop()` racing startup can miss the waker
+/// but never the flag — the no-lost-wakeup discipline the loom model in
+/// `tests/loom.rs` verifies for the ready-queue handoff applies here
+/// identically.
+pub struct ServerStop {
+    flag: AtomicBool,
+    waker: Mutex<Option<Waker>>,
+}
+
+impl ServerStop {
+    /// A fresh, unset stop handle.
+    pub fn new() -> Arc<ServerStop> {
+        Arc::new(ServerStop { flag: AtomicBool::new(false), waker: Mutex::new(None) })
+    }
+
+    /// Ask the server to stop. Latency is bounded by one poll wake (the
+    /// self-pipe), not by an accept-poll or read-timeout window.
+    pub fn stop(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        if let Some(w) = lock_or_recover(&self.waker).as_ref() {
+            w.wake();
+        }
+    }
+
+    /// Whether [`stop`](ServerStop::stop) has been called (or the server
+    /// tripped its own `max_frames` budget).
+    pub fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// Install the loop's waker. The loop re-checks
+    /// [`ServerStop::is_set`] right after arming: a racing `stop()` may
+    /// have found the slot empty, but its flag store already happened.
+    fn arm(&self, w: Waker) {
+        *lock_or_recover(&self.waker) = Some(w);
+    }
+}
+
+/// What [`run_server_until`] returns once the server exits.
+pub struct ServerRun {
+    /// The hosted sessions — inspect per-session metrics and sync stats.
+    pub registry: Arc<SessionRegistry>,
+    /// Server-wide connection accounting (`conn_accepted`, `conn_active`,
+    /// `conn_peak`, `conn_closed`).
+    pub server_metrics: Arc<Metrics>,
+    /// The shared [`BatchPlanner`]'s metrics when `--max-batch` > 1
+    /// (batch_backend_calls / batch_frames / batch_occupancy — the
+    /// backend-call occupancy numbers `BENCH_scale.json` reports).
+    pub planner_metrics: Option<Arc<Metrics>>,
+}
+
+/// Bounded queue of encoded result frames awaiting one subscriber
+/// connection. Producers are session delivery threads (via [`TcpSink`]),
+/// the sole consumer is the event loop flushing on write-readiness.
+/// Overflow drops the **oldest** undelivered frame — except a frame
+/// already partially on the wire, which can never be dropped (that
+/// would tear the byte stream); if that half-sent frame is the only
+/// queued one, the incoming frame is dropped instead.
+struct SubscriberQueue {
+    cap: usize,
+    state: Mutex<SinkQueueState>,
+}
+
+struct SinkQueueState {
+    frames: VecDeque<Vec<u8>>,
+    /// Bytes of `frames[0]` already written to the socket.
+    head_written: usize,
+    closed: bool,
+}
+
+/// What a flush attempt left behind.
+enum FlushOutcome {
+    /// Queue empty; drop write interest.
+    Idle,
+    /// Socket buffer full mid-queue; poll for write-readiness.
+    Blocked,
+    /// Peer closed the connection.
+    Closed,
+    /// Write error; the stream can no longer be trusted.
+    Failed(std::io::Error),
+}
+
+impl SubscriberQueue {
+    fn new(cap: usize) -> SubscriberQueue {
+        SubscriberQueue {
+            cap: cap.max(1),
+            state: Mutex::new(SinkQueueState {
+                frames: VecDeque::new(),
+                head_written: 0,
+                closed: false,
+            }),
+        }
+    }
+
+    /// Enqueue one encoded frame without ever blocking; returns how many
+    /// frames overflow dropped to make room (0 normally). An `Err` means
+    /// the subscriber is gone (closed or poisoned) and the sink must
+    /// detach.
+    fn push(&self, frame: Vec<u8>) -> Result<u64> {
+        // Never `unwrap()` this lock: it is shared by every session the
+        // connection subscribed, and a panic inside one delivery must
+        // not cascade into every later one. A poisoned queue means a
+        // holder died mid-operation; the conservative move is to detach
+        // (the loop closes the connection when its flush next runs).
+        let mut st = match self.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                let mut st = poisoned.into_inner();
+                st.closed = true;
+                log::warn!("subscriber queue poisoned by an earlier panic; detaching sink");
+                anyhow::bail!("subscriber queue poisoned; sink detached");
+            }
+        };
+        if st.closed {
+            anyhow::bail!("subscriber connection closed; sink detached");
+        }
+        let mut dropped = 0u64;
+        while st.frames.len() >= self.cap {
+            // Index 0 unless the head frame is partially written — a
+            // torn frame would desync the subscriber's whole stream.
+            let evict = usize::from(st.head_written > 0);
+            if evict >= st.frames.len() {
+                // Only the half-sent head remains (cap 1): drop the
+                // incoming frame instead.
+                return Ok(dropped + 1);
+            }
+            st.frames.remove(evict);
+            dropped += 1;
+        }
+        st.frames.push_back(frame);
+        Ok(dropped)
+    }
+
+    /// Write queued frames to `stream` until empty or `WouldBlock`.
+    /// Called only from the event loop (single consumer); the lock is
+    /// held across the nonblocking writes, which cannot stall.
+    fn flush_to(&self, stream: &TcpStream) -> FlushOutcome {
+        let mut st = lock_or_recover(&self.state);
+        if st.closed {
+            return FlushOutcome::Closed;
+        }
+        loop {
+            let off = st.head_written;
+            let wrote = match st.frames.front() {
+                None => return FlushOutcome::Idle,
+                Some(front) => {
+                    let mut w = stream;
+                    w.write(&front[off..])
+                }
+            };
+            match wrote {
+                Ok(0) => return FlushOutcome::Closed,
+                Ok(n) => {
+                    st.head_written += n;
+                    if st.head_written == st.frames[0].len() {
+                        st.frames.pop_front();
+                        st.head_written = 0;
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return FlushOutcome::Blocked
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return FlushOutcome::Failed(e),
+            }
+        }
+    }
+
+    /// Frames still awaiting delivery.
+    fn pending(&self) -> usize {
+        lock_or_recover(&self.state).frames.len()
+    }
+
+    /// Refuse all future pushes (the connection is gone); queued frames
+    /// are discarded.
+    fn close(&self) {
+        let mut st = lock_or_recover(&self.state);
+        st.closed = true;
+        st.frames.clear();
+        st.head_written = 0;
+    }
+}
+
+/// Forwards completed frames to one subscriber connection — enqueue
+/// only, never a socket write: delivery cost on the session thread is
+/// one encode + one bounded queue push, so a stalled subscriber cannot
+/// delay sibling subscribers or pin the delivering thread. One
+/// connection subscribed to several sessions shares one queue, so
+/// frames from concurrent sessions interleave whole, never torn.
 struct TcpSink {
-    stream: Arc<Mutex<TcpStream>>,
+    queue: Arc<SubscriberQueue>,
+    /// Wakes the event loop to flush after each enqueue.
+    completions: Arc<ReadyQueue<Completion>>,
+    token: usize,
+    /// Session metrics for `sink_dropped` accounting.
+    metrics: Arc<Metrics>,
 }
 
 impl ResultSink for TcpSink {
@@ -120,54 +379,32 @@ impl ResultSink for TcpSink {
                 class_id: d.class_id as u32,
             })
             .collect();
-        // Never `unwrap()` this lock: the stream is shared by every sink
-        // of one subscriber connection, and a panic while some other
-        // deliver held it poisons the mutex. Propagating that panic from
-        // here would take down the delivering connection thread (and,
-        // before the session grew panic isolation, every later delivery
-        // on the session). A poisoned stream means a writer died mid-
-        // frame, so the bytes on it can't be trusted anyway — close it
-        // and detach cleanly.
-        let stream = match self.stream.lock() {
-            Ok(guard) => guard,
-            Err(poisoned) => {
-                let stream = poisoned.into_inner();
-                log::warn!("subscriber stream poisoned by an earlier panic; detaching sink");
-                let _ = stream.shutdown(std::net::Shutdown::Both);
-                anyhow::bail!("subscriber stream poisoned; sink detached");
-            }
-        };
-        let mut writer = &*stream;
-        let out = write_msg(
-            &mut writer,
-            &Msg::Result {
-                frame_id: result.frame_id,
-                detections,
-                server_micros: (result.tail_secs * 1e6) as u64,
-                capture_micros: result.capture_micros,
-            },
-        );
-        if let Err(e) = &out {
-            // A timed-out write may have left a torn frame on the socket;
-            // the sink is about to be detached, so close the stream —
-            // otherwise the subscriber would block forever on a partial
-            // frame with no signal that delivery stopped.
-            log::warn!("subscriber write failed, closing its stream: {e:#}");
-            let _ = stream.shutdown(std::net::Shutdown::Both);
+        let frame = crate::net::encode_frame(&Msg::Result {
+            frame_id: result.frame_id,
+            detections,
+            server_micros: (result.tail_secs * 1e6) as u64,
+            capture_micros: result.capture_micros,
+        })?;
+        let dropped = self.queue.push(frame)?; // Err ⇒ session detaches this sink
+        if dropped > 0 {
+            self.metrics.incr("sink_dropped", dropped);
+            log::debug!("slow subscriber: dropped {dropped} oldest queued result frame(s)");
         }
-        out
+        self.completions.push(Completion::SinkReady { token: self.token });
+        Ok(())
     }
 }
 
 struct Shared {
     registry: Arc<SessionRegistry>,
-    /// Shutdown flag: set internally when `max_frames` is reached, or
-    /// externally by the holder of the [`run_server_until`] stop handle.
-    done: Arc<AtomicBool>,
+    /// Shutdown handle: tripped internally when `max_frames` is reached,
+    /// or externally by the holder of the [`run_server_until`] handle.
+    stop: Arc<ServerStop>,
     frames_out: AtomicU64,
     max_frames: Option<u64>,
-    /// Capture tee (`--trace`): every decoded intermediate output is
-    /// re-framed and appended here before being routed to its session.
+    /// Capture tee (`--trace`): every received intermediate output is
+    /// appended here (byte-identical framed form) before being routed to
+    /// its session.
     trace: Option<Mutex<TraceSink>>,
 }
 
@@ -184,7 +421,9 @@ impl Shared {
         let done = self.frames_out.fetch_add(n, Ordering::SeqCst) + n;
         if let Some(max) = self.max_frames {
             if done >= max {
-                self.done.store(true, Ordering::SeqCst);
+                // stop() wakes the event loop, so a budget reached on a
+                // worker thread stops the server within one poll wake.
+                self.stop.stop();
             }
         }
     }
@@ -196,22 +435,546 @@ impl Shared {
     }
 }
 
+/// Worker → event-loop notifications, carried by a [`ReadyQueue`] whose
+/// signal is the poller's self-pipe.
+enum Completion {
+    /// A per-connection decode/dispatch job finished.
+    Dispatched { token: usize, result: Result<()> },
+    /// A sink enqueued result frames for this connection; flush it.
+    SinkReady { token: usize },
+    /// The recurring session-deadline sweep finished.
+    SessionsPolled,
+}
+
+/// One connection's loop-owned state machine. Lifecycle:
+/// accepted → streaming (assembler yields frames; control frames are
+/// handled inline, feature frames batch into `inbox` and dispatch to the
+/// worker pool one job at a time) → draining (`read_closed` after EOF or
+/// `Bye`; retired once the in-flight job, inbox and sink queue are all
+/// empty) → closed.
+struct Conn {
+    stream: TcpStream,
+    assembler: FrameAssembler,
+    /// Feature frames awaiting a worker slot.
+    inbox: VecDeque<RawFrame>,
+    /// A worker job for this connection is in flight (at most one, to
+    /// preserve per-connection frame order).
+    busy: bool,
+    /// Result queue, created on the first `Subscribe`.
+    sink: Option<Arc<SubscriberQueue>>,
+    /// No more reads: EOF, `Bye`, or a read error.
+    read_closed: bool,
+    /// The last flush hit `WouldBlock`; poll for write-readiness.
+    write_blocked: bool,
+    peer: String,
+}
+
+struct EventLoop {
+    poller: Poller,
+    conns: HashMap<usize, Conn>,
+    shared: Arc<Shared>,
+    pool: ThreadPool,
+    completions: Arc<ReadyQueue<Completion>>,
+    next_token: usize,
+    /// Worker jobs whose completion has not been observed yet.
+    jobs_in_flight: usize,
+    /// A session-deadline sweep is in flight (never stack a second).
+    poll_job_in_flight: bool,
+    server_metrics: Arc<Metrics>,
+    conn_peak: u64,
+    sink_queue: usize,
+    draining: bool,
+}
+
+impl EventLoop {
+    fn run(&mut self, listener: &TcpListener, stop: &ServerStop) -> Result<()> {
+        let mut wheel = TimerWheel::new(WHEEL_TICK, WHEEL_SLOTS, Instant::now());
+        wheel.schedule(DEADLINE_POLL, TIMER_SESSION_POLL);
+        let mut events: Vec<Event> = Vec::new();
+        let mut fired: Vec<usize> = Vec::new();
+        let mut completed: Vec<Completion> = Vec::new();
+        let mut drain_started: Option<Instant> = None;
+        loop {
+            if stop.is_set() && !self.draining {
+                self.draining = true;
+                drain_started = Some(Instant::now());
+                self.poller.deregister(TOKEN_LISTENER);
+            }
+            if let Some(t0) = drain_started {
+                let flushed = self
+                    .conns
+                    .values()
+                    .all(|c| c.sink.as_ref().map_or(true, |q| q.pending() == 0));
+                // In-flight jobs may still produce results; give queued
+                // deliveries a bounded window to reach their subscribers
+                // (the thread-per-conn server wrote them synchronously).
+                if (self.jobs_in_flight == 0 && flushed) || t0.elapsed() > SHUTDOWN_FLUSH {
+                    return Ok(());
+                }
+            }
+            let timeout = if self.draining {
+                Duration::from_millis(10)
+            } else {
+                wheel.next_timeout(Instant::now()).unwrap_or(DEADLINE_POLL)
+            };
+            self.poller.poll(Some(timeout), &mut events)?;
+
+            // Timers first: the deadline sweep must not starve behind a
+            // busy fd set.
+            fired.clear();
+            wheel.advance(Instant::now(), &mut fired);
+            for &t in &fired {
+                if t == TIMER_SESSION_POLL {
+                    wheel.schedule(DEADLINE_POLL, TIMER_SESSION_POLL);
+                    self.spawn_session_poll();
+                }
+            }
+
+            // Worker completions (frees `busy` connections to dispatch
+            // their next inbox batch, flushes freshly-fed sinks).
+            completed.clear();
+            self.completions.drain_into(&mut completed);
+            for c in completed.drain(..) {
+                self.on_completion(c);
+            }
+
+            // Socket readiness.
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.token == TOKEN_LISTENER {
+                    if !self.draining {
+                        self.accept_ready(listener)?;
+                    }
+                } else {
+                    self.conn_event(ev);
+                }
+            }
+        }
+    }
+
+    fn spawn_session_poll(&mut self) {
+        if self.poll_job_in_flight || self.draining {
+            return;
+        }
+        self.poll_job_in_flight = true;
+        self.jobs_in_flight += 1;
+        let shared = Arc::clone(&self.shared);
+        let completions = Arc::clone(&self.completions);
+        self.pool.execute(move || {
+            let out =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| shared.poll_sessions()));
+            if out.is_err() {
+                log::warn!("session-deadline sweep panicked; continuing");
+            }
+            completions.push(Completion::SessionsPolled);
+        });
+    }
+
+    fn on_completion(&mut self, c: Completion) {
+        match c {
+            Completion::SessionsPolled => {
+                self.poll_job_in_flight = false;
+                self.jobs_in_flight -= 1;
+            }
+            Completion::Dispatched { token, result } => {
+                self.jobs_in_flight -= 1;
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.busy = false;
+                } else {
+                    return; // connection closed while its job ran
+                }
+                match result {
+                    Ok(()) => {
+                        self.maybe_dispatch(token);
+                        self.maybe_retire(token);
+                    }
+                    Err(e) => {
+                        // Protocol violations (unknown session, device
+                        // out of range, undecodable payload) close the
+                        // connection — same contract as the blocking
+                        // server's per-thread error path.
+                        log::warn!("connection closed with error: {e:#}");
+                        self.close_conn(token, "dispatch error");
+                    }
+                }
+            }
+            Completion::SinkReady { token } => self.flush_conn(token),
+        }
+    }
+
+    fn accept_ready(&mut self, listener: &TcpListener) -> Result<()> {
+        loop {
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    if let Err(e) =
+                        stream.set_nonblocking(true).and_then(|_| stream.set_nodelay(true))
+                    {
+                        log::warn!("connection from {addr} rejected at setup: {e}");
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if let Err(e) =
+                        self.poller.register(stream.as_raw_fd(), token, Interest::READ)
+                    {
+                        log::warn!("poller registration failed for {addr}: {e:#}");
+                        continue;
+                    }
+                    log::debug!("connection from {addr} (token {token})");
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            assembler: FrameAssembler::new(),
+                            inbox: VecDeque::new(),
+                            busy: false,
+                            sink: None,
+                            read_closed: false,
+                            write_blocked: false,
+                            peer: addr.to_string(),
+                        },
+                    );
+                    self.server_metrics.incr("conn_accepted", 1);
+                    let active = self.conns.len() as u64;
+                    self.server_metrics.set("conn_active", active);
+                    if active > self.conn_peak {
+                        self.conn_peak = active;
+                        self.server_metrics.set("conn_peak", active);
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(ref e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted | std::io::ErrorKind::ConnectionAborted
+                    ) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+    }
+
+    fn conn_event(&mut self, ev: Event) {
+        if ev.writable {
+            self.flush_conn(ev.token);
+        }
+        if ev.readable && !self.draining {
+            self.read_ready(ev.token);
+        }
+        // Hangup with readable data still pending is handled by the read
+        // path (it sees EOF after draining the buffer); a bare hangup
+        // (or error) means the peer is gone now.
+        if ev.hangup && !ev.readable && self.conns.contains_key(&ev.token) {
+            self.close_conn(ev.token, "peer hung up");
+        }
+    }
+
+    fn read_ready(&mut self, token: usize) {
+        enum Outcome {
+            Progress,
+            Eof,
+            Error(std::io::Error),
+        }
+        let outcome = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.read_closed {
+                return;
+            }
+            let mut budget = READ_BUDGET;
+            let mut buf = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => break Outcome::Eof,
+                    Ok(n) => {
+                        conn.assembler.feed(&buf[..n]);
+                        budget = budget.saturating_sub(n);
+                        if budget == 0 {
+                            break Outcome::Progress;
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        break Outcome::Progress
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => break Outcome::Error(e),
+                }
+            }
+        };
+        match outcome {
+            Outcome::Error(e) => {
+                log::debug!("connection read ended: {e}");
+                self.close_conn(token, "read error");
+            }
+            Outcome::Eof => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.read_closed = true;
+                }
+                self.process_frames(token);
+                self.update_interest(token);
+                self.maybe_retire(token);
+            }
+            Outcome::Progress => self.process_frames(token),
+        }
+    }
+
+    /// Pop complete frames off a connection's assembler: control frames
+    /// are handled inline (they are a few bytes), feature frames batch
+    /// into the inbox for the worker pool.
+    fn process_frames(&mut self, token: usize) {
+        enum Step {
+            Control(RawFrame),
+            Queued,
+            Done,
+            Desync(anyhow::Error),
+        }
+        loop {
+            let step = {
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                match conn.assembler.next_frame() {
+                    Ok(Some(f)) if f.is_features() => {
+                        conn.inbox.push_back(f);
+                        Step::Queued
+                    }
+                    Ok(Some(f)) => Step::Control(f),
+                    Ok(None) => Step::Done,
+                    Err(e) => Step::Desync(e),
+                }
+            };
+            match step {
+                Step::Queued => continue,
+                Step::Done => break,
+                Step::Desync(e) => {
+                    log::debug!("connection read ended: {e:#}");
+                    self.close_conn(token, "protocol desync");
+                    return;
+                }
+                Step::Control(f) => {
+                    if let Err(e) = self.handle_control(token, &f) {
+                        log::warn!("connection closed with error: {e:#}");
+                        self.close_conn(token, "control error");
+                        return;
+                    }
+                }
+            }
+        }
+        self.maybe_dispatch(token);
+    }
+
+    fn handle_control(&mut self, token: usize, frame: &RawFrame) -> Result<()> {
+        match frame.decode()? {
+            Msg::Hello { device_id, session } => {
+                // Unknown session: closing the connection is the only
+                // signal the protocol can give the peer — silently
+                // dropping its traffic would let a typoed `--session`
+                // "succeed" while every frame is discarded.
+                anyhow::ensure!(
+                    self.shared.registry.get(&session).is_some(),
+                    "device {device_id} greeted unknown session {session:?} (have {:?})",
+                    self.shared.registry.names()
+                );
+                log::info!("device {device_id} connected to session {session:?}");
+            }
+            Msg::Subscribe { session } => match self.shared.registry.get(&session) {
+                Some(s) => {
+                    let queue = {
+                        let Some(conn) = self.conns.get_mut(&token) else { return Ok(()) };
+                        // One queue per connection, shared by every
+                        // session it subscribes, so concurrent sessions
+                        // cannot interleave frames on the socket.
+                        Arc::clone(
+                            conn.sink
+                                .get_or_insert_with(|| {
+                                    Arc::new(SubscriberQueue::new(self.sink_queue))
+                                }),
+                        )
+                    };
+                    s.attach_sink(Box::new(TcpSink {
+                        queue,
+                        completions: Arc::clone(&self.completions),
+                        token,
+                        metrics: s.metrics(),
+                    }));
+                    log::info!("result subscriber attached to session {session:?}");
+                }
+                None => anyhow::bail!(
+                    "subscribe to unknown session {session:?} (have {:?})",
+                    self.shared.registry.names()
+                ),
+            },
+            Msg::Bye => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.read_closed = true;
+                }
+                self.update_interest(token);
+                self.maybe_retire(token);
+            }
+            Msg::Result { .. } => log::warn!("unexpected Result from client"),
+            // Feature frames are routed to the inbox before decode.
+            Msg::Features { .. } | Msg::FeaturesQ { .. } => {
+                log::warn!("feature frame (type {}) reached the control path", frame.ty);
+            }
+        }
+        Ok(())
+    }
+
+    /// Hand the connection's queued feature frames to the worker pool —
+    /// at most one job per connection at a time, so frames dispatch in
+    /// arrival order.
+    fn maybe_dispatch(&mut self, token: usize) {
+        let batch: Vec<RawFrame> = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.busy || conn.inbox.is_empty() {
+                return;
+            }
+            conn.busy = true;
+            conn.inbox.drain(..).collect()
+        };
+        self.jobs_in_flight += 1;
+        let shared = Arc::clone(&self.shared);
+        let completions = Arc::clone(&self.completions);
+        self.pool.execute(move || {
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    dispatch_frames(&shared, &batch)
+                }))
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("dispatch job panicked")));
+            completions.push(Completion::Dispatched { token, result });
+        });
+    }
+
+    fn flush_conn(&mut self, token: usize) {
+        let outcome = {
+            let Some(conn) = self.conns.get(&token) else { return };
+            let Some(queue) = &conn.sink else { return };
+            queue.flush_to(&conn.stream)
+        };
+        match outcome {
+            FlushOutcome::Idle => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.write_blocked = false;
+                }
+                self.update_interest(token);
+                self.maybe_retire(token);
+            }
+            FlushOutcome::Blocked => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.write_blocked = true;
+                }
+                self.update_interest(token);
+            }
+            FlushOutcome::Closed => self.close_conn(token, "subscriber closed"),
+            FlushOutcome::Failed(e) => {
+                // A torn frame may be on the socket; the connection is
+                // closed so the subscriber sees EOF instead of blocking
+                // forever on a partial frame.
+                log::warn!("subscriber write failed, closing its stream: {e}");
+                self.close_conn(token, "write error");
+            }
+        }
+    }
+
+    fn update_interest(&mut self, token: usize) {
+        if let Some(conn) = self.conns.get(&token) {
+            self.poller.set_interest(
+                token,
+                Interest { readable: !conn.read_closed, writable: conn.write_blocked },
+            );
+        }
+    }
+
+    /// Close a finished connection once nothing references it anymore:
+    /// reads are done, no worker job is in flight, the inbox is empty
+    /// and every queued result frame has been flushed.
+    fn maybe_retire(&mut self, token: usize) {
+        let retire = match self.conns.get(&token) {
+            Some(c) => {
+                c.read_closed
+                    && !c.busy
+                    && c.inbox.is_empty()
+                    && c.sink.as_ref().map_or(true, |q| q.pending() == 0)
+            }
+            None => false,
+        };
+        if retire {
+            self.close_conn(token, "peer finished");
+        }
+    }
+
+    fn close_conn(&mut self, token: usize, why: &str) {
+        if let Some(conn) = self.conns.remove(&token) {
+            if let Some(q) = &conn.sink {
+                q.close(); // future deliveries error ⇒ sessions detach the sink
+            }
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            self.poller.deregister(token);
+            self.server_metrics.incr("conn_closed", 1);
+            self.server_metrics.set("conn_active", self.conns.len() as u64);
+            log::debug!("connection {} closed ({why})", conn.peer);
+        }
+    }
+}
+
+/// Worker-side half of the dispatch handoff: tee, decode and route one
+/// connection's batch of feature frames. An `Err` closes the connection
+/// (addressing/protocol violations must not look like success).
+fn dispatch_frames(shared: &Shared, frames: &[RawFrame]) -> Result<()> {
+    for frame in frames {
+        // Capture tee: the framed bytes go in verbatim (byte-identical
+        // to the wire), before decode so even a frame that fails decode
+        // is captured. A tee failure degrades the capture, never the
+        // serving path.
+        if let Some(sink) = &shared.trace {
+            let arrival = crate::utils::unix_micros();
+            if let Err(e) = lock_or_recover(sink).record(arrival, &frame.framed_bytes()) {
+                log::warn!("trace tee write failed: {e:#}");
+            }
+        }
+        match frame.decode()? {
+            Msg::Features { frame_id, device_id, tensor, session, capture_micros } => {
+                submit(
+                    shared,
+                    &session,
+                    frame_id,
+                    device_id,
+                    FeaturePayload::Raw(tensor),
+                    capture_micros,
+                )?;
+            }
+            Msg::FeaturesQ { frame_id, device_id, tensor, session, capture_micros } => {
+                submit(
+                    shared,
+                    &session,
+                    frame_id,
+                    device_id,
+                    FeaturePayload::Quantized(tensor),
+                    capture_micros,
+                )?;
+            }
+            _ => log::warn!("non-feature frame (type {}) on the dispatch path", frame.ty),
+        }
+    }
+    Ok(())
+}
+
 /// Run the edge server until `max_frames` results have been produced
 /// across all sessions. Returns the registry so callers can inspect
 /// per-session metrics.
 pub fn run_server(paths: &Paths, cfg: &ServerConfig) -> Result<Arc<SessionRegistry>> {
-    run_server_until(paths, cfg, Arc::new(AtomicBool::new(false)))
+    Ok(run_server_until(paths, cfg, ServerStop::new())?.registry)
 }
 
 /// [`run_server`] with an external stop handle: the server also exits
-/// when `stop` is set (within one accept-poll / read-timeout window).
-/// The fleet scenario harness uses this to stop a `max_frames: None`
-/// server once its device fleet has drained and stragglers flushed.
+/// when [`ServerStop::stop`] is called, within one poll wake (the stop
+/// handle writes the event loop's self-pipe). The fleet scenario
+/// harness uses this to stop a `max_frames: None` server once its
+/// device fleet has drained and stragglers flushed.
 pub fn run_server_until(
     paths: &Paths,
     cfg: &ServerConfig,
-    stop: Arc<AtomicBool>,
-) -> Result<Arc<SessionRegistry>> {
+    stop: Arc<ServerStop>,
+) -> Result<ServerRun> {
     let meta = ModelMeta::load(&paths.model_meta())?;
     let specs = cfg.session_specs()?;
 
@@ -250,7 +1013,7 @@ pub fn run_server_until(
     };
     let shared = Arc::new(Shared {
         registry: Arc::clone(&registry),
-        done: stop,
+        stop: Arc::clone(&stop),
         frames_out: AtomicU64::new(0),
         max_frames: cfg.max_frames,
         trace,
@@ -271,35 +1034,40 @@ pub fn run_server_until(
         backend.loaded_names()
     );
 
-    let mut conn_threads = Vec::new();
-    let deadline_poll = Duration::from_millis(20);
-    loop {
-        if shared.done.load(Ordering::SeqCst) {
-            break;
-        }
-        match listener.accept() {
-            Ok((stream, addr)) => {
-                log::debug!("connection from {addr}");
-                let shared = Arc::clone(&shared);
-                conn_threads.push(thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, shared) {
-                        // Clean disconnects return Ok; an Err here is a
-                        // protocol violation (e.g. unknown session).
-                        log::warn!("connection closed with error: {e:#}");
-                    }
-                }));
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // Resolve expired frames while idle.
-                shared.poll_sessions();
-                thread::sleep(deadline_poll);
-            }
-            Err(e) => return Err(e.into()),
-        }
+    let (mut poller, waker) = Poller::new()?;
+    let completions: Arc<ReadyQueue<Completion>> =
+        Arc::new(ReadyQueue::new(Arc::new(waker.clone()) as Arc<dyn WakeSignal>));
+    // Arm-then-recheck: a stop() racing startup that misses the waker
+    // still set the flag, which the loop's first iteration observes.
+    stop.arm(waker);
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+
+    let workers = if cfg.workers > 0 { cfg.workers } else { ThreadPool::default_size() };
+    let server_metrics = Arc::new(Metrics::new());
+    let mut lp = EventLoop {
+        poller,
+        conns: HashMap::new(),
+        shared: Arc::clone(&shared),
+        pool: ThreadPool::new(workers),
+        completions,
+        next_token: FIRST_CONN_TOKEN,
+        jobs_in_flight: 0,
+        poll_job_in_flight: false,
+        server_metrics: Arc::clone(&server_metrics),
+        conn_peak: 0,
+        sink_queue: cfg.sink_queue.max(1),
+        draining: false,
+    };
+    let run_result = lp.run(&listener, &stop);
+    let open: Vec<usize> = lp.conns.keys().copied().collect();
+    for token in open {
+        lp.close_conn(token, "server stopping");
     }
-    for t in conn_threads {
-        let _ = t.join();
-    }
+    // Dropping the loop joins the worker pool, so every in-flight
+    // dispatch (and its trace tee) finishes before the capture flushes.
+    drop(lp);
+    run_result?;
+
     if let Some(sink) = &shared.trace {
         let mut sink = lock_or_recover(sink);
         sink.flush()?;
@@ -314,123 +1082,11 @@ pub fn run_server_until(
             m.counter("batch_rejected"),
         );
     }
-    Ok(registry)
-}
-
-/// One connection: decode messages, route them to the addressed session.
-fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
-    stream.set_nodelay(true)?;
-    // Read timeout so the thread re-checks `done` even on idle
-    // connections (e.g. a subscriber that only listens).
-    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
-    let mut reader = std::io::BufReader::new(stream.try_clone()?);
-    // One write handle per connection, shared by every sink this
-    // connection subscribes, so concurrent sessions cannot interleave
-    // frames on the socket.
-    let mut sink_stream: Option<Arc<Mutex<TcpStream>>> = None;
-    loop {
-        if shared.done.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        let msg = match crate::net::read_msg(&mut reader) {
-            Ok(m) => m,
-            Err(e) => {
-                // Timeout (no header byte yet): keep polling. Any other
-                // error means the peer closed or the stream desynced.
-                let timed_out = e.downcast_ref::<std::io::Error>().map_or(false, |io| {
-                    matches!(
-                        io.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                    )
-                });
-                if timed_out {
-                    continue;
-                }
-                // Peer closed, or the stream desynced / failed to decode:
-                // keep a trace, the other end may be wondering why its
-                // frames stopped landing.
-                log::debug!("connection read ended: {e:#}");
-                return Ok(());
-            }
-        };
-        // Capture tee: re-frame feature messages into the trace before
-        // routing. A tee failure degrades the capture, never the serving
-        // path — the frame is still submitted.
-        if let Some(sink) = &shared.trace {
-            if matches!(&msg, Msg::Features { .. } | Msg::FeaturesQ { .. }) {
-                match crate::net::encode_frame(&msg) {
-                    Ok(bytes) => {
-                        let arrival = crate::utils::unix_micros();
-                        if let Err(e) = lock_or_recover(sink).record(arrival, &bytes) {
-                            log::warn!("trace tee write failed: {e:#}");
-                        }
-                    }
-                    Err(e) => log::warn!("trace tee encode failed: {e:#}"),
-                }
-            }
-        }
-        match msg {
-            Msg::Hello { device_id, session } => {
-                // Unknown session: closing the connection is the only
-                // signal the protocol can give the peer — silently
-                // dropping its traffic would let a typoed `--session`
-                // "succeed" while every frame is discarded.
-                anyhow::ensure!(
-                    shared.registry.get(&session).is_some(),
-                    "device {device_id} greeted unknown session {session:?} (have {:?})",
-                    shared.registry.names()
-                );
-                log::info!("device {device_id} connected to session {session:?}");
-            }
-            Msg::Subscribe { session } => match shared.registry.get(&session) {
-                Some(s) => {
-                    let shared_stream = match &sink_stream {
-                        Some(st) => Arc::clone(st),
-                        None => {
-                            let st = stream.try_clone()?;
-                            // Bound sink writes so one stalled subscriber
-                            // cannot wedge result delivery for the whole
-                            // session.
-                            st.set_write_timeout(Some(Duration::from_secs(5)))?;
-                            let st = Arc::new(Mutex::new(st));
-                            sink_stream = Some(Arc::clone(&st));
-                            st
-                        }
-                    };
-                    s.attach_sink(Box::new(TcpSink { stream: shared_stream }));
-                    log::info!("result subscriber attached to session {session:?}");
-                }
-                None => anyhow::bail!(
-                    "subscribe to unknown session {session:?} (have {:?})",
-                    shared.registry.names()
-                ),
-            },
-            Msg::Features { frame_id, device_id, tensor, session, capture_micros } => {
-                submit(
-                    &shared,
-                    &session,
-                    frame_id,
-                    device_id,
-                    FeaturePayload::Raw(tensor),
-                    capture_micros,
-                )?;
-            }
-            Msg::FeaturesQ { frame_id, device_id, tensor, session, capture_micros } => {
-                submit(
-                    &shared,
-                    &session,
-                    frame_id,
-                    device_id,
-                    FeaturePayload::Quantized(tensor),
-                    capture_micros,
-                )?;
-            }
-            Msg::Bye => return Ok(()),
-            Msg::Result { .. } => {
-                log::warn!("unexpected Result from client");
-            }
-        }
-    }
+    Ok(ServerRun {
+        registry,
+        server_metrics,
+        planner_metrics: planner.as_ref().map(|p| p.metrics()),
+    })
 }
 
 /// Route one intermediate output into its session; dequantization and
@@ -463,9 +1119,9 @@ fn submit(
         sess.metrics().incr("trace_recorded", 1);
     }
     // submit() already resolves this session's expirations; other
-    // sessions are polled by the accept loop every 20 ms. Polling them
-    // here too would make this connection thread run (and block on)
-    // other sessions' work — breaking per-session isolation.
+    // sessions are swept by the timer wheel every 20 ms. Polling them
+    // here too would make this worker run (and block on) other sessions'
+    // work — breaking per-session isolation.
     match sess.submit_at(frame_id, device_id as usize, payload, capture_micros) {
         Ok(events) => shared.note_events(&events),
         Err(e) => log::warn!("submit to session {session:?} failed: {e:#}"),
@@ -523,6 +1179,8 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         "max-batch",
         "batch-window-ms",
         "trace",
+        "workers",
+        "sink-queue",
     ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
@@ -540,6 +1198,8 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     cfg.decode.nms_iou = args.f64_or("nms-iou", cfg.decode.nms_iou)?;
     cfg.batch.max_batch = args.usize_or("max-batch", cfg.batch.max_batch)?;
     cfg.batch.window = args.ms_or("batch-window-ms", cfg.batch.window.as_millis() as u64)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.sink_queue = args.usize_or("sink-queue", cfg.sink_queue)?;
     let max = args.u64_or("max-frames", 0)?;
     cfg.max_frames = if max > 0 { Some(max) } else { None };
     cfg.trace = args.str_opt("trace").map(std::path::PathBuf::from);
@@ -655,28 +1315,35 @@ mod tests {
     }
 
     #[test]
-    fn poisoned_tcp_sink_detaches_instead_of_panicking() {
-        // Regression for the `stream.lock().unwrap()` panic: poison the
-        // shared stream mutex the way a panicking writer would, then
-        // deliver — the sink must return an error (detach), not unwind.
-        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
-        let addr = listener.local_addr().unwrap();
-        let accepted = std::thread::spawn(move || listener.accept().unwrap().0);
-        let client = std::net::TcpStream::connect(addr).unwrap();
-        let _server_side = accepted.join().unwrap();
+    fn serve_event_loop_flags_parse() {
+        let cfg =
+            server_config_from_args(&args(&["--workers", "3", "--sink-queue", "16"])).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.sink_queue, 16);
+        let d = server_config_from_args(&args(&[])).unwrap();
+        assert_eq!(d.workers, 0, "0 = auto-size the pool");
+        assert_eq!(d.sink_queue, DEFAULT_SINK_QUEUE);
+        assert!(server_config_from_args(&args(&["--workers", "many"])).is_err());
+    }
 
-        let shared = Arc::new(std::sync::Mutex::new(client));
-        let poisoner = Arc::clone(&shared);
-        let _ = std::thread::spawn(move || {
-            let _guard = poisoner.lock().unwrap();
-            panic!("writer dies mid-send");
-        })
-        .join();
-        assert!(shared.lock().is_err(), "mutex must be poisoned for the test to bite");
+    /// A no-op signal for sink tests that never touch a poller.
+    struct NullSignal;
+    impl WakeSignal for NullSignal {
+        fn wake(&self) {}
+    }
 
-        let mut sink = TcpSink { stream: shared };
-        let result = FrameResult {
-            frame_id: 1,
+    fn test_sink(queue: Arc<SubscriberQueue>, metrics: Arc<Metrics>) -> TcpSink {
+        TcpSink {
+            queue,
+            completions: Arc::new(ReadyQueue::new(Arc::new(NullSignal))),
+            token: 99,
+            metrics,
+        }
+    }
+
+    fn frame_result(frame_id: u64) -> FrameResult {
+        FrameResult {
+            frame_id,
             detections: Vec::new(),
             present: vec![true, true],
             tail_secs: 0.0,
@@ -684,9 +1351,152 @@ mod tests {
             sync_wait_secs: 0.0,
             capture_micros: 0,
             tail_error: false,
-        };
-        let out = sink.deliver("default", &result);
+        }
+    }
+
+    #[test]
+    fn poisoned_subscriber_queue_detaches_instead_of_panicking() {
+        // Regression carried over from the blocking server's shared-
+        // stream mutex: poison the queue the way a panicking holder
+        // would, then deliver — the sink must return an error (detach),
+        // not unwind.
+        let queue = Arc::new(SubscriberQueue::new(4));
+        let poisoner = Arc::clone(&queue);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.state.lock().unwrap();
+            panic!("holder dies mid-operation");
+        })
+        .join();
+        assert!(queue.state.lock().is_err(), "mutex must be poisoned for the test to bite");
+
+        let mut sink = test_sink(queue, Arc::new(Metrics::new()));
+        let out = sink.deliver("default", &frame_result(1));
         assert!(out.is_err(), "poisoned sink must detach via an error, not a panic");
+    }
+
+    #[test]
+    fn subscriber_queue_drops_oldest_when_full() {
+        let q = SubscriberQueue::new(3);
+        for i in 0..5u8 {
+            let dropped = q.push(vec![i]).unwrap();
+            assert_eq!(dropped, u64::from(i >= 3), "cap 3: pushes 4 and 5 each evict one");
+        }
+        let st = q.state.lock().unwrap();
+        let kept: Vec<u8> = st.frames.iter().map(|f| f[0]).collect();
+        assert_eq!(kept, vec![2, 3, 4], "the *oldest* frames are the ones dropped");
+    }
+
+    #[test]
+    fn subscriber_queue_never_drops_a_partially_written_frame() {
+        let q = SubscriberQueue::new(2);
+        q.push(vec![10, 11]).unwrap();
+        q.push(vec![20]).unwrap();
+        // Simulate the loop having flushed one byte of the head frame.
+        q.state.lock().unwrap().head_written = 1;
+        q.push(vec![30]).unwrap();
+        let st = q.state.lock().unwrap();
+        let heads: Vec<u8> = st.frames.iter().map(|f| f[0]).collect();
+        assert_eq!(heads, vec![10, 30], "evict index 1, never the half-sent head");
+        drop(st);
+
+        // Cap 1 with a half-sent head: the incoming frame is the drop.
+        let q = SubscriberQueue::new(1);
+        q.push(vec![1, 2, 3]).unwrap();
+        q.state.lock().unwrap().head_written = 2;
+        assert_eq!(q.push(vec![9]).unwrap(), 1, "drop-newest fallback still counts");
+        assert_eq!(q.pending(), 1);
+        assert_eq!(q.state.lock().unwrap().frames[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn slow_subscriber_delivery_is_nonblocking_and_counted() {
+        // Satellite regression: the blocking sink's write_all could
+        // stall delivery ~5 s per frame on a wedged subscriber. The
+        // queue-backed sink must absorb any number of deliveries with
+        // nobody flushing, within the bound, without blocking.
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(SubscriberQueue::new(8));
+        let mut sink = test_sink(Arc::clone(&queue), Arc::clone(&metrics));
+        let t0 = std::time::Instant::now();
+        for i in 0..100 {
+            sink.deliver("default", &frame_result(i)).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "100 deliveries into a wedged subscriber must not block"
+        );
+        assert_eq!(queue.pending(), 8, "bounded at the configured cap");
+        assert_eq!(metrics.counter("sink_dropped"), 92, "every overflow is accounted");
+    }
+
+    #[test]
+    fn closed_subscriber_queue_detaches_sink() {
+        let queue = Arc::new(SubscriberQueue::new(4));
+        let mut sink = test_sink(Arc::clone(&queue), Arc::new(Metrics::new()));
+        sink.deliver("default", &frame_result(1)).unwrap();
+        queue.close();
+        assert!(
+            sink.deliver("default", &frame_result(2)).is_err(),
+            "delivery to a closed connection must error so the session detaches"
+        );
+        assert_eq!(queue.pending(), 0, "close discards undeliverable frames");
+    }
+
+    #[test]
+    fn server_stop_is_idempotent_and_observable() {
+        let stop = ServerStop::new();
+        assert!(!stop.is_set());
+        stop.stop();
+        stop.stop(); // arming no waker, stopping twice: both fine
+        assert!(stop.is_set());
+    }
+
+    #[cfg(feature = "native")]
+    #[test]
+    fn stop_wakes_the_event_loop_promptly() {
+        // Satellite regression: stop used to be observed only within one
+        // 20 ms accept-poll / 250 ms read-timeout window. With the
+        // self-pipe the latency is one poll wake; assert well under the
+        // old read-timeout bound, with margin for CI scheduling noise.
+        let paths = Paths::new("/nonexistent-artifacts", "/nonexistent-data");
+        let paths = crate::scenario::materialize_paths(&paths, "stop-latency-test").unwrap();
+        let port = {
+            let l = std::net::TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let cfg = ServerConfig {
+            port,
+            backend: BackendKind::Native,
+            ..ServerConfig::default()
+        };
+        let stop = ServerStop::new();
+        let stop2 = Arc::clone(&stop);
+        let server = std::thread::spawn(move || run_server_until(&paths, &cfg, stop2));
+        // Wait for the listener, and hold an idle connection open so the
+        // old per-connection read-timeout path would have been the bound.
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        let _idle_conn = loop {
+            match std::net::TcpStream::connect(("127.0.0.1", port)) {
+                Ok(s) => break s,
+                Err(e) if std::time::Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => panic!("server never came up: {e}"),
+            }
+        };
+        std::thread::sleep(Duration::from_millis(50)); // let the loop accept it
+        let t0 = std::time::Instant::now();
+        stop.stop();
+        let run = server.join().expect("server thread panicked").unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "stop took {:?}; the self-pipe wake must beat the old 250 ms read timeout",
+            t0.elapsed()
+        );
+        assert_eq!(run.server_metrics.counter("conn_accepted"), 1);
+        assert_eq!(run.server_metrics.counter("conn_closed"), 1);
+        assert_eq!(run.server_metrics.counter("conn_active"), 0);
     }
 
     #[test]

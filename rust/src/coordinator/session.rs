@@ -178,6 +178,15 @@ pub enum SessionEvent {
 /// Delivery hook for completed frames. The TCP server attaches one per
 /// subscriber connection; tests attach collectors. A sink returning an
 /// error is detached.
+///
+/// `deliver` runs on whichever thread resolved the frame (a dispatch
+/// worker, or the deadline sweep), while the session's sink list is
+/// locked — so it must be **fast and non-blocking**: encode and enqueue,
+/// never a socket write or an unbounded wait. A sink that blocks stalls
+/// every other subscriber of the session behind the same lock. The
+/// server's TCP sink satisfies this by pushing into a bounded
+/// per-connection queue (overflow drops the oldest frame and counts it
+/// as `sink_dropped`) that the event loop flushes on write-readiness.
 pub trait ResultSink: Send {
     /// Deliver one completed frame of `session`. Returning an error (or
     /// panicking) detaches this sink.

@@ -45,7 +45,11 @@
 //!   ([`latency`]) measure through it, so published numbers come from
 //!   the code path that serves traffic.
 //! - [`coordinator::server`] — the distributed TCP deployment, reduced to
-//!   pure I/O: socket ⇄ [`net::Msg`] ⇄ session. One process hosts many
+//!   pure I/O: socket ⇄ [`net::Msg`] ⇄ session, multiplexed on a
+//!   readiness-driven event loop ([`net::poll`]: `poll(2)`, self-pipe
+//!   wake, timer wheel — no thread per connection) with decode/dispatch
+//!   on a fixed worker pool and bounded per-subscriber result queues.
+//!   One process hosts many
 //!   named sessions (multiple intersections, A/B integration variants)
 //!   via [`coordinator::session::SessionRegistry`]; wire messages carry a
 //!   `session` field, with pre-session clients routed to the default

@@ -28,6 +28,10 @@ pub const REGISTERED_METRICS: &[&str] = &[
     "batch_pending",       // series: planner queue depth after enqueue/drain
     "batch_queue_depth",   // series: planner queue depth at enqueue time
     "batch_rejected",      // counter: requests refused because the planner queue was full
+    "conn_accepted",       // counter: TCP connections accepted by the event loop
+    "conn_active",         // gauge: currently open connections
+    "conn_closed",         // counter: connections closed (any reason)
+    "conn_peak",           // gauge: high-water mark of simultaneously open connections
     "decode_errors",       // counter: quantized payloads that failed to dequantize
     "e2e",                 // series: capture → delivery end-to-end seconds
     "features_rx",         // counter: feature payloads received
@@ -35,6 +39,7 @@ pub const REGISTERED_METRICS: &[&str] = &[
     "frames_done",         // counter: frames fully resolved (delivered or expired)
     "head_exec",           // series: device-side head execution seconds
     "post",                // series: decode + NMS post-processing seconds
+    "sink_dropped",        // counter: result frames dropped on a slow subscriber's full queue
     "sync_complete",       // gauge: frames that gathered every device before deadline
     "sync_dropped",        // gauge: frames dropped by the loss policy
     "sync_dup",            // gauge: duplicate (frame, device) submissions ignored

@@ -1,9 +1,11 @@
 //! Wire protocol between edge devices and the edge server, the
 //! 1 Gbps-LAN bandwidth shaper used to emulate the paper's testbed link
-//! on localhost TCP, and the message-level fault-injection layer
-//! ([`ImpairedLink`]) that lossy scenarios run their uplinks through.
+//! on localhost TCP, the message-level fault-injection layer
+//! ([`ImpairedLink`]) that lossy scenarios run their uplinks through,
+//! and the readiness [`poll`] layer the event-loop server stands on.
 
 mod impair;
+pub mod poll;
 mod proto;
 mod quant;
 mod shaper;
@@ -11,7 +13,8 @@ pub mod spec;
 
 pub use impair::{ImpairConfig, ImpairStats, ImpairedLink};
 pub use proto::{
-    encode_frame, read_msg, write_msg, Msg, WireDetection, DEFAULT_SESSION, MAX_SESSION_NAME,
+    encode_frame, read_msg, write_msg, FrameAssembler, Msg, RawFrame, WireDetection,
+    DEFAULT_SESSION, MAX_SESSION_NAME,
 };
 pub use quant::{dequantize, quantize, QuantTensor};
 pub use shaper::ShapedWriter;

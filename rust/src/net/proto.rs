@@ -489,6 +489,110 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
     decode_payload(ty, &payload)
 }
 
+/// One complete frame lifted off the wire but not yet decoded: the type
+/// byte plus the raw payload. Produced by [`FrameAssembler`]; the
+/// event-loop server hands these to worker threads so tensor decoding
+/// happens off the loop, and tees them into trace captures byte-for-byte
+/// (no decode/re-encode round trip).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RawFrame {
+    /// Wire type byte (see `docs/WIRE_PROTOCOL.md`).
+    pub ty: u8,
+    /// Payload bytes exactly as received.
+    pub payload: Vec<u8>,
+}
+
+impl RawFrame {
+    /// Decode the payload into a [`Msg`] (same validation as
+    /// [`read_msg`]).
+    pub fn decode(&self) -> Result<Msg> {
+        decode_payload(self.ty, &self.payload)
+    }
+
+    /// Whether this is an intermediate-output frame (`Features` /
+    /// `FeaturesQ`) — the heavyweight kind the server decodes on worker
+    /// threads and tees into trace captures.
+    pub fn is_features(&self) -> bool {
+        matches!(self.ty, 2 | 6)
+    }
+
+    /// The complete framed wire form (magic + type + length + payload),
+    /// byte-identical to what the peer sent.
+    pub fn framed_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.payload.len() + 9);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(self.ty);
+        buf.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+}
+
+/// Incremental frame reassembly for nonblocking sockets.
+///
+/// [`read_msg`] owns the blocking path (read exactly one frame, waiting
+/// as needed); this is its event-loop counterpart: [`feed`] whatever
+/// bytes a readiness-driven read produced — any split, down to one byte
+/// at a time — then pull zero or more complete [`RawFrame`]s with
+/// [`next_frame`]. Validation (magic, type-agnostic length bound) is the
+/// same as the blocking path; an error means the stream desynced and the
+/// connection must be dropped, exactly as a `read_msg` error does.
+///
+/// [`feed`]: FrameAssembler::feed
+/// [`next_frame`]: FrameAssembler::next_frame
+#[derive(Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already consumed by yielded frames; compacted on
+    /// the next `feed` so parsing never re-copies per frame.
+    pos: usize,
+}
+
+impl FrameAssembler {
+    /// An empty assembler.
+    pub fn new() -> FrameAssembler {
+        FrameAssembler::default()
+    }
+
+    /// Append bytes read from the socket.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are needed.
+    /// An `Err` is a protocol desync (bad magic / oversized payload):
+    /// the stream cannot be trusted past this point.
+    pub fn next_frame(&mut self) -> Result<Option<RawFrame>> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 9 {
+            return Ok(None);
+        }
+        if avail[0..4] != MAGIC {
+            bail!("bad magic {:?}", &avail[0..4]);
+        }
+        let ty = avail[4];
+        let len = u32::from_le_bytes(avail[5..9].try_into().unwrap()) as usize;
+        if len > MAX_PAYLOAD {
+            bail!("payload too large: {len}");
+        }
+        if avail.len() < 9 + len {
+            return Ok(None);
+        }
+        let payload = avail[9..9 + len].to_vec();
+        self.pos += 9 + len;
+        Ok(Some(RawFrame { ty, payload }))
+    }
+
+    /// Bytes buffered but not yet yielded as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -553,6 +657,93 @@ mod tests {
         let mut r = buf.as_slice();
         assert_eq!(read_msg(&mut r).unwrap(), hello);
         assert_eq!(read_msg(&mut r).unwrap(), Msg::Bye);
+    }
+
+    #[test]
+    fn assembler_matches_blocking_reader() {
+        let msgs = vec![
+            Msg::Hello { device_id: 2, session: "north".into() },
+            Msg::Features {
+                frame_id: 9,
+                device_id: 0,
+                tensor: HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap(),
+                session: DEFAULT_SESSION.into(),
+                capture_micros: 777,
+            },
+            Msg::Bye,
+        ];
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_msg(&mut wire, m).unwrap();
+        }
+        let mut asm = FrameAssembler::new();
+        asm.feed(&wire);
+        for expect in &msgs {
+            let frame = asm.next_frame().unwrap().expect("complete frame buffered");
+            assert_eq!(&frame.decode().unwrap(), expect);
+        }
+        assert!(asm.next_frame().unwrap().is_none());
+        assert_eq!(asm.buffered(), 0);
+    }
+
+    #[test]
+    fn assembler_survives_byte_at_a_time_delivery() {
+        let msg = Msg::Features {
+            frame_id: 5,
+            device_id: 1,
+            tensor: HostTensor::new(vec![3], vec![0.5, -0.5, 9.0]).unwrap(),
+            session: "s".into(),
+            capture_micros: 0,
+        };
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &msg).unwrap();
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        for b in &wire {
+            asm.feed(std::slice::from_ref(b));
+            while let Some(f) = asm.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].decode().unwrap(), msg);
+    }
+
+    #[test]
+    fn assembler_framed_bytes_are_byte_identical() {
+        let msg = Msg::FeaturesQ {
+            frame_id: 11,
+            device_id: 1,
+            tensor: crate::net::QuantTensor {
+                shape: vec![2],
+                min: 0.0,
+                scale: 0.5,
+                data: vec![7, 9],
+            },
+            session: "tee".into(),
+            capture_micros: 123,
+        };
+        let wire = encode_frame(&msg).unwrap();
+        let mut asm = FrameAssembler::new();
+        asm.feed(&wire);
+        let frame = asm.next_frame().unwrap().unwrap();
+        assert!(frame.is_features());
+        assert_eq!(frame.framed_bytes(), wire, "trace tee must reproduce the wire exactly");
+    }
+
+    #[test]
+    fn assembler_rejects_desynced_streams() {
+        let mut asm = FrameAssembler::new();
+        asm.feed(b"XXXXHELLO-not-a-frame");
+        assert!(asm.next_frame().is_err(), "bad magic must error, not scan forward");
+
+        let mut asm = FrameAssembler::new();
+        let mut head = Vec::new();
+        head.extend_from_slice(&MAGIC);
+        head.push(3);
+        head.extend_from_slice(&(u32::MAX).to_le_bytes());
+        asm.feed(&head);
+        assert!(asm.next_frame().is_err(), "oversized payload length must error");
     }
 
     /// Hand-build a frame the way pre-session clients did (payload

@@ -16,7 +16,10 @@
 //! 4. drains, settles past the sync deadline, stops the server, and
 //! 5. reports per-session end-to-end latency (device capture → decoded
 //!    detections at the `ResultSink`, via the `e2e` metric series) plus
-//!    the synchronizer's loss accounting — written as `BENCH_e2e.json`.
+//!    the synchronizer's loss accounting — written as `BENCH_e2e.json`,
+//!    with a fleet-scale digest (sessions vs. pooled p95 e2e vs.
+//!    backend-call occupancy and connection counts) as
+//!    `BENCH_scale.json`.
 //!
 //! Scenarios run with **zero artifacts on disk**: when `model_meta.json`
 //! is absent a reduced synthetic meta is materialized in a temp dir and
@@ -27,7 +30,7 @@ use crate::cli::Args;
 use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
 use crate::coordinator::device::{run_device, DeviceConfig, DeviceReport};
 use crate::coordinator::scheduler::LossPolicy;
-use crate::coordinator::server::{run_server_until, ServerConfig};
+use crate::coordinator::server::{run_server_until, ServerConfig, ServerStop};
 use crate::coordinator::session::SessionConfig;
 use crate::net::{read_msg, write_msg, ImpairConfig, Msg, DEFAULT_SESSION};
 use crate::runtime::BackendKind;
@@ -35,7 +38,6 @@ use crate::utils::json::Json;
 use crate::utils::rng::Pcg64;
 use crate::utils::stats;
 use crate::voxel::Point;
-use crate::sync::atomic::{AtomicBool, Ordering};
 use crate::sync::time::Instant;
 use crate::sync::{thread, Arc};
 use anyhow::{anyhow, Context, Result};
@@ -134,7 +136,7 @@ pub struct ScenarioSpec {
 impl ScenarioSpec {
     /// Names `ScenarioSpec::builtin` accepts.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["ci-smoke", "smoke", "churn"]
+        &["ci-smoke", "smoke", "churn", "scale-200", "scale-1k"]
     }
 
     /// A named built-in scenario.
@@ -146,6 +148,12 @@ impl ScenarioSpec {
     ///   sessions (ZeroFill and Drop), deterministic loss, quantization
     ///   on one uplink, delay+jitter on another.
     /// - `churn` — device dropout mid-run and a late-joining device.
+    /// - `scale-200` — 100 sessions × 2 devices (200 connections plus
+    ///   100 subscribers) through the event-loop server; the CI scale
+    ///   gate. Fits comfortably under a 1024 fd limit.
+    /// - `scale-1k` — 500 sessions × 2 devices (1000 connections plus
+    ///   500 subscribers); needs `ulimit -n` ≥ 8192 (see
+    ///   docs/BENCHMARKS.md, which also documents a 10k JSON spec).
     pub fn builtin(name: &str) -> Result<ScenarioSpec> {
         let base = ScenarioSpec {
             name: name.to_string(),
@@ -238,11 +246,45 @@ impl ScenarioSpec {
                 ],
                 ..base
             }),
+            "scale-200" => Ok(Self::scale_fleet(100, base)),
+            "scale-1k" => Ok(Self::scale_fleet(500, base)),
             other => anyhow::bail!(
                 "unknown scenario {other:?} (built-ins: {})",
                 Self::builtin_names().join(", ")
             ),
         }
+    }
+
+    /// Fleet-scale benchmark template: `n_sessions` sessions × 2 devices
+    /// each, integration variants rotating so the batch planner sees a
+    /// mixed tail population, unshaped uplinks (connection handling is
+    /// the subject, not the link), joins staggered across ~1 s, and
+    /// micro-batching on so `BENCH_scale.json` gets real backend-call
+    /// occupancy numbers.
+    fn scale_fleet(n_sessions: usize, base: ScenarioSpec) -> ScenarioSpec {
+        let variants = [IntegrationKind::Max, IntegrationKind::ConvK1, IntegrationKind::ConvK3];
+        let mut sessions = Vec::with_capacity(n_sessions);
+        let mut devices = Vec::with_capacity(n_sessions * 2);
+        for i in 0..n_sessions {
+            let sname = format!("s{i:03}");
+            sessions.push(SessionSpec {
+                name: sname.clone(),
+                variant: variants[i % variants.len()],
+                deadline: Duration::from_millis(250),
+                policy: LossPolicy::ZeroFill,
+            });
+            for dev in 0..2 {
+                devices.push(DeviceSpec {
+                    session: sname.clone(),
+                    device_id: dev,
+                    frames: 4,
+                    start_delay: Duration::from_millis(((i * 2 + dev) * 7 % 1000) as u64),
+                    bandwidth_bps: None,
+                    ..DeviceSpec::default()
+                });
+            }
+        }
+        ScenarioSpec { sessions, devices, max_batch: 4, ..base }
     }
 
     /// Parse a scenario from its JSON form (`scmii scenario --spec f.json`).
@@ -487,6 +529,28 @@ pub struct DeviceRow {
     pub report: DeviceReport,
 }
 
+/// Server-side connection and batching accounting for one run — the
+/// scale-benchmark columns of `BENCH_scale.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServerStats {
+    /// Connections the event loop accepted over the run.
+    pub conn_accepted: u64,
+    /// Highest number of simultaneously open connections.
+    pub conn_peak: u64,
+    /// Connections closed (every accepted one, once the run drains).
+    pub conn_closed: u64,
+    /// Result frames dropped across all sessions because a slow
+    /// subscriber's bounded queue overflowed.
+    pub sink_dropped: u64,
+    /// Stacked backend calls the batch planner issued (0 = batching off).
+    pub batch_backend_calls: u64,
+    /// Frames carried by those stacked calls.
+    pub batch_frames: u64,
+    /// Mean frames per backend call over the `batch_occupancy` series
+    /// (0 when batching is off).
+    pub batch_occupancy_mean: f64,
+}
+
 /// The full scenario outcome, serialized as `BENCH_e2e.json`.
 #[derive(Clone, Debug)]
 pub struct ScenarioReport {
@@ -498,6 +562,8 @@ pub struct ScenarioReport {
     pub sessions: Vec<SessionReport>,
     /// Per-device outcomes.
     pub devices: Vec<DeviceRow>,
+    /// Server-side connection + batching accounting.
+    pub server: ServerStats,
 }
 
 fn ms_summary(xs_secs: &[f64]) -> Json {
@@ -573,6 +639,41 @@ impl ScenarioReport {
                     .collect(),
             ),
         );
+        j.set("server", self.server_json());
+        j
+    }
+
+    fn server_json(&self) -> Json {
+        let sv = &self.server;
+        let mut o = Json::obj();
+        o.set("conn_accepted", Json::Num(sv.conn_accepted as f64))
+            .set("conn_peak", Json::Num(sv.conn_peak as f64))
+            .set("conn_closed", Json::Num(sv.conn_closed as f64))
+            .set("sink_dropped", Json::Num(sv.sink_dropped as f64))
+            .set("batch_backend_calls", Json::Num(sv.batch_backend_calls as f64))
+            .set("batch_frames", Json::Num(sv.batch_frames as f64))
+            .set("batch_occupancy_mean", Json::Num(sv.batch_occupancy_mean));
+        o
+    }
+
+    /// Serialize to the `BENCH_scale.json` schema (see
+    /// `docs/BENCHMARKS.md`): the fleet-scale headline view — sessions
+    /// and connections hosted vs. pooled p95 end-to-end latency vs.
+    /// backend-call occupancy — without the per-frame and per-device
+    /// detail of `BENCH_e2e.json`.
+    pub fn scale_json(&self) -> Json {
+        let pooled: Vec<f64> = self.sessions.iter().flat_map(|s| s.e2e_secs.clone()).collect();
+        let frames_done: u64 = self.sessions.iter().map(|s| s.frames_done).sum();
+        let results: u64 = self.sessions.iter().map(|s| s.results_received).sum();
+        let mut j = Json::obj();
+        j.set("scenario", Json::Str(self.scenario.clone()))
+            .set("backend", Json::Str(self.backend.clone()))
+            .set("sessions", Json::Num(self.sessions.len() as f64))
+            .set("devices", Json::Num(self.devices.len() as f64))
+            .set("frames_done", Json::Num(frames_done as f64))
+            .set("results_received", Json::Num(results as f64))
+            .set("e2e_ms", ms_summary(&pooled))
+            .set("server", self.server_json());
         j
     }
 
@@ -614,6 +715,11 @@ impl ScenarioReport {
                 d.report.impair.reordered,
             ));
         }
+        out.push_str(&format!(
+            "  server: {} conns accepted (peak {} open), {} result frames dropped on slow \
+             subscribers\n",
+            self.server.conn_accepted, self.server.conn_peak, self.server.sink_dropped,
+        ));
         out
     }
 }
@@ -744,7 +850,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         }
     }
 
-    let stop = Arc::new(AtomicBool::new(false));
+    let stop = ServerStop::new();
     let server = {
         let paths = paths.clone();
         let cfg = server_cfg.clone();
@@ -752,7 +858,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         thread::spawn(move || run_server_until(&paths, &cfg, stop))
     };
     if let Err(wait_err) = wait_for_port(port, Duration::from_secs(20)) {
-        stop.store(true, Ordering::SeqCst);
+        stop.stop();
         return match server.join() {
             Ok(Err(e)) => Err(e.context("scenario server failed to start")),
             _ => Err(wait_err),
@@ -801,7 +907,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
                                 });
                             if timed_out {
                                 // Idle: keep polling until the run ends.
-                                if stop_flag.load(Ordering::SeqCst) {
+                                if stop_flag.is_set() {
                                     break;
                                 }
                                 continue;
@@ -815,10 +921,10 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
             }),
         ));
     }
-    // Subscribe carries no ack; give the server's connection threads a
-    // beat to attach the sinks before the fleet starts emitting, so the
-    // collectors see frame 0 (accept-loop latency is ~20 ms; this is a
-    // wide margin, not a correctness condition for the server itself).
+    // Subscribe carries no ack; give the server's event loop a beat to
+    // accept the connections and attach the sinks before the fleet
+    // starts emitting, so the collectors see frame 0 (this is a wide
+    // margin, not a correctness condition for the server itself).
     thread::sleep(Duration::from_millis(300));
 
     // The fleet. Each worker owns its clouds, config, and backend.
@@ -878,11 +984,12 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         spec.settle
     };
     thread::sleep(settle);
-    stop.store(true, Ordering::SeqCst);
-    let registry = server
+    stop.stop();
+    let run = server
         .join()
         .map_err(|_| anyhow!("server thread panicked"))?
         .context("scenario server failed")?;
+    let registry = run.registry;
 
     let mut results_by_session: BTreeMap<String, Vec<(u64, usize, u64, u64)>> = BTreeMap::new();
     for (name, h) in collectors {
@@ -900,11 +1007,13 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     }
 
     let mut sessions = Vec::new();
+    let mut sink_dropped = 0u64;
     for s in &spec.sessions {
         let sess = registry
             .get(&s.name)
             .with_context(|| format!("session {:?} missing from registry", s.name))?;
         let m = sess.metrics();
+        sink_dropped += m.counter("sink_dropped");
         // Subscriber-observed latency: capture stamp echoed in the
         // Result vs. wall clock at receipt (same machine, same clock).
         let e2e_wire_secs: Vec<f64> = results_by_session
@@ -934,11 +1043,32 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
             e2e_wire_secs,
         });
     }
+    let (batch_backend_calls, batch_frames, batch_occupancy_mean) = match &run.planner_metrics {
+        Some(pm) => {
+            let occ = pm.samples("batch_occupancy");
+            (
+                pm.counter("batch_backend_calls"),
+                pm.counter("batch_frames"),
+                if occ.is_empty() { 0.0 } else { stats::mean(&occ) },
+            )
+        }
+        None => (0, 0, 0.0),
+    };
+    let server = ServerStats {
+        conn_accepted: run.server_metrics.counter("conn_accepted"),
+        conn_peak: run.server_metrics.counter("conn_peak"),
+        conn_closed: run.server_metrics.counter("conn_closed"),
+        sink_dropped,
+        batch_backend_calls,
+        batch_frames,
+        batch_occupancy_mean,
+    };
     Ok(ScenarioReport {
         scenario: spec.name.clone(),
         backend: spec.backend.name().to_string(),
         sessions,
         devices,
+        server,
     })
 }
 
@@ -994,6 +1124,9 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
     let out = out_dir.join("BENCH_e2e.json");
     crate::utils::json::write_file(&out, &report.to_json())?;
     println!("wrote {}", out.display());
+    let scale_out = out_dir.join("BENCH_scale.json");
+    crate::utils::json::write_file(&scale_out, &report.scale_json())?;
+    println!("wrote {}", scale_out.display());
 
     // Hard-gate semantics for CI: a session that produced nothing means
     // the fleet path is broken (built-ins are designed to always emit).
@@ -1178,6 +1311,15 @@ mod tests {
                     impair: Default::default(),
                 },
             }],
+            server: ServerStats {
+                conn_accepted: 2,
+                conn_peak: 2,
+                conn_closed: 2,
+                sink_dropped: 1,
+                batch_backend_calls: 2,
+                batch_frames: 3,
+                batch_occupancy_mean: 1.5,
+            },
         };
         let j = report.to_json();
         let s = &j.req("sessions").unwrap().as_arr().unwrap()[0];
@@ -1200,6 +1342,48 @@ mod tests {
         );
         let d = &j.req("devices").unwrap().as_arr().unwrap()[0];
         assert_eq!(d.req("frames_sent").unwrap().as_usize().unwrap(), 3);
+        let sv = j.req("server").unwrap();
+        assert_eq!(sv.req("conn_accepted").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(sv.req("sink_dropped").unwrap().as_usize().unwrap(), 1);
         assert!(report.summary().contains("session a"));
+        assert!(report.summary().contains("2 conns accepted"));
+
+        // The fleet-scale digest pools sessions and carries the server
+        // accounting through.
+        let sj = report.scale_json();
+        assert_eq!(sj.req("sessions").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(sj.req("devices").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(sj.req("frames_done").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(sj.req("results_received").unwrap().as_usize().unwrap(), 3);
+        let e2e = sj.req("e2e_ms").unwrap();
+        assert_eq!(e2e.req("n").unwrap().as_usize().unwrap(), 3);
+        assert!((e2e.req("p50").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
+        let sv = sj.req("server").unwrap();
+        assert_eq!(sv.req("conn_peak").unwrap().as_usize().unwrap(), 2);
+        assert!(
+            (sv.req("batch_occupancy_mean").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn scale_builtins_match_fleet_shape() {
+        let meta = scenario_test_meta();
+        for (name, n_sessions) in [("scale-200", 100usize), ("scale-1k", 500usize)] {
+            let spec = ScenarioSpec::builtin(name).unwrap();
+            spec.validate(&meta).unwrap_or_else(|e| panic!("builtin {name}: {e:#}"));
+            assert_eq!(spec.sessions.len(), n_sessions);
+            assert_eq!(spec.devices.len(), n_sessions * 2, "two devices per session");
+            assert!(spec.max_batch > 1, "scale runs exercise the batch planner");
+            assert!(
+                spec.devices.iter().all(|d| d.bandwidth_bps.is_none()),
+                "scale runs measure connection handling, not the shaper"
+            );
+            // Distinct variants so the planner sees a mixed tail
+            // population; staggered joins so accept bursts are realistic.
+            let distinct: std::collections::BTreeSet<&str> =
+                spec.sessions.iter().map(|s| s.variant.name()).collect();
+            assert!(distinct.len() >= 3);
+            assert!(spec.devices.iter().any(|d| d.start_delay > Duration::ZERO));
+        }
     }
 }

@@ -9,7 +9,7 @@
 //! primitives under this cfg, so the planner, the pool, and the channel
 //! run unmodified.
 //!
-//! Three protocols are modeled (see `docs/ARCHITECTURE.md`,
+//! Four protocols are modeled (see `docs/ARCHITECTURE.md`,
 //! "Concurrency model & verification"):
 //!
 //! 1. **BatchPlanner leadership** — concurrent callers on one bucket:
@@ -24,6 +24,12 @@
 //!    double-buffer the device pipeline writes frames through: no frame
 //!    is lost or reordered, and dropping either side shuts the other
 //!    down instead of leaving it blocked forever.
+//! 4. **Event-loop wake / ready-queue handoff** — the server's
+//!    `net::poll::ReadyQueue` (enqueue-then-wake producers, clear-pipe-
+//!    then-drain consumer): no interleaving leaves a pushed completion
+//!    behind a sleeping poll (an undrained item always implies a
+//!    pending wake), and the shutdown sequence — stop accepting, join
+//!    workers, final drain — delivers every in-flight completion.
 //!
 //! Every model spawns at most 2 extra threads (loom's default
 //! `MAX_THREADS` is 4, counting the model's own thread).
@@ -31,9 +37,10 @@
 
 use anyhow::Result;
 use scmii::coordinator::scheduler::{BatchConfig, BatchPlanner};
+use scmii::net::poll::{ReadyQueue, WakeSignal};
 use scmii::runtime::pool::{BackendPool, PoolExecutor};
 use scmii::runtime::{ExecBackend, HostTensor};
-use scmii::sync::{mpsc, thread, Arc};
+use scmii::sync::{lock_or_recover, mpsc, thread, Arc, Mutex};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
@@ -307,5 +314,109 @@ fn one_slot_channel_writer_drop_ends_stream() {
         let got: Vec<u64> = rx.into_iter().collect();
         writer.join().expect("writer thread");
         assert_eq!(got, vec![7], "final frame drained before end-of-stream");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Protocol 4: event-loop wake / ready-queue handoff.
+// ---------------------------------------------------------------------
+
+/// The self-pipe, modeled: the production `Waker` writes a byte into a
+/// nonblocking pipe that `poll(2)` reports readable; here the pending
+/// byte is a loom-modeled `Mutex<bool>` so the handoff ordering is
+/// explored without real fds. (The shim's atomics stay `std` even under
+/// loom, so a Mutex — not an AtomicBool — is what makes loom see this
+/// edge.)
+struct PipeFlag {
+    pending: Mutex<bool>,
+}
+
+impl PipeFlag {
+    fn new() -> PipeFlag {
+        PipeFlag { pending: Mutex::new(false) }
+    }
+
+    /// The consumer's "drain the wake pipe" step: returns whether a
+    /// wake was pending and clears it.
+    fn take(&self) -> bool {
+        std::mem::take(&mut *lock_or_recover(&self.pending))
+    }
+}
+
+impl WakeSignal for PipeFlag {
+    fn wake(&self) {
+        *lock_or_recover(&self.pending) = true;
+    }
+}
+
+/// No lost wakeup between enqueue and the self-pipe signal. A producer
+/// races one full consumer poll iteration (clear pipe, then drain). In
+/// every interleaving, either that iteration already delivered the
+/// completion, or — because `ReadyQueue::push` enqueues *before* it
+/// wakes — the wake is still pending afterwards, so the loop's next
+/// poll cannot sleep past the item. The dual ordering (consumer clears
+/// the pipe before draining the queue) is what makes the implication
+/// hold; this model is the proof that neither side's order can be
+/// flipped.
+#[test]
+fn ready_queue_push_never_strands_an_item_behind_a_sleeping_poll() {
+    model(|| {
+        let pipe = Arc::new(PipeFlag::new());
+        let queue: Arc<ReadyQueue<u32>> =
+            Arc::new(ReadyQueue::new(Arc::clone(&pipe) as Arc<dyn WakeSignal>));
+
+        let q = Arc::clone(&queue);
+        let producer = thread::spawn(move || q.push(7));
+
+        // One racing poll iteration: pipe first, then queue.
+        let mut seen = Vec::new();
+        if pipe.take() {
+            queue.drain_into(&mut seen);
+            // A wake is fired only after its item is enqueued.
+            assert_eq!(seen, vec![7], "woken poll must find the completion");
+        }
+
+        producer.join().expect("producer thread");
+
+        // The invariant: an undelivered item implies a pending wake.
+        if seen.is_empty() {
+            assert!(pipe.take(), "undrained completion with no pending wake = lost wakeup");
+            queue.drain_into(&mut seen);
+        }
+        assert_eq!(seen, vec![7]);
+        assert!(queue.is_empty());
+    });
+}
+
+/// Clean shutdown drains in-flight completions. A worker finishes two
+/// dispatch jobs while the loop is stopping; the shutdown sequence —
+/// any number of regular poll iterations, then join the workers, then
+/// one final drain — must deliver both completions exactly once, in
+/// completion order, in every interleaving.
+#[test]
+fn ready_queue_shutdown_drain_loses_no_completion() {
+    model(|| {
+        let pipe = Arc::new(PipeFlag::new());
+        let queue: Arc<ReadyQueue<u32>> =
+            Arc::new(ReadyQueue::new(Arc::clone(&pipe) as Arc<dyn WakeSignal>));
+
+        let q = Arc::clone(&queue);
+        let worker = thread::spawn(move || {
+            q.push(1);
+            q.push(2);
+        });
+
+        // A poll iteration racing the worker's completions.
+        let mut seen = Vec::new();
+        if pipe.take() {
+            queue.drain_into(&mut seen);
+        }
+
+        // Shutdown: join the pool, then the final drain.
+        worker.join().expect("worker thread");
+        queue.drain_into(&mut seen);
+
+        assert_eq!(seen, vec![1, 2], "every completion delivered once, in order");
+        assert!(queue.is_empty());
     });
 }

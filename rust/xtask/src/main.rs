@@ -1,6 +1,6 @@
 //! Repo-invariant lints: `cargo run -p xtask -- lint`.
 //!
-//! Four hard CI gates, each protecting an invariant the compiler cannot
+//! Five hard CI gates, each protecting an invariant the compiler cannot
 //! see (`.github/workflows/ci.yml` runs this as a required step):
 //!
 //! 1. **Lock hygiene** — serving-path modules must not call
@@ -27,6 +27,14 @@
 //!    `.to_vec(`: the per-frame inner loops take scratch from the
 //!    `Arena` or from caller-owned buffers, and this keeps a casual
 //!    refactor from quietly re-introducing a per-frame allocation.
+//! 5. **No per-connection threads** — `rust/src/coordinator/server.rs`
+//!    may not call `thread::spawn` / `spawn_named` in non-test code:
+//!    connections are multiplexed on the readiness event loop and
+//!    decode/dispatch runs on the fixed worker pool, so fleet size is
+//!    bounded by fds, not threads. A legitimate listener-lifecycle or
+//!    pool-plumbing spawn is exempted by a standalone
+//!    `// xtask: lifecycle-spawn` line immediately documenting it;
+//!    dangling markers are themselves violations.
 //!
 //! The lints are textual/structural: the crate deliberately does not
 //! depend on `scmii` (a library that fails to build must not take its
@@ -87,6 +95,19 @@ const HOT_FORBIDDEN: &[(&str, &str)] = &[
     (".to_vec(", "allocates a copy per call"),
 ];
 
+/// The connection server: non-test code here may not spawn threads (one
+/// thread per accepted connection is the regression this gate forbids).
+const CONN_SPAWN_FILE: &str = "rust/src/coordinator/server.rs";
+
+/// A line consisting of exactly this comment exempts the *next* spawn
+/// call in [`CONN_SPAWN_FILE`] — for listener-lifecycle or worker-pool
+/// plumbing that legitimately owns a thread.
+const LIFECYCLE_MARKER: &str = "// xtask: lifecycle-spawn";
+
+/// Spawn call patterns the conn-spawn lint looks for (condensed text, so
+/// rustfmt wrapping cannot hide them).
+const SPAWN_PATTERNS: &[&str] = &["thread::spawn(", "spawn_named("];
+
 fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
@@ -103,7 +124,10 @@ fn main() -> ExitCode {
             ExitCode::from(2)
         }
         Ok(violations) if violations.is_empty() => {
-            println!("xtask lint: OK (lock hygiene, wire spec, metric registry, hot paths)");
+            println!(
+                "xtask lint: OK (lock hygiene, wire spec, metric registry, hot paths, \
+                 conn spawns)"
+            );
             ExitCode::SUCCESS
         }
         Ok(violations) => {
@@ -149,6 +173,7 @@ fn lint(root: &Path) -> Result<Vec<Violation>, String> {
     lint_wire_spec(root, &mut violations)?;
     lint_metric_registry(root, &mut violations)?;
     lint_hot_paths(root, &mut violations)?;
+    lint_conn_spawn(root, &mut violations)?;
     Ok(violations)
 }
 
@@ -1049,6 +1074,81 @@ fn next_fn_keyword(src: &str, classes: &[Class], from: usize) -> Option<usize> {
     None
 }
 
+// ---------------------------------------------------------------------------
+// Lint 5: no per-connection thread spawns in the server.
+
+fn lint_conn_spawn(root: &Path, violations: &mut Vec<Violation>) -> Result<(), String> {
+    let path = root.join(CONN_SPAWN_FILE);
+    let src = read(&path)?;
+    for (line, msg) in scan_conn_spawn_source(&src) {
+        violations.push(Violation { file: rel(root, &path), line, msg });
+    }
+    Ok(())
+}
+
+/// Scan the server source for spawn calls in non-test code and return
+/// `(line, message)` findings for every one not exempted by a preceding
+/// standalone [`LIFECYCLE_MARKER`] line. Markers pair greedily with the
+/// first unexempted spawn on a later line; a marker that pairs with
+/// nothing is itself a finding (stale exemptions must not accumulate).
+fn scan_conn_spawn_source(src: &str) -> Vec<(usize, String)> {
+    let mut classes = classify(src);
+    let test_spans = mask_test_mods(src, &mut classes);
+
+    // Standalone marker lines outside test modules, by line number.
+    let mut markers: Vec<usize> = Vec::new();
+    let mut offset = 0usize;
+    for (idx, line) in src.split_inclusive('\n').enumerate() {
+        let start = offset;
+        offset += line.len();
+        if line.trim() == LIFECYCLE_MARKER
+            && !test_spans.iter().any(|&(s, e)| start >= s && start <= e)
+        {
+            markers.push(idx + 1);
+        }
+    }
+
+    // Spawn call sites in non-test code, by line number.
+    let c = condense(src, &classes, false);
+    let mut spawns: Vec<usize> = Vec::new();
+    for pat in SPAWN_PATTERNS {
+        let mut from = 0;
+        while let Some(at) = c.text[from..].find(pat).map(|r| from + r) {
+            from = at + pat.len();
+            spawns.push(c.lines[at]);
+        }
+    }
+    spawns.sort_unstable();
+
+    let mut out = Vec::new();
+    let mut exempt = vec![false; spawns.len()];
+    for &mline in &markers {
+        match (0..spawns.len()).find(|&i| !exempt[i] && spawns[i] > mline) {
+            Some(i) => exempt[i] = true,
+            None => out.push((
+                mline,
+                format!("`{LIFECYCLE_MARKER}` marker with no spawn call following it"),
+            )),
+        }
+    }
+    for (i, &sline) in spawns.iter().enumerate() {
+        if !exempt[i] {
+            out.push((
+                sline,
+                format!(
+                    "thread spawn in the connection server: connections are multiplexed \
+                     on the readiness event loop and dispatch runs on the worker pool \
+                     (one thread per accepted connection is the exact regression this \
+                     gate forbids); a legitimate lifecycle/pool spawn must be preceded \
+                     by a standalone `{LIFECYCLE_MARKER}` line"
+                ),
+            ));
+        }
+    }
+    out.sort_by_key(|&(line, _)| line);
+    out
+}
+
 /// Index of the `}` matching the `{` at `open`, counting only
 /// Code-class braces (raw source, unlike [`brace_block`]'s condensed
 /// input).
@@ -1254,6 +1354,48 @@ mod tests {
         let src = "#[cfg(test)]\nmod tests {\n    // xtask: hot\n    fn t() { let _ = \
                    vec![1]; }\n}\n";
         assert!(scan_hot_source(src).is_empty());
+    }
+
+    #[test]
+    fn conn_spawns_are_flagged_with_lines() {
+        let src = "fn serve() {\n    let h = thread::spawn(move || handle_conn(s));\n}\n\
+                   fn pool() {\n    spawn_named(\"w\", f);\n}\n";
+        let findings = scan_conn_spawn_source(src);
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert_eq!(findings[0].0, 2);
+        assert_eq!(findings[1].0, 5);
+        assert!(findings[0].1.contains("event loop"), "{findings:?}");
+    }
+
+    #[test]
+    fn lifecycle_marker_exempts_next_spawn_only() {
+        let src = "fn run() {\n    // xtask: lifecycle-spawn\n    let pool = \
+                   thread::spawn(worker);\n    let per_conn = thread::spawn(conn);\n}\n";
+        let findings = scan_conn_spawn_source(src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].0, 4, "the second, unmarked spawn is the violation");
+    }
+
+    #[test]
+    fn dangling_lifecycle_marker_is_a_finding() {
+        let src = "fn run() {\n    // xtask: lifecycle-spawn\n    let x = 1;\n}\n";
+        let findings = scan_conn_spawn_source(src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].1.contains("no spawn call"), "{findings:?}");
+        assert_eq!(findings[0].0, 2);
+    }
+
+    #[test]
+    fn conn_spawns_in_tests_comments_and_strings_are_exempt() {
+        let src = "//! the old server used thread::spawn( per connection\n\
+                   fn run() {\n    let s = \"thread::spawn(\";\n    let _ = s;\n}\n\
+                   #[cfg(all(test, not(loom)))]\nmod tests {\n    fn t() { \
+                   std::thread::spawn(|| {}).join().unwrap(); }\n}\n";
+        assert!(
+            scan_conn_spawn_source(src).is_empty(),
+            "{:?}",
+            scan_conn_spawn_source(src)
+        );
     }
 
     /// The real repo must lint clean — this is the same check CI runs,
