@@ -1,6 +1,7 @@
 //! `scmii bench` — machine-readable micro-benchmarks of the serving hot
 //! path, emitted as `BENCH_decode.json`, `BENCH_integrate.json`,
-//! `BENCH_tail.json` and `BENCH_batch.json` so the performance trajectory
+//! `BENCH_tail.json`, `BENCH_dgram.json` and `BENCH_batch.json` so the
+//! performance trajectory
 //! is tracked from one PR to the next (each entry: op, p50/p95 seconds,
 //! backend, samples; batch entries add batch size and backend-calls vs
 //! frames accounting). The system-level counterpart is `BENCH_e2e.json`
@@ -244,6 +245,74 @@ fn bench_batch(_bench: &mut Bench) -> Result<Vec<Json>> {
     Ok(Vec::new())
 }
 
+/// Datagram chunking, in-order reassembly, and XOR-parity recovery for
+/// the UDP feature uplink (`BENCH_dgram.json`). The payload is one
+/// framed full-precision `Features` message at the quarter-resolution
+/// bench shape (~32 KiB → ~30 data chunks), so the numbers track the
+/// per-frame cost a device and the server pay on top of the TCP path.
+fn bench_dgram(bench: &mut Bench) -> Result<Vec<Entry>> {
+    use crate::net::{chunk_frame, encode_frame, DgramAssembler, Msg, CHUNK_PAYLOAD,
+                     DEFAULT_SESSION};
+    use crate::runtime::HostTensor;
+
+    let mut rng = Pcg64::new(45);
+    let mut tensor = HostTensor::zeros(&[4, 16, 16, 8]);
+    for v in tensor.data.iter_mut() {
+        *v = rng.uniform_f32();
+    }
+    let msg = Msg::Features {
+        frame_id: 1,
+        device_id: 0,
+        tensor,
+        session: DEFAULT_SESSION.into(),
+        capture_micros: 0,
+    };
+    let framed = encode_frame(&msg)?;
+    const FEC_K: u32 = 4;
+    let dgrams = chunk_frame(&framed, DEFAULT_SESSION, 0, 1, FEC_K)?;
+    let n_data = framed.len().div_ceil(CHUNK_PAYLOAD).max(1);
+    let (data, parity) = dgrams.split_at(n_data);
+
+    let mut out = Vec::new();
+    let s = bench.run("dgram_chunk", || {
+        let d = chunk_frame(&framed, DEFAULT_SESSION, 0, 1, FEC_K).expect("chunk");
+        std::hint::black_box(d.len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    let s = bench.run("dgram_assemble", || {
+        let mut asm = DgramAssembler::new();
+        let mut done = None;
+        for d in data {
+            done = asm.feed(d);
+        }
+        let done = done.expect("in-order assembly must complete on the last chunk");
+        std::hint::black_box(done.frame.len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    let s = bench.run("dgram_fec_recover", || {
+        let mut asm = DgramAssembler::new();
+        let mut done = None;
+        for (i, d) in data.iter().enumerate() {
+            if i % FEC_K as usize == 0 {
+                continue; // one loss per parity group
+            }
+            if let Some(f) = asm.feed(d) {
+                done = Some(f);
+            }
+        }
+        for p in parity {
+            if let Some(f) = asm.feed(p) {
+                done = Some(f);
+            }
+        }
+        let done = done.expect("parity must recover every single-loss group");
+        assert_eq!(done.frame.len(), framed.len());
+        std::hint::black_box(done.frame.len());
+    });
+    out.push(Entry::from_sample(s, "host"));
+    Ok(out)
+}
+
 /// `scmii bench` CLI entry.
 pub fn cmd_bench(args: &Args) -> Result<()> {
     args.check_known(&["out", "budget-ms", "warmup"])?;
@@ -264,6 +333,7 @@ pub fn cmd_bench(args: &Args) -> Result<()> {
     write_entries(&out_dir.join("BENCH_decode.json"), &bench_decode(&mut bench))?;
     write_entries(&out_dir.join("BENCH_integrate.json"), &bench_integrate(&mut bench))?;
     write_entries(&out_dir.join("BENCH_tail.json"), &bench_tail(&mut bench)?)?;
+    write_entries(&out_dir.join("BENCH_dgram.json"), &bench_dgram(&mut bench)?)?;
     let batch_rows = bench_batch(&mut bench)?;
     let batch_path = out_dir.join("BENCH_batch.json");
     crate::utils::json::write_file(&batch_path, &Json::Arr(batch_rows))
@@ -292,6 +362,7 @@ mod tests {
             "BENCH_decode.json",
             "BENCH_integrate.json",
             "BENCH_tail.json",
+            "BENCH_dgram.json",
             "BENCH_batch.json",
         ] {
             let j = crate::utils::json::read_file(&dir.join(f)).unwrap();

@@ -18,14 +18,44 @@
 use crate::cli::Args;
 use crate::config::{IntegrationKind, LatencyConfig, ModelMeta, Paths};
 use crate::metrics::Metrics;
-use crate::net::{ImpairConfig, ImpairStats, ImpairedLink, Msg, ShapedWriter};
+use crate::net::{
+    chunk_frame, encode_frame, DgramImpairer, ImpairConfig, ImpairStats, ImpairedLink, Msg,
+    ShapedWriter,
+};
 use crate::runtime::{build_backend, BackendKind, HostTensor};
 use crate::voxel::{points_to_tensor, Point};
 use crate::sync::time::Instant;
 use crate::sync::{mpsc, thread};
 use anyhow::{Context, Result};
-use std::net::TcpStream;
+use std::net::{TcpStream, UdpSocket};
 use std::time::Duration;
+
+/// How feature frames leave the device. Control messages (`Hello`,
+/// `Bye`) always go TCP; `Udp` moves only the feature uplink onto
+/// chunked datagrams with latest-wins reassembly and optional
+/// XOR-parity FEC (`docs/WIRE_PROTOCOL.md`, "Datagram transport").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    Tcp,
+    Udp,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> Result<Transport> {
+        match s {
+            "tcp" => Ok(Transport::Tcp),
+            "udp" => Ok(Transport::Udp),
+            other => anyhow::bail!("unknown transport {other:?} (expected tcp or udp)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Tcp => "tcp",
+            Transport::Udp => "udp",
+        }
+    }
+}
 
 /// Device worker configuration.
 #[derive(Clone, Debug)]
@@ -60,6 +90,15 @@ pub struct DeviceConfig {
     /// First frame id this worker emits (late-join scenarios: a device
     /// joining mid-run starts at the fleet's current frame index).
     pub start_frame: u64,
+    /// Feature-frame transport (`--transport udp`); control messages
+    /// stay TCP either way. With `Udp`, `impair` applies per datagram
+    /// instead of per frame and bandwidth shaping covers only the TCP
+    /// control link.
+    pub transport: Transport,
+    /// Datagram FEC group size (`--fec k`): one XOR-parity datagram per
+    /// `k` chunks, recovering any single loss per group without
+    /// retransmit. 0 = FEC off. Only meaningful with `Udp`.
+    pub fec_k: u32,
 }
 
 impl Default for DeviceConfig {
@@ -77,6 +116,8 @@ impl Default for DeviceConfig {
             pipelined: true,
             impair: None,
             start_frame: 0,
+            transport: Transport::Tcp,
+            fec_k: 0,
         }
     }
 }
@@ -236,7 +277,11 @@ pub fn run_device(
         Some(bw) => ShapedWriter::new(stream, bw),
         None => ShapedWriter::unshaped(stream),
     };
-    let mut link = ImpairedLink::new(writer, cfg.impair);
+    // With the datagram uplink, fault injection applies per datagram
+    // (below); the TCP control link stays clean so `Hello`/`Bye` always
+    // arrive and the wire bytes of the TCP mode stay byte-identical.
+    let link_impair = if cfg.transport == Transport::Tcp { cfg.impair } else { None };
+    let mut link = ImpairedLink::new(writer, link_impair);
     link.send(&Msg::Hello { device_id: cfg.device_id as u32, session: cfg.session.clone() })?;
 
     let n = frames.len().min(cfg.max_frames.max(1));
@@ -246,35 +291,81 @@ pub fn run_device(
     let start_frame = cfg.start_frame;
     let max_points = meta.grid.max_points;
 
-    let frame_times = pipeline_frames(
-        n,
-        start_frame,
-        cfg.period,
-        cfg.pipelined,
-        |frame_id| -> Result<Msg> {
-            let cloud = &frames[(frame_id - start_frame) as usize];
-            let capture_micros = crate::utils::unix_micros();
-            let input = HostTensor::new(
-                vec![max_points, 4],
-                points_to_tensor(cloud, max_points),
+    let mut produce = |frame_id: u64| -> Result<Msg> {
+        let cloud = &frames[(frame_id - start_frame) as usize];
+        let capture_micros = crate::utils::unix_micros();
+        let input = HostTensor::new(
+            vec![max_points, 4],
+            points_to_tensor(cloud, max_points),
+        )?;
+        let mut feat = backend.exec(&head_name, vec![input])?;
+        anyhow::ensure!(!feat.is_empty(), "head {head_name:?} returned no output");
+        let tensor = feat.remove(0);
+        Ok(if quantize {
+            Msg::FeaturesQ {
+                frame_id,
+                device_id,
+                tensor: crate::net::quantize(&tensor),
+                session: session.clone(),
+                capture_micros,
+            }
+        } else {
+            Msg::Features { frame_id, device_id, tensor, session: session.clone(), capture_micros }
+        })
+    };
+
+    let (frame_times, impair_stats) = match cfg.transport {
+        Transport::Tcp => {
+            let times = pipeline_frames(
+                n,
+                start_frame,
+                cfg.period,
+                cfg.pipelined,
+                &mut produce,
+                |_frame_id, msg| link.send(&msg),
             )?;
-            let mut feat = backend.exec(&head_name, vec![input])?;
-            anyhow::ensure!(!feat.is_empty(), "head {head_name:?} returned no output");
-            let tensor = feat.remove(0);
-            Ok(if quantize {
-                Msg::FeaturesQ {
-                    frame_id,
-                    device_id,
-                    tensor: crate::net::quantize(&tensor),
-                    session: session.clone(),
-                    capture_micros,
-                }
-            } else {
-                Msg::Features { frame_id, device_id, tensor, session: session.clone(), capture_micros }
-            })
-        },
-        |_frame_id, msg| link.send(&msg),
-    )?;
+            (times, link.stats())
+        }
+        Transport::Udp => {
+            let socket = UdpSocket::bind("0.0.0.0:0").context("bind datagram uplink")?;
+            socket
+                .connect(&cfg.server)
+                .with_context(|| format!("udp connect to {}", cfg.server))?;
+            let mut imp = DgramImpairer::new(cfg.impair);
+            let dg_session = cfg.session.clone();
+            let fec_k = cfg.fec_k;
+            let times = pipeline_frames(
+                n,
+                start_frame,
+                cfg.period,
+                cfg.pipelined,
+                &mut produce,
+                |frame_id, msg: Msg| {
+                    // Encode to the exact TCP framed bytes, then chunk:
+                    // the server reassembles byte-identical frames and
+                    // feeds them to the unchanged decode path.
+                    let framed = encode_frame(&msg)?;
+                    let mut tx = |d: &[u8]| -> Result<()> {
+                        socket.send(d).context("udp send")?;
+                        Ok(())
+                    };
+                    for dgram in
+                        chunk_frame(&framed, &dg_session, device_id, frame_id, fec_k)?
+                    {
+                        imp.send(dgram, &mut tx)?;
+                    }
+                    Ok(())
+                },
+            )?;
+            // Flush a datagram the reorder injector may still hold, so
+            // the final frame can complete server-side.
+            imp.finish(&mut |d: &[u8]| {
+                socket.send(d).context("udp send")?;
+                Ok(())
+            })?;
+            (times, imp.stats())
+        }
+    };
     link.send(&Msg::Bye)?;
 
     let metrics = Metrics::new();
@@ -283,7 +374,7 @@ pub fn run_device(
         metrics.record("tx", tx_secs);
     }
     log::info!("device {} done:\n{}", cfg.device_id, metrics.report());
-    Ok(DeviceReport { frame_times, impair: link.stats() })
+    Ok(DeviceReport { frame_times, impair: impair_stats })
 }
 
 /// `scmii device` CLI entry: stream frames from the dataset.
@@ -309,7 +400,10 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         "delay-ms",
         "jitter-ms",
         "reorder",
+        "dup",
         "impair-seed",
+        "transport",
+        "fec",
     ])?;
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
@@ -332,12 +426,19 @@ pub fn cmd_device(args: &Args) -> Result<()> {
     cfg.backend = BackendKind::parse(&args.str_or("backend", cfg.backend.name()))?;
     cfg.pipelined = !args.switch("no-pipeline");
     cfg.start_frame = args.u64_or("start-frame", 0)?;
+    cfg.transport = Transport::parse(&args.str_one_of("transport", &["tcp", "udp"], "tcp")?)?;
+    cfg.fec_k = args.u64_or("fec", 0)? as u32;
+    anyhow::ensure!(
+        cfg.transport == Transport::Udp || cfg.fec_k == 0,
+        "--fec applies to the datagram uplink; add --transport udp"
+    );
     let impair = ImpairConfig {
         loss: args.f64_or("loss", 0.0)?,
         drop_every: args.u64_or("drop-every", 0)?,
         delay: Duration::from_millis(args.u64_or("delay-ms", 0)?),
         jitter: Duration::from_millis(args.u64_or("jitter-ms", 0)?),
         reorder: args.f64_or("reorder", 0.0)?,
+        dup: args.f64_or("dup", 0.0)?,
         seed: args.u64_or("impair-seed", 1)?,
     };
     let clean = ImpairConfig { seed: impair.seed, ..Default::default() };
@@ -369,6 +470,16 @@ pub fn cmd_device(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
     use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn transport_parses_and_rejects_unknown() {
+        assert_eq!(Transport::parse("tcp").unwrap(), Transport::Tcp);
+        assert_eq!(Transport::parse("udp").unwrap(), Transport::Udp);
+        assert!(Transport::parse("sctp").is_err());
+        assert_eq!(Transport::Udp.name(), "udp");
+        assert_eq!(DeviceConfig::default().transport, Transport::Tcp, "udp is opt-in");
+        assert_eq!(DeviceConfig::default().fec_k, 0, "FEC is opt-in");
+    }
 
     #[test]
     fn run_device_rejects_out_of_range_device_id() {

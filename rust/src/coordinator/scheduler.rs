@@ -92,6 +92,13 @@ pub struct FrameSync {
     emitted: HashMap<u64, Instant>,
     /// Retention window for `emitted` records.
     emitted_horizon: Duration,
+    /// Latest-wins mode (datagram transport): a device's newer frame
+    /// makes its older submissions stale, and a pending frame that every
+    /// missing device has moved past is superseded — discarded without
+    /// emitting. Off by default; the TCP path is untouched.
+    latest_wins: bool,
+    /// Per-device newest frame id accepted (latest-wins bookkeeping).
+    newest: Vec<Option<u64>>,
     /// Frame ids discarded under [`LossPolicy::Drop`], awaiting collection.
     dropped_log: Vec<u64>,
     /// Running counters (reads are cheap; the session mirrors them into
@@ -112,6 +119,12 @@ pub struct SyncStats {
     pub late_arrivals: u64,
     /// Repeat submissions for a (frame, device) slot (ignored).
     pub duplicates: u64,
+    /// Latest-wins only: submissions older than the device's newest
+    /// accepted frame (counted and dropped, never integrated).
+    pub stale: u64,
+    /// Latest-wins only: pending frames discarded because every missing
+    /// device had already reported a newer frame.
+    pub superseded: u64,
 }
 
 impl FrameSync {
@@ -133,6 +146,8 @@ impl FrameSync {
             pending: HashMap::new(),
             emitted: HashMap::new(),
             emitted_horizon: DEFAULT_EMITTED_HORIZON,
+            latest_wins: false,
+            newest: vec![None; n_devices],
             dropped_log: Vec::new(),
             stats: SyncStats::default(),
         }
@@ -142,6 +157,18 @@ impl FrameSync {
     /// high-frame-rate deployments).
     pub fn set_emitted_horizon(&mut self, horizon: Duration) {
         self.emitted_horizon = horizon;
+    }
+
+    /// Enable latest-wins replacement (the datagram transport's
+    /// semantic): a submission older than its device's newest accepted
+    /// frame is counted [`SyncStats::stale`] and dropped, and a pending
+    /// frame is discarded ([`SyncStats::superseded`]) the moment every
+    /// device still missing from it has reported a newer frame — fresher
+    /// data replaced it, so it is *not* emitted, *not* logged as a
+    /// deadline drop, and leaves no emission record. Off by default: the
+    /// in-order TCP path keeps its exact historical behavior.
+    pub fn set_latest_wins(&mut self, on: bool) {
+        self.latest_wins = on;
     }
 
     /// Register features from a device. Returns the frame when complete.
@@ -163,6 +190,16 @@ impl FrameSync {
         if self.emitted.contains_key(&frame_id) {
             self.stats.late_arrivals += 1;
             return None;
+        }
+        if self.latest_wins {
+            if self.newest[device_id].map_or(false, |n| frame_id < n) {
+                self.stats.stale += 1;
+                return None;
+            }
+            if self.newest[device_id].map_or(true, |n| frame_id > n) {
+                self.newest[device_id] = Some(frame_id);
+                self.gc_superseded();
+            }
         }
         let pending = self.pending.entry(frame_id).or_insert_with(|| Pending {
             slots: vec![None; self.n_devices],
@@ -269,6 +306,33 @@ impl FrameSync {
     /// whether the frame was pending.
     pub fn abort(&mut self, frame_id: u64) -> bool {
         self.pending.remove(&frame_id).is_some()
+    }
+
+    /// Latest-wins gc: discard pending frames no future input can
+    /// complete — every device still missing from them has already
+    /// reported a newer frame, so their remaining slots can only ever
+    /// see stale submissions. Superseded frames are counted and
+    /// dropped silently: no emission record (`emitted_len` must not
+    /// grow) and no entry in the deadline drop log (`take_dropped`
+    /// reports frames *lost* at a deadline, not frames replaced by
+    /// fresher data).
+    fn gc_superseded(&mut self) {
+        let newest = &self.newest;
+        let superseded: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(&id, p)| {
+                p.slots
+                    .iter()
+                    .enumerate()
+                    .all(|(d, s)| s.is_some() || newest[d].map_or(false, |n| n > id))
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in superseded {
+            self.pending.remove(&id);
+            self.stats.superseded += 1;
+        }
     }
 
     fn gc_emitted(&mut self) {
@@ -810,6 +874,80 @@ mod tests {
         let ready = s.poll_expired();
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].capture_micros, 1234);
+    }
+
+    #[test]
+    fn latest_wins_drops_stale_and_supersedes_partials() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        s.set_latest_wins(true);
+        // Frame 1 partially assembled (device 0 only).
+        assert!(s.add(1, 0, t()).is_none());
+        assert_eq!(s.pending_len(), 1);
+        // Both devices move on to frame 2: frame 1's missing device (1)
+        // reported newer, so the partial is superseded at that moment.
+        assert!(s.add(2, 0, t()).is_none());
+        assert_eq!(s.pending_len(), 2, "device 1 has not moved past frame 1 yet");
+        let ready = s.add(2, 1, t()).unwrap();
+        assert_eq!(ready.frame_id, 2);
+        assert_eq!(s.pending_len(), 0, "frame-1 partial superseded");
+        assert_eq!(s.stats.superseded, 1);
+        // The older frame can never be delivered after the newer one:
+        // device 1's late frame-1 features are stale, counted, dropped.
+        assert!(s.add(1, 1, t()).is_none());
+        assert_eq!(s.stats.stale, 1);
+        assert_eq!(s.pending_len(), 0, "stale submission must not recreate the frame");
+        assert_eq!(s.stats.complete, 1);
+    }
+
+    #[test]
+    fn latest_wins_superseded_partials_do_not_leak_accounting() {
+        // Regression (gc interaction): superseded partials are replaced
+        // by fresher data, not lost at a deadline — they must not appear
+        // in the emission records (`emitted_len`) nor in the Drop-policy
+        // log (`take_dropped`), and must not linger in `pending_len`.
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        s.set_latest_wins(true);
+        for id in 1..=4u64 {
+            // Device 0 reports every frame; device 1 only frame 5 later:
+            // each new report supersedes nothing yet (device 1 silent).
+            assert!(s.add(id, 0, t()).is_none());
+        }
+        assert_eq!(s.pending_len(), 4, "a silent device keeps partials alive");
+        // Device 1 jumps straight to frame 5. Frames 1–4 were only
+        // missing device 1, so the one report supersedes all of them.
+        assert!(s.add(5, 1, t()).is_none());
+        assert_eq!(s.pending_len(), 1, "only frame 5 survives");
+        assert_eq!(s.stats.superseded, 4);
+        assert!(s.add(5, 0, t()).is_some());
+        assert_eq!(s.pending_len(), 0);
+        assert_eq!(s.emitted_len(), 1, "only the emitted frame leaves a record");
+        assert!(s.take_dropped().is_empty(), "superseded ≠ deadline-dropped");
+        assert_eq!(s.stats.dropped_frames, 0);
+        assert_eq!(s.stats.timed_out, 0);
+    }
+
+    #[test]
+    fn latest_wins_equal_frame_resubmission_is_a_duplicate_not_stale() {
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        s.set_latest_wins(true);
+        assert!(s.add(3, 0, t()).is_none());
+        assert!(s.add(3, 0, t()).is_none());
+        assert_eq!(s.stats.duplicates, 1, "same-frame resend stays a duplicate");
+        assert_eq!(s.stats.stale, 0);
+    }
+
+    #[test]
+    fn latest_wins_off_keeps_out_of_order_assembly() {
+        // The TCP path must keep its exact historical behavior: with
+        // latest-wins off, an older frame still assembles and emits
+        // after a newer one (devices legitimately interleave on TCP).
+        let mut s = FrameSync::new(2, Duration::from_secs(10), LossPolicy::Drop, vec![2, 2]);
+        assert!(s.add(2, 0, t()).is_none());
+        assert!(s.add(2, 1, t()).is_some());
+        assert!(s.add(1, 0, t()).is_none());
+        assert!(s.add(1, 1, t()).is_some(), "older frame completes when latest-wins is off");
+        assert_eq!(s.stats.stale, 0);
+        assert_eq!(s.stats.superseded, 0);
     }
 
     #[test]

@@ -42,7 +42,9 @@ use crate::config::{IntegrationKind, ModelMeta, Paths};
 use crate::metrics::Metrics;
 use crate::model::DecodeParams;
 use crate::net::poll::{Event, Interest, Poller, ReadyQueue, TimerWheel, WakeSignal, Waker};
-use crate::net::{FrameAssembler, Msg, RawFrame, WireDetection, DEFAULT_SESSION};
+use crate::net::{
+    DgramAssembler, FrameAssembler, Msg, RawFrame, WireDetection, DEFAULT_SESSION, MAX_DGRAM,
+};
 use crate::runtime::{build_backend, BackendKind};
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::time::Instant;
@@ -52,7 +54,7 @@ use crate::utils::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream, UdpSocket};
 use std::os::unix::io::AsRawFd;
 use std::time::Duration;
 
@@ -60,8 +62,14 @@ use std::time::Duration;
 const TOKEN_LISTENER: usize = 0;
 /// Timer-wheel token of the recurring session-deadline sweep.
 const TIMER_SESSION_POLL: usize = 1;
+/// Poller token of the UDP feature socket (`--udp`).
+const TOKEN_UDP: usize = 2;
 /// First token handed to an accepted connection.
-const FIRST_CONN_TOKEN: usize = 2;
+const FIRST_CONN_TOKEN: usize = 3;
+/// Max datagrams drained from the UDP socket per readiness round, so a
+/// datagram flood cannot starve the TCP control plane (level-triggered
+/// readiness re-reports the remainder immediately).
+const UDP_RECV_BUDGET: usize = 256;
 /// Period of the session-deadline sweep (parity with the 20 ms accept
 /// poll the previous server used).
 const DEADLINE_POLL: Duration = Duration::from_millis(20);
@@ -121,6 +129,14 @@ pub struct ServerConfig {
     /// (`--sink-queue`). When a slow subscriber lets it fill, its oldest
     /// queued frame is dropped and `sink_dropped` incremented.
     pub sink_queue: usize,
+    /// Also bind a UDP socket on `port` for the datagram feature uplink
+    /// (`--udp`): feature frames arrive as chunked datagrams with
+    /// latest-wins reassembly and optional XOR-parity FEC (see
+    /// `docs/WIRE_PROTOCOL.md`, "Datagram transport"), while the
+    /// control plane (`Hello`/`Subscribe`/`Bye`/`Result`) stays TCP.
+    /// Every hosted session runs its `FrameSync` in latest-wins mode so
+    /// a stale completion is counted and dropped, never integrated.
+    pub udp: bool,
 }
 
 impl Default for ServerConfig {
@@ -139,6 +155,7 @@ impl Default for ServerConfig {
             trace: None,
             workers: 0,
             sink_queue: DEFAULT_SINK_QUEUE,
+            udp: false,
         }
     }
 }
@@ -156,6 +173,13 @@ impl ServerConfig {
                 .decode(self.decode.clone()),
         )];
         specs.extend(self.extra_sessions.iter().cloned());
+        if self.udp {
+            // Datagram reassembly already enforces latest-wins per
+            // device stream; the session-level gate closes the race
+            // where a stale completion is dispatched concurrently with
+            // a newer one.
+            specs = specs.into_iter().map(|(n, sc)| (n, sc.latest_wins(true))).collect();
+        }
         let mut seen = std::collections::BTreeSet::new();
         for (name, _) in &specs {
             anyhow::ensure!(
@@ -469,9 +493,28 @@ struct Conn {
     peer: String,
 }
 
+/// Loop-owned state of the UDP feature socket (`--udp`). Mirrors the
+/// per-connection state machine of [`Conn`] with the socket-specific
+/// parts swapped out: datagrams reassemble through a [`DgramAssembler`]
+/// (latest-wins, FEC) into byte-identical framed messages, which feed
+/// the same [`FrameAssembler`] → inbox → worker-dispatch path as TCP.
+struct UdpState {
+    socket: UdpSocket,
+    assembler: DgramAssembler,
+    /// Decodes reassembled frames (each is one complete framed message,
+    /// byte-identical to its TCP wire form).
+    frames: FrameAssembler,
+    /// Feature frames awaiting a worker slot.
+    inbox: VecDeque<RawFrame>,
+    /// A worker job for the UDP inbox is in flight (at most one, so
+    /// frames dispatch in reassembly order).
+    busy: bool,
+}
+
 struct EventLoop {
     poller: Poller,
     conns: HashMap<usize, Conn>,
+    udp: Option<UdpState>,
     shared: Arc<Shared>,
     pool: ThreadPool,
     completions: Arc<ReadyQueue<Completion>>,
@@ -545,6 +588,10 @@ impl EventLoop {
                     if !self.draining {
                         self.accept_ready(listener)?;
                     }
+                } else if ev.token == TOKEN_UDP {
+                    if !self.draining {
+                        self.udp_ready();
+                    }
                 } else {
                     self.conn_event(ev);
                 }
@@ -578,6 +625,18 @@ impl EventLoop {
             }
             Completion::Dispatched { token, result } => {
                 self.jobs_in_flight -= 1;
+                if token == TOKEN_UDP {
+                    if let Some(u) = self.udp.as_mut() {
+                        u.busy = false;
+                    }
+                    // UDP has no connection to close on a dispatch
+                    // error; the worker logs per frame and reports Ok.
+                    if let Err(e) = result {
+                        log::warn!("udp dispatch failed: {e:#}");
+                    }
+                    self.maybe_dispatch_udp();
+                    return;
+                }
                 if let Some(conn) = self.conns.get_mut(&token) {
                     conn.busy = false;
                 } else {
@@ -844,6 +903,84 @@ impl EventLoop {
         });
     }
 
+    /// Drain the UDP feature socket: parse datagrams through the
+    /// latest-wins assembler, hand every completed (or FEC-recovered)
+    /// frame to the framed-message decoder, and queue feature frames
+    /// for worker dispatch. Malformed or stale datagrams are counted
+    /// and dropped — never a panic, never an integration.
+    fn udp_ready(&mut self) {
+        let Some(u) = self.udp.as_mut() else { return };
+        let mut buf = [0u8; MAX_DGRAM + 64];
+        for _ in 0..UDP_RECV_BUDGET {
+            let n = match u.socket.recv_from(&mut buf) {
+                Ok((n, _)) => n,
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient ICMP-induced errors (ECONNREFUSED after
+                    // a device exits) must not kill the uplink.
+                    log::debug!("udp recv error (ignored): {e}");
+                    continue;
+                }
+            };
+            let Some(done) = u.assembler.feed(&buf[..n]) else { continue };
+            u.frames.feed(&done.frame);
+            loop {
+                match u.frames.next_frame() {
+                    Ok(Some(f)) if f.is_features() => u.inbox.push_back(f),
+                    Ok(Some(f)) => {
+                        log::warn!("non-feature frame (type {}) over the datagram uplink", f.ty)
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // A reassembled frame is byte-identical to its
+                        // TCP form, so a desync means a corrupt sender;
+                        // reset the decoder rather than wedge the path.
+                        log::warn!("udp frame decode desync (decoder reset): {e:#}");
+                        u.frames = FrameAssembler::new();
+                        break;
+                    }
+                }
+            }
+        }
+        let st = u.assembler.stats();
+        self.server_metrics.set("dgram_rx", st.rx);
+        self.server_metrics.set("dgram_stale_dropped", st.stale_dropped);
+        self.server_metrics.set("fec_recovered", st.fec_recovered);
+        self.server_metrics.set("dgram_dup", st.dup);
+        self.server_metrics.set("dgram_malformed", st.malformed);
+        self.maybe_dispatch_udp();
+    }
+
+    /// Hand queued UDP feature frames to the worker pool — at most one
+    /// job at a time, so frames dispatch in reassembly order. Unlike
+    /// the TCP path, per-frame errors are logged and skipped: one bad
+    /// datagram sender must not discard siblings' queued frames.
+    fn maybe_dispatch_udp(&mut self) {
+        let batch: Vec<RawFrame> = {
+            let Some(u) = self.udp.as_mut() else { return };
+            if u.busy || u.inbox.is_empty() {
+                return;
+            }
+            u.busy = true;
+            u.inbox.drain(..).collect()
+        };
+        self.jobs_in_flight += 1;
+        let shared = Arc::clone(&self.shared);
+        let completions = Arc::clone(&self.completions);
+        self.pool.execute(move || {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for frame in &batch {
+                    if let Err(e) = dispatch_frames(&shared, std::slice::from_ref(frame)) {
+                        log::warn!("udp feature frame dropped: {e:#}");
+                    }
+                }
+            }))
+            .map_err(|_| anyhow::anyhow!("udp dispatch job panicked"));
+            completions.push(Completion::Dispatched { token: TOKEN_UDP, result });
+        });
+    }
+
     fn flush_conn(&mut self, token: usize) {
         let outcome = {
             let Some(conn) = self.conns.get(&token) else { return };
@@ -1041,12 +1178,29 @@ pub fn run_server_until(
     // still set the flag, which the loop's first iteration observes.
     stop.arm(waker);
     poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    let udp = if cfg.udp {
+        let socket = UdpSocket::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("bind udp port {}", cfg.port))?;
+        socket.set_nonblocking(true)?;
+        poller.register(socket.as_raw_fd(), TOKEN_UDP, Interest::READ)?;
+        log::info!("datagram feature uplink on udp 127.0.0.1:{}", cfg.port);
+        Some(UdpState {
+            socket,
+            assembler: DgramAssembler::new(),
+            frames: FrameAssembler::new(),
+            inbox: VecDeque::new(),
+            busy: false,
+        })
+    } else {
+        None
+    };
 
     let workers = if cfg.workers > 0 { cfg.workers } else { ThreadPool::default_size() };
     let server_metrics = Arc::new(Metrics::new());
     let mut lp = EventLoop {
         poller,
         conns: HashMap::new(),
+        udp,
         shared: Arc::clone(&shared),
         pool: ThreadPool::new(workers),
         completions,
@@ -1181,6 +1335,7 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         "trace",
         "workers",
         "sink-queue",
+        "udp",
     ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
@@ -1200,6 +1355,7 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     cfg.batch.window = args.ms_or("batch-window-ms", cfg.batch.window.as_millis() as u64)?;
     cfg.workers = args.usize_or("workers", cfg.workers)?;
     cfg.sink_queue = args.usize_or("sink-queue", cfg.sink_queue)?;
+    cfg.udp = args.switch("udp");
     let max = args.u64_or("max-frames", 0)?;
     cfg.max_frames = if max > 0 { Some(max) } else { None };
     cfg.trace = args.str_opt("trace").map(std::path::PathBuf::from);
@@ -1304,6 +1460,22 @@ mod tests {
         let d = server_config_from_args(&args(&[])).unwrap();
         assert_eq!(d.batch.max_batch, 1);
         assert!(server_config_from_args(&args(&["--max-batch", "lots"])).is_err());
+    }
+
+    #[test]
+    fn serve_udp_flag_threads_latest_wins_into_sessions() {
+        let cfg = server_config_from_args(&args(&["--udp"])).unwrap();
+        assert!(cfg.udp);
+        let specs = cfg.session_specs().unwrap();
+        assert!(specs.iter().all(|(_, sc)| sc.latest_wins), "udp mode gates FrameSync");
+
+        let d = server_config_from_args(&args(&[])).unwrap();
+        assert!(!d.udp, "datagram uplink is opt-in");
+        let specs = d.session_specs().unwrap();
+        assert!(
+            specs.iter().all(|(_, sc)| !sc.latest_wins),
+            "TCP-only servers keep the seed FrameSync behavior"
+        );
     }
 
     #[test]

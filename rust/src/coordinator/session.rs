@@ -100,6 +100,10 @@ pub struct SessionConfig {
     pub policy: LossPolicy,
     /// Decode/NMS parameters for this session's post-processing.
     pub decode: DecodeParams,
+    /// Latest-wins frame replacement (see [`FrameSync::set_latest_wins`]):
+    /// on for datagram-fed sessions, off (default) for the in-order TCP
+    /// path.
+    pub latest_wins: bool,
 }
 
 impl SessionConfig {
@@ -111,6 +115,7 @@ impl SessionConfig {
             deadline: Duration::from_millis(200),
             policy: LossPolicy::ZeroFill,
             decode: DecodeParams::default(),
+            latest_wins: false,
         }
     }
 
@@ -129,6 +134,12 @@ impl SessionConfig {
     /// Override the decode/NMS parameters.
     pub fn decode(mut self, decode: DecodeParams) -> SessionConfig {
         self.decode = decode;
+        self
+    }
+
+    /// Enable/disable latest-wins frame replacement in the synchronizer.
+    pub fn latest_wins(mut self, on: bool) -> SessionConfig {
+        self.latest_wins = on;
         self
     }
 }
@@ -234,7 +245,8 @@ impl DetectorSession {
         let tail = meta.variant(cfg.variant)?.tail.clone();
         let g = &meta.grid;
         let feat_shape = vec![g.dims[2], g.dims[1], g.dims[0], g.c_head];
-        let sync = FrameSync::new(meta.num_devices, cfg.deadline, cfg.policy, feat_shape);
+        let mut sync = FrameSync::new(meta.num_devices, cfg.deadline, cfg.policy, feat_shape);
+        sync.set_latest_wins(cfg.latest_wins);
         Ok(DetectorSession {
             name: name.to_string(),
             cfg,
@@ -550,6 +562,8 @@ impl DetectorSession {
         self.metrics.set("sync_dropped", stats.dropped_frames);
         self.metrics.set("sync_late", stats.late_arrivals);
         self.metrics.set("sync_dup", stats.duplicates);
+        self.metrics.set("sync_stale", stats.stale);
+        self.metrics.set("sync_superseded", stats.superseded);
     }
 }
 
@@ -831,6 +845,30 @@ mod tests {
             other => panic!("expected Result, got {other:?}"),
         }
         assert_eq!(session.metrics().counter("sync_timed_out"), 1);
+    }
+
+    #[test]
+    fn latest_wins_session_never_integrates_stale_frames() {
+        let backend = empty_backend();
+        let session = DetectorSession::new(
+            "lw",
+            ModelMeta::test_default(),
+            backend,
+            SessionConfig::new(IntegrationKind::Max)
+                .deadline(Duration::from_secs(60))
+                .latest_wins(true),
+        )
+        .unwrap();
+        session.submit(2, 0, FeaturePayload::Raw(feat())).unwrap();
+        let events = session.submit(2, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(events.len(), 1, "newest frame completes normally");
+        // Frame 1 arriving after frame 2 is stale on both devices: it
+        // must never become a result, only a counted drop.
+        session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        let events = session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert!(events.is_empty(), "stale frame must not resolve");
+        assert_eq!(session.sync_stats().stale, 2);
+        assert_eq!(session.frames_done(), 1);
     }
 
     #[test]

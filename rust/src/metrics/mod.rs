@@ -33,9 +33,14 @@ pub const REGISTERED_METRICS: &[&str] = &[
     "conn_closed",         // counter: connections closed (any reason)
     "conn_peak",           // gauge: high-water mark of simultaneously open connections
     "decode_errors",       // counter: quantized payloads that failed to dequantize
+    "dgram_dup",           // gauge: duplicate datagrams ignored by the assembler
+    "dgram_malformed",     // gauge: unparseable/inconsistent datagrams dropped
+    "dgram_rx",            // gauge: datagrams received on the UDP feature socket
+    "dgram_stale_dropped", // gauge: stale datagrams + superseded partial frames dropped
     "e2e",                 // series: capture → delivery end-to-end seconds
     "features_rx",         // counter: feature payloads received
     "features_rx_quantized", // counter: quantized feature payloads received
+    "fec_recovered",       // gauge: chunks reconstructed from XOR parity
     "frames_done",         // counter: frames fully resolved (delivered or expired)
     "head_exec",           // series: device-side head execution seconds
     "post",                // series: decode + NMS post-processing seconds
@@ -44,6 +49,8 @@ pub const REGISTERED_METRICS: &[&str] = &[
     "sync_dropped",        // gauge: frames dropped by the loss policy
     "sync_dup",            // gauge: duplicate (frame, device) submissions ignored
     "sync_late",           // gauge: arrivals for frames already emitted
+    "sync_stale",          // gauge: latest-wins submissions older than the device's newest
+    "sync_superseded",     // gauge: latest-wins partials discarded for fresher frames
     "sync_timed_out",      // gauge: frames resolved incomplete at deadline
     "sync_wait",           // series: first-arrival → sync-resolution seconds
     "tail",                // series: in-process pipeline tail seconds

@@ -1,0 +1,901 @@
+//! Latest-wins datagram transport for the feature uplink.
+//!
+//! TCP's in-order delivery is the wrong semantic for live LiDAR frames:
+//! one lost segment head-of-line-blocks every fresher frame behind the
+//! retransmit of a stale one. This module carries the *existing* framed
+//! wire form (`encode_frame` output, byte for byte) chunked into
+//! ≤[`MAX_DGRAM`]-byte datagrams, so a reassembled frame feeds the same
+//! decode path as TCP — the transport changes, the payload bytes do not.
+//!
+//! Three pieces:
+//!
+//! * [`chunk_frame`] — split one framed message into data datagrams
+//!   (plus one XOR-parity datagram per `fec_k`-chunk group when FEC is
+//!   on);
+//! * [`DgramAssembler`] — per-(session, device) reassembly with
+//!   **latest-wins** replacement: a newer frame supersedes any
+//!   partially-assembled older one, stale datagrams are counted and
+//!   dropped (never delivered), duplicates are counted and ignored, and
+//!   a single lost chunk per parity group is recovered from the parity
+//!   datagram without retransmit;
+//! * [`DgramImpairer`] — datagram-level loss/delay/reorder/duplication
+//!   injection, the UDP counterpart of [`ImpairedLink`](super::ImpairedLink).
+//!
+//! The datagram header layout is normative in
+//! `docs/WIRE_PROTOCOL.md` ("Datagram transport" + the machine-readable
+//! table between the `dgram-spec` markers); `cargo run -p xtask -- lint`
+//! cross-checks [`put_header_fields`] against that table field for
+//! field, exactly as it does for `encode_payload`.
+
+use crate::net::impair::{ImpairConfig, ImpairStats};
+use crate::utils::rng::Pcg64;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Datagram magic, distinct from the stream framing's `"SCMI"` so a
+/// datagram accidentally fed to the TCP assembler (or vice versa) is an
+/// immediate, explicit error instead of a silent mis-parse.
+pub const DGRAM_MAGIC: [u8; 4] = *b"SCMD";
+
+/// Header version byte; any other value is dropped as malformed.
+pub const DGRAM_VERSION: u8 = 1;
+
+/// `kind` byte of a data chunk.
+pub const KIND_DATA: u8 = 0;
+
+/// `kind` byte of an XOR-parity datagram.
+pub const KIND_PARITY: u8 = 1;
+
+/// Upper bound on one datagram (header + payload) — chosen to fit a
+/// 1500-byte Ethernet MTU with IP/UDP headers and tunnel headroom.
+pub const MAX_DGRAM: usize = 1400;
+
+/// Framed-message bytes carried per data chunk. Fixed by the protocol:
+/// every chunk of a frame except the last carries exactly this many
+/// bytes, which is what lets the receiver compute any chunk's exact
+/// length from `frame_len` alone (XOR recovery needs the lost chunk's
+/// true length). 1100 leaves room for the worst-case header (41 bytes
+/// fixed + 1 + 255-byte session name) within [`MAX_DGRAM`].
+pub const CHUNK_PAYLOAD: usize = 1100;
+
+/// Largest framed message a datagram stream may carry: the TCP
+/// `MAX_PAYLOAD` bound plus the 9-byte frame header.
+const MAX_FRAME: usize = (256 << 20) + 9;
+
+/// Parsed datagram header (everything before the payload bytes).
+///
+/// All integers little-endian on the wire; the session string is the
+/// same `len(u8) | utf-8` encoding the stream protocol uses, but
+/// **required** here — every datagram is self-describing because any
+/// one of them may be the first to arrive.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DgramHeader {
+    /// [`KIND_DATA`] or [`KIND_PARITY`].
+    pub kind: u8,
+    /// Sending device's slot.
+    pub device_id: u32,
+    /// Frame sequence number (the `Msg` frame id): orders frames for
+    /// latest-wins replacement.
+    pub frame_seq: u64,
+    /// Data: index of this chunk in `[0, chunk_count)`. Parity: the
+    /// parity-group id it protects (same value as `fec_group`).
+    pub chunk_index: u32,
+    /// Total data chunks of this frame.
+    pub chunk_count: u32,
+    /// Total framed-message bytes (all chunks concatenated).
+    pub frame_len: u32,
+    /// FEC group size `k` (0 = FEC off; parity datagrams require > 0).
+    pub fec_k: u32,
+    /// Parity-group id: `chunk_index / fec_k` for data chunks, the
+    /// protected group for parity datagrams.
+    pub fec_group: u32,
+    /// Payload bytes following the header.
+    pub payload_len: u16,
+    /// Addressed session (required, non-empty).
+    pub session: String,
+}
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_session(buf: &mut Vec<u8>, session: &str) {
+    let bytes = session.as_bytes();
+    assert!(!bytes.is_empty() && bytes.len() <= 255, "session name must be 1..=255 bytes");
+    buf.push(bytes.len() as u8);
+    buf.extend_from_slice(bytes);
+}
+
+/// Serialize the header fields after the magic.
+///
+/// Must stay a flat, ordered sequence of `put_*(buf, field)` calls
+/// (after the destructuring `let`s): `xtask lint` parses this function
+/// and cross-checks field order and encodings against the dgram spec
+/// table in `docs/WIRE_PROTOCOL.md`, exactly as it does for
+/// `encode_payload` in `proto.rs`.
+fn put_header_fields(buf: &mut Vec<u8>, h: &DgramHeader) {
+    let DgramHeader {
+        kind,
+        device_id,
+        frame_seq,
+        chunk_index,
+        chunk_count,
+        frame_len,
+        fec_k,
+        fec_group,
+        payload_len,
+        session,
+    } = h;
+    let ver = DGRAM_VERSION;
+    put_u8(buf, ver);
+    put_u8(buf, *kind);
+    put_u32(buf, *device_id);
+    put_u64(buf, *frame_seq);
+    put_u32(buf, *chunk_index);
+    put_u32(buf, *chunk_count);
+    put_u32(buf, *frame_len);
+    put_u32(buf, *fec_k);
+    put_u32(buf, *fec_group);
+    put_u16(buf, *payload_len);
+    put_session(buf, session);
+}
+
+/// Serialize one complete datagram (magic + header + payload).
+pub fn encode_dgram(h: &DgramHeader, payload: &[u8]) -> Vec<u8> {
+    assert_eq!(h.payload_len as usize, payload.len(), "payload_len must match payload");
+    let mut buf = Vec::with_capacity(MAX_DGRAM);
+    buf.extend_from_slice(&DGRAM_MAGIC);
+    put_header_fields(&mut buf, h);
+    buf.extend_from_slice(payload);
+    debug_assert!(buf.len() <= MAX_DGRAM, "datagram over MAX_DGRAM: {}", buf.len());
+    buf
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated datagram");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Parse one datagram into its header and payload slice.
+///
+/// Purely structural validation (magic, version, kind, field bounds,
+/// exact payload length, no trailing bytes, never over-reads); the
+/// cross-datagram semantic checks (chunk geometry vs `frame_len`, FEC
+/// consistency) live in [`DgramAssembler::feed`], which is also where
+/// malformed datagrams are *counted* rather than surfaced as errors.
+pub fn parse_dgram(dgram: &[u8]) -> Result<(DgramHeader, &[u8])> {
+    let mut c = Cursor { buf: dgram, pos: 0 };
+    if c.take(4)? != DGRAM_MAGIC {
+        bail!("bad datagram magic");
+    }
+    let ver = c.u8()?;
+    ensure!(ver == DGRAM_VERSION, "unknown datagram version {ver}");
+    let kind = c.u8()?;
+    ensure!(kind == KIND_DATA || kind == KIND_PARITY, "unknown datagram kind {kind}");
+    let device_id = c.u32()?;
+    let frame_seq = c.u64()?;
+    let chunk_index = c.u32()?;
+    let chunk_count = c.u32()?;
+    let frame_len = c.u32()?;
+    let fec_k = c.u32()?;
+    let fec_group = c.u32()?;
+    let payload_len = c.u16()?;
+    let slen = c.u8()? as usize;
+    ensure!(slen > 0, "empty session name");
+    let sbytes = c.take(slen)?;
+    let session = std::str::from_utf8(sbytes)
+        .map_err(|_| anyhow::anyhow!("session name not utf-8"))?
+        .to_string();
+    let payload = c.take(payload_len as usize)?;
+    ensure!(c.pos == dgram.len(), "{} trailing bytes in datagram", dgram.len() - c.pos);
+    let h = DgramHeader {
+        kind,
+        device_id,
+        frame_seq,
+        chunk_index,
+        chunk_count,
+        frame_len,
+        fec_k,
+        fec_group,
+        payload_len,
+        session,
+    };
+    Ok((h, payload))
+}
+
+/// Data chunks a frame of `frame_len` bytes splits into.
+pub fn expected_chunks(frame_len: usize) -> usize {
+    frame_len.div_ceil(CHUNK_PAYLOAD).max(1)
+}
+
+/// Exact byte length of chunk `index` of a `frame_len`-byte frame:
+/// every chunk is [`CHUNK_PAYLOAD`] except the last, which carries the
+/// remainder. This determinism is what makes single-loss XOR recovery
+/// exact — the receiver knows the lost chunk's length without it.
+pub fn chunk_len(frame_len: usize, index: usize, chunk_count: usize) -> usize {
+    if index + 1 < chunk_count {
+        CHUNK_PAYLOAD
+    } else {
+        frame_len - CHUNK_PAYLOAD * (chunk_count - 1)
+    }
+}
+
+/// Longest chunk in parity group `g` (the parity payload length).
+fn group_parity_len(frame_len: usize, chunk_count: usize, fec_k: usize, g: usize) -> usize {
+    let lo = g * fec_k;
+    let hi = ((g + 1) * fec_k).min(chunk_count);
+    (lo..hi).map(|i| chunk_len(frame_len, i, chunk_count)).max().unwrap_or(0)
+}
+
+/// Split one framed message (`encode_frame` output) into datagrams.
+///
+/// Returns the data chunks in order; with `fec_k > 0`, each group of
+/// `fec_k` consecutive chunks is followed by one parity datagram whose
+/// payload is the XOR of the group's chunks zero-padded to the group's
+/// longest chunk — any *single* lost chunk per group is recoverable at
+/// the receiver without retransmit.
+pub fn chunk_frame(
+    frame: &[u8],
+    session: &str,
+    device_id: u32,
+    frame_seq: u64,
+    fec_k: u32,
+) -> Result<Vec<Vec<u8>>> {
+    ensure!(!session.is_empty() && session.len() <= 255, "session name must be 1..=255 bytes");
+    ensure!(frame.len() >= 9, "frame shorter than the 9-byte SCMI header");
+    ensure!(frame.len() <= MAX_FRAME, "frame too large: {}", frame.len());
+    let chunk_count = expected_chunks(frame.len());
+    let mut out = Vec::with_capacity(chunk_count + 1);
+    let header = |kind: u8, chunk_index: u32, fec_group: u32, payload_len: usize| DgramHeader {
+        kind,
+        device_id,
+        frame_seq,
+        chunk_index,
+        chunk_count: chunk_count as u32,
+        frame_len: frame.len() as u32,
+        fec_k,
+        fec_group,
+        payload_len: payload_len as u16,
+        session: session.to_string(),
+    };
+    for i in 0..chunk_count {
+        let lo = i * CHUNK_PAYLOAD;
+        let hi = (lo + CHUNK_PAYLOAD).min(frame.len());
+        let group = if fec_k > 0 { i as u32 / fec_k } else { 0 };
+        out.push(encode_dgram(&header(KIND_DATA, i as u32, group, hi - lo), &frame[lo..hi]));
+    }
+    if fec_k > 0 {
+        let k = fec_k as usize;
+        let groups = chunk_count.div_ceil(k);
+        for g in 0..groups {
+            let plen = group_parity_len(frame.len(), chunk_count, k, g);
+            let mut parity = vec![0u8; plen];
+            for i in g * k..((g + 1) * k).min(chunk_count) {
+                let lo = i * CHUNK_PAYLOAD;
+                let hi = (lo + CHUNK_PAYLOAD).min(frame.len());
+                for (p, &b) in parity.iter_mut().zip(&frame[lo..hi]) {
+                    *p ^= b;
+                }
+            }
+            out.push(encode_dgram(&header(KIND_PARITY, g as u32, g as u32), &parity));
+        }
+    }
+    Ok(out)
+}
+
+/// One frame reassembled from datagrams, byte-identical to the sender's
+/// `encode_frame` output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssembledFrame {
+    /// Session every datagram of the frame addressed.
+    pub session: String,
+    /// Sending device's slot.
+    pub device_id: u32,
+    /// Frame sequence number.
+    pub frame_seq: u64,
+    /// The complete framed wire form (`SCMI` magic onward).
+    pub frame: Vec<u8>,
+}
+
+/// Assembler counters. The event-loop server mirrors these into its
+/// metrics (`dgram_rx`, `dgram_stale_dropped`, `fec_recovered`,
+/// `dgram_dup`) after each receive round; tests assert them exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DgramStats {
+    /// Datagrams offered to [`DgramAssembler::feed`].
+    pub rx: u64,
+    /// Frames fully reassembled and delivered.
+    pub delivered: u64,
+    /// Stale traffic dropped under latest-wins: datagrams for a frame
+    /// at or below the stream's newest delivered (or behind its current
+    /// partial), plus one count per partially-assembled frame a newer
+    /// frame superseded. Never integrated.
+    pub stale_dropped: u64,
+    /// Chunks reconstructed from XOR parity (one per recovered chunk).
+    pub fec_recovered: u64,
+    /// Duplicate datagrams ignored (chunk or parity already held).
+    pub dup: u64,
+    /// Datagrams dropped as unparseable or internally inconsistent.
+    pub malformed: u64,
+}
+
+/// In-flight reassembly of one frame.
+struct Partial {
+    frame_seq: u64,
+    chunk_count: usize,
+    frame_len: usize,
+    fec_k: u32,
+    chunks: Vec<Option<Vec<u8>>>,
+    /// Parity payload per group id.
+    parity: HashMap<u32, Vec<u8>>,
+}
+
+impl Partial {
+    fn new(h: &DgramHeader) -> Partial {
+        Partial {
+            frame_seq: h.frame_seq,
+            chunk_count: h.chunk_count as usize,
+            frame_len: h.frame_len as usize,
+            fec_k: h.fec_k,
+            chunks: vec![None; h.chunk_count as usize],
+            parity: HashMap::new(),
+        }
+    }
+
+    /// Geometry fields every datagram of one frame must agree on.
+    fn consistent_with(&self, h: &DgramHeader) -> bool {
+        self.chunk_count == h.chunk_count as usize
+            && self.frame_len == h.frame_len as usize
+            && self.fec_k == h.fec_k
+    }
+
+    /// Whether every missing chunk is recoverable (its group holds
+    /// parity and it is the group's only gap). Recovery is deferred
+    /// until it is decisive, so `fec_recovered` counts exactly the
+    /// chunks that parity — not a late arrival — reconstructed.
+    fn try_complete(&mut self, stats: &mut DgramStats) -> Option<Vec<u8>> {
+        let k = self.fec_k as usize;
+        let missing: Vec<usize> =
+            (0..self.chunk_count).filter(|&i| self.chunks[i].is_none()).collect();
+        if !missing.is_empty() {
+            if k == 0 {
+                return None;
+            }
+            for &m in &missing {
+                let g = m / k;
+                if !self.parity.contains_key(&(g as u32)) {
+                    return None;
+                }
+                // Recoverable only as the group's single gap.
+                if missing.iter().filter(|&&o| o / k == g).count() > 1 {
+                    return None;
+                }
+            }
+            for m in missing {
+                let g = (m / k) as u32;
+                let mut rec = self.parity[&g].clone();
+                let lo = (g as usize) * k;
+                let hi = (lo + k).min(self.chunk_count);
+                for i in lo..hi {
+                    if let Some(c) = &self.chunks[i] {
+                        for (r, &b) in rec.iter_mut().zip(c) {
+                            *r ^= b;
+                        }
+                    }
+                }
+                rec.truncate(chunk_len(self.frame_len, m, self.chunk_count));
+                self.chunks[m] = Some(rec);
+                stats.fec_recovered += 1;
+            }
+        }
+        let mut frame = Vec::with_capacity(self.frame_len);
+        for c in &self.chunks {
+            frame.extend_from_slice(c.as_ref().expect("all chunks present"));
+        }
+        debug_assert_eq!(frame.len(), self.frame_len);
+        Some(frame)
+    }
+}
+
+#[derive(Default)]
+struct StreamState {
+    /// Newest frame sequence delivered on this stream; anything at or
+    /// below it is stale by definition.
+    newest_delivered: Option<u64>,
+    partial: Option<Partial>,
+}
+
+/// Per-(session, device) datagram reassembly with latest-wins
+/// replacement and single-loss XOR recovery.
+///
+/// Feed raw datagrams as they arrive — any order, duplicated, with
+/// gaps; completed frames come back byte-identical to the sender's
+/// framed form. Delivery per stream is strictly monotonic in
+/// `frame_seq`: once a frame is delivered, no older frame of that
+/// stream will ever be, and a newer frame's first datagram supersedes
+/// (discards) any partially-assembled older frame. Malformed input is
+/// dropped and counted, never panics, and never reads past the
+/// datagram.
+#[derive(Default)]
+pub struct DgramAssembler {
+    streams: HashMap<(String, u32), StreamState>,
+    stats: DgramStats,
+}
+
+impl DgramAssembler {
+    /// An empty assembler.
+    pub fn new() -> DgramAssembler {
+        DgramAssembler::default()
+    }
+
+    /// Counters of everything the assembler has done.
+    pub fn stats(&self) -> DgramStats {
+        self.stats
+    }
+
+    /// Frames currently partially assembled (observability / tests).
+    pub fn partial_len(&self) -> usize {
+        self.streams.values().filter(|s| s.partial.is_some()).count()
+    }
+
+    /// Offer one datagram; returns a frame when it completes one.
+    pub fn feed(&mut self, dgram: &[u8]) -> Option<AssembledFrame> {
+        self.stats.rx += 1;
+        let (h, payload) = match parse_dgram(dgram) {
+            Ok(p) => p,
+            Err(_) => {
+                self.stats.malformed += 1;
+                return None;
+            }
+        };
+        if !self.semantically_valid(&h) {
+            self.stats.malformed += 1;
+            return None;
+        }
+
+        let stream = self.streams.entry((h.session.clone(), h.device_id)).or_default();
+        if stream.newest_delivered.is_some_and(|n| h.frame_seq <= n) {
+            self.stats.stale_dropped += 1;
+            return None;
+        }
+        match &stream.partial {
+            Some(p) if p.frame_seq > h.frame_seq => {
+                // Older than the frame being assembled: stale.
+                self.stats.stale_dropped += 1;
+                return None;
+            }
+            Some(p) if p.frame_seq < h.frame_seq => {
+                // Latest wins: the superseded partial is counted as one
+                // stale drop and discarded, never delivered.
+                self.stats.stale_dropped += 1;
+                stream.partial = Some(Partial::new(&h));
+            }
+            Some(p) if !p.consistent_with(&h) => {
+                self.stats.malformed += 1;
+                return None;
+            }
+            Some(_) => {}
+            None => stream.partial = Some(Partial::new(&h)),
+        }
+        let partial = stream.partial.as_mut().expect("ensured above");
+
+        if h.kind == KIND_PARITY {
+            if partial.parity.contains_key(&h.fec_group) {
+                self.stats.dup += 1;
+                return None;
+            }
+            partial.parity.insert(h.fec_group, payload.to_vec());
+        } else {
+            let i = h.chunk_index as usize;
+            if partial.chunks[i].is_some() {
+                self.stats.dup += 1;
+                return None;
+            }
+            partial.chunks[i] = Some(payload.to_vec());
+        }
+
+        let frame = partial.try_complete(&mut self.stats)?;
+        let frame_seq = partial.frame_seq;
+        stream.partial = None;
+        stream.newest_delivered = Some(frame_seq);
+        self.stats.delivered += 1;
+        Some(AssembledFrame { session: h.session, device_id: h.device_id, frame_seq, frame })
+    }
+
+    /// Cross-field checks a well-formed sender can never violate:
+    /// chunk geometry must match `frame_len`, FEC fields must agree.
+    fn semantically_valid(&self, h: &DgramHeader) -> bool {
+        let frame_len = h.frame_len as usize;
+        let chunk_count = h.chunk_count as usize;
+        if frame_len < 9 || frame_len > MAX_FRAME {
+            return false;
+        }
+        if chunk_count != expected_chunks(frame_len) {
+            return false;
+        }
+        if h.kind == KIND_PARITY {
+            if h.fec_k == 0 {
+                return false;
+            }
+            let groups = chunk_count.div_ceil(h.fec_k as usize);
+            if h.fec_group as usize >= groups || h.chunk_index != h.fec_group {
+                return false;
+            }
+            let plen = group_parity_len(frame_len, chunk_count, h.fec_k as usize, h.fec_group as usize);
+            if h.payload_len as usize != plen {
+                return false;
+            }
+        } else {
+            let i = h.chunk_index as usize;
+            if i >= chunk_count {
+                return false;
+            }
+            if h.payload_len as usize != chunk_len(frame_len, i, chunk_count) {
+                return false;
+            }
+            let want_group = if h.fec_k > 0 { h.chunk_index / h.fec_k } else { 0 };
+            if h.fec_group != want_group {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Datagram-level fault injection for the UDP uplink — the counterpart
+/// of [`ImpairedLink`](super::ImpairedLink), operating on whole
+/// datagrams instead of whole messages. Loss/`drop_every`, delay +
+/// jitter, hold-one reorder, and duplication share the message-level
+/// semantics; a `None` config is a transparent pass-through.
+pub struct DgramImpairer {
+    cfg: Option<ImpairConfig>,
+    rng: Pcg64,
+    /// A datagram held back for reordering, emitted after the next one.
+    held: Option<Vec<u8>>,
+    stats: ImpairStats,
+}
+
+impl DgramImpairer {
+    /// Build an impairer; `None` passes every datagram through.
+    pub fn new(cfg: Option<ImpairConfig>) -> DgramImpairer {
+        let seed = cfg.as_ref().map(|c| c.seed).unwrap_or(0);
+        DgramImpairer { cfg, rng: Pcg64::new(seed), held: None, stats: ImpairStats::default() }
+    }
+
+    /// What the impairer has done so far.
+    pub fn stats(&self) -> ImpairStats {
+        self.stats
+    }
+
+    /// Offer one datagram; `tx` is called zero, one or two times with
+    /// the datagrams that actually reach the wire (in wire order).
+    pub fn send(&mut self, dgram: Vec<u8>, tx: &mut dyn FnMut(&[u8]) -> Result<()>) -> Result<()> {
+        let Some(cfg) = self.cfg else {
+            return tx(&dgram);
+        };
+        self.stats.data_msgs += 1;
+        let k = self.stats.data_msgs;
+        let deterministic_drop = cfg.drop_every > 0 && k % cfg.drop_every == 0;
+        if deterministic_drop || (cfg.loss > 0.0 && self.rng.uniform() < cfg.loss) {
+            self.stats.dropped += 1;
+            return Ok(());
+        }
+        if cfg.delay > Duration::ZERO || cfg.jitter > Duration::ZERO {
+            let jitter = cfg.jitter.mul_f64(self.rng.uniform());
+            std::thread::sleep(cfg.delay + jitter);
+            self.stats.delayed += 1;
+        }
+        let duplicate = cfg.dup > 0.0 && self.rng.uniform() < cfg.dup;
+        if cfg.reorder > 0.0 && self.held.is_none() && self.rng.uniform() < cfg.reorder {
+            self.held = Some(dgram);
+            self.stats.reordered += 1;
+            return Ok(());
+        }
+        tx(&dgram)?;
+        if duplicate {
+            self.stats.duplicated += 1;
+            tx(&dgram)?;
+        }
+        if let Some(h) = self.held.take() {
+            tx(&h)?;
+        }
+        Ok(())
+    }
+
+    /// Flush a trailing held (reordered) datagram, if any.
+    pub fn finish(&mut self, tx: &mut dyn FnMut(&[u8]) -> Result<()>) -> Result<()> {
+        if let Some(h) = self.held.take() {
+            tx(&h)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic fake frame: SCMI header + patterned payload.
+    fn frame_of(len: usize) -> Vec<u8> {
+        assert!(len >= 9);
+        let mut f = Vec::with_capacity(len);
+        f.extend_from_slice(b"SCMI");
+        f.push(2);
+        f.extend_from_slice(&((len - 9) as u32).to_le_bytes());
+        f.extend((9..len).map(|i| (i * 31 % 251) as u8));
+        f
+    }
+
+    fn feed_all(asm: &mut DgramAssembler, dgrams: &[Vec<u8>]) -> Vec<AssembledFrame> {
+        dgrams.iter().filter_map(|d| asm.feed(d)).collect()
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = DgramHeader {
+            kind: KIND_DATA,
+            device_id: 3,
+            frame_seq: 42,
+            chunk_index: 1,
+            chunk_count: 2,
+            frame_len: 1200,
+            fec_k: 2,
+            fec_group: 0,
+            payload_len: 100,
+            session: "north-7".into(),
+        };
+        let d = encode_dgram(&h, &[7u8; 100]);
+        let (back, payload) = parse_dgram(&d).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(payload, &[7u8; 100][..]);
+    }
+
+    #[test]
+    fn datagrams_fit_the_mtu_budget_at_max_session_len() {
+        let frame = frame_of(10 * CHUNK_PAYLOAD);
+        let session = "s".repeat(255);
+        for d in chunk_frame(&frame, &session, 0, 1, 4).unwrap() {
+            assert!(d.len() <= MAX_DGRAM, "{} > {MAX_DGRAM}", d.len());
+        }
+    }
+
+    #[test]
+    fn in_order_reassembly_is_byte_identical() {
+        for len in [9, 100, CHUNK_PAYLOAD, CHUNK_PAYLOAD + 1, 3 * CHUNK_PAYLOAD + 77] {
+            let frame = frame_of(len);
+            let dgrams = chunk_frame(&frame, "s", 1, 5, 0).unwrap();
+            assert_eq!(dgrams.len(), expected_chunks(len));
+            let mut asm = DgramAssembler::new();
+            let got = feed_all(&mut asm, &dgrams);
+            assert_eq!(got.len(), 1, "len {len}");
+            assert_eq!(got[0].frame, frame, "len {len}");
+            assert_eq!(got[0].frame_seq, 5);
+            assert_eq!(asm.stats().delivered, 1);
+            assert_eq!(asm.stats().malformed, 0);
+        }
+    }
+
+    #[test]
+    fn parity_recovers_any_single_chunk_loss() {
+        let frame = frame_of(4 * CHUNK_PAYLOAD + 13);
+        let k = 2u32;
+        let dgrams = chunk_frame(&frame, "s", 0, 9, k).unwrap();
+        let n_data = expected_chunks(frame.len());
+        assert_eq!(dgrams.len(), n_data + n_data.div_ceil(k as usize));
+        for drop in 0..n_data {
+            let kept: Vec<Vec<u8>> = dgrams
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop)
+                .map(|(_, d)| d.clone())
+                .collect();
+            let mut asm = DgramAssembler::new();
+            let got = feed_all(&mut asm, &kept);
+            assert_eq!(got.len(), 1, "dropped chunk {drop}");
+            assert_eq!(got[0].frame, frame, "dropped chunk {drop}");
+            assert_eq!(asm.stats().fec_recovered, 1, "dropped chunk {drop}");
+        }
+    }
+
+    #[test]
+    fn two_losses_in_one_group_never_complete_or_corrupt() {
+        let frame = frame_of(4 * CHUNK_PAYLOAD);
+        let dgrams = chunk_frame(&frame, "s", 0, 1, 4).unwrap();
+        // Chunks 0 and 1 share the single k=4 group: unrecoverable.
+        let kept: Vec<Vec<u8>> = dgrams[2..].to_vec();
+        let mut asm = DgramAssembler::new();
+        assert!(feed_all(&mut asm, &kept).is_empty());
+        assert_eq!(asm.stats().fec_recovered, 0);
+        assert_eq!(asm.stats().delivered, 0);
+        assert_eq!(asm.partial_len(), 1, "stays partial, not corrupt");
+    }
+
+    #[test]
+    fn newer_frame_supersedes_partial_and_stale_is_counted() {
+        let f1 = frame_of(2 * CHUNK_PAYLOAD);
+        let f2 = frame_of(2 * CHUNK_PAYLOAD + 5);
+        let d1 = chunk_frame(&f1, "s", 0, 1, 0).unwrap();
+        let d2 = chunk_frame(&f2, "s", 0, 2, 0).unwrap();
+        let mut asm = DgramAssembler::new();
+        assert!(asm.feed(&d1[0]).is_none());
+        // First datagram of frame 2 discards the frame-1 partial.
+        assert!(asm.feed(&d2[0]).is_none());
+        assert_eq!(asm.stats().stale_dropped, 1, "superseded partial counted");
+        // Late frame-1 traffic is stale, even though it was never done.
+        assert!(asm.feed(&d1[1]).is_none());
+        assert_eq!(asm.stats().stale_dropped, 2);
+        let got = asm.feed(&d2[1]).unwrap();
+        assert_eq!(got.frame, f2);
+        // Anything at or below the delivered seq is stale.
+        assert!(asm.feed(&d1[0]).is_none());
+        assert!(asm.feed(&d2[0]).is_none());
+        assert_eq!(asm.stats().stale_dropped, 4);
+        assert_eq!(asm.stats().delivered, 1);
+    }
+
+    #[test]
+    fn duplicates_are_counted_and_ignored() {
+        let frame = frame_of(2 * CHUNK_PAYLOAD + 3);
+        let dgrams = chunk_frame(&frame, "s", 0, 1, 2).unwrap();
+        let mut asm = DgramAssembler::new();
+        let mut doubled = Vec::new();
+        for d in &dgrams {
+            doubled.push(d.clone());
+            doubled.push(d.clone());
+        }
+        let got = feed_all(&mut asm, &doubled);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].frame, frame);
+        // Every second copy is a dup until the frame completes; copies
+        // after completion are stale instead.
+        assert_eq!(asm.stats().dup + asm.stats().stale_dropped, dgrams.len() as u64);
+        assert_eq!(asm.stats().fec_recovered, 0, "dups must not trigger recovery");
+    }
+
+    #[test]
+    fn streams_are_independent_per_session_and_device() {
+        let f = frame_of(CHUNK_PAYLOAD + 1);
+        let a = chunk_frame(&f, "a", 0, 1, 0).unwrap();
+        let b = chunk_frame(&f, "b", 0, 1, 0).unwrap();
+        let c = chunk_frame(&f, "a", 1, 1, 0).unwrap();
+        let mut asm = DgramAssembler::new();
+        let mut mixed = Vec::new();
+        for i in 0..a.len() {
+            mixed.extend([a[i].clone(), b[i].clone(), c[i].clone()]);
+        }
+        let got = feed_all(&mut asm, &mixed);
+        assert_eq!(got.len(), 3);
+        let mut keys: Vec<(String, u32)> =
+            got.iter().map(|g| (g.session.clone(), g.device_id)).collect();
+        keys.sort();
+        assert_eq!(keys, vec![("a".into(), 0), ("a".into(), 1), ("b".into(), 0)]);
+    }
+
+    #[test]
+    fn malformed_datagrams_are_counted_never_panic() {
+        let frame = frame_of(2 * CHUNK_PAYLOAD);
+        let dgrams = chunk_frame(&frame, "s", 0, 7, 2).unwrap();
+        let mut asm = DgramAssembler::new();
+        // Truncations of a valid datagram at every length.
+        for cut in 0..dgrams[0].len() {
+            assert!(asm.feed(&dgrams[0][..cut]).is_none());
+        }
+        // Bad magic / version / kind.
+        for (at, v) in [(0usize, b'X'), (4, 99u8), (5, 7u8)] {
+            let mut d = dgrams[0].clone();
+            d[at] = v;
+            assert!(asm.feed(&d).is_none());
+        }
+        let malformed_so_far = asm.stats().malformed;
+        assert_eq!(malformed_so_far, dgrams[0].len() as u64 + 3);
+        // The stream still works after the garbage.
+        let got = feed_all(&mut asm, &dgrams);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].frame, frame);
+    }
+
+    #[test]
+    fn inconsistent_geometry_is_malformed() {
+        let frame = frame_of(3 * CHUNK_PAYLOAD);
+        let dgrams = chunk_frame(&frame, "s", 0, 1, 0).unwrap();
+        let mut asm = DgramAssembler::new();
+        assert!(asm.feed(&dgrams[0]).is_none());
+        // Re-encode chunk 1 claiming a different frame_len: same seq,
+        // conflicting geometry.
+        let (mut h, payload) = parse_dgram(&dgrams[1]).unwrap();
+        h.frame_len += CHUNK_PAYLOAD as u32;
+        h.chunk_count += 1;
+        let forged = encode_dgram(&h, payload);
+        assert!(asm.feed(&forged).is_none());
+        assert_eq!(asm.stats().malformed, 1);
+        // The honest remainder still completes the frame.
+        let got = feed_all(&mut asm, &dgrams[1..]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].frame, frame);
+    }
+
+    #[test]
+    fn impairer_duplicates_and_reorders_deterministically() {
+        let mk = |i: u8| vec![i; 4];
+        let mut out: Vec<Vec<u8>> = Vec::new();
+        let mut tx = |d: &[u8]| {
+            out.push(d.to_vec());
+            Ok(())
+        };
+        let cfg = ImpairConfig { dup: 1.0, ..Default::default() };
+        let mut imp = DgramImpairer::new(Some(cfg));
+        imp.send(mk(1), &mut tx).unwrap();
+        imp.send(mk(2), &mut tx).unwrap();
+        assert_eq!(out, vec![mk(1), mk(1), mk(2), mk(2)]);
+        assert_eq!(imp.stats().duplicated, 2);
+
+        let mut out: Vec<Vec<u8>> = Vec::new();
+        let mut tx = |d: &[u8]| {
+            out.push(d.to_vec());
+            Ok(())
+        };
+        let cfg = ImpairConfig { reorder: 1.0, ..Default::default() };
+        let mut imp = DgramImpairer::new(Some(cfg));
+        imp.send(mk(1), &mut tx).unwrap(); // held
+        imp.send(mk(2), &mut tx).unwrap(); // sent, then releases 1
+        imp.finish(&mut tx).unwrap();
+        assert_eq!(out, vec![mk(2), mk(1)]);
+        assert_eq!(imp.stats().reordered, 1);
+    }
+
+    #[test]
+    fn impairer_drop_every_is_deterministic() {
+        let mut n = 0usize;
+        let mut tx = |_: &[u8]| {
+            n += 1;
+            Ok(())
+        };
+        let cfg = ImpairConfig { drop_every: 3, ..Default::default() };
+        let mut imp = DgramImpairer::new(Some(cfg));
+        for i in 0..9u8 {
+            imp.send(vec![i], &mut tx).unwrap();
+        }
+        assert_eq!(n, 6);
+        assert_eq!(imp.stats().dropped, 3);
+    }
+}

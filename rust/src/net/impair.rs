@@ -15,7 +15,10 @@
 //!   the device's writer thread it delays transmission without blocking
 //!   head execution);
 //! - **reorder** — a data message is held back and emitted after the
-//!   next one, swapping adjacent frames on the wire.
+//!   next one, swapping adjacent frames on the wire;
+//! - **dup** — a data message is written twice, exercising receiver-side
+//!   deduplication (`FrameSync` duplicate accounting on TCP, the
+//!   [`dgram`](super::dgram) assembler's `dup` counter on UDP).
 //!
 //! Control messages (`Hello`, `Subscribe`, `Bye`, …) always pass and
 //! flush any held frame first, so handshakes stay intact and `Bye`
@@ -42,6 +45,10 @@ pub struct ImpairConfig {
     pub jitter: Duration,
     /// Probability of holding a data message until after the next one.
     pub reorder: f64,
+    /// Probability of sending each data message twice (duplication on
+    /// the wire — the datagram transport must dedup, TCP's `FrameSync`
+    /// counts it as a duplicate arrival).
+    pub dup: f64,
     /// RNG seed — runs are reproducible per (seed, message sequence).
     pub seed: u64,
 }
@@ -54,6 +61,7 @@ impl Default for ImpairConfig {
             delay: Duration::ZERO,
             jitter: Duration::ZERO,
             reorder: 0.0,
+            dup: 0.0,
             seed: 1,
         }
     }
@@ -74,6 +82,11 @@ impl ImpairConfig {
             "reorder probability must be in [0, 1], got {}",
             self.reorder
         );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.dup),
+            "dup probability must be in [0, 1], got {}",
+            self.dup
+        );
         Ok(())
     }
 }
@@ -89,6 +102,8 @@ pub struct ImpairStats {
     pub delayed: u64,
     /// Data messages held back past their successor.
     pub reordered: u64,
+    /// Data messages sent twice by duplication injection.
+    pub duplicated: u64,
 }
 
 /// A protocol-message writer with fault injection. `None` config is a
@@ -152,6 +167,10 @@ impl<W: Write> ImpairedLink<W> {
             return Ok(());
         }
         self.write_frame(&frame)?;
+        if cfg.dup > 0.0 && self.rng.uniform() < cfg.dup {
+            self.stats.duplicated += 1;
+            self.write_frame(&frame)?;
+        }
         self.release_held()
     }
 
@@ -219,6 +238,22 @@ mod tests {
         assert!(ImpairConfig { loss: 5.0, ..Default::default() }.validate().is_err());
         assert!(ImpairConfig { loss: -0.1, ..Default::default() }.validate().is_err());
         assert!(ImpairConfig { reorder: 1.5, ..Default::default() }.validate().is_err());
+        assert!(ImpairConfig { dup: 1.0, ..Default::default() }.validate().is_ok());
+        assert!(ImpairConfig { dup: 1.1, ..Default::default() }.validate().is_err());
+        assert!(ImpairConfig { dup: -0.5, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn dup_writes_each_data_message_twice() {
+        let cfg = ImpairConfig { dup: 1.0, ..Default::default() };
+        let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
+        link.send(&feat(0)).unwrap();
+        link.send(&feat(1)).unwrap();
+        link.send(&Msg::Bye).unwrap();
+        let msgs = decode_all(link.get_mut());
+        assert_eq!(frame_ids(&msgs), vec![0, 0, 1, 1], "each data frame doubled");
+        assert_eq!(msgs.last(), Some(&Msg::Bye), "control messages are never duplicated");
+        assert_eq!(link.stats().duplicated, 2);
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! 1 Gbps-LAN bandwidth shaper used to emulate the paper's testbed link
 //! on localhost TCP, the message-level fault-injection layer
 //! ([`ImpairedLink`]) that lossy scenarios run their uplinks through,
-//! and the readiness [`poll`] layer the event-loop server stands on.
+//! the readiness [`poll`] layer the event-loop server stands on, and
+//! the latest-wins [`dgram`] transport that carries feature frames over
+//! UDP with optional XOR-parity FEC.
 
+pub mod dgram;
 mod impair;
 pub mod poll;
 mod proto;
@@ -11,6 +14,10 @@ mod quant;
 mod shaper;
 pub mod spec;
 
+pub use dgram::{
+    chunk_frame, AssembledFrame, DgramAssembler, DgramImpairer, DgramStats, CHUNK_PAYLOAD,
+    MAX_DGRAM,
+};
 pub use impair::{ImpairConfig, ImpairStats, ImpairedLink};
 pub use proto::{
     encode_frame, read_msg, write_msg, FrameAssembler, Msg, RawFrame, WireDetection,

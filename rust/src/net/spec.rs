@@ -27,6 +27,84 @@ pub const SPEC_END: &str = "<!-- wire-spec-end -->";
 pub const ENCODINGS: &[&str] =
     &["u32", "u64", "tensor", "qtensor", "detections", "session", "capture"];
 
+/// Marker opening the machine-readable datagram-header table.
+pub const DGRAM_SPEC_BEGIN: &str = "<!-- dgram-spec-begin -->";
+/// Marker closing the machine-readable datagram-header table.
+pub const DGRAM_SPEC_END: &str = "<!-- dgram-spec-end -->";
+
+/// Encodings the datagram-header table may use. Each maps 1:1 to a
+/// `put_<encoding>` helper in `net/dgram.rs`. Every header field is
+/// required — datagrams are self-describing, so the table carries no
+/// presence column.
+pub const DGRAM_ENCODINGS: &[&str] = &["u8", "u16", "u32", "u64", "session"];
+
+/// One field row of the datagram-header table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DgramFieldSpec {
+    /// Field name, matching the local the encoder passes to `put_*`.
+    pub name: String,
+    /// Encoding name (one of [`DGRAM_ENCODINGS`]).
+    pub encoding: String,
+}
+
+/// Parse the datagram-header field table out of the protocol document.
+///
+/// Same contract as [`parse_spec_table`], for the datagram header: the
+/// table between [`DGRAM_SPEC_BEGIN`]/[`DGRAM_SPEC_END`] is the single
+/// source of truth for header field order, cross-checked against the
+/// `put_header_fields` sequence in `net/dgram.rs` by the xtask lint and
+/// exercised by `tests/wire_spec.rs` round-trips.
+pub fn parse_dgram_spec(doc: &str) -> Result<Vec<DgramFieldSpec>, String> {
+    let begin = doc
+        .find(DGRAM_SPEC_BEGIN)
+        .ok_or_else(|| format!("spec marker {DGRAM_SPEC_BEGIN:?} not found in document"))?;
+    let rest = &doc[begin + DGRAM_SPEC_BEGIN.len()..];
+    let end = rest.find(DGRAM_SPEC_END).ok_or_else(|| {
+        format!("spec marker {DGRAM_SPEC_END:?} not found after {DGRAM_SPEC_BEGIN:?}")
+    })?;
+    let region = &rest[..end];
+
+    let mut rows = region.lines().map(str::trim).filter(|l| l.starts_with('|'));
+    let header = rows.next().ok_or("dgram spec region contains no table")?;
+    let head_cells = cells(header);
+    let want = ["field", "encoding"];
+    if head_cells.iter().map(String::as_str).collect::<Vec<_>>() != want {
+        return Err(format!("dgram spec table header must be {want:?}, got {head_cells:?}"));
+    }
+    let separator = rows.next().ok_or("dgram spec table missing separator row")?;
+    if !cells(separator).iter().all(|c| !c.is_empty() && c.chars().all(|ch| ch == '-' || ch == ':'))
+    {
+        return Err(format!("second dgram spec row must be the |---| separator, got {separator:?}"));
+    }
+
+    let mut fields: Vec<DgramFieldSpec> = Vec::new();
+    for row in rows {
+        let c = cells(row);
+        if c.len() != 2 {
+            return Err(format!("dgram spec row must have 2 columns, got {} in {row:?}", c.len()));
+        }
+        let (name, encoding) = (&c[0], &c[1]);
+        if name.is_empty() {
+            return Err(format!("empty field name in dgram spec row {row:?}"));
+        }
+        if !DGRAM_ENCODINGS.contains(&encoding.as_str()) {
+            return Err(format!(
+                "unknown encoding {encoding:?} for dgram field {name} \
+                 (want one of {DGRAM_ENCODINGS:?})"
+            ));
+        }
+        if fields.iter().any(|f| f.name == *name) {
+            return Err(format!("duplicate field {name:?} in dgram spec table"));
+        }
+        fields.push(DgramFieldSpec { name: name.clone(), encoding: encoding.clone() });
+    }
+
+    if fields.is_empty() {
+        return Err("dgram spec table has no field rows".into());
+    }
+    Ok(fields)
+}
+
 /// Whether (and how) a field may be absent from a payload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Presence {
@@ -276,5 +354,47 @@ mod tests {
         assert!(parse_spec_table("no markers here").is_err());
         let doc = format!("{SPEC_BEGIN}\n| message | type | field | encoding | presence |\n");
         assert!(parse_spec_table(&doc).unwrap_err().contains("wire-spec-end"));
+    }
+
+    fn dgram_table(rows: &str) -> String {
+        format!(
+            "intro text\n{DGRAM_SPEC_BEGIN}\n\
+             | field | encoding |\n\
+             |---|---|\n\
+             {rows}\n{DGRAM_SPEC_END}\ntrailing text\n"
+        )
+    }
+
+    #[test]
+    fn parses_a_minimal_dgram_table() {
+        let doc = dgram_table(
+            "| ver | u8 |\n\
+             | frame_seq | u64 |\n\
+             | session | session |",
+        );
+        let fields = parse_dgram_spec(&doc).unwrap();
+        assert_eq!(fields.len(), 3);
+        assert_eq!(fields[0], DgramFieldSpec { name: "ver".into(), encoding: "u8".into() });
+        assert_eq!(fields[2].encoding, "session");
+    }
+
+    #[test]
+    fn dgram_table_rejects_bad_rows() {
+        let doc = dgram_table("| x | tensor |");
+        assert!(parse_dgram_spec(&doc).unwrap_err().contains("unknown encoding"));
+        let doc = dgram_table("| x | u8 |\n| x | u16 |");
+        assert!(parse_dgram_spec(&doc).unwrap_err().contains("duplicate field"));
+        assert!(parse_dgram_spec("no markers").unwrap_err().contains("dgram-spec-begin"));
+        let doc = format!("{DGRAM_SPEC_BEGIN}\n| field | encoding |\n");
+        assert!(parse_dgram_spec(&doc).unwrap_err().contains("dgram-spec-end"));
+    }
+
+    #[test]
+    fn dgram_tables_do_not_collide_with_the_message_table() {
+        let msg = table("| Hello | 1 | device_id | u32 | required |");
+        let dg = dgram_table("| ver | u8 |");
+        let doc = format!("{msg}\n{dg}");
+        assert!(parse_spec_table(&doc).is_ok());
+        assert!(parse_dgram_spec(&doc).is_ok());
     }
 }

@@ -28,7 +28,7 @@
 
 use crate::cli::Args;
 use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
-use crate::coordinator::device::{run_device, DeviceConfig, DeviceReport};
+use crate::coordinator::device::{run_device, DeviceConfig, DeviceReport, Transport};
 use crate::coordinator::scheduler::LossPolicy;
 use crate::coordinator::server::{run_server_until, ServerConfig, ServerStop};
 use crate::coordinator::session::SessionConfig;
@@ -118,6 +118,15 @@ pub struct ScenarioSpec {
     pub max_batch: usize,
     /// Batch collection window (`batch_window_ms` / `--batch-window-ms`).
     pub batch_window: Duration,
+    /// Feature uplink transport the fleet uses (`"tcp"` or `"udp"`).
+    /// UDP ships the same framed bytes chunked into datagrams with
+    /// latest-wins reassembly; the control plane (Hello / Subscribe /
+    /// Result / Bye) always rides TCP. See docs/WIRE_PROTOCOL.md,
+    /// "Datagram transport".
+    pub transport: Transport,
+    /// XOR-parity group size for the UDP uplink (`fec_k` JSON key /
+    /// `--fec`); 0 = FEC off. Only meaningful with `transport: udp`.
+    pub fec_k: u32,
     /// Sessions the server hosts.
     pub sessions: Vec<SessionSpec>,
     /// Device workers feeding them.
@@ -163,6 +172,8 @@ impl ScenarioSpec {
             backend_threads: 2,
             max_batch: 1,
             batch_window: Duration::from_millis(2),
+            transport: Transport::Tcp,
+            fec_k: 0,
             sessions: Vec::new(),
             devices: Vec::new(),
             settle: Duration::ZERO,
@@ -294,6 +305,7 @@ impl ScenarioSpec {
     ///   "name": "mine", "seed": 7, "port": 0,
     ///   "backend": "native", "backend_threads": 2, "settle_ms": 0,
     ///   "max_batch": 4, "batch_window_ms": 2,
+    ///   "transport": "udp", "fec_k": 4,
     ///   "sessions": [
     ///     {"name": "north", "variant": "max", "deadline_ms": 250, "policy": "zero-fill"}
     ///   ],
@@ -302,7 +314,7 @@ impl ScenarioSpec {
     ///      "bandwidth_mbps": 300, "quantize": false,
     ///      "start_frame": 0, "start_delay_ms": 0,
     ///      "impair": {"loss": 0.1, "drop_every": 0, "delay_ms": 0,
-    ///                 "jitter_ms": 0, "reorder": 0, "seed": 1}}
+    ///                 "jitter_ms": 0, "reorder": 0, "dup": 0, "seed": 1}}
     ///   ]
     /// }
     /// ```
@@ -358,6 +370,8 @@ impl ScenarioSpec {
                 "max_batch",
                 "batch_window_ms",
                 "settle_ms",
+                "transport",
+                "fec_k",
                 "sessions",
                 "devices",
             ],
@@ -400,7 +414,7 @@ impl ScenarioSpec {
                 Some(i) => {
                     check_keys(
                         i,
-                        &["loss", "drop_every", "delay_ms", "jitter_ms", "reorder", "seed"],
+                        &["loss", "drop_every", "delay_ms", "jitter_ms", "reorder", "dup", "seed"],
                         "impair",
                     )?;
                     let cfg = ImpairConfig {
@@ -409,6 +423,7 @@ impl ScenarioSpec {
                         delay: Duration::from_millis(u64_or(i, "delay_ms", 0)?),
                         jitter: Duration::from_millis(u64_or(i, "jitter_ms", 0)?),
                         reorder: f64_or(i, "reorder", 0.0)?,
+                        dup: f64_or(i, "dup", 0.0)?,
                         seed: u64_or(i, "seed", 1)?,
                     };
                     Some(cfg)
@@ -439,6 +454,11 @@ impl ScenarioSpec {
             backend_threads: u64_or(j, "backend_threads", 2)? as usize,
             max_batch: u64_or(j, "max_batch", 1)?.max(1) as usize,
             batch_window: Duration::from_millis(u64_or(j, "batch_window_ms", 2)?),
+            transport: Transport::parse(match j.get("transport") {
+                Some(v) => v.as_str()?,
+                None => "tcp",
+            })?,
+            fec_k: u64_or(j, "fec_k", 0)? as u32,
             sessions,
             devices,
             settle: Duration::from_millis(u64_or(j, "settle_ms", 0)?),
@@ -449,6 +469,10 @@ impl ScenarioSpec {
     fn validate(&self, meta: &ModelMeta) -> Result<()> {
         anyhow::ensure!(!self.sessions.is_empty(), "scenario has no sessions");
         anyhow::ensure!(!self.devices.is_empty(), "scenario has no devices");
+        anyhow::ensure!(
+            self.transport == Transport::Udp || self.fec_k == 0,
+            "fec_k applies to the datagram uplink; set \"transport\": \"udp\""
+        );
         let mut seen = std::collections::BTreeSet::new();
         for s in &self.sessions {
             anyhow::ensure!(seen.insert(&s.name), "duplicate session {:?}", s.name);
@@ -549,6 +573,28 @@ pub struct ServerStats {
     /// Mean frames per backend call over the `batch_occupancy` series
     /// (0 when batching is off).
     pub batch_occupancy_mean: f64,
+    /// Datagrams received on the UDP feature socket (0 in TCP runs).
+    pub dgram_rx: u64,
+    /// Stale datagrams plus superseded partial frames dropped by
+    /// latest-wins reassembly.
+    pub dgram_stale_dropped: u64,
+    /// Chunks reconstructed from XOR parity.
+    pub fec_recovered: u64,
+    /// Duplicate datagrams ignored by the assembler.
+    pub dgram_dup: u64,
+    /// Unparseable or inconsistent datagrams dropped (never integrated).
+    pub dgram_malformed: u64,
+}
+
+/// Pooled end-to-end latencies from the paired TCP and UDP runs of
+/// `scmii scenario --transport both`, serialized under
+/// `transport_compare` in `BENCH_e2e.json`.
+#[derive(Clone, Debug)]
+pub struct TransportCompare {
+    /// Pooled per-frame e2e latencies (seconds) over the TCP run.
+    pub tcp_e2e_secs: Vec<f64>,
+    /// Pooled per-frame e2e latencies (seconds) over the UDP run.
+    pub udp_e2e_secs: Vec<f64>,
 }
 
 /// The full scenario outcome, serialized as `BENCH_e2e.json`.
@@ -558,12 +604,16 @@ pub struct ScenarioReport {
     pub scenario: String,
     /// Backend the run executed on.
     pub backend: String,
+    /// Feature uplink transport the run used (`"tcp"` or `"udp"`).
+    pub transport: String,
     /// Per-session outcomes.
     pub sessions: Vec<SessionReport>,
     /// Per-device outcomes.
     pub devices: Vec<DeviceRow>,
     /// Server-side connection + batching accounting.
     pub server: ServerStats,
+    /// UDP-vs-TCP comparison; `Some` only for `--transport both`.
+    pub transport_compare: Option<TransportCompare>,
 }
 
 fn ms_summary(xs_secs: &[f64]) -> Json {
@@ -581,10 +631,23 @@ fn ms_summary(xs_secs: &[f64]) -> Json {
 impl ScenarioReport {
     /// Serialize to the `BENCH_e2e.json` schema (see
     /// `docs/BENCHMARKS.md`).
+    /// Every session's per-frame e2e latencies pooled into one series
+    /// (the `--transport both` comparison operand).
+    pub fn pooled_e2e_secs(&self) -> Vec<f64> {
+        self.sessions.iter().flat_map(|s| s.e2e_secs.iter().copied()).collect()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("scenario", Json::Str(self.scenario.clone()))
-            .set("backend", Json::Str(self.backend.clone()));
+            .set("backend", Json::Str(self.backend.clone()))
+            .set("transport", Json::Str(self.transport.clone()));
+        if let Some(tc) = &self.transport_compare {
+            let mut o = Json::obj();
+            o.set("tcp_e2e_ms", ms_summary(&tc.tcp_e2e_secs))
+                .set("udp_e2e_ms", ms_summary(&tc.udp_e2e_secs));
+            j.set("transport_compare", o);
+        }
         j.set(
             "sessions",
             Json::Arr(
@@ -652,7 +715,12 @@ impl ScenarioReport {
             .set("sink_dropped", Json::Num(sv.sink_dropped as f64))
             .set("batch_backend_calls", Json::Num(sv.batch_backend_calls as f64))
             .set("batch_frames", Json::Num(sv.batch_frames as f64))
-            .set("batch_occupancy_mean", Json::Num(sv.batch_occupancy_mean));
+            .set("batch_occupancy_mean", Json::Num(sv.batch_occupancy_mean))
+            .set("dgram_rx", Json::Num(sv.dgram_rx as f64))
+            .set("dgram_stale_dropped", Json::Num(sv.dgram_stale_dropped as f64))
+            .set("fec_recovered", Json::Num(sv.fec_recovered as f64))
+            .set("dgram_dup", Json::Num(sv.dgram_dup as f64))
+            .set("dgram_malformed", Json::Num(sv.dgram_malformed as f64));
         o
     }
 
@@ -679,7 +747,10 @@ impl ScenarioReport {
 
     /// Human-readable run summary for the CLI.
     pub fn summary(&self) -> String {
-        let mut out = format!("scenario {:?} on backend {}\n", self.scenario, self.backend);
+        let mut out = format!(
+            "scenario {:?} on backend {} over {}\n",
+            self.scenario, self.backend, self.transport
+        );
         for s in &self.sessions {
             let ms: Vec<f64> = s.e2e_secs.iter().map(|v| v * 1e3).collect();
             let wire_ms: Vec<f64> = s.e2e_wire_secs.iter().map(|v| v * 1e3).collect();
@@ -720,6 +791,26 @@ impl ScenarioReport {
              subscribers\n",
             self.server.conn_accepted, self.server.conn_peak, self.server.sink_dropped,
         ));
+        if self.server.dgram_rx > 0 {
+            out.push_str(&format!(
+                "  udp: {} datagrams rx, {} fec recovered, {} stale dropped, {} dup, \
+                 {} malformed\n",
+                self.server.dgram_rx,
+                self.server.fec_recovered,
+                self.server.dgram_stale_dropped,
+                self.server.dgram_dup,
+                self.server.dgram_malformed,
+            ));
+        }
+        if let Some(tc) = &self.transport_compare {
+            let tcp_ms: Vec<f64> = tc.tcp_e2e_secs.iter().map(|v| v * 1e3).collect();
+            let udp_ms: Vec<f64> = tc.udp_e2e_secs.iter().map(|v| v * 1e3).collect();
+            out.push_str(&format!(
+                "  transport compare: tcp e2e p95 {:.1}ms vs udp e2e p95 {:.1}ms\n",
+                stats::percentile(&tcp_ms, 95.0),
+                stats::percentile(&udp_ms, 95.0),
+            ));
+        }
         out
     }
 }
@@ -835,6 +926,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     server_cfg.backend_threads = spec.backend_threads;
     server_cfg.batch.max_batch = spec.max_batch;
     server_cfg.batch.window = spec.batch_window;
+    server_cfg.udp = spec.transport == Transport::Udp;
     server_cfg.trace = spec.trace.clone();
     server_cfg.max_frames = None; // externally stopped
     for s in &spec.sessions {
@@ -957,6 +1049,8 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
             pipelined: true,
             impair: d.impair,
             start_frame: d.start_frame,
+            transport: spec.transport,
+            fec_k: spec.fec_k,
         };
         let paths = paths.clone();
         let delay = d.start_delay;
@@ -1062,13 +1156,20 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         batch_backend_calls,
         batch_frames,
         batch_occupancy_mean,
+        dgram_rx: run.server_metrics.counter("dgram_rx"),
+        dgram_stale_dropped: run.server_metrics.counter("dgram_stale_dropped"),
+        fec_recovered: run.server_metrics.counter("fec_recovered"),
+        dgram_dup: run.server_metrics.counter("dgram_dup"),
+        dgram_malformed: run.server_metrics.counter("dgram_malformed"),
     };
     Ok(ScenarioReport {
         scenario: spec.name.clone(),
         backend: spec.backend.name().to_string(),
+        transport: spec.transport.name().to_string(),
         sessions,
         devices,
         server,
+        transport_compare: None,
     })
 }
 
@@ -1086,6 +1187,10 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         "max-batch",
         "batch-window-ms",
         "seed",
+        "transport",
+        "fec",
+        "loss",
+        "drop-every",
         "list",
         "trace",
     ])?;
@@ -1111,12 +1216,59 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         args.ms_or("batch-window-ms", spec.batch_window.as_millis() as u64)?;
     spec.seed = args.u64_or("seed", spec.seed)?;
     spec.trace = args.str_opt("trace").map(PathBuf::from);
+    // `--transport both` runs the identical fleet over TCP and then UDP
+    // and emits the comparison; otherwise the flag (or the spec's
+    // `transport` key) picks the single uplink.
+    let transport_cli = args.str_opt("transport").map(str::to_string);
+    let both = transport_cli.as_deref() == Some("both");
+    if let Some(t) = transport_cli.as_deref() {
+        if !both {
+            spec.transport = Transport::parse(t)
+                .map_err(|_| anyhow!("unknown transport {t:?} (expected tcp, udp, or both)"))?;
+        }
+    }
+    spec.fec_k = args.u64_or("fec", spec.fec_k as u64)? as u32;
+    // Uniform loss overrides for the CI loss gates. Either flag
+    // *replaces* every device's impairment (rather than stacking on a
+    // builtin's per-frame `drop_every`, which at datagram granularity
+    // would black a device out entirely): `--loss P` is seeded random
+    // loss, `--drop-every N` is deterministic every-Nth loss (N=10 =
+    // exactly 10%, reproducible down to which parity groups recover).
+    if args.str_opt("loss").is_some() || args.str_opt("drop-every").is_some() {
+        let loss = args.f64_or("loss", 0.0)?;
+        let drop_every = args.u64_or("drop-every", 0)?;
+        for (i, d) in spec.devices.iter_mut().enumerate() {
+            d.impair = Some(ImpairConfig {
+                loss,
+                drop_every,
+                seed: i as u64 + 1,
+                ..Default::default()
+            });
+        }
+    }
     let paths = Paths::new(
         &args.str_or("artifacts", "artifacts"),
         &args.str_or("data", "data"),
     );
 
-    let report = run_scenario(&paths, &spec)?;
+    let report = if both {
+        let mut tcp_spec = spec.clone();
+        tcp_spec.transport = Transport::Tcp;
+        tcp_spec.fec_k = 0;
+        tcp_spec.trace = None; // capture (if any) belongs to the primary UDP run
+        let tcp_report = run_scenario(&paths, &tcp_spec)?;
+        print!("{}", tcp_report.summary());
+        let mut udp_spec = spec.clone();
+        udp_spec.transport = Transport::Udp;
+        let mut udp_report = run_scenario(&paths, &udp_spec)?;
+        udp_report.transport_compare = Some(TransportCompare {
+            tcp_e2e_secs: tcp_report.pooled_e2e_secs(),
+            udp_e2e_secs: udp_report.pooled_e2e_secs(),
+        });
+        udp_report
+    } else {
+        run_scenario(&paths, &spec)?
+    };
     print!("{}", report.summary());
     let out_dir = PathBuf::from(args.str_or("out", "."));
     std::fs::create_dir_all(&out_dir)
@@ -1257,6 +1409,50 @@ mod tests {
     }
 
     #[test]
+    fn spec_json_transport_and_fec_parse() {
+        let text = r#"{
+            "name": "u", "transport": "udp", "fec_k": 4,
+            "sessions": [{"name": "a"}],
+            "devices": [{"session": "a", "device": 0,
+                         "impair": {"loss": 0.1, "dup": 0.05}}]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.transport, Transport::Udp);
+        assert_eq!(spec.fec_k, 4);
+        let imp = spec.devices[0].impair.unwrap();
+        assert_eq!(imp.dup, 0.05);
+        spec.validate(&scenario_test_meta()).unwrap();
+
+        // Default is TCP with FEC off — the wire bytes of existing
+        // specs stay byte-identical.
+        let text = r#"{
+            "name": "t",
+            "sessions": [{"name": "a"}],
+            "devices": [{"session": "a", "device": 0}]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.transport, Transport::Tcp);
+        assert_eq!(spec.fec_k, 0);
+
+        // Unknown transports and FEC-on-TCP are spec errors, not
+        // silently-misconfigured runs.
+        let text = r#"{
+            "name": "x", "transport": "sctp",
+            "sessions": [{"name": "a"}],
+            "devices": [{"session": "a", "device": 0}]
+        }"#;
+        assert!(ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).is_err());
+        let text = r#"{
+            "name": "x", "fec_k": 4,
+            "sessions": [{"name": "a"}],
+            "devices": [{"session": "a", "device": 0}]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        let err = spec.validate(&scenario_test_meta()).unwrap_err();
+        assert!(err.to_string().contains("fec_k"), "{err:#}");
+    }
+
+    #[test]
     fn validate_rejects_bad_specs() {
         let meta = scenario_test_meta();
         let mut spec = ScenarioSpec::builtin("ci-smoke").unwrap();
@@ -1288,6 +1484,7 @@ mod tests {
         let report = ScenarioReport {
             scenario: "t".into(),
             backend: "native".into(),
+            transport: "udp".into(),
             sessions: vec![SessionReport {
                 name: "a".into(),
                 variant: IntegrationKind::Max,
@@ -1319,9 +1516,19 @@ mod tests {
                 batch_backend_calls: 2,
                 batch_frames: 3,
                 batch_occupancy_mean: 1.5,
+                dgram_rx: 12,
+                dgram_stale_dropped: 2,
+                fec_recovered: 1,
+                dgram_dup: 1,
+                dgram_malformed: 0,
             },
+            transport_compare: Some(TransportCompare {
+                tcp_e2e_secs: vec![0.010, 0.020, 0.030],
+                udp_e2e_secs: vec![0.008, 0.018, 0.028],
+            }),
         };
         let j = report.to_json();
+        assert_eq!(j.req("transport").unwrap().as_str().unwrap(), "udp");
         let s = &j.req("sessions").unwrap().as_arr().unwrap()[0];
         assert_eq!(s.req("frames_done").unwrap().as_usize().unwrap(), 3);
         let e2e = s.req("e2e_ms").unwrap();
@@ -1345,8 +1552,24 @@ mod tests {
         let sv = j.req("server").unwrap();
         assert_eq!(sv.req("conn_accepted").unwrap().as_usize().unwrap(), 2);
         assert_eq!(sv.req("sink_dropped").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(sv.req("dgram_rx").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(sv.req("dgram_stale_dropped").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(sv.req("fec_recovered").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(sv.req("dgram_dup").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(sv.req("dgram_malformed").unwrap().as_usize().unwrap(), 0);
+        let tc = j.req("transport_compare").unwrap();
+        let tcp_ms = tc.req("tcp_e2e_ms").unwrap();
+        let udp_ms = tc.req("udp_e2e_ms").unwrap();
+        assert_eq!(tcp_ms.req("n").unwrap().as_usize().unwrap(), 3);
+        assert!(
+            udp_ms.req("p95").unwrap().as_f64().unwrap()
+                < tcp_ms.req("p95").unwrap().as_f64().unwrap()
+        );
         assert!(report.summary().contains("session a"));
         assert!(report.summary().contains("2 conns accepted"));
+        assert!(report.summary().contains("over udp"));
+        assert!(report.summary().contains("12 datagrams rx"));
+        assert!(report.summary().contains("transport compare"));
 
         // The fleet-scale digest pools sessions and carries the server
         // accounting through.

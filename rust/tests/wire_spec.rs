@@ -22,8 +22,16 @@
 //! * a zero capture stamp must encode byte-identically to the frame
 //!   that omits the stamp entirely (the `optional-omit-zero` rule that
 //!   keeps unstamped traffic decodable by legacy subscribers).
+//!
+//! The datagram-header table (Appendix A.1) gets the same treatment:
+//! headers re-encoded from the parsed rows alone must match
+//! `encode_dgram` byte for byte and survive `parse_dgram`, and every
+//! strict prefix of a datagram must be rejected without over-reading.
 
-use scmii::net::spec::{parse_spec_table, MessageSpec, Presence};
+use scmii::net::dgram::{
+    encode_dgram, parse_dgram, DgramHeader, DGRAM_MAGIC, DGRAM_VERSION, KIND_DATA, KIND_PARITY,
+};
+use scmii::net::spec::{parse_dgram_spec, parse_spec_table, MessageSpec, Presence};
 use scmii::net::{encode_frame, read_msg, Msg, QuantTensor, WireDetection, DEFAULT_SESSION};
 use scmii::runtime::HostTensor;
 use scmii::utils::proptest::{property, Gen};
@@ -388,4 +396,97 @@ fn session_name_boundaries_round_trip() {
             assert_eq!(decoded, build_msg(&m.name, &vals));
         }
     }
+}
+
+/// The datagram-header table is pinned field for field: a row added,
+/// removed, renamed, or re-encoded must be a deliberate protocol change
+/// that updates this golden list alongside the document and the
+/// encoder (the xtask lint holds the encoder side of the same
+/// contract).
+#[test]
+fn dgram_spec_table_is_the_pinned_header_layout() {
+    let fields = parse_dgram_spec(DOC).expect("docs/WIRE_PROTOCOL.md dgram spec table parses");
+    let got: Vec<(&str, &str)> =
+        fields.iter().map(|f| (f.name.as_str(), f.encoding.as_str())).collect();
+    assert_eq!(
+        got,
+        [
+            ("ver", "u8"),
+            ("kind", "u8"),
+            ("device_id", "u32"),
+            ("frame_seq", "u64"),
+            ("chunk_index", "u32"),
+            ("chunk_count", "u32"),
+            ("frame_len", "u32"),
+            ("fec_k", "u32"),
+            ("fec_group", "u32"),
+            ("payload_len", "u16"),
+            ("session", "session"),
+        ]
+    );
+}
+
+/// Datagram headers re-encoded from the spec rows alone — field order
+/// and encodings taken from the parsed table, never from `net/dgram.rs`
+/// — must match [`encode_dgram`] byte for byte and round-trip through
+/// [`parse_dgram`]; every strict prefix must be rejected (the parser
+/// never reads past the datagram it was handed).
+#[test]
+fn dgram_header_round_trips_per_spec() {
+    let fields = parse_dgram_spec(DOC).expect("docs/WIRE_PROTOCOL.md dgram spec table parses");
+    property("spec-driven dgram header round-trip", 64, |g: &mut Gen| {
+        const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-";
+        let session: String =
+            (0..g.usize_range(1, 12)).map(|_| *g.choose(ALPHABET) as char).collect();
+        let payload: Vec<u8> = (0..g.usize_range(0, 48)).map(|_| g.u64() as u8).collect();
+        let h = DgramHeader {
+            kind: *g.choose(&[KIND_DATA, KIND_PARITY]),
+            device_id: g.u64() as u32,
+            frame_seq: g.u64(),
+            chunk_index: g.u64() as u32,
+            chunk_count: g.u64() as u32,
+            frame_len: g.u64() as u32,
+            fec_k: g.u64() as u32,
+            fec_group: g.u64() as u32,
+            payload_len: payload.len() as u16,
+            session: session.clone(),
+        };
+
+        // Independent, table-driven serialization (the test's model of a
+        // peer implementing the header from the page).
+        let mut wire = DGRAM_MAGIC.to_vec();
+        for f in &fields {
+            match (f.name.as_str(), f.encoding.as_str()) {
+                ("ver", "u8") => wire.push(DGRAM_VERSION),
+                ("kind", "u8") => wire.push(h.kind),
+                ("device_id", "u32") => wire.extend_from_slice(&h.device_id.to_le_bytes()),
+                ("frame_seq", "u64") => wire.extend_from_slice(&h.frame_seq.to_le_bytes()),
+                ("chunk_index", "u32") => wire.extend_from_slice(&h.chunk_index.to_le_bytes()),
+                ("chunk_count", "u32") => wire.extend_from_slice(&h.chunk_count.to_le_bytes()),
+                ("frame_len", "u32") => wire.extend_from_slice(&h.frame_len.to_le_bytes()),
+                ("fec_k", "u32") => wire.extend_from_slice(&h.fec_k.to_le_bytes()),
+                ("fec_group", "u32") => wire.extend_from_slice(&h.fec_group.to_le_bytes()),
+                ("payload_len", "u16") => wire.extend_from_slice(&h.payload_len.to_le_bytes()),
+                ("session", "session") => {
+                    wire.push(session.len() as u8);
+                    wire.extend_from_slice(session.as_bytes());
+                }
+                (name, enc) => {
+                    panic!("spec names unknown dgram field {name:?} ({enc:?}) — update this test")
+                }
+            }
+        }
+        wire.extend_from_slice(&payload);
+
+        let ours = encode_dgram(&h, &payload);
+        assert_eq!(ours, wire, "encode_dgram disagrees with the dgram spec table");
+        let (parsed, body) = parse_dgram(&wire).expect("spec-built datagram parses");
+        assert_eq!(parsed, h);
+        assert_eq!(body, &payload[..]);
+
+        // Truncation sweep: no strict prefix may parse or over-read.
+        for cut in 0..wire.len() {
+            assert!(parse_dgram(&wire[..cut]).is_err(), "prefix of {cut} bytes must not parse");
+        }
+    });
 }

@@ -1,6 +1,6 @@
 //! Repo-invariant lints: `cargo run -p xtask -- lint`.
 //!
-//! Five hard CI gates, each protecting an invariant the compiler cannot
+//! Six hard CI gates, each protecting an invariant the compiler cannot
 //! see (`.github/workflows/ci.yml` runs this as a required step):
 //!
 //! 1. **Lock hygiene** — serving-path modules must not call
@@ -35,6 +35,11 @@
 //!    pool-plumbing spawn is exempted by a standalone
 //!    `// xtask: lifecycle-spawn` line immediately documenting it;
 //!    dangling markers are themselves violations.
+//! 6. **Datagram-spec conformance** — the UDP datagram header written by
+//!    `put_header_fields` in `rust/src/net/dgram.rs` must match the
+//!    machine-readable table in `docs/WIRE_PROTOCOL.md` (Appendix A.1),
+//!    field-for-field and in order, in both directions. Same
+//!    shared parser module as lint 2 (`rust/src/net/spec.rs`).
 //!
 //! The lints are textual/structural: the crate deliberately does not
 //! depend on `scmii` (a library that fails to build must not take its
@@ -126,7 +131,7 @@ fn main() -> ExitCode {
         Ok(violations) if violations.is_empty() => {
             println!(
                 "xtask lint: OK (lock hygiene, wire spec, metric registry, hot paths, \
-                 conn spawns)"
+                 conn spawns, dgram spec)"
             );
             ExitCode::SUCCESS
         }
@@ -174,6 +179,7 @@ fn lint(root: &Path) -> Result<Vec<Violation>, String> {
     lint_metric_registry(root, &mut violations)?;
     lint_hot_paths(root, &mut violations)?;
     lint_conn_spawn(root, &mut violations)?;
+    lint_dgram_spec(root, &mut violations)?;
     Ok(violations)
 }
 
@@ -1149,6 +1155,157 @@ fn scan_conn_spawn_source(src: &str) -> Vec<(usize, String)> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Lint 6: dgram.rs ↔ docs/WIRE_PROTOCOL.md datagram header table.
+
+fn lint_dgram_spec(root: &Path, violations: &mut Vec<Violation>) -> Result<(), String> {
+    let doc_path = root.join("docs/WIRE_PROTOCOL.md");
+    let doc = read(&doc_path)?;
+    let fields = match spec::parse_dgram_spec(&doc) {
+        Ok(f) => f,
+        Err(e) => {
+            violations.push(Violation { file: rel(root, &doc_path), line: 0, msg: e });
+            return Ok(());
+        }
+    };
+
+    let dgram_path = root.join("rust/src/net/dgram.rs");
+    let file = rel(root, &dgram_path);
+    let src = read(&dgram_path)?;
+    let mut classes = classify(&src);
+    mask_test_mods(&src, &mut classes);
+    let c = condense(&src, &classes, false);
+
+    let (line, puts) = match parse_header_puts(&c) {
+        Ok(p) => p,
+        Err(e) => {
+            violations.push(Violation { file, line: 0, msg: e });
+            return Ok(());
+        }
+    };
+
+    // Bidirectional by construction: equal length plus a per-index
+    // field/encoding match means neither side can have an extra,
+    // missing, or reordered field.
+    if puts.len() != fields.len() {
+        violations.push(Violation {
+            file,
+            line,
+            msg: format!(
+                "put_header_fields writes {} fields, the datagram spec table in \
+                 docs/WIRE_PROTOCOL.md lists {}",
+                puts.len(),
+                fields.len()
+            ),
+        });
+        return Ok(());
+    }
+    for (idx, ((enc, field), row)) in puts.iter().zip(&fields).enumerate() {
+        if *enc != row.encoding || *field != row.name {
+            violations.push(Violation {
+                file: file.clone(),
+                line,
+                msg: format!(
+                    "datagram header field {idx}: put_header_fields writes \
+                     put_{enc}(.., {field}), spec row says {} ({})",
+                    row.name, row.encoding
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Parse the flat `put_<enc>(buf, <field>);` sequence in the body of
+/// `put_header_fields` from the condensed source of dgram.rs. Leading
+/// `let` statements (the header destructuring, the version binding) are
+/// skipped; everything after them must be `put_*` calls — anything else
+/// is an inlined encoding the spec table cannot describe. Returns the
+/// function's source line and the ordered `(encoding, field)` pairs.
+fn parse_header_puts(c: &Condensed) -> Result<(usize, Vec<(String, String)>), String> {
+    let text = &c.text;
+    let f = text
+        .find("fnput_header_fields")
+        .ok_or("dgram.rs: fn put_header_fields not found")?;
+    let line = c.lines[f];
+    let open = (f..text.len())
+        .find(|&j| text.as_bytes()[j] == b'{')
+        .ok_or("put_header_fields: no body")?;
+    let close = brace_block(text, open)?;
+    let mut body = &text[open + 1..close];
+    // Skip leading `let …;` bindings: the destructuring pattern contains
+    // braces, so scan for the `;` at bracket depth zero.
+    while body.starts_with("let") {
+        let b = body.as_bytes();
+        let mut depth = 0usize;
+        let mut semi = None;
+        for (j, &byte) in b.iter().enumerate() {
+            match byte {
+                b'{' | b'(' | b'[' => depth += 1,
+                b'}' | b')' | b']' => depth = depth.saturating_sub(1),
+                b';' if depth == 0 => {
+                    semi = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let semi = semi.ok_or("put_header_fields: unterminated let binding")?;
+        body = &body[semi + 1..];
+    }
+    let b = body.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < body.len() {
+        if !body[i..].starts_with("put_") {
+            return Err(format!(
+                "put_header_fields: non-`put_*` code {:?} — the datagram header must \
+                 stay a flat put_ sequence the spec table can describe",
+                &body[i..body.len().min(i + 24)]
+            ));
+        }
+        i += "put_".len();
+        let e = ident_end(body, i);
+        let enc = body[i..e].to_string();
+        i = e;
+        if b.get(i) != Some(&b'(') {
+            return Err(format!("put_header_fields: put_{enc} is not a call"));
+        }
+        let call_close = paren_block(body, i)?;
+        let args: Vec<&str> = split_top_commas(&body[i + 1..call_close]);
+        i = call_close + 1;
+        if b.get(i) != Some(&b';') {
+            return Err(format!("put_header_fields: put_{enc} missing `;`"));
+        }
+        i += 1;
+        if args.len() != 2 || args[0] != "buf" {
+            return Err(format!(
+                "put_header_fields: put_{enc} must be called as put_{enc}(buf, <field>)"
+            ));
+        }
+        let field = args[1].trim_start_matches(['*', '&']).to_string();
+        if field.is_empty()
+            || !field.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_')
+        {
+            return Err(format!(
+                "put_header_fields: put_{enc} argument {field:?} is not a plain \
+                 identifier"
+            ));
+        }
+        if !spec::DGRAM_ENCODINGS.contains(&enc.as_str()) {
+            return Err(format!(
+                "put_header_fields: unknown encoding put_{enc} (spec knows {:?})",
+                spec::DGRAM_ENCODINGS
+            ));
+        }
+        out.push((enc, field));
+    }
+    if out.is_empty() {
+        return Err("put_header_fields writes no fields".into());
+    }
+    Ok((line, out))
+}
+
 /// Index of the `}` matching the `{` at `open`, counting only
 /// Code-class braces (raw source, unlike [`brace_block`]'s condensed
 /// input).
@@ -1396,6 +1553,48 @@ mod tests {
             "{:?}",
             scan_conn_spawn_source(src)
         );
+    }
+
+    #[test]
+    fn parses_header_puts_past_leading_lets() {
+        let src = "
+            fn put_header_fields(buf: &mut Vec<u8>, h: &DgramHeader) {
+                let DgramHeader { kind, session } = h;
+                let ver = VERSION;
+                put_u8(buf, ver);
+                put_u8(buf, *kind);
+                put_session(buf, session);
+            }";
+        let c = condensed(src, false);
+        let (line, puts) = parse_header_puts(&c).unwrap();
+        assert_eq!(line, 2);
+        assert_eq!(
+            puts,
+            vec![
+                ("u8".to_string(), "ver".to_string()),
+                ("u8".to_string(), "kind".to_string()),
+                ("session".to_string(), "session".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn header_puts_reject_inlined_encodings() {
+        let src = "fn put_header_fields(buf: &mut Vec<u8>) { put_u8(buf, v); buf.push(0); }";
+        let c = condensed(src, false);
+        assert!(parse_header_puts(&c).unwrap_err().contains("non-`put_*`"));
+
+        let src = "fn put_header_fields(buf: &mut Vec<u8>) { put_i128(buf, v); }";
+        let c = condensed(src, false);
+        assert!(parse_header_puts(&c).unwrap_err().contains("unknown encoding"));
+
+        let src = "fn put_header_fields(buf: &mut Vec<u8>) { put_u8(&mut out, v); }";
+        let c = condensed(src, false);
+        assert!(parse_header_puts(&c).unwrap_err().contains("put_u8(buf, <field>)"));
+
+        let src = "fn put_header_fields(buf: &mut Vec<u8>) { let x = 1; }";
+        let c = condensed(src, false);
+        assert!(parse_header_puts(&c).unwrap_err().contains("no fields"));
     }
 
     /// The real repo must lint clean — this is the same check CI runs,
