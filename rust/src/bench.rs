@@ -172,6 +172,30 @@ fn bench_tail(bench: &mut Bench) -> Result<Vec<Entry>> {
         });
         out.push(Entry::from_sample(s, "native"));
     }
+
+    // Depth-specific tails of the Max variant, each fed at its own wire
+    // channel count: the server-side cost of moving the split point sits
+    // next to the default-depth rows above (split-mid duplicates
+    // native_tail_max under its depth label, anchoring the comparison).
+    use crate::config::{wire_channels, SPLIT_DEPTHS};
+    for split in SPLIT_DEPTHS {
+        let tail = meta.variant(IntegrationKind::Max)?.tail_for(split)?;
+        backend.load(&tail)?;
+        let split_shape = [g.dims[2], g.dims[1], g.dims[0], wire_channels(g, split)?];
+        let mut split_feature = || {
+            let mut t = HostTensor::zeros(&split_shape);
+            for v in t.data.iter_mut() {
+                *v = if rng.uniform_f32() < 0.1 { rng.uniform_f32() } else { 0.0 };
+            }
+            t
+        };
+        let split_inputs = vec![split_feature(), split_feature()];
+        let s = bench.run(&format!("native_tail_max_{split}"), || {
+            let r = backend.exec(&tail, split_inputs.clone()).expect("split tail exec");
+            std::hint::black_box(r.len());
+        });
+        out.push(Entry::from_sample(s, "native"));
+    }
     Ok(out)
 }
 

@@ -42,6 +42,76 @@ impl IntegrationKind {
     }
 }
 
+/// Shallowest split depth: the device only voxelizes and ships the raw
+/// per-voxel statistics (`c_in` channels); the per-voxel projection is
+/// deferred to the server tail.
+pub const SPLIT_SHALLOW: &str = "split-shallow";
+/// The default split depth — the cut every pre-split deployment already
+/// serves: voxelize + per-voxel projection on the device, `c_head`
+/// channels on the wire.
+pub const SPLIT_MID: &str = "split-mid";
+/// Deepest split depth: the device additionally runs a bottleneck stage
+/// down to [`deep_channels`] channels (smaller uplink, more device
+/// compute); the tail expands back to `c_head` before alignment.
+pub const SPLIT_DEEP: &str = "split-deep";
+/// Every split depth the runtime serves, shallowest first.
+pub const SPLIT_DEPTHS: [&str; 3] = [SPLIT_SHALLOW, SPLIT_MID, SPLIT_DEEP];
+/// The depth legacy clients (and empty `split` fields) land on.
+pub const DEFAULT_SPLIT: &str = SPLIT_MID;
+
+/// Canonicalize a user-facing split name: the empty string means the
+/// default depth; anything outside [`SPLIT_DEPTHS`] is an error naming
+/// the offender.
+pub fn normalize_split(split: &str) -> Result<&'static str> {
+    match split {
+        "" | SPLIT_MID => Ok(SPLIT_MID),
+        SPLIT_SHALLOW => Ok(SPLIT_SHALLOW),
+        SPLIT_DEEP => Ok(SPLIT_DEEP),
+        other => bail!("unknown split depth {other:?} (expected one of {SPLIT_DEPTHS:?})"),
+    }
+}
+
+/// Executable name of artifact `base` at `split`. The default depth
+/// keeps the bare artifact name — pre-split deployments resolve (and
+/// synthesize weights, which are seeded by name) exactly as before —
+/// while other depths append `@split`, so every depth is a distinct
+/// executable and batch keys never mix splits.
+pub fn split_executable(base: &str, split: &str) -> Result<String> {
+    let split = normalize_split(split)?;
+    if split == DEFAULT_SPLIT {
+        Ok(base.to_string())
+    } else {
+        Ok(format!("{base}@{split}"))
+    }
+}
+
+/// Inverse of [`split_executable`]: the `(base, canonical split)` of an
+/// executable name. Names without a recognized `@split` suffix are the
+/// default depth.
+pub fn executable_split(name: &str) -> (&str, &'static str) {
+    if let Some((base, suffix)) = name.rsplit_once('@') {
+        if let Ok(split) = normalize_split(suffix) {
+            return (base, split);
+        }
+    }
+    (name, DEFAULT_SPLIT)
+}
+
+/// Channel width of the deep cut's device-side bottleneck stage.
+pub fn deep_channels(grid: &GridConfig) -> usize {
+    (grid.c_head / 2).max(1)
+}
+
+/// Channels a device feature map carries on the wire at `split` (the
+/// uplink payload scales linearly with this).
+pub fn wire_channels(grid: &GridConfig, split: &str) -> Result<usize> {
+    Ok(match normalize_split(split)? {
+        SPLIT_SHALLOW => grid.c_in,
+        SPLIT_DEEP => deep_channels(grid),
+        _ => grid.c_head,
+    })
+}
+
 /// One trained SC-MII variant and its artifact names.
 #[derive(Clone, Debug)]
 pub struct VariantMeta {
@@ -50,6 +120,23 @@ pub struct VariantMeta {
     pub heads: Vec<String>,
     /// Artifact name of the tail model (takes all aligned head outputs).
     pub tail: String,
+}
+
+impl VariantMeta {
+    /// Head executable for `device` at `split` (default depth = the bare
+    /// artifact name).
+    pub fn head_for(&self, device: usize, split: &str) -> Result<String> {
+        let head = self
+            .heads
+            .get(device)
+            .with_context(|| format!("variant {} has no head for device {device}", self.tail))?;
+        split_executable(head, split)
+    }
+
+    /// Tail executable at `split` (default depth = the bare artifact name).
+    pub fn tail_for(&self, split: &str) -> Result<String> {
+        split_executable(&self.tail, split)
+    }
 }
 
 /// An anchor template of the detection head.
@@ -319,6 +406,48 @@ mod tests {
         let mut meta2 = ModelMeta::test_default();
         meta2.variants[0].heads.pop();
         assert!(meta2.validate().is_err());
+    }
+
+    #[test]
+    fn split_names_normalize_and_mangle() {
+        assert_eq!(normalize_split("").unwrap(), SPLIT_MID);
+        assert_eq!(normalize_split("split-mid").unwrap(), SPLIT_MID);
+        assert_eq!(normalize_split("split-shallow").unwrap(), SPLIT_SHALLOW);
+        let err = normalize_split("split-depe").unwrap_err().to_string();
+        assert!(err.contains("split-depe"), "{err}");
+
+        // The default depth keeps the bare artifact name (synthetic
+        // weights are seeded by name, so this is what keeps pre-split
+        // deployments byte-identical).
+        assert_eq!(split_executable("tail_max", "").unwrap(), "tail_max");
+        assert_eq!(split_executable("tail_max", SPLIT_MID).unwrap(), "tail_max");
+        assert_eq!(
+            split_executable("tail_max", SPLIT_DEEP).unwrap(),
+            "tail_max@split-deep"
+        );
+        assert_eq!(executable_split("tail_max"), ("tail_max", SPLIT_MID));
+        assert_eq!(
+            executable_split("tail_max@split-deep"),
+            ("tail_max", SPLIT_DEEP)
+        );
+        // An '@' that is not a split suffix stays part of the base name.
+        assert_eq!(executable_split("weird@name"), ("weird@name", SPLIT_MID));
+    }
+
+    #[test]
+    fn variant_split_names_and_wire_channels() {
+        let meta = ModelMeta::test_default();
+        let v = meta.variant(IntegrationKind::Max).unwrap();
+        assert_eq!(v.head_for(0, "").unwrap(), "head_max_dev0");
+        assert_eq!(v.head_for(1, SPLIT_SHALLOW).unwrap(), "head_max_dev1@split-shallow");
+        assert_eq!(v.tail_for(SPLIT_DEEP).unwrap(), "tail_max@split-deep");
+        assert!(v.head_for(2, "").is_err());
+        assert!(v.tail_for("nope").is_err());
+
+        let g = &meta.grid;
+        assert_eq!(wire_channels(g, SPLIT_SHALLOW).unwrap(), g.c_in);
+        assert_eq!(wire_channels(g, "").unwrap(), g.c_head);
+        assert_eq!(wire_channels(g, SPLIT_DEEP).unwrap(), (g.c_head / 2).max(1));
     }
 
     #[test]

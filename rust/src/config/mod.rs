@@ -9,7 +9,11 @@
 
 pub mod meta;
 
-pub use meta::{IntegrationKind, ModelMeta, VariantMeta};
+pub use meta::{
+    deep_channels, executable_split, normalize_split, split_executable, wire_channels,
+    IntegrationKind, ModelMeta, VariantMeta, DEFAULT_SPLIT, SPLIT_DEEP, SPLIT_DEPTHS,
+    SPLIT_MID, SPLIT_SHALLOW,
+};
 
 use crate::utils::json::Json;
 use anyhow::Result;

@@ -16,7 +16,10 @@
 //! catching up instead of shifting every later frame.
 
 use crate::cli::Args;
-use crate::config::{IntegrationKind, LatencyConfig, ModelMeta, Paths};
+use crate::config::{
+    normalize_split, wire_channels, GridConfig, IntegrationKind, LatencyConfig, ModelMeta,
+    Paths, SPLIT_DEPTHS,
+};
 use crate::metrics::Metrics;
 use crate::net::{
     chunk_frame, encode_frame, DgramImpairer, ImpairConfig, ImpairStats, ImpairedLink, Msg,
@@ -99,6 +102,12 @@ pub struct DeviceConfig {
     /// `k` chunks, recovering any single loss per group without
     /// retransmit. 0 = FEC off. Only meaningful with `Udp`.
     pub fec_k: u32,
+    /// Split depth this worker cuts the model at (`--split`): one of
+    /// [`SPLIT_DEPTHS`], or empty for the default depth. Must match the
+    /// session's configured depth — the server closes the connection at
+    /// `Hello` time otherwise. (`--split auto` is resolved to a concrete
+    /// depth by [`cmd_device`] before the config is built.)
+    pub split: String,
 }
 
 impl Default for DeviceConfig {
@@ -118,6 +127,7 @@ impl Default for DeviceConfig {
             start_frame: 0,
             transport: Transport::Tcp,
             fec_k: 0,
+            split: String::new(),
         }
     }
 }
@@ -264,7 +274,8 @@ pub fn run_device(
         vm.heads.len(),
         vm.heads.len()
     );
-    let head_name = vm.heads[cfg.device_id].clone();
+    let split = normalize_split(&cfg.split)?;
+    let head_name = vm.head_for(cfg.device_id, split)?;
     // One worker, one head model, one frame in flight on the backend: a
     // single-threaded backend is all a device needs (the overlap is
     // between head exec and transmission, not between head execs).
@@ -282,7 +293,14 @@ pub fn run_device(
     // arrive and the wire bytes of the TCP mode stay byte-identical.
     let link_impair = if cfg.transport == Transport::Tcp { cfg.impair } else { None };
     let mut link = ImpairedLink::new(writer, link_impair);
-    link.send(&Msg::Hello { device_id: cfg.device_id as u32, session: cfg.session.clone() })?;
+    // The wire carries the configured (possibly empty) split string, not
+    // the normalized name: default-depth devices emit a Hello
+    // byte-identical to pre-split workers, which legacy servers accept.
+    link.send(&Msg::Hello {
+        device_id: cfg.device_id as u32,
+        session: cfg.session.clone(),
+        split: cfg.split.clone(),
+    })?;
 
     let n = frames.len().min(cfg.max_frames.max(1));
     let device_id = cfg.device_id as u32;
@@ -377,6 +395,69 @@ pub fn run_device(
     Ok(DeviceReport { frame_times, impair: impair_stats })
 }
 
+/// Pick the split depth whose steady-state device cycle is smallest.
+///
+/// Under the pipelined runtime the cycle is `max(head, tx)` (head exec
+/// of frame *t+1* overlaps transmission of frame *t*), so the best cut
+/// balances device compute against uplink width: `measured` pairs each
+/// candidate depth with its measured head-execution seconds, and tx
+/// seconds are modeled from the depth's wire channel count at
+/// `bandwidth_bps` (an unshaped link prices tx at zero, so the cheapest
+/// head wins). Ties keep the earlier candidate, so list depths in
+/// preference order.
+pub fn choose_split(
+    measured: &[(&str, f64)],
+    grid: &GridConfig,
+    bandwidth_bps: Option<f64>,
+) -> Result<&'static str> {
+    anyhow::ensure!(!measured.is_empty(), "no split candidates measured");
+    let cells = grid.dims[0] * grid.dims[1] * grid.dims[2];
+    let mut best: Option<(&'static str, f64)> = None;
+    for &(split, head_secs) in measured {
+        let split = normalize_split(split)?;
+        let tx_secs = match bandwidth_bps {
+            Some(bw) if bw > 0.0 => {
+                let bits = (cells * wire_channels(grid, split)? * 4 * 8) as f64;
+                bits / bw
+            }
+            _ => 0.0,
+        };
+        let cycle = head_secs.max(tx_secs);
+        if best.is_none() || cycle < best.expect("checked").1 {
+            best = Some((split, cycle));
+        }
+    }
+    Ok(best.expect("measured is non-empty").0)
+}
+
+/// Resolve `--split auto`: run every depth's head once to warm caches,
+/// once to measure, on a synthetic zero cloud, then pick with
+/// [`choose_split`]. The measurement backend is thrown away — the real
+/// run builds its own with only the chosen head resident.
+fn auto_pick_split(paths: &Paths, meta: &ModelMeta, cfg: &DeviceConfig) -> Result<&'static str> {
+    let vm = meta.variant(cfg.variant)?;
+    let heads: Vec<String> = SPLIT_DEPTHS
+        .iter()
+        .map(|s| vm.head_for(cfg.device_id, s))
+        .collect::<Result<_>>()?;
+    let backend = build_backend(paths, meta, cfg.backend, 1, &heads)?;
+    let input = HostTensor::zeros(&[meta.grid.max_points, 4]);
+    let mut measured: Vec<(&str, f64)> = Vec::new();
+    for (split, head) in SPLIT_DEPTHS.iter().zip(&heads) {
+        backend.exec(head, vec![input.clone()])?; // warm-up
+        let t0 = Instant::now();
+        backend.exec(head, vec![input.clone()])?;
+        measured.push((split, t0.elapsed().as_secs_f64()));
+    }
+    let pick = choose_split(&measured, &meta.grid, cfg.bandwidth_bps)?;
+    log::info!(
+        "auto split: measured {:?} -> {pick} (bandwidth {:?} bps)",
+        measured,
+        cfg.bandwidth_bps
+    );
+    Ok(pick)
+}
+
 /// `scmii device` CLI entry: stream frames from the dataset.
 pub fn cmd_device(args: &Args) -> Result<()> {
     args.check_known(&[
@@ -390,6 +471,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         "bandwidth-gbps",
         "max-frames",
         "split",
+        "data-split",
         "unshaped",
         "quantize",
         "backend",
@@ -447,9 +529,21 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         cfg.impair = Some(impair);
     }
 
-    let split = args.str_or("split", "val");
-    let frames = crate::sim::dataset::load_split(&paths.data.join(&split))?;
-    anyhow::ensure!(!frames.is_empty(), "no frames in split {split:?}");
+    // Split depth: a concrete name, or `auto` to measure each depth's
+    // head against the modeled uplink and pick the best cycle. (The
+    // dataset partition moved to `--data-split` when this flag arrived.)
+    cfg.split = args.str_or("split", "");
+    if cfg.split == "auto" {
+        let meta = ModelMeta::load(&paths.model_meta())?;
+        cfg.split = auto_pick_split(&paths, &meta, &cfg)?.to_string();
+        println!("auto split -> {}", cfg.split);
+    } else {
+        normalize_split(&cfg.split)?;
+    }
+
+    let data_split = args.str_or("data-split", "val");
+    let frames = crate::sim::dataset::load_split(&paths.data.join(&data_split))?;
+    anyhow::ensure!(!frames.is_empty(), "no frames in data split {data_split:?}");
     // Out-of-range --device used to panic in `swap_remove`; check the
     // dataset's rig size up front.
     let n_dev = frames[0].clouds.len();
@@ -457,7 +551,7 @@ pub fn cmd_device(args: &Args) -> Result<()> {
         cfg.device_id < n_dev,
         "--device {} out of range: dataset {:?} has {} devices",
         cfg.device_id,
-        split,
+        data_split,
         n_dev
     );
     let clouds: Vec<Vec<Point>> =
@@ -658,6 +752,56 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("link down"));
+    }
+
+    #[test]
+    fn choose_split_balances_head_against_uplink() {
+        let g = GridConfig::default();
+        // Heads get costlier with depth; on a slow 1 Mbps uplink tx
+        // dominates every cycle, so the narrowest wire (deep) wins even
+        // with the most expensive head.
+        let measured = [("split-shallow", 0.01), ("split-mid", 0.02), ("split-deep", 0.04)];
+        assert_eq!(choose_split(&measured, &g, Some(1e6)).unwrap(), "split-deep");
+
+        // Unshaped link: tx is free, the cheapest head wins.
+        assert_eq!(choose_split(&measured, &g, None).unwrap(), "split-shallow");
+        // Same on a link fast enough that head time dominates.
+        assert_eq!(choose_split(&measured, &g, Some(1e12)).unwrap(), "split-shallow");
+
+        // Default-depth spelling ("" = split-mid) normalizes.
+        assert_eq!(choose_split(&[("", 0.01)], &g, None).unwrap(), "split-mid");
+
+        assert!(choose_split(&[], &g, None).is_err(), "no candidates is an error");
+        assert!(
+            choose_split(&[("split-bogus", 0.01)], &g, None).is_err(),
+            "unknown depth is an error, not a silent skip"
+        );
+    }
+
+    #[test]
+    fn device_split_defaults_keep_the_legacy_wire_form() {
+        let cfg = DeviceConfig::default();
+        assert_eq!(cfg.split, "", "default depth: Hello omits the split field");
+        let frame = |split: &str| {
+            crate::net::encode_frame(&Msg::Hello {
+                device_id: cfg.device_id as u32,
+                session: cfg.session.clone(),
+                split: split.to_string(),
+            })
+            .unwrap()
+        };
+        let legacy = frame("");
+        let deep = frame("split-deep");
+        assert_eq!(
+            deep.len(),
+            legacy.len() + 1 + "split-deep".len(),
+            "an explicit split costs exactly len-byte + name; the default costs zero"
+        );
+        // Header is magic(4) + type(1) + payload-length(4): the frames
+        // agree everywhere except the length field and the trailing
+        // split bytes.
+        assert_eq!(&deep[..5], &legacy[..5]);
+        assert_eq!(&deep[9..legacy.len()], &legacy[9..]);
     }
 
     /// Frame ids offset by `start_frame` (late join).

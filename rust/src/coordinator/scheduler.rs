@@ -477,6 +477,15 @@ impl BatchPlanner {
         Arc::clone(&self.metrics)
     }
 
+    /// Requests enqueued but not yet resolved, sampled now. Sessions use
+    /// this as the overload signal for watermark shedding: the value is
+    /// advisory (another thread may drain the queue between the read and
+    /// the shed decision), which is fine — shedding is a pressure valve,
+    /// not an admission-control invariant.
+    pub fn queue_depth(&self) -> usize {
+        lock_or_recover(&self.state).pending
+    }
+
     /// Execute `inputs` on `name`, possibly coalesced with compatible
     /// requests from other sessions/frames. Blocks until this request's
     /// result is available — one collection window plus the batch
@@ -1172,6 +1181,78 @@ mod tests {
             t0.elapsed()
         );
         assert_eq!(planner.metrics().counter("batch_frames"), 5);
+    }
+
+    #[test]
+    fn split_variants_never_share_a_batch() {
+        // Split depths surface as distinct executable names
+        // (`tail_max` vs `tail_max@split-deep`), so the planner's
+        // (name, shapes) bucket key must keep them in separate backend
+        // calls even when shapes and timing line up exactly.
+        let backend = CountingEcho::new();
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig {
+                window: Duration::from_millis(300),
+                max_batch: 8,
+                max_pending: 64,
+            },
+        );
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let names =
+            ["tail_max", "tail_max", "tail_max@split-deep", "tail_max@split-deep"];
+        let handles: Vec<_> = names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let planner = Arc::clone(&planner);
+                let barrier = Arc::clone(&barrier);
+                let name = name.to_string();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let input = vec![HostTensor::new(vec![2], vec![i as f32, 0.0]).unwrap()];
+                    planner.exec(&format!("session-{i}"), &name, input).unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap()[0].data[0], i as f32);
+        }
+        assert_eq!(
+            backend.batch_calls.load(Ordering::SeqCst),
+            2,
+            "same shapes, different split executables: one call per split, never mixed"
+        );
+        let mut sizes = backend.batch_sizes.lock().unwrap().clone();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![2, 2], "each split class still coalesces within itself");
+    }
+
+    #[test]
+    fn queue_depth_reports_pending_requests() {
+        let backend = CountingEcho::new();
+        let planner = BatchPlanner::new(
+            backend.clone() as Arc<dyn ExecBackend>,
+            BatchConfig {
+                window: Duration::from_millis(100),
+                max_batch: 4,
+                max_pending: 16,
+            },
+        );
+        assert_eq!(planner.queue_depth(), 0, "idle planner has an empty queue");
+        // One lone request occupies the queue for the collection window;
+        // sample the depth from a second thread mid-window.
+        let p2 = Arc::clone(&planner);
+        let h = std::thread::spawn(move || {
+            p2.exec("s", "m", vec![HostTensor::zeros(&[1])]).unwrap()
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while planner.queue_depth() == 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(planner.queue_depth(), 1, "in-window request is visible as depth");
+        h.join().unwrap();
+        assert_eq!(planner.queue_depth(), 0, "resolved requests leave the queue");
     }
 
     #[test]

@@ -137,6 +137,17 @@ pub struct ServerConfig {
     /// Every hosted session runs its `FrameSync` in latest-wins mode so
     /// a stale completion is counted and dropped, never integrated.
     pub udp: bool,
+    /// Split depth of the default session (`--split`): one of
+    /// [`crate::config::SPLIT_DEPTHS`], or empty for the default depth.
+    /// Extra sessions pick their own via `--sessions name=variant@split`.
+    pub split: String,
+    /// Overload shedding watermark (`--shed-watermark`) inherited by
+    /// every hosted session: when the shared batch planner's queue
+    /// reaches this many pending tail requests, sessions degrade frames
+    /// through their cheaper shed tail instead of rejecting them. 0
+    /// (default) disables shedding. Only meaningful with `--max-batch`
+    /// > 1 — without a planner there is no queue to watermark.
+    pub shed_watermark: usize,
 }
 
 impl Default for ServerConfig {
@@ -156,6 +167,8 @@ impl Default for ServerConfig {
             workers: 0,
             sink_queue: DEFAULT_SINK_QUEUE,
             udp: false,
+            split: String::new(),
+            shed_watermark: 0,
         }
     }
 }
@@ -170,7 +183,9 @@ impl ServerConfig {
             SessionConfig::new(self.variant)
                 .deadline(self.deadline)
                 .policy(self.policy)
-                .decode(self.decode.clone()),
+                .decode(self.decode.clone())
+                .split(&self.split)
+                .shed_watermark(self.shed_watermark),
         )];
         specs.extend(self.extra_sessions.iter().cloned());
         if self.udp {
@@ -823,17 +838,34 @@ impl EventLoop {
 
     fn handle_control(&mut self, token: usize, frame: &RawFrame) -> Result<()> {
         match frame.decode()? {
-            Msg::Hello { device_id, session } => {
+            Msg::Hello { device_id, session, split } => {
                 // Unknown session: closing the connection is the only
                 // signal the protocol can give the peer — silently
                 // dropping its traffic would let a typoed `--session`
                 // "succeed" while every frame is discarded.
+                let Some(sess) = self.shared.registry.get(&session) else {
+                    anyhow::bail!(
+                        "device {device_id} greeted unknown session {session:?} (have {:?})",
+                        self.shared.registry.names()
+                    );
+                };
+                // Split mismatch closes the connection for the same
+                // reason: a head cut at the wrong depth would ship
+                // feature maps of the wrong channel count, and every
+                // frame would be silently rejected at shape validation.
+                // Legacy Hellos omit the field and land on the default
+                // depth (`normalize_split("")`).
+                let declared = crate::config::normalize_split(&split)
+                    .with_context(|| format!("device {device_id} Hello"))?;
                 anyhow::ensure!(
-                    self.shared.registry.get(&session).is_some(),
-                    "device {device_id} greeted unknown session {session:?} (have {:?})",
-                    self.shared.registry.names()
+                    declared == sess.split(),
+                    "device {device_id} declared split {declared:?} but session {session:?} \
+                     serves {:?}",
+                    sess.split()
                 );
-                log::info!("device {device_id} connected to session {session:?}");
+                log::info!(
+                    "device {device_id} connected to session {session:?} (split {declared:?})"
+                );
             }
             Msg::Subscribe { session } => match self.shared.registry.get(&session) {
                 Some(s) => {
@@ -1115,14 +1147,25 @@ pub fn run_server_until(
     let meta = ModelMeta::load(&paths.model_meta())?;
     let specs = cfg.session_specs()?;
 
-    // One backend serves every session; preload each distinct tail. On
-    // the XLA backend this is a pool of `backend_threads` engine
-    // threads, so different sessions' tails execute concurrently.
+    // One backend serves every session; preload each distinct tail at
+    // its session's split depth — plus, for watermark-armed sessions,
+    // the shed tail (Max variant, same depth) so the first shed frame
+    // doesn't pay a model load. On the XLA backend this is a pool of
+    // `backend_threads` engine threads, so different sessions' tails
+    // execute concurrently.
     let mut tails: Vec<String> = Vec::new();
     for (_, sc) in &specs {
-        let tail = meta.variant(sc.variant)?.tail.clone();
-        if !tails.contains(&tail) {
-            tails.push(tail);
+        let split = crate::config::normalize_split(&sc.split)?;
+        let mut wanted = vec![meta.variant(sc.variant)?.tail_for(split)?];
+        if sc.shed_watermark > 0 {
+            if let Ok(vm) = meta.variant(IntegrationKind::Max) {
+                wanted.push(vm.tail_for(split)?);
+            }
+        }
+        for tail in wanted {
+            if !tails.contains(&tail) {
+                tails.push(tail);
+            }
         }
     }
     let backend = build_backend(paths, &meta, cfg.backend, cfg.backend_threads, &tails)?;
@@ -1283,33 +1326,46 @@ fn submit(
     Ok(())
 }
 
-/// Parse `--sessions name=variant[:deadline_ms],...` into extra session
-/// configs; unset knobs inherit the default session's.
+/// Parse `--sessions name=variant[@split][:deadline_ms],...` into extra
+/// session configs; unset knobs (policy, decode, shed watermark,
+/// deadline, split) inherit the default session's.
 pub fn parse_session_specs(
     spec: &str,
     base: &ServerConfig,
 ) -> Result<Vec<(String, SessionConfig)>> {
     let mut out = Vec::new();
     for part in spec.split(',').filter(|s| !s.is_empty()) {
-        let (name, rest) = part
-            .split_once('=')
-            .with_context(|| format!("session spec {part:?} must be name=variant[:deadline_ms]"))?;
+        let (name, rest) = part.split_once('=').with_context(|| {
+            format!("session spec {part:?} must be name=variant[@split][:deadline_ms]")
+        })?;
         anyhow::ensure!(!name.is_empty(), "empty session name in {part:?}");
-        let (variant, deadline) = match rest.split_once(':') {
+        let (variant_split, deadline) = match rest.split_once(':') {
             Some((v, ms)) => {
                 let ms: u64 = ms
                     .parse()
                     .with_context(|| format!("bad deadline {ms:?} in session spec {part:?}"))?;
-                (IntegrationKind::parse(v)?, Duration::from_millis(ms))
+                (v, Duration::from_millis(ms))
             }
-            None => (IntegrationKind::parse(rest)?, base.deadline),
+            None => (rest, base.deadline),
+        };
+        let (variant, split) = match variant_split.split_once('@') {
+            Some((v, s)) => {
+                // Validate eagerly so a typoed depth fails at flag-parse
+                // time, not at session build.
+                let split = crate::config::normalize_split(s)
+                    .with_context(|| format!("bad split in session spec {part:?}"))?;
+                (IntegrationKind::parse(v)?, split.to_string())
+            }
+            None => (IntegrationKind::parse(variant_split)?, base.split.clone()),
         };
         out.push((
             name.to_string(),
             SessionConfig::new(variant)
                 .deadline(deadline)
                 .policy(base.policy)
-                .decode(base.decode.clone()),
+                .decode(base.decode.clone())
+                .split(&split)
+                .shed_watermark(base.shed_watermark),
         ));
     }
     Ok(out)
@@ -1336,6 +1392,8 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
         "workers",
         "sink-queue",
         "udp",
+        "split",
+        "shed-watermark",
     ])?;
     let mut cfg = ServerConfig::default();
     cfg.port = args.usize_or("port", cfg.port as usize)? as u16;
@@ -1356,6 +1414,10 @@ pub fn server_config_from_args(args: &Args) -> Result<ServerConfig> {
     cfg.workers = args.usize_or("workers", cfg.workers)?;
     cfg.sink_queue = args.usize_or("sink-queue", cfg.sink_queue)?;
     cfg.udp = args.switch("udp");
+    cfg.split = args.str_or("split", "");
+    // Validate the depth at flag-parse time (empty = default depth).
+    crate::config::normalize_split(&cfg.split)?;
+    cfg.shed_watermark = args.usize_or("shed-watermark", 0)?;
     let max = args.u64_or("max-frames", 0)?;
     cfg.max_frames = if max > 0 { Some(max) } else { None };
     cfg.trace = args.str_opt("trace").map(std::path::PathBuf::from);
@@ -1687,6 +1749,56 @@ mod tests {
         assert!(parse_session_specs("x=notavariant", &base).is_err());
         assert!(parse_session_specs("x=max:notanumber", &base).is_err());
         assert!(parse_session_specs("=max", &base).is_err());
+    }
+
+    #[test]
+    fn session_spec_split_parsing() {
+        let base = ServerConfig::default();
+        let specs =
+            parse_session_specs("deep=max@split-deep:150,plain=conv_k1", &base).unwrap();
+        assert_eq!(specs[0].1.split, "split-deep");
+        assert_eq!(specs[0].1.variant, IntegrationKind::Max);
+        assert_eq!(specs[0].1.deadline, Duration::from_millis(150));
+        assert_eq!(specs[1].1.split, "", "unset split inherits the base (default depth)");
+
+        // Extras inherit the base shed watermark and split.
+        let mut base = ServerConfig::default();
+        base.shed_watermark = 8;
+        base.split = "split-shallow".to_string();
+        let specs = parse_session_specs("a=max,b=conv_k3@split-mid", &base).unwrap();
+        assert_eq!(specs[0].1.shed_watermark, 8);
+        assert_eq!(specs[0].1.split, "split-shallow");
+        assert_eq!(specs[1].1.split, "split-mid", "explicit split overrides the base");
+
+        assert!(
+            parse_session_specs("x=max@split-bogus", &ServerConfig::default()).is_err(),
+            "typoed split must fail at flag-parse time"
+        );
+    }
+
+    #[test]
+    fn serve_split_and_shed_flags_parse() {
+        let cfg = server_config_from_args(&args(&[
+            "--split",
+            "split-deep",
+            "--shed-watermark",
+            "16",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.split, "split-deep");
+        assert_eq!(cfg.shed_watermark, 16);
+        let specs = cfg.session_specs().unwrap();
+        assert_eq!(specs[0].1.split, "split-deep", "default session carries the depth");
+        assert_eq!(specs[0].1.shed_watermark, 16);
+
+        let d = server_config_from_args(&args(&[])).unwrap();
+        assert_eq!(d.split, "", "default depth, byte-identical to pre-split servers");
+        assert_eq!(d.shed_watermark, 0, "shedding is opt-in");
+
+        assert!(
+            server_config_from_args(&args(&["--split", "split-bogus"])).is_err(),
+            "unknown depth rejected at flag-parse time"
+        );
     }
 
     #[test]

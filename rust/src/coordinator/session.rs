@@ -23,7 +23,9 @@
 //! [`Metrics`].
 
 use super::scheduler::{BatchPlanner, FrameSync, LossPolicy, ReadyFrame, SyncStats};
-use crate::config::{IntegrationKind, ModelMeta};
+use crate::config::{
+    normalize_split, wire_channels, IntegrationKind, ModelMeta, SPLIT_DEEP, SPLIT_SHALLOW,
+};
 use crate::metrics::Metrics;
 use crate::model::{postprocess, DecodeParams, Detection};
 use crate::net::QuantTensor;
@@ -104,6 +106,18 @@ pub struct SessionConfig {
     /// on for datagram-fed sessions, off (default) for the in-order TCP
     /// path.
     pub latest_wins: bool,
+    /// Split depth this session's devices cut the model at (one of
+    /// [`crate::config::SPLIT_DEPTHS`]; `""` = the default depth). Every
+    /// device of a session must run the matching head — the server
+    /// rejects a `Hello` declaring a different depth.
+    pub split: String,
+    /// Overload shedding watermark: when the shared batch planner's
+    /// queue depth reaches this many pending requests, the session
+    /// resolves frames through its cheaper shed tail and coarser decode
+    /// parameters instead of rejecting them. `0` (default) disables
+    /// shedding; below the watermark the serving path is byte-identical
+    /// to a shedding-free session.
+    pub shed_watermark: usize,
 }
 
 impl SessionConfig {
@@ -116,6 +130,8 @@ impl SessionConfig {
             policy: LossPolicy::ZeroFill,
             decode: DecodeParams::default(),
             latest_wins: false,
+            split: String::new(),
+            shed_watermark: 0,
         }
     }
 
@@ -141,6 +157,32 @@ impl SessionConfig {
     pub fn latest_wins(mut self, on: bool) -> SessionConfig {
         self.latest_wins = on;
         self
+    }
+
+    /// Select the split depth (`""` keeps the default depth; validated
+    /// when the session is built).
+    pub fn split(mut self, split: &str) -> SessionConfig {
+        self.split = split.to_string();
+        self
+    }
+
+    /// Set the overload shedding watermark (0 disables shedding).
+    pub fn shed_watermark(mut self, watermark: usize) -> SessionConfig {
+        self.shed_watermark = watermark;
+        self
+    }
+}
+
+/// Coarser decode parameters applied to shed frames: a higher score
+/// floor and smaller candidate/output budgets make decode + NMS
+/// markedly cheaper (NMS is quadratic in candidates) while keeping
+/// high-confidence detections — degraded output, not dropped output.
+pub fn shed_decode_params(d: &DecodeParams) -> DecodeParams {
+    DecodeParams {
+        score_threshold: d.score_threshold.max(0.4),
+        pre_nms_top_k: (d.pre_nms_top_k / 4).max(32),
+        nms_iou: d.nms_iou,
+        max_detections: (d.max_detections / 2).max(16),
     }
 }
 
@@ -217,6 +259,18 @@ pub struct DetectorSession {
     cfg: SessionConfig,
     meta: ModelMeta,
     tail: String,
+    /// Canonical split depth (one of [`crate::config::SPLIT_DEPTHS`]).
+    split: &'static str,
+    /// Static metric name counting frames completed at this depth
+    /// (`split_shallow` / `split_mid` / `split_deep`).
+    split_metric: &'static str,
+    /// Cheaper tail the session degrades to under overload (the Max
+    /// integration variant at the same split; falls back to the
+    /// session's own tail when that variant is absent, leaving the
+    /// coarser decode parameters as the degradation floor).
+    shed_tail: String,
+    /// Coarser decode/NMS parameters applied to shed frames.
+    shed_decode: DecodeParams,
     backend: Arc<dyn ExecBackend>,
     /// When set, tail executions route through the shared cross-session
     /// batch planner instead of calling the backend directly.
@@ -242,9 +296,25 @@ impl DetectorSession {
             "session name longer than {} bytes",
             crate::net::MAX_SESSION_NAME
         );
-        let tail = meta.variant(cfg.variant)?.tail.clone();
+        let split = normalize_split(&cfg.split)
+            .with_context(|| format!("session {name:?} split depth"))?;
+        let split_metric = match split {
+            SPLIT_SHALLOW => "split_shallow",
+            SPLIT_DEEP => "split_deep",
+            _ => "split_mid",
+        };
+        let tail = meta.variant(cfg.variant)?.tail_for(split)?;
+        // Shed target: the Max-integration tail is the cheapest variant
+        // (elementwise max, no learned integration conv). A session
+        // already running it — or a model without it — sheds through its
+        // own tail, with the coarser decode parameters as the floor.
+        let shed_tail = match meta.variant(IntegrationKind::Max) {
+            Ok(vm) => vm.tail_for(split)?,
+            Err(_) => tail.clone(),
+        };
+        let shed_decode = shed_decode_params(&cfg.decode);
         let g = &meta.grid;
-        let feat_shape = vec![g.dims[2], g.dims[1], g.dims[0], g.c_head];
+        let feat_shape = vec![g.dims[2], g.dims[1], g.dims[0], wire_channels(g, split)?];
         let mut sync = FrameSync::new(meta.num_devices, cfg.deadline, cfg.policy, feat_shape);
         sync.set_latest_wins(cfg.latest_wins);
         Ok(DetectorSession {
@@ -252,6 +322,10 @@ impl DetectorSession {
             cfg,
             meta,
             tail,
+            split,
+            split_metric,
+            shed_tail,
+            shed_decode,
             backend,
             planner: None,
             sync: Mutex::new(sync),
@@ -264,6 +338,17 @@ impl DetectorSession {
     /// Name this session is addressed by on the wire.
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Canonical split depth this session serves (devices must run the
+    /// matching head).
+    pub fn split(&self) -> &'static str {
+        self.split
+    }
+
+    /// Executable name of the cheaper tail used for shed frames.
+    pub fn shed_tail_name(&self) -> &str {
+        &self.shed_tail
     }
 
     /// This session's configuration.
@@ -301,20 +386,37 @@ impl DetectorSession {
     /// other's batch-mates), directly on the backend otherwise — the
     /// single dispatch site [`run_tail`](Self::run_tail) and the
     /// frame-completion path both funnel through.
-    fn exec_tail_many(&self, batch: Vec<Vec<HostTensor>>) -> Vec<Result<Vec<HostTensor>>> {
+    fn exec_tail_many(
+        &self,
+        tail: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<Vec<HostTensor>>> {
         match &self.planner {
-            Some(p) => p.exec_many(&self.name, &self.tail, batch),
-            None => {
-                batch.into_iter().map(|inputs| self.backend.exec(&self.tail, inputs)).collect()
-            }
+            Some(p) => p.exec_many(&self.name, tail, batch),
+            None => batch.into_iter().map(|inputs| self.backend.exec(tail, inputs)).collect(),
         }
     }
 
     /// [`exec_tail_many`](Self::exec_tail_many) for a single input set.
     fn exec_tail(&self, features: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        self.exec_tail_many(vec![features])
+        self.exec_tail_many(&self.tail, vec![features])
             .pop()
             .expect("one result per input set")
+    }
+
+    /// Whether the next ready batch should resolve through the shed
+    /// path. The signal is the shared batch planner's queue depth — the
+    /// per-process measure of tail backlog — sampled at frame-resolution
+    /// time; without a planner there is no queue to overflow, so
+    /// shedding never triggers.
+    fn should_shed(&self) -> bool {
+        if self.cfg.shed_watermark == 0 {
+            return false;
+        }
+        match &self.planner {
+            Some(p) => p.queue_depth() >= self.cfg.shed_watermark,
+            None => false,
+        }
     }
 
     /// The execution backend this session runs its tail on.
@@ -481,7 +583,26 @@ impl DetectorSession {
             .into_iter()
             .map(|r| ((r.frame_id, r.present, r.first_arrival, r.capture_micros), r.tensors))
             .unzip();
-        let results = self.exec_tail_many(batch);
+        // Overload degradation: past the watermark the whole burst
+        // resolves through the cheaper shed tail and coarser decode
+        // parameters — frames complete late-but-cheap instead of being
+        // rejected. Below the watermark the path is byte-identical to a
+        // shedding-free session.
+        let shed = self.should_shed();
+        let (tail, decode) = if shed {
+            self.metrics.incr("shed_batches", 1);
+            self.metrics.incr("shed_frames", batch.len() as u64);
+            log::debug!(
+                "session {:?} shedding {} frame(s) through {:?}",
+                self.name,
+                batch.len(),
+                self.shed_tail
+            );
+            (self.shed_tail.as_str(), &self.shed_decode)
+        } else {
+            (self.tail.as_str(), &self.cfg.decode)
+        };
+        let results = self.exec_tail_many(tail, batch);
         let tail_secs = t0.elapsed().as_secs_f64();
 
         frames
@@ -495,7 +616,7 @@ impl DetectorSession {
                 let t1 = Instant::now();
                 let (detections, tail_error) = match result {
                     Ok(out) if out.len() == 2 => {
-                        (self.decode_detections(&out[0].data, &out[1].data), false)
+                        (postprocess(&out[0].data, &out[1].data, &self.meta, decode), false)
                     }
                     Ok(out) => {
                         self.metrics.incr("tail_errors", 1);
@@ -511,6 +632,7 @@ impl DetectorSession {
                 let post_secs = t1.elapsed().as_secs_f64();
                 self.metrics.record("post", post_secs);
                 self.metrics.incr("frames_done", 1);
+                self.metrics.incr(self.split_metric, 1);
                 self.frames_done.fetch_add(1, Ordering::SeqCst);
                 // End-to-end latency at the paper's finish line: device
                 // capture → decoded detections, about to be handed to the
@@ -658,6 +780,12 @@ mod tests {
     fn feat() -> HostTensor {
         let g = crate::config::GridConfig::default();
         HostTensor::zeros(&[g.dims[2], g.dims[1], g.dims[0], g.c_head])
+    }
+
+    /// A feature map with the wire channel count of `split`.
+    fn feat_at(split: &str) -> HostTensor {
+        let g = crate::config::GridConfig::default();
+        HostTensor::zeros(&[g.dims[2], g.dims[1], g.dims[0], wire_channels(&g, split).unwrap()])
     }
 
     struct CollectSink {
@@ -1008,5 +1136,200 @@ mod tests {
             SessionConfig::new(IntegrationKind::Max),
         )
         .is_err());
+    }
+
+    #[test]
+    fn split_selects_the_depth_specific_tail() {
+        let backend = empty_backend();
+        // Default (empty) split: the bare tail name — byte-identical to
+        // a pre-split session.
+        let s = DetectorSession::new(
+            "d",
+            ModelMeta::test_default(),
+            backend.clone(),
+            SessionConfig::new(IntegrationKind::Max),
+        )
+        .unwrap();
+        assert_eq!(s.tail_name(), "tail_max");
+        assert_eq!(s.split(), crate::config::SPLIT_MID);
+
+        let s = DetectorSession::new(
+            "deep",
+            ModelMeta::test_default(),
+            backend.clone(),
+            SessionConfig::new(IntegrationKind::ConvK3).split(SPLIT_DEEP),
+        )
+        .unwrap();
+        assert_eq!(s.tail_name(), "tail_conv_k3@split-deep");
+        assert_eq!(s.split(), SPLIT_DEEP);
+        assert_eq!(
+            s.shed_tail_name(),
+            "tail_max@split-deep",
+            "shed tail is the Max variant at the *same* depth"
+        );
+
+        assert!(
+            DetectorSession::new(
+                "bogus",
+                ModelMeta::test_default(),
+                backend,
+                SessionConfig::new(IntegrationKind::Max).split("split-nowhere"),
+            )
+            .is_err(),
+            "unknown split depth must be rejected at build time"
+        );
+    }
+
+    #[test]
+    fn mixed_split_sessions_coexist_in_one_registry() {
+        // One server process hosts sessions at different depths; each
+        // synchronizes feature maps of its own wire channel count and
+        // traffic never leaks across.
+        let backend = empty_backend();
+        let registry = SessionRegistry::new();
+        let mid = registry.insert(
+            DetectorSession::new(
+                "mid",
+                ModelMeta::test_default(),
+                backend.clone(),
+                SessionConfig::new(IntegrationKind::Max).deadline(Duration::from_secs(60)),
+            )
+            .unwrap(),
+        );
+        let deep = registry.insert(
+            DetectorSession::new(
+                "deep",
+                ModelMeta::test_default(),
+                backend.clone(),
+                SessionConfig::new(IntegrationKind::Max)
+                    .deadline(Duration::from_secs(60))
+                    .split(SPLIT_DEEP),
+            )
+            .unwrap(),
+        );
+        let shallow = registry.insert(
+            DetectorSession::new(
+                "shallow",
+                ModelMeta::test_default(),
+                backend,
+                SessionConfig::new(IntegrationKind::Max)
+                    .deadline(Duration::from_secs(60))
+                    .split(SPLIT_SHALLOW),
+            )
+            .unwrap(),
+        );
+        assert_ne!(
+            feat_at(SPLIT_DEEP).shape,
+            feat_at(SPLIT_SHALLOW).shape,
+            "depths must differ in wire shape for this test to bite"
+        );
+        for (s, split) in [
+            (&mid, crate::config::SPLIT_MID),
+            (&deep, SPLIT_DEEP),
+            (&shallow, SPLIT_SHALLOW),
+        ] {
+            s.submit(1, 0, FeaturePayload::Raw(feat_at(split))).unwrap();
+            let events = s.submit(1, 1, FeaturePayload::Raw(feat_at(split))).unwrap();
+            assert_eq!(events.len(), 1, "session at {split} must complete its frame");
+            assert_eq!(s.frames_done(), 1);
+        }
+        assert_eq!(mid.metrics().counter("split_mid"), 1);
+        assert_eq!(deep.metrics().counter("split_deep"), 1);
+        assert_eq!(shallow.metrics().counter("split_shallow"), 1);
+        assert_eq!(mid.metrics().counter("split_deep"), 0, "counters stay per-session");
+        assert_eq!(registry.frames_done_total(), 3);
+    }
+
+    #[test]
+    fn below_watermark_keeps_the_normal_path() {
+        // A watermark-armed session with no pressure must behave
+        // byte-identically to a shedding-free one: normal tail, normal
+        // decode params, zero shed counters.
+        let backend = empty_backend();
+        let session = DetectorSession::new(
+            "calm",
+            ModelMeta::test_default(),
+            backend,
+            SessionConfig::new(IntegrationKind::ConvK3)
+                .deadline(Duration::from_secs(60))
+                .shed_watermark(4),
+        )
+        .unwrap();
+        session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        let events = session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(session.metrics().counter("shed_frames"), 0);
+        assert_eq!(session.metrics().counter("shed_batches"), 0);
+        // Without a planner there is no queue to overflow: even an
+        // armed watermark never sheds.
+        assert!(!session.should_shed());
+    }
+
+    #[test]
+    fn shed_decode_params_are_coarser_never_finer() {
+        let d = DecodeParams::default();
+        let s = shed_decode_params(&d);
+        assert!(s.score_threshold >= d.score_threshold);
+        assert!(s.pre_nms_top_k <= d.pre_nms_top_k);
+        assert!(s.max_detections <= d.max_detections);
+        // Already-coarse params are left alone, not made finer.
+        let coarse = DecodeParams {
+            score_threshold: 0.9,
+            pre_nms_top_k: 8,
+            nms_iou: 0.25,
+            max_detections: 4,
+        };
+        let s = shed_decode_params(&coarse);
+        assert!((s.score_threshold - 0.9).abs() < 1e-9);
+        assert_eq!(s.pre_nms_top_k, 32, "floor keeps decode functional");
+        assert_eq!(s.max_detections, 16);
+    }
+
+    #[test]
+    fn watermark_shedding_fires_under_queue_pressure() {
+        // Hold the shared planner's queue at depth 1 (a lone request
+        // waiting out its collection window), then resolve a frame on a
+        // watermark-1 session: it must shed — counted, degraded, never
+        // rejected.
+        let backend = empty_backend();
+        let planner = BatchPlanner::new(
+            Arc::clone(&backend),
+            super::super::scheduler::BatchConfig {
+                window: Duration::from_millis(600),
+                max_batch: 4,
+                max_pending: 64,
+            },
+        );
+        let mut session = DetectorSession::new(
+            "hot",
+            ModelMeta::test_default(),
+            backend,
+            SessionConfig::new(IntegrationKind::ConvK3)
+                .deadline(Duration::from_secs(60))
+                .shed_watermark(1),
+        )
+        .unwrap();
+        session.set_batch_planner(Arc::clone(&planner));
+        let session = Arc::new(session);
+
+        let p2 = Arc::clone(&planner);
+        let occupant = std::thread::spawn(move || {
+            // Errors (EmptyBackend has no models) still resolve the
+            // request; only the queue residency matters here.
+            let _ = p2.exec("other", "occupant", vec![HostTensor::zeros(&[1])]);
+        });
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while planner.queue_depth() == 0 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert!(planner.queue_depth() >= 1, "occupant never reached the queue");
+
+        session.submit(1, 0, FeaturePayload::Raw(feat())).unwrap();
+        let events = session.submit(1, 1, FeaturePayload::Raw(feat())).unwrap();
+        occupant.join().unwrap();
+        assert_eq!(events.len(), 1, "shed frames complete, they are not rejected");
+        assert_eq!(session.metrics().counter("shed_frames"), 1);
+        assert_eq!(session.metrics().counter("shed_batches"), 1);
+        assert_eq!(session.metrics().counter("frames_done"), 1);
     }
 }

@@ -44,7 +44,12 @@ pub const REGISTERED_METRICS: &[&str] = &[
     "frames_done",         // counter: frames fully resolved (delivered or expired)
     "head_exec",           // series: device-side head execution seconds
     "post",                // series: decode + NMS post-processing seconds
+    "shed_batches",        // counter: ready bursts resolved through the shed tail under overload
+    "shed_frames",         // counter: frames degraded (cheaper tail + coarser decode), not rejected
     "sink_dropped",        // counter: result frames dropped on a slow subscriber's full queue
+    "split_deep",          // counter: frames completed by a split-deep session
+    "split_mid",           // counter: frames completed by a split-mid (default depth) session
+    "split_shallow",       // counter: frames completed by a split-shallow session
     "sync_complete",       // gauge: frames that gathered every device before deadline
     "sync_dropped",        // gauge: frames dropped by the loss policy
     "sync_dup",            // gauge: duplicate (frame, device) submissions ignored

@@ -287,7 +287,8 @@ mod tests {
     fn full_loss_blacks_out_data_but_not_control() {
         let cfg = ImpairConfig { loss: 1.0, ..Default::default() };
         let mut link = ImpairedLink::new(Vec::new(), Some(cfg));
-        link.send(&Msg::Hello { device_id: 4, session: "s".into() }).unwrap();
+        link.send(&Msg::Hello { device_id: 4, session: "s".into(), split: String::new() })
+            .unwrap();
         for i in 0..5 {
             link.send(&feat(i)).unwrap();
         }

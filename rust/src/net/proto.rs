@@ -13,6 +13,16 @@
 //! servers unchanged. (New clients always encode it, so new-client →
 //! old-server is not supported — the compat direction the rollout needs.)
 //!
+//! ## Split depths
+//!
+//! `Hello` additionally carries a trailing `split` string naming the
+//! split depth the device's head was cut at (see
+//! `docs/WIRE_PROTOCOL.md` §"Split negotiation"). The field is optional
+//! in *both* directions: absent on decode ⇒ `""` = "the default
+//! depth", and an empty split is **omitted on encode**, so
+//! default-depth devices produce `Hello` payloads byte-identical to the
+//! pre-split wire form — legacy servers keep accepting them.
+//!
 //! ## Capture timestamps
 //!
 //! `Features`/`FeaturesQ` additionally carry a trailing `capture_micros`
@@ -63,6 +73,10 @@ pub enum Msg {
         /// Session the device will feed ([`DEFAULT_SESSION`] for legacy
         /// clients).
         session: String,
+        /// Split depth the device's head was cut at (`""` — the field's
+        /// omitted-on-wire zero value — means the server's default
+        /// depth; legacy clients land there).
+        split: String,
     },
     /// Head-model output for one frame.
     Features {
@@ -137,6 +151,14 @@ impl Msg {
                 "session name longer than {MAX_SESSION_NAME} bytes"
             );
         }
+        if let Msg::Hello { split, .. } = self {
+            // Empty is legal here: it is the omitted-on-encode zero
+            // value ("use the server's default depth").
+            anyhow::ensure!(
+                split.len() <= MAX_SESSION_NAME,
+                "split name longer than {MAX_SESSION_NAME} bytes"
+            );
+        }
         Ok(())
     }
 
@@ -167,6 +189,21 @@ fn put_capture(buf: &mut Vec<u8>, capture_micros: u64) {
     if capture_micros > 0 {
         put_u64(buf, capture_micros);
     }
+}
+
+/// Trailing split-depth name: omitted when empty (= "default depth"),
+/// so default-depth `Hello`s stay byte-identical to the pre-split wire
+/// form (legacy decoders reject trailing bytes they don't know).
+fn put_split(buf: &mut Vec<u8>, split: &str) {
+    if split.is_empty() {
+        return;
+    }
+    let bytes = split.as_bytes();
+    // write_msg validates via Msg::validate; this assert only backstops
+    // direct encode_payload callers.
+    assert!(bytes.len() <= MAX_SESSION_NAME, "split name longer than 255 bytes");
+    buf.push(bytes.len() as u8);
+    buf.extend_from_slice(bytes);
 }
 
 fn put_session(buf: &mut Vec<u8>, session: &str) {
@@ -276,6 +313,23 @@ impl<'a> Cursor<'a> {
         Ok(s.to_string())
     }
 
+    /// Trailing split-depth name; a payload ending here is a pre-split
+    /// (or default-depth) client and decodes as `""` = "default depth".
+    /// An explicit zero-length name is rejected — the default depth is
+    /// spelled by omitting the field, keeping the encoding canonical.
+    fn split_or_empty(&mut self) -> Result<String> {
+        if self.pos == self.buf.len() {
+            return Ok(String::new());
+        }
+        let len = self.u8()? as usize;
+        if len == 0 {
+            bail!("empty split name (omit the field to request the default depth)");
+        }
+        let bytes = self.take(len)?;
+        let s = std::str::from_utf8(bytes).map_err(|_| anyhow::anyhow!("split name not utf-8"))?;
+        Ok(s.to_string())
+    }
+
     /// Trailing capture timestamp; a payload ending here predates the
     /// stamp and decodes as 0 ("unstamped").
     fn capture_or_zero(&mut self) -> Result<u64> {
@@ -305,9 +359,10 @@ impl<'a> Cursor<'a> {
 pub fn encode_payload(msg: &Msg) -> Vec<u8> {
     let mut buf = Vec::new();
     match msg {
-        Msg::Hello { device_id, session } => {
+        Msg::Hello { device_id, session, split } => {
             put_u32(&mut buf, *device_id);
             put_session(&mut buf, session);
+            put_split(&mut buf, split);
         }
         Msg::Features { frame_id, device_id, tensor, session, capture_micros } => {
             put_u64(&mut buf, *frame_id);
@@ -343,7 +398,8 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
         1 => {
             let device_id = c.u32()?;
             let session = c.session_or_default()?;
-            Msg::Hello { device_id, session }
+            let split = c.split_or_empty()?;
+            Msg::Hello { device_id, session, split }
         }
         2 => {
             let frame_id = c.u64()?;
@@ -606,8 +662,21 @@ mod tests {
 
     #[test]
     fn roundtrip_all_messages() {
-        roundtrip(Msg::Hello { device_id: 3, session: DEFAULT_SESSION.into() });
-        roundtrip(Msg::Hello { device_id: 3, session: "intersection-7".into() });
+        roundtrip(Msg::Hello {
+            device_id: 3,
+            session: DEFAULT_SESSION.into(),
+            split: String::new(),
+        });
+        roundtrip(Msg::Hello {
+            device_id: 3,
+            session: "intersection-7".into(),
+            split: String::new(),
+        });
+        roundtrip(Msg::Hello {
+            device_id: 1,
+            session: "intersection-7".into(),
+            split: "split-deep".into(),
+        });
         roundtrip(Msg::Subscribe { session: DEFAULT_SESSION.into() });
         roundtrip(Msg::Subscribe { session: "aux".into() });
         roundtrip(Msg::Bye);
@@ -650,7 +719,8 @@ mod tests {
 
     #[test]
     fn multiple_messages_in_stream() {
-        let hello = Msg::Hello { device_id: 1, session: DEFAULT_SESSION.into() };
+        let hello =
+            Msg::Hello { device_id: 1, session: DEFAULT_SESSION.into(), split: String::new() };
         let mut buf = Vec::new();
         write_msg(&mut buf, &hello).unwrap();
         write_msg(&mut buf, &Msg::Bye).unwrap();
@@ -662,7 +732,7 @@ mod tests {
     #[test]
     fn assembler_matches_blocking_reader() {
         let msgs = vec![
-            Msg::Hello { device_id: 2, session: "north".into() },
+            Msg::Hello { device_id: 2, session: "north".into(), split: "split-shallow".into() },
             Msg::Features {
                 frame_id: 9,
                 device_id: 0,
@@ -763,7 +833,7 @@ mod tests {
         let buf = legacy_frame(1, &5u32.to_le_bytes());
         assert_eq!(
             read_msg(&mut buf.as_slice()).unwrap(),
-            Msg::Hello { device_id: 5, session: DEFAULT_SESSION.into() }
+            Msg::Hello { device_id: 5, session: DEFAULT_SESSION.into(), split: String::new() }
         );
 
         // Subscribe: empty payload.
@@ -870,6 +940,51 @@ mod tests {
                 capture_micros: 0,
             }
         );
+    }
+
+    #[test]
+    fn default_split_hello_is_byte_identical_to_legacy_form() {
+        // A default-depth Hello must not grow trailing bytes: legacy
+        // servers' strict done() check rejects fields they don't know.
+        let msg = Msg::Hello { device_id: 2, session: "s7".into(), split: String::new() };
+        let payload = encode_payload(&msg);
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(&2u32.to_le_bytes());
+        put_session(&mut legacy, "s7");
+        assert_eq!(payload, legacy, "empty split must not add trailing bytes");
+
+        // The same bytes decode back to the default depth (the
+        // pre-split-client arity).
+        let buf = legacy_frame(1, &payload);
+        assert_eq!(read_msg(&mut buf.as_slice()).unwrap(), msg);
+    }
+
+    #[test]
+    fn split_hello_rejects_malformed_names() {
+        // Explicit zero-length split: the default depth is spelled by
+        // omitting the field, so a 0 length byte is a desync.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        put_session(&mut payload, "s");
+        payload.push(0);
+        let buf = legacy_frame(1, &payload);
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+
+        // A split length byte promising more bytes than remain.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        put_session(&mut payload, "s");
+        payload.push(9);
+        payload.extend_from_slice(b"abc");
+        let buf = legacy_frame(1, &payload);
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+
+        // Oversized split names fail validation before reaching the wire.
+        let mut buf = Vec::new();
+        let msg =
+            Msg::Hello { device_id: 0, session: "s".into(), split: "x".repeat(300) };
+        assert!(write_msg(&mut buf, &msg).is_err());
+        assert!(buf.is_empty(), "nothing may reach the wire on validation failure");
     }
 
     #[test]

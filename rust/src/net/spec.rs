@@ -25,7 +25,7 @@ pub const SPEC_END: &str = "<!-- wire-spec-end -->";
 /// Every encoding name a table row may use. Each maps 1:1 to a
 /// `put_<encoding>` helper in `net/proto.rs`.
 pub const ENCODINGS: &[&str] =
-    &["u32", "u64", "tensor", "qtensor", "detections", "session", "capture"];
+    &["u32", "u64", "tensor", "qtensor", "detections", "session", "capture", "split"];
 
 /// Marker opening the machine-readable datagram-header table.
 pub const DGRAM_SPEC_BEGIN: &str = "<!-- dgram-spec-begin -->";

@@ -14,6 +14,21 @@
 //!   conv + ReLU, and 1×1 cls/box heads.
 //! - **full** (baselines) — head + [`BevStage`] on a single cloud.
 //!
+//! ## Split depths
+//!
+//! Every head/tail pair is served at three named cut depths
+//! (`crate::config::SPLIT_DEPTHS`). The default `split-mid` resolves the
+//! bare artifact names above, byte-identical to pre-split builds.
+//! `split-shallow` ships raw voxel statistics (`c_in` channels) and the
+//! tail runs each device's deferred projection (same weights, relocated
+//! compute — outputs match `split-mid` exactly); `split-deep` adds a
+//! device-side bottleneck to [`deep_channels`] channels (`deep_w`/
+//! `deep_b`) that the tail expands back (`expand_w`/`expand_b`) before
+//! alignment — a smaller uplink at reduced capacity. Non-default depths
+//! are distinct executables named `<base>@<split>`, so batch planners
+//! never coalesce across depths and synthetic weights stay deterministic
+//! per depth.
+//!
 //! Weights load from `.npy` files under `artifacts/native/` as
 //! `<model>.<layer>.npy` (layers: `head_w`, `head_b`, `integrate_w`,
 //! `integrate_b`, `bev_w`, `bev_b`, `cls_w`, `cls_b`, `box_w`, `box_b`);
@@ -59,7 +74,10 @@
 use super::arena::Arena;
 use super::{ExecBackend, HostTensor};
 use crate::align::AlignMap;
-use crate::config::{IntegrationKind, ModelMeta, Paths};
+use crate::config::{
+    deep_channels, executable_split, normalize_split, split_executable, IntegrationKind,
+    ModelMeta, Paths, VariantMeta, DEFAULT_SPLIT, SPLIT_DEEP, SPLIT_SHALLOW,
+};
 use crate::geom::Pose;
 use crate::utils::npy;
 use crate::utils::rng::Pcg64;
@@ -515,19 +533,58 @@ impl BevStage {
     }
 }
 
-/// Split-point head: voxel statistics → per-voxel linear → ReLU.
+/// One per-voxel dense + ReLU stage of the split-point encoder. The
+/// encoder is a chain of these; a split depth is a cut after some prefix
+/// of the chain — the device runs the prefix, the tail runs the rest.
 #[derive(Clone, Debug)]
-pub struct NativeHead {
-    /// Per-voxel projection, `(c_in, c_head)`.
+pub struct DenseStage {
+    /// Input channels of the stage.
+    pub c_in: usize,
+    /// Output channels of the stage.
+    pub c_out: usize,
+    /// Per-voxel weights, `(c_in, c_out)`.
     pub w: Vec<f32>,
-    /// Projection bias, `(c_head,)`.
+    /// Bias, `(c_out,)`.
     pub b: Vec<f32>,
 }
 
+impl DenseStage {
+    /// Apply the stage (+ ReLU) across every cell of `map`, drawing the
+    /// output buffer from `scratch` and donating the input map's backing
+    /// store back to the arena.
+    fn apply(&self, scratch: &Arena, map: FeatureMap) -> Result<FeatureMap> {
+        let [d, h, w, c] = map.shape();
+        anyhow::ensure!(
+            c == self.c_in,
+            "dense stage expects {} channels, map has {c}",
+            self.c_in
+        );
+        let cells = d * h * w;
+        let mut out = scratch.take(cells * self.c_out);
+        dense_per_cell_into(&map.data, cells, self.c_in, &self.w, &self.b, &mut out);
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        scratch.give(map.data);
+        FeatureMap::from_vec(d, h, w, self.c_out, out)
+    }
+}
+
+/// Split-point head: voxel statistics → zero or more per-voxel dense +
+/// ReLU stages. The stage count is the split depth — none for
+/// `split-shallow` (raw statistics go on the wire), one for the default
+/// `split-mid` projection, two for `split-deep`'s extra bottleneck.
+#[derive(Clone, Debug)]
+pub struct NativeHead {
+    /// Per-voxel stages applied after voxelization, device side.
+    pub stages: Vec<DenseStage>,
+}
+
 impl NativeHead {
-    /// Voxelize one `(max_points, 4)` cloud and project each voxel's
-    /// statistics to `c_head` channels (+ ReLU) — the intermediate
-    /// output that goes on the wire.
+    /// Voxelize one `(max_points, 4)` cloud and run the device-side
+    /// stages — the intermediate output that goes on the wire.
     pub fn run(&self, meta: &ModelMeta, input: &HostTensor) -> Result<FeatureMap> {
         let g = &meta.grid;
         anyhow::ensure!(
@@ -537,15 +594,24 @@ impl NativeHead {
             input.shape
         );
         let points = tensor_to_points(&input.data);
-        let vox = voxelize(&points, g);
-        let [d, h, w, c_in] = vox.shape();
-        let mut out = dense_per_cell(&vox.data, d * h * w, c_in, &self.w, &self.b);
-        for v in &mut out {
-            if *v < 0.0 {
-                *v = 0.0;
+        let mut map = voxelize(&points, g);
+        let [d, h, w, _] = map.shape();
+        for stage in &self.stages {
+            let [_, _, _, c] = map.shape();
+            anyhow::ensure!(
+                c == stage.c_in,
+                "head stage expects {} channels, map has {c}",
+                stage.c_in
+            );
+            let mut out = dense_per_cell(&map.data, d * h * w, stage.c_in, &stage.w, &stage.b);
+            for v in &mut out {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
             }
+            map = FeatureMap::from_vec(d, h, w, stage.c_out, out)?;
         }
-        FeatureMap::from_vec(d, h, w, self.b.len(), out)
+        Ok(map)
     }
 }
 
@@ -564,6 +630,15 @@ pub struct NativeTail {
     pub integrate_b: Vec<f32>,
     /// Integration kernel size (1 for `Max`/`ConvK1`, 3 for `ConvK3`).
     pub k: usize,
+    /// Channels each device map carries on the wire at this tail's split
+    /// depth (`c_in` for `split-shallow`, `c_head` for the default,
+    /// [`deep_channels`](crate::config::deep_channels) for `split-deep`).
+    pub c_wire: usize,
+    /// Per-device dense + ReLU stages run *before* alignment — the
+    /// projection a `split-shallow` device deferred (that device's own
+    /// head weights) or the `split-deep` expansion back to `c_head`.
+    /// Empty at the default depth.
+    pub pre: Vec<DenseStage>,
     /// The shared BEV trunk + detection heads.
     pub bev: BevStage,
     /// Scratch-buffer arena shared with the owning backend: gather
@@ -606,7 +681,7 @@ impl NativeTail {
             inputs.len()
         );
         let g = &meta.grid;
-        let expect = vec![g.dims[2], g.dims[1], g.dims[0], g.c_head];
+        let expect = vec![g.dims[2], g.dims[1], g.dims[0], self.c_wire];
         let mut aligned = Vec::with_capacity(inputs.len());
         for (dev, t) in inputs.into_iter().enumerate() {
             anyhow::ensure!(
@@ -615,15 +690,21 @@ impl NativeTail {
                 t.shape,
                 expect
             );
-            let map = FeatureMap::from_vec(expect[0], expect[1], expect[2], expect[3], t.data)?;
+            let mut map =
+                FeatureMap::from_vec(expect[0], expect[1], expect[2], expect[3], t.data)?;
+            // Non-default split depths run the device's deferred (or
+            // expansion) stage here, before alignment, restoring the
+            // `c_head`-channel map the trunk was built for.
+            if let Some(stage) = self.pre.get(dev) {
+                map = stage.apply(&self.scratch, map)?;
+            }
+            let [md, mh, mw, mc] = map.shape();
             // Gather into a zeroed arena buffer (apply_into's contract),
             // then donate the source map's backing store for reuse.
             let mut gathered = self.scratch.take(map.data.len());
             self.aligns[dev].apply_into(&map, &mut gathered);
             self.scratch.give(map.data);
-            aligned.push(FeatureMap::from_vec(
-                expect[0], expect[1], expect[2], expect[3], gathered,
-            )?);
+            aligned.push(FeatureMap::from_vec(md, mh, mw, mc, gathered)?);
         }
         let integrated = self.integrate(&aligned);
         for m in aligned {
@@ -839,11 +920,67 @@ impl NativeBackend {
         Ok(synthetic_weights(model, layer, len))
     }
 
-    fn head_weights(&self, name: &str) -> Result<NativeHead> {
+    /// The per-voxel projection stage every split depth shares — the bare
+    /// head artifact's `head_w`/`head_b` weights, so the default depth
+    /// resolves the exact weights pre-split deployments ran.
+    fn proj_stage(&self, base: &str) -> Result<DenseStage> {
         let g = &self.meta.grid;
-        Ok(NativeHead {
-            w: self.layer(name, "head_w", g.c_in * g.c_head)?,
-            b: self.layer(name, "head_b", g.c_head)?,
+        Ok(DenseStage {
+            c_in: g.c_in,
+            c_out: g.c_head,
+            w: self.layer(base, "head_w", g.c_in * g.c_head)?,
+            b: self.layer(base, "head_b", g.c_head)?,
+        })
+    }
+
+    /// Device-side head of artifact `base` cut at `split`.
+    fn head_for_split(&self, base: &str, split: &str) -> Result<NativeHead> {
+        let g = &self.meta.grid;
+        let stages = match normalize_split(split)? {
+            SPLIT_SHALLOW => Vec::new(),
+            SPLIT_DEEP => {
+                let c_deep = deep_channels(g);
+                let name = split_executable(base, split)?;
+                vec![
+                    self.proj_stage(base)?,
+                    DenseStage {
+                        c_in: g.c_head,
+                        c_out: c_deep,
+                        w: self.layer(&name, "deep_w", g.c_head * c_deep)?,
+                        b: self.layer(&name, "deep_b", c_deep)?,
+                    },
+                ]
+            }
+            _ => vec![self.proj_stage(base)?],
+        };
+        Ok(NativeHead { stages })
+    }
+
+    /// Wire width and server-side per-device stages of variant `v`'s tail
+    /// cut at `split`. The shallow tail runs each device's deferred
+    /// projection with that device's own head weights — relocating the
+    /// compute without changing the math — while the deep tail expands
+    /// the bottleneck back to `c_head` with one shared stage.
+    fn tail_pre_for_split(&self, v: &VariantMeta, split: &str) -> Result<(usize, Vec<DenseStage>)> {
+        let g = &self.meta.grid;
+        Ok(match normalize_split(split)? {
+            SPLIT_SHALLOW => {
+                let pre =
+                    v.heads.iter().map(|h| self.proj_stage(h)).collect::<Result<Vec<_>>>()?;
+                (g.c_in, pre)
+            }
+            SPLIT_DEEP => {
+                let c_deep = deep_channels(g);
+                let name = split_executable(&v.tail, split)?;
+                let stage = DenseStage {
+                    c_in: c_deep,
+                    c_out: g.c_head,
+                    w: self.layer(&name, "expand_w", c_deep * g.c_head)?,
+                    b: self.layer(&name, "expand_b", g.c_head)?,
+                };
+                (c_deep, vec![stage; self.meta.num_devices])
+            }
+            _ => (g.c_head, Vec::new()),
         })
     }
 
@@ -882,34 +1019,53 @@ impl NativeBackend {
 
     fn build_model(&self, name: &str) -> Result<NativeModel> {
         let meta = &self.meta;
+        let (base, split) = executable_split(name);
+        // Reject aliases like `tail_max@split-mid`: the default depth's
+        // canonical name is the bare one, and an alias would fragment
+        // batch keys for the same executable.
+        let canonical = split_executable(base, split)?;
+        anyhow::ensure!(
+            name == canonical,
+            "non-canonical split executable {name:?} (use {canonical:?})"
+        );
         for v in &meta.variants {
-            if v.heads.iter().any(|h| h == name) {
-                return Ok(NativeModel::Head(self.head_weights(name)?));
+            if v.heads.iter().any(|h| h == base) {
+                return Ok(NativeModel::Head(self.head_for_split(base, split)?));
             }
-            if v.tail == name {
+            if v.tail == base {
                 let aligns: Vec<AlignMap> = (0..meta.num_devices)
                     .map(|d| AlignMap::build(&meta.grid, &self.poses[d], 1))
                     .collect();
+                // Integration and BEV trunk weights key off the bare tail
+                // name: the server trunk is the same network whichever
+                // depth the cut lands on.
                 let (k, integrate_w, integrate_b) = match v.integration {
                     IntegrationKind::Max => (1, Vec::new(), Vec::new()),
-                    IntegrationKind::ConvK1 => self.integrate_weights(name, 1)?,
-                    IntegrationKind::ConvK3 => self.integrate_weights(name, 3)?,
+                    IntegrationKind::ConvK1 => self.integrate_weights(base, 1)?,
+                    IntegrationKind::ConvK3 => self.integrate_weights(base, 3)?,
                 };
+                let (c_wire, pre) = self.tail_pre_for_split(v, split)?;
                 return Ok(NativeModel::Tail(NativeTail {
                     kind: v.integration,
                     aligns,
                     integrate_w,
                     integrate_b,
                     k,
-                    bev: self.bev_weights(name)?,
+                    c_wire,
+                    pre,
+                    bev: self.bev_weights(base)?,
                     scratch: Arc::clone(&self.arena),
                 }));
             }
         }
-        if meta.single_full.iter().any(|n| n == name) || meta.input_integration_full == name {
+        if meta.single_full.iter().any(|n| n == base) || meta.input_integration_full == base {
+            anyhow::ensure!(
+                split == DEFAULT_SPLIT,
+                "full baseline {base:?} has no split depths ({name:?})"
+            );
             return Ok(NativeModel::Full(NativeFull {
-                head: self.head_weights(name)?,
-                bev: self.bev_weights(name)?,
+                head: self.head_for_split(base, DEFAULT_SPLIT)?,
+                bev: self.bev_weights(base)?,
             }));
         }
         bail!("model {name:?} is not described by model_meta (native backend)")
@@ -1172,6 +1328,142 @@ mod tests {
         let results = b.exec_batch("ghost", vec![vec![], vec![]]);
         assert_eq!(results.len(), 2);
         assert!(results.iter().all(|r| r.is_err()));
+    }
+
+    /// A synthetic cloud with points spread across the grid, so split
+    /// parity failures can't hide behind all-zero maps.
+    fn dense_cloud(meta: &ModelMeta, seed: u64) -> HostTensor {
+        let g = &meta.grid;
+        let mut rng = crate::utils::rng::Pcg64::new(seed);
+        let mut cloud = vec![0.0f32; g.max_points * 4];
+        for p in cloud.chunks_exact_mut(4) {
+            p[0] = g.range_min[0] as f32
+                + rng.uniform_f32() * (g.range_max[0] - g.range_min[0]) as f32;
+            p[1] = g.range_min[1] as f32
+                + rng.uniform_f32() * (g.range_max[1] - g.range_min[1]) as f32;
+            p[2] = g.range_min[2] as f32
+                + rng.uniform_f32() * (g.range_max[2] - g.range_min[2]) as f32;
+            p[3] = rng.uniform_f32();
+        }
+        HostTensor::new(vec![g.max_points, 4], cloud).unwrap()
+    }
+
+    #[test]
+    fn every_split_depth_serves_matching_head_tail_shapes() {
+        use crate::config::{wire_channels, SPLIT_DEPTHS};
+        let b = backend();
+        let meta = b.meta().clone();
+        let g = &meta.grid;
+        let v = meta.variant(IntegrationKind::Max).unwrap().clone();
+        for split in SPLIT_DEPTHS {
+            let c_wire = wire_channels(g, split).unwrap();
+            let cloud = dense_cloud(&meta, 7);
+            let mut maps = Vec::new();
+            for dev in 0..meta.num_devices {
+                let head = v.head_for(dev, split).unwrap();
+                b.load(&head).unwrap();
+                let out = b.exec(&head, vec![cloud.clone()]).unwrap();
+                assert_eq!(
+                    out[0].shape,
+                    vec![g.dims[2], g.dims[1], g.dims[0], c_wire],
+                    "{split} head wire shape"
+                );
+                maps.push(out.into_iter().next().unwrap());
+            }
+            let tail = v.tail_for(split).unwrap();
+            b.load(&tail).unwrap();
+            let out = b.exec(&tail, maps).unwrap();
+            let [hb, wb] = meta.bev_dims;
+            assert_eq!(out[0].shape, vec![hb, wb, meta.anchors.len()], "{split} cls shape");
+            assert!(out[0].data.iter().all(|v| v.is_finite()), "{split}");
+        }
+    }
+
+    #[test]
+    fn shallow_split_relocates_compute_without_changing_outputs() {
+        // The shallow cut ships raw voxel statistics and the tail runs
+        // the deferred projection with the same per-device weights the
+        // mid head would use — end-to-end outputs must be bit-identical.
+        let b = backend();
+        let meta = b.meta().clone();
+        let v = meta.variant(IntegrationKind::ConvK1).unwrap().clone();
+        let cloud0 = dense_cloud(&meta, 11);
+        let cloud1 = dense_cloud(&meta, 13);
+        let run = |split: &str| {
+            let mut maps = Vec::new();
+            for (dev, cloud) in [&cloud0, &cloud1].into_iter().enumerate() {
+                let head = v.head_for(dev, split).unwrap();
+                b.load(&head).unwrap();
+                maps.push(b.exec(&head, vec![cloud.clone()]).unwrap().remove(0));
+            }
+            let tail = v.tail_for(split).unwrap();
+            b.load(&tail).unwrap();
+            b.exec(&tail, maps).unwrap()
+        };
+        let mid = run("split-mid");
+        let shallow = run("split-shallow");
+        assert_eq!(mid, shallow, "shallow and mid cuts are the same network");
+        // The deep cut's bottleneck genuinely reduces capacity — it must
+        // NOT reproduce the mid outputs.
+        let deep = run("split-deep");
+        assert_ne!(mid, deep, "deep bottleneck must actually bottleneck");
+    }
+
+    #[test]
+    fn default_split_resolves_bare_names() {
+        // Bare names (what every pre-split deployment sends) keep
+        // resolving, and the mid-depth head is the single projection
+        // stage with the bare artifact's synthetic weights.
+        let b = backend();
+        b.load("head_max_dev0").unwrap();
+        let g = b.meta().grid.clone();
+        match &*b.model("head_max_dev0").unwrap() {
+            NativeModel::Head(h) => {
+                assert_eq!(h.stages.len(), 1);
+                assert_eq!(
+                    h.stages[0].w,
+                    synthetic_weights("head_max_dev0", "head_w", g.c_in * g.c_head)
+                );
+            }
+            other => panic!("expected a head, got {other:?}"),
+        }
+        // Aliased default names are rejected — they would fragment the
+        // planner's batch keys for the same executable.
+        assert!(b.load("tail_max@split-mid").is_err());
+        // Full baselines have exactly one depth.
+        assert!(b.load("single_dev0@split-deep").is_err());
+        assert!(b.load("tail_max@split-bogus").is_err());
+    }
+
+    #[test]
+    fn split_tails_batch_bit_identically() {
+        let b = backend();
+        let meta = b.meta().clone();
+        let v = meta.variant(IntegrationKind::Max).unwrap().clone();
+        for split in ["split-shallow", "split-deep"] {
+            let heads: Vec<String> =
+                (0..meta.num_devices).map(|d| v.head_for(d, split).unwrap()).collect();
+            for h in &heads {
+                b.load(h).unwrap();
+            }
+            let tail = v.tail_for(split).unwrap();
+            b.load(&tail).unwrap();
+            let frame = |seed: u64| -> Vec<HostTensor> {
+                heads
+                    .iter()
+                    .map(|h| b.exec(h, vec![dense_cloud(&meta, seed)]).unwrap().remove(0))
+                    .collect()
+            };
+            let batch: Vec<Vec<HostTensor>> = (0..3).map(|i| frame(20 + i)).collect();
+            let batched = b.exec_batch(&tail, batch.clone());
+            for (entry, inputs) in batched.into_iter().zip(batch) {
+                assert_eq!(
+                    entry.unwrap(),
+                    b.exec(&tail, inputs).unwrap(),
+                    "{split}: batched tail must match per-frame exec"
+                );
+            }
+        }
     }
 
     #[test]

@@ -27,7 +27,10 @@
 //! smoke scenario as a hard gate.
 
 use crate::cli::Args;
-use crate::config::{artifacts_present, IntegrationKind, ModelMeta, Paths};
+use crate::config::{
+    artifacts_present, normalize_split, IntegrationKind, ModelMeta, Paths, SPLIT_DEEP,
+    SPLIT_SHALLOW,
+};
 use crate::coordinator::device::{run_device, DeviceConfig, DeviceReport, Transport};
 use crate::coordinator::scheduler::LossPolicy;
 use crate::coordinator::server::{run_server_until, ServerConfig, ServerStop};
@@ -57,6 +60,11 @@ pub struct SessionSpec {
     pub deadline: Duration,
     /// Incomplete-frame policy.
     pub policy: LossPolicy,
+    /// Split depth this session serves (`""` = the default depth,
+    /// `split-mid`). Devices feeding the session inherit it, so one
+    /// spec key keeps a session and its fleet on the same wire
+    /// contract — see docs/WIRE_PROTOCOL.md, "Split negotiation".
+    pub split: String,
 }
 
 /// One device worker in a scenario.
@@ -127,6 +135,19 @@ pub struct ScenarioSpec {
     /// XOR-parity group size for the UDP uplink (`fec_k` JSON key /
     /// `--fec`); 0 = FEC off. Only meaningful with `transport: udp`.
     pub fec_k: u32,
+    /// Overload watermark (`shed_watermark` JSON key /
+    /// `--shed-watermark`): when the batch planner's queue holds at
+    /// least this many pending requests, sessions resolve ready frames
+    /// through the cheap shed tail (coarser decode) instead of
+    /// rejecting them. 0 = shedding off. Requires `max_batch > 1` —
+    /// the overload signal is the planner queue.
+    pub shed_watermark: usize,
+    /// Deadline-hit-rate floor (`min_hit_rate` JSON key): the fraction
+    /// of frames whose end-to-end latency beat their session deadline,
+    /// pooled across sessions, must be at least this or `cmd_scenario`
+    /// exits nonzero (`--ignore-floor` downgrades the failure to a
+    /// printed warning). 0.0 = no floor.
+    pub min_hit_rate: f64,
     /// Sessions the server hosts.
     pub sessions: Vec<SessionSpec>,
     /// Device workers feeding them.
@@ -145,7 +166,7 @@ pub struct ScenarioSpec {
 impl ScenarioSpec {
     /// Names `ScenarioSpec::builtin` accepts.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["ci-smoke", "smoke", "churn", "scale-200", "scale-1k"]
+        &["ci-smoke", "smoke", "churn", "overload-smoke", "scale-200", "scale-1k"]
     }
 
     /// A named built-in scenario.
@@ -157,6 +178,12 @@ impl ScenarioSpec {
     ///   sessions (ZeroFill and Drop), deterministic loss, quantization
     ///   on one uplink, delay+jitter on another.
     /// - `churn` — device dropout mid-run and a late-joining device.
+    /// - `overload-smoke` — the CI degradation gate: a heterogeneous
+    ///   fleet (two sessions at different split depths; fast devices
+    ///   plus bandwidth-starved slow ones) offering ~3× the
+    ///   per-deadline frame rate with watermark shedding armed. Emits
+    ///   the per-split latency and shed accounting as
+    ///   `BENCH_split.json` and enforces a deadline-hit-rate floor.
     /// - `scale-200` — 100 sessions × 2 devices (200 connections plus
     ///   100 subscribers) through the event-loop server; the CI scale
     ///   gate. Fits comfortably under a 1024 fd limit.
@@ -174,6 +201,8 @@ impl ScenarioSpec {
             batch_window: Duration::from_millis(2),
             transport: Transport::Tcp,
             fec_k: 0,
+            shed_watermark: 0,
+            min_hit_rate: 0.0,
             sessions: Vec::new(),
             devices: Vec::new(),
             settle: Duration::ZERO,
@@ -184,6 +213,7 @@ impl ScenarioSpec {
             variant: v,
             deadline: Duration::from_millis(d),
             policy: p,
+            split: String::new(),
         };
         let dev = |s: &str, id, frames| DeviceSpec {
             session: s.to_string(),
@@ -257,6 +287,37 @@ impl ScenarioSpec {
                 ],
                 ..base
             }),
+            // The overload gate: 60 ms deadlines at 50 Hz offered load
+            // (3× the per-deadline rate, inside the spec'd 2–4× band),
+            // one session per split depth so mixed splits share the
+            // server, fast devices against bandwidth-starved slow ones,
+            // micro-batching on (the shed signal is the planner queue)
+            // and the watermark low enough that pressure actually trips
+            // it. The floor is deliberately conservative: the gate
+            // asserts degradation keeps frames inside the deadline, not
+            // a tuned latency number.
+            "overload-smoke" => Ok(ScenarioSpec {
+                max_batch: 4,
+                shed_watermark: 2,
+                min_hit_rate: 0.5,
+                sessions: vec![
+                    SessionSpec {
+                        split: SPLIT_DEEP.into(),
+                        ..session("fast", IntegrationKind::Max, 60, LossPolicy::ZeroFill)
+                    },
+                    SessionSpec {
+                        split: SPLIT_SHALLOW.into(),
+                        ..session("slow", IntegrationKind::ConvK1, 60, LossPolicy::ZeroFill)
+                    },
+                ],
+                devices: vec![
+                    DeviceSpec { hz: 50.0, ..dev("fast", 0, 24) },
+                    DeviceSpec { hz: 50.0, ..dev("fast", 1, 24) },
+                    DeviceSpec { hz: 50.0, bandwidth_bps: Some(40e6), ..dev("slow", 0, 24) },
+                    DeviceSpec { hz: 50.0, bandwidth_bps: Some(40e6), ..dev("slow", 1, 24) },
+                ],
+                ..base
+            }),
             "scale-200" => Ok(Self::scale_fleet(100, base)),
             "scale-1k" => Ok(Self::scale_fleet(500, base)),
             other => anyhow::bail!(
@@ -283,6 +344,7 @@ impl ScenarioSpec {
                 variant: variants[i % variants.len()],
                 deadline: Duration::from_millis(250),
                 policy: LossPolicy::ZeroFill,
+                split: String::new(),
             });
             for dev in 0..2 {
                 devices.push(DeviceSpec {
@@ -306,8 +368,10 @@ impl ScenarioSpec {
     ///   "backend": "native", "backend_threads": 2, "settle_ms": 0,
     ///   "max_batch": 4, "batch_window_ms": 2,
     ///   "transport": "udp", "fec_k": 4,
+    ///   "shed_watermark": 2, "min_hit_rate": 0.5,
     ///   "sessions": [
-    ///     {"name": "north", "variant": "max", "deadline_ms": 250, "policy": "zero-fill"}
+    ///     {"name": "north", "variant": "max", "deadline_ms": 250,
+    ///      "policy": "zero-fill", "split": "split-deep"}
     ///   ],
     ///   "devices": [
     ///     {"session": "north", "device": 0, "frames": 16, "hz": 20,
@@ -372,6 +436,8 @@ impl ScenarioSpec {
                 "settle_ms",
                 "transport",
                 "fec_k",
+                "shed_watermark",
+                "min_hit_rate",
                 "sessions",
                 "devices",
             ],
@@ -379,7 +445,7 @@ impl ScenarioSpec {
         )?;
         let mut sessions = Vec::new();
         for s in j.req("sessions")?.as_arr()? {
-            check_keys(s, &["name", "variant", "deadline_ms", "policy"], "session")?;
+            check_keys(s, &["name", "variant", "deadline_ms", "policy", "split"], "session")?;
             sessions.push(SessionSpec {
                 name: s.req("name")?.as_str()?.to_string(),
                 variant: IntegrationKind::parse(match s.get("variant") {
@@ -391,6 +457,10 @@ impl ScenarioSpec {
                     Some(v) => v.as_str()?,
                     None => "zero-fill",
                 })?,
+                split: match s.get("split") {
+                    Some(v) => v.as_str()?.to_string(),
+                    None => String::new(),
+                },
             });
         }
         let mut devices = Vec::new();
@@ -459,6 +529,8 @@ impl ScenarioSpec {
                 None => "tcp",
             })?,
             fec_k: u64_or(j, "fec_k", 0)? as u32,
+            shed_watermark: u64_or(j, "shed_watermark", 0)? as usize,
+            min_hit_rate: f64_or(j, "min_hit_rate", 0.0)?,
             sessions,
             devices,
             settle: Duration::from_millis(u64_or(j, "settle_ms", 0)?),
@@ -473,9 +545,20 @@ impl ScenarioSpec {
             self.transport == Transport::Udp || self.fec_k == 0,
             "fec_k applies to the datagram uplink; set \"transport\": \"udp\""
         );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.min_hit_rate),
+            "min_hit_rate is a fraction in [0, 1], got {}",
+            self.min_hit_rate
+        );
+        anyhow::ensure!(
+            self.shed_watermark == 0 || self.max_batch > 1,
+            "shed_watermark reads the batch planner queue; set max_batch > 1"
+        );
         let mut seen = std::collections::BTreeSet::new();
         for s in &self.sessions {
             anyhow::ensure!(seen.insert(&s.name), "duplicate session {:?}", s.name);
+            normalize_split(&s.split)
+                .with_context(|| format!("session {:?} split depth", s.name))?;
         }
         let mut slots = std::collections::BTreeSet::new();
         for d in &self.devices {
@@ -517,6 +600,12 @@ pub struct SessionReport {
     pub variant: IntegrationKind,
     /// Incomplete-frame policy the session ran.
     pub policy: LossPolicy,
+    /// Split depth the session served (`split-shallow` / `split-mid` /
+    /// `split-deep`, always normalized).
+    pub split: String,
+    /// Frame-sync deadline the session ran under — the operand of
+    /// [`SessionReport::deadline_hit_rate`].
+    pub deadline: Duration,
     /// Frames the session completed (including zero-filled ones).
     pub frames_done: u64,
     /// Results the TCP subscriber actually received.
@@ -531,6 +620,12 @@ pub struct SessionReport {
     pub sync_late: u64,
     /// Duplicate (frame, device) submissions.
     pub sync_dup: u64,
+    /// Ready bursts this session resolved through the shed tail under
+    /// overload (0 with shedding off or never tripped).
+    pub shed_batches: u64,
+    /// Frames degraded through the shed tail (cheaper tail variant +
+    /// coarser decode) instead of being rejected.
+    pub shed_frames: u64,
     /// Per-frame end-to-end latency (device capture → decoded
     /// detections at the ResultSink), seconds.
     pub e2e_secs: Vec<f64>,
@@ -538,6 +633,26 @@ pub struct SessionReport {
     /// (device capture → `Result` delivered over the wire), seconds.
     /// A superset of `e2e_secs` per frame: adds encode + delivery.
     pub e2e_wire_secs: Vec<f64>,
+}
+
+impl SessionReport {
+    /// How many of this session's frames beat the deadline end to end:
+    /// `(hits, total)` over `e2e_secs`. Kept as raw counts so pooled
+    /// rates weight sessions by frame count, not per-session averages.
+    fn deadline_hits(&self) -> (usize, usize) {
+        let d = self.deadline.as_secs_f64();
+        let hits = self.e2e_secs.iter().filter(|&&s| s <= d).count();
+        (hits, self.e2e_secs.len())
+    }
+
+    /// Fraction of frames whose end-to-end latency beat the session
+    /// deadline. A session with no frames scores 1.0 — no frame missed.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        match self.deadline_hits() {
+            (_, 0) => 1.0,
+            (hits, total) => hits as f64 / total as f64,
+        }
+    }
 }
 
 /// Per-device outcome of a scenario run.
@@ -606,6 +721,9 @@ pub struct ScenarioReport {
     pub backend: String,
     /// Feature uplink transport the run used (`"tcp"` or `"udp"`).
     pub transport: String,
+    /// Overload watermark the run used (0 = shedding off); carried so
+    /// `BENCH_split.json` records the knob its shed counts ran under.
+    pub shed_watermark: usize,
     /// Per-session outcomes.
     pub sessions: Vec<SessionReport>,
     /// Per-device outcomes.
@@ -658,6 +776,11 @@ impl ScenarioReport {
                         o.set("name", Json::Str(s.name.clone()))
                             .set("variant", Json::Str(s.variant.name().into()))
                             .set("policy", Json::Str(s.policy.name().into()))
+                            .set("split", Json::Str(s.split.clone()))
+                            .set("deadline_ms", Json::Num(s.deadline.as_secs_f64() * 1e3))
+                            .set("deadline_hit_rate", Json::Num(s.deadline_hit_rate()))
+                            .set("shed_batches", Json::Num(s.shed_batches as f64))
+                            .set("shed_frames", Json::Num(s.shed_frames as f64))
                             .set("frames_done", Json::Num(s.frames_done as f64))
                             .set("results_received", Json::Num(s.results_received as f64))
                             .set("sync_complete", Json::Num(s.sync_complete as f64))
@@ -745,6 +868,78 @@ impl ScenarioReport {
         j
     }
 
+    /// Fraction of frames, pooled across every session, whose
+    /// end-to-end latency beat their session's deadline — the operand
+    /// of the `min_hit_rate` floor check. 1.0 when no frames ran.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let (hits, total) = self
+            .sessions
+            .iter()
+            .map(SessionReport::deadline_hits)
+            .fold((0usize, 0usize), |(h, t), (sh, st)| (h + sh, t + st));
+        if total == 0 {
+            1.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Serialize to the `BENCH_split.json` schema (see
+    /// `docs/BENCHMARKS.md`): the split-depth/degradation view —
+    /// per-split pooled e2e latency, shed accounting, and
+    /// deadline-hit-rate, the operands of the CI overload gate.
+    pub fn split_json(&self) -> Json {
+        let mut by_split: BTreeMap<&str, Vec<&SessionReport>> = BTreeMap::new();
+        for s in &self.sessions {
+            by_split.entry(s.split.as_str()).or_default().push(s);
+        }
+        let mut rows = Vec::new();
+        for (split, group) in &by_split {
+            let pooled: Vec<f64> =
+                group.iter().flat_map(|s| s.e2e_secs.iter().copied()).collect();
+            let (hits, total) = group
+                .iter()
+                .map(|s| s.deadline_hits())
+                .fold((0usize, 0usize), |(h, t), (sh, st)| (h + sh, t + st));
+            let mut o = Json::obj();
+            o.set("split", Json::Str((*split).to_string()))
+                .set("sessions", Json::Num(group.len() as f64))
+                .set(
+                    "frames_done",
+                    Json::Num(group.iter().map(|s| s.frames_done).sum::<u64>() as f64),
+                )
+                .set(
+                    "shed_batches",
+                    Json::Num(group.iter().map(|s| s.shed_batches).sum::<u64>() as f64),
+                )
+                .set(
+                    "shed_frames",
+                    Json::Num(group.iter().map(|s| s.shed_frames).sum::<u64>() as f64),
+                )
+                .set("e2e_ms", ms_summary(&pooled))
+                .set(
+                    "deadline_hit_rate",
+                    Json::Num(if total == 0 { 1.0 } else { hits as f64 / total as f64 }),
+                );
+            rows.push(o);
+        }
+        let mut j = Json::obj();
+        j.set("scenario", Json::Str(self.scenario.clone()))
+            .set("backend", Json::Str(self.backend.clone()))
+            .set("shed_watermark", Json::Num(self.shed_watermark as f64))
+            .set("deadline_hit_rate", Json::Num(self.deadline_hit_rate()))
+            .set(
+                "shed_batches",
+                Json::Num(self.sessions.iter().map(|s| s.shed_batches).sum::<u64>() as f64),
+            )
+            .set(
+                "shed_frames",
+                Json::Num(self.sessions.iter().map(|s| s.shed_frames).sum::<u64>() as f64),
+            )
+            .set("splits", Json::Arr(rows));
+        j
+    }
+
     /// Human-readable run summary for the CLI.
     pub fn summary(&self) -> String {
         let mut out = format!(
@@ -755,19 +950,22 @@ impl ScenarioReport {
             let ms: Vec<f64> = s.e2e_secs.iter().map(|v| v * 1e3).collect();
             let wire_ms: Vec<f64> = s.e2e_wire_secs.iter().map(|v| v * 1e3).collect();
             out.push_str(&format!(
-                "  session {:<12} [{:>9}] frames={:<4} results={:<4} \
-                 e2e p50={:.1}ms p95={:.1}ms (wire p50={:.1}ms) | \
-                 sync: {} complete, {} timed out, {} dropped\n",
+                "  session {:<12} [{:>9}|{:>13}] frames={:<4} results={:<4} \
+                 e2e p50={:.1}ms p95={:.1}ms (wire p50={:.1}ms) hit={:.0}% | \
+                 sync: {} complete, {} timed out, {} dropped | {} shed\n",
                 s.name,
                 s.policy.name(),
+                s.split,
                 s.frames_done,
                 s.results_received,
                 stats::percentile(&ms, 50.0),
                 stats::percentile(&ms, 95.0),
                 stats::percentile(&wire_ms, 50.0),
+                s.deadline_hit_rate() * 100.0,
                 s.sync_complete,
                 s.sync_timed_out,
                 s.sync_dropped,
+                s.shed_frames,
             ));
         }
         for d in &self.devices {
@@ -791,6 +989,18 @@ impl ScenarioReport {
              subscribers\n",
             self.server.conn_accepted, self.server.conn_peak, self.server.sink_dropped,
         ));
+        if self.shed_watermark > 0 {
+            let frames: u64 = self.sessions.iter().map(|s| s.shed_frames).sum();
+            let bursts: u64 = self.sessions.iter().map(|s| s.shed_batches).sum();
+            out.push_str(&format!(
+                "  shedding: watermark {}, {} frame(s) degraded in {} burst(s), \
+                 pooled deadline hit rate {:.0}%\n",
+                self.shed_watermark,
+                frames,
+                bursts,
+                self.deadline_hit_rate() * 100.0,
+            ));
+        }
         if self.server.dgram_rx > 0 {
             out.push_str(&format!(
                 "  udp: {} datagrams rx, {} fec recovered, {} stale dropped, {} dup, \
@@ -929,14 +1139,20 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
     server_cfg.udp = spec.transport == Transport::Udp;
     server_cfg.trace = spec.trace.clone();
     server_cfg.max_frames = None; // externally stopped
+    server_cfg.shed_watermark = spec.shed_watermark;
     for s in &spec.sessions {
-        let sc = SessionConfig::new(s.variant).deadline(s.deadline).policy(s.policy);
+        let sc = SessionConfig::new(s.variant)
+            .deadline(s.deadline)
+            .policy(s.policy)
+            .split(&s.split)
+            .shed_watermark(spec.shed_watermark);
         if s.name == DEFAULT_SESSION {
             // The registry always hosts "default"; configure it in place
             // instead of colliding with it.
             server_cfg.variant = s.variant;
             server_cfg.deadline = s.deadline;
             server_cfg.policy = s.policy;
+            server_cfg.split = s.split.clone();
         } else {
             server_cfg.extra_sessions.push((s.name.clone(), sc));
         }
@@ -1051,6 +1267,9 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
             start_frame: d.start_frame,
             transport: spec.transport,
             fec_k: spec.fec_k,
+            // Workers inherit the split depth of the session they feed:
+            // the session's tail only accepts its own wire shape.
+            split: session_spec.split.clone(),
         };
         let paths = paths.clone();
         let delay = d.start_delay;
@@ -1123,6 +1342,10 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
             name: s.name.clone(),
             variant: s.variant,
             policy: s.policy,
+            split: sess.split().to_string(),
+            deadline: s.deadline,
+            shed_batches: m.counter("shed_batches"),
+            shed_frames: m.counter("shed_frames"),
             frames_done: sess.frames_done(),
             results_received: results_by_session
                 .get(&s.name)
@@ -1166,6 +1389,7 @@ pub fn run_scenario(paths: &Paths, spec: &ScenarioSpec) -> Result<ScenarioReport
         scenario: spec.name.clone(),
         backend: spec.backend.name().to_string(),
         transport: spec.transport.name().to_string(),
+        shed_watermark: spec.shed_watermark,
         sessions,
         devices,
         server,
@@ -1191,6 +1415,9 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         "fec",
         "loss",
         "drop-every",
+        "shed-watermark",
+        "min-hit-rate",
+        "ignore-floor",
         "list",
         "trace",
     ])?;
@@ -1216,6 +1443,10 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
         args.ms_or("batch-window-ms", spec.batch_window.as_millis() as u64)?;
     spec.seed = args.u64_or("seed", spec.seed)?;
     spec.trace = args.str_opt("trace").map(PathBuf::from);
+    // Overload knobs: `--shed-watermark 0` turns a builtin's shedding
+    // off (the CI baseline run), any other value arms/retunes it.
+    spec.shed_watermark = args.usize_or("shed-watermark", spec.shed_watermark)?;
+    spec.min_hit_rate = args.f64_or("min-hit-rate", spec.min_hit_rate)?;
     // `--transport both` runs the identical fleet over TCP and then UDP
     // and emits the comparison; otherwise the flag (or the spec's
     // `transport` key) picks the single uplink.
@@ -1279,6 +1510,9 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
     let scale_out = out_dir.join("BENCH_scale.json");
     crate::utils::json::write_file(&scale_out, &report.scale_json())?;
     println!("wrote {}", scale_out.display());
+    let split_out = out_dir.join("BENCH_split.json");
+    crate::utils::json::write_file(&split_out, &report.split_json())?;
+    println!("wrote {}", split_out.display());
 
     // Hard-gate semantics for CI: a session that produced nothing means
     // the fleet path is broken (built-ins are designed to always emit).
@@ -1288,6 +1522,24 @@ pub fn cmd_scenario(args: &Args) -> Result<()> {
             "session {:?} produced no results — fleet path broken",
             s.name
         );
+    }
+    // The overload gate: frames must beat their deadlines at the spec'd
+    // rate even under shedding. `--ignore-floor` keeps the run's report
+    // (e.g. the shedding-disabled CI baseline) without failing the job.
+    let hit = report.deadline_hit_rate();
+    if spec.min_hit_rate > 0.0 {
+        if args.switch("ignore-floor") {
+            println!(
+                "deadline hit rate {hit:.3} (floor {:.3} not enforced: --ignore-floor)",
+                spec.min_hit_rate
+            );
+        } else {
+            anyhow::ensure!(
+                hit >= spec.min_hit_rate,
+                "deadline hit rate {hit:.3} fell below the scenario floor {:.3}",
+                spec.min_hit_rate
+            );
+        }
     }
     Ok(())
 }
@@ -1485,10 +1737,15 @@ mod tests {
             scenario: "t".into(),
             backend: "native".into(),
             transport: "udp".into(),
+            shed_watermark: 4,
             sessions: vec![SessionReport {
                 name: "a".into(),
                 variant: IntegrationKind::Max,
                 policy: LossPolicy::ZeroFill,
+                split: "split-mid".into(),
+                deadline: Duration::from_millis(25),
+                shed_batches: 1,
+                shed_frames: 2,
                 frames_done: 3,
                 results_received: 3,
                 sync_complete: 2,
@@ -1531,6 +1788,12 @@ mod tests {
         assert_eq!(j.req("transport").unwrap().as_str().unwrap(), "udp");
         let s = &j.req("sessions").unwrap().as_arr().unwrap()[0];
         assert_eq!(s.req("frames_done").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(s.req("split").unwrap().as_str().unwrap(), "split-mid");
+        assert_eq!(s.req("shed_frames").unwrap().as_usize().unwrap(), 2);
+        // 10 and 20 ms beat the 25 ms deadline; 30 ms missed it.
+        assert!(
+            (s.req("deadline_hit_rate").unwrap().as_f64().unwrap() - 2.0 / 3.0).abs() < 1e-9
+        );
         let e2e = s.req("e2e_ms").unwrap();
         assert_eq!(e2e.req("n").unwrap().as_usize().unwrap(), 3);
         assert!((e2e.req("p50").unwrap().as_f64().unwrap() - 20.0).abs() < 1e-9);
@@ -1586,6 +1849,145 @@ mod tests {
         assert!(
             (sv.req("batch_occupancy_mean").unwrap().as_f64().unwrap() - 1.5).abs() < 1e-9
         );
+
+        // The split/degradation digest groups sessions by split depth
+        // and carries the shed accounting plus the hit-rate operand of
+        // the CI floor check.
+        let pj = report.split_json();
+        assert_eq!(pj.req("shed_watermark").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(pj.req("shed_frames").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(pj.req("shed_batches").unwrap().as_usize().unwrap(), 1);
+        assert!(
+            (pj.req("deadline_hit_rate").unwrap().as_f64().unwrap() - 2.0 / 3.0).abs() < 1e-9
+        );
+        let rows = pj.req("splits").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req("split").unwrap().as_str().unwrap(), "split-mid");
+        assert_eq!(rows[0].req("sessions").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(rows[0].req("frames_done").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(rows[0].req("shed_frames").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(rows[0].req("e2e_ms").unwrap().req("n").unwrap().as_usize().unwrap(), 3);
+        assert!(
+            (rows[0].req("deadline_hit_rate").unwrap().as_f64().unwrap() - 2.0 / 3.0).abs()
+                < 1e-9
+        );
+        assert!(report.summary().contains("shedding: watermark 4"));
+    }
+
+    #[test]
+    fn deadline_hit_rate_counts_frames_within_deadline() {
+        let mut s = SessionReport {
+            name: "a".into(),
+            variant: IntegrationKind::Max,
+            policy: LossPolicy::ZeroFill,
+            split: "split-mid".into(),
+            deadline: Duration::from_millis(25),
+            shed_batches: 0,
+            shed_frames: 0,
+            frames_done: 4,
+            results_received: 4,
+            sync_complete: 4,
+            sync_timed_out: 0,
+            sync_dropped: 0,
+            sync_late: 0,
+            sync_dup: 0,
+            e2e_secs: vec![0.010, 0.020, 0.030, 0.040],
+            e2e_wire_secs: Vec::new(),
+        };
+        assert!((s.deadline_hit_rate() - 0.5).abs() < 1e-9);
+        // The boundary counts as a hit (<=), and no frames means no miss.
+        s.e2e_secs = vec![0.025];
+        assert_eq!(s.deadline_hit_rate(), 1.0);
+        s.e2e_secs.clear();
+        assert_eq!(s.deadline_hit_rate(), 1.0, "an idle session missed nothing");
+    }
+
+    #[test]
+    fn overload_smoke_builtin_matches_gate_shape() {
+        let meta = scenario_test_meta();
+        let spec = ScenarioSpec::builtin("overload-smoke").unwrap();
+        spec.validate(&meta).unwrap();
+        assert!(spec.max_batch > 1, "the shed signal is the planner queue");
+        assert!(spec.shed_watermark > 0, "the gate runs with shedding armed");
+        assert!(spec.min_hit_rate > 0.0, "the gate enforces a hit-rate floor");
+        // Mixed split depths hosted by one server.
+        let splits: std::collections::BTreeSet<&str> =
+            spec.sessions.iter().map(|s| s.split.as_str()).collect();
+        assert!(splits.len() >= 2, "need at least two split depths, got {splits:?}");
+        // Offered load sits in the spec'd 2–4× band of the per-deadline
+        // frame rate, for every device.
+        for d in &spec.devices {
+            let sess = spec.sessions.iter().find(|s| s.name == d.session).unwrap();
+            let per_deadline = 1.0 / sess.deadline.as_secs_f64();
+            assert!(
+                d.hz >= 2.0 * per_deadline && d.hz <= 4.0 * per_deadline,
+                "device {}/{} offers {}x the deadline rate",
+                d.session,
+                d.device_id,
+                d.hz / per_deadline
+            );
+        }
+        // Heterogeneous fleet: at least two distinct uplink classes.
+        let classes: std::collections::BTreeSet<u64> = spec
+            .devices
+            .iter()
+            .map(|d| d.bandwidth_bps.unwrap_or(0.0) as u64)
+            .collect();
+        assert!(classes.len() >= 2, "need fast and slow device classes");
+    }
+
+    #[test]
+    fn spec_json_split_and_shed_knobs_parse() {
+        let text = r#"{
+            "name": "o", "max_batch": 4,
+            "shed_watermark": 3, "min_hit_rate": 0.8,
+            "sessions": [{"name": "a", "split": "split-deep"}, {"name": "b"}],
+            "devices": [{"session": "a", "device": 0}, {"session": "b", "device": 0}]
+        }"#;
+        let spec = ScenarioSpec::from_json(&crate::utils::json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.shed_watermark, 3);
+        assert!((spec.min_hit_rate - 0.8).abs() < 1e-9);
+        assert_eq!(spec.sessions[0].split, "split-deep");
+        assert_eq!(spec.sessions[1].split, "", "unset split means the default depth");
+        spec.validate(&scenario_test_meta()).unwrap();
+
+        // An unknown split depth is a validation error, not a surprise
+        // at serve time.
+        let mut bad = spec.clone();
+        bad.sessions[0].split = "split-bogus".into();
+        assert!(bad.validate(&scenario_test_meta()).is_err());
+        // Shedding without the batch planner can never trip.
+        let mut bad = spec.clone();
+        bad.max_batch = 1;
+        let err = bad.validate(&scenario_test_meta()).unwrap_err();
+        assert!(err.to_string().contains("max_batch"), "{err:#}");
+        // The floor is a fraction.
+        let mut bad = spec.clone();
+        bad.min_hit_rate = 1.5;
+        assert!(bad.validate(&scenario_test_meta()).is_err());
+
+        // Satellite of the closed-key-set stance: the new keys joined
+        // the allowed lists, so their typos still fail to parse.
+        let parse = |t: &str| ScenarioSpec::from_json(&crate::utils::json::parse(t).unwrap());
+        let err = parse(
+            r#"{"name": "x", "shed_watermak": 3,
+               "sessions": [{"name": "a"}],
+               "devices": [{"session": "a", "device": 0}]}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shed_watermak"), "{err:#}");
+        assert!(parse(
+            r#"{"name": "x", "min_hitrate": 0.5,
+               "sessions": [{"name": "a"}],
+               "devices": [{"session": "a", "device": 0}]}"#,
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"name": "x",
+               "sessions": [{"name": "a", "splt": "split-deep"}],
+               "devices": [{"session": "a", "device": 0}]}"#,
+        )
+        .is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 #![cfg(feature = "native")]
 
 use scmii::config::{IntegrationKind, Paths};
+use scmii::coordinator::device::Transport;
 use scmii::coordinator::scheduler::LossPolicy;
 use scmii::net::ImpairConfig;
 use scmii::runtime::BackendKind;
@@ -26,6 +27,7 @@ fn session(name: &str, policy: LossPolicy) -> SessionSpec {
         variant: IntegrationKind::Max,
         deadline: Duration::from_millis(300),
         policy,
+        split: String::new(),
     }
 }
 
@@ -43,6 +45,26 @@ fn device(session: &str, id: usize, frames: usize, impair: Option<ImpairConfig>)
     }
 }
 
+fn base_spec(name: &str) -> ScenarioSpec {
+    ScenarioSpec {
+        name: name.into(),
+        seed: 7,
+        port: 0,
+        backend: BackendKind::Native,
+        backend_threads: 2,
+        max_batch: 1,
+        batch_window: Duration::from_millis(2),
+        transport: Transport::Tcp,
+        fec_k: 0,
+        shed_watermark: 0,
+        min_hit_rate: 0.0,
+        sessions: Vec::new(),
+        devices: Vec::new(),
+        settle: Duration::ZERO,
+        trace: None,
+    }
+}
+
 /// The satellite acceptance test: 4 device workers, 2 sessions, genuine
 /// injected loss over real TCP. Every session must emit results, and the
 /// sync_* metrics must account exactly for dropped / zero-filled frames.
@@ -50,13 +72,6 @@ fn device(session: &str, id: usize, frames: usize, impair: Option<ImpairConfig>)
 fn four_devices_two_sessions_with_loss_account_for_every_frame() {
     let n = 9usize;
     let spec = ScenarioSpec {
-        name: "fleet-loss-test".into(),
-        seed: 7,
-        port: 0,
-        backend: BackendKind::Native,
-        backend_threads: 2,
-        max_batch: 1,
-        batch_window: Duration::from_millis(2),
         sessions: vec![
             session("north", LossPolicy::ZeroFill),
             session("south", LossPolicy::Drop),
@@ -69,8 +84,7 @@ fn four_devices_two_sessions_with_loss_account_for_every_frame() {
             // South device 1 loses every 3rd message, deterministically.
             device("south", 1, n, Some(ImpairConfig { drop_every: 3, ..Default::default() })),
         ],
-        settle: Duration::ZERO,
-        trace: None,
+        ..base_spec("fleet-loss-test")
     };
 
     let report = run_scenario(&nonexistent_paths(), &spec).unwrap();
@@ -139,13 +153,8 @@ fn four_devices_two_sessions_with_loss_account_for_every_frame() {
 #[test]
 fn dropout_and_late_join_keep_sessions_producing() {
     let spec = ScenarioSpec {
-        name: "fleet-churn-test".into(),
         seed: 11,
-        port: 0,
-        backend: BackendKind::Native,
-        backend_threads: 2,
         max_batch: 4,
-        batch_window: Duration::from_millis(2),
         sessions: vec![
             session("dropout", LossPolicy::ZeroFill),
             session("latejoin", LossPolicy::ZeroFill),
@@ -163,8 +172,7 @@ fn dropout_and_late_join_keep_sessions_producing() {
                 ..device("latejoin", 1, 8, None)
             },
         ],
-        settle: Duration::ZERO,
-        trace: None,
+        ..base_spec("fleet-churn-test")
     };
 
     let report = run_scenario(&nonexistent_paths(), &spec).unwrap();
@@ -196,6 +204,91 @@ fn dropout_and_late_join_keep_sessions_producing() {
     );
     assert_eq!(dropout.results_received, 16);
     assert_eq!(latejoin.results_received, 16);
+}
+
+/// The tentpole acceptance: sessions pinned to different split depths
+/// coexist in one server, each fed by devices running the matching head,
+/// and every one of them produces results over real TCP.
+#[test]
+fn mixed_split_sessions_serve_one_fleet() {
+    let n = 6usize;
+    let spec = ScenarioSpec {
+        sessions: vec![
+            SessionSpec { split: "split-deep".into(), ..session("deep", LossPolicy::ZeroFill) },
+            SessionSpec {
+                split: "split-shallow".into(),
+                ..session("shallow", LossPolicy::ZeroFill)
+            },
+        ],
+        devices: vec![
+            device("deep", 0, n, None),
+            device("deep", 1, n, None),
+            device("shallow", 0, n, None),
+            device("shallow", 1, n, None),
+        ],
+        ..base_spec("fleet-mixed-split-test")
+    };
+
+    let report = run_scenario(&nonexistent_paths(), &spec).unwrap();
+    for (name, split) in [("deep", "split-deep"), ("shallow", "split-shallow")] {
+        let s = report.sessions.iter().find(|s| s.name == name).unwrap();
+        assert_eq!(s.split, split, "report carries the normalized split");
+        assert_eq!(s.frames_done, n as u64, "split {split} resolved every frame");
+        assert_eq!(s.results_received, n as u64);
+    }
+    // The per-split digest keeps the two depths' accounting separate.
+    let pj = report.split_json();
+    let rows = pj.req("splits").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2, "one digest row per split depth");
+    for row in rows {
+        assert_eq!(row.req("frames_done").unwrap().as_usize().unwrap(), n);
+    }
+}
+
+/// The CI overload gate end to end: `--name overload-smoke` runs a
+/// heterogeneous mixed-split fleet at ~3x offered load with shedding
+/// armed, enforces its deadline-hit-rate floor, and emits
+/// BENCH_split.json with the per-split shed accounting.
+#[test]
+fn cmd_scenario_overload_smoke_holds_the_floor_and_emits_split_bench() {
+    let out_dir = std::env::temp_dir().join("scmii_scenario_overload_test");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let fake_artifacts = nonexistent_paths();
+    let args = scmii::cli::Args::parse(
+        [
+            "--name",
+            "overload-smoke",
+            "--backend",
+            "native",
+            "--out",
+            out_dir.to_str().unwrap(),
+            "--artifacts",
+            fake_artifacts.artifacts.to_str().unwrap(),
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    )
+    .unwrap();
+    // cmd_scenario itself enforces the min_hit_rate floor: an Ok here
+    // IS the gate passing.
+    scmii::scenario::cmd_scenario(&args).unwrap();
+
+    let j = scmii::utils::json::read_file(&out_dir.join("BENCH_split.json")).unwrap();
+    assert_eq!(j.req("scenario").unwrap().as_str().unwrap(), "overload-smoke");
+    assert!(j.req("shed_watermark").unwrap().as_usize().unwrap() > 0);
+    let hit = j.req("deadline_hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&hit));
+    let rows = j.req("splits").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2, "one row per split depth in the mixed fleet");
+    for row in rows {
+        assert!(row.req("frames_done").unwrap().as_usize().unwrap() > 0);
+        let e2e = row.req("e2e_ms").unwrap();
+        assert!(e2e.req("n").unwrap().as_usize().unwrap() > 0);
+        assert!(
+            e2e.req("p95").unwrap().as_f64().unwrap()
+                >= e2e.req("p50").unwrap().as_f64().unwrap()
+        );
+    }
 }
 
 /// The CLI command end to end: runs the `ci-smoke` built-in (the CI hard
@@ -239,4 +332,13 @@ fn cmd_scenario_emits_bench_e2e_json() {
     }
     let devices = j.req("devices").unwrap().as_arr().unwrap();
     assert_eq!(devices.len(), 4);
+
+    // Every scenario run also emits the split digest (all-default-depth
+    // here: a single split-mid row, shedding off).
+    let pj = scmii::utils::json::read_file(&out_dir.join("BENCH_split.json")).unwrap();
+    assert_eq!(pj.req("shed_watermark").unwrap().as_usize().unwrap(), 0);
+    let rows = pj.req("splits").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].req("split").unwrap().as_str().unwrap(), "split-mid");
+    assert_eq!(rows[0].req("shed_frames").unwrap().as_usize().unwrap(), 0);
 }

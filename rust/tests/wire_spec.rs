@@ -15,13 +15,14 @@
 //! exactly "all required fields + the first k optionals"):
 //!
 //! * the table-built frame must decode to the expected message, with
-//!   spec defaults (`"default"` session, `0` capture stamp) for the
-//!   absent optionals;
+//!   spec defaults (`"default"` session, `0` capture stamp, `""`
+//!   split) for the absent optionals;
 //! * the full-prefix frame must be byte-identical to what the library's
 //!   own writer produces (`encode_frame`);
-//! * a zero capture stamp must encode byte-identically to the frame
-//!   that omits the stamp entirely (the `optional-omit-zero` rule that
-//!   keeps unstamped traffic decodable by legacy subscribers).
+//! * a zero-valued trailing `optional-omit-zero` field (capture stamp
+//!   `0`, split `""`) must encode byte-identically to the frame that
+//!   omits the field entirely — the rule that keeps unstamped /
+//!   default-depth traffic decodable by legacy peers.
 //!
 //! The datagram-header table (Appendix A.1) gets the same treatment:
 //! headers re-encoded from the parsed rows alone must match
@@ -61,6 +62,9 @@ enum Val {
     Session(String),
     /// Capture stamp (`optional-omit-zero`: zero never reaches the wire).
     Capture(u64),
+    /// Split-depth name (`optional-omit-zero`: `""` never reaches the
+    /// wire).
+    Split(String),
 }
 
 /// Draw a random value for a spec encoding. Capture stamps are drawn
@@ -77,6 +81,15 @@ fn gen_val(g: &mut Gen, encoding: &str) -> Val {
             Val::Session(name)
         }
         "capture" => Val::Capture(g.u64() | 1),
+        "split" => {
+            // Any nonempty name is legal on the wire (semantic
+            // validation against the served depths happens at the
+            // session layer); empty is the *omitted* form.
+            const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-";
+            let len = g.usize_range(1, 16);
+            let name: String = (0..len).map(|_| *g.choose(ALPHABET) as char).collect();
+            Val::Split(name)
+        }
         "tensor" => {
             let shape: Vec<usize> =
                 (0..g.usize_range(1, 3)).map(|_| g.usize_range(1, 4)).collect();
@@ -121,7 +134,18 @@ fn default_val(encoding: &str) -> Val {
     match encoding {
         "session" => Val::Session(DEFAULT_SESSION.to_string()),
         "capture" => Val::Capture(0),
+        "split" => Val::Split(String::new()),
         other => panic!("encoding {other:?} is never optional, so it has no default"),
+    }
+}
+
+/// The zero value of an `optional-omit-zero` encoding — the value whose
+/// canonical wire form is "field absent".
+fn zero_val(encoding: &str) -> Val {
+    match encoding {
+        "capture" => Val::Capture(0),
+        "split" => Val::Split(String::new()),
+        other => panic!("encoding {other:?} has no omit-zero rule — update tests/wire_spec.rs"),
     }
 }
 
@@ -139,6 +163,12 @@ fn encode_val(buf: &mut Vec<u8>, v: &Val) {
         Val::Capture(x) => {
             if *x > 0 {
                 buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Val::Split(s) => {
+            if !s.is_empty() {
+                buf.push(s.len() as u8);
+                buf.extend_from_slice(s.as_bytes());
             }
         }
         Val::Tensor(t) => {
@@ -225,6 +255,12 @@ impl Val {
             other => panic!("expected capture, got {other:?}"),
         }
     }
+    fn split(&self) -> String {
+        match self {
+            Val::Split(s) => s.clone(),
+            other => panic!("expected split, got {other:?}"),
+        }
+    }
 }
 
 /// Construct the `Msg` a decoder must yield for message `name` with the
@@ -236,7 +272,11 @@ fn build_msg(name: &str, vals: &BTreeMap<String, Val>) -> Msg {
         vals.get(field).unwrap_or_else(|| panic!("spec row missing field {name}.{field}"))
     };
     match name {
-        "Hello" => Msg::Hello { device_id: v("device_id").u32(), session: v("session").session() },
+        "Hello" => Msg::Hello {
+            device_id: v("device_id").u32(),
+            session: v("session").session(),
+            split: v("split").split(),
+        },
         "Features" => Msg::Features {
             frame_id: v("frame_id").u64(),
             device_id: v("device_id").u32(),
@@ -319,30 +359,32 @@ fn every_legal_wire_form_round_trips_per_spec() {
                 }
             }
 
-            // Omit-zero check: a zero capture stamp must leave the frame
-            // byte-identical to the form without the stamp, so unstamped
-            // traffic stays decodable by pre-stamp peers.
+            // Omit-zero check: a zero-valued trailing omit-zero field
+            // (capture stamp 0, split "") must leave the frame
+            // byte-identical to the form without the field, so legacy
+            // peers keep decoding such traffic.
             if let Some(last) = m.fields.last() {
                 if last.presence == Presence::OptionalOmitZero {
-                    let mut stamped_zero = BTreeMap::new();
+                    let mut with_zero = BTreeMap::new();
                     let mut short_payload = Vec::new();
                     for (i, f) in m.fields.iter().enumerate() {
                         let v = if i + 1 < m.fields.len() {
                             encode_val(&mut short_payload, &vals[i]);
                             vals[i].clone()
                         } else {
-                            Val::Capture(0)
+                            zero_val(&last.encoding)
                         };
-                        stamped_zero.insert(f.name.clone(), v);
+                        with_zero.insert(f.name.clone(), v);
                     }
-                    let msg = build_msg(&m.name, &stamped_zero);
+                    let msg = build_msg(&m.name, &with_zero);
                     let ours = encode_frame(&msg)
                         .unwrap_or_else(|e| panic!("encode {}: {e:#}", m.name));
                     assert_eq!(
                         ours,
                         frame(m.type_byte, &short_payload),
-                        "{}: zero capture stamp must be omitted on encode",
-                        m.name
+                        "{}: zero-valued {} must be omitted on encode",
+                        m.name,
+                        last.name
                     );
                 }
             }

@@ -604,11 +604,12 @@ fn lint_wire_spec(root: &Path, violations: &mut Vec<Violation>) -> Result<(), St
                 });
             }
             // Presence classes are determined by the encoder helpers:
-            // put_session is optional-on-decode, put_capture additionally
-            // omits zero, everything else is unconditional.
+            // put_session is optional-on-decode, put_capture and
+            // put_split additionally omit their zero value (0 / ""),
+            // everything else is unconditional.
             let want = match row.encoding.as_str() {
                 "session" => spec::Presence::Optional,
-                "capture" => spec::Presence::OptionalOmitZero,
+                "capture" | "split" => spec::Presence::OptionalOmitZero,
                 _ => spec::Presence::Required,
             };
             if row.presence != want {
